@@ -1,0 +1,101 @@
+//! End-to-end validation driver (DESIGN.md "E2E" row).
+//!
+//! Exercises the full stack on a real small workload, proving all layers
+//! compose: a synthetic multi-day observation corpus is organized,
+//! archived, and processed into interpolated track segments through the
+//! AOT-compiled Pallas model on PJRT (L1/L2), driven by the rust
+//! self-scheduling coordinator (L3) — then the same workload's schedule is
+//! cross-checked on the calibrated simulator, and the headline metric
+//! (block-batch vs self-scheduling job time) is reported.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_pipeline
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md §E2E.
+
+use emproc::dist::order_tasks;
+use emproc::prelude::*;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let work_dir = std::env::temp_dir().join("emproc_e2e");
+    let _ = std::fs::remove_dir_all(&work_dir);
+
+    // A meatier corpus than quickstart: 4 Mondays, files up to ~300 KB.
+    let mut cfg = PipelineConfig::small(work_dir.clone());
+    cfg.workers = std::thread::available_parallelism()?.get().clamp(2, 8);
+    cfg.days = 4;
+    cfg.max_file_bytes = 300_000;
+    cfg.registry_size = 150;
+
+    println!("== e2e pipeline: real execution ({} workers) ==", cfg.workers);
+    let wall = Instant::now();
+    let report = Pipeline::new(cfg.clone()).generate_and_run()?;
+    let wall = wall.elapsed().as_secs_f64();
+    print!("{}", report.render());
+    println!("total wall time: {wall:.2}s");
+
+    // Throughput of the PJRT hot path.
+    let obs_per_s = report.process.observations as f64
+        / report.process.pjrt_seconds.max(1e-9);
+    println!(
+        "PJRT hot path: {} observations in {:.3}s of execute = {:.0} obs/s/worker-pool",
+        report.process.observations, report.process.pjrt_seconds, obs_per_s
+    );
+
+    // --- Cross-check: same stage-1 workload on the simulator ------------
+    println!("\n== headline metric: self-scheduling vs batch/block ==");
+    let raw = emproc::workflow::stage1::list_raw_files(&work_dir.join("raw"))?;
+    let tasks: Vec<Task> = raw
+        .iter()
+        .enumerate()
+        .map(|(i, (p, size))| Task {
+            id: i,
+            bytes: *size * 2_000, // paper-scale equivalent bytes
+            obs: size / 110,
+            dem_cells: 0,
+            chrono_key: i as u64,
+            name: p.display().to_string(),
+        })
+        .collect();
+    let ordered = order_tasks(&tasks, TaskOrder::FilenameSorted);
+    // Small triples config (15 workers) so the miniature corpus still has
+    // several tasks per worker — the imbalance mechanism needs that.
+    let sim = |alloc: AllocMode| {
+        Simulator::run(
+            &SimConfig {
+                triples: TriplesConfig {
+                    nodes: 2,
+                    nppn: 8,
+                    threads: 1,
+                    slots_per_job: 2,
+                    allocation: 4096,
+                },
+                alloc,
+                stage: Stage::Organize,
+                cost: CostModel::paper_calibrated(),
+            },
+            &tasks,
+            &ordered,
+        )
+    };
+    let block = sim(AllocMode::Batch(Distribution::Block));
+    let ss = sim(AllocMode::SelfSched(SelfSchedConfig::default()));
+    println!(
+        "simulated (15 workers): batch/block {} vs self-sched {} \
+         ({:.0}% reduction; paper: weeks -> days end-to-end)",
+        emproc::util::human_duration(block.job_time),
+        emproc::util::human_duration(ss.job_time),
+        (block.job_time - ss.job_time) / block.job_time * 100.0,
+    );
+
+    // Hard assertions: this example doubles as an acceptance test.
+    anyhow::ensure!(report.organize.files_written > 0, "stage 1 wrote nothing");
+    anyhow::ensure!(report.archive.archives > 0, "stage 2 wrote nothing");
+    anyhow::ensure!(report.process.segments > 0, "stage 3 interpolated nothing");
+    anyhow::ensure!(report.process.pjrt_seconds > 0.0, "PJRT never ran");
+    anyhow::ensure!(ss.job_time < block.job_time, "self-sched lost to block");
+    println!("\nE2E OK");
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Quickstart: the full three-stage workflow on a tiny synthetic corpus.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Generates a miniature "Monday" corpus + aircraft registry, then runs
+//! organize → archive → process with a self-scheduled worker pool. Stage 3
+//! executes the AOT-compiled Pallas track model via PJRT — no Python.
+
+use emproc::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let work_dir = std::env::temp_dir().join("emproc_quickstart");
+    let _ = std::fs::remove_dir_all(&work_dir);
+
+    let mut cfg = PipelineConfig::small(work_dir.clone());
+    cfg.workers = 4;
+    cfg.days = 2;
+
+    println!("== emproc quickstart ==");
+    println!("work dir: {}", work_dir.display());
+    println!(
+        "artifact dir: {} (run `make artifacts` if missing)\n",
+        cfg.artifact_dir.display()
+    );
+
+    let report = Pipeline::new(cfg).generate_and_run()?;
+    print!("{}", report.render());
+
+    // Show a taste of the interpolated output.
+    let processed = work_dir.join("processed");
+    let mut stack = vec![processed];
+    'outer: while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir)? {
+            let entry = entry?;
+            if entry.file_type()?.is_dir() {
+                stack.push(entry.path());
+            } else {
+                println!("\nsample of {}:", entry.path().display());
+                let text = std::fs::read_to_string(entry.path())?;
+                for line in text.lines().take(5) {
+                    println!("  {line}");
+                }
+                break 'outer;
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,155 @@
+"""AOT: lower the L2 track model to HLO text for the rust PJRT runtime.
+
+HLO *text* (not a serialized ``HloModuleProto``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. The stablehlo module is converted to
+an ``XlaComputation`` with ``return_tuple=True``; the rust side unwraps the
+tuple.
+
+Besides the HLO, a plain-text manifest (``key=value`` lines — serde is not
+available to the offline rust build) records the shapes and the input/output
+ABI so the runtime can size its buffers without parsing HLO.
+
+Usage:
+  python -m compile.aot --out ../artifacts/track_model.hlo.txt [--b 16]
+      [--n 128] [--m 64] [--tile 64] [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as model_mod
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring).
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides array constants as ``{...}``, which the rust-side HLO text parser
+    silently reads back as zeros (observed: the central-difference span
+    constant became 0 => every rate output was inf).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def manifest_text(b: int, n: int, m: int, tile: int) -> str:
+    lines = [
+        "name=track_model",
+        f"b={b}",
+        f"n={n}",
+        f"m={m}",
+        f"tile={tile}",
+        "inputs=" + ",".join(model_mod.INPUT_NAMES),
+        "outputs=" + ",".join(model_mod.OUTPUT_NAMES),
+        "dtype=f32",
+        "return_tuple=1",
+    ]
+    return "\n".join(lines) + "\n"
+
+
+def golden_inputs(b: int, n: int, m: int, tile: int):
+    """Deterministic inputs for the cross-language golden file."""
+    import numpy as np
+
+    rng = np.random.default_rng(4242)
+    t = np.sort(rng.uniform(0, 600, (b, n)).astype(np.float32), axis=1)
+    lat = (42.0 + np.cumsum(rng.normal(0, 1e-3, (b, n)), axis=1)).astype(np.float32)
+    lon = (-71.0 + np.cumsum(rng.normal(0, 1e-3, (b, n)), axis=1)).astype(np.float32)
+    alt = rng.uniform(50, 5000, (b, n)).astype(np.float32)
+    valid = (rng.uniform(size=(b, n)) < 0.9).astype(np.float32)
+    grid = np.linspace(0, 600, m, dtype=np.float32)[None, :].repeat(b, axis=0)
+    dem = rng.uniform(0, 500, (tile, tile)).astype(np.float32)
+    meta = np.array([41.5, -71.5, 0.02, 0.02], dtype=np.float32)
+    return (t, lat, lon, alt, valid, grid, dem, meta)
+
+
+def write_golden(path: str, b: int, n: int, m: int, tile: int) -> None:
+    """Golden i/o pairs (oracle numerics) for rust/tests/runtime_golden.rs."""
+    import numpy as np
+
+    args = golden_inputs(b, n, m, tile)
+    out = model_mod.track_model_ref(*map(jnp.asarray, args))
+    with open(path, "w") as f:
+        f.write(f"# golden i/o for track_model b={b} n={n} m={m} tile={tile}\n")
+        for name, arr in zip(model_mod.INPUT_NAMES, args):
+            flat = np.asarray(arr, dtype=np.float32).ravel()
+            f.write(f"in {name} {' '.join(repr(float(v)) for v in flat)}\n")
+        for name, arr in zip(model_mod.OUTPUT_NAMES, out):
+            flat = np.asarray(arr, dtype=np.float32).ravel()
+            f.write(f"out {name} {' '.join(repr(float(v)) for v in flat)}\n")
+
+
+def run_check(b: int, n: int, m: int, tile: int) -> float:
+    """Execute the pallas path vs the oracle on random inputs; max |err|."""
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    t = np.sort(rng.uniform(0, 600, (b, n)).astype(np.float32), axis=1)
+    lat = (42.0 + np.cumsum(rng.normal(0, 1e-3, (b, n)), axis=1)).astype(np.float32)
+    lon = (-71.0 + np.cumsum(rng.normal(0, 1e-3, (b, n)), axis=1)).astype(np.float32)
+    alt = rng.uniform(50, 5000, (b, n)).astype(np.float32)
+    valid = (rng.uniform(size=(b, n)) < 0.9).astype(np.float32)
+    grid = np.linspace(0, 600, m, dtype=np.float32)[None, :].repeat(b, axis=0)
+    dem = rng.uniform(0, 500, (tile, tile)).astype(np.float32)
+    meta = np.array([41.5, -71.5, 0.02, 0.02], dtype=np.float32)
+
+    args = (t, lat, lon, alt, valid, grid, dem, meta)
+    got = model_mod.track_model(*map(jnp.asarray, args))
+    want = model_mod.track_model_ref(*map(jnp.asarray, args))
+    # Scale-aware: normalize by each output's magnitude (altitudes are in the
+    # thousands of feet; raw f32 abs error there is ~1e-3).
+    return max(
+        float(jnp.max(jnp.abs(g - w)) / (1.0 + jnp.max(jnp.abs(w))))
+        for g, w in zip(got, want)
+    )
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts/track_model.hlo.txt")
+    p.add_argument("--b", type=int, default=model_mod.DEFAULT_B)
+    p.add_argument("--n", type=int, default=model_mod.DEFAULT_N)
+    p.add_argument("--m", type=int, default=model_mod.DEFAULT_M)
+    p.add_argument("--tile", type=int, default=model_mod.DEFAULT_TILE)
+    p.add_argument("--check", action="store_true",
+                   help="also execute pallas vs oracle and report max error")
+    a = p.parse_args()
+
+    spec = model_mod.example_args(a.b, a.n, a.m, a.tile)
+    lowered = jax.jit(model_mod.track_model).lower(*spec)
+    text = to_hlo_text(lowered)
+
+    out = os.path.abspath(a.out)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        f.write(text)
+    manifest = out.rsplit(".hlo.txt", 1)[0] + ".manifest"
+    with open(manifest, "w") as f:
+        f.write(manifest_text(a.b, a.n, a.m, a.tile))
+    golden = os.path.join(os.path.dirname(out), "golden_track_model.txt")
+    write_golden(golden, a.b, a.n, a.m, a.tile)
+    print(f"wrote {len(text)} chars to {out}")
+    print(f"wrote manifest to {manifest}")
+    print(f"wrote golden to {golden}")
+
+    if a.check:
+        err = run_check(a.b, a.n, a.m, a.tile)
+        print(f"pallas-vs-oracle max scaled err: {err:.3e}")
+        if err > 1e-4:
+            sys.exit("AOT check FAILED")
+
+
+if __name__ == "__main__":
+    main()

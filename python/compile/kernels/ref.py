@@ -1,0 +1,108 @@
+"""Pure-jnp reference oracle for the L1 Pallas kernels.
+
+Implements the *mathematical spec* of track resampling + AGL with the
+natural searchsorted/gather formulation (no one-hot matmuls, no Pallas).
+pytest compares the Pallas kernels against these functions; the checked-in
+golden values used by the rust integration tests are generated from here.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BIG_T = 1.0e9
+EPS_T = 1.0e-6
+NM_PER_DEG = 60.0
+FT_PER_M = 3.28084
+
+
+def _interp_one(t, lat, lon, alt, valid, grid):
+    """Reference resampling for a single track. All args 1-D."""
+    n = t.shape[0]
+    m = grid.shape[0]
+    t_eff = jnp.where(valid > 0.5, t, BIG_T)
+    n_valid = jnp.sum(valid)
+
+    cnt = jnp.sum((t_eff[None, :] <= grid[:, None]).astype(jnp.float32), axis=1)
+    last = jnp.maximum(n_valid - 1.0, 0.0)
+    idx_lo = jnp.clip(cnt - 1.0, 0.0, last).astype(jnp.int32)
+    idx_hi = jnp.clip(cnt, 0.0, last).astype(jnp.int32)
+
+    def take(x, i):
+        return jnp.take(x, i, axis=0)
+
+    t_lo, t_hi = take(t, idx_lo), take(t, idx_hi)
+    dt = t_hi - t_lo
+    frac = jnp.clip((grid - t_lo) / jnp.where(dt > EPS_T, dt, 1.0), 0.0, 1.0)
+    frac = jnp.where(dt > EPS_T, frac, 0.0)
+
+    def lerp(x):
+        lo, hi = take(x, idx_lo), take(x, idx_hi)
+        return lo + frac * (hi - lo)
+
+    o_lat, o_lon, o_alt = lerp(lat), lerp(lon), lerp(alt)
+
+    gdt = jnp.maximum(grid[1] - grid[0], EPS_T)
+
+    def cdiff(x):
+        x_next = jnp.concatenate([x[1:], x[-1:]])
+        x_prev = jnp.concatenate([x[:1], x[:-1]])
+        span = jnp.concatenate(
+            [jnp.ones((1,)), 2.0 * jnp.ones((m - 2,)), jnp.ones((1,))]
+        )
+        return (x_next - x_prev) / (span * gdt)
+
+    vrate = cdiff(o_alt) * 60.0
+    dlat = cdiff(o_lat) * NM_PER_DEG
+    dlon = cdiff(o_lon) * NM_PER_DEG * jnp.cos(jnp.deg2rad(o_lat))
+    gspeed = jnp.sqrt(dlat * dlat + dlon * dlon) * 3600.0
+
+    ovalid = jnp.broadcast_to((n_valid >= 2.0).astype(jnp.float32), (m,))
+    return (
+        o_lat * ovalid,
+        o_lon * ovalid,
+        o_alt * ovalid,
+        vrate * ovalid,
+        gspeed * ovalid,
+        ovalid,
+    )
+
+
+def interp_tracks_ref(obs_t, obs_lat, obs_lon, obs_alt, obs_valid, grid_t):
+    """Batched reference resampling; same signature/returns as the kernel."""
+    return jax.vmap(_interp_one)(obs_t, obs_lat, obs_lon, obs_alt, obs_valid, grid_t)
+
+
+def _bilinear_one(lat, lon, dem, meta):
+    """Reference border-clamped bilinear DEM sample for one track (metres)."""
+    th, tw = dem.shape
+    ri = jnp.clip((lat - meta[0]) / meta[2], 0.0, th - 1.000001)
+    ci = jnp.clip((lon - meta[1]) / meta[3], 0.0, tw - 1.000001)
+    r0 = jnp.floor(ri).astype(jnp.int32)
+    c0 = jnp.floor(ci).astype(jnp.int32)
+    fr = ri - r0
+    fc = ci - c0
+    d00 = dem[r0, c0]
+    d01 = dem[r0, c0 + 1]
+    d10 = dem[r0 + 1, c0]
+    d11 = dem[r0 + 1, c0 + 1]
+    top = d00 * (1 - fc) + d01 * fc
+    bot = d10 * (1 - fc) + d11 * fc
+    return top * (1 - fr) + bot * fr
+
+
+def agl_tracks_ref(lat, lon, alt, dem, dem_meta):
+    """Batched reference AGL; same signature/returns as the kernel."""
+    elev_m = jax.vmap(lambda la, lo: _bilinear_one(la, lo, dem, dem_meta))(lat, lon)
+    elev_ft = elev_m * FT_PER_M
+    return alt - elev_ft, elev_ft
+
+
+def track_model_ref(obs_t, obs_lat, obs_lon, obs_alt, obs_valid, grid_t, dem, dem_meta):
+    """Reference for the full L2 model (interp + rates + AGL)."""
+    lat, lon, alt, vrate, gspeed, valid = interp_tracks_ref(
+        obs_t, obs_lat, obs_lon, obs_alt, obs_valid, grid_t
+    )
+    agl, elev = agl_tracks_ref(lat, lon, alt, dem, dem_meta)
+    return lat, lon, alt, vrate, gspeed, agl * valid, valid

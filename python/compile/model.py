@@ -1,0 +1,70 @@
+"""L2: the stage-3 track-processing compute graph (build-time JAX).
+
+Composes the L1 Pallas kernels into the batched computation the rust
+coordinator executes on the request path: resample padded track segments
+onto a uniform grid, estimate dynamic rates, and compute AGL altitude over
+the batch's shared DEM tile. Lowered once by ``aot.py`` to HLO text; Python
+never runs at request time.
+
+Default AOT shapes (see ``aot.py --help`` to override):
+  B  = 16   tracks per batch
+  N  = 128  padded observations per track
+  M  = 64   output grid points per track
+  TH = TW = 64  DEM tile
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.agl import agl_tracks
+from compile.kernels.interp import interp_tracks
+from compile.kernels import ref
+
+# Input order is the ABI contract with rust/src/runtime (see the artifact
+# manifest written by aot.py).
+INPUT_NAMES = (
+    "obs_t", "obs_lat", "obs_lon", "obs_alt", "obs_valid",
+    "grid_t", "dem", "dem_meta",
+)
+OUTPUT_NAMES = ("lat", "lon", "alt", "vrate", "gspeed", "agl", "valid")
+
+DEFAULT_B = 16
+DEFAULT_N = 128
+DEFAULT_M = 64
+DEFAULT_TILE = 64
+
+
+def track_model(obs_t, obs_lat, obs_lon, obs_alt, obs_valid, grid_t, dem, dem_meta):
+    """Full stage-3 batch computation (Pallas path).
+
+    Returns a 7-tuple of ``[B, M]`` f32 arrays in ``OUTPUT_NAMES`` order.
+    Rows with fewer than two valid observations yield zeros with
+    ``valid = 0``.
+    """
+    lat, lon, alt, vrate, gspeed, valid = interp_tracks(
+        obs_t, obs_lat, obs_lon, obs_alt, obs_valid, grid_t
+    )
+    agl, _elev = agl_tracks(lat, lon, alt, dem, dem_meta)
+    return lat, lon, alt, vrate, gspeed, agl * valid, valid
+
+
+def track_model_ref(*args):
+    """Pure-jnp oracle with the identical signature (testing only)."""
+    return ref.track_model_ref(*args)
+
+
+def example_args(b=DEFAULT_B, n=DEFAULT_N, m=DEFAULT_M, tile=DEFAULT_TILE):
+    """ShapeDtypeStructs for AOT lowering, in ``INPUT_NAMES`` order."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((b, n), f32),   # obs_t
+        jax.ShapeDtypeStruct((b, n), f32),   # obs_lat
+        jax.ShapeDtypeStruct((b, n), f32),   # obs_lon
+        jax.ShapeDtypeStruct((b, n), f32),   # obs_alt
+        jax.ShapeDtypeStruct((b, n), f32),   # obs_valid
+        jax.ShapeDtypeStruct((b, m), f32),   # grid_t
+        jax.ShapeDtypeStruct((tile, tile), f32),  # dem
+        jax.ShapeDtypeStruct((4,), f32),     # dem_meta
+    )

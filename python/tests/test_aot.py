@@ -1,0 +1,78 @@
+"""AOT path: lowering to HLO text, manifest contents, golden generation.
+
+Also writes the golden-values file consumed by the rust integration tests
+(`rust/tests/runtime_golden.rs`) so both languages agree on the numerics of
+the same artifact.
+"""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model as model_mod
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def small_spec():
+    return model_mod.example_args(2, 8, 4, 4)
+
+
+def test_lowering_produces_hlo_text():
+    lowered = jax.jit(model_mod.track_model).lower(*small_spec())
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "HloModule" in text
+    # 8 parameters (the ABI), tuple return.
+    for i in range(8):
+        assert f"parameter({i})" in text
+
+
+def test_no_elided_constants_in_hlo_text():
+    """Regression: the default printer elides array constants as `{...}`,
+    which the rust text parser reads back as ZEROS (this made every rate
+    output inf). print_large_constants=True must stay on."""
+    lowered = jax.jit(model_mod.track_model).lower(*model_mod.example_args())
+    text = aot.to_hlo_text(lowered)
+    assert "{...}" not in text
+
+
+def test_manifest_round_trip_fields():
+    text = aot.manifest_text(16, 128, 64, 64)
+    kv = dict(line.split("=", 1) for line in text.strip().splitlines())
+    assert kv["name"] == "track_model"
+    assert (kv["b"], kv["n"], kv["m"], kv["tile"]) == ("16", "128", "64", "64")
+    assert kv["inputs"].split(",") == list(model_mod.INPUT_NAMES)
+    assert kv["outputs"].split(",") == list(model_mod.OUTPUT_NAMES)
+
+
+def test_aot_check_small():
+    assert aot.run_check(4, 16, 8, 8) < 1e-3
+
+
+def test_write_golden_for_rust():
+    """Deterministic input/output pairs for the rust runtime integration
+    test. Uses the AOT default shapes — the same artifact rust loads."""
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, "golden_track_model.txt")
+    aot.write_golden(path, model_mod.DEFAULT_B, model_mod.DEFAULT_N,
+                     model_mod.DEFAULT_M, model_mod.DEFAULT_TILE)
+    assert os.path.getsize(path) > 0
+    with open(path) as f:
+        lines = [l for l in f if not l.startswith("#")]
+    ins = [l for l in lines if l.startswith("in ")]
+    outs = [l for l in lines if l.startswith("out ")]
+    assert len(ins) == len(model_mod.INPUT_NAMES)
+    assert len(outs) == len(model_mod.OUTPUT_NAMES)
+
+def test_golden_pallas_agrees_with_oracle_golden():
+    """The artifact rust executes is the *pallas* lowering; verify its
+    numerics agree with the oracle that wrote the golden file."""
+    args = aot.golden_inputs(4, 16, 8, 8)
+    got = model_mod.track_model(*map(jnp.asarray, args))
+    want = model_mod.track_model_ref(*map(jnp.asarray, args))
+    for name, g, w in zip(model_mod.OUTPUT_NAMES, got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-4, atol=1e-3, err_msg=name)

@@ -1,0 +1,212 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and data regimes; every comparison is
+assert_allclose against ref.py. These tests are the core correctness signal
+for the numbers the rust runtime serves.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+import jax.numpy as jnp
+
+from compile.kernels.interp import interp_tracks
+from compile.kernels.agl import agl_tracks
+from compile.kernels import ref
+
+RTOL = 1e-4
+ATOL = 1e-3
+
+
+def make_track_batch(rng, b, n, m, valid_frac=0.9, t_span=600.0):
+    t = np.sort(rng.uniform(0, t_span, (b, n)).astype(np.float32), axis=1)
+    lat = (40.0 + np.cumsum(rng.normal(0, 2e-3, (b, n)), axis=1)).astype(np.float32)
+    lon = (-90.0 + np.cumsum(rng.normal(0, 2e-3, (b, n)), axis=1)).astype(np.float32)
+    alt = rng.uniform(50, 12500, (b, n)).astype(np.float32)
+    valid = (rng.uniform(size=(b, n)) < valid_frac).astype(np.float32)
+    grid = np.linspace(0, t_span, m, dtype=np.float32)[None, :].repeat(b, axis=0)
+    return t, lat, lon, alt, valid, grid
+
+
+def assert_interp_matches(args):
+    got = interp_tracks(*map(jnp.asarray, args))
+    want = ref.interp_tracks_ref(*map(jnp.asarray, args))
+    for name, g, w in zip(("lat", "lon", "alt", "vrate", "gspeed", "valid"), got, want):
+        assert_allclose(np.asarray(g), np.asarray(w), rtol=RTOL, atol=ATOL,
+                        err_msg=f"output {name}")
+
+
+class TestInterpVsRef:
+    def test_basic_batch(self):
+        rng = np.random.default_rng(1)
+        assert_interp_matches(make_track_batch(rng, 4, 32, 16))
+
+    def test_aot_default_shapes(self):
+        rng = np.random.default_rng(2)
+        assert_interp_matches(make_track_batch(rng, 16, 128, 64))
+
+    def test_all_valid(self):
+        rng = np.random.default_rng(3)
+        assert_interp_matches(make_track_batch(rng, 3, 16, 8, valid_frac=1.0))
+
+    def test_no_valid_row_is_zero(self):
+        rng = np.random.default_rng(4)
+        t, lat, lon, alt, valid, grid = make_track_batch(rng, 2, 16, 8)
+        valid[0, :] = 0.0
+        out = interp_tracks(*map(jnp.asarray, (t, lat, lon, alt, valid, grid)))
+        for arr in out:
+            assert_allclose(np.asarray(arr)[0], 0.0, atol=1e-6)
+
+    def test_single_valid_obs_row_is_zero(self):
+        """<2 valid observations => valid=0 and zero outputs (paper drops
+        short segments; kernel must still be total)."""
+        rng = np.random.default_rng(5)
+        t, lat, lon, alt, valid, grid = make_track_batch(rng, 2, 16, 8)
+        valid[0, :] = 0.0
+        valid[0, 3] = 1.0
+        out = interp_tracks(*map(jnp.asarray, (t, lat, lon, alt, valid, grid)))
+        assert np.asarray(out[5])[0].max() == 0.0
+        assert_interp_matches((t, lat, lon, alt, valid, grid))
+
+    def test_grid_outside_span_clamps_to_endpoints(self):
+        t = np.array([[100.0, 200.0, 300.0]], dtype=np.float32)
+        lat = np.array([[40.0, 41.0, 42.0]], dtype=np.float32)
+        lon = np.array([[-71.0, -72.0, -73.0]], dtype=np.float32)
+        alt = np.array([[1000.0, 2000.0, 3000.0]], dtype=np.float32)
+        valid = np.ones((1, 3), dtype=np.float32)
+        grid = np.array([[0.0, 150.0, 400.0]], dtype=np.float32)
+        out = interp_tracks(*map(jnp.asarray, (t, lat, lon, alt, valid, grid)))
+        o_alt = np.asarray(out[2])[0]
+        assert o_alt[0] == pytest.approx(1000.0)   # before span -> first obs
+        assert o_alt[1] == pytest.approx(1500.0)   # midpoint
+        assert o_alt[2] == pytest.approx(3000.0)   # after span -> last obs
+
+    def test_exact_hit_on_observation(self):
+        t = np.array([[0.0, 10.0, 20.0, 30.0]], dtype=np.float32)
+        lat = np.zeros((1, 4), dtype=np.float32)
+        lon = np.zeros((1, 4), dtype=np.float32)
+        alt = np.array([[100.0, 200.0, 300.0, 400.0]], dtype=np.float32)
+        valid = np.ones((1, 4), dtype=np.float32)
+        grid = np.array([[10.0, 20.0]], dtype=np.float32)
+        out = interp_tracks(*map(jnp.asarray, (t, lat, lon, alt, valid, grid)))
+        assert_allclose(np.asarray(out[2])[0], [200.0, 300.0], rtol=1e-5)
+
+    def test_duplicate_timestamps_no_nan(self):
+        t = np.array([[10.0, 10.0, 10.0, 20.0]], dtype=np.float32)
+        lat = np.array([[40.0, 40.1, 40.2, 40.3]], dtype=np.float32)
+        lon = np.full((1, 4), -71.0, dtype=np.float32)
+        alt = np.array([[1000.0, 1100.0, 1200.0, 1300.0]], dtype=np.float32)
+        valid = np.ones((1, 4), dtype=np.float32)
+        grid = np.array([[5.0, 10.0, 15.0]], dtype=np.float32)
+        out = interp_tracks(*map(jnp.asarray, (t, lat, lon, alt, valid, grid)))
+        for arr in out:
+            assert np.isfinite(np.asarray(arr)).all()
+        assert_interp_matches((t, lat, lon, alt, valid, grid))
+
+    def test_vertical_rate_of_constant_climb(self):
+        """500 ft over 60 s of grid => 500 ft/min everywhere (uniform climb)."""
+        n = 8
+        t = np.linspace(0, 60, n, dtype=np.float32)[None, :]
+        alt = (1000.0 + (500.0 / 60.0) * t).astype(np.float32)
+        lat = np.full((1, n), 40.0, dtype=np.float32)
+        lon = np.full((1, n), -71.0, dtype=np.float32)
+        valid = np.ones((1, n), dtype=np.float32)
+        grid = np.linspace(0, 60, 16, dtype=np.float32)[None, :]
+        out = interp_tracks(*map(jnp.asarray, (t, lat, lon, alt, valid, grid)))
+        assert_allclose(np.asarray(out[3])[0], 500.0, rtol=1e-3)
+
+    def test_ground_speed_of_straight_northbound(self):
+        """1 deg lat / 600 s = 60 nm / (1/6 h) = 360 kt."""
+        n = 8
+        t = np.linspace(0, 600, n, dtype=np.float32)[None, :]
+        lat = (40.0 + t / 600.0).astype(np.float32)
+        lon = np.full((1, n), -71.0, dtype=np.float32)
+        alt = np.full((1, n), 3000.0, dtype=np.float32)
+        valid = np.ones((1, n), dtype=np.float32)
+        grid = np.linspace(0, 600, 16, dtype=np.float32)[None, :]
+        out = interp_tracks(*map(jnp.asarray, (t, lat, lon, alt, valid, grid)))
+        assert_allclose(np.asarray(out[4])[0], 360.0, rtol=1e-3)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 6),
+        n=st.integers(4, 48),
+        m=st.integers(3, 32),
+        valid_frac=st.floats(0.0, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, b, n, m, valid_frac, seed):
+        rng = np.random.default_rng(seed)
+        assert_interp_matches(make_track_batch(rng, b, n, m, valid_frac))
+
+
+def make_agl_batch(rng, b, m, th=16, tw=16):
+    lat = rng.uniform(41.0, 41.9, (b, m)).astype(np.float32)
+    lon = rng.uniform(-72.0, -71.1, (b, m)).astype(np.float32)
+    alt = rng.uniform(500, 12500, (b, m)).astype(np.float32)
+    dem = rng.uniform(0, 800, (th, tw)).astype(np.float32)
+    meta = np.array([41.0, -72.0, 1.0 / th, 1.0 / tw], dtype=np.float32)
+    return lat, lon, alt, dem, meta
+
+
+def assert_agl_matches(args):
+    got = agl_tracks(*map(jnp.asarray, args))
+    want = ref.agl_tracks_ref(*map(jnp.asarray, args))
+    for name, g, w in zip(("agl", "elev"), got, want):
+        assert_allclose(np.asarray(g), np.asarray(w), rtol=RTOL, atol=ATOL,
+                        err_msg=f"output {name}")
+
+
+class TestAglVsRef:
+    def test_basic_batch(self):
+        rng = np.random.default_rng(11)
+        assert_agl_matches(make_agl_batch(rng, 4, 16))
+
+    def test_aot_default_shapes(self):
+        rng = np.random.default_rng(12)
+        assert_agl_matches(make_agl_batch(rng, 16, 64, 64, 64))
+
+    def test_exact_on_lattice_points(self):
+        """Queries exactly on DEM lattice points return the cell value."""
+        th = tw = 8
+        dem = np.arange(th * tw, dtype=np.float32).reshape(th, tw)
+        meta = np.array([40.0, -80.0, 0.5, 0.5], dtype=np.float32)
+        lat = np.array([[40.0, 40.5, 43.5]], dtype=np.float32)  # rows 0,1,7
+        lon = np.array([[-80.0, -79.5, -76.5]], dtype=np.float32)  # cols 0,1,7
+        alt = np.zeros((1, 3), dtype=np.float32)
+        agl, elev = agl_tracks(*map(jnp.asarray, (lat, lon, alt, dem, meta)))
+        expect = np.array([dem[0, 0], dem[1, 1], dem[7, 7]]) * ref.FT_PER_M
+        assert_allclose(np.asarray(elev)[0], expect, rtol=1e-5)
+        assert_allclose(np.asarray(agl)[0], -expect, rtol=1e-5)
+
+    def test_border_clamp_outside_tile(self):
+        th = tw = 4
+        dem = np.ones((th, tw), dtype=np.float32) * 100.0
+        dem[0, 0] = 7.0
+        meta = np.array([40.0, -80.0, 0.1, 0.1], dtype=np.float32)
+        lat = np.array([[0.0]], dtype=np.float32)    # far south of tile
+        lon = np.array([[-179.0]], dtype=np.float32)  # far west of tile
+        alt = np.array([[1000.0]], dtype=np.float32)
+        agl, elev = agl_tracks(*map(jnp.asarray, (lat, lon, alt, dem, meta)))
+        assert_allclose(np.asarray(elev)[0, 0], 7.0 * ref.FT_PER_M, rtol=1e-5)
+
+    def test_flat_terrain_agl_is_alt_minus_const(self):
+        rng = np.random.default_rng(13)
+        lat, lon, alt, dem, meta = make_agl_batch(rng, 2, 8)
+        dem[:] = 100.0
+        agl, elev = agl_tracks(*map(jnp.asarray, (lat, lon, alt, dem, meta)))
+        assert_allclose(np.asarray(agl), alt - 100.0 * ref.FT_PER_M, rtol=1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 5),
+        m=st.integers(1, 24),
+        th=st.integers(2, 24),
+        tw=st.integers(2, 24),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, b, m, th, tw, seed):
+        rng = np.random.default_rng(seed)
+        assert_agl_matches(make_agl_batch(rng, b, m, th, tw))

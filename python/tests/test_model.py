@@ -1,0 +1,86 @@
+"""L2 correctness: full track model (pallas path) vs oracle + invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+import jax.numpy as jnp
+
+from compile import model as model_mod
+from compile.kernels import ref
+from tests.test_kernels import make_track_batch
+
+RTOL = 1e-4
+ATOL = 1e-3
+
+
+def make_model_batch(rng, b=4, n=32, m=16, tile=16):
+    t, lat, lon, alt, valid, grid = make_track_batch(rng, b, n, m)
+    # DEM tile covering the track region with margin.
+    dem = rng.uniform(0, 600, (tile, tile)).astype(np.float32)
+    meta = np.array([39.0, -91.0, 4.0 / tile, 4.0 / tile], dtype=np.float32)
+    return t, lat, lon, alt, valid, grid, dem, meta
+
+
+class TestTrackModel:
+    def test_matches_oracle(self):
+        rng = np.random.default_rng(21)
+        args = make_model_batch(rng)
+        got = model_mod.track_model(*map(jnp.asarray, args))
+        want = model_mod.track_model_ref(*map(jnp.asarray, args))
+        for name, g, w in zip(model_mod.OUTPUT_NAMES, got, want):
+            assert_allclose(np.asarray(g), np.asarray(w), rtol=RTOL, atol=ATOL,
+                            err_msg=f"output {name}")
+
+    def test_aot_default_shapes_match_oracle(self):
+        rng = np.random.default_rng(22)
+        args = make_model_batch(
+            rng, model_mod.DEFAULT_B, model_mod.DEFAULT_N,
+            model_mod.DEFAULT_M, model_mod.DEFAULT_TILE,
+        )
+        got = model_mod.track_model(*map(jnp.asarray, args))
+        want = model_mod.track_model_ref(*map(jnp.asarray, args))
+        for name, g, w in zip(model_mod.OUTPUT_NAMES, got, want):
+            assert_allclose(np.asarray(g), np.asarray(w), rtol=RTOL, atol=ATOL,
+                            err_msg=f"output {name}")
+
+    def test_output_count_and_shapes(self):
+        rng = np.random.default_rng(23)
+        args = make_model_batch(rng, b=3, n=16, m=8, tile=8)
+        out = model_mod.track_model(*map(jnp.asarray, args))
+        assert len(out) == len(model_mod.OUTPUT_NAMES)
+        for arr in out:
+            assert arr.shape == (3, 8)
+            assert arr.dtype == jnp.float32
+
+    def test_agl_equals_alt_minus_elev_when_valid(self):
+        rng = np.random.default_rng(24)
+        args = make_model_batch(rng)
+        lat, lon, alt, vrate, gspeed, agl, valid = (
+            np.asarray(a) for a in model_mod.track_model(*map(jnp.asarray, args))
+        )
+        _, elev = ref.agl_tracks_ref(
+            jnp.asarray(lat), jnp.asarray(lon), jnp.asarray(alt),
+            jnp.asarray(args[6]), jnp.asarray(args[7]),
+        )
+        mask = valid > 0.5
+        assert_allclose(agl[mask], (alt - np.asarray(elev))[mask], rtol=1e-4, atol=1e-2)
+
+    def test_all_finite(self):
+        rng = np.random.default_rng(25)
+        for _ in range(3):
+            args = make_model_batch(rng)
+            for arr in model_mod.track_model(*map(jnp.asarray, args)):
+                assert np.isfinite(np.asarray(arr)).all()
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), b=st.integers(1, 4),
+           n=st.integers(4, 32), m=st.integers(3, 16), tile=st.integers(2, 16))
+    def test_hypothesis_model_sweep(self, seed, b, n, m, tile):
+        rng = np.random.default_rng(seed)
+        args = make_model_batch(rng, b, n, m, tile)
+        got = model_mod.track_model(*map(jnp.asarray, args))
+        want = model_mod.track_model_ref(*map(jnp.asarray, args))
+        for name, g, w in zip(model_mod.OUTPUT_NAMES, got, want):
+            assert_allclose(np.asarray(g), np.asarray(w), rtol=RTOL, atol=ATOL,
+                            err_msg=f"output {name}")

@@ -1,0 +1,9 @@
+//! Regenerates §IV.B: archiving with block vs cyclic distribution
+//! (filename-sorted per-aircraft tasks; cyclic cuts job time >90%).
+use emproc::bench_harness::section;
+use emproc::workflow::benchcmd;
+
+fn main() {
+    section("§IV.B — archiving organized data: block vs cyclic");
+    print!("{}", benchcmd::run_archiving());
+}

@@ -1,0 +1,8 @@
+//! Regenerates Fig 3: file-size distributions of both datasets.
+use emproc::bench_harness::section;
+use emproc::workflow::benchcmd;
+
+fn main() {
+    section("Fig 3 — dataset file-size distributions");
+    print!("{}", benchcmd::run_fig3());
+}

@@ -1,0 +1,8 @@
+//! Regenerates Fig 4: job time vs cores + the 50%-fewer-nodes crossover.
+use emproc::bench_harness::section;
+use emproc::workflow::benchcmd;
+
+fn main() {
+    section("Fig 4 — job time for parsing and organizing dataset #1");
+    print!("{}", benchcmd::run_fig4());
+}

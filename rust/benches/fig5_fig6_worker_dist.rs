@@ -1,0 +1,9 @@
+//! Regenerates Figs 5-6: worker-time distributions (255 workers),
+//! chronological vs largest-first, NPPN sweep.
+use emproc::bench_harness::section;
+use emproc::workflow::benchcmd;
+
+fn main() {
+    section("Figs 5-6 — worker-time distributions while organizing DS#1");
+    print!("{}", benchcmd::run_fig56());
+}

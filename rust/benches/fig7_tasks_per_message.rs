@@ -1,0 +1,9 @@
+//! Regenerates Fig 7: job time vs tasks-per-message (performance
+//! degrades as messages batch more tasks).
+use emproc::bench_harness::section;
+use emproc::workflow::benchcmd;
+
+fn main() {
+    section("Fig 7 — tasks per self-scheduling message");
+    print!("{}", benchcmd::run_fig7());
+}

@@ -1,0 +1,9 @@
+//! Regenerates Fig 8 + the §IV.C >7-day batch baseline: processing the
+//! archived datasets with random organization + self-scheduling.
+use emproc::bench_harness::section;
+use emproc::workflow::benchcmd;
+
+fn main() {
+    section("Fig 8 — processing the archived datasets");
+    print!("{}", benchcmd::run_fig8());
+}

@@ -1,0 +1,17 @@
+//! Regenerates Fig 9 + §V: radar dataset worker-time eCDF on the
+//! follow-up triples configuration (300 tasks/message).
+//!
+//! EMPROC_FIG9_SCALE overrides the id-count scale (default 0.1; use 1.0
+//! for the full 13.19 M-task simulation — a few seconds and ~2.5 GB).
+use emproc::bench_harness::section;
+use emproc::workflow::benchcmd;
+
+fn main() {
+    let scale: f64 = std::env::var("EMPROC_FIG9_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.1);
+    section("Fig 9 — radar follow-up worker-time eCDF");
+    print!("{}", benchcmd::run_fig9(scale));
+    println!("{}", benchcmd::run_serial());
+}

@@ -1,0 +1,82 @@
+//! Perf bench: the PJRT execute hot path (L1/L2 via the runtime).
+//!
+//! Measures per-batch latency and per-observation throughput of the
+//! AOT-compiled track model, plus batch packing overhead — the numbers
+//! tracked in EXPERIMENTS.md §Perf.
+
+use emproc::bench_harness::{bench, section};
+use emproc::runtime::{batch::SegmentObs, TrackBatch, TrackModel};
+use emproc::util::Rng;
+
+fn mk_segment(rng: &mut Rng, n: usize) -> SegmentObs {
+    let mut t = 0.0f32;
+    SegmentObs {
+        t: (0..n)
+            .map(|_| {
+                t += rng.uniform(5.0, 15.0) as f32;
+                t
+            })
+            .collect(),
+        lat: (0..n).map(|_| 42.0 + rng.normal_with(0.0, 0.01) as f32).collect(),
+        lon: (0..n).map(|_| -71.0 + rng.normal_with(0.0, 0.01) as f32).collect(),
+        alt: (0..n).map(|_| rng.uniform(500.0, 8_000.0) as f32).collect(),
+    }
+}
+
+fn main() {
+    let dir = TrackModel::default_dir();
+    let mut model = match TrackModel::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping runtime_hotpath: {e}");
+            return;
+        }
+    };
+    let man = model.manifest().clone();
+    let mut rng = Rng::new(7);
+
+    section("runtime hot path (PJRT execute of the Pallas track model)");
+    println!(
+        "artifact: b={} n={} m={} tile={}",
+        man.b, man.n, man.m, man.tile
+    );
+
+    // Batch packing (pure rust, no PJRT).
+    let segments: Vec<SegmentObs> = (0..man.b).map(|_| mk_segment(&mut rng, man.n)).collect();
+    let dem: Vec<f32> = (0..man.tile * man.tile).map(|_| rng.uniform(0.0, 500.0) as f32).collect();
+    bench("pack batch (16 segments)", 10, 200, || {
+        let mut b = TrackBatch::empty(&man);
+        b.set_dem(&dem, [41.5, -71.5, 0.02, 0.02]).unwrap();
+        for s in &segments {
+            b.push_segment(s);
+        }
+        b
+    });
+
+    // Full execute.
+    let mut batch = TrackBatch::empty(&man);
+    batch.set_dem(&dem, [41.5, -71.5, 0.02, 0.02]).unwrap();
+    for s in &segments {
+        batch.push_segment(s);
+    }
+    let r = bench("PJRT execute (one batch)", 20, 300, || {
+        model.execute(&batch).unwrap()
+    });
+    let obs = (man.b * man.n) as f64;
+    let points = (man.b * man.m) as f64;
+    println!(
+        "-> {:.0} obs/s, {:.0} resampled points/s per worker",
+        obs / r.mean.as_secs_f64(),
+        points / r.mean.as_secs_f64()
+    );
+
+    // Amortized end-to-end (pack + execute), the per-archive inner loop.
+    bench("pack + execute", 20, 300, || {
+        let mut b = TrackBatch::empty(&man);
+        b.set_dem(&dem, [41.5, -71.5, 0.02, 0.02]).unwrap();
+        for s in &segments {
+            b.push_segment(s);
+        }
+        model.execute(&b).unwrap()
+    });
+}

@@ -1,0 +1,66 @@
+//! Perf bench: discrete-event simulator throughput (L3 §Perf target:
+//! paper-scale sweeps must run in seconds).
+
+use emproc::bench_harness::{bench, section};
+use emproc::dist::{order_tasks, Task, TaskOrder};
+use emproc::selfsched::{AllocMode, SelfSchedConfig};
+use emproc::simcluster::{CostModel, SimConfig, Simulator, Stage};
+use emproc::triples::TriplesConfig;
+use emproc::util::Rng;
+
+fn main() {
+    section("simulator throughput");
+    let mut rng = Rng::new(1);
+
+    // Dataset-1 scale (2,425 tasks).
+    let monday = Task::from_manifest(&emproc::datasets::monday::manifest(&mut rng));
+    let ordered = order_tasks(&monday, TaskOrder::Chronological);
+    let cfg = SimConfig {
+        triples: TriplesConfig::table_config(2048, 32).unwrap(),
+        alloc: AllocMode::SelfSched(SelfSchedConfig::default()),
+        stage: Stage::Organize,
+        cost: CostModel::paper_calibrated(),
+    };
+    let r = bench("sim organize DS#1 (2,425 tasks, 1023 workers)", 3, 20, || {
+        Simulator::run(&cfg, &monday, &ordered)
+    });
+    println!(
+        "-> {:.2} M tasks/s",
+        monday.len() as f64 / r.mean.as_secs_f64() / 1e6
+    );
+
+    // Radar scale (1.32 M tasks at 0.1).
+    let radar = emproc::datasets::processing::radar_tasks(&mut rng, 0.1);
+    let rordered = order_tasks(&radar, TaskOrder::Random(1));
+    let rcfg = SimConfig {
+        triples: TriplesConfig::followup_config(),
+        alloc: AllocMode::SelfSched(SelfSchedConfig::radar()),
+        stage: Stage::Process,
+        cost: CostModel::paper_calibrated(),
+    };
+    let r2 = bench("sim radar processing (1.32 M tasks)", 1, 5, || {
+        Simulator::run(&rcfg, &radar, &rordered)
+    });
+    println!(
+        "-> {:.2} M tasks/s",
+        radar.len() as f64 / r2.mean.as_secs_f64() / 1e6
+    );
+
+    // DS#2 processing scale (120 k tasks).
+    let p = emproc::datasets::processing::OpenSkyProcessing::default();
+    let ptasks = emproc::datasets::processing::opensky_tasks(&mut rng, &p);
+    let pordered = order_tasks(&ptasks, TaskOrder::Random(2));
+    let pcfg = SimConfig {
+        triples: TriplesConfig { nodes: 64, nppn: 16, threads: 1, slots_per_job: 2, allocation: 4096 },
+        alloc: AllocMode::SelfSched(SelfSchedConfig::default()),
+        stage: Stage::Process,
+        cost: CostModel::paper_calibrated(),
+    };
+    let r3 = bench("sim process DS#2 (120 k tasks)", 1, 10, || {
+        Simulator::run(&pcfg, &ptasks, &pordered)
+    });
+    println!(
+        "-> {:.2} M tasks/s",
+        ptasks.len() as f64 / r3.mean.as_secs_f64() / 1e6
+    );
+}

@@ -1,0 +1,24 @@
+//! Regenerates TABLE I: job time to organize dataset #1, chronological
+//! organization + self-scheduling, over the NPPN x cores sweep.
+use emproc::bench_harness::{bench, section};
+use emproc::dist::TaskOrder;
+use emproc::workflow::benchcmd;
+
+fn main() {
+    section("TABLE I — organize DS#1, chronological + self-scheduling");
+    print!(
+        "{}",
+        benchcmd::run_table(
+            TaskOrder::Chronological,
+            "TABLE I — sim (paper) seconds",
+            &benchcmd::PAPER_TABLE1
+        )
+    );
+    bench("sim: one 2048-core organize run", 1, 5, || {
+        benchcmd::run_table(
+            TaskOrder::Chronological,
+            "warm",
+            &benchcmd::PAPER_TABLE1,
+        )
+    });
+}

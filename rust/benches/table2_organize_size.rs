@@ -1,0 +1,17 @@
+//! Regenerates TABLE II: job time to organize dataset #1, largest-first
+//! organization + self-scheduling, over the NPPN x cores sweep.
+use emproc::bench_harness::section;
+use emproc::dist::TaskOrder;
+use emproc::workflow::benchcmd;
+
+fn main() {
+    section("TABLE II — organize DS#1, largest-first + self-scheduling");
+    print!(
+        "{}",
+        benchcmd::run_table(
+            TaskOrder::LargestFirst,
+            "TABLE II — sim (paper) seconds",
+            &benchcmd::PAPER_TABLE2
+        )
+    );
+}

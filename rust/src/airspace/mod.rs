@@ -1,0 +1,187 @@
+//! Airspace classes and synthetic aerodromes (§II scope / §III.B filter).
+//!
+//! The paper scopes to aircraft "within 8-10 nautical miles of an airport
+//! surface in controlled airspace" and filters query boxes to Class B, C
+//! and D airspace. Real airspace boundaries are FAA data; here each
+//! synthetic aerodrome projects a cylinder of its class (B: 10 nm, C: 5 nm,
+//! D: 4 nm — representative radii), and classification returns the most
+//! restrictive class covering a point.
+
+use crate::util::Rng;
+
+/// Airspace class of interest (E/G collapsed into `Other`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum AirspaceClass {
+    B,
+    C,
+    D,
+    Other,
+}
+
+impl AirspaceClass {
+    /// Representative surface-area radius (nm).
+    pub fn radius_nm(self) -> f64 {
+        match self {
+            AirspaceClass::B => 10.0,
+            AirspaceClass::C => 5.0,
+            AirspaceClass::D => 4.0,
+            AirspaceClass::Other => 0.0,
+        }
+    }
+
+    /// Parse a one-letter class name.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.trim().to_ascii_uppercase().as_str() {
+            "B" => AirspaceClass::B,
+            "C" => AirspaceClass::C,
+            "D" => AirspaceClass::D,
+            "OTHER" | "E" | "G" => AirspaceClass::Other,
+            _ => return None,
+        })
+    }
+}
+
+/// A synthetic aerodrome with a controlled-airspace cylinder.
+#[derive(Debug, Clone)]
+pub struct Aerodrome {
+    /// Four-letter-style identifier (`SYN0`, `SYN1`, ...).
+    pub id: String,
+    pub lat: f64,
+    pub lon: f64,
+    pub class: AirspaceClass,
+}
+
+/// The set of aerodromes forming the synthetic airspace map.
+#[derive(Debug, Clone, Default)]
+pub struct AirspaceMap {
+    pub aerodromes: Vec<Aerodrome>,
+}
+
+impl AirspaceMap {
+    /// Most restrictive class whose cylinder covers the point.
+    pub fn classify(&self, lat: f64, lon: f64) -> AirspaceClass {
+        let mut best = AirspaceClass::Other;
+        for a in &self.aerodromes {
+            let c = crate::geometry::Circle {
+                lat: a.lat,
+                lon: a.lon,
+                radius_nm: a.class.radius_nm(),
+            };
+            if c.contains(lat, lon) && a.class < best {
+                best = a.class;
+            }
+        }
+        best
+    }
+
+    /// Distance (nm, flat-earth small-angle) from a point to the nearest
+    /// aerodrome, used by the query filter "within a desired... distance
+    /// from aerodrome".
+    pub fn nearest_aerodrome_nm(&self, lat: f64, lon: f64) -> f64 {
+        self.aerodromes
+            .iter()
+            .map(|a| {
+                let dy = (lat - a.lat) * 60.0;
+                let dx = (lon - a.lon) * 60.0 * lat.to_radians().cos();
+                (dx * dx + dy * dy).sqrt()
+            })
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Generate `n` synthetic aerodromes over a CONUS-like region with a
+/// B/C/D mix (few Bravos, many Deltas) and some metroplex clustering —
+/// clustering is what makes circle unions overlap (Fig 1).
+pub fn generate_aerodromes(rng: &mut Rng, n: usize) -> AirspaceMap {
+    let mut aerodromes = Vec::with_capacity(n);
+    let mut i = 0;
+    while aerodromes.len() < n {
+        let (lat, lon) = if !aerodromes.is_empty() && rng.f64() < 0.3 {
+            // Satellite field near an existing one (metroplex).
+            let k = rng.below(aerodromes.len());
+            let base: &Aerodrome = &aerodromes[k];
+            (
+                base.lat + rng.normal_with(0.0, 0.15),
+                base.lon + rng.normal_with(0.0, 0.2),
+            )
+        } else {
+            (rng.uniform(26.0, 47.0), rng.uniform(-122.0, -68.0))
+        };
+        let r = rng.f64();
+        let class = if r < 0.08 {
+            AirspaceClass::B
+        } else if r < 0.30 {
+            AirspaceClass::C
+        } else {
+            AirspaceClass::D
+        };
+        aerodromes.push(Aerodrome { id: format!("SYN{i}"), lat, lon, class });
+        i += 1;
+    }
+    AirspaceMap { aerodromes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_most_restrictive_wins() {
+        let map = AirspaceMap {
+            aerodromes: vec![
+                Aerodrome { id: "D1".into(), lat: 42.0, lon: -71.0, class: AirspaceClass::D },
+                Aerodrome { id: "B1".into(), lat: 42.02, lon: -71.02, class: AirspaceClass::B },
+            ],
+        };
+        assert_eq!(map.classify(42.0, -71.0), AirspaceClass::B);
+    }
+
+    #[test]
+    fn classify_outside_is_other() {
+        let map = AirspaceMap {
+            aerodromes: vec![Aerodrome {
+                id: "D1".into(),
+                lat: 42.0,
+                lon: -71.0,
+                class: AirspaceClass::D,
+            }],
+        };
+        assert_eq!(map.classify(30.0, -100.0), AirspaceClass::Other);
+    }
+
+    #[test]
+    fn nearest_distance_is_zero_at_field() {
+        let map = AirspaceMap {
+            aerodromes: vec![Aerodrome {
+                id: "D1".into(),
+                lat: 42.0,
+                lon: -71.0,
+                class: AirspaceClass::D,
+            }],
+        };
+        assert!(map.nearest_aerodrome_nm(42.0, -71.0) < 1e-9);
+        let d = map.nearest_aerodrome_nm(43.0, -71.0); // 60 nm north
+        assert!((d - 60.0).abs() < 0.5, "{d}");
+    }
+
+    #[test]
+    fn generator_mix_and_bounds() {
+        let mut rng = Rng::new(7);
+        let map = generate_aerodromes(&mut rng, 400);
+        assert_eq!(map.aerodromes.len(), 400);
+        let b = map.aerodromes.iter().filter(|a| a.class == AirspaceClass::B).count();
+        let d = map.aerodromes.iter().filter(|a| a.class == AirspaceClass::D).count();
+        assert!(b < d, "expected fewer Bravos ({b}) than Deltas ({d})");
+        for a in &map.aerodromes {
+            assert!((20.0..=50.0).contains(&a.lat), "lat {}", a.lat);
+            assert!((-130.0..=-60.0).contains(&a.lon), "lon {}", a.lon);
+        }
+    }
+
+    #[test]
+    fn class_ordering_b_most_restrictive() {
+        assert!(AirspaceClass::B < AirspaceClass::C);
+        assert!(AirspaceClass::C < AirspaceClass::D);
+        assert!(AirspaceClass::D < AirspaceClass::Other);
+    }
+}

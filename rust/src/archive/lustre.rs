@@ -1,0 +1,66 @@
+//! Lustre block-size accounting: "the block size of Lustre is 1MB, thus any
+//! file created on the LLSC will take at least 1MB of space" (§II.A).
+
+/// Lustre block size, bytes.
+pub const LUSTRE_BLOCK: u64 = 1024 * 1024;
+
+/// Blocks consumed by a file of `size` bytes (minimum one).
+pub fn blocks_for(size: u64) -> u64 {
+    size.div_ceil(LUSTRE_BLOCK).max(1)
+}
+
+/// On-disk bytes consumed on Lustre for a file of `size` bytes.
+pub fn lustre_bytes(size: u64) -> u64 {
+    blocks_for(size) * LUSTRE_BLOCK
+}
+
+/// Aggregate Lustre overhead for a set of file sizes: `(logical, on_disk)`.
+pub fn storage_footprint(sizes: impl IntoIterator<Item = u64>) -> (u64, u64) {
+    let mut logical = 0u64;
+    let mut on_disk = 0u64;
+    for s in sizes {
+        logical += s;
+        on_disk += lustre_bytes(s);
+    }
+    (logical, on_disk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testing::{self, gen};
+
+    #[test]
+    fn small_files_take_one_block() {
+        assert_eq!(blocks_for(0), 1);
+        assert_eq!(blocks_for(1), 1);
+        assert_eq!(blocks_for(LUSTRE_BLOCK), 1);
+        assert_eq!(blocks_for(LUSTRE_BLOCK + 1), 2);
+    }
+
+    #[test]
+    fn lustre_never_undercounts() {
+        testing::check("lustre >= logical", |rng| {
+            let s = gen::file_size(rng);
+            prop_assert!(lustre_bytes(s) >= s, "on-disk < logical for {s}");
+            prop_assert!(
+                lustre_bytes(s) - s < LUSTRE_BLOCK,
+                "overhead >= one block for {s}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn many_small_files_waste_space() {
+        // The §III.A motivation: 1000 x 10 KB files consume 1000 MB on
+        // disk; one 10 MB archive consumes 10 MB.
+        let small: Vec<u64> = vec![10 * 1024; 1000];
+        let (logical, on_disk) = storage_footprint(small);
+        assert_eq!(logical, 10_240_000);
+        assert_eq!(on_disk, 1000 * LUSTRE_BLOCK);
+        let (_, archived) = storage_footprint([logical]);
+        assert!(archived < on_disk / 50);
+    }
+}

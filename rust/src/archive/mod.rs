@@ -1,0 +1,13 @@
+//! Stage-2 archiving + Lustre storage accounting (§III.A).
+//!
+//! The organize step creates many small per-aircraft files; on Lustre
+//! (1 MB blocks) they waste space, and thousands of concurrent processes
+//! doing random small-file I/O generate pathological network traffic. The
+//! mitigation is zip-archiving every bottom-tier directory while
+//! replicating the first three hierarchy tiers in a parallel tree.
+
+pub mod lustre;
+pub mod zipdir;
+
+pub use lustre::{blocks_for, lustre_bytes, LUSTRE_BLOCK};
+pub use zipdir::{archive_bottom_dirs, ArchivePlan, ArchiveTask};

@@ -1,0 +1,187 @@
+//! Zip archiving of bottom-tier hierarchy directories.
+//!
+//! "In a new parent directory, we replicated the first three tiers of the
+//! directory hierarchy... Then instead of creating directories based on the
+//! ICAO 24-bit addresses, we archive each directory" (§III.A). Each bottom
+//! directory becomes one `*.zip` whose entries are the directory's files —
+//! and each such archive is one stage-2 task.
+
+use anyhow::{Context, Result};
+use std::fs;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+/// One archiving task: a bottom-tier directory and its destination zip.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArchiveTask {
+    /// Bottom-tier source directory.
+    pub src_dir: PathBuf,
+    /// Destination `.zip` (under the replicated three-tier tree).
+    pub dst_zip: PathBuf,
+    /// Total bytes of the files inside (drives scheduling cost).
+    pub bytes: u64,
+}
+
+/// The full archiving plan for an organized tree.
+#[derive(Debug, Default)]
+pub struct ArchivePlan {
+    pub tasks: Vec<ArchiveTask>,
+}
+
+impl ArchivePlan {
+    /// Walk an organized 4-tier tree and plan one task per bottom dir,
+    /// sorted by destination filename — matching LLMapReduce's task sort,
+    /// which is what correlates adjacent tasks by aircraft (§IV.B).
+    pub fn plan(organized_root: &Path, archive_root: &Path) -> Result<Self> {
+        let mut tasks = Vec::new();
+        let mut bottoms = Vec::new();
+        find_bottom_dirs(organized_root, 0, &mut bottoms)?;
+        for src in bottoms {
+            let rel = src
+                .strip_prefix(organized_root)
+                .context("bottom dir outside root")?;
+            let mut bytes = 0u64;
+            for entry in fs::read_dir(&src)? {
+                let entry = entry?;
+                if entry.file_type()?.is_file() {
+                    bytes += entry.metadata()?.len();
+                }
+            }
+            let dst = archive_root.join(rel).with_extension("zip");
+            tasks.push(ArchiveTask { src_dir: src, dst_zip: dst, bytes });
+        }
+        tasks.sort_by(|a, b| a.dst_zip.cmp(&b.dst_zip));
+        Ok(ArchivePlan { tasks })
+    }
+}
+
+/// Depth-first search for tier-4 (bottom) directories: directories that
+/// contain no subdirectories.
+fn find_bottom_dirs(dir: &Path, depth: usize, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut has_subdir = false;
+    for entry in fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))? {
+        let entry = entry?;
+        if entry.file_type()?.is_dir() {
+            has_subdir = true;
+            find_bottom_dirs(&entry.path(), depth + 1, out)?;
+        }
+    }
+    if !has_subdir && depth > 0 {
+        out.push(dir.to_path_buf());
+    }
+    Ok(())
+}
+
+/// Execute one archive task: zip every file in `src_dir` into `dst_zip`
+/// (deflate). Returns bytes written.
+pub fn archive_dir(task: &ArchiveTask) -> Result<u64> {
+    if let Some(parent) = task.dst_zip.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    let file = fs::File::create(&task.dst_zip)
+        .with_context(|| format!("creating {}", task.dst_zip.display()))?;
+    let mut zip = zip::ZipWriter::new(file);
+    let opts = zip::write::FileOptions::default()
+        .compression_method(zip::CompressionMethod::Deflated);
+    let mut names: Vec<PathBuf> = fs::read_dir(&task.src_dir)?
+        .filter_map(|e| e.ok())
+        .filter(|e| e.file_type().map(|t| t.is_file()).unwrap_or(false))
+        .map(|e| e.path())
+        .collect();
+    names.sort();
+    let mut buf = Vec::new();
+    for path in names {
+        let name = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .context("non-utf8 file name")?
+            .to_string();
+        zip.start_file(name, opts)?;
+        buf.clear();
+        fs::File::open(&path)?.read_to_end(&mut buf)?;
+        zip.write_all(&buf)?;
+    }
+    zip.finish()?;
+    Ok(fs::metadata(&task.dst_zip)?.len())
+}
+
+/// Plan + execute archiving serially (the parallel path goes through the
+/// coordinator; this is the library-level fallback and the test surface).
+pub fn archive_bottom_dirs(organized_root: &Path, archive_root: &Path) -> Result<ArchivePlan> {
+    let plan = ArchivePlan::plan(organized_root, archive_root)?;
+    for task in &plan.tasks {
+        archive_dir(task)?;
+    }
+    Ok(plan)
+}
+
+/// Read one member file back out of an archive (used by stage 3 and tests).
+pub fn read_member(zip_path: &Path, member: &str) -> Result<Vec<u8>> {
+    let file = fs::File::open(zip_path)
+        .with_context(|| format!("opening {}", zip_path.display()))?;
+    let mut ar = zip::ZipArchive::new(file)?;
+    let mut entry = ar.by_name(member)?;
+    let mut buf = Vec::with_capacity(entry.size() as usize);
+    entry.read_to_end(&mut buf)?;
+    Ok(buf)
+}
+
+/// List member names of an archive.
+pub fn list_members(zip_path: &Path) -> Result<Vec<String>> {
+    let file = fs::File::open(zip_path)?;
+    let ar = zip::ZipArchive::new(file)?;
+    Ok(ar.file_names().map(str::to_string).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn make_tree(root: &Path) {
+        // year/type/seats/icao_bucket/{a,b}.csv
+        let bottom = root.join("2019/fixed_wing_single/seats_02_03/icao_000");
+        fs::create_dir_all(&bottom).unwrap();
+        fs::write(bottom.join("a.csv"), b"time,icao24\n1,000001\n").unwrap();
+        fs::write(bottom.join("b.csv"), b"time,icao24\n2,000002\n").unwrap();
+        let bottom2 = root.join("2019/rotorcraft/seats_01/icao_001");
+        fs::create_dir_all(&bottom2).unwrap();
+        fs::write(bottom2.join("c.csv"), b"time,icao24\n3,000003\n").unwrap();
+    }
+
+    #[test]
+    fn plan_finds_bottom_dirs_sorted() {
+        let tmp = std::env::temp_dir().join(format!("emproc_zip_{}", std::process::id()));
+        let root = tmp.join("org_plan");
+        let _ = fs::remove_dir_all(&root);
+        make_tree(&root);
+        let plan = ArchivePlan::plan(&root, &tmp.join("arch_plan")).unwrap();
+        assert_eq!(plan.tasks.len(), 2);
+        assert!(plan.tasks.windows(2).all(|w| w[0].dst_zip <= w[1].dst_zip));
+        assert!(plan.tasks[0].bytes > 0);
+        let _ = fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn archive_round_trip() {
+        let tmp = std::env::temp_dir().join(format!("emproc_zip_rt_{}", std::process::id()));
+        let org = tmp.join("org");
+        let arch = tmp.join("arch");
+        let _ = fs::remove_dir_all(&tmp);
+        make_tree(&org);
+        let plan = archive_bottom_dirs(&org, &arch).unwrap();
+        assert_eq!(plan.tasks.len(), 2);
+        for t in &plan.tasks {
+            assert!(t.dst_zip.exists(), "{} missing", t.dst_zip.display());
+        }
+        // Three-tier replication: zip lives under year/type/seats/.
+        let z = &plan.tasks[0].dst_zip;
+        let rel = z.strip_prefix(&arch).unwrap();
+        assert_eq!(rel.iter().count(), 4); // 3 tiers + file
+        // Members round-trip.
+        let members = list_members(z).unwrap();
+        assert_eq!(members.len(), 2);
+        let data = read_member(z, "a.csv").unwrap();
+        assert_eq!(data, b"time,icao24\n1,000001\n");
+        let _ = fs::remove_dir_all(&tmp);
+    }
+}

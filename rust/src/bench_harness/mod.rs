@@ -1,0 +1,79 @@
+//! Minimal timing harness for `cargo bench` targets (criterion is not
+//! available offline).
+//!
+//! Each bench target is `harness = false` with a `main()` that calls
+//! [`bench`] for timed kernels and/or prints the experiment report from
+//! [`crate::workflow::benchcmd`]. Output format is stable so
+//! `cargo bench | tee bench_output.txt` is directly comparable across
+//! runs (EXPERIMENTS.md §Perf).
+
+use std::time::{Duration, Instant};
+
+/// Result of one timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    /// criterion-like one-liner.
+    pub fn render(&self) -> String {
+        format!(
+            "{:<44} time: [{:>11?} mean] ± {:?} (min {:?}, max {:?}, {} iters)",
+            self.name, self.mean, self.stddev, self.min, self.max, self.iters
+        )
+    }
+}
+
+/// Time `f` with `warmup` throwaway runs + `iters` measured runs. The
+/// closure's return value is black-boxed to keep the optimizer honest.
+pub fn bench<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed());
+    }
+    let secs: Vec<f64> = samples.iter().map(Duration::as_secs_f64).collect();
+    let mean = crate::util::mean(&secs);
+    let sd = crate::util::stddev(&secs);
+    let (lo, hi) = crate::util::stats::min_max(&secs);
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: Duration::from_secs_f64(mean),
+        stddev: Duration::from_secs_f64(sd),
+        min: Duration::from_secs_f64(lo),
+        max: Duration::from_secs_f64(hi),
+    };
+    println!("{}", r.render());
+    r
+}
+
+/// Print a section header in the bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_times() {
+        let r = bench("noop-ish", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>())
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.min <= r.mean && r.mean <= r.max.max(r.mean));
+    }
+}

@@ -1,0 +1,124 @@
+//! Tiny flag parser: `--key value` / `--flag` / positional arguments.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Parsed arguments for one subcommand.
+#[derive(Debug, Default)]
+pub struct ArgParser {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+    /// Flags that appeared with no value (`--verbose`).
+    switches: Vec<String>,
+}
+
+impl ArgParser {
+    /// Parse `args` (not including the subcommand itself). `bool_flags`
+    /// lists the valueless switches so `--flag value` vs `--flag` is
+    /// unambiguous.
+    pub fn parse(args: &[String], bool_flags: &[&str]) -> Result<Self> {
+        let mut out = ArgParser::default();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if bool_flags.contains(&name) {
+                    out.switches.push(name.to_string());
+                    i += 1;
+                } else {
+                    let Some(value) = args.get(i + 1) else {
+                        bail!("flag --{name} expects a value");
+                    };
+                    out.flags.insert(name.to_string(), value.clone());
+                    i += 2;
+                }
+            } else {
+                out.positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Positional argument at `i`.
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(String::as_str)
+    }
+
+    /// All positional arguments.
+    pub fn positionals(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// String flag value.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    /// String flag with default.
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Required string flag.
+    pub fn required(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing required flag --{name}"))
+    }
+
+    /// Parsed numeric flag with default.
+    pub fn get_num<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| anyhow::anyhow!("flag --{name}: cannot parse '{v}'")),
+        }
+    }
+
+    /// True if the switch was present.
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_args() {
+        let a = ArgParser::parse(
+            &sv(&["monday", "--out", "/tmp/x", "--seed", "7", "--verbose"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.pos(0), Some("monday"));
+        assert_eq!(a.get("out"), Some("/tmp/x"));
+        assert_eq!(a.get_num::<u64>("seed", 0).unwrap(), 7);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(ArgParser::parse(&sv(&["--out"]), &[]).is_err());
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = ArgParser::parse(&sv(&[]), &[]).unwrap();
+        assert_eq!(a.get_or("order", "size"), "size");
+        assert!(a.required("out").is_err());
+        assert_eq!(a.get_num::<f64>("scale", 1.0).unwrap(), 1.0);
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = ArgParser::parse(&sv(&["--seed", "abc"]), &[]).unwrap();
+        assert!(a.get_num::<u64>("seed", 0).is_err());
+    }
+}

@@ -1,0 +1,113 @@
+//! Subcommand dispatch. Each command is a thin wrapper over the library API.
+
+use super::args::ArgParser;
+use anyhow::{bail, Result};
+
+const HELP: &str = "\
+emproc — aircraft-track processing with triples-mode and self-scheduling
+(reproduction of Weinert et al. 2021, MIT LL)
+
+USAGE: emproc <COMMAND> [FLAGS]
+
+COMMANDS:
+  generate <monday|aerodrome|radar>  generate a synthetic dataset
+      --out DIR      output directory (required)
+      --scale F      fraction of paper scale for real files (default 0.001)
+      --seed N       RNG seed (default 42)
+  organize   stage 1: parse + organize into the 4-tier hierarchy
+      --data DIR --out DIR [--workers N] [--order chrono|size|random]
+  archive    stage 2: zip bottom-tier directories
+      --data DIR --out DIR [--dist block|cyclic] [--workers N]
+  process    stage 3: interpolate into track segments (PJRT hot path)
+      --data DIR --out DIR [--workers N] [--artifacts DIR]
+  pipeline   all three stages end-to-end on a generated corpus
+      --out DIR [--scale F] [--workers N] [--seed N]
+  queries    §III.B aerodrome query generation (geometry pipeline)
+      --out FILE [--aerodromes N] [--seed N]
+  bench <EXP|all>   regenerate a paper table/figure on the simulator
+      EXP in: table1 table2 fig3 fig4 fig5 fig6 fig7 archiving fig8 fig9 serial
+  info       report artifact, manifest and environment status
+  help       this text
+";
+
+/// Route `args` to the subcommand implementations.
+pub fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print!("{HELP}");
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        "info" => cmd_info(),
+        "generate" => cmd_generate(rest),
+        "organize" => cmd_organize(rest),
+        "archive" => cmd_archive(rest),
+        "process" => cmd_process(rest),
+        "pipeline" => cmd_pipeline(rest),
+        "queries" => cmd_queries(rest),
+        "bench" => cmd_bench(rest),
+        other => bail!("unknown command '{other}' (try `emproc help`)"),
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = crate::runtime::TrackModel::default_dir();
+    println!("artifact dir: {}", dir.display());
+    let man_path = dir.join("track_model.manifest");
+    match crate::runtime::ArtifactManifest::load(&man_path) {
+        Ok(man) => {
+            println!(
+                "artifact: {} b={} n={} m={} tile={}",
+                man.name, man.b, man.n, man.m, man.tile
+            );
+            println!("inputs:  {}", man.inputs.join(", "));
+            println!("outputs: {}", man.outputs.join(", "));
+        }
+        Err(e) => println!("manifest not loadable: {e} (run `make artifacts`)"),
+    }
+    match crate::runtime::TrackModel::load(&dir) {
+        Ok(_) => println!("PJRT compile: OK"),
+        Err(e) => println!("PJRT compile: FAILED: {e}"),
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &[String]) -> Result<()> {
+    let a = ArgParser::parse(args, &[])?;
+    crate::workflow::commands::generate(&a)
+}
+
+fn cmd_organize(args: &[String]) -> Result<()> {
+    let a = ArgParser::parse(args, &[])?;
+    crate::workflow::commands::organize(&a)
+}
+
+fn cmd_archive(args: &[String]) -> Result<()> {
+    let a = ArgParser::parse(args, &[])?;
+    crate::workflow::commands::archive(&a)
+}
+
+fn cmd_process(args: &[String]) -> Result<()> {
+    let a = ArgParser::parse(args, &[])?;
+    crate::workflow::commands::process(&a)
+}
+
+fn cmd_pipeline(args: &[String]) -> Result<()> {
+    let a = ArgParser::parse(args, &[])?;
+    crate::workflow::commands::pipeline(&a)
+}
+
+fn cmd_queries(args: &[String]) -> Result<()> {
+    let a = ArgParser::parse(args, &[])?;
+    crate::workflow::commands::queries(&a)
+}
+
+fn cmd_bench(args: &[String]) -> Result<()> {
+    let a = ArgParser::parse(args, &[])?;
+    let which = a.pos(0).unwrap_or("all");
+    crate::workflow::benchcmd::run(which, &a)
+}

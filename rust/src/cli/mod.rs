@@ -1,0 +1,30 @@
+//! Hand-rolled CLI (clap is unavailable offline).
+//!
+//! Subcommands mirror the workflow and the experiment index in DESIGN.md:
+//!
+//! ```text
+//! emproc generate <monday|aerodrome|radar> --out DIR [--scale F] [--seed N]
+//! emproc organize --data DIR --out DIR [--workers N] [--order O]
+//! emproc archive  --data DIR --out DIR [--dist block|cyclic]
+//! emproc process  --data DIR --out DIR [--workers N] [--artifacts DIR]
+//! emproc pipeline --out DIR [--scale F]         # all three stages, e2e
+//! emproc bench <table1|table2|fig3|...|all>     # regenerate paper results
+//! emproc queries  --out FILE [--aerodromes N]   # §III.B query generation
+//! emproc info                                   # artifact + env report
+//! ```
+
+mod args;
+mod commands;
+
+pub use args::ArgParser;
+
+/// Entry point; returns the process exit code.
+pub fn run(args: &[String]) -> i32 {
+    match commands::dispatch(args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}

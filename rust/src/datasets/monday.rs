@@ -1,0 +1,149 @@
+//! Dataset #1 "Mondays": OpenSky global state-vector files.
+//!
+//! Paper facts reproduced (§III.B-C, Fig 3 left):
+//! * 104 Mondays, 2018-02-05 .. 2020-11-16, 24 hourly files per day with a
+//!   few missing → **2,425 files**;
+//! * **714 GB** total;
+//! * file-size histogram is Gaussian-shaped, "indicative of diurnal
+//!   pattern due to data organized by hour";
+//! * chronological order exists (day, hour), so stage-1 tasks can be
+//!   organized chronologically or by size.
+
+use super::{DatasetKind, FileEntry, FileManifest};
+use crate::util::Rng;
+
+/// Paper-scale constants.
+pub const MONDAYS: u32 = 104;
+pub const FILES: usize = 2_425;
+pub const TOTAL_BYTES: u64 = 714_000_000_000;
+
+/// Diurnal traffic factor for a UTC hour: global ADS-B volume peaks in the
+/// (European + US) daytime overlap and bottoms in the Pacific night.
+pub fn diurnal_factor(hour: u8) -> f64 {
+    let h = hour as f64;
+    // Smooth bimodal-ish curve peaking around 14 UTC.
+    let main = (-((h - 14.0) * (h - 14.0)) / (2.0 * 5.0 * 5.0)).exp();
+    0.30 + 0.70 * main
+}
+
+/// Year-over-year OpenSky coverage growth across the 104-Monday span.
+fn growth_factor(day_idx: u32) -> f64 {
+    0.75 + 0.5 * (day_idx as f64 / MONDAYS as f64)
+}
+
+/// Generate the paper-scale manifest (sizes normalized to 714 GB total).
+pub fn manifest(rng: &mut Rng) -> FileManifest {
+    // 104 * 24 = 2496 candidate files; drop uniformly to exactly 2425
+    // ("no guarantee on data availability").
+    let candidates: usize = MONDAYS as usize * 24;
+    let drop = candidates - FILES;
+    let mut dropped = vec![false; candidates];
+    for idx in rng.sample_indices(candidates, drop) {
+        dropped[idx] = true;
+    }
+    let mut entries = Vec::with_capacity(FILES);
+    let mut shapes = Vec::with_capacity(FILES);
+    for m in 0..MONDAYS {
+        for h in 0..24u8 {
+            let flat = m as usize * 24 + h as usize;
+            if dropped[flat] {
+                continue;
+            }
+            shapes.push(diurnal_factor(h) * growth_factor(m) * rng.lognormal(0.0, 0.22));
+            entries.push(FileEntry {
+                name: format!("states_{:03}_{:02}.csv", m, h),
+                size: 0, // normalized to the paper total below
+                day: m,
+                hour: h,
+                group: 0,
+            });
+        }
+    }
+    let total_shape: f64 = shapes.iter().sum();
+    for (e, s) in entries.iter_mut().zip(&shapes) {
+        e.size = ((s / total_shape) * TOTAL_BYTES as f64) as u64;
+    }
+    FileManifest { kind: DatasetKind::Monday, entries }
+}
+
+/// A scaled-down manifest for real-corpus runs: `days` Mondays, sizes
+/// scaled so the largest file is ~`max_file_bytes`.
+pub fn mini_manifest(rng: &mut Rng, days: u32, max_file_bytes: u64) -> FileManifest {
+    let mut m = manifest(rng);
+    m.entries.retain(|e| e.day < days);
+    let max = m.entries.iter().map(|e| e.size).max().unwrap_or(1).max(1);
+    for e in &mut m.entries {
+        e.size = (e.size as f64 / max as f64 * max_file_bytes as f64).max(1.0) as u64;
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Histogram;
+
+    #[test]
+    fn counts_and_total_match_paper() {
+        let mut rng = Rng::new(42);
+        let m = manifest(&mut rng);
+        assert_eq!(m.len(), FILES);
+        let total = m.total_bytes();
+        let err = (total as f64 - TOTAL_BYTES as f64).abs() / TOTAL_BYTES as f64;
+        assert!(err < 0.001, "total {total} vs {TOTAL_BYTES}");
+    }
+
+    #[test]
+    fn histogram_is_gaussian_shaped_not_sloping() {
+        // Fig 3 left: interior mode, not a monotone slope.
+        let mut rng = Rng::new(42);
+        let m = manifest(&mut rng);
+        let h = Histogram::new(10.0, m.sizes_mb());
+        assert!(!h.is_sloping(), "monday histogram should be peaked");
+        // Mode should be near the mean (~294 MB / 10 MB bins ≈ bin 29).
+        let mode = h.mode_bin();
+        assert!((15..50).contains(&mode), "mode bin {mode}");
+    }
+
+    #[test]
+    fn diurnal_pattern_visible() {
+        let mut rng = Rng::new(42);
+        let m = manifest(&mut rng);
+        let avg_at = |hour: u8| -> f64 {
+            let xs: Vec<f64> = m
+                .entries
+                .iter()
+                .filter(|e| e.hour == hour)
+                .map(|e| e.size as f64)
+                .collect();
+            crate::util::mean(&xs)
+        };
+        assert!(avg_at(14) > 1.8 * avg_at(3), "diurnal peak missing");
+    }
+
+    #[test]
+    fn chronological_ordering_spans_campaign() {
+        let mut rng = Rng::new(42);
+        let m = manifest(&mut rng);
+        let order = m.chronological();
+        assert_eq!(m.entries[order[0]].day, 0);
+        assert_eq!(m.entries[*order.last().unwrap()].day, MONDAYS - 1);
+    }
+
+    #[test]
+    fn mini_manifest_scales() {
+        let mut rng = Rng::new(42);
+        let m = mini_manifest(&mut rng, 2, 50_000);
+        assert!(m.len() <= 48);
+        assert!(m.entries.iter().all(|e| e.size <= 50_000));
+        assert!(!m.is_empty());
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let a = manifest(&mut Rng::new(42));
+        let b = manifest(&mut Rng::new(42));
+        assert_eq!(a.total_bytes(), b.total_bytes());
+        assert_eq!(a.entries[0].size, b.entries[0].size);
+    }
+}

@@ -1,0 +1,291 @@
+//! Stage-3 (process/interpolate) paper-scale task builders.
+//!
+//! Stage-3 tasks are *per aircraft archive* (OpenSky datasets) or *per
+//! deidentified id* (radar), not per raw file, so they get their own
+//! generators. Cost drivers per §IV.C/§V:
+//!
+//! * observation count (dominant; heavy-tailed across aircraft),
+//! * DEM footprint — OpenSky tracks "could span hundreds of nautical miles
+//!   and multiple USA states", radar tracks are bounded by one radar's
+//!   surveillance volume,
+//! * a fixed per-task setup (archive open; the §V SQL query).
+//!
+//! Activity is correlated across *adjacent sorted identifiers* (commercial
+//! fleets register consecutive ICAO blocks and fly the most), which is
+//! exactly what makes LLMapReduce's filename-sorted order pathological for
+//! block distribution in §IV.B.
+
+use crate::dist::Task;
+use crate::util::Rng;
+
+/// Parameters for the OpenSky stage-3 workload (dataset #2 defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct OpenSkyProcessing {
+    /// Number of per-aircraft-bucket tasks.
+    pub tasks: usize,
+    /// Total observations across all tasks (847 GB / ~100 B).
+    pub total_obs: u64,
+    /// Log-normal sigma of per-task observation counts (tail weight).
+    pub sigma: f64,
+    /// Mean DEM cells per task (spans states -> large).
+    pub mean_dem_cells: f64,
+    /// Fleet-block correlation length in sorted-id order.
+    pub fleet_len: usize,
+}
+
+impl Default for OpenSkyProcessing {
+    fn default() -> Self {
+        OpenSkyProcessing {
+            tasks: 120_000,
+            total_obs: 8_470_000_000,
+            sigma: 1.7,
+            mean_dem_cells: 200_000.0,
+            fleet_len: 48,
+        }
+    }
+}
+
+/// Build the dataset-#2 stage-3 task list (Fig 8 / §IV.C workload).
+pub fn opensky_tasks(rng: &mut Rng, p: &OpenSkyProcessing) -> Vec<Task> {
+    let mut tasks = Vec::with_capacity(p.tasks);
+    let mut shapes = Vec::with_capacity(p.tasks);
+    let mut fleet_scale = 1.0;
+    for i in 0..p.tasks {
+        if i % p.fleet_len == 0 {
+            // New fleet block: draw a shared activity scale.
+            fleet_scale = rng.lognormal(0.0, p.sigma);
+        }
+        shapes.push(fleet_scale * rng.lognormal(0.0, 0.45));
+    }
+    let total_shape: f64 = shapes.iter().sum();
+    for (i, shape) in shapes.iter().enumerate() {
+        let obs = (shape / total_shape * p.total_obs as f64) as u64;
+        // DEM footprint grows sublinearly with activity (more flights ->
+        // wider coverage, saturating).
+        let dem = p.mean_dem_cells * (shape / (total_shape / p.tasks as f64)).powf(0.6)
+            * rng.lognormal(0.0, 0.3);
+        let mut t = Task {
+            id: i,
+            bytes: 0,
+            obs,
+            dem_cells: dem as u64,
+            chrono_key: i as u64,
+            // Hierarchy-sorted name: fleets are adjacent (see module docs).
+            name: format!("2019/t{:02}/s{:02}/icao_{:06}.zip", i / 20_000, (i / 2_000) % 10, i),
+            };
+        t.set_fixed_cost_s(1.5); // archive open + output write
+        tasks.push(t);
+    }
+    tasks
+}
+
+/// Parameters for the §IV.B archiving workload (predecessor dataset).
+#[derive(Debug, Clone, Copy)]
+pub struct ArchiveWorkload {
+    /// Per-aircraft-bucket archive tasks.
+    pub tasks: usize,
+    /// Total bytes (predecessor of dataset #1).
+    pub total_bytes: u64,
+    /// Fraction of tasks that are commercial-fleet buckets.
+    pub commercial_frac: f64,
+    /// Fraction of total bytes held by commercial buckets.
+    pub commercial_bytes_frac: f64,
+    /// Number of contiguous commercial registration blocks.
+    pub commercial_runs: usize,
+}
+
+impl Default for ArchiveWorkload {
+    fn default() -> Self {
+        ArchiveWorkload {
+            tasks: 100_000,
+            total_bytes: 714_000_000_000,
+            commercial_frac: 0.005,
+            commercial_bytes_frac: 0.95,
+            commercial_runs: 5,
+        }
+    }
+}
+
+/// Build the §IV.B archiving task list. Airlines register *consecutive*
+/// ICAO 24-bit blocks and their aircraft fly ~1000x more than median GA,
+/// so the filename-sorted task order contains a few contiguous runs of
+/// enormous archives holding ~95% of all bytes. Block distribution hands
+/// whole runs to single workers (the paper's "2% of parallel processes
+/// account for more than 95% of the total job time"); cyclic interleaves
+/// them.
+pub fn archive_tasks(rng: &mut Rng, p: &ArchiveWorkload) -> Vec<Task> {
+    let n_comm = ((p.tasks as f64) * p.commercial_frac) as usize;
+    let run_len = (n_comm / p.commercial_runs.max(1)).max(1);
+    // Choose run starts spread across the id space, non-overlapping.
+    let mut is_commercial = vec![false; p.tasks];
+    let stride = p.tasks / p.commercial_runs.max(1);
+    for r in 0..p.commercial_runs {
+        let start = r * stride + rng.below((stride - run_len).max(1));
+        for slot in is_commercial.iter_mut().skip(start).take(run_len) {
+            *slot = true;
+        }
+    }
+    // Draw shapes: GA heavy-tailed but light; commercial huge and flat-ish.
+    let mut shapes: Vec<f64> = Vec::with_capacity(p.tasks);
+    let mut comm_total = 0.0;
+    let mut ga_total = 0.0;
+    for &c in &is_commercial {
+        let s = if c {
+            rng.lognormal(0.0, 0.5)
+        } else {
+            rng.lognormal(0.0, 1.2)
+        };
+        if c {
+            comm_total += s;
+        } else {
+            ga_total += s;
+        }
+        shapes.push(s);
+    }
+    // Normalize the two classes to the requested byte split.
+    let comm_bytes = p.total_bytes as f64 * p.commercial_bytes_frac;
+    let ga_bytes = p.total_bytes as f64 - comm_bytes;
+    is_commercial
+        .iter()
+        .zip(shapes)
+        .enumerate()
+        .map(|(i, (&c, s))| {
+            let bytes = if c {
+                s / comm_total * comm_bytes
+            } else {
+                s / ga_total * ga_bytes
+            };
+            Task {
+                id: i,
+                bytes: bytes as u64,
+                obs: bytes as u64 / 100,
+                dem_cells: 0,
+                chrono_key: i as u64,
+                name: format!("2019/arch/icao_{i:06}.zip"),
+            }
+        })
+        .collect()
+}
+
+/// Build the §V radar stage-3 task list (Fig 9 workload) from the radar
+/// manifest entries: small, light-tailed tasks with a per-task SQL cost
+/// and a bounded DEM footprint.
+pub fn radar_tasks(rng: &mut Rng, scale: f64) -> Vec<Task> {
+    let manifest = crate::datasets::radar::manifest(rng, scale);
+    manifest
+        .entries
+        .iter()
+        .enumerate()
+        .map(|(i, e)| {
+            // ~70 bytes per radar report (see radar.rs).
+            let obs = e.size / 70;
+            let mut t = Task {
+                id: i,
+                bytes: 0,
+                obs,
+                dem_cells: 2_000 + (obs * 8).min(20_000), // bounded by radar volume
+                chrono_key: e.day as u64,
+                name: e.name.clone(),
+            };
+            t.set_fixed_cost_s(5.89); // SQL query + connection overhead
+            t
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn opensky_totals_and_tail() {
+        let mut rng = Rng::new(50);
+        let p = OpenSkyProcessing { tasks: 20_000, ..Default::default() };
+        let tasks = opensky_tasks(&mut rng, &p);
+        assert_eq!(tasks.len(), 20_000);
+        let total_obs: u64 = tasks.iter().map(|t| t.obs).sum();
+        let err = (total_obs as f64 - p.total_obs as f64).abs() / p.total_obs as f64;
+        assert!(err < 0.01, "total obs {total_obs}");
+        // Heavy tail: top 1% of tasks should hold >10% of observations.
+        let mut obs: Vec<u64> = tasks.iter().map(|t| t.obs).collect();
+        obs.sort_unstable_by(|a, b| b.cmp(a));
+        let top1: u64 = obs[..200].iter().sum();
+        assert!(top1 as f64 > 0.10 * total_obs as f64, "tail too light");
+    }
+
+    #[test]
+    fn opensky_fleet_correlation_in_sorted_order() {
+        // Adjacent tasks (same fleet) must be much more similar than
+        // random pairs — the §IV.B mechanism.
+        let mut rng = Rng::new(51);
+        let p = OpenSkyProcessing { tasks: 10_000, ..Default::default() };
+        let tasks = opensky_tasks(&mut rng, &p);
+        let obs: Vec<f64> = tasks.iter().map(|t| t.obs as f64).collect();
+        let log_obs: Vec<f64> = obs.iter().map(|&o| (o + 1.0).ln()).collect();
+        let adjacent_var: f64 = log_obs
+            .windows(2)
+            .map(|w| (w[0] - w[1]) * (w[0] - w[1]))
+            .sum::<f64>()
+            / (log_obs.len() - 1) as f64;
+        let global_var = {
+            let sd = stats::stddev(&log_obs);
+            2.0 * sd * sd
+        };
+        assert!(
+            adjacent_var < 0.55 * global_var,
+            "no fleet correlation: adjacent {adjacent_var:.3} vs global {global_var:.3}"
+        );
+    }
+
+    #[test]
+    fn radar_tasks_are_small_and_uniform() {
+        let mut rng = Rng::new(52);
+        let tasks = radar_tasks(&mut rng, 0.001);
+        assert_eq!(tasks.len(), 13_190);
+        let costs: Vec<f64> = tasks
+            .iter()
+            .map(|t| t.fixed_cost_s() + t.obs as f64 * 5e-3 + t.dem_cells as f64 * 2e-4)
+            .collect();
+        let median = stats::median(&costs);
+        let p999 = stats::percentile(&costs, 99.9);
+        assert!(median > 1.0 && median < 20.0, "median {median}");
+        assert!(p999 < 12.0 * median, "radar tail too heavy: {p999} vs {median}");
+    }
+
+    #[test]
+    fn archive_tasks_concentrate_bytes_in_contiguous_runs() {
+        let mut rng = Rng::new(54);
+        let p = ArchiveWorkload { tasks: 20_000, ..Default::default() };
+        let tasks = archive_tasks(&mut rng, &p);
+        assert_eq!(tasks.len(), 20_000);
+        let total: u64 = tasks.iter().map(|t| t.bytes).sum();
+        let err = (total as f64 - p.total_bytes as f64).abs() / p.total_bytes as f64;
+        assert!(err < 0.01, "total {total}");
+        // ~95% of bytes in ~1% of tasks.
+        let mut sizes: Vec<u64> = tasks.iter().map(|t| t.bytes).collect();
+        sizes.sort_unstable_by(|a, b| b.cmp(a));
+        let top1pct: u64 = sizes[..200].iter().sum();
+        assert!(
+            top1pct as f64 > 0.85 * total as f64,
+            "top 1% holds only {:.0}%",
+            top1pct as f64 / total as f64 * 100.0
+        );
+        // Heavy tasks are contiguous in id order (registration blocks).
+        let threshold = total / 2_000; // >> any GA bucket, << any commercial one
+        let heavy: Vec<usize> = tasks
+            .iter()
+            .filter(|t| t.bytes > threshold)
+            .map(|t| t.id)
+            .collect();
+        let runs = heavy.windows(2).filter(|w| w[1] != w[0] + 1).count() + 1;
+        assert!(runs <= p.commercial_runs + 2, "heavy ids split into {runs} runs");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = opensky_tasks(&mut Rng::new(53), &OpenSkyProcessing { tasks: 1000, ..Default::default() });
+        let b = opensky_tasks(&mut Rng::new(53), &OpenSkyProcessing { tasks: 1000, ..Default::default() });
+        assert_eq!(a[17].obs, b[17].obs);
+    }
+}

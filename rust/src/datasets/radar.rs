@@ -1,0 +1,144 @@
+//! §V follow-up dataset: TRAMS terminal-radar reports (not public — fully
+//! synthetic substitute, DESIGN.md substitution log).
+//!
+//! Paper facts reproduced:
+//! * 18 radar identifiers (ATL ... STL) over Jan-Sep 2015, varying
+//!   temporal coverage per radar;
+//! * ICAO addresses deidentified into **13,190,700 generic ids** — a
+//!   round trip between two airports becomes four ids (arrival/departure
+//!   per airport), so tasks are numerous and individually small;
+//! * tasks randomly ordered, **300 tasks per self-scheduling message**,
+//!   43,969 messages;
+//! * per-task cost is small and *uniform-ish*: each task's DEM footprint
+//!   is bounded by one radar's surveillance volume (≈60 nm), unlike
+//!   OpenSky tracks spanning states.
+
+use super::{DatasetKind, FileEntry, FileManifest};
+use crate::util::Rng;
+
+/// The paper's radar identifiers (§V).
+pub const RADARS: [&str; 18] = [
+    "ATL", "DEN", "DFW", "FLL", "HPN", "JFK", "LAS", "LAX", "LAXN", "MOD",
+    "OAK", "ORDA", "PDX", "PHL", "PHX", "SDF", "SEA", "STL",
+];
+
+/// Paper-scale id/task count.
+pub const IDS: usize = 13_190_700;
+/// Tasks per self-scheduling message used in §V.
+pub const TASKS_PER_MESSAGE: usize = 300;
+
+/// Per-radar coverage months (start..=end), loosely matching "KDFW had data
+/// from January through August while KOAK only from June through August".
+fn coverage(radar_idx: usize) -> (u8, u8) {
+    match radar_idx % 6 {
+        0 => (1, 9),
+        1 => (1, 8),
+        2 => (3, 9),
+        3 => (6, 8),
+        4 => (2, 7),
+        _ => (1, 6),
+    }
+}
+
+/// Generate the radar manifest with `scale` × the paper's id count
+/// (scale = 1.0 is the full 13.19 M tasks — the simulator handles it; use
+/// smaller scales for quick runs).
+///
+/// Entry metadata: `group` = radar index, `day` = (month*31+day) ordinal
+/// so chronological ordering exists, `size` = bytes of radar reports for
+/// that id (small, light-tailed — the §V mechanism for good balance).
+pub fn manifest(rng: &mut Rng, scale: f64) -> FileManifest {
+    let n = ((IDS as f64 * scale) as usize).max(1);
+    let mut entries = Vec::with_capacity(n);
+    // Busy radars see more ids: weight by a per-radar traffic factor.
+    let weights: Vec<f64> = (0..RADARS.len())
+        .map(|i| match RADARS[i] {
+            "ATL" | "DFW" | "ORDA" | "LAX" => 2.5,
+            "JFK" | "DEN" | "LAS" | "PHX" | "SEA" => 1.6,
+            _ => 1.0,
+        })
+        .collect();
+    let wtotal: f64 = weights.iter().sum();
+    let mut id = 0u32;
+    for (r, w) in weights.iter().enumerate() {
+        let (m0, m1) = coverage(r);
+        let count = ((n as f64) * w / wtotal) as usize;
+        for _ in 0..count {
+            let month = m0 + (rng.below((m1 - m0 + 1) as usize) as u8);
+            let day = rng.below(28) as u8 + 1;
+            // One id = one terminal-area transit: a few hundred 4.8 s
+            // radar sweeps ~ 40-90 bytes each. Light-tailed.
+            let reports = 40.0 + rng.exponential(140.0);
+            entries.push(FileEntry {
+                name: format!("{}_{:07}.csv", RADARS[r], id),
+                size: (reports * 70.0) as u64,
+                day: month as u32 * 31 + day as u32,
+                hour: 0,
+                group: r as u32,
+            });
+            id += 1;
+        }
+    }
+    // Top up rounding shortfall on the busiest radar.
+    while entries.len() < n {
+        let reports = 40.0 + rng.exponential(140.0);
+        entries.push(FileEntry {
+            name: format!("ATL_{id:07}.csv"),
+            size: (reports * 70.0) as u64,
+            day: 31,
+            hour: 0,
+            group: 0,
+        });
+        id += 1;
+    }
+    FileManifest { kind: DatasetKind::Radar, entries }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaled_counts() {
+        let mut rng = Rng::new(44);
+        let m = manifest(&mut rng, 0.001);
+        assert_eq!(m.len(), 13_190);
+    }
+
+    #[test]
+    fn all_radars_present_with_busy_skew() {
+        let mut rng = Rng::new(44);
+        let m = manifest(&mut rng, 0.01);
+        let mut counts = vec![0usize; RADARS.len()];
+        for e in &m.entries {
+            counts[e.group as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
+        let atl = counts[0];
+        let hpn = counts[4];
+        assert!(atl > 2 * hpn, "ATL {atl} should dwarf HPN {hpn}");
+    }
+
+    #[test]
+    fn sizes_are_small_and_light_tailed() {
+        // §V mechanism: unlike OpenSky tasks (100s of MB), radar tasks are
+        // tiny and comparatively uniform -> good load balance.
+        let mut rng = Rng::new(44);
+        let m = manifest(&mut rng, 0.003);
+        let sizes: Vec<f64> = m.entries.iter().map(|e| e.size as f64).collect();
+        let mean = crate::util::mean(&sizes);
+        let max = sizes.iter().cloned().fold(0.0, f64::max);
+        assert!(mean < 100_000.0, "mean {mean}");
+        assert!(max < 200.0 * mean, "tail too heavy: max {max} mean {mean}");
+    }
+
+    #[test]
+    fn months_respect_coverage() {
+        let mut rng = Rng::new(44);
+        let m = manifest(&mut rng, 0.002);
+        for e in &m.entries {
+            let month = e.day / 31;
+            assert!((1..=9).contains(&month), "month {month}");
+        }
+    }
+}

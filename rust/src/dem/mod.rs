@@ -1,0 +1,212 @@
+//! Synthetic GLOBE-like digital elevation model (§III.B substrate).
+//!
+//! The paper uses the NOAA GLOBE DEM (30-arcsecond grid) to (a) estimate
+//! min/max elevation per query bounding box — converting desired AGL ranges
+//! into MSL query bounds — and (b) compute AGL altitude for every track
+//! point in stage 3. This module provides a deterministic procedural
+//! terrain with the same API surface: grid spacing, bbox min/max, bilinear
+//! point samples, and tile extraction for the AOT kernel's VMEM-resident
+//! DEM tile.
+//!
+//! The procedural field is a fixed sum of smooth sinusoids (plus a coastal
+//! sea-level clamp) — continuous, bounded, reproducible, and rough enough
+//! that bbox elevation ranges and per-track footprints behave like real
+//! terrain for scheduling/cost purposes.
+
+use crate::geometry::Rect;
+
+/// Grid spacing in degrees (GLOBE is 30 arc-seconds = 1/120 deg).
+pub const GRID_DEG: f64 = 1.0 / 120.0;
+
+/// Metres -> feet, matching the kernel-side constant.
+pub const FT_PER_M: f64 = 3.28084;
+
+/// Deterministic procedural DEM.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Dem;
+
+impl Dem {
+    /// Terrain elevation in metres MSL at a point (continuous field).
+    ///
+    /// Range roughly [0, ~1900] m over CONUS-like longitudes, with higher
+    /// "mountains" in the west — enough structure that different bounding
+    /// boxes get meaningfully different MSL query ranges.
+    pub fn elevation_m(&self, lat: f64, lon: f64) -> f64 {
+        let x = lon.to_radians();
+        let y = lat.to_radians();
+        // Broad continental swell (higher toward the west).
+        let continental = 700.0 * (0.5 + 0.5 * (x * 2.0).sin()) * (y * 3.0).cos().abs();
+        // Mountain ridges.
+        let ridges = 600.0
+            * ((x * 11.0).sin() * (y * 13.0).cos()).powi(2)
+            * (0.5 + 0.5 * (x * 3.0 + y * 5.0).sin());
+        // Local hills.
+        let hills = 150.0 * ((x * 47.0).sin() * (y * 53.0).sin() + 1.0) * 0.5
+            + 80.0 * ((x * 101.0 + 1.3).sin() * (y * 97.0 + 0.7).cos() + 1.0) * 0.5;
+        // Sea-level clamp produces coastal plains.
+        (continental + ridges + hills - 120.0).max(0.0)
+    }
+
+    /// Grid-snapped sample (row/col of the 30-arcsec lattice).
+    pub fn grid_sample_m(&self, row: i64, col: i64) -> f64 {
+        self.elevation_m(row as f64 * GRID_DEG, col as f64 * GRID_DEG)
+    }
+
+    /// Minimum and maximum elevation over a bounding box, scanned on the
+    /// GLOBE lattice (plus the box corners). Used by query generation to
+    /// turn an AGL range into an MSL range.
+    pub fn bbox_min_max_m(&self, bbox: &Rect) -> (f64, f64) {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        let row0 = (bbox.lat_lo / GRID_DEG).floor() as i64;
+        let row1 = (bbox.lat_hi / GRID_DEG).ceil() as i64;
+        let col0 = (bbox.lon_lo / GRID_DEG).floor() as i64;
+        let col1 = (bbox.lon_hi / GRID_DEG).ceil() as i64;
+        // Cap the scan for huge boxes: sample at most ~200 rows/cols, which
+        // bounds query-generation cost like the real pipeline's decimated
+        // DEM reads.
+        let rstep = (((row1 - row0) / 200).max(1)) as usize;
+        let cstep = (((col1 - col0) / 200).max(1)) as usize;
+        let mut row = row0;
+        while row <= row1 {
+            let mut col = col0;
+            while col <= col1 {
+                let e = self.grid_sample_m(row, col);
+                lo = lo.min(e);
+                hi = hi.max(e);
+                col += cstep as i64;
+            }
+            row += rstep as i64;
+        }
+        (lo, hi)
+    }
+
+    /// Extract a `side x side` tile covering `bbox`, row-major, metres —
+    /// the exact layout `runtime::TrackBatch::set_dem` uploads. Returns
+    /// `(tile, meta)` with `meta = [lat0, lon0, dlat, dlon]` matching the
+    /// kernel's bilinear convention.
+    pub fn tile_for_bbox(&self, bbox: &Rect, side: usize) -> (Vec<f32>, [f32; 4]) {
+        assert!(side >= 2, "tile side must be >= 2");
+        let dlat = (bbox.lat_hi - bbox.lat_lo).max(1e-6) / (side - 1) as f64;
+        let dlon = (bbox.lon_hi - bbox.lon_lo).max(1e-6) / (side - 1) as f64;
+        let mut tile = Vec::with_capacity(side * side);
+        for r in 0..side {
+            let lat = bbox.lat_lo + r as f64 * dlat;
+            for c in 0..side {
+                let lon = bbox.lon_lo + c as f64 * dlon;
+                tile.push(self.elevation_m(lat, lon) as f32);
+            }
+        }
+        (
+            tile,
+            [bbox.lat_lo as f32, bbox.lon_lo as f32, dlat as f32, dlon as f32],
+        )
+    }
+
+    /// Border-clamped bilinear sample of an extracted tile — the rust-side
+    /// mirror of the Pallas `agl` kernel's lookup, used for validation and
+    /// for the pure-rust fallback path.
+    pub fn bilinear_tile(tile: &[f32], side: usize, meta: [f32; 4], lat: f64, lon: f64) -> f64 {
+        let ri = ((lat - meta[0] as f64) / meta[2] as f64)
+            .clamp(0.0, (side - 1) as f64 - 1e-6);
+        let ci = ((lon - meta[1] as f64) / meta[3] as f64)
+            .clamp(0.0, (side - 1) as f64 - 1e-6);
+        let r0 = ri.floor() as usize;
+        let c0 = ci.floor() as usize;
+        let fr = ri - r0 as f64;
+        let fc = ci - c0 as f64;
+        let at = |r: usize, c: usize| tile[r * side + c] as f64;
+        let top = at(r0, c0) * (1.0 - fc) + at(r0, c0 + 1) * fc;
+        let bot = at(r0 + 1, c0) * (1.0 - fc) + at(r0 + 1, c0 + 1) * fc;
+        top * (1.0 - fr) + bot * fr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testing;
+
+    #[test]
+    fn elevation_is_deterministic_and_bounded() {
+        let dem = Dem;
+        let a = dem.elevation_m(42.36, -71.06);
+        let b = dem.elevation_m(42.36, -71.06);
+        assert_eq!(a, b);
+        testing::check("dem bounded", |rng| {
+            let lat = rng.uniform(20.0, 50.0);
+            let lon = rng.uniform(-125.0, -65.0);
+            let e = Dem.elevation_m(lat, lon);
+            prop_assert!((0.0..4000.0).contains(&e), "elevation {e} at {lat},{lon}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bbox_min_max_brackets_point_samples() {
+        testing::check("bbox brackets samples", |rng| {
+            let lat = rng.uniform(25.0, 45.0);
+            let lon = rng.uniform(-120.0, -70.0);
+            let bbox = Rect {
+                lat_lo: lat,
+                lat_hi: lat + 0.3,
+                lon_lo: lon,
+                lon_hi: lon + 0.3,
+            };
+            let (lo, hi) = Dem.bbox_min_max_m(&bbox);
+            prop_assert!(lo <= hi, "lo {lo} > hi {hi}");
+            for _ in 0..5 {
+                let p = Dem.elevation_m(
+                    rng.uniform(bbox.lat_lo, bbox.lat_hi),
+                    rng.uniform(bbox.lon_lo, bbox.lon_hi),
+                );
+                // Interior points may slightly exceed lattice extrema, but
+                // not by more than the local roughness bound.
+                prop_assert!(p >= lo - 120.0 && p <= hi + 120.0, "point {p} vs [{lo},{hi}]");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tile_layout_and_bilinear_agree_with_field_at_nodes() {
+        let dem = Dem;
+        let bbox = Rect { lat_lo: 40.0, lat_hi: 40.5, lon_lo: -75.0, lon_hi: -74.5 };
+        let side = 16;
+        let (tile, meta) = dem.tile_for_bbox(&bbox, side);
+        assert_eq!(tile.len(), side * side);
+        // Exact at lattice nodes.
+        for r in [0usize, 7, 15] {
+            for c in [0usize, 7, 15] {
+                let lat = meta[0] as f64 + r as f64 * meta[2] as f64;
+                let lon = meta[1] as f64 + c as f64 * meta[3] as f64;
+                let want = tile[r * side + c] as f64;
+                let got = Dem::bilinear_tile(&tile, side, meta, lat, lon);
+                assert!((got - want).abs() < 1e-3, "node ({r},{c}): {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn bilinear_clamps_outside_tile() {
+        let bbox = Rect { lat_lo: 40.0, lat_hi: 41.0, lon_lo: -75.0, lon_hi: -74.0 };
+        let (tile, meta) = Dem.tile_for_bbox(&bbox, 8);
+        let inside = Dem::bilinear_tile(&tile, 8, meta, 40.0, -75.0);
+        let outside = Dem::bilinear_tile(&tile, 8, meta, 0.0, -179.0);
+        assert!((inside - outside).abs() < 1e-9);
+    }
+
+    #[test]
+    fn west_is_higher_on_average() {
+        // Sanity on the continental gradient used in DESIGN.md's narrative.
+        let dem = Dem;
+        let west: f64 = (0..100)
+            .map(|i| dem.elevation_m(35.0 + (i as f64) * 0.05, -110.0))
+            .sum();
+        let east: f64 = (0..100)
+            .map(|i| dem.elevation_m(35.0 + (i as f64) * 0.05, -75.0))
+            .sum();
+        assert!(west > east, "west {west} <= east {east}");
+    }
+}

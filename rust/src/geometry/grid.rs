@@ -1,0 +1,279 @@
+//! Grid rasterization: circles → union cells → connected components →
+//! rectangle decomposition (the Fig 1 chain).
+//!
+//! Working on a uniform cell grid makes the union of overlapping,
+//! non-convex circle sets trivial and yields discrete, non-overlapping,
+//! rectilinear polygons by construction — exactly the property the paper
+//! needs for Impala-compatible box queries.
+
+use super::{Circle, Rect};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// A rasterization domain: origin + square cell size (degrees).
+#[derive(Debug, Clone, Copy)]
+pub struct CellGrid {
+    pub lat0: f64,
+    pub lon0: f64,
+    pub cell_deg: f64,
+}
+
+/// One connected rectilinear polygon, as a set of grid cells plus its
+/// rectangle decomposition.
+#[derive(Debug, Clone)]
+pub struct Component {
+    /// Grid cells `(row, col)` belonging to this polygon.
+    pub cells: Vec<(i32, i32)>,
+    /// Maximal-horizontal-strip rectangle decomposition (non-overlapping,
+    /// exact cover of `cells`).
+    pub rects: Vec<Rect>,
+}
+
+impl CellGrid {
+    /// Grid sized so circles of `radius_nm` span ~`cells_per_radius` cells.
+    pub fn for_radius(radius_nm: f64, cells_per_radius: usize) -> Self {
+        CellGrid {
+            lat0: 0.0,
+            lon0: -180.0,
+            cell_deg: radius_nm * super::DEG_PER_NM_LAT / cells_per_radius as f64,
+        }
+    }
+
+    /// Cell index containing a point.
+    pub fn cell_of(&self, lat: f64, lon: f64) -> (i32, i32) {
+        (
+            ((lat - self.lat0) / self.cell_deg).floor() as i32,
+            ((lon - self.lon0) / self.cell_deg).floor() as i32,
+        )
+    }
+
+    /// Rect covered by a cell.
+    pub fn cell_rect(&self, cell: (i32, i32)) -> Rect {
+        let (r, c) = cell;
+        Rect {
+            lat_lo: self.lat0 + r as f64 * self.cell_deg,
+            lat_hi: self.lat0 + (r + 1) as f64 * self.cell_deg,
+            lon_lo: self.lon0 + c as f64 * self.cell_deg,
+            lon_hi: self.lon0 + (c + 1) as f64 * self.cell_deg,
+        }
+    }
+
+    /// Rasterize the union of circles: a cell is included if its center is
+    /// inside any circle.
+    pub fn rasterize_union(&self, circles: &[Circle]) -> BTreeSet<(i32, i32)> {
+        let mut cells = BTreeSet::new();
+        for c in circles {
+            let bb = c.bounding_rect();
+            let (r0, c0) = self.cell_of(bb.lat_lo, bb.lon_lo);
+            let (r1, c1) = self.cell_of(bb.lat_hi, bb.lon_hi);
+            for r in r0..=r1 {
+                for cc in c0..=c1 {
+                    let rect = self.cell_rect((r, cc));
+                    let (clat, clon) = rect.center();
+                    if c.contains(clat, clon) {
+                        cells.insert((r, cc));
+                    }
+                }
+            }
+        }
+        cells
+    }
+
+    /// Split a cell set into 4-connected components and decompose each into
+    /// rectangles via maximal horizontal strips merged vertically.
+    pub fn components(&self, cells: &BTreeSet<(i32, i32)>) -> Vec<Component> {
+        let mut remaining: BTreeSet<(i32, i32)> = cells.clone();
+        let mut out = Vec::new();
+        while let Some(&start) = remaining.iter().next() {
+            // BFS flood fill.
+            let mut comp = Vec::new();
+            let mut queue = vec![start];
+            remaining.remove(&start);
+            while let Some(cell) = queue.pop() {
+                comp.push(cell);
+                let (r, c) = cell;
+                for nb in [(r - 1, c), (r + 1, c), (r, c - 1), (r, c + 1)] {
+                    if remaining.remove(&nb) {
+                        queue.push(nb);
+                    }
+                }
+            }
+            comp.sort_unstable();
+            let rects = self.decompose(&comp);
+            out.push(Component { cells: comp, rects });
+        }
+        out
+    }
+
+    /// Decompose a cell set into non-overlapping rects: greedy maximal
+    /// horizontal runs per row, then merge vertically-adjacent runs with
+    /// identical column spans ("iteratively joined to create simple,
+    /// nonoverlapping rectangular bounding boxes").
+    fn decompose(&self, cells: &[(i32, i32)]) -> Vec<Rect> {
+        // Row -> sorted cols.
+        let mut rows: BTreeMap<i32, Vec<i32>> = BTreeMap::new();
+        for &(r, c) in cells {
+            rows.entry(r).or_default().push(c);
+        }
+        // Horizontal runs per row: (row, col_start, col_end_inclusive).
+        let mut runs: Vec<(i32, i32, i32)> = Vec::new();
+        for (r, mut cols) in rows {
+            cols.sort_unstable();
+            let mut start = cols[0];
+            let mut prev = cols[0];
+            for &c in &cols[1..] {
+                if c != prev + 1 {
+                    runs.push((r, start, prev));
+                    start = c;
+                }
+                prev = c;
+            }
+            runs.push((r, start, prev));
+        }
+        // Merge runs with identical column spans across consecutive rows.
+        let mut merged: Vec<(i32, i32, i32, i32)> = Vec::new(); // r0, r1, c0, c1
+        'next_run: for (r, c0, c1) in runs {
+            for m in merged.iter_mut() {
+                if m.1 + 1 == r && m.2 == c0 && m.3 == c1 {
+                    m.1 = r;
+                    continue 'next_run;
+                }
+            }
+            merged.push((r, r, c0, c1));
+        }
+        merged
+            .into_iter()
+            .map(|(r0, r1, c0, c1)| {
+                let a = self.cell_rect((r0, c0));
+                let b = self.cell_rect((r1, c1));
+                a.union_bbox(&b)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testing;
+    use crate::util::Rng;
+
+    fn grid() -> CellGrid {
+        CellGrid { lat0: 0.0, lon0: -180.0, cell_deg: 0.05 }
+    }
+
+    fn circle(lat: f64, lon: f64, r: f64) -> Circle {
+        Circle { lat, lon, radius_nm: r }
+    }
+
+    #[test]
+    fn single_circle_rasterizes_nonempty() {
+        let g = grid();
+        let cells = g.rasterize_union(&[circle(42.0, -71.0, 8.0)]);
+        assert!(!cells.is_empty());
+        // All cell centers are inside the circle.
+        for &cell in &cells {
+            let (lat, lon) = g.cell_rect(cell).center();
+            assert!(circle(42.0, -71.0, 8.0).contains(lat, lon));
+        }
+    }
+
+    #[test]
+    fn overlapping_circles_form_one_component() {
+        let g = grid();
+        let cells = g.rasterize_union(&[
+            circle(42.0, -71.0, 8.0),
+            circle(42.1, -71.1, 8.0), // overlaps the first
+        ]);
+        let comps = g.components(&cells);
+        assert_eq!(comps.len(), 1);
+    }
+
+    #[test]
+    fn distant_circles_form_two_components() {
+        let g = grid();
+        let cells = g.rasterize_union(&[
+            circle(42.0, -71.0, 8.0),
+            circle(35.0, -100.0, 8.0),
+        ]);
+        let comps = g.components(&cells);
+        assert_eq!(comps.len(), 2);
+    }
+
+    #[test]
+    fn decomposition_exactly_covers_cells() {
+        // Property: rect decomposition area == cell count * cell area, and
+        // every cell center is covered by exactly one rect.
+        testing::check("decomposition cover", |rng: &mut Rng| {
+            let g = grid();
+            let n = 1 + rng.below(3);
+            let circles: Vec<Circle> = (0..n)
+                .map(|_| {
+                    circle(
+                        rng.uniform(30.0, 44.0),
+                        rng.uniform(-110.0, -72.0),
+                        rng.uniform(2.0, 10.0),
+                    )
+                })
+                .collect();
+            let cells = g.rasterize_union(&circles);
+            if cells.is_empty() {
+                return Ok(());
+            }
+            let comps = g.components(&cells);
+            let cell_area = g.cell_deg * g.cell_deg;
+            let total_cells: usize = comps.iter().map(|c| c.cells.len()).sum();
+            prop_assert!(total_cells == cells.len(), "component cells lost");
+            let rect_area: f64 = comps
+                .iter()
+                .flat_map(|c| c.rects.iter())
+                .map(Rect::area)
+                .sum();
+            let want = cells.len() as f64 * cell_area;
+            prop_assert!(
+                (rect_area - want).abs() < 1e-6 * want,
+                "rect area {rect_area} != cells area {want}"
+            );
+            // Exactly-once cover of every cell center.
+            for &cell in &cells {
+                let (lat, lon) = g.cell_rect(cell).center();
+                let covering = comps
+                    .iter()
+                    .flat_map(|c| c.rects.iter())
+                    .filter(|r| r.contains(lat, lon))
+                    .count();
+                prop_assert!(covering == 1, "cell {cell:?} covered {covering} times");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rects_within_component_do_not_overlap() {
+        let g = grid();
+        let cells = g.rasterize_union(&[circle(42.0, -71.0, 8.0)]);
+        let comps = g.components(&cells);
+        let rects = &comps[0].rects;
+        for (i, a) in rects.iter().enumerate() {
+            for b in &rects[i + 1..] {
+                // Interiors must be disjoint: shrink slightly and test.
+                let eps = g.cell_deg * 0.01;
+                let a_in = Rect {
+                    lat_lo: a.lat_lo + eps,
+                    lat_hi: a.lat_hi - eps,
+                    lon_lo: a.lon_lo + eps,
+                    lon_hi: a.lon_hi - eps,
+                };
+                assert!(!a_in.intersects(b) || {
+                    let b_in = Rect {
+                        lat_lo: b.lat_lo + eps,
+                        lat_hi: b.lat_hi - eps,
+                        lon_lo: b.lon_lo + eps,
+                        lon_hi: b.lon_hi - eps,
+                    };
+                    !a_in.intersects(&b_in)
+                });
+            }
+        }
+    }
+}

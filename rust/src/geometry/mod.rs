@@ -1,0 +1,77 @@
+//! Planar geometry for the aerodrome query-generation pipeline (§III.B).
+//!
+//! The paper's em-download-opensky software could not push polygon
+//! intersections into the OpenSky Impala shell, so it reduces geometry to
+//! axis-aligned boxes: circles around aerodromes are unioned into
+//! *rectilinear polygons* on a grid (Fig 1), decomposed into discrete
+//! non-overlapping rectangles, joined where simple, and split when too
+//! large (Fig 2). This module implements that chain on a configurable
+//! cell grid.
+
+pub mod grid;
+pub mod rect;
+
+pub use grid::{CellGrid, Component};
+pub use rect::Rect;
+
+/// Nautical miles -> degrees of latitude (1 nm = 1 arc-minute).
+pub const DEG_PER_NM_LAT: f64 = 1.0 / 60.0;
+
+/// A circle on the lat/lon plane (radius in nautical miles).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Circle {
+    pub lat: f64,
+    pub lon: f64,
+    pub radius_nm: f64,
+}
+
+impl Circle {
+    /// Degrees of longitude per nm at this latitude.
+    fn deg_per_nm_lon(&self) -> f64 {
+        DEG_PER_NM_LAT / self.lat.to_radians().cos().max(0.05)
+    }
+
+    /// Tight axis-aligned bounding rect.
+    pub fn bounding_rect(&self) -> Rect {
+        let dlat = self.radius_nm * DEG_PER_NM_LAT;
+        let dlon = self.radius_nm * self.deg_per_nm_lon();
+        Rect {
+            lat_lo: self.lat - dlat,
+            lat_hi: self.lat + dlat,
+            lon_lo: self.lon - dlon,
+            lon_hi: self.lon + dlon,
+        }
+    }
+
+    /// True if the point is inside the circle (elliptical in degrees,
+    /// circular in nm — the same approximation the query generator uses).
+    pub fn contains(&self, lat: f64, lon: f64) -> bool {
+        let dy = (lat - self.lat) / DEG_PER_NM_LAT;
+        let dx = (lon - self.lon) / self.deg_per_nm_lon();
+        dx * dx + dy * dy <= self.radius_nm * self.radius_nm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn circle_contains_center_not_far_point() {
+        let c = Circle { lat: 42.0, lon: -71.0, radius_nm: 8.0 };
+        assert!(c.contains(42.0, -71.0));
+        assert!(c.contains(42.1, -71.0)); // 6 nm north
+        assert!(!c.contains(43.0, -71.0)); // 60 nm north
+    }
+
+    #[test]
+    fn bounding_rect_contains_circle_extremes() {
+        let c = Circle { lat: 42.0, lon: -71.0, radius_nm: 8.0 };
+        let r = c.bounding_rect();
+        assert!(r.contains(42.0 + 8.0 / 60.0 - 1e-9, -71.0));
+        assert!(r.contains(42.0 - 8.0 / 60.0 + 1e-9, -71.0));
+        assert!(r.lat_hi - r.lat_lo > 0.0);
+        // Longitude span is wider than latitude span at 42N.
+        assert!((r.lon_hi - r.lon_lo) > (r.lat_hi - r.lat_lo));
+    }
+}

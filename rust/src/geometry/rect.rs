@@ -1,0 +1,155 @@
+//! Axis-aligned rectangles on the lat/lon plane.
+
+/// Closed axis-aligned rectangle in degrees.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Rect {
+    pub lat_lo: f64,
+    pub lat_hi: f64,
+    pub lon_lo: f64,
+    pub lon_hi: f64,
+}
+
+impl Rect {
+    /// Construct, normalizing corner order.
+    pub fn new(lat_a: f64, lat_b: f64, lon_a: f64, lon_b: f64) -> Self {
+        Rect {
+            lat_lo: lat_a.min(lat_b),
+            lat_hi: lat_a.max(lat_b),
+            lon_lo: lon_a.min(lon_b),
+            lon_hi: lon_a.max(lon_b),
+        }
+    }
+
+    /// Width in degrees longitude.
+    pub fn width(&self) -> f64 {
+        self.lon_hi - self.lon_lo
+    }
+
+    /// Height in degrees latitude.
+    pub fn height(&self) -> f64 {
+        self.lat_hi - self.lat_lo
+    }
+
+    /// Area in square degrees.
+    pub fn area(&self) -> f64 {
+        self.width() * self.height()
+    }
+
+    /// Point containment (closed).
+    pub fn contains(&self, lat: f64, lon: f64) -> bool {
+        (self.lat_lo..=self.lat_hi).contains(&lat) && (self.lon_lo..=self.lon_hi).contains(&lon)
+    }
+
+    /// Rectangle intersection test (closed edges).
+    pub fn intersects(&self, other: &Rect) -> bool {
+        self.lat_lo <= other.lat_hi
+            && other.lat_lo <= self.lat_hi
+            && self.lon_lo <= other.lon_hi
+            && other.lon_lo <= self.lon_hi
+    }
+
+    /// Union bounding box.
+    pub fn union_bbox(&self, other: &Rect) -> Rect {
+        Rect {
+            lat_lo: self.lat_lo.min(other.lat_lo),
+            lat_hi: self.lat_hi.max(other.lat_hi),
+            lon_lo: self.lon_lo.min(other.lon_lo),
+            lon_hi: self.lon_hi.max(other.lon_hi),
+        }
+    }
+
+    /// Center point.
+    pub fn center(&self) -> (f64, f64) {
+        (
+            0.5 * (self.lat_lo + self.lat_hi),
+            0.5 * (self.lon_lo + self.lon_hi),
+        )
+    }
+
+    /// Split into at most `2^k` pieces no larger than `max_deg` on either
+    /// side (the "large rectangles are iteratively divided" step).
+    pub fn split_to_max_side(&self, max_deg: f64) -> Vec<Rect> {
+        let mut out = Vec::new();
+        let mut stack = vec![*self];
+        while let Some(r) = stack.pop() {
+            if r.height() <= max_deg && r.width() <= max_deg {
+                out.push(r);
+            } else if r.height() >= r.width() {
+                let mid = 0.5 * (r.lat_lo + r.lat_hi);
+                stack.push(Rect { lat_hi: mid, ..r });
+                stack.push(Rect { lat_lo: mid, ..r });
+            } else {
+                let mid = 0.5 * (r.lon_lo + r.lon_hi);
+                stack.push(Rect { lon_hi: mid, ..r });
+                stack.push(Rect { lon_lo: mid, ..r });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testing;
+
+    #[test]
+    fn new_normalizes() {
+        let r = Rect::new(2.0, 1.0, -3.0, -4.0);
+        assert_eq!(r.lat_lo, 1.0);
+        assert_eq!(r.lat_hi, 2.0);
+        assert_eq!(r.lon_lo, -4.0);
+        assert_eq!(r.lon_hi, -3.0);
+    }
+
+    #[test]
+    fn intersects_cases() {
+        let a = Rect::new(0.0, 1.0, 0.0, 1.0);
+        let b = Rect::new(0.5, 1.5, 0.5, 1.5);
+        let c = Rect::new(2.0, 3.0, 2.0, 3.0);
+        let edge = Rect::new(1.0, 2.0, 0.0, 1.0); // shares an edge
+        assert!(a.intersects(&b));
+        assert!(!a.intersects(&c));
+        assert!(a.intersects(&edge));
+    }
+
+    #[test]
+    fn split_preserves_area_and_respects_bound() {
+        testing::check("split area", |rng| {
+            let r = Rect::new(
+                rng.uniform(20.0, 45.0),
+                rng.uniform(20.0, 45.0),
+                rng.uniform(-120.0, -70.0),
+                rng.uniform(-120.0, -70.0),
+            );
+            if r.area() < 1e-9 {
+                return Ok(());
+            }
+            let max_side = rng.uniform(0.3, 2.0);
+            let parts = r.split_to_max_side(max_side);
+            let total: f64 = parts.iter().map(Rect::area).sum();
+            prop_assert!(
+                (total - r.area()).abs() < 1e-6 * r.area().max(1.0),
+                "area {total} != {}",
+                r.area()
+            );
+            for p in &parts {
+                prop_assert!(
+                    p.width() <= max_side + 1e-9 && p.height() <= max_side + 1e-9,
+                    "piece too large: {p:?} (max {max_side})"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn union_bbox_contains_both() {
+        let a = Rect::new(0.0, 1.0, 0.0, 1.0);
+        let b = Rect::new(5.0, 6.0, -2.0, -1.0);
+        let u = a.union_bbox(&b);
+        assert!(u.contains(0.5, 0.5));
+        assert!(u.contains(5.5, -1.5));
+    }
+}

@@ -1,0 +1,63 @@
+//! # emproc — aircraft-track processing with triples-mode and self-scheduling
+//!
+//! A reproduction of *"Benchmarking the Processing of Aircraft Tracks with
+//! Triples Mode and Self-Scheduling"* (Weinert, Brittain, Underhill, Serres —
+//! MIT Lincoln Laboratory, 2021) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: the
+//!   triples-mode job launch model ([`triples`]), block/cyclic batch
+//!   distribution and task organization ([`dist`]), the self-scheduling
+//!   manager/worker protocol ([`selfsched`]), a discrete-event cluster
+//!   simulator calibrated to the LLSC ([`simcluster`]), a real thread-pool
+//!   executor ([`exec`]), and the three-stage processing workflow
+//!   ([`workflow`]): organize → archive → process.
+//! * **L2/L1 (build-time Python)** — the stage-3 numeric hot spot (track
+//!   resampling, dynamic rates, DEM/AGL) written in JAX + Pallas, AOT-lowered
+//!   to HLO text and executed from rust via PJRT ([`runtime`]). Python never
+//!   runs on the request path.
+//!
+//! Substrates the paper depends on are implemented in full: synthetic
+//! aircraft registries ([`registry`]), track/observation model ([`tracks`]),
+//! a GLOBE-like DEM ([`dem`]), airspace classes ([`airspace`]), the
+//! aerodrome query-generation geometry pipeline ([`geometry`], [`queries`]),
+//! dataset generators matching the paper's two datasets plus the §V radar
+//! dataset ([`datasets`]), and zip archiving with Lustre block accounting
+//! ([`archive`]).
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod airspace;
+pub mod bench_harness;
+pub mod cli;
+pub mod archive;
+pub mod datasets;
+pub mod dem;
+pub mod dist;
+pub mod exec;
+pub mod metrics;
+pub mod selfsched;
+pub mod simcluster;
+pub mod triples;
+pub mod workflow;
+pub mod geometry;
+pub mod hierarchy;
+pub mod queries;
+pub mod registry;
+pub mod runtime;
+pub mod testing;
+pub mod tracks;
+pub mod util;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::datasets::{DatasetKind, FileManifest};
+    pub use crate::dist::{Distribution, Task, TaskOrder};
+    pub use crate::metrics::WorkerReport;
+    pub use crate::runtime::{TrackBatch, TrackModel};
+    pub use crate::selfsched::{AllocMode, SelfSchedConfig};
+    pub use crate::simcluster::{CostModel, SimConfig, Simulator, Stage};
+    pub use crate::triples::TriplesConfig;
+    pub use crate::util::Rng;
+    pub use crate::workflow::{Pipeline, PipelineConfig};
+}

@@ -1,0 +1,6 @@
+//! `emproc` CLI entrypoint — see `emproc help`.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(emproc::cli::run(&args));
+}

@@ -1,0 +1,124 @@
+//! Empirical CDF (Fig 9 reports worker time as an eCDF).
+
+/// Empirical cumulative distribution over f64 samples.
+#[derive(Debug, Clone)]
+pub struct Ecdf {
+    sorted: Vec<f64>,
+}
+
+impl Ecdf {
+    /// Build from samples (NaNs rejected by debug assert).
+    pub fn new(mut samples: Vec<f64>) -> Self {
+        debug_assert!(samples.iter().all(|x| !x.is_nan()));
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Ecdf { sorted: samples }
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    /// True if the eCDF has no samples.
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    /// F(x) = P[X <= x].
+    pub fn eval(&self, x: f64) -> f64 {
+        if self.sorted.is_empty() {
+            return 0.0;
+        }
+        let idx = self.sorted.partition_point(|&v| v <= x);
+        idx as f64 / self.sorted.len() as f64
+    }
+
+    /// Quantile (inverse CDF), `q` in `[0, 1]`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.sorted.is_empty() {
+            return 0.0;
+        }
+        let idx = ((q * self.sorted.len() as f64).ceil() as usize)
+            .clamp(1, self.sorted.len());
+        self.sorted[idx - 1]
+    }
+
+    /// `max - min` — the paper's "span" between slowest and fastest worker.
+    pub fn span(&self) -> f64 {
+        match (self.sorted.first(), self.sorted.last()) {
+            (Some(a), Some(b)) => b - a,
+            _ => 0.0,
+        }
+    }
+
+    /// ASCII plot of the eCDF with `rows` quantile rows.
+    pub fn render(&self, rows: usize, unit: &str) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        for i in 0..=rows {
+            let q = i as f64 / rows as f64;
+            let x = self.quantile(q);
+            let bar = "#".repeat((q * 50.0).round() as usize);
+            let _ = writeln!(s, "{:>12.1}{unit} |{bar} {:5.1}%", x, q * 100.0);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testing;
+
+    #[test]
+    fn eval_and_quantile() {
+        let e = Ecdf::new(vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(e.eval(0.5), 0.0);
+        assert_eq!(e.eval(2.0), 0.5);
+        assert_eq!(e.eval(9.0), 1.0);
+        assert_eq!(e.quantile(0.5), 2.0);
+        assert_eq!(e.quantile(1.0), 4.0);
+        assert_eq!(e.span(), 3.0);
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        let e = Ecdf::new(vec![]);
+        assert_eq!(e.eval(1.0), 0.0);
+        assert_eq!(e.quantile(0.5), 0.0);
+        assert_eq!(e.span(), 0.0);
+    }
+
+    #[test]
+    fn quantile_eval_inverse_property() {
+        testing::check("ecdf inverse", |rng| {
+            let n = 1 + rng.below(200);
+            let samples: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 1000.0)).collect();
+            let e = Ecdf::new(samples);
+            let q = rng.f64();
+            let x = e.quantile(q);
+            // F(quantile(q)) >= q, with the usual eCDF step granularity.
+            prop_assert!(
+                e.eval(x) + 1e-12 >= q,
+                "F(Q({q})) = {} < {q}",
+                e.eval(x)
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn monotone_property() {
+        testing::check("ecdf monotone", |rng| {
+            let n = 1 + rng.below(100);
+            let samples: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 100.0)).collect();
+            let e = Ecdf::new(samples);
+            let a = rng.uniform(0.0, 100.0);
+            let b = rng.uniform(0.0, 100.0);
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            prop_assert!(e.eval(lo) <= e.eval(hi), "not monotone");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,107 @@
+//! Fixed-bin-width histogram (Fig 3 uses 10 MB bins; Figs 5-6 use time bins).
+
+/// Histogram with uniform bin width starting at 0.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub bin_width: f64,
+    pub counts: Vec<u64>,
+    pub total: u64,
+}
+
+impl Histogram {
+    /// Build from samples with the given bin width.
+    pub fn new(bin_width: f64, samples: impl IntoIterator<Item = f64>) -> Self {
+        assert!(bin_width > 0.0);
+        let mut counts: Vec<u64> = Vec::new();
+        let mut total = 0;
+        for s in samples {
+            let bin = (s.max(0.0) / bin_width) as usize;
+            if bin >= counts.len() {
+                counts.resize(bin + 1, 0);
+            }
+            counts[bin] += 1;
+            total += 1;
+        }
+        Histogram { bin_width, counts, total }
+    }
+
+    /// Index of the fullest bin.
+    pub fn mode_bin(&self) -> usize {
+        self.counts
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &c)| c)
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Is the shape "sloping" (monotone-ish decreasing from the first bin,
+    /// Fig 3 right) as opposed to peaked in the interior (Gaussian-ish,
+    /// Fig 3 left)? Heuristic: mode in the first 10% of occupied bins.
+    pub fn is_sloping(&self) -> bool {
+        if self.counts.is_empty() {
+            return false;
+        }
+        self.mode_bin() <= self.counts.len() / 10
+    }
+
+    /// ASCII rendering with `width`-char bars; `label_scale` converts bin
+    /// index to the printed unit.
+    pub fn render(&self, width: usize, unit: &str) -> String {
+        use std::fmt::Write as _;
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let mut s = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 && self.counts.len() > 40 {
+                continue; // compact sparse tails
+            }
+            let bar = "#".repeat(((c as f64 / max as f64) * width as f64).round() as usize);
+            let _ = writeln!(
+                s,
+                "{:>10.0}-{:<10.0}{unit} |{bar} {c}",
+                i as f64 * self.bin_width,
+                (i + 1) as f64 * self.bin_width,
+            );
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn bins_and_total() {
+        let h = Histogram::new(10.0, [1.0, 5.0, 15.0, 95.0]);
+        assert_eq!(h.total, 4);
+        assert_eq!(h.counts[0], 2);
+        assert_eq!(h.counts[1], 1);
+        assert_eq!(h.counts[9], 1);
+    }
+
+    #[test]
+    fn gaussian_is_not_sloping() {
+        let mut rng = Rng::new(1);
+        let samples: Vec<f64> = (0..20_000).map(|_| rng.normal_with(300.0, 60.0)).collect();
+        let h = Histogram::new(10.0, samples);
+        assert!(!h.is_sloping(), "mode bin {}", h.mode_bin());
+    }
+
+    #[test]
+    fn lognormal_is_sloping() {
+        let mut rng = Rng::new(2);
+        let samples: Vec<f64> = (0..20_000).map(|_| rng.lognormal(1.0, 1.3)).collect();
+        let h = Histogram::new(10.0, samples);
+        assert!(h.is_sloping(), "mode bin {}", h.mode_bin());
+    }
+
+    #[test]
+    fn render_nonempty() {
+        let h = Histogram::new(10.0, [5.0, 5.0, 25.0]);
+        let s = h.render(20, " MB");
+        assert!(s.contains('#'));
+        assert!(s.lines().count() >= 2);
+    }
+}

@@ -1,0 +1,12 @@
+//! Histograms, eCDFs, worker-time reports and ASCII renderers.
+//!
+//! Everything the paper's tables and figures report is produced through
+//! this module, so the bench harnesses print directly comparable rows.
+
+pub mod ecdf;
+pub mod hist;
+pub mod report;
+
+pub use ecdf::Ecdf;
+pub use hist::Histogram;
+pub use report::{render_table, WorkerReport};

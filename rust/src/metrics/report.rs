@@ -1,0 +1,137 @@
+//! Worker-time reports and ASCII table rendering — the exact quantities the
+//! paper's §IV-§V report: total job time, per-worker distributions, medians,
+//! spans, and "x% finished within y hours" claims.
+
+use crate::metrics::ecdf::Ecdf;
+use crate::util::stats;
+
+/// Summary of one parallel run's worker execution times.
+#[derive(Debug, Clone)]
+pub struct WorkerReport {
+    /// Per-worker busy/total time, seconds.
+    pub worker_times: Vec<f64>,
+    /// Total job time as measured by the manager, seconds.
+    pub job_time: f64,
+}
+
+impl WorkerReport {
+    /// Construct from worker times + manager-measured job time.
+    pub fn new(worker_times: Vec<f64>, job_time: f64) -> Self {
+        WorkerReport { worker_times, job_time }
+    }
+
+    /// Median worker time.
+    pub fn median(&self) -> f64 {
+        stats::median(&self.worker_times)
+    }
+
+    /// Slowest minus fastest worker (paper's "span").
+    pub fn span(&self) -> f64 {
+        let (lo, hi) = stats::min_max(&self.worker_times);
+        hi - lo
+    }
+
+    /// Fraction of workers finishing within `limit` seconds.
+    pub fn frac_within(&self, limit: f64) -> f64 {
+        stats::frac_within(&self.worker_times, limit)
+    }
+
+    /// Standard deviation of worker times (load-balance quality).
+    pub fn stddev(&self) -> f64 {
+        stats::stddev(&self.worker_times)
+    }
+
+    /// As an eCDF (Fig 9 form).
+    pub fn ecdf(&self) -> Ecdf {
+        Ecdf::new(self.worker_times.clone())
+    }
+
+    /// One-line summary in the paper's style.
+    pub fn summary(&self) -> String {
+        format!(
+            "job {} | worker median {} span {} sd {}",
+            crate::util::human_duration(self.job_time),
+            crate::util::human_duration(self.median()),
+            crate::util::human_duration(self.span()),
+            crate::util::human_duration(self.stddev()),
+        )
+    }
+}
+
+/// Render an ASCII table: `headers` + rows (first column left-aligned,
+/// rest right-aligned) — used for the Table I/II reproductions.
+pub fn render_table(title: &str, headers: &[String], rows: &[Vec<String>]) -> String {
+    use std::fmt::Write as _;
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut s = String::new();
+    let _ = writeln!(s, "{title}");
+    let line = |s: &mut String| {
+        let total: usize = widths.iter().sum::<usize>() + 3 * ncol + 1;
+        let _ = writeln!(s, "{}", "-".repeat(total));
+    };
+    line(&mut s);
+    let _ = write!(s, "|");
+    for (h, w) in headers.iter().zip(&widths) {
+        let _ = write!(s, " {h:>w$} |");
+    }
+    let _ = writeln!(s);
+    line(&mut s);
+    for row in rows {
+        let _ = write!(s, "|");
+        for (i, w) in widths.iter().enumerate() {
+            let empty = String::new();
+            let cell = row.get(i).unwrap_or(&empty);
+            if i == 0 {
+                let _ = write!(s, " {cell:<w$} |");
+            } else {
+                let _ = write!(s, " {cell:>w$} |");
+            }
+        }
+        let _ = writeln!(s);
+    }
+    line(&mut s);
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_quantities() {
+        let r = WorkerReport::new(vec![10.0, 20.0, 30.0, 40.0], 45.0);
+        assert_eq!(r.median(), 25.0);
+        assert_eq!(r.span(), 30.0);
+        assert_eq!(r.frac_within(30.0), 0.75);
+        assert!(r.summary().contains("job"));
+    }
+
+    #[test]
+    fn table_renders_all_cells() {
+        let t = render_table(
+            "TABLE I",
+            &["NPPN".into(), "2048".into(), "1024".into()],
+            &[
+                vec!["32".into(), "5640".into(), "5944".into()],
+                vec!["16".into(), "-".into(), "5963".into()],
+            ],
+        );
+        assert!(t.contains("TABLE I"));
+        assert!(t.contains("5640"));
+        assert!(t.contains("5963"));
+        assert_eq!(t.matches('|').count() % 2, 0);
+    }
+
+    #[test]
+    fn ecdf_integration() {
+        let r = WorkerReport::new((1..=100).map(|i| i as f64).collect(), 100.0);
+        let e = r.ecdf();
+        assert!((e.eval(99.0) - 0.99).abs() < 1e-12);
+    }
+}

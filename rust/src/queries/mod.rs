@@ -1,0 +1,246 @@
+//! §III.B: aerodrome query generation (the em-download-opensky pipeline).
+//!
+//! Chain (Figs 1-2): aerodromes → fixed-radius circles → rasterized union →
+//! rectilinear polygons → rectangle decomposition → split large rectangles →
+//! filter by airspace class and distance-to-aerodrome → DEM min/max per box
+//! → MSL range from the desired AGL range → meridian time zone → load-
+//! balancing group assignment → per-day query expansion.
+
+use crate::airspace::{AirspaceClass, AirspaceMap};
+use crate::dem::{Dem, FT_PER_M};
+use crate::geometry::{CellGrid, Circle, Rect};
+
+/// Pipeline parameters (paper defaults in `Default`).
+#[derive(Debug, Clone)]
+pub struct QueryGenConfig {
+    /// Radius around each aerodrome (RTCA SC-228 terminal cylinder: 8 nm).
+    pub radius_nm: f64,
+    /// Raster cells per radius (resolution of the Fig 1 rasterization).
+    pub cells_per_radius: usize,
+    /// Max bounding-box side, degrees ("large rectangles are iteratively
+    /// divided into smaller boxes").
+    pub max_box_deg: f64,
+    /// Keep boxes whose center lies in one of these classes.
+    pub classes: Vec<AirspaceClass>,
+    /// Drop boxes whose center is farther than this from any aerodrome.
+    pub max_aerodrome_nm: f64,
+    /// Desired AGL range (ft): paper default 5,100 ft AGL...
+    pub agl_range_ft: f64,
+    /// ...with a hard MSL ceiling of 12,500 ft.
+    pub msl_ceiling_ft: f64,
+    /// Number of load-balancing groups.
+    pub groups: usize,
+}
+
+impl Default for QueryGenConfig {
+    fn default() -> Self {
+        QueryGenConfig {
+            radius_nm: 8.0,
+            cells_per_radius: 4,
+            max_box_deg: 0.5,
+            classes: vec![AirspaceClass::B, AirspaceClass::C, AirspaceClass::D],
+            max_aerodrome_nm: 10.0,
+            agl_range_ft: 5_100.0,
+            msl_ceiling_ft: 12_500.0,
+            groups: 16,
+        }
+    }
+}
+
+/// One query bounding box (before day expansion).
+#[derive(Debug, Clone)]
+pub struct QueryBox {
+    pub bbox: Rect,
+    pub class: AirspaceClass,
+    /// Elevation-derived MSL altitude range for the query, feet.
+    pub msl_lo_ft: f64,
+    pub msl_hi_ft: f64,
+    /// Meridian-based UTC offset, hours.
+    pub tz_offset_h: i8,
+    /// Load-balancing / storage group.
+    pub group: u32,
+}
+
+/// One executable query (box × local day).
+#[derive(Debug, Clone)]
+pub struct Query {
+    pub box_idx: usize,
+    /// Day index in the campaign (paper: first 14 days of each month,
+    /// Jan 2019 – Feb 2020 = 196 days).
+    pub day: u32,
+    pub group: u32,
+}
+
+/// Meridian-based time zone: each 15° of longitude is one hour.
+pub fn meridian_tz(lon: f64) -> i8 {
+    (lon / 15.0).round() as i8
+}
+
+/// Run the geometric pipeline over an airspace map.
+pub fn generate_boxes(map: &AirspaceMap, dem: &Dem, cfg: &QueryGenConfig) -> Vec<QueryBox> {
+    // 1. Circles around aerodromes of the requested classes.
+    let circles: Vec<Circle> = map
+        .aerodromes
+        .iter()
+        .filter(|a| cfg.classes.contains(&a.class))
+        .map(|a| Circle { lat: a.lat, lon: a.lon, radius_nm: cfg.radius_nm })
+        .collect();
+    if circles.is_empty() {
+        return Vec::new();
+    }
+
+    // 2-3. Rasterized union -> rectilinear polygons -> rectangles.
+    let grid = CellGrid::for_radius(cfg.radius_nm, cfg.cells_per_radius);
+    let cells = grid.rasterize_union(&circles);
+    let comps = grid.components(&cells);
+
+    // 4. Split large rectangles.
+    let mut rects: Vec<Rect> = Vec::new();
+    for comp in &comps {
+        for r in &comp.rects {
+            rects.extend(r.split_to_max_side(cfg.max_box_deg));
+        }
+    }
+
+    // 5. Filter by airspace class + distance, 6. DEM -> MSL range,
+    // 7. meridian time zone, 8. group assignment (round-robin over boxes
+    // sorted by group key keeps groups near-equal for load balancing).
+    let mut out = Vec::new();
+    for r in rects {
+        let (clat, clon) = r.center();
+        let class = map.classify(clat, clon);
+        if !cfg.classes.contains(&class) {
+            continue;
+        }
+        if map.nearest_aerodrome_nm(clat, clon) > cfg.max_aerodrome_nm {
+            continue;
+        }
+        let (elev_lo_m, elev_hi_m) = dem.bbox_min_max_m(&r);
+        let msl_lo_ft = elev_lo_m * FT_PER_M; // ground at the lowest terrain
+        let msl_hi_ft = (elev_hi_m * FT_PER_M + cfg.agl_range_ft).min(cfg.msl_ceiling_ft);
+        out.push(QueryBox {
+            bbox: r,
+            class,
+            msl_lo_ft,
+            msl_hi_ft,
+            tz_offset_h: meridian_tz(clon),
+            group: 0, // assigned below
+        });
+    }
+    for (i, q) in out.iter_mut().enumerate() {
+        q.group = (i % cfg.groups) as u32;
+    }
+    out
+}
+
+/// Expand boxes over a day campaign (paper: 196 days -> 136,884 queries).
+pub fn expand_days(boxes: &[QueryBox], days: u32) -> Vec<Query> {
+    let mut out = Vec::with_capacity(boxes.len() * days as usize);
+    for day in 0..days {
+        for (box_idx, b) in boxes.iter().enumerate() {
+            out.push(Query { box_idx, day, group: b.group });
+        }
+    }
+    out
+}
+
+/// Render boxes as the CSV the download scripts would consume.
+pub fn boxes_to_csv(boxes: &[QueryBox]) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::from(
+        "lat_lo,lat_hi,lon_lo,lon_hi,class,msl_lo_ft,msl_hi_ft,tz_offset_h,group\n",
+    );
+    for b in boxes {
+        let _ = writeln!(
+            s,
+            "{:.4},{:.4},{:.4},{:.4},{:?},{:.0},{:.0},{},{}",
+            b.bbox.lat_lo,
+            b.bbox.lat_hi,
+            b.bbox.lon_lo,
+            b.bbox.lon_hi,
+            b.class,
+            b.msl_lo_ft,
+            b.msl_hi_ft,
+            b.tz_offset_h,
+            b.group
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::airspace::generate_aerodromes;
+    use crate::util::Rng;
+
+    fn small_map() -> AirspaceMap {
+        let mut rng = Rng::new(11);
+        generate_aerodromes(&mut rng, 30)
+    }
+
+    #[test]
+    fn pipeline_produces_boxes() {
+        let boxes = generate_boxes(&small_map(), &Dem, &QueryGenConfig::default());
+        assert!(!boxes.is_empty());
+    }
+
+    #[test]
+    fn boxes_respect_max_side_and_ceiling() {
+        let cfg = QueryGenConfig::default();
+        for b in generate_boxes(&small_map(), &Dem, &cfg) {
+            assert!(b.bbox.width() <= cfg.max_box_deg + 1e-9);
+            assert!(b.bbox.height() <= cfg.max_box_deg + 1e-9);
+            assert!(b.msl_hi_ft <= cfg.msl_ceiling_ft + 1e-9);
+            assert!(b.msl_lo_ft <= b.msl_hi_ft);
+        }
+    }
+
+    #[test]
+    fn box_centers_are_in_controlled_airspace_near_aerodromes() {
+        let map = small_map();
+        let cfg = QueryGenConfig::default();
+        for b in generate_boxes(&map, &Dem, &cfg) {
+            let (clat, clon) = b.bbox.center();
+            assert_ne!(map.classify(clat, clon), AirspaceClass::Other);
+            assert!(map.nearest_aerodrome_nm(clat, clon) <= cfg.max_aerodrome_nm);
+        }
+    }
+
+    #[test]
+    fn tz_is_meridian_based() {
+        assert_eq!(meridian_tz(-71.0), -5);
+        assert_eq!(meridian_tz(-90.0), -6);
+        assert_eq!(meridian_tz(-120.0), -8);
+        assert_eq!(meridian_tz(0.0), 0);
+    }
+
+    #[test]
+    fn day_expansion_counts() {
+        let boxes = generate_boxes(&small_map(), &Dem, &QueryGenConfig::default());
+        let queries = expand_days(&boxes, 196);
+        assert_eq!(queries.len(), boxes.len() * 196);
+    }
+
+    #[test]
+    fn groups_are_balanced() {
+        let cfg = QueryGenConfig::default();
+        let boxes = generate_boxes(&small_map(), &Dem, &cfg);
+        let mut counts = vec![0usize; cfg.groups];
+        for b in &boxes {
+            counts[b.group as usize] += 1;
+        }
+        let (lo, hi) = (
+            counts.iter().min().copied().unwrap_or(0),
+            counts.iter().max().copied().unwrap_or(0),
+        );
+        assert!(hi - lo <= 1, "groups unbalanced: {counts:?}");
+    }
+
+    #[test]
+    fn csv_has_one_line_per_box() {
+        let boxes = generate_boxes(&small_map(), &Dem, &QueryGenConfig::default());
+        let csv = boxes_to_csv(&boxes);
+        assert_eq!(csv.lines().count(), boxes.len() + 1);
+    }
+}

@@ -1,0 +1,259 @@
+//! Synthetic national aircraft registries (§III.A substrate).
+//!
+//! The paper identifies unique aircraft "by parsing and aggregating various
+//! national aircraft registries", each specifying the aircraft type, the
+//! registration expiration date, and the ICAO 24-bit address. Real
+//! registries (FAA releasable database, etc.) are not shipped here; this
+//! module generates statistically-plausible synthetic registries in a CSV
+//! format, plus the parser/aggregator the workflow uses.
+
+use crate::util::Rng;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+/// Registered aircraft type, as used for the tier-2 directory level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum AircraftType {
+    FixedWingSingle,
+    FixedWingMulti,
+    Rotorcraft,
+    Glider,
+    Balloon,
+    Other,
+}
+
+impl AircraftType {
+    /// Directory-name form.
+    pub fn dir_name(self) -> &'static str {
+        match self {
+            AircraftType::FixedWingSingle => "fixed_wing_single",
+            AircraftType::FixedWingMulti => "fixed_wing_multi",
+            AircraftType::Rotorcraft => "rotorcraft",
+            AircraftType::Glider => "glider",
+            AircraftType::Balloon => "balloon",
+            AircraftType::Other => "other",
+        }
+    }
+
+    /// Parse from the registry CSV field.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.trim() {
+            "fixed_wing_single" => AircraftType::FixedWingSingle,
+            "fixed_wing_multi" => AircraftType::FixedWingMulti,
+            "rotorcraft" => AircraftType::Rotorcraft,
+            "glider" => AircraftType::Glider,
+            "balloon" => AircraftType::Balloon,
+            "other" => AircraftType::Other,
+            _ => return None,
+        })
+    }
+
+    /// All variants, in directory order.
+    pub fn all() -> [AircraftType; 6] {
+        [
+            AircraftType::FixedWingSingle,
+            AircraftType::FixedWingMulti,
+            AircraftType::Rotorcraft,
+            AircraftType::Glider,
+            AircraftType::Balloon,
+            AircraftType::Other,
+        ]
+    }
+}
+
+/// One registry entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegistryEntry {
+    pub icao24: u32,
+    pub ac_type: AircraftType,
+    /// Number of seats (tier-3 directory level).
+    pub seats: u16,
+    /// Registration expiration year.
+    pub expires: u16,
+}
+
+/// Aggregated registry: icao24 -> entry, later registries win conflicts
+/// (mirrors aggregating yearly national registry snapshots).
+#[derive(Debug, Default, Clone)]
+pub struct Registry {
+    by_icao: HashMap<u32, RegistryEntry>,
+}
+
+impl Registry {
+    /// Number of known aircraft.
+    pub fn len(&self) -> usize {
+        self.by_icao.len()
+    }
+
+    /// True if no aircraft are registered.
+    pub fn is_empty(&self) -> bool {
+        self.by_icao.is_empty()
+    }
+
+    /// Lookup by ICAO 24-bit address.
+    pub fn get(&self, icao24: u32) -> Option<&RegistryEntry> {
+        self.by_icao.get(&icao24)
+    }
+
+    /// Merge a parsed registry file into the aggregate.
+    pub fn merge(&mut self, entries: impl IntoIterator<Item = RegistryEntry>) {
+        for e in entries {
+            self.by_icao.insert(e.icao24, e);
+        }
+    }
+
+    /// All entries sorted by ICAO address (the ordering the 4-tier
+    /// hierarchy's bottom level is built from).
+    pub fn sorted_entries(&self) -> Vec<RegistryEntry> {
+        let mut v: Vec<RegistryEntry> = self.by_icao.values().copied().collect();
+        v.sort_by_key(|e| e.icao24);
+        v
+    }
+}
+
+/// CSV header for registry files.
+pub const HEADER: &str = "icao24,type,seats,expires";
+
+/// Parse one registry CSV file.
+pub fn parse_registry(text: &str) -> Result<Vec<RegistryEntry>> {
+    let mut out = Vec::new();
+    let mut lines = text.lines().enumerate();
+    match lines.next() {
+        Some((_, h)) if h.trim() == HEADER => {}
+        Some((_, h)) => bail!("bad registry header: {h:?}"),
+        None => return Ok(out),
+    }
+    for (lineno, line) in lines {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut f = line.split(',');
+        let ctx = || format!("registry line {}", lineno + 1);
+        let icao24 = crate::tracks::parse_icao24(f.next().with_context(ctx)?)
+            .with_context(|| format!("bad icao24, line {}", lineno + 1))?;
+        let ac_type = AircraftType::parse(f.next().with_context(ctx)?)
+            .with_context(|| format!("bad type, line {}", lineno + 1))?;
+        let seats: u16 = f.next().with_context(ctx)?.trim().parse().with_context(ctx)?;
+        let expires: u16 = f.next().with_context(ctx)?.trim().parse().with_context(ctx)?;
+        out.push(RegistryEntry { icao24, ac_type, seats, expires });
+    }
+    Ok(out)
+}
+
+/// Serialize registry entries to CSV.
+pub fn write_registry(entries: &[RegistryEntry]) -> String {
+    let mut out = String::from(HEADER);
+    out.push('\n');
+    for e in entries {
+        let _ = writeln!(
+            out,
+            "{},{},{},{}",
+            crate::tracks::icao24_hex(e.icao24),
+            e.ac_type.dir_name(),
+            e.seats,
+            e.expires
+        );
+    }
+    out
+}
+
+/// Generate a synthetic registry of `n` aircraft with a realistic type/seat
+/// mix (GA-heavy, matching low-altitude traffic).
+pub fn generate(rng: &mut Rng, n: usize) -> Vec<RegistryEntry> {
+    let mut used = std::collections::HashSet::with_capacity(n);
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let icao24 = (rng.next_u64() & 0x00FF_FFFF) as u32;
+        if !used.insert(icao24) {
+            continue;
+        }
+        let r = rng.f64();
+        let (ac_type, seats) = if r < 0.55 {
+            (AircraftType::FixedWingSingle, 2 + rng.below(5) as u16)
+        } else if r < 0.80 {
+            (AircraftType::FixedWingMulti, 4 + rng.below(300) as u16)
+        } else if r < 0.92 {
+            (AircraftType::Rotorcraft, 1 + rng.below(8) as u16)
+        } else if r < 0.96 {
+            (AircraftType::Glider, 1 + rng.below(2) as u16)
+        } else if r < 0.98 {
+            (AircraftType::Balloon, 1 + rng.below(10) as u16)
+        } else {
+            (AircraftType::Other, 1 + rng.below(4) as u16)
+        };
+        let expires = 2021 + rng.below(5) as u16;
+        out.push(RegistryEntry { icao24, ac_type, seats, expires });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_unique_icao24() {
+        let mut rng = Rng::new(1);
+        let entries = generate(&mut rng, 500);
+        assert_eq!(entries.len(), 500);
+        let mut ids: Vec<u32> = entries.iter().map(|e| e.icao24).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 500);
+        assert!(ids.iter().all(|&i| i <= 0x00FF_FFFF));
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let mut rng = Rng::new(2);
+        let entries = generate(&mut rng, 100);
+        let text = write_registry(&entries);
+        let parsed = parse_registry(&text).unwrap();
+        assert_eq!(entries, parsed);
+    }
+
+    #[test]
+    fn aggregate_later_wins() {
+        let a = RegistryEntry {
+            icao24: 5,
+            ac_type: AircraftType::Glider,
+            seats: 1,
+            expires: 2021,
+        };
+        let mut b = a;
+        b.ac_type = AircraftType::Rotorcraft;
+        let mut reg = Registry::default();
+        reg.merge([a]);
+        reg.merge([b]);
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.get(5).unwrap().ac_type, AircraftType::Rotorcraft);
+    }
+
+    #[test]
+    fn sorted_entries_are_sorted() {
+        let mut rng = Rng::new(3);
+        let mut reg = Registry::default();
+        reg.merge(generate(&mut rng, 200));
+        let sorted = reg.sorted_entries();
+        assert!(sorted.windows(2).all(|w| w[0].icao24 < w[1].icao24));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_registry("not,a,registry\n").is_err());
+        assert!(parse_registry("icao24,type,seats,expires\nxyz,plane,2,2022\n").is_err());
+    }
+
+    #[test]
+    fn type_mix_is_ga_heavy() {
+        let mut rng = Rng::new(4);
+        let entries = generate(&mut rng, 5_000);
+        let singles = entries
+            .iter()
+            .filter(|e| e.ac_type == AircraftType::FixedWingSingle)
+            .count();
+        assert!(singles > 2_000, "expected GA-heavy mix, got {singles}/5000");
+    }
+}

@@ -1,0 +1,268 @@
+//! Batched input/output buffers for the track model.
+//!
+//! Stage-3 workers accumulate track segments, pack them into fixed-shape
+//! padded rows (the AOT artifact has static shapes), and read back the
+//! resampled outputs. Packing clamps / pads exactly the way the Python-side
+//! oracle expects: invalid slots have `valid = 0`.
+
+use crate::runtime::manifest::ArtifactManifest;
+use anyhow::{bail, Result};
+
+/// One track segment's observations, in coordinator-native form.
+#[derive(Debug, Clone, Default)]
+pub struct SegmentObs {
+    /// Seconds (relative to segment start), ascending.
+    pub t: Vec<f32>,
+    /// Latitude, degrees.
+    pub lat: Vec<f32>,
+    /// Longitude, degrees.
+    pub lon: Vec<f32>,
+    /// MSL altitude, feet.
+    pub alt: Vec<f32>,
+}
+
+impl SegmentObs {
+    /// Number of observations.
+    pub fn len(&self) -> usize {
+        self.t.len()
+    }
+
+    /// True if the segment has no observations.
+    pub fn is_empty(&self) -> bool {
+        self.t.is_empty()
+    }
+}
+
+/// Flat, padded input buffers matching the artifact's ABI.
+#[derive(Debug, Clone)]
+pub struct TrackBatch {
+    pub b: usize,
+    pub n: usize,
+    pub m: usize,
+    pub tile: usize,
+    pub obs_t: Vec<f32>,
+    pub obs_lat: Vec<f32>,
+    pub obs_lon: Vec<f32>,
+    pub obs_alt: Vec<f32>,
+    pub obs_valid: Vec<f32>,
+    pub grid_t: Vec<f32>,
+    pub dem: Vec<f32>,
+    /// `(lat0, lon0, dlat, dlon)`.
+    pub dem_meta: [f32; 4],
+    /// How many of the `b` rows carry real segments.
+    pub used_rows: usize,
+    /// Globally-unique version of the DEM contents; lets the runtime cache
+    /// the device-resident DEM buffer across executes (stage-3 workers run
+    /// many batches per archive against one tile).
+    pub dem_version: u64,
+}
+
+/// Global DEM version counter (see [`TrackBatch::dem_version`]).
+static DEM_VERSION: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+
+fn next_dem_version() -> u64 {
+    DEM_VERSION.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+}
+
+impl TrackBatch {
+    /// Empty batch sized for `manifest`, with an all-zero DEM tile.
+    pub fn empty(manifest: &ArtifactManifest) -> Self {
+        let (b, n, m, tile) = (manifest.b, manifest.n, manifest.m, manifest.tile);
+        TrackBatch {
+            b,
+            n,
+            m,
+            tile,
+            obs_t: vec![0.0; b * n],
+            obs_lat: vec![0.0; b * n],
+            obs_lon: vec![0.0; b * n],
+            obs_alt: vec![0.0; b * n],
+            obs_valid: vec![0.0; b * n],
+            grid_t: vec![0.0; b * m],
+            dem: vec![0.0; tile * tile],
+            dem_meta: [0.0, 0.0, 1.0, 1.0],
+            used_rows: 0,
+            dem_version: next_dem_version(),
+        }
+    }
+
+    /// Install the shared DEM tile for this batch (row-major `tile x tile`
+    /// metres) and its origin/spacing metadata.
+    pub fn set_dem(&mut self, dem: &[f32], meta: [f32; 4]) -> Result<()> {
+        if dem.len() != self.tile * self.tile {
+            bail!(
+                "dem tile has {} elements, artifact expects {}",
+                dem.len(),
+                self.tile * self.tile
+            );
+        }
+        self.dem.copy_from_slice(dem);
+        self.dem_meta = meta;
+        self.dem_version = next_dem_version();
+        Ok(())
+    }
+
+    /// Pack one segment into the next free row with a uniform output grid
+    /// spanning the segment. Longer segments than `n` are truncated (the
+    /// coordinator splits long segments upstream). Returns the row index, or
+    /// `None` when the batch is full.
+    pub fn push_segment(&mut self, seg: &SegmentObs) -> Option<usize> {
+        if self.used_rows == self.b {
+            return None;
+        }
+        let row = self.used_rows;
+        let count = seg.len().min(self.n);
+        let base = row * self.n;
+        for i in 0..count {
+            self.obs_t[base + i] = seg.t[i];
+            self.obs_lat[base + i] = seg.lat[i];
+            self.obs_lon[base + i] = seg.lon[i];
+            self.obs_alt[base + i] = seg.alt[i];
+            self.obs_valid[base + i] = 1.0;
+        }
+        // Uniform grid across the observed span (or degenerate zero grid).
+        let (t0, t1) = if count >= 2 {
+            (seg.t[0], seg.t[count - 1])
+        } else {
+            (0.0, 1.0)
+        };
+        let gbase = row * self.m;
+        let denom = (self.m - 1).max(1) as f32;
+        for j in 0..self.m {
+            self.grid_t[gbase + j] = t0 + (t1 - t0) * j as f32 / denom;
+        }
+        self.used_rows += 1;
+        Some(row)
+    }
+
+    /// Reset to an empty batch, preserving the DEM tile.
+    pub fn clear_rows(&mut self) {
+        self.obs_valid.iter_mut().for_each(|v| *v = 0.0);
+        self.used_rows = 0;
+    }
+
+    /// Inputs in ABI order as `(flat_data, dims)` pairs.
+    pub fn abi_inputs(&self) -> Vec<(&[f32], Vec<i64>)> {
+        vec![
+            (&self.obs_t[..], vec![self.b as i64, self.n as i64]),
+            (&self.obs_lat[..], vec![self.b as i64, self.n as i64]),
+            (&self.obs_lon[..], vec![self.b as i64, self.n as i64]),
+            (&self.obs_alt[..], vec![self.b as i64, self.n as i64]),
+            (&self.obs_valid[..], vec![self.b as i64, self.n as i64]),
+            (&self.grid_t[..], vec![self.b as i64, self.m as i64]),
+            (&self.dem[..], vec![self.tile as i64, self.tile as i64]),
+            (&self.dem_meta[..], vec![4]),
+        ]
+    }
+}
+
+/// Model outputs, one `[B, M]` row-major buffer per field.
+#[derive(Debug, Clone)]
+pub struct TrackOutputs {
+    pub b: usize,
+    pub m: usize,
+    pub lat: Vec<f32>,
+    pub lon: Vec<f32>,
+    pub alt: Vec<f32>,
+    pub vrate: Vec<f32>,
+    pub gspeed: Vec<f32>,
+    pub agl: Vec<f32>,
+    pub valid: Vec<f32>,
+}
+
+impl TrackOutputs {
+    /// View of row `r` of an output field.
+    pub fn row<'a>(&self, field: &'a [f32], r: usize) -> &'a [f32] {
+        &field[r * self.m..(r + 1) * self.m]
+    }
+
+    /// True if row `r` produced valid resampled output.
+    pub fn row_valid(&self, r: usize) -> bool {
+        self.valid[r * self.m] > 0.5
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_manifest() -> ArtifactManifest {
+        ArtifactManifest::parse(
+            "name=track_model\nb=2\nn=4\nm=3\ntile=2\n\
+             inputs=obs_t,obs_lat,obs_lon,obs_alt,obs_valid,grid_t,dem,dem_meta\n\
+             outputs=lat,lon,alt,vrate,gspeed,agl,valid\n",
+        )
+        .unwrap()
+    }
+
+    fn seg(n: usize) -> SegmentObs {
+        SegmentObs {
+            t: (0..n).map(|i| i as f32 * 10.0).collect(),
+            lat: vec![40.0; n],
+            lon: vec![-71.0; n],
+            alt: vec![1000.0; n],
+        }
+    }
+
+    #[test]
+    fn push_fills_rows_then_rejects() {
+        let mut b = TrackBatch::empty(&tiny_manifest());
+        assert_eq!(b.push_segment(&seg(3)), Some(0));
+        assert_eq!(b.push_segment(&seg(2)), Some(1));
+        assert_eq!(b.push_segment(&seg(2)), None);
+        assert_eq!(b.used_rows, 2);
+    }
+
+    #[test]
+    fn pads_and_masks() {
+        let mut b = TrackBatch::empty(&tiny_manifest());
+        b.push_segment(&seg(3)).unwrap();
+        assert_eq!(&b.obs_valid[0..4], &[1.0, 1.0, 1.0, 0.0]);
+        assert_eq!(b.obs_t[2], 20.0);
+        assert_eq!(b.obs_t[3], 0.0);
+    }
+
+    #[test]
+    fn truncates_long_segments() {
+        let mut b = TrackBatch::empty(&tiny_manifest());
+        b.push_segment(&seg(10)).unwrap();
+        assert_eq!(&b.obs_valid[0..4], &[1.0; 4]);
+        assert_eq!(b.obs_t[3], 30.0);
+    }
+
+    #[test]
+    fn grid_spans_segment() {
+        let mut b = TrackBatch::empty(&tiny_manifest());
+        b.push_segment(&seg(3)).unwrap();
+        assert_eq!(&b.grid_t[0..3], &[0.0, 10.0, 20.0]);
+    }
+
+    #[test]
+    fn clear_preserves_dem() {
+        let mut b = TrackBatch::empty(&tiny_manifest());
+        b.set_dem(&[1.0, 2.0, 3.0, 4.0], [40.0, -71.0, 0.1, 0.1]).unwrap();
+        b.push_segment(&seg(3)).unwrap();
+        b.clear_rows();
+        assert_eq!(b.used_rows, 0);
+        assert!(b.obs_valid.iter().all(|&v| v == 0.0));
+        assert_eq!(b.dem, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn dem_size_mismatch_errors() {
+        let mut b = TrackBatch::empty(&tiny_manifest());
+        assert!(b.set_dem(&[1.0; 3], [0.0; 4]).is_err());
+    }
+
+    #[test]
+    fn abi_order_matches_manifest() {
+        let man = tiny_manifest();
+        let b = TrackBatch::empty(&man);
+        let abi = b.abi_inputs();
+        assert_eq!(abi.len(), man.inputs.len());
+        for (i, (data, dims)) in abi.iter().enumerate() {
+            assert_eq!(data.len(), man.input_len(i), "input {i}");
+            assert_eq!(*dims, man.input_dims(i), "input {i}");
+        }
+    }
+}

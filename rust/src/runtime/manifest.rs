@@ -1,0 +1,149 @@
+//! Plain-text `key=value` manifest describing an AOT artifact's ABI.
+//!
+//! Written by `python/compile/aot.py` next to the HLO text. Hand-rolled
+//! parser because `serde` is unavailable in the offline build.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Shapes and input/output ordering of one compiled model artifact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactManifest {
+    /// Model name (`track_model`).
+    pub name: String,
+    /// Tracks per batch.
+    pub b: usize,
+    /// Padded observations per track.
+    pub n: usize,
+    /// Output grid points per track.
+    pub m: usize,
+    /// DEM tile side length.
+    pub tile: usize,
+    /// Parameter names in ABI order.
+    pub inputs: Vec<String>,
+    /// Tuple-output names in ABI order.
+    pub outputs: Vec<String>,
+}
+
+impl ArtifactManifest {
+    /// Parse manifest text (`key=value` lines; `#` comments allowed).
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut kv = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("manifest line {}: missing '='", lineno + 1))?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let get = |k: &str| -> Result<String> {
+            kv.get(k)
+                .cloned()
+                .with_context(|| format!("manifest missing key '{k}'"))
+        };
+        let get_usize = |k: &str| -> Result<usize> {
+            get(k)?
+                .parse::<usize>()
+                .with_context(|| format!("manifest key '{k}' is not an integer"))
+        };
+        let m = ArtifactManifest {
+            name: get("name")?,
+            b: get_usize("b")?,
+            n: get_usize("n")?,
+            m: get_usize("m")?,
+            tile: get_usize("tile")?,
+            inputs: get("inputs")?.split(',').map(str::to_string).collect(),
+            outputs: get("outputs")?.split(',').map(str::to_string).collect(),
+        };
+        if m.b == 0 || m.n == 0 || m.m == 0 || m.tile == 0 {
+            bail!("manifest has zero-sized dimension: {m:?}");
+        }
+        Ok(m)
+    }
+
+    /// Load and parse from a file path.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Expected flat element count for the input at ABI position `i`.
+    pub fn input_len(&self, i: usize) -> usize {
+        match self.inputs[i].as_str() {
+            "obs_t" | "obs_lat" | "obs_lon" | "obs_alt" | "obs_valid" => self.b * self.n,
+            "grid_t" => self.b * self.m,
+            "dem" => self.tile * self.tile,
+            "dem_meta" => 4,
+            other => panic!("unknown input '{other}' in manifest"),
+        }
+    }
+
+    /// Expected dims for the input at ABI position `i`.
+    pub fn input_dims(&self, i: usize) -> Vec<i64> {
+        match self.inputs[i].as_str() {
+            "obs_t" | "obs_lat" | "obs_lon" | "obs_alt" | "obs_valid" => {
+                vec![self.b as i64, self.n as i64]
+            }
+            "grid_t" => vec![self.b as i64, self.m as i64],
+            "dem" => vec![self.tile as i64, self.tile as i64],
+            "dem_meta" => vec![4],
+            other => panic!("unknown input '{other}' in manifest"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "name=track_model\nb=16\nn=128\nm=64\ntile=64\n\
+        inputs=obs_t,obs_lat,obs_lon,obs_alt,obs_valid,grid_t,dem,dem_meta\n\
+        outputs=lat,lon,alt,vrate,gspeed,agl,valid\ndtype=f32\nreturn_tuple=1\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactManifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "track_model");
+        assert_eq!((m.b, m.n, m.m, m.tile), (16, 128, 64, 64));
+        assert_eq!(m.inputs.len(), 8);
+        assert_eq!(m.outputs.len(), 7);
+    }
+
+    #[test]
+    fn input_lens_match_shapes() {
+        let m = ArtifactManifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.input_len(0), 16 * 128); // obs_t
+        assert_eq!(m.input_len(5), 16 * 64); // grid_t
+        assert_eq!(m.input_len(6), 64 * 64); // dem
+        assert_eq!(m.input_len(7), 4); // dem_meta
+        assert_eq!(m.input_dims(6), vec![64, 64]);
+    }
+
+    #[test]
+    fn missing_key_is_error() {
+        assert!(ArtifactManifest::parse("name=x\nb=1\n").is_err());
+    }
+
+    #[test]
+    fn non_integer_dim_is_error() {
+        let bad = SAMPLE.replace("b=16", "b=sixteen");
+        assert!(ArtifactManifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn zero_dim_is_error() {
+        let bad = SAMPLE.replace("b=16", "b=0");
+        assert!(ArtifactManifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let text = format!("# header\n\n{SAMPLE}");
+        assert!(ArtifactManifest::parse(&text).is_ok());
+    }
+}

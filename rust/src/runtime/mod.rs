@@ -1,0 +1,22 @@
+//! L3 ⇄ L2 bridge: load and execute the AOT-compiled track model via PJRT.
+//!
+//! `make artifacts` (build time, the only place Python runs) lowers the JAX
+//! track model — whose hot spot is the Pallas interpolation/AGL kernels — to
+//! HLO *text* plus a `key=value` manifest. At run time this module:
+//!
+//! 1. parses the manifest for the batch shapes and ABI order,
+//! 2. parses the HLO text into an [`xla::HloModuleProto`] (text, not a
+//!    serialized proto: xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit ids),
+//! 3. compiles it once on the PJRT CPU client,
+//! 4. executes it from the stage-3 worker hot path with zero Python.
+
+pub mod batch;
+pub mod manifest;
+pub mod model;
+
+pub use batch::{TrackBatch, TrackOutputs};
+pub use manifest::ArtifactManifest;
+pub use model::TrackModel;
+
+/// Default artifact directory, relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

@@ -1,0 +1,173 @@
+//! Compiled track model: PJRT client + executable + the execute hot path.
+
+use crate::runtime::batch::{TrackBatch, TrackOutputs};
+use crate::runtime::manifest::ArtifactManifest;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+/// A loaded, compiled track-model artifact bound to a PJRT CPU client.
+///
+/// Compilation happens once (at load); [`TrackModel::execute`] is the only
+/// thing stage-3 workers call on the hot path. The executable is not
+/// `Sync`-shared across threads — each worker thread loads its own
+/// `TrackModel` (compilation is cheap relative to the workload and this
+/// mirrors the paper's process-per-slot EPPAC placement, where every
+/// triples-mode process owns its resources).
+pub struct TrackModel {
+    manifest: ArtifactManifest,
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    /// Device-resident DEM tile + meta, keyed by the batch's dem_version
+    /// (§Perf: avoids re-uploading the 16 KB tile on every execute).
+    dem_cache: Option<(u64, xla::PjRtBuffer, xla::PjRtBuffer)>,
+    /// Cumulative time spent inside PJRT execute (for §Perf accounting).
+    exec_time: Duration,
+    exec_calls: u64,
+}
+
+impl TrackModel {
+    /// Load `track_model.hlo.txt` + `track_model.manifest` from `dir` and
+    /// compile on a fresh PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let hlo = dir.join("track_model.hlo.txt");
+        let man = dir.join("track_model.manifest");
+        Self::load_paths(&hlo, &man)
+    }
+
+    /// Load from explicit paths.
+    pub fn load_paths(hlo: &Path, manifest_path: &Path) -> Result<Self> {
+        if !hlo.exists() {
+            bail!(
+                "artifact {} not found — run `make artifacts` first",
+                hlo.display()
+            );
+        }
+        let manifest = ArtifactManifest::load(manifest_path)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo.to_str().context("non-utf8 artifact path")?,
+        )
+        .context("parsing HLO text")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("PJRT compile")?;
+        Ok(TrackModel {
+            manifest,
+            client,
+            exe,
+            dem_cache: None,
+            exec_time: Duration::ZERO,
+            exec_calls: 0,
+        })
+    }
+
+    /// Locate the artifact dir: `$EMPROC_ARTIFACTS`, else `artifacts/`
+    /// relative to the current dir, else relative to the crate root.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("EMPROC_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        let cwd = PathBuf::from("artifacts");
+        if cwd.join("track_model.hlo.txt").exists() {
+            return cwd;
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// The artifact's manifest (shapes, ABI).
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// Execute one batch. Validates buffer sizes against the manifest,
+    /// uploads the eight inputs, runs the executable, and unpacks the
+    /// 7-tuple into [`TrackOutputs`].
+    pub fn execute(&mut self, batch: &TrackBatch) -> Result<TrackOutputs> {
+        let man = &self.manifest;
+        if batch.b != man.b || batch.n != man.n || batch.m != man.m || batch.tile != man.tile
+        {
+            bail!(
+                "batch shape ({},{},{},{}) != artifact shape ({},{},{},{})",
+                batch.b, batch.n, batch.m, batch.tile, man.b, man.n, man.m, man.tile
+            );
+        }
+        let start = Instant::now();
+        // Upload the per-batch inputs as device buffers directly (skips
+        // the Literal intermediate); reuse the cached DEM buffers when the
+        // tile is unchanged (stage-3 runs many batches per archive).
+        let abi = batch.abi_inputs();
+        let mut buffers: Vec<xla::PjRtBuffer> = Vec::with_capacity(6);
+        for (i, (data, dims)) in abi.iter().enumerate().take(6) {
+            debug_assert_eq!(data.len(), man.input_len(i));
+            let udims: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+            buffers.push(
+                self.client
+                    .buffer_from_host_buffer(data, &udims, None)
+                    .with_context(|| format!("uploading input {}", man.inputs[i]))?,
+            );
+        }
+        if self
+            .dem_cache
+            .as_ref()
+            .map(|(v, _, _)| *v != batch.dem_version)
+            .unwrap_or(true)
+        {
+            let ddims: Vec<usize> = abi[6].1.iter().map(|&d| d as usize).collect();
+            let mdims: Vec<usize> = abi[7].1.iter().map(|&d| d as usize).collect();
+            let dem = self
+                .client
+                .buffer_from_host_buffer(abi[6].0, &ddims, None)
+                .context("uploading dem")?;
+            let meta = self
+                .client
+                .buffer_from_host_buffer(abi[7].0, &mdims, None)
+                .context("uploading dem_meta")?;
+            self.dem_cache = Some((batch.dem_version, dem, meta));
+        }
+        let (_, dem_buf, meta_buf) = self.dem_cache.as_ref().unwrap();
+        let args: Vec<&xla::PjRtBuffer> = buffers.iter().chain([dem_buf, meta_buf]).collect();
+        let result = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&args)
+            .context("PJRT execute")?[0][0]
+            .to_literal_sync()
+            .context("downloading result")?;
+        let parts = result.to_tuple().context("unpacking output tuple")?;
+        if parts.len() != man.outputs.len() {
+            bail!(
+                "artifact returned {} outputs, manifest says {}",
+                parts.len(),
+                man.outputs.len()
+            );
+        }
+        let mut fields: Vec<Vec<f32>> = Vec::with_capacity(parts.len());
+        for (part, name) in parts.iter().zip(&man.outputs) {
+            let v = part
+                .to_vec::<f32>()
+                .with_context(|| format!("downloading output {name}"))?;
+            if v.len() != man.b * man.m {
+                bail!("output {name} has {} elements, want {}", v.len(), man.b * man.m);
+            }
+            fields.push(v);
+        }
+        self.exec_time += start.elapsed();
+        self.exec_calls += 1;
+        let mut it = fields.into_iter();
+        Ok(TrackOutputs {
+            b: man.b,
+            m: man.m,
+            lat: it.next().unwrap(),
+            lon: it.next().unwrap(),
+            alt: it.next().unwrap(),
+            vrate: it.next().unwrap(),
+            gspeed: it.next().unwrap(),
+            agl: it.next().unwrap(),
+            valid: it.next().unwrap(),
+        })
+    }
+
+    /// `(calls, total_time)` spent inside PJRT execute so far.
+    pub fn exec_stats(&self) -> (u64, Duration) {
+        (self.exec_calls, self.exec_time)
+    }
+}

@@ -1,0 +1,311 @@
+//! Task cost + contention model, calibrated to the paper's Tables I-II.
+//!
+//! ## Stage 1/2 (byte-rate bound)
+//!
+//! A process parsing/archiving a file streams bytes from Lustre. Its rate
+//! is the minimum of a per-process parse rate and its share of the shared
+//! filesystem's aggregate bandwidth:
+//!
+//! ```text
+//! rate(A, nodes, nppn) = min( r1 / (1 + beta (nppn-1)),  fs(A + w·nodes) / A )
+//! fs(x) = fs_max / (1 + fs_k / x)
+//! ```
+//!
+//! `A` = active processes. The saturating `fs` captures Lustre client
+//! scaling: aggregate bandwidth grows with clients but saturates, so core
+//! counts beyond ~1024 barely help — the paper's central observation that
+//! "requesting more compute cores does not necessarily improve
+//! performance". The `w·nodes` term gives more *nodes* (lower NPPN at
+//! fixed cores) slightly more aggregate bandwidth, reproducing the small
+//! monotone NPPN effect in Tables I-II. Constants were fit on the four
+//! chronological NPPN=32 cells of Table I and then held fixed for every
+//! other experiment; all 18 populated table cells land within ~±16%.
+//!
+//! ## Stage 3 (compute bound)
+//!
+//! `t = fixed + obs·c_obs + dem_cells·c_dem`, divided by a sublinear
+//! thread-scaling factor. `fixed` models per-task setup (opening archives,
+//! the §V SQL query); `dem_cells` models DEM loading, which §V identifies
+//! as the OpenSky-vs-radar cost difference.
+
+use crate::dist::Task;
+
+/// Which workflow stage a simulated run models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Stage 1: parse + organize raw files.
+    Organize,
+    /// Stage 2: zip bottom directories.
+    Archive,
+    /// Stage 3: process + interpolate into track segments.
+    Process,
+}
+
+/// Instantaneous contention context when a task starts.
+#[derive(Debug, Clone, Copy)]
+pub struct ContentionCtx {
+    /// Active (busy) processes, including the one starting.
+    pub active: usize,
+    /// Nodes in the job.
+    pub nodes: usize,
+    /// Processes per node.
+    pub nppn: usize,
+    /// Threads per process.
+    pub threads: usize,
+}
+
+/// Calibrated cost constants (see module docs; DESIGN.md §5).
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// Per-task overhead for byte-rate stages, seconds.
+    pub t0: f64,
+    /// Single-process parse rate, MB/s.
+    pub r1: f64,
+    /// NPPN sharing penalty on `r1`.
+    pub beta: f64,
+    /// Lustre saturating aggregate bandwidth, MB/s.
+    pub fs_max: f64,
+    /// Lustre client-scaling knee.
+    pub fs_k: f64,
+    /// Lustre knee sharpness exponent.
+    pub fs_p: f64,
+    /// Minimum aggregate bandwidth any client set achieves, MB/s (a single
+    /// Lustre client can stream well above the contended per-share rate).
+    pub fs_floor: f64,
+    /// Node weight in effective client count.
+    pub fs_node_w: f64,
+    /// Per-node I/O bandwidth cap, MB/s — shared by the node's NPPN
+    /// processes. Inactive for the paper's recommended NPPN <= 32, but the
+    /// pre-triples launcher packed 64 processes/node, where this binds
+    /// (the mechanism behind the paper's "-14% median worker time" claim).
+    pub node_bw: f64,
+    /// Archive-stage per-process rate multiplier vs organize (no parsing,
+    /// but deflate is still CPU-heavy on KNL). Applies ONLY to the
+    /// per-process cap — the Lustre aggregate is the same filesystem.
+    pub archive_speedup: f64,
+    /// Stage-3 per-observation cost, seconds.
+    pub c_obs: f64,
+    /// Stage-3 per-DEM-cell cost, seconds.
+    pub c_dem: f64,
+    /// Stage-3 incremental speedup per extra thread.
+    pub thread_gain: f64,
+}
+
+impl CostModel {
+    /// The constants used for every experiment in EXPERIMENTS.md.
+    pub fn paper_calibrated() -> Self {
+        CostModel {
+            t0: 1.0,
+            r1: 1.1,
+            beta: 0.004,
+            fs_max: 155.0,
+            fs_k: 195.0,
+            fs_p: 1.45,
+            fs_floor: 25.0,
+            fs_node_w: 2.0,
+            node_bw: 19.0,
+            archive_speedup: 1.3,
+            c_obs: 5.0e-3,
+            c_dem: 2.0e-4,
+            thread_gain: 0.3,
+        }
+    }
+
+    /// Saturating aggregate filesystem bandwidth for an effective client
+    /// count, MB/s.
+    pub fn fs_bandwidth(&self, eff_clients: f64) -> f64 {
+        (self.fs_max / (1.0 + (self.fs_k / eff_clients.max(1.0)).powf(self.fs_p)))
+            .max(self.fs_floor)
+    }
+
+    /// Per-process streaming rate under contention, MB/s. `cpu_mult`
+    /// scales the per-process CPU-bound cap (1.0 for parsing; the archive
+    /// stage's deflate is ~3x faster per byte) — the shared-filesystem
+    /// term is common to all byte-rate stages.
+    pub fn stream_rate_with(&self, ctx: &ContentionCtx, cpu_mult: f64) -> f64 {
+        let r_proc =
+            self.r1 * cpu_mult / (1.0 + self.beta * (ctx.nppn.saturating_sub(1)) as f64);
+        let node_share = self.node_bw / ctx.nppn.max(1) as f64;
+        let eff = ctx.active as f64 + self.fs_node_w * ctx.nodes as f64;
+        let share = self.fs_bandwidth(eff) / ctx.active.max(1) as f64;
+        r_proc.min(node_share).min(share)
+    }
+
+    /// Per-process streaming rate for the organize stage.
+    pub fn stream_rate(&self, ctx: &ContentionCtx) -> f64 {
+        self.stream_rate_with(ctx, 1.0)
+    }
+
+    /// Abstract *work* of a task: MB to stream for stages 1/2, compute
+    /// seconds for stage 3. The fluid engine divides work by
+    /// [`CostModel::work_rate`] as contention evolves.
+    pub fn task_work(&self, stage: Stage, task: &Task) -> f64 {
+        match stage {
+            Stage::Organize | Stage::Archive => task.bytes as f64 / 1e6,
+            Stage::Process => {
+                let compute =
+                    task.obs as f64 * self.c_obs + task.dem_cells as f64 * self.c_dem;
+                task.fixed_cost_s() + compute
+            }
+        }
+    }
+
+    /// Per-task wall-clock overhead that does NOT consume shared
+    /// bandwidth (task launch, directory creation, local setup). The
+    /// engine applies it as a start delay before the fluid work phase.
+    pub fn wall_overhead(&self, stage: Stage) -> f64 {
+        match stage {
+            Stage::Organize | Stage::Archive => self.t0,
+            // Process-stage work is already in seconds (CPU-bound); t0 is
+            // part of the fixed per-task cost there.
+            Stage::Process => self.t0,
+        }
+    }
+
+    /// Per-process work rate under the given contention: MB/s for the
+    /// byte-rate stages (shared-filesystem model), thread-scaled unit rate
+    /// for the CPU-bound process stage.
+    pub fn work_rate(&self, stage: Stage, ctx: &ContentionCtx) -> f64 {
+        match stage {
+            Stage::Organize => self.stream_rate(ctx),
+            Stage::Archive => self.stream_rate_with(ctx, self.archive_speedup),
+            Stage::Process => {
+                1.0 + self.thread_gain * (ctx.threads.saturating_sub(1)) as f64
+            }
+        }
+    }
+
+    /// Duration of one task if contention stayed fixed, seconds (closed
+    /// form; the engine's fluid result equals this when `ctx` is constant).
+    pub fn task_duration(&self, stage: Stage, task: &Task, ctx: &ContentionCtx) -> f64 {
+        self.wall_overhead(stage) + self.task_work(stage, task) / self.work_rate(stage, ctx)
+    }
+}
+
+impl Task {
+    /// Stage-3 fixed per-task cost (archive open / SQL query), seconds.
+    /// Encoded in the task's `bytes` field at nanosecond resolution by the
+    /// stage-3 task builders (raw input bytes are not meaningful for
+    /// process tasks, whose cost drivers are `obs` and `dem_cells`).
+    pub fn fixed_cost_s(&self) -> f64 {
+        self.bytes as f64 * 1e-9
+    }
+
+    /// Set the stage-3 fixed cost (see [`Task::fixed_cost_s`]).
+    pub fn set_fixed_cost_s(&mut self, s: f64) {
+        self.bytes = (s * 1e9) as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(active: usize, nodes: usize, nppn: usize) -> ContentionCtx {
+        ContentionCtx { active, nodes, nppn, threads: 1 }
+    }
+
+    fn mb_task(mb: u64) -> Task {
+        Task {
+            id: 0,
+            bytes: mb * 1_000_000,
+            obs: 0,
+            dem_cells: 0,
+            chrono_key: 0,
+            name: "t".into(),
+        }
+    }
+
+    #[test]
+    fn fs_bandwidth_saturates() {
+        let m = CostModel::paper_calibrated();
+        let lo = m.fs_bandwidth(135.0);
+        let hi = m.fs_bandwidth(1087.0);
+        assert!(lo < hi);
+        assert!(hi < m.fs_max);
+        // Doubling clients at the high end gains little (paper's
+        // diminishing-returns observation).
+        let hi2 = m.fs_bandwidth(2174.0);
+        assert!((hi2 - hi) / hi < 0.15, "{hi} -> {hi2}");
+    }
+
+    #[test]
+    fn aggregate_throughput_matches_table1_corners() {
+        // The four chronological NPPN=32 cells of Table I imply effective
+        // aggregate throughputs of ~{60, 95, 120, 127} MB/s at
+        // {127, 255, 511, 1023} active processes. Check within ±15%.
+        let m = CostModel::paper_calibrated();
+        for (active, nodes, want) in [
+            (127usize, 4usize, 59.8),
+            (255, 8, 95.3),
+            (511, 16, 120.1),
+            (1023, 32, 126.6),
+        ] {
+            let got = m.stream_rate(&ctx(active, nodes, 32)) * active as f64;
+            let err = (got - want).abs() / want;
+            assert!(err < 0.15, "A={active}: aggregate {got:.1} vs paper {want} ({err:.2})");
+        }
+    }
+
+    #[test]
+    fn lower_nppn_is_never_slower() {
+        let m = CostModel::paper_calibrated();
+        for active in [127usize, 255, 511] {
+            let mut prev = f64::INFINITY;
+            for nppn in [32usize, 16, 8] {
+                let nodes = active.div_ceil(nppn);
+                let d = m.task_duration(Stage::Organize, &mb_task(300), &ctx(active, nodes, nppn));
+                assert!(d <= prev + 1e-9, "NPPN {nppn} slower at A={active}");
+                prev = d;
+            }
+        }
+    }
+
+    #[test]
+    fn duration_scales_with_bytes() {
+        let m = CostModel::paper_calibrated();
+        let c = ctx(100, 4, 32);
+        let d1 = m.task_duration(Stage::Organize, &mb_task(100), &c);
+        let d2 = m.task_duration(Stage::Organize, &mb_task(200), &c);
+        assert!(d2 > d1 * 1.8 && d2 < d1 * 2.2);
+    }
+
+    #[test]
+    fn archive_is_faster_per_process_but_same_fs() {
+        let m = CostModel::paper_calibrated();
+        // Uncontended: deflate beats parsing by ~archive_speedup.
+        let solo = ctx(1, 1, 8);
+        let org = m.task_duration(Stage::Organize, &mb_task(300), &solo);
+        let arc = m.task_duration(Stage::Archive, &mb_task(300), &solo);
+        assert!(arc < org / (m.archive_speedup * 0.9), "org {org} arc {arc}");
+        // Fully contended: both are Lustre-share-bound, so equal rate.
+        let busy = ctx(1000, 32, 32);
+        let org_c = m.work_rate(Stage::Organize, &busy);
+        let arc_c = m.work_rate(Stage::Archive, &busy);
+        assert!((org_c - arc_c).abs() < 1e-9, "fs share must be common");
+    }
+
+    #[test]
+    fn process_stage_costs() {
+        let m = CostModel::paper_calibrated();
+        let mut t = mb_task(0);
+        t.obs = 70_000;
+        t.dem_cells = 100_000;
+        let one = m.task_duration(Stage::Process, &t, &ctx(100, 4, 16));
+        // 70k obs * 5 ms + 100k cells * 0.2 ms = 350 + 20 + t0 = ~371 s.
+        assert!((one - 371.0).abs() < 5.0, "{one}");
+        let two = m.task_duration(
+            Stage::Process,
+            &t,
+            &ContentionCtx { active: 100, nodes: 4, nppn: 16, threads: 2 },
+        );
+        assert!(two < one, "two threads should help");
+    }
+
+    #[test]
+    fn fixed_cost_round_trip() {
+        let mut t = mb_task(0);
+        t.set_fixed_cost_s(5.5);
+        assert!((t.fixed_cost_s() - 5.5).abs() < 1e-9);
+    }
+}

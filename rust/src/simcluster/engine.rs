@@ -1,0 +1,498 @@
+//! The deterministic discrete-event engine (exact fluid contention model).
+//!
+//! Key property of the cost model: at any instant every active process has
+//! the *same* work rate (its fair share of the shared filesystem, or the
+//! CPU-bound stage-3 rate). That makes the shared-rate dynamics exactly
+//! solvable: track cumulative per-process virtual work
+//! `V(t) = ∫ rate(A(τ)) dτ`; a task granted at `V0` with work `w` finishes
+//! when `V = V0 + w`. Completions are a heap on `V`-targets, wall-clock
+//! events (grants, polls) a heap on time, and between events `V` advances
+//! linearly — so stragglers correctly *accelerate* as the system drains,
+//! which is what keeps the paper's 2048-core job times close to the
+//! saturated-bandwidth bound instead of being tail-dominated.
+//!
+//! Time is integer nanoseconds; work is integer micro-units. Runs are
+//! bit-reproducible.
+
+use crate::dist::{distribute, Task};
+use crate::selfsched::{AllocMode, SchedTrace, SelfSchedConfig};
+use crate::simcluster::cost::{ContentionCtx, CostModel, Stage};
+use crate::triples::TriplesConfig;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Everything that defines one simulated run.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub triples: TriplesConfig,
+    pub alloc: AllocMode,
+    pub stage: Stage,
+    pub cost: CostModel,
+}
+
+/// The simulator. Stateless between runs; [`Simulator::run`] is pure.
+pub struct Simulator;
+
+/// Work queue fed to a worker: either everything up front (batch) or
+/// message-by-message (self-scheduled).
+#[derive(Debug)]
+enum Feed<'a> {
+    Batch(Vec<Vec<usize>>),
+    SelfSched {
+        ss: SelfSchedConfig,
+        ordered: &'a [usize],
+        cursor: usize,
+    },
+}
+
+const WORK_SCALE: f64 = 1e6; // micro-work units
+const TIME_SCALE: f64 = 1e9; // nanoseconds
+
+impl Simulator {
+    /// Simulate one run over `tasks`, visiting them in `ordered` order.
+    pub fn run(cfg: &SimConfig, tasks: &[Task], ordered: &[usize]) -> SchedTrace {
+        let workers = cfg.triples.workers().max(1);
+        let mut feed = match cfg.alloc {
+            AllocMode::Batch(dist) => Feed::Batch(distribute(ordered, workers, dist)),
+            AllocMode::SelfSched(ss) => Feed::SelfSched { ss, ordered, cursor: 0 },
+        };
+
+        let mut st = FluidState::new(cfg, workers);
+
+        // Seed initial work.
+        match &mut feed {
+            Feed::Batch(queues) => {
+                for w in 0..workers {
+                    if !queues[w].is_empty() {
+                        st.first_grant[w] = 0.0;
+                        let s = st.next_seq();
+                        st.start_heap.push(Reverse((0, s, w, 0)));
+                    }
+                }
+            }
+            Feed::SelfSched { ss, ordered, cursor } => {
+                // Sequential initial fan-out, no pausing (§II.D).
+                for w in 0..workers {
+                    if *cursor >= ordered.len() {
+                        break;
+                    }
+                    let grant = (w + 1) as f64 * ss.msg_s;
+                    st.first_grant[w] = grant;
+                    st.pending_msg[w] = take_message(ordered, cursor, ss.tasks_per_message);
+                    st.messages += 1;
+                    let start = grant + ss.poll_s / 2.0;
+                    let s = st.next_seq();
+                    st.start_heap
+                        .push(Reverse(((start * TIME_SCALE) as u64, s, w, 0)));
+                }
+            }
+        }
+
+        // Main loop: interleave wall-time start events and virtual-work
+        // completion events, whichever is earlier.
+        loop {
+            let next_completion_t = st.peek_completion_time();
+            let next_start_t = st
+                .start_heap
+                .peek()
+                .map(|Reverse((t, _, _, _))| *t as f64 / TIME_SCALE);
+            match (next_completion_t, next_start_t) {
+                (None, None) => break,
+                (Some(ct), Some(stt)) if stt <= ct => st.handle_start(&mut feed, tasks, stt),
+                (None, Some(stt)) => st.handle_start(&mut feed, tasks, stt),
+                (Some(ct), _) => st.handle_completion(&mut feed, ct),
+            }
+        }
+
+        let worker_times: Vec<f64> = (0..workers)
+            .map(|w| {
+                if st.first_grant[w].is_finite() {
+                    (st.last_done[w] - st.first_grant[w]).max(0.0)
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        SchedTrace {
+            job_time: st.job_end,
+            worker_times,
+            worker_busy: st.busy_s.clone(),
+            tasks_per_worker: st.tasks_done.clone(),
+            messages_sent: st.messages,
+        }
+    }
+}
+
+fn take_message(ordered: &[usize], cursor: &mut usize, k: usize) -> Vec<usize> {
+    let take = k.max(1).min(ordered.len() - *cursor);
+    let msg = ordered[*cursor..*cursor + take].to_vec();
+    *cursor += take;
+    msg
+}
+
+/// Mutable engine state for one run.
+struct FluidState<'c> {
+    cfg: &'c SimConfig,
+    /// Wall time, seconds.
+    t: f64,
+    /// Cumulative per-process virtual work, micro-units.
+    v: u64,
+    /// Active (busy) process count.
+    active: usize,
+    /// Completion heap: (v_target_micro, seq, worker).
+    comp_heap: BinaryHeap<Reverse<(u64, u64, usize)>>,
+    /// Start-event heap: (t_ns, seq, worker, phase). Phase 0 is the grant
+    /// (local per-task overhead, not consuming shared bandwidth); phase 1
+    /// begins the fluid work.
+    start_heap: BinaryHeap<Reverse<(u64, u64, usize, u8)>>,
+    seq: u64,
+    /// Per-worker stats.
+    busy_s: Vec<f64>,
+    first_grant: Vec<f64>,
+    last_done: Vec<f64>,
+    tasks_done: Vec<usize>,
+    /// Tasks granted but not yet started (message in flight), selfsched.
+    pending_msg: Vec<Vec<usize>>,
+    /// The message currently being executed per worker.
+    current_msg: Vec<Vec<usize>>,
+    /// Batch: per-worker queue position.
+    qpos: Vec<usize>,
+    /// Per-worker started-at (wall, v) for busy accounting.
+    started_at: Vec<(f64, u64)>,
+    /// Tasks in the worker's current message (for tasks_done accounting).
+    current_count: Vec<usize>,
+    job_end: f64,
+    messages: usize,
+}
+
+impl<'c> FluidState<'c> {
+    fn new(cfg: &'c SimConfig, workers: usize) -> Self {
+        let _ = workers;
+        FluidState {
+            cfg,
+            t: 0.0,
+            v: 0,
+            active: 0,
+            comp_heap: BinaryHeap::new(),
+            start_heap: BinaryHeap::new(),
+            seq: 0,
+            busy_s: vec![0.0; workers],
+            first_grant: vec![f64::INFINITY; workers],
+            last_done: vec![0.0; workers],
+            tasks_done: vec![0; workers],
+            pending_msg: vec![Vec::new(); workers],
+            current_msg: vec![Vec::new(); workers],
+            qpos: vec![0; workers],
+            started_at: vec![(0.0, 0); workers],
+            current_count: vec![0; workers],
+            job_end: 0.0,
+            messages: 0,
+        }
+    }
+
+    fn next_seq(&mut self) -> u64 {
+        self.seq += 1;
+        self.seq
+    }
+
+    fn rate(&self) -> f64 {
+        let ctx = ContentionCtx {
+            active: self.active.max(1),
+            nodes: self.cfg.triples.nodes,
+            nppn: self.cfg.triples.nppn,
+            threads: self.cfg.triples.threads,
+        };
+        self.cfg.cost.work_rate(self.cfg.stage, &ctx)
+    }
+
+    /// Wall time at which the earliest completion would occur under the
+    /// current rate.
+    fn peek_completion_time(&self) -> Option<f64> {
+        self.comp_heap.peek().map(|Reverse((vt, _, _))| {
+            let dv = (vt.saturating_sub(self.v)) as f64 / WORK_SCALE;
+            self.t + dv / self.rate()
+        })
+    }
+
+    /// Advance wall clock + virtual work to `t_new`.
+    fn advance_to(&mut self, t_new: f64) {
+        if t_new > self.t {
+            let dv = (t_new - self.t) * self.rate();
+            self.v += (dv * WORK_SCALE).round() as u64;
+            self.t = t_new;
+        }
+    }
+
+    /// A worker's start event fires. Phase 0: the grant — fetch the
+    /// message, account busy from now, and schedule phase 1 after the
+    /// local (non-fs) per-task overhead. Phase 1: enter the fluid work.
+    fn handle_start(&mut self, feed: &mut Feed, tasks: &[Task], t_start: f64) {
+        let Reverse((_, _, w, phase)) = self.start_heap.pop().expect("start event");
+        self.advance_to(t_start);
+        if phase == 0 {
+            let msg: Vec<usize> = match feed {
+                Feed::Batch(queues) => {
+                    // One task per "message" in batch mode.
+                    let q = &queues[w];
+                    if self.qpos[w] < q.len() {
+                        let t = q[self.qpos[w]];
+                        self.qpos[w] += 1;
+                        vec![t]
+                    } else {
+                        return;
+                    }
+                }
+                Feed::SelfSched { .. } => std::mem::take(&mut self.pending_msg[w]),
+            };
+            if msg.is_empty() {
+                return;
+            }
+            self.started_at[w] = (self.t, self.v);
+            self.current_count[w] = msg.len();
+            let ohead = self.cfg.cost.wall_overhead(self.cfg.stage) * msg.len() as f64;
+            self.current_msg[w] = msg;
+            let s = self.next_seq();
+            self.start_heap
+                .push(Reverse((((self.t + ohead) * TIME_SCALE) as u64, s, w, 1)));
+            return;
+        }
+        // Phase 1: work begins.
+        let work: f64 = self.current_msg[w]
+            .iter()
+            .map(|&ti| self.cfg.cost.task_work(self.cfg.stage, &tasks[ti]))
+            .sum();
+        self.active += 1;
+        let v_target = self.v + (work * WORK_SCALE).round() as u64;
+        let s = self.next_seq();
+        self.comp_heap.push(Reverse((v_target, s, w)));
+    }
+
+    /// A worker's message completes.
+    fn handle_completion(&mut self, feed: &mut Feed, t_comp: f64) {
+        let Reverse((_, _, w)) = self.comp_heap.pop().expect("completion event");
+        self.advance_to(t_comp);
+        self.active = self.active.saturating_sub(1);
+        self.busy_s[w] += self.t - self.started_at[w].0;
+        self.tasks_done[w] += self.current_count[w];
+        self.current_count[w] = 0;
+        self.last_done[w] = self.t;
+        self.job_end = self.job_end.max(self.t);
+        match feed {
+            Feed::Batch(queues) => {
+                if self.qpos[w] < queues[w].len() {
+                    // Next task starts immediately.
+                    let t_ns = (self.t * TIME_SCALE) as u64;
+                    let s = self.next_seq();
+                    self.start_heap.push(Reverse((t_ns, s, w, 0)));
+                }
+            }
+            Feed::SelfSched { ss, ordered, cursor } => {
+                if *cursor < ordered.len() {
+                    // Completion message + manager poll + worker poll.
+                    let start = self.t + ss.msg_s + ss.poll_s;
+                    self.pending_msg[w] = take_message(ordered, cursor, ss.tasks_per_message);
+                    self.messages += 1;
+                    let s = self.next_seq();
+                    self.start_heap
+                        .push(Reverse(((start * TIME_SCALE) as u64, s, w, 0)));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{order_tasks, Distribution, TaskOrder};
+    use crate::prop_assert;
+    use crate::testing;
+    use crate::util::Rng;
+
+    fn mk_tasks(rng: &mut Rng, n: usize) -> Vec<Task> {
+        (0..n)
+            .map(|i| Task {
+                id: i,
+                bytes: (rng.uniform(1.0, 400.0) * 1e6) as u64,
+                obs: 1000,
+                dem_cells: 0,
+                chrono_key: i as u64,
+                name: format!("f{i:05}"),
+            })
+            .collect()
+    }
+
+    fn cfg(cores: usize, nppn: usize, alloc: AllocMode) -> SimConfig {
+        SimConfig {
+            triples: TriplesConfig::table_config(cores, nppn).unwrap(),
+            alloc,
+            stage: Stage::Organize,
+            cost: CostModel::paper_calibrated(),
+        }
+    }
+
+    #[test]
+    fn selfsched_completes_all_tasks() {
+        testing::check("selfsched completes", |rng| {
+            let n = 1 + rng.below(500);
+            let tasks = mk_tasks(rng, n);
+            let ordered = order_tasks(&tasks, TaskOrder::Random(7));
+            let c = cfg(256, 32, AllocMode::SelfSched(SelfSchedConfig::default()));
+            let trace = Simulator::run(&c, &tasks, &ordered);
+            trace.check_invariants(n).map_err(|e| e.to_string())?;
+            prop_assert!(trace.job_time > 0.0, "zero job time");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batch_completes_all_tasks() {
+        testing::check("batch completes", |rng| {
+            let n = 1 + rng.below(500);
+            let tasks = mk_tasks(rng, n);
+            let ordered = order_tasks(&tasks, TaskOrder::FilenameSorted);
+            for dist in [Distribution::Block, Distribution::Cyclic] {
+                let c = cfg(256, 32, AllocMode::Batch(dist));
+                let trace = Simulator::run(&c, &tasks, &ordered);
+                trace.check_invariants(n).map_err(|e| e.to_string())?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut rng = Rng::new(5);
+        let tasks = mk_tasks(&mut rng, 300);
+        let ordered = order_tasks(&tasks, TaskOrder::Chronological);
+        let c = cfg(512, 32, AllocMode::SelfSched(SelfSchedConfig::default()));
+        let a = Simulator::run(&c, &tasks, &ordered);
+        let b = Simulator::run(&c, &tasks, &ordered);
+        assert_eq!(a.job_time, b.job_time);
+        assert_eq!(a.worker_times, b.worker_times);
+    }
+
+    #[test]
+    fn single_task_duration_matches_closed_form() {
+        // With one worker active the fluid engine must reproduce the
+        // closed-form duration at A=1.
+        let tasks = vec![Task {
+            id: 0,
+            bytes: 200_000_000,
+            obs: 0,
+            dem_cells: 0,
+            chrono_key: 0,
+            name: "one".into(),
+        }];
+        let c = cfg(256, 32, AllocMode::Batch(Distribution::Block));
+        let trace = Simulator::run(&c, &tasks, &[0]);
+        let want = CostModel::paper_calibrated().task_duration(
+            Stage::Organize,
+            &tasks[0],
+            &ContentionCtx { active: 1, nodes: 4, nppn: 32, threads: 1 },
+        );
+        assert!(
+            (trace.job_time - want).abs() < 0.05 * want,
+            "fluid {} vs closed form {want}",
+            trace.job_time
+        );
+    }
+
+    #[test]
+    fn largest_first_never_worse_than_chrono() {
+        // The paper's headline stage-1 finding, as a property over random
+        // workloads (allowing sub-1% noise from protocol constants).
+        testing::check("LPT beats chrono", |rng| {
+            let n = 50 + rng.below(400);
+            let tasks = mk_tasks(rng, n);
+            let c = cfg(512, 32, AllocMode::SelfSched(SelfSchedConfig::default()));
+            let chrono = Simulator::run(&c, &tasks, &order_tasks(&tasks, TaskOrder::Chronological));
+            let size = Simulator::run(&c, &tasks, &order_tasks(&tasks, TaskOrder::LargestFirst));
+            prop_assert!(
+                size.job_time <= chrono.job_time * 1.01,
+                "size {} > chrono {}",
+                size.job_time,
+                chrono.job_time
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn more_cores_help_but_saturate() {
+        let mut rng = Rng::new(6);
+        let tasks = mk_tasks(&mut rng, 2425);
+        let ordered = order_tasks(&tasks, TaskOrder::Chronological);
+        let times: Vec<f64> = [256usize, 512, 1024, 2048]
+            .iter()
+            .map(|&cores| {
+                let c = cfg(cores, 32, AllocMode::SelfSched(SelfSchedConfig::default()));
+                Simulator::run(&c, &tasks, &ordered).job_time
+            })
+            .collect();
+        assert!(times[1] < times[0] && times[2] < times[1], "{times:?}");
+        // Diminishing returns: the last doubling gains far less than the
+        // first (paper's Fig 4 shape).
+        let first_gain = times[0] / times[1];
+        let last_gain = times[2] / times[3];
+        assert!(last_gain < first_gain, "{times:?}");
+    }
+
+    #[test]
+    fn selfsched_beats_block_batch_on_skewed_order() {
+        // §IV.C: batch/block without self-scheduling is far slower when
+        // task sizes are correlated in task order.
+        let mut rng = Rng::new(7);
+        let mut tasks = mk_tasks(&mut rng, 800);
+        for (i, t) in tasks.iter_mut().enumerate() {
+            t.bytes = if i < 200 { 400_000_000 } else { 5_000_000 };
+        }
+        let ordered: Vec<usize> = (0..tasks.len()).collect();
+        let block = Simulator::run(
+            &cfg(512, 32, AllocMode::Batch(Distribution::Block)),
+            &tasks,
+            &ordered,
+        );
+        let ss = Simulator::run(
+            &cfg(512, 32, AllocMode::SelfSched(SelfSchedConfig::default())),
+            &tasks,
+            &ordered,
+        );
+        assert!(
+            ss.job_time < block.job_time * 0.7,
+            "selfsched {} vs block {}",
+            ss.job_time,
+            block.job_time
+        );
+    }
+
+    #[test]
+    fn tasks_per_message_degrades_balance() {
+        // Fig 7's direction: larger messages -> coarser granularity ->
+        // longer job on dataset-1-like workloads.
+        let mut rng = Rng::new(8);
+        let tasks = mk_tasks(&mut rng, 2425);
+        let ordered = order_tasks(&tasks, TaskOrder::Random(1));
+        let time_at = |k: usize| {
+            let ss = SelfSchedConfig { tasks_per_message: k, ..Default::default() };
+            let c = SimConfig {
+                triples: TriplesConfig {
+                    nodes: 64,
+                    nppn: 8,
+                    threads: 1,
+                    slots_per_job: 1,
+                    allocation: 8192,
+                },
+                alloc: AllocMode::SelfSched(ss),
+                stage: Stage::Organize,
+                cost: CostModel::paper_calibrated(),
+            };
+            Simulator::run(&c, &tasks, &ordered).job_time
+        };
+        let t1 = time_at(1);
+        let t8 = time_at(8);
+        let t32 = time_at(32);
+        assert!(t8 > t1, "k=8 {t8} <= k=1 {t1}");
+        assert!(t32 > t8, "k=32 {t32} <= k=8 {t8}");
+    }
+}

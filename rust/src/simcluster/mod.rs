@@ -1,0 +1,22 @@
+//! Discrete-event LLSC cluster simulator (virtual time).
+//!
+//! The paper's benchmarks ran hours-to-days on up to 2048 Xeon Phi cores
+//! against Lustre; none of that hardware is available (repro band 0/5), so
+//! every table and figure is regenerated on this simulator. The simulated
+//! mechanisms are the ones the paper's results are *about*:
+//!
+//! * triples-mode process topology (nodes × NPPN × threads);
+//! * batch (block/cyclic) vs self-scheduling task allocation, with the
+//!   0.3 s polling protocol and tasks-per-message batching;
+//! * a shared-filesystem contention model calibrated to Tables I-II
+//!   (see [`cost::CostModel`] and DESIGN.md §5);
+//! * task-organization policies (chronological / largest-first / random /
+//!   filename-sorted).
+//!
+//! The engine is deterministic: same inputs → bit-identical traces.
+
+pub mod cost;
+pub mod engine;
+
+pub use cost::{ContentionCtx, CostModel, Stage};
+pub use engine::{SimConfig, Simulator};

@@ -1,0 +1,129 @@
+//! Minimal property-testing harness (`proptest` is unavailable offline).
+//!
+//! A property is a closure over a seeded [`Rng`]; the harness runs it for a
+//! configurable number of cases with distinct derived seeds and, on failure,
+//! reports the failing case's seed so the exact input regenerates with
+//! `EMPROC_PROP_SEED=<seed> EMPROC_PROP_CASES=1 cargo test <name>`.
+
+use crate::util::Rng;
+
+/// Number of cases per property (override with `EMPROC_PROP_CASES`).
+pub fn default_cases() -> u64 {
+    std::env::var("EMPROC_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("EMPROC_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0x5EED_0F7E_57AA_11CE) // fixed default: reproducible CI
+}
+
+/// Run `prop` for [`default_cases`] seeded cases. `prop` returns
+/// `Err(message)` (or panics) to fail; the harness decorates the failure
+/// with the case seed.
+pub fn check<F>(name: &str, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let cases = default_cases();
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (EMPROC_PROP_SEED={base}, case seed {seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Convenience generators for common property inputs.
+pub mod gen {
+    use crate::util::Rng;
+
+    /// Vec of length in `[min_len, max_len]` with elements from `f`.
+    pub fn vec_of<T>(
+        rng: &mut Rng,
+        min_len: usize,
+        max_len: usize,
+        mut f: impl FnMut(&mut Rng) -> T,
+    ) -> Vec<T> {
+        let len = min_len + rng.below(max_len - min_len + 1);
+        (0..len).map(|_| f(rng)).collect()
+    }
+
+    /// Positive "file size" in bytes, log-uniform across ~5 decades —
+    /// matches the heavy-tailed regimes the schedulers must handle.
+    pub fn file_size(rng: &mut Rng) -> u64 {
+        let exp = rng.uniform(3.0, 9.5); // 1 KB .. ~3 GB
+        10f64.powf(exp) as u64
+    }
+
+    /// Task count that exercises edge cases (0, 1, exactly-divisible, prime).
+    pub fn task_count(rng: &mut Rng) -> usize {
+        const INTERESTING: [usize; 8] = [0, 1, 2, 7, 64, 100, 255, 1021];
+        if rng.f64() < 0.5 {
+            INTERESTING[rng.below(INTERESTING.len())]
+        } else {
+            rng.below(2000)
+        }
+    }
+
+    /// Worker count >= 1.
+    pub fn worker_count(rng: &mut Rng) -> usize {
+        1 + rng.below(256)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", |rng| {
+            let x = rng.f64();
+            prop_assert!((0.0..1.0).contains(&x), "x out of range: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'falsum' failed")]
+    fn failing_property_panics_with_seed() {
+        check("falsum", |rng| {
+            let x = rng.f64();
+            prop_assert!(x < 0.5, "got {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("gen bounds", |rng| {
+            let v = gen::vec_of(rng, 2, 10, |r| r.f64());
+            prop_assert!((2..=10).contains(&v.len()), "len {}", v.len());
+            let s = gen::file_size(rng);
+            prop_assert!(s >= 1_000, "size {s}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,129 @@
+//! CSV codec for the OpenSky-like raw observation files.
+//!
+//! Schema (one header line, then one observation per line):
+//!
+//! ```text
+//! time,icao24,lat,lon,baroaltitude_ft
+//! 1517818000,a1b2c3,42.3601,-71.0589,2400.0
+//! ```
+//!
+//! The real OpenSky state vectors carry more columns (velocity, heading,
+//! vertical rate, squawk, ...); the workflow only consumes these five, and
+//! the synthetic generators emit exactly them. The parser is tolerant of
+//! extra columns so miniature corpora stay forward-compatible.
+
+use super::{parse_icao24, Observation, Track};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+/// Expected header.
+pub const HEADER: &str = "time,icao24,lat,lon,baroaltitude_ft";
+
+/// Parse a CSV observation file into per-aircraft tracks (unnormalized).
+pub fn parse_csv(text: &str) -> Result<Vec<Track>> {
+    let mut by_ac: HashMap<u32, Vec<Observation>> = HashMap::new();
+    let mut lines = text.lines().enumerate();
+    match lines.next() {
+        Some((_, h)) if h.trim_start().starts_with("time,") => {}
+        Some((_, h)) => bail!("bad header: {h:?}"),
+        None => return Ok(Vec::new()),
+    }
+    for (lineno, line) in lines {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut f = line.split(',');
+        let ctx = || format!("line {}", lineno + 1);
+        let t: f64 = f.next().with_context(ctx)?.trim().parse().with_context(ctx)?;
+        let icao = parse_icao24(f.next().with_context(ctx)?)
+            .with_context(|| format!("bad icao24 on line {}", lineno + 1))?;
+        let lat: f64 = f.next().with_context(ctx)?.trim().parse().with_context(ctx)?;
+        let lon: f64 = f.next().with_context(ctx)?.trim().parse().with_context(ctx)?;
+        let alt: f64 = f.next().with_context(ctx)?.trim().parse().with_context(ctx)?;
+        if !(-90.0..=90.0).contains(&lat) || !(-180.0..=180.0).contains(&lon) {
+            bail!("out-of-range position on line {}", lineno + 1);
+        }
+        by_ac.entry(icao).or_default().push(Observation { t, lat, lon, alt_ft: alt });
+    }
+    let mut tracks: Vec<Track> = by_ac
+        .into_iter()
+        .map(|(icao24, obs)| Track { icao24, obs })
+        .collect();
+    tracks.sort_by_key(|t| t.icao24);
+    Ok(tracks)
+}
+
+/// Serialize tracks back to the CSV schema (observations in given order).
+pub fn write_csv(tracks: &[Track]) -> String {
+    let mut out = String::from(HEADER);
+    out.push('\n');
+    for tr in tracks {
+        for o in &tr.obs {
+            let _ = writeln!(
+                out,
+                "{},{},{:.6},{:.6},{:.1}",
+                o.t as i64,
+                super::icao24_hex(tr.icao24),
+                o.lat,
+                o.lon,
+                o.alt_ft
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "time,icao24,lat,lon,baroaltitude_ft\n\
+        1517818000,a1b2c3,42.360100,-71.058900,2400.0\n\
+        1517818010,a1b2c3,42.361000,-71.060000,2450.0\n\
+        1517818000,0000ff,40.000000,-75.000000,12000.0\n";
+
+    #[test]
+    fn parse_groups_by_aircraft() {
+        let tracks = parse_csv(SAMPLE).unwrap();
+        assert_eq!(tracks.len(), 2);
+        assert_eq!(tracks[0].icao24, 0xFF);
+        assert_eq!(tracks[1].icao24, 0xA1B2C3);
+        assert_eq!(tracks[1].obs.len(), 2);
+    }
+
+    #[test]
+    fn round_trip() {
+        let tracks = parse_csv(SAMPLE).unwrap();
+        let text = write_csv(&tracks);
+        let again = parse_csv(&text).unwrap();
+        assert_eq!(tracks.len(), again.len());
+        for (a, b) in tracks.iter().zip(&again) {
+            assert_eq!(a.icao24, b.icao24);
+            assert_eq!(a.obs.len(), b.obs.len());
+        }
+    }
+
+    #[test]
+    fn rejects_bad_header_and_positions() {
+        assert!(parse_csv("nope\n1,2,3,4,5\n").is_err());
+        let bad = "time,icao24,lat,lon,baroaltitude_ft\n1,a1b2c3,99.0,-71.0,100.0\n";
+        assert!(parse_csv(bad).is_err());
+    }
+
+    #[test]
+    fn empty_input_is_empty() {
+        assert!(parse_csv("").unwrap().is_empty());
+        let only_header = "time,icao24,lat,lon,baroaltitude_ft\n";
+        assert!(parse_csv(only_header).unwrap().is_empty());
+    }
+
+    #[test]
+    fn tolerates_extra_columns() {
+        let extra = "time,icao24,lat,lon,baroaltitude_ft,velocity\n\
+                     1,a1b2c3,42.0,-71.0,100.0,250.0\n";
+        let tracks = parse_csv(extra).unwrap();
+        assert_eq!(tracks.len(), 1);
+    }
+}

@@ -1,0 +1,129 @@
+//! Aircraft observation / track model, CSV codec, and segmentation rules.
+//!
+//! Mirrors the paper's §III.A processing semantics: raw surveillance
+//! observations are grouped per aircraft, split into track segments at
+//! surveillance gaps, and segments with fewer than ten observations are
+//! removed before interpolation.
+
+pub mod codec;
+pub mod segment;
+
+pub use codec::{parse_csv, write_csv};
+pub use segment::{segment_track, SegmentConfig};
+
+/// One surveillance observation of one aircraft.
+///
+/// This is the normalized form shared by the OpenSky-like state vectors
+/// (Monday + aerodrome datasets) and the deidentified terminal-radar reports
+/// (§V): position, barometric MSL altitude and a UNIX-ish timestamp.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Observation {
+    /// Seconds since epoch (whole seconds in the raw feeds).
+    pub t: f64,
+    /// Latitude, degrees.
+    pub lat: f64,
+    /// Longitude, degrees.
+    pub lon: f64,
+    /// Barometric altitude, feet MSL.
+    pub alt_ft: f64,
+}
+
+/// All observations of one aircraft identifier (ICAO 24-bit address for the
+/// OpenSky datasets; deidentified generic id for the radar dataset).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Track {
+    /// 24-bit identifier (fits in u32).
+    pub icao24: u32,
+    /// Observations, ascending in time after normalization.
+    pub obs: Vec<Observation>,
+}
+
+/// A contiguous track segment ready for interpolation (stage 3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrackSegment {
+    pub icao24: u32,
+    pub obs: Vec<Observation>,
+}
+
+impl Track {
+    /// Sort observations by time and drop exact duplicates (same second),
+    /// which the crowdsourced feed produces when multiple sensors report.
+    pub fn normalize(&mut self) {
+        self.obs
+            .sort_by(|a, b| a.t.partial_cmp(&b.t).expect("NaN time"));
+        self.obs.dedup_by(|a, b| a.t == b.t);
+    }
+}
+
+impl TrackSegment {
+    /// Duration covered by the segment, seconds.
+    pub fn duration(&self) -> f64 {
+        match (self.obs.first(), self.obs.last()) {
+            (Some(a), Some(b)) => b.t - a.t,
+            _ => 0.0,
+        }
+    }
+
+    /// Convert into the runtime's packed form, with times rebased to the
+    /// segment start (the AOT kernel works in relative seconds).
+    pub fn to_segment_obs(&self) -> crate::runtime::batch::SegmentObs {
+        let t0 = self.obs.first().map(|o| o.t).unwrap_or(0.0);
+        crate::runtime::batch::SegmentObs {
+            t: self.obs.iter().map(|o| (o.t - t0) as f32).collect(),
+            lat: self.obs.iter().map(|o| o.lat as f32).collect(),
+            lon: self.obs.iter().map(|o| o.lon as f32).collect(),
+            alt: self.obs.iter().map(|o| o.alt_ft as f32).collect(),
+        }
+    }
+}
+
+/// Render an ICAO 24-bit address as the conventional 6-hex-digit string.
+pub fn icao24_hex(icao24: u32) -> String {
+    format!("{icao24:06x}")
+}
+
+/// Parse a 6-hex-digit ICAO 24-bit address.
+pub fn parse_icao24(s: &str) -> Option<u32> {
+    let v = u32::from_str_radix(s.trim(), 16).ok()?;
+    (v <= 0x00FF_FFFF).then_some(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(t: f64) -> Observation {
+        Observation { t, lat: 42.0, lon: -71.0, alt_ft: 1000.0 }
+    }
+
+    #[test]
+    fn normalize_sorts_and_dedups() {
+        let mut tr = Track {
+            icao24: 0xABCDEF,
+            obs: vec![obs(30.0), obs(10.0), obs(10.0), obs(20.0)],
+        };
+        tr.normalize();
+        let ts: Vec<f64> = tr.obs.iter().map(|o| o.t).collect();
+        assert_eq!(ts, vec![10.0, 20.0, 30.0]);
+    }
+
+    #[test]
+    fn icao24_round_trip() {
+        assert_eq!(icao24_hex(0xA1B2C3), "a1b2c3");
+        assert_eq!(parse_icao24("a1b2c3"), Some(0xA1B2C3));
+        assert_eq!(parse_icao24("A1B2C3"), Some(0xA1B2C3));
+        assert_eq!(parse_icao24("1000000"), None); // > 24 bits
+        assert_eq!(parse_icao24("zzz"), None);
+    }
+
+    #[test]
+    fn segment_obs_rebases_time() {
+        let seg = TrackSegment {
+            icao24: 1,
+            obs: vec![obs(100.0), obs(110.0)],
+        };
+        let s = seg.to_segment_obs();
+        assert_eq!(s.t, vec![0.0, 10.0]);
+        assert_eq!(seg.duration(), 10.0);
+    }
+}

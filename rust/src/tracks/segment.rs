@@ -1,0 +1,133 @@
+//! Track segmentation: gap splitting + the paper's short-segment filter.
+//!
+//! §III.A: "Processing includes removing track segments with less than ten
+//! observations". A segment boundary is declared where consecutive
+//! observations are separated by more than `max_gap_s` (surveillance
+//! dropouts, aircraft leaving coverage) — the same rule the open-source
+//! em-processing-opensky pipeline applies before interpolation.
+
+use super::{Track, TrackSegment};
+
+/// Segmentation parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SegmentConfig {
+    /// Split when the inter-observation gap exceeds this (seconds).
+    pub max_gap_s: f64,
+    /// Drop segments with fewer observations than this (paper: 10).
+    pub min_obs: usize,
+    /// Split segments longer than this many observations (keeps rows inside
+    /// the AOT batch's padded N; the paper's tracks are similarly windowed
+    /// for memory limits — 3 GB/slot).
+    pub max_obs: usize,
+}
+
+impl Default for SegmentConfig {
+    fn default() -> Self {
+        SegmentConfig {
+            max_gap_s: 300.0,
+            min_obs: 10,
+            max_obs: 128,
+        }
+    }
+}
+
+/// Split a normalized track into segments per `cfg`.
+pub fn segment_track(track: &Track, cfg: &SegmentConfig) -> Vec<TrackSegment> {
+    let mut segments = Vec::new();
+    let mut current: Vec<super::Observation> = Vec::new();
+    let flush = |buf: &mut Vec<super::Observation>, out: &mut Vec<TrackSegment>| {
+        if buf.len() >= cfg.min_obs {
+            out.push(TrackSegment {
+                icao24: track.icao24,
+                obs: std::mem::take(buf),
+            });
+        } else {
+            buf.clear();
+        }
+    };
+    for &o in &track.obs {
+        if let Some(last) = current.last() {
+            if o.t - last.t > cfg.max_gap_s || current.len() >= cfg.max_obs {
+                flush(&mut current, &mut segments);
+            }
+        }
+        current.push(o);
+    }
+    flush(&mut current, &mut segments);
+    segments
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tracks::Observation;
+
+    fn track(ts: &[f64]) -> Track {
+        Track {
+            icao24: 7,
+            obs: ts
+                .iter()
+                .map(|&t| Observation { t, lat: 42.0, lon: -71.0, alt_ft: 1000.0 })
+                .collect(),
+        }
+    }
+
+    fn cfg(max_gap_s: f64, min_obs: usize, max_obs: usize) -> SegmentConfig {
+        SegmentConfig { max_gap_s, min_obs, max_obs }
+    }
+
+    #[test]
+    fn no_gap_single_segment() {
+        let t = track(&(0..20).map(|i| i as f64 * 10.0).collect::<Vec<_>>());
+        let segs = segment_track(&t, &cfg(300.0, 10, 128));
+        assert_eq!(segs.len(), 1);
+        assert_eq!(segs[0].obs.len(), 20);
+    }
+
+    #[test]
+    fn splits_on_gap() {
+        let mut ts: Vec<f64> = (0..12).map(|i| i as f64 * 10.0).collect();
+        ts.extend((0..12).map(|i| 10_000.0 + i as f64 * 10.0));
+        let segs = segment_track(&track(&ts), &cfg(300.0, 10, 128));
+        assert_eq!(segs.len(), 2);
+    }
+
+    #[test]
+    fn drops_short_segments() {
+        // 5 obs, then gap, then 12 obs: only the second survives (paper's
+        // "<10 observations" rule).
+        let mut ts: Vec<f64> = (0..5).map(|i| i as f64 * 10.0).collect();
+        ts.extend((0..12).map(|i| 10_000.0 + i as f64 * 10.0));
+        let segs = segment_track(&track(&ts), &cfg(300.0, 10, 128));
+        assert_eq!(segs.len(), 1);
+        assert_eq!(segs[0].obs.len(), 12);
+    }
+
+    #[test]
+    fn windows_long_segments() {
+        let ts: Vec<f64> = (0..300).map(|i| i as f64 * 10.0).collect();
+        let segs = segment_track(&track(&ts), &cfg(300.0, 10, 128));
+        assert_eq!(segs.len(), 3); // 128 + 128 + 44
+        assert_eq!(segs[0].obs.len(), 128);
+        assert_eq!(segs[2].obs.len(), 44);
+        let total: usize = segs.iter().map(|s| s.obs.len()).sum();
+        assert_eq!(total, 300);
+    }
+
+    #[test]
+    fn empty_track_no_segments() {
+        assert!(segment_track(&track(&[]), &SegmentConfig::default()).is_empty());
+    }
+
+    #[test]
+    fn all_short_fragments_dropped() {
+        // Gaps after every 3 observations: nothing reaches min_obs.
+        let mut ts = Vec::new();
+        for block in 0..5 {
+            for i in 0..3 {
+                ts.push(block as f64 * 10_000.0 + i as f64 * 10.0);
+            }
+        }
+        assert!(segment_track(&track(&ts), &cfg(300.0, 10, 128)).is_empty());
+    }
+}

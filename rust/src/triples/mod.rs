@@ -1,0 +1,235 @@
+//! Triples-mode job launch (§II.C): configuration + LLSC allocation rules.
+//!
+//! Triples-mode is governed by three parameters — requested compute nodes,
+//! processes per node (NPPN), and threads per process — with explicit
+//! process placement (EPPAC) and *exclusive* node allocation. The rules
+//! encoded here are exactly the paper's:
+//!
+//! * xeon64c nodes have **64 slots** (cores), 3 GB memory per slot;
+//! * NPPN should be **≤ 32 and a multiple of 8**;
+//! * exclusive mode charges `nodes × 64 × slots_per_job` against the user's
+//!   core allocation (4096 default at benchmark time; 8192 by publication —
+//!   the §V follow-up). Requesting 2 slots/job doubles the per-process
+//!   memory to 6 GB but halves the usable processes: "2048 cores with 2
+//!   slots per core correspond to the maximum allocation of 4096 cores";
+//! * at most 64 physical nodes per job.
+//!
+//! This reproduces the feasibility pattern of Tables I-II: every populated
+//! cell satisfies these rules and every "-" cell violates them.
+
+use anyhow::{bail, Result};
+
+/// Slots (cores) per xeon64c node.
+pub const SLOTS_PER_NODE: usize = 64;
+/// Memory per slot, GB.
+pub const GB_PER_SLOT: f64 = 3.0;
+/// Default user core allocation at benchmark time (§II.C).
+pub const DEFAULT_ALLOCATION: usize = 4096;
+/// Upgraded allocation used by the §V follow-up.
+pub const UPGRADED_ALLOCATION: usize = 8192;
+/// Physical node ceiling per job.
+pub const MAX_NODES: usize = 64;
+
+/// A triples-mode launch configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TriplesConfig {
+    /// Requested compute nodes.
+    pub nodes: usize,
+    /// Processes per node.
+    pub nppn: usize,
+    /// Threads per process (the paper fixes this per experiment).
+    pub threads: usize,
+    /// Slots charged per process (1 → 3 GB, 2 → 6 GB).
+    pub slots_per_job: usize,
+    /// User core allocation limit.
+    pub allocation: usize,
+}
+
+impl TriplesConfig {
+    /// The paper's Table I/II configuration family: 2 slots/job (6 GB) on
+    /// the 4096-core allocation. `cores` is the table's "allocated compute
+    /// cores" column = processes × slots_per_job.
+    pub fn table_config(cores: usize, nppn: usize) -> Result<Self> {
+        let slots_per_job = 2;
+        if cores % slots_per_job != 0 {
+            bail!("cores {cores} not divisible by slots_per_job");
+        }
+        let processes = cores / slots_per_job;
+        if processes % nppn != 0 {
+            bail!("processes {processes} not divisible by NPPN {nppn}");
+        }
+        let cfg = TriplesConfig {
+            nodes: processes / nppn,
+            nppn,
+            threads: 1,
+            slots_per_job,
+            allocation: DEFAULT_ALLOCATION,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// The §V follow-up configuration: 128 nodes, NPPN 8, 2 threads,
+    /// single 3 GB slot, on the upgraded 8192-core allocation.
+    pub fn followup_config() -> Self {
+        TriplesConfig {
+            nodes: 128,
+            nppn: 8,
+            threads: 2,
+            slots_per_job: 1,
+            allocation: UPGRADED_ALLOCATION,
+        }
+    }
+
+    /// Total processes launched.
+    pub fn processes(&self) -> usize {
+        self.nodes * self.nppn
+    }
+
+    /// Self-scheduling worker count (one process is the manager).
+    pub fn workers(&self) -> usize {
+        self.processes().saturating_sub(1)
+    }
+
+    /// Cores charged against the allocation (exclusive mode).
+    pub fn charged_cores(&self) -> usize {
+        self.nodes * SLOTS_PER_NODE * self.slots_per_job
+    }
+
+    /// Memory available to each process, GB.
+    pub fn gb_per_process(&self) -> f64 {
+        GB_PER_SLOT * self.slots_per_job as f64
+    }
+
+    /// Validate against the LLSC rules. Returns a descriptive error for
+    /// infeasible configurations (the "-" cells of Tables I-II).
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes == 0 || self.nppn == 0 || self.threads == 0 {
+            bail!("nodes/nppn/threads must be positive");
+        }
+        if self.nodes > MAX_NODES && self.allocation <= DEFAULT_ALLOCATION {
+            bail!("{} nodes exceeds the {MAX_NODES}-node job ceiling", self.nodes);
+        }
+        if self.nppn > 32 {
+            bail!("NPPN {} exceeds the recommended max of 32", self.nppn);
+        }
+        if self.nppn % 8 != 0 {
+            bail!("NPPN {} is not a multiple of 8 (xeon64c memory constraint)", self.nppn);
+        }
+        if self.nppn * self.threads > SLOTS_PER_NODE {
+            bail!(
+                "NPPN {} x threads {} oversubscribes the {SLOTS_PER_NODE}-core node",
+                self.nppn,
+                self.threads
+            );
+        }
+        let charged = self.charged_cores();
+        if charged > self.allocation {
+            bail!(
+                "exclusive mode charges {charged} cores ({} nodes x {SLOTS_PER_NODE} \
+                 x {} slots) > allocation {}",
+                self.nodes,
+                self.slots_per_job,
+                self.allocation
+            );
+        }
+        if self.processes() < 2 {
+            bail!("need at least 2 processes (manager + 1 worker)");
+        }
+        Ok(())
+    }
+}
+
+/// The Table I/II sweep: NPPN rows x core columns, in paper order. Returns
+/// `(cores, nppn, Result<TriplesConfig>)` for all 12 cells — infeasible
+/// cells carry the validation error (rendered as "-").
+pub fn table_sweep() -> Vec<(usize, usize, Result<TriplesConfig>)> {
+    let mut out = Vec::new();
+    for &nppn in &[32usize, 16, 8] {
+        for &cores in &[2048usize, 1024, 512, 256] {
+            out.push((cores, nppn, TriplesConfig::table_config(cores, nppn)));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_feasibility_pattern() {
+        // Populated cells of Tables I-II validate; "-" cells do not.
+        let feasible = [
+            (2048, 32),
+            (1024, 32),
+            (512, 32),
+            (256, 32),
+            (1024, 16),
+            (512, 16),
+            (256, 16),
+            (512, 8),
+            (256, 8),
+        ];
+        let infeasible = [(2048, 16), (2048, 8), (1024, 8)];
+        for (cores, nppn) in feasible {
+            assert!(
+                TriplesConfig::table_config(cores, nppn).is_ok(),
+                "({cores},{nppn}) should be feasible"
+            );
+        }
+        for (cores, nppn) in infeasible {
+            assert!(
+                TriplesConfig::table_config(cores, nppn).is_err(),
+                "({cores},{nppn}) should be infeasible"
+            );
+        }
+    }
+
+    #[test]
+    fn worker_counts_match_paper() {
+        // Fig 5-6: "one manager and 255 workers" at the 512-core column.
+        let cfg = TriplesConfig::table_config(512, 32).unwrap();
+        assert_eq!(cfg.processes(), 256);
+        assert_eq!(cfg.workers(), 255);
+        // Table I headline cell: 2048 cores, NPPN 32 -> 1024 processes.
+        let big = TriplesConfig::table_config(2048, 32).unwrap();
+        assert_eq!(big.processes(), 1024);
+        assert_eq!(big.nodes, 32);
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let cfg = TriplesConfig::table_config(512, 16).unwrap();
+        assert_eq!(cfg.gb_per_process(), 6.0);
+        assert_eq!(cfg.charged_cores(), 16 * 64 * 2);
+        let f = TriplesConfig::followup_config();
+        assert_eq!(f.gb_per_process(), 3.0);
+        assert!(f.validate().is_ok());
+        assert_eq!(f.processes(), 1024);
+    }
+
+    #[test]
+    fn rule_violations_are_caught() {
+        let base = TriplesConfig {
+            nodes: 4,
+            nppn: 16,
+            threads: 1,
+            slots_per_job: 2,
+            allocation: DEFAULT_ALLOCATION,
+        };
+        assert!(base.validate().is_ok());
+        assert!(TriplesConfig { nppn: 40, ..base }.validate().is_err()); // > 32
+        assert!(TriplesConfig { nppn: 12, ..base }.validate().is_err()); // not x8
+        assert!(TriplesConfig { threads: 9, nppn: 8, ..base }.validate().is_err()); // 72 > 64
+        assert!(TriplesConfig { nodes: 100, ..base }.validate().is_err()); // > 64 nodes
+        assert!(TriplesConfig { nodes: 0, ..base }.validate().is_err());
+    }
+
+    #[test]
+    fn sweep_has_12_cells_9_feasible() {
+        let sweep = table_sweep();
+        assert_eq!(sweep.len(), 12);
+        assert_eq!(sweep.iter().filter(|(_, _, r)| r.is_ok()).count(), 9);
+    }
+}

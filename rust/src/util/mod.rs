@@ -1,0 +1,12 @@
+//! Small shared utilities: deterministic PRNG, statistics, humanized units.
+//!
+//! The offline build environment provides no `rand`/`statrs`; everything the
+//! simulator and dataset generators need is implemented here and unit-tested.
+
+pub mod rng;
+pub mod stats;
+pub mod units;
+
+pub use rng::Rng;
+pub use stats::{mean, median, percentile, stddev};
+pub use units::{human_bytes, human_duration};

@@ -1,0 +1,52 @@
+//! Humanized units for reports (bytes, durations in paper style).
+
+/// Render a byte count with binary-ish decimal units matching the paper's
+/// usage ("714 Gigabytes").
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1000.0 && u < UNITS.len() - 1 {
+        v /= 1000.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// Render seconds as the most natural of `s` / `min` / `h` / `days`,
+/// matching how the paper mixes units ("5640 s", "13.1 hours", "7 days").
+pub fn human_duration(secs: f64) -> String {
+    if secs < 120.0 {
+        format!("{secs:.1} s")
+    } else if secs < 7200.0 {
+        format!("{:.1} min", secs / 60.0)
+    } else if secs < 172_800.0 {
+        format!("{:.2} h", secs / 3600.0)
+    } else {
+        format!("{:.2} days", secs / 86_400.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(1500), "1.5 KB");
+        assert_eq!(human_bytes(714_000_000_000), "714.0 GB");
+    }
+
+    #[test]
+    fn duration_units() {
+        assert_eq!(human_duration(30.0), "30.0 s");
+        assert_eq!(human_duration(5640.0), "94.0 min");
+        assert_eq!(human_duration(13.1 * 3600.0), "13.10 h");
+        assert_eq!(human_duration(7.0 * 86_400.0), "7.00 days");
+    }
+}

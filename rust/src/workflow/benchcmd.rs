@@ -1,0 +1,444 @@
+//! Paper-experiment regeneration (every table and figure, DESIGN.md §4).
+//!
+//! Each `run_*` function reproduces one table/figure on the calibrated
+//! simulator and returns a printable report with the paper's numbers
+//! alongside. `emproc bench <exp>` and the `cargo bench` harnesses both
+//! call these, so EXPERIMENTS.md is regenerable from either entry point.
+
+use crate::cli::ArgParser;
+use crate::dist::{order_tasks, Distribution, Task, TaskOrder};
+use crate::metrics::{render_table, Ecdf, Histogram};
+use crate::selfsched::{AllocMode, SchedTrace, SelfSchedConfig};
+use crate::simcluster::{CostModel, SimConfig, Simulator, Stage};
+use crate::triples::TriplesConfig;
+use crate::util::{human_duration, Rng};
+use anyhow::Result;
+use std::fmt::Write as _;
+
+/// Canonical seed for every experiment (results in EXPERIMENTS.md).
+pub const SEED: u64 = 42;
+
+fn monday_tasks() -> Vec<Task> {
+    let mut rng = Rng::new(SEED);
+    Task::from_manifest(&crate::datasets::monday::manifest(&mut rng))
+}
+
+fn sim_organize(tasks: &[Task], ordered: &[usize], cores: usize, nppn: usize) -> SchedTrace {
+    let cfg = SimConfig {
+        triples: TriplesConfig::table_config(cores, nppn).expect("feasible cell"),
+        alloc: AllocMode::SelfSched(SelfSchedConfig::default()),
+        stage: Stage::Organize,
+        cost: CostModel::paper_calibrated(),
+    };
+    Simulator::run(&cfg, tasks, ordered)
+}
+
+/// Tables I and II: job time to organize dataset #1 over the NPPN × cores
+/// sweep, for one task organization.
+pub fn run_table(order: TaskOrder, title: &str, paper: &[[f64; 4]; 3]) -> String {
+    let tasks = monday_tasks();
+    let ordered = order_tasks(&tasks, order);
+    let cores_cols = [2048usize, 1024, 512, 256];
+    let nppn_rows = [32usize, 16, 8];
+    let mut rows = Vec::new();
+    for (ri, &nppn) in nppn_rows.iter().enumerate() {
+        let mut row = vec![format!("{nppn}")];
+        for (ci, &cores) in cores_cols.iter().enumerate() {
+            match TriplesConfig::table_config(cores, nppn) {
+                Ok(_) => {
+                    let t = sim_organize(&tasks, &ordered, cores, nppn).job_time;
+                    row.push(format!("{:.0} ({:.0})", t, paper[ri][ci]));
+                }
+                Err(_) => row.push("- (-)".into()),
+            }
+        }
+        rows.push(row);
+    }
+    let headers: Vec<String> = std::iter::once("NPPN".to_string())
+        .chain(cores_cols.iter().map(|c| format!("{c} cores sim (paper)")))
+        .collect();
+    render_table(title, &headers, &rows)
+}
+
+/// Paper values for Table I (chronological).
+pub const PAPER_TABLE1: [[f64; 4]; 3] = [
+    [5640.0, 5944.0, 7493.0, 11944.0],
+    [f64::NAN, 5963.0, 7157.0, 11860.0],
+    [f64::NAN, f64::NAN, 6989.0, 11860.0],
+];
+/// Paper values for Table II (largest first).
+pub const PAPER_TABLE2: [[f64; 4]; 3] = [
+    [5456.0, 5704.0, 6608.0, 11015.0],
+    [f64::NAN, 5568.0, 6330.0, 10428.0],
+    [f64::NAN, f64::NAN, 6171.0, 10428.0],
+];
+
+/// Fig 3: file-size histograms of both datasets (10 MB bins).
+pub fn run_fig3() -> String {
+    let mut rng = Rng::new(SEED);
+    let monday = crate::datasets::monday::manifest(&mut rng);
+    let aero = crate::datasets::aerodrome::manifest(&mut rng);
+    let hm = Histogram::new(10.0, monday.sizes_mb());
+    let ha = Histogram::new(10.0, aero.sizes_mb());
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "Fig 3 — file-size distributions (10 MB bins)\n\
+         dataset #1 Mondays   : {} files, {} (paper: 2,425 / 714 GB); \
+         shape: {} (paper: Gaussian/diurnal), mode bin {}\n\
+         dataset #2 Aerodromes: {} files, {} (paper: 136,884 / 847 GB); \
+         shape: {} (paper: sloping), mode bin {}\n",
+        monday.len(),
+        crate::util::human_bytes(monday.total_bytes()),
+        if hm.is_sloping() { "sloping" } else { "peaked" },
+        hm.mode_bin(),
+        aero.len(),
+        crate::util::human_bytes(aero.total_bytes()),
+        if ha.is_sloping() { "sloping" } else { "peaked" },
+        ha.mode_bin(),
+    );
+    let _ = writeln!(s, "-- dataset #1 histogram --\n{}", hm.render(40, " MB"));
+    let _ = writeln!(s, "-- dataset #2 histogram (first bins) --");
+    let compact = Histogram { counts: ha.counts[..30.min(ha.counts.len())].to_vec(), ..ha };
+    let _ = writeln!(s, "{}", compact.render(40, " MB"));
+    s
+}
+
+/// Fig 4: job time vs cores for both orderings (NPPN 32 + the crossover).
+pub fn run_fig4() -> String {
+    let tasks = monday_tasks();
+    let chrono = order_tasks(&tasks, TaskOrder::Chronological);
+    let size = order_tasks(&tasks, TaskOrder::LargestFirst);
+    let mut rows = Vec::new();
+    for &cores in &[256usize, 512, 1024, 2048] {
+        let c = sim_organize(&tasks, &chrono, cores, 32).job_time;
+        let s = sim_organize(&tasks, &size, cores, 32).job_time;
+        rows.push(vec![
+            format!("{cores}"),
+            format!("{c:.0}"),
+            format!("{s:.0}"),
+            format!("{:.1}%", (c - s) / c * 100.0),
+        ]);
+    }
+    let mut out = render_table(
+        "Fig 4 — job time vs allocated cores (NPPN=32)",
+        &["cores".into(), "chrono s".into(), "size s".into(), "size gain".into()],
+        &rows,
+    );
+    let big_chrono = sim_organize(&tasks, &chrono, 2048, 32).job_time;
+    let half_size = sim_organize(&tasks, &size, 1024, 16).job_time;
+    let _ = writeln!(
+        out,
+        "crossover: size/1024/NPPN16 = {half_size:.0}s vs chrono/2048/NPPN32 = \
+         {big_chrono:.0}s -> {} (paper: 5568 < 5640, 50% fewer nodes for equal time)",
+        if half_size < big_chrono { "REPRODUCED" } else { "NOT reproduced" }
+    );
+    out
+}
+
+/// Figs 5-6: worker-time distributions at 512 cores (1 manager + 255
+/// workers) for both orderings, NPPN ∈ {32, 16, 8}.
+pub fn run_fig56() -> String {
+    let tasks = monday_tasks();
+    let mut s = String::new();
+    for (fig, order, name) in [
+        ("Fig 5", TaskOrder::Chronological, "chronological"),
+        ("Fig 6", TaskOrder::LargestFirst, "largest-first"),
+    ] {
+        let ordered = order_tasks(&tasks, order);
+        let _ = writeln!(s, "{fig} — worker time distribution, {name} (255 workers)");
+        for &nppn in &[32usize, 16, 8] {
+            let tr = sim_organize(&tasks, &ordered, 512, nppn);
+            let r = tr.report();
+            let _ = writeln!(
+                s,
+                "  NPPN {nppn:2}: median {:>7.0}s  span {:>6.0}s  sd {:>6.0}s",
+                r.median(),
+                r.span(),
+                r.stddev()
+            );
+        }
+    }
+    // The paper's cross-figure observations.
+    let chrono = order_tasks(&tasks, TaskOrder::Chronological);
+    let size = order_tasks(&tasks, TaskOrder::LargestFirst);
+    let rc = sim_organize(&tasks, &chrono, 512, 32).report();
+    let rs = sim_organize(&tasks, &size, 512, 32).report();
+    let _ = writeln!(
+        s,
+        "size-org vs chrono @NPPN32: span {:.0}s -> {:.0}s, sd {:.0}s -> {:.0}s \
+         (paper: size-org reduces variance and the fastest-slowest span)",
+        rc.span(),
+        rs.span(),
+        rc.stddev(),
+        rs.stddev()
+    );
+    // vs the previous research's batch/block WITHOUT triples-mode: the
+    // pre-triples launcher packed all 64 slots per node (NPPN 64, fewer
+    // Lustre client nodes for the same process count) — paper: switching
+    // to self-scheduling + triples-mode cut the median worker time 14%.
+    let cfg_block = SimConfig {
+        triples: TriplesConfig {
+            nodes: 4,
+            nppn: 64, // non-triples default packing; bypasses the NPPN<=32 rule
+            threads: 1,
+            slots_per_job: 2,
+            allocation: crate::triples::DEFAULT_ALLOCATION,
+        },
+        alloc: AllocMode::Batch(Distribution::Block),
+        stage: Stage::Organize,
+        cost: CostModel::paper_calibrated(),
+    };
+    let rb = Simulator::run(&cfg_block, &tasks, &chrono).report();
+    let delta = (rs.median() - rb.median()) / rb.median() * 100.0;
+    let _ = writeln!(
+        s,
+        "median worker, batch/block pre-triples (NPPN64) vs self-sched+triples: \
+         {:.0}s -> {:.0}s ({delta:+.0}%; paper: -14%)",
+        rb.median(),
+        rs.median()
+    );
+    s
+}
+
+/// Fig 7: job time vs tasks-per-message (64 nodes, NPPN 8, 1 thread,
+/// cyclic task order).
+pub fn run_fig7() -> String {
+    let tasks = monday_tasks();
+    // "cyclic task distribution" for the message experiment: tasks are
+    // taken in cyclic-interleaved order.
+    let base: Vec<usize> = (0..tasks.len()).collect();
+    let interleaved: Vec<usize> = {
+        let queues = crate::dist::distribute(&base, 511, Distribution::Cyclic);
+        let mut v = Vec::with_capacity(base.len());
+        let maxlen = queues.iter().map(Vec::len).max().unwrap_or(0);
+        for i in 0..maxlen {
+            for q in &queues {
+                if let Some(&t) = q.get(i) {
+                    v.push(t);
+                }
+            }
+        }
+        v
+    };
+    let mut rows = Vec::new();
+    for &k in &[1usize, 2, 4, 8, 16, 32] {
+        let cfg = SimConfig {
+            triples: TriplesConfig {
+                nodes: 64,
+                nppn: 8,
+                threads: 1,
+                slots_per_job: 1,
+                allocation: crate::triples::UPGRADED_ALLOCATION,
+            },
+            alloc: AllocMode::SelfSched(SelfSchedConfig {
+                tasks_per_message: k,
+                ..Default::default()
+            }),
+            stage: Stage::Organize,
+            cost: CostModel::paper_calibrated(),
+        };
+        let tr = Simulator::run(&cfg, &tasks, &interleaved);
+        rows.push(vec![
+            format!("{k}"),
+            format!("{:.0}", tr.job_time),
+            format!("{}", tr.messages_sent),
+        ]);
+    }
+    render_table(
+        "Fig 7 — job time vs tasks per message (64 nodes, NPPN 8, cyclic; \
+         paper: monotone degradation)",
+        &["tasks/msg".into(), "job s".into(), "messages".into()],
+        &rows,
+    )
+}
+
+/// §IV.B: archiving with block vs cyclic distribution on filename-sorted,
+/// fleet-correlated per-aircraft tasks.
+pub fn run_archiving() -> String {
+    let mut rng = Rng::new(SEED);
+    // Predecessor-dataset regime: per-aircraft-bucket archives where a few
+    // contiguous commercial-fleet registration blocks hold ~95% of bytes.
+    let p = crate::datasets::processing::ArchiveWorkload::default();
+    let tasks = crate::datasets::processing::archive_tasks(&mut rng, &p);
+    let ordered = order_tasks(&tasks, TaskOrder::FilenameSorted);
+    let triples = TriplesConfig::table_config(2048, 32).unwrap();
+    let run = |alloc: AllocMode| {
+        let cfg = SimConfig {
+            triples,
+            alloc,
+            stage: Stage::Archive,
+            cost: CostModel::paper_calibrated(),
+        };
+        Simulator::run(&cfg, &tasks, &ordered)
+    };
+    let block = run(AllocMode::Batch(Distribution::Block));
+    let cyclic = run(AllocMode::Batch(Distribution::Cyclic));
+    let ss = run(AllocMode::SelfSched(SelfSchedConfig::default()));
+    // "2% of parallel processes account for more than 95% of the total job
+    // time" — busy-time concentration under block.
+    let mut busy = block.worker_busy.clone();
+    busy.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let top2 = (busy.len() as f64 * 0.02).ceil() as usize;
+    let top_share: f64 =
+        busy[..top2].iter().sum::<f64>() / busy.iter().sum::<f64>().max(1e-9);
+    let reduction = (block.job_time - cyclic.job_time) / block.job_time * 100.0;
+    format!(
+        "§IV.B — archiving, filename-sorted per-aircraft tasks (100k archives)\n\
+         block  : job {} ({:.0}s); top-2% workers hold {:.0}% of busy time \
+         (paper: 2% of processes ≈ 95% of job time; days to complete)\n\
+         cyclic : job {} ({:.0}s)  -> {reduction:.1}% reduction \
+         (paper: >90% reduction; hours to complete)\n\
+         selfsched: job {} ({:.0}s)\n",
+        human_duration(block.job_time),
+        block.job_time,
+        top_share * 100.0,
+        human_duration(cyclic.job_time),
+        cyclic.job_time,
+        human_duration(ss.job_time),
+        ss.job_time,
+    )
+}
+
+/// Fig 8 + §IV.C: processing dataset #2 (64 nodes, NPPN 16, random order)
+/// plus the batch/block >7-day baseline.
+pub fn run_fig8() -> String {
+    let mut rng = Rng::new(SEED);
+    let p = crate::datasets::processing::OpenSkyProcessing::default();
+    let tasks = crate::datasets::processing::opensky_tasks(&mut rng, &p);
+    let triples = TriplesConfig {
+        nodes: 64,
+        nppn: 16,
+        threads: 1,
+        slots_per_job: 2,
+        allocation: 4096,
+    };
+    let ordered = order_tasks(&tasks, TaskOrder::Random(SEED));
+    let cfg = SimConfig {
+        triples,
+        alloc: AllocMode::SelfSched(SelfSchedConfig::default()),
+        stage: Stage::Process,
+        cost: CostModel::paper_calibrated(),
+    };
+    let tr = Simulator::run(&cfg, &tasks, &ordered);
+    let r = tr.report();
+    let h = |x: f64| x / 3600.0;
+    let baseline_cfg = SimConfig {
+        alloc: AllocMode::Batch(Distribution::Block),
+        ..cfg.clone()
+    };
+    let sorted = order_tasks(&tasks, TaskOrder::FilenameSorted);
+    let baseline = Simulator::run(&baseline_cfg, &tasks, &sorted);
+    format!(
+        "Fig 8 — worker time, processing dataset #2 (random org, self-sched, \
+         1023 workers)\n\
+         median {:.1} h (paper 13.1) | within 18 h: {:.1}% (paper 99.1) | \
+         within 24 h: {:.1}% (paper 99.7) | max {:.1} h (paper 29.6) | \
+         span {:.1} h (paper 17.3)\n\
+         §IV.C baseline — batch/block, filename-sorted: job {:.1} days \
+         (paper: > 7 days)\n",
+        h(r.median()),
+        r.frac_within(18.0 * 3600.0) * 100.0,
+        r.frac_within(24.0 * 3600.0) * 100.0,
+        h(tr.worker_times.iter().cloned().fold(0.0, f64::max)),
+        h(r.span()),
+        baseline.job_time / 86_400.0,
+    )
+}
+
+/// Fig 9 + §V: the radar dataset on the follow-up configuration
+/// (128 nodes, NPPN 8, 2 threads, 300 tasks/message).
+pub fn run_fig9(scale: f64) -> String {
+    let mut rng = Rng::new(SEED);
+    let tasks = crate::datasets::processing::radar_tasks(&mut rng, scale);
+    let ordered = order_tasks(&tasks, TaskOrder::Random(SEED));
+    let cfg = SimConfig {
+        triples: TriplesConfig::followup_config(),
+        alloc: AllocMode::SelfSched(SelfSchedConfig::radar()),
+        stage: Stage::Process,
+        cost: CostModel::paper_calibrated(),
+    };
+    let tr = Simulator::run(&cfg, &tasks, &ordered);
+    let r = tr.report();
+    let e = Ecdf::new(tr.worker_times.clone());
+    let mut s = format!(
+        "Fig 9 — radar dataset worker time eCDF (scale {scale}; {} tasks, \
+         {} messages{})\n\
+         median {:.2} h (paper 24.34 at full scale) | span {:.2} h (paper 1.12) \
+         | span/median {:.1}% (paper 4.6%)\n",
+        tasks.len(),
+        tr.messages_sent,
+        if scale == 1.0 { ", paper 43,969" } else { "" },
+        r.median() / 3600.0,
+        r.span() / 3600.0,
+        r.span() / r.median().max(1e-9) * 100.0,
+    );
+    let _ = writeln!(s, "{}", e.render(10, " s"));
+    s
+}
+
+/// §VI: serial-equivalent estimate ("without HPC resources... thousands of
+/// days").
+pub fn run_serial() -> String {
+    let tasks = monday_tasks();
+    let cost = CostModel::paper_calibrated();
+    let ctx = crate::simcluster::ContentionCtx { active: 1, nodes: 1, nppn: 1, threads: 1 };
+    let organize_s: f64 = tasks
+        .iter()
+        .map(|t| cost.task_duration(Stage::Organize, t, &ctx))
+        .sum();
+    let mut rng = Rng::new(SEED);
+    let p = crate::datasets::processing::OpenSkyProcessing::default();
+    let ptasks = crate::datasets::processing::opensky_tasks(&mut rng, &p);
+    let process_s: f64 = ptasks
+        .iter()
+        .map(|t| cost.task_duration(Stage::Process, t, &ctx))
+        .sum();
+    let rtasks = crate::datasets::processing::radar_tasks(&mut rng, 1.0);
+    let radar_s: f64 = rtasks
+        .iter()
+        .map(|t| cost.task_duration(Stage::Process, t, &ctx))
+        .sum();
+    format!(
+        "§VI — serial-equivalent runtime on a single core:\n\
+         organize dataset #1: {:.0} days; process dataset #2: {:.0} days; \
+         organize+process radar dataset: {:.0} days; \
+         total {:.0} days (paper: \"thousands of days... impracticable\")\n",
+        organize_s / 86_400.0,
+        process_s / 86_400.0,
+        radar_s / 86_400.0,
+        (organize_s + process_s + radar_s) / 86_400.0,
+    )
+}
+
+/// Dispatch for `emproc bench <exp>`.
+pub fn run(which: &str, a: &ArgParser) -> Result<()> {
+    let scale = a.get_num("scale", 0.1f64)?;
+    let all = which == "all";
+    let mut any = false;
+    let mut emit = |name: &str, f: &dyn Fn() -> String| {
+        if all || which == name {
+            println!("{}", f());
+            any = true;
+        }
+    };
+    emit("table1", &|| {
+        run_table(TaskOrder::Chronological, "TABLE I — organize DS#1, chronological, self-sched: sim (paper) seconds", &PAPER_TABLE1)
+    });
+    emit("table2", &|| {
+        run_table(TaskOrder::LargestFirst, "TABLE II — organize DS#1, largest-first, self-sched: sim (paper) seconds", &PAPER_TABLE2)
+    });
+    emit("fig3", &run_fig3);
+    emit("fig4", &run_fig4);
+    emit("fig5", &run_fig56);
+    emit("fig6", &run_fig56);
+    emit("fig7", &run_fig7);
+    emit("archiving", &run_archiving);
+    emit("fig8", &run_fig8);
+    emit("fig9", &|| run_fig9(scale));
+    emit("serial", &run_serial);
+    if !any {
+        anyhow::bail!("unknown experiment '{which}' (try `emproc help`)");
+    }
+    Ok(())
+}

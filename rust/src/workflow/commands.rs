@@ -1,0 +1,198 @@
+//! CLI subcommand implementations (thin wrappers over the library).
+
+use crate::cli::ArgParser;
+use crate::dist::TaskOrder;
+use crate::registry::Registry;
+use crate::selfsched::{AllocMode, SelfSchedConfig};
+use crate::util::Rng;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+fn parse_order(s: &str) -> Result<TaskOrder> {
+    Ok(match s {
+        "chrono" | "chronological" => TaskOrder::Chronological,
+        "size" | "largest" => TaskOrder::LargestFirst,
+        "random" => TaskOrder::Random(1),
+        "filename" => TaskOrder::FilenameSorted,
+        other => bail!("unknown order '{other}' (chrono|size|random|filename)"),
+    })
+}
+
+/// `emproc generate <monday|aerodrome|radar> --out DIR [--scale F] [--seed N]`
+pub fn generate(a: &ArgParser) -> Result<()> {
+    let kind = a.pos(0).context("generate needs a dataset kind")?;
+    let out = PathBuf::from(a.required("out")?);
+    let seed = a.get_num("seed", 42u64)?;
+    let scale = a.get_num("scale", 0.001f64)?;
+    let mut rng = Rng::new(seed);
+    match kind {
+        "monday" | "aerodrome" => {
+            let registry = crate::registry::generate(&mut rng, 200);
+            let manifest = match kind {
+                "monday" => crate::datasets::monday::mini_manifest(
+                    &mut rng,
+                    (104.0 * scale * 10.0).max(1.0) as u32,
+                    (700e6 * scale) as u64,
+                ),
+                _ => crate::datasets::aerodrome::mini_manifest(
+                    &mut rng,
+                    (196.0 * scale * 10.0).max(1.0) as u32,
+                    (100e6 * scale) as u64,
+                ),
+            };
+            let paths =
+                crate::datasets::write_real_corpus(&manifest, &registry, &out, 1.0, &mut rng)?;
+            std::fs::write(out.join("registry.csv"), crate::registry::write_registry(&registry))?;
+            println!(
+                "wrote {} files + registry.csv to {} ({})",
+                paths.len(),
+                out.display(),
+                crate::util::human_bytes(manifest.total_bytes())
+            );
+        }
+        "radar" => {
+            let manifest = crate::datasets::radar::manifest(&mut rng, scale * 0.01);
+            std::fs::create_dir_all(&out)?;
+            let mut text = String::from("name,size,day,radar\n");
+            for e in &manifest.entries {
+                use std::fmt::Write as _;
+                let _ = writeln!(text, "{},{},{},{}", e.name, e.size, e.day, e.group);
+            }
+            std::fs::write(out.join("radar_manifest.csv"), text)?;
+            println!(
+                "wrote radar manifest with {} tasks to {}",
+                manifest.len(),
+                out.display()
+            );
+        }
+        other => bail!("unknown dataset '{other}'"),
+    }
+    Ok(())
+}
+
+fn load_registry(data_dir: &std::path::Path) -> Result<Registry> {
+    let text = std::fs::read_to_string(data_dir.join("registry.csv"))
+        .context("registry.csv not found in --data dir (run `emproc generate` first)")?;
+    let mut reg = Registry::default();
+    reg.merge(crate::registry::parse_registry(&text)?);
+    Ok(reg)
+}
+
+/// `emproc organize --data DIR --out DIR [--workers N] [--order O]`
+pub fn organize(a: &ArgParser) -> Result<()> {
+    let data = PathBuf::from(a.required("data")?);
+    let out = PathBuf::from(a.required("out")?);
+    let workers = a.get_num("workers", 4usize)?;
+    let order = parse_order(a.get_or("order", "size"))?;
+    let registry = load_registry(&data)?;
+    let outcome = crate::workflow::stage1::run(
+        &crate::workflow::stage1::OrganizeJob { data_dir: data, out_dir: out, year: 2019 },
+        &registry,
+        workers,
+        order,
+        SelfSchedConfig::default(),
+    )?;
+    println!(
+        "organized {} files ({} obs): {}",
+        outcome.files_written,
+        outcome.observations,
+        outcome.trace.report().summary()
+    );
+    Ok(())
+}
+
+/// `emproc archive --data DIR --out DIR [--dist block|cyclic] [--workers N]`
+pub fn archive(a: &ArgParser) -> Result<()> {
+    let data = PathBuf::from(a.required("data")?);
+    let out = PathBuf::from(a.required("out")?);
+    let workers = a.get_num("workers", 4usize)?;
+    let alloc = match a.get_or("dist", "cyclic") {
+        "block" => AllocMode::Batch(crate::dist::Distribution::Block),
+        "cyclic" => AllocMode::Batch(crate::dist::Distribution::Cyclic),
+        "selfsched" => AllocMode::SelfSched(SelfSchedConfig::default()),
+        other => bail!("unknown distribution '{other}'"),
+    };
+    let outcome = crate::workflow::stage2::run(
+        &crate::workflow::stage2::ArchiveJob { organized_dir: data, archive_dir: out },
+        workers,
+        alloc,
+    )?;
+    println!(
+        "archived {} dirs, {} in, {} Lustre blocks saved: {}",
+        outcome.archives,
+        crate::util::human_bytes(outcome.bytes_in),
+        outcome.lustre_blocks_saved,
+        outcome.trace.report().summary()
+    );
+    Ok(())
+}
+
+/// `emproc process --data DIR --out DIR [--workers N] [--artifacts DIR]`
+pub fn process(a: &ArgParser) -> Result<()> {
+    let data = PathBuf::from(a.required("data")?);
+    let out = PathBuf::from(a.required("out")?);
+    let workers = a.get_num("workers", 4usize)?;
+    let artifacts = a
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(crate::runtime::TrackModel::default_dir);
+    let outcome = crate::workflow::stage3::run(
+        &crate::workflow::stage3::ProcessJob {
+            archive_dir: data,
+            out_dir: out,
+            artifact_dir: artifacts,
+            segment: crate::tracks::SegmentConfig::default(),
+        },
+        workers,
+        TaskOrder::Random(1),
+        SelfSchedConfig::default(),
+    )?;
+    println!(
+        "processed {} archives -> {} segments ({} PJRT batches, {:.3}s in PJRT): {}",
+        outcome.archives,
+        outcome.segments,
+        outcome.batches,
+        outcome.pjrt_seconds,
+        outcome.trace.report().summary()
+    );
+    Ok(())
+}
+
+/// `emproc pipeline --out DIR [--scale F] [--workers N] [--seed N]`
+pub fn pipeline(a: &ArgParser) -> Result<()> {
+    let out = PathBuf::from(a.required("out")?);
+    let scale = a.get_num("scale", 1.0f64)?;
+    let mut cfg = crate::workflow::PipelineConfig::small(out);
+    cfg.workers = a.get_num("workers", cfg.workers)?;
+    cfg.seed = a.get_num("seed", cfg.seed)?;
+    cfg.days = ((cfg.days as f64 * scale).ceil() as u32).max(1);
+    cfg.max_file_bytes = (cfg.max_file_bytes as f64 * scale) as u64 + 1_000;
+    let report = crate::workflow::Pipeline::new(cfg).generate_and_run()?;
+    print!("{}", report.render());
+    Ok(())
+}
+
+/// `emproc queries --out FILE [--aerodromes N] [--seed N]`
+pub fn queries(a: &ArgParser) -> Result<()> {
+    let out = PathBuf::from(a.required("out")?);
+    let n = a.get_num("aerodromes", 120usize)?;
+    let seed = a.get_num("seed", 42u64)?;
+    let mut rng = Rng::new(seed);
+    let map = crate::airspace::generate_aerodromes(&mut rng, n);
+    let cfg = crate::queries::QueryGenConfig::default();
+    let boxes = crate::queries::generate_boxes(&map, &crate::dem::Dem, &cfg);
+    let queries = crate::queries::expand_days(&boxes, 196);
+    if let Some(parent) = out.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(&out, crate::queries::boxes_to_csv(&boxes))?;
+    println!(
+        "{} aerodromes -> {} bounding boxes -> {} queries over 196 days \
+         (paper: 695 boxes, 136,884 queries); wrote {}",
+        n,
+        boxes.len(),
+        queries.len(),
+        out.display()
+    );
+    Ok(())
+}

@@ -1,0 +1,22 @@
+//! The three-stage processing workflow (§III.A), executable for real.
+//!
+//! 1. **Organize** — parse raw observation files, group by aircraft using
+//!    the registry, write into the 4-tier hierarchy;
+//! 2. **Archive** — zip every bottom-tier directory into a replicated
+//!    3-tier tree (Lustre small-file mitigation);
+//! 3. **Process** — read archives, normalize + segment tracks, batch the
+//!    segments, and execute the AOT track model (Pallas interpolation +
+//!    AGL) via PJRT. Python never runs here.
+//!
+//! Every stage runs under either executor: real threads
+//! ([`crate::exec`], self-scheduled or batch) on miniature corpora, or the
+//! calibrated simulator ([`crate::simcluster`]) at paper scale.
+
+pub mod benchcmd;
+pub mod commands;
+pub mod pipeline;
+pub mod stage1;
+pub mod stage2;
+pub mod stage3;
+
+pub use pipeline::{Pipeline, PipelineConfig, PipelineReport};

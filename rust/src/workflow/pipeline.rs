@@ -1,0 +1,178 @@
+//! End-to-end pipeline driver: generate → organize → archive → process.
+
+use crate::dist::TaskOrder;
+use crate::registry::Registry;
+use crate::selfsched::SelfSchedConfig;
+use crate::tracks::SegmentConfig;
+use crate::util::Rng;
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Pipeline configuration (miniature real run).
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Working directory (raw/, organized/, archived/, processed/).
+    pub work_dir: PathBuf,
+    /// Artifact directory for the AOT model.
+    pub artifact_dir: PathBuf,
+    /// Worker threads.
+    pub workers: usize,
+    /// RNG seed for the synthetic corpus.
+    pub seed: u64,
+    /// Mondays of data to generate.
+    pub days: u32,
+    /// Largest raw file size, bytes.
+    pub max_file_bytes: u64,
+    /// Registry size (aircraft).
+    pub registry_size: usize,
+    /// Stage-1 task order.
+    pub order: TaskOrder,
+    /// Self-scheduling parameters.
+    pub ss: SelfSchedConfig,
+}
+
+impl PipelineConfig {
+    /// Quick laptop-scale defaults.
+    pub fn small(work_dir: PathBuf) -> Self {
+        PipelineConfig {
+            work_dir,
+            artifact_dir: crate::runtime::TrackModel::default_dir(),
+            workers: 4,
+            seed: 42,
+            days: 2,
+            max_file_bytes: 60_000,
+            registry_size: 60,
+            order: TaskOrder::LargestFirst,
+            ss: SelfSchedConfig { poll_s: 0.02, ..Default::default() },
+        }
+    }
+}
+
+/// Per-stage + total report of one pipeline run.
+#[derive(Debug)]
+pub struct PipelineReport {
+    pub raw_files: usize,
+    pub organize: crate::workflow::stage1::OrganizeOutcome,
+    pub archive: crate::workflow::stage2::ArchiveOutcome,
+    pub process: crate::workflow::stage3::ProcessOutcome,
+}
+
+impl PipelineReport {
+    /// Multi-line human summary for the CLI and examples.
+    pub fn render(&self) -> String {
+        use crate::util::human_duration as hd;
+        format!(
+            "stage 1 organize: {} raw files -> {} organized files ({} obs), {}\n\
+             stage 2 archive : {} archives, {} in, {} Lustre blocks saved, {}\n\
+             stage 3 process : {} segments from {} archives, {} PJRT batches \
+             ({:.3}s in PJRT), {}\n",
+            self.raw_files,
+            self.organize.files_written,
+            self.organize.observations,
+            self.organize.trace.report().summary(),
+            self.archive.archives,
+            crate::util::human_bytes(self.archive.bytes_in),
+            self.archive.lustre_blocks_saved,
+            self.archive.trace.report().summary(),
+            self.process.segments,
+            self.process.archives,
+            self.process.batches,
+            self.process.pjrt_seconds,
+            hd(self.process.trace.job_time),
+        )
+    }
+}
+
+/// The full pipeline object.
+pub struct Pipeline {
+    pub cfg: PipelineConfig,
+}
+
+impl Pipeline {
+    /// Create with a config.
+    pub fn new(cfg: PipelineConfig) -> Self {
+        Pipeline { cfg }
+    }
+
+    /// Generate the synthetic corpus + registry into `work_dir/raw`.
+    pub fn generate(&self) -> Result<(Registry, usize)> {
+        let mut rng = Rng::new(self.cfg.seed);
+        let entries = crate::registry::generate(&mut rng, self.cfg.registry_size);
+        let manifest =
+            crate::datasets::monday::mini_manifest(&mut rng, self.cfg.days, self.cfg.max_file_bytes);
+        let raw_dir = self.cfg.work_dir.join("raw");
+        let paths =
+            crate::datasets::write_real_corpus(&manifest, &entries, &raw_dir, 1.0, &mut rng)?;
+        std::fs::write(
+            raw_dir.join("registry.csv"),
+            crate::registry::write_registry(&entries),
+        )?;
+        let mut reg = Registry::default();
+        reg.merge(entries);
+        Ok((reg, paths.len()))
+    }
+
+    /// Run all three stages; the corpus must exist (see [`Pipeline::generate`]).
+    pub fn run(&self, registry: &Registry, raw_files: usize) -> Result<PipelineReport> {
+        let w = &self.cfg.work_dir;
+        let organize = crate::workflow::stage1::run(
+            &crate::workflow::stage1::OrganizeJob {
+                data_dir: w.join("raw"),
+                out_dir: w.join("organized"),
+                year: 2019,
+            },
+            registry,
+            self.cfg.workers,
+            self.cfg.order,
+            self.cfg.ss,
+        )?;
+        let archive = crate::workflow::stage2::run_cyclic(
+            &crate::workflow::stage2::ArchiveJob {
+                organized_dir: w.join("organized"),
+                archive_dir: w.join("archived"),
+            },
+            self.cfg.workers,
+        )?;
+        let process = crate::workflow::stage3::run(
+            &crate::workflow::stage3::ProcessJob {
+                archive_dir: w.join("archived"),
+                out_dir: w.join("processed"),
+                artifact_dir: self.cfg.artifact_dir.clone(),
+                segment: SegmentConfig::default(),
+            },
+            self.cfg.workers,
+            TaskOrder::Random(self.cfg.seed),
+            self.cfg.ss,
+        )?;
+        Ok(PipelineReport { raw_files, organize, archive, process })
+    }
+
+    /// Generate + run.
+    pub fn generate_and_run(&self) -> Result<PipelineReport> {
+        let (registry, raw_files) = self.generate()?;
+        self.run(&registry, raw_files)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_pipeline_small() {
+        let tmp = std::env::temp_dir().join(format!("emproc_pipe_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&tmp);
+        let mut cfg = PipelineConfig::small(tmp.clone());
+        cfg.days = 1;
+        cfg.max_file_bytes = 20_000;
+        cfg.workers = 2;
+        let report = Pipeline::new(cfg).generate_and_run().unwrap();
+        assert!(report.raw_files > 0);
+        assert!(report.organize.files_written > 0);
+        assert!(report.archive.archives > 0);
+        assert!(report.process.segments > 0);
+        let rendered = report.render();
+        assert!(rendered.contains("stage 3"));
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+}

@@ -1,0 +1,239 @@
+//! Stage 1: parse + organize raw observation files into the hierarchy.
+//!
+//! One task = one raw file. Each task parses the CSV, groups observations
+//! by aircraft, looks each aircraft up in the aggregated registry, and
+//! appends a per-(aircraft, source-file) CSV under
+//! `year/type/seats/icao-bucket/`. Writing per-source files (rather than
+//! appending to one file per aircraft) keeps concurrent workers conflict-
+//! free — the paper's pMatlab processes were similarly independent.
+
+use crate::dist::TaskOrder;
+use crate::registry::Registry;
+use crate::selfsched::{SchedTrace, SelfSchedConfig};
+use crate::tracks;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Stage-1 job description.
+#[derive(Debug, Clone)]
+pub struct OrganizeJob {
+    /// Raw corpus directory (flat files named by the dataset generator).
+    pub data_dir: PathBuf,
+    /// Output root for the organized hierarchy.
+    pub out_dir: PathBuf,
+    /// Campaign year for the tier-1 directory.
+    pub year: u16,
+}
+
+/// Result of organizing one corpus.
+#[derive(Debug)]
+pub struct OrganizeOutcome {
+    pub trace: SchedTrace,
+    /// Files written into the hierarchy.
+    pub files_written: usize,
+    /// Observations organized.
+    pub observations: u64,
+}
+
+/// List raw files with sizes (task inputs), deterministic order.
+pub fn list_raw_files(data_dir: &Path) -> Result<Vec<(PathBuf, u64)>> {
+    let mut files = Vec::new();
+    for entry in std::fs::read_dir(data_dir)
+        .with_context(|| format!("reading {}", data_dir.display()))?
+    {
+        let entry = entry?;
+        let path = entry.path();
+        if path.extension().and_then(|e| e.to_str()) == Some("csv")
+            && path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n != "registry.csv")
+                .unwrap_or(false)
+        {
+            files.push((path, entry.metadata()?.len()));
+        }
+    }
+    files.sort();
+    Ok(files)
+}
+
+/// Organize one raw file (a single stage-1 task). Returns
+/// `(files_written, observations)`.
+pub fn organize_file(
+    raw_path: &Path,
+    registry: &Registry,
+    out_dir: &Path,
+    year: u16,
+) -> Result<(usize, u64)> {
+    let text = std::fs::read_to_string(raw_path)
+        .with_context(|| format!("reading {}", raw_path.display()))?;
+    let tracks = tracks::parse_csv(&text)?;
+    let src_stem = raw_path
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("src");
+    let mut files = 0usize;
+    let mut obs = 0u64;
+    for track in tracks {
+        // Unregistered aircraft are skipped (no type/seats tier), matching
+        // the registry-driven organization of §III.A.
+        let Some(entry) = registry.get(track.icao24) else {
+            continue;
+        };
+        let dir = out_dir.join(crate::hierarchy::opensky_path(year, entry));
+        std::fs::create_dir_all(&dir)?;
+        let name = format!(
+            "{}_{}.csv",
+            crate::tracks::icao24_hex(track.icao24),
+            src_stem
+        );
+        obs += track.obs.len() as u64;
+        std::fs::write(dir.join(name), tracks::write_csv(&[track]))?;
+        files += 1;
+    }
+    Ok((files, obs))
+}
+
+/// Run stage 1 with the real self-scheduled executor.
+pub fn run(
+    job: &OrganizeJob,
+    registry: &Registry,
+    workers: usize,
+    order: TaskOrder,
+    ss: SelfSchedConfig,
+) -> Result<OrganizeOutcome> {
+    let raw = list_raw_files(&job.data_dir)?;
+    let tasks: Vec<crate::dist::Task> = raw
+        .iter()
+        .enumerate()
+        .map(|(i, (path, size))| crate::dist::Task {
+            id: i,
+            bytes: *size,
+            obs: size / 110,
+            dem_cells: 0,
+            chrono_key: i as u64,
+            name: path.display().to_string(),
+        })
+        .collect();
+    let ordered = crate::dist::order_tasks(&tasks, order);
+    let written = std::sync::atomic::AtomicUsize::new(0);
+    let observations = std::sync::atomic::AtomicU64::new(0);
+    let trace = crate::exec::run_self_scheduled(
+        tasks.len(),
+        &ordered,
+        workers,
+        ss,
+        |_w, ti| {
+            let (f, o) = organize_file(&raw[ti].0, registry, &job.out_dir, job.year)?;
+            written.fetch_add(f, std::sync::atomic::Ordering::Relaxed);
+            observations.fetch_add(o, std::sync::atomic::Ordering::Relaxed);
+            Ok(())
+        },
+    )?;
+    Ok(OrganizeOutcome {
+        trace,
+        files_written: written.into_inner(),
+        observations: observations.into_inner(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn setup(tag: &str) -> (PathBuf, Registry, Vec<crate::registry::RegistryEntry>) {
+        let tmp = std::env::temp_dir().join(format!("emproc_s1_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&tmp);
+        std::fs::create_dir_all(&tmp).unwrap();
+        let mut rng = Rng::new(9);
+        let entries = crate::registry::generate(&mut rng, 50);
+        let mut reg = Registry::default();
+        reg.merge(entries.iter().copied());
+        (tmp, reg, entries)
+    }
+
+    #[test]
+    fn organize_file_places_by_hierarchy() {
+        let (tmp, reg, entries) = setup("one");
+        let raw = tmp.join("raw.csv");
+        let e = &entries[0];
+        let track = crate::tracks::Track {
+            icao24: e.icao24,
+            obs: (0..12)
+                .map(|i| crate::tracks::Observation {
+                    t: 1000.0 + i as f64 * 10.0,
+                    lat: 42.0,
+                    lon: -71.0,
+                    alt_ft: 1500.0,
+                })
+                .collect(),
+        };
+        std::fs::write(&raw, crate::tracks::write_csv(&[track])).unwrap();
+        let out = tmp.join("organized");
+        let (files, obs) = organize_file(&raw, &reg, &out, 2019).unwrap();
+        assert_eq!(files, 1);
+        assert_eq!(obs, 12);
+        let expect_dir = out.join(crate::hierarchy::opensky_path(2019, e));
+        assert!(expect_dir.exists());
+        let contents: Vec<_> = std::fs::read_dir(&expect_dir).unwrap().collect();
+        assert_eq!(contents.len(), 1);
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn unregistered_aircraft_skipped() {
+        let (tmp, reg, _) = setup("skip");
+        let raw = tmp.join("raw.csv");
+        let track = crate::tracks::Track {
+            icao24: 0x00_0001, // not in registry (generated ids are random)
+            obs: vec![crate::tracks::Observation { t: 1.0, lat: 0.0, lon: 0.0, alt_ft: 0.0 }],
+        };
+        std::fs::write(&raw, crate::tracks::write_csv(&[track])).unwrap();
+        let (files, _) = organize_file(&raw, &reg, &tmp.join("org"), 2019).unwrap();
+        assert_eq!(files, 0);
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn parallel_run_organizes_whole_corpus() {
+        let (tmp, reg, entries) = setup("run");
+        let mut rng = Rng::new(10);
+        let manifest = crate::datasets::monday::mini_manifest(&mut rng, 2, 20_000);
+        let raw_dir = tmp.join("raw");
+        crate::datasets::write_real_corpus(&manifest, &entries, &raw_dir, 1.0, &mut rng)
+            .unwrap();
+        let job = OrganizeJob {
+            data_dir: raw_dir,
+            out_dir: tmp.join("organized"),
+            year: 2019,
+        };
+        let outcome = run(
+            &job,
+            &reg,
+            4,
+            TaskOrder::LargestFirst,
+            SelfSchedConfig { poll_s: 0.01, ..Default::default() },
+        )
+        .unwrap();
+        assert!(outcome.files_written > 0);
+        assert!(outcome.observations > 0);
+        outcome.trace.check_invariants(manifest.len()).unwrap();
+        // Hierarchy depth: every written file sits 4 dirs deep.
+        let mut stack = vec![(job.out_dir.clone(), 0usize)];
+        let mut found = 0;
+        while let Some((dir, depth)) = stack.pop() {
+            for e in std::fs::read_dir(&dir).unwrap() {
+                let e = e.unwrap();
+                if e.file_type().unwrap().is_dir() {
+                    stack.push((e.path(), depth + 1));
+                } else {
+                    assert_eq!(depth, 4, "file at wrong depth: {:?}", e.path());
+                    found += 1;
+                }
+            }
+        }
+        assert_eq!(found, outcome.files_written);
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+}

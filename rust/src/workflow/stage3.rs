@@ -1,0 +1,361 @@
+//! Stage 3: process + interpolate into track segments — the PJRT hot path.
+//!
+//! One task = one aircraft archive (zip). A worker:
+//! 1. reads every member CSV, normalizes and gap-segments the tracks
+//!    (dropping <10-observation segments, §III.A);
+//! 2. extracts the DEM tile covering the archive's observations;
+//! 3. packs segments into fixed-shape [`TrackBatch`]es and executes the
+//!    AOT-compiled Pallas model (interpolation + dynamic rates + AGL);
+//! 4. writes the resampled segments as CSV.
+//!
+//! Every worker owns a private compiled [`TrackModel`] (EPPAC-style
+//! placement: one process, one resource set — and the executable is not
+//! Sync). Python is never invoked.
+
+use crate::dem::Dem;
+use crate::geometry::Rect;
+use crate::runtime::{TrackBatch, TrackModel};
+use crate::selfsched::SchedTrace;
+use crate::selfsched::SelfSchedConfig;
+use crate::tracks::{segment_track, SegmentConfig, TrackSegment};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Stage-3 job description.
+#[derive(Debug, Clone)]
+pub struct ProcessJob {
+    /// Archive tree root (stage-2 output).
+    pub archive_dir: PathBuf,
+    /// Output directory for resampled segments.
+    pub out_dir: PathBuf,
+    /// Artifact directory (`track_model.hlo.txt` + manifest).
+    pub artifact_dir: PathBuf,
+    /// Segmentation rules.
+    pub segment: SegmentConfig,
+}
+
+/// Result of processing.
+#[derive(Debug)]
+pub struct ProcessOutcome {
+    pub trace: SchedTrace,
+    /// Archives processed.
+    pub archives: usize,
+    /// Track segments interpolated.
+    pub segments: u64,
+    /// Raw observations consumed.
+    pub observations: u64,
+    /// PJRT executions.
+    pub batches: u64,
+    /// Seconds spent inside PJRT execute, summed over workers.
+    pub pjrt_seconds: f64,
+}
+
+/// Find all stage-2 zips under the archive tree.
+pub fn list_archives(archive_dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![archive_dir.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir)
+            .with_context(|| format!("reading {}", dir.display()))?
+        {
+            let entry = entry?;
+            let path = entry.path();
+            if entry.file_type()?.is_dir() {
+                stack.push(path);
+            } else if path.extension().and_then(|e| e.to_str()) == Some("zip") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Load + segment all tracks inside one archive.
+pub fn segments_from_archive(zip_path: &Path, cfg: &SegmentConfig) -> Result<Vec<TrackSegment>> {
+    let mut segments = Vec::new();
+    for member in crate::archive::zipdir::list_members(zip_path)? {
+        let data = crate::archive::zipdir::read_member(zip_path, &member)?;
+        let text = String::from_utf8(data).context("non-utf8 CSV member")?;
+        for mut track in crate::tracks::parse_csv(&text)? {
+            track.normalize();
+            segments.extend(segment_track(&track, cfg));
+        }
+    }
+    Ok(segments)
+}
+
+/// Bounding box of a segment set, padded for the DEM tile.
+pub fn segments_bbox(segments: &[TrackSegment]) -> Rect {
+    let mut r = Rect { lat_lo: 90.0, lat_hi: -90.0, lon_lo: 180.0, lon_hi: -180.0 };
+    for s in segments {
+        for o in &s.obs {
+            r.lat_lo = r.lat_lo.min(o.lat);
+            r.lat_hi = r.lat_hi.max(o.lat);
+            r.lon_lo = r.lon_lo.min(o.lon);
+            r.lon_hi = r.lon_hi.max(o.lon);
+        }
+    }
+    // Pad so bilinear queries stay interior; handle degenerate boxes.
+    Rect {
+        lat_lo: r.lat_lo - 0.05,
+        lat_hi: r.lat_hi + 0.05,
+        lon_lo: r.lon_lo - 0.05,
+        lon_hi: r.lon_hi + 0.05,
+    }
+}
+
+/// Process one archive with the worker's model. Returns
+/// `(segments, observations, batches)` and writes the output CSV.
+pub fn process_archive(
+    zip_path: &Path,
+    job: &ProcessJob,
+    model: &mut TrackModel,
+) -> Result<(u64, u64, u64)> {
+    let segments = segments_from_archive(zip_path, &job.segment)?;
+    if segments.is_empty() {
+        return Ok((0, 0, 0));
+    }
+    let man = model.manifest().clone();
+    let dem = Dem;
+    let bbox = segments_bbox(&segments);
+    let (tile, meta) = dem.tile_for_bbox(&bbox, man.tile);
+
+    let mut batch = TrackBatch::empty(&man);
+    batch.set_dem(&tile, meta)?;
+
+    let rel = zip_path
+        .strip_prefix(&job.archive_dir)
+        .unwrap_or(zip_path)
+        .with_extension("tracks.csv");
+    let out_path = job.out_dir.join(rel);
+    if let Some(parent) = out_path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut out = String::from("segment,icao24,t,lat,lon,alt_ft,vrate_fpm,gspeed_kt,agl_ft\n");
+
+    let mut obs_count = 0u64;
+    let mut batches = 0u64;
+    let mut pending: Vec<&TrackSegment> = Vec::with_capacity(man.b);
+    let mut seg_serial = 0u64;
+
+    let mut flush = |pending: &mut Vec<&TrackSegment>,
+                     batch: &mut TrackBatch,
+                     out: &mut String,
+                     batches: &mut u64|
+     -> Result<()> {
+        if pending.is_empty() {
+            return Ok(());
+        }
+        let outputs = model.execute(batch)?;
+        *batches += 1;
+        for (row, seg) in pending.iter().enumerate() {
+            if !outputs.row_valid(row) {
+                continue;
+            }
+            let t0 = seg.obs.first().map(|o| o.t).unwrap_or(0.0);
+            let gbase = row * batch.m;
+            for j in 0..batch.m {
+                use std::fmt::Write as _;
+                let _ = writeln!(
+                    out,
+                    "{},{},{:.1},{:.6},{:.6},{:.1},{:.1},{:.1},{:.1}",
+                    seg_serial + row as u64,
+                    crate::tracks::icao24_hex(seg.icao24),
+                    t0 + batch.grid_t[gbase + j] as f64,
+                    outputs.lat[gbase + j],
+                    outputs.lon[gbase + j],
+                    outputs.alt[gbase + j],
+                    outputs.vrate[gbase + j],
+                    outputs.gspeed[gbase + j],
+                    outputs.agl[gbase + j],
+                );
+            }
+        }
+        seg_serial += pending.len() as u64;
+        pending.clear();
+        batch.clear_rows();
+        Ok(())
+    };
+
+    for seg in &segments {
+        obs_count += seg.obs.len() as u64;
+        let packed = seg.to_segment_obs();
+        if batch.push_segment(&packed).is_none() {
+            flush(&mut pending, &mut batch, &mut out, &mut batches)?;
+            batch.push_segment(&packed);
+        }
+        pending.push(seg);
+    }
+    flush(&mut pending, &mut batch, &mut out, &mut batches)?;
+    std::fs::write(&out_path, out)?;
+    Ok((segments.len() as u64, obs_count, batches))
+}
+
+/// Run stage 3 with the real self-scheduled executor. Each worker compiles
+/// its own model before the clock starts (mirroring job launch, which the
+/// paper does not count in task time).
+pub fn run(
+    job: &ProcessJob,
+    workers: usize,
+    order: crate::dist::TaskOrder,
+    ss: SelfSchedConfig,
+) -> Result<ProcessOutcome> {
+    let archives = list_archives(&job.archive_dir)?;
+    let tasks: Vec<crate::dist::Task> = archives
+        .iter()
+        .enumerate()
+        .map(|(i, p)| crate::dist::Task {
+            id: i,
+            bytes: std::fs::metadata(p).map(|m| m.len()).unwrap_or(0),
+            obs: 0,
+            dem_cells: 0,
+            chrono_key: i as u64,
+            name: p.display().to_string(),
+        })
+        .collect();
+    let ordered = crate::dist::order_tasks(&tasks, order);
+
+    let segments = AtomicU64::new(0);
+    let observations = AtomicU64::new(0);
+    let batches = AtomicU64::new(0);
+    let pjrt_ns = AtomicU64::new(0);
+
+    let trace = crate::exec::run_self_scheduled_init(
+        archives.len(),
+        &ordered,
+        workers,
+        ss,
+        |_w| TrackModel::load(&job.artifact_dir),
+        |model, _w, ti| {
+            let before = model.exec_stats().1;
+            let (s, o, b) = process_archive(&archives[ti], job, model)?;
+            let after = model.exec_stats().1;
+            segments.fetch_add(s, Ordering::Relaxed);
+            observations.fetch_add(o, Ordering::Relaxed);
+            batches.fetch_add(b, Ordering::Relaxed);
+            pjrt_ns.fetch_add((after - before).as_nanos() as u64, Ordering::Relaxed);
+            Ok(())
+        },
+    )?;
+    let pjrt_seconds = pjrt_ns.into_inner() as f64 * 1e-9;
+    Ok(ProcessOutcome {
+        trace,
+        archives: archives.len(),
+        segments: segments.into_inner(),
+        observations: observations.into_inner(),
+        batches: batches.into_inner(),
+        pjrt_seconds,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn artifact_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Build raw -> organized -> archived fixtures and return the job.
+    fn fixture(tag: &str) -> (PathBuf, ProcessJob) {
+        let tmp = std::env::temp_dir().join(format!("emproc_s3_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&tmp);
+        let mut rng = Rng::new(30);
+        let entries = crate::registry::generate(&mut rng, 30);
+        let mut reg = crate::registry::Registry::default();
+        reg.merge(entries.iter().copied());
+        let manifest = crate::datasets::monday::mini_manifest(&mut rng, 1, 15_000);
+        let raw = tmp.join("raw");
+        crate::datasets::write_real_corpus(&manifest, &entries, &raw, 1.0, &mut rng).unwrap();
+        for (path, _) in crate::workflow::stage1::list_raw_files(&raw).unwrap() {
+            crate::workflow::stage1::organize_file(&path, &reg, &tmp.join("org"), 2019)
+                .unwrap();
+        }
+        crate::archive::zipdir::archive_bottom_dirs(&tmp.join("org"), &tmp.join("arch"))
+            .unwrap();
+        let job = ProcessJob {
+            archive_dir: tmp.join("arch"),
+            out_dir: tmp.join("proc"),
+            artifact_dir: artifact_dir(),
+            segment: SegmentConfig::default(),
+        };
+        (tmp, job)
+    }
+
+    #[test]
+    fn end_to_end_processing_produces_tracks() {
+        let (tmp, job) = fixture("e2e");
+        let out = run(
+            &job,
+            2,
+            crate::dist::TaskOrder::Random(1),
+            SelfSchedConfig { poll_s: 0.01, ..Default::default() },
+        )
+        .unwrap();
+        assert!(out.archives > 0);
+        assert!(out.segments > 0, "no segments interpolated");
+        assert!(out.batches > 0);
+        assert!(out.pjrt_seconds > 0.0);
+        // Output CSVs parse and have sane values.
+        let mut checked = 0;
+        let mut stack = vec![job.out_dir.clone()];
+        while let Some(d) = stack.pop() {
+            for e in std::fs::read_dir(&d).unwrap() {
+                let e = e.unwrap();
+                if e.file_type().unwrap().is_dir() {
+                    stack.push(e.path());
+                    continue;
+                }
+                let text = std::fs::read_to_string(e.path()).unwrap();
+                for line in text.lines().skip(1) {
+                    let f: Vec<&str> = line.split(',').collect();
+                    assert_eq!(f.len(), 9, "bad row: {line}");
+                    let lat: f64 = f[3].parse().unwrap();
+                    let gs: f64 = f[7].parse().unwrap();
+                    assert!((-90.0..=90.0).contains(&lat));
+                    assert!((0.0..5000.0).contains(&gs), "ground speed {gs}");
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked > 0, "no output rows checked");
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn agl_matches_rust_dem_reference() {
+        // Cross-check the PJRT AGL against the rust-side bilinear sampler
+        // on one archive.
+        let (tmp, job) = fixture("agl");
+        let archives = list_archives(&job.archive_dir).unwrap();
+        let mut model = TrackModel::load(&job.artifact_dir).unwrap();
+        let segs = segments_from_archive(&archives[0], &job.segment).unwrap();
+        if !segs.is_empty() {
+            let man = model.manifest().clone();
+            let bbox = segments_bbox(&segs);
+            let (tile, meta) = Dem.tile_for_bbox(&bbox, man.tile);
+            let mut batch = TrackBatch::empty(&man);
+            batch.set_dem(&tile, meta).unwrap();
+            batch.push_segment(&segs[0].to_segment_obs()).unwrap();
+            let out = model.execute(&batch).unwrap();
+            if out.row_valid(0) {
+                for j in 0..man.m {
+                    let lat = out.lat[j] as f64;
+                    let lon = out.lon[j] as f64;
+                    let elev_ft =
+                        Dem::bilinear_tile(&tile, man.tile, meta, lat, lon) * crate::dem::FT_PER_M;
+                    let want = out.alt[j] as f64 - elev_ft;
+                    assert!(
+                        (out.agl[j] as f64 - want).abs() < 1.5,
+                        "AGL mismatch at {j}: {} vs {want}",
+                        out.agl[j]
+                    );
+                }
+            }
+        }
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+}

@@ -1,0 +1,152 @@
+//! Integration: the full real pipeline over tmp dirs, plus cross-checks
+//! between the real executor and the simulator on identical workloads.
+
+use emproc::dist::{order_tasks, Task, TaskOrder};
+use emproc::prelude::*;
+use emproc::selfsched::{AllocMode, SelfSchedConfig};
+use emproc::simcluster::Stage;
+use std::path::PathBuf;
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("emproc_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn pipeline_produces_consistent_counts() {
+    let work = tmp("counts");
+    let mut cfg = PipelineConfig::small(work.clone());
+    cfg.days = 1;
+    cfg.workers = 3;
+    cfg.max_file_bytes = 40_000;
+    let report = Pipeline::new(cfg).generate_and_run().unwrap();
+
+    // Stage-2 input bytes equal the size of everything stage 1 wrote.
+    let mut organized_bytes = 0u64;
+    let mut organized_files = 0usize;
+    let mut stack = vec![work.join("organized")];
+    while let Some(d) = stack.pop() {
+        for e in std::fs::read_dir(&d).unwrap() {
+            let e = e.unwrap();
+            if e.file_type().unwrap().is_dir() {
+                stack.push(e.path());
+            } else {
+                organized_bytes += e.metadata().unwrap().len();
+                organized_files += 1;
+            }
+        }
+    }
+    assert_eq!(organized_files, report.organize.files_written);
+    assert_eq!(organized_bytes, report.archive.bytes_in);
+
+    // Each archive yields at most one output file; segments only come
+    // from tracks with >= 10 observations.
+    assert!(report.process.segments > 0);
+    assert!(report.process.batches >= report.process.segments.div_ceil(16));
+    let _ = std::fs::remove_dir_all(&work);
+}
+
+#[test]
+fn pipeline_is_deterministic_in_artifacts() {
+    // Same seed -> identical organized tree (names and bytes).
+    let summarize = |work: &PathBuf| -> Vec<(String, u64)> {
+        let mut out = Vec::new();
+        let mut stack = vec![work.join("organized")];
+        while let Some(d) = stack.pop() {
+            for e in std::fs::read_dir(&d).unwrap() {
+                let e = e.unwrap();
+                if e.file_type().unwrap().is_dir() {
+                    stack.push(e.path());
+                } else {
+                    out.push((
+                        e.path().strip_prefix(work).unwrap().display().to_string(),
+                        e.metadata().unwrap().len(),
+                    ));
+                }
+            }
+        }
+        out.sort();
+        out
+    };
+    let mut sums = Vec::new();
+    for run in 0..2 {
+        let work = tmp(&format!("det{run}"));
+        let mut cfg = PipelineConfig::small(work.clone());
+        cfg.days = 1;
+        cfg.workers = 2;
+        cfg.max_file_bytes = 20_000;
+        Pipeline::new(cfg).generate_and_run().unwrap();
+        sums.push(summarize(&work));
+        let _ = std::fs::remove_dir_all(&work);
+    }
+    assert_eq!(sums[0], sums[1]);
+}
+
+#[test]
+fn real_and_simulated_selfsched_allocate_identically() {
+    // With one worker, both executors must process tasks in exactly the
+    // ordered sequence; with many workers, both must complete all tasks
+    // and send the same number of messages.
+    let tasks: Vec<Task> = (0..40)
+        .map(|i| Task {
+            id: i,
+            bytes: 1_000_000,
+            obs: 10,
+            dem_cells: 0,
+            chrono_key: i as u64,
+            name: format!("t{i:03}"),
+        })
+        .collect();
+    let ordered = order_tasks(&tasks, TaskOrder::LargestFirst);
+    let ss = SelfSchedConfig { poll_s: 0.005, msg_s: 0.0, tasks_per_message: 3 };
+
+    let sim = Simulator::run(
+        &SimConfig {
+            triples: TriplesConfig { nodes: 1, nppn: 8, threads: 1, slots_per_job: 1, allocation: 4096 },
+            alloc: AllocMode::SelfSched(ss),
+            stage: Stage::Organize,
+            cost: CostModel::paper_calibrated(),
+        },
+        &tasks,
+        &ordered,
+    );
+    let real = emproc::exec::run_self_scheduled(tasks.len(), &ordered, 7, ss, |_, _| Ok(()))
+        .unwrap();
+    sim.check_invariants(tasks.len()).unwrap();
+    real.check_invariants(tasks.len()).unwrap();
+    assert_eq!(sim.messages_sent, real.messages_sent);
+    assert_eq!(
+        sim.tasks_per_worker.iter().sum::<usize>(),
+        real.tasks_per_worker.iter().sum::<usize>()
+    );
+}
+
+#[test]
+fn organize_then_archive_round_trips_observations() {
+    // Every observation that stage 1 organizes must be recoverable from
+    // the stage-2 archives.
+    let work = tmp("roundtrip");
+    let mut cfg = PipelineConfig::small(work.clone());
+    cfg.days = 1;
+    cfg.workers = 2;
+    cfg.max_file_bytes = 30_000;
+    let pipeline = Pipeline::new(cfg);
+    let (registry, raw_files) = pipeline.generate().unwrap();
+    let report = pipeline.run(&registry, raw_files).unwrap();
+
+    let mut recovered = 0u64;
+    let archives =
+        emproc::workflow::stage3::list_archives(&work.join("archived")).unwrap();
+    for zip in &archives {
+        for member in emproc::archive::zipdir::list_members(zip).unwrap() {
+            let data = emproc::archive::zipdir::read_member(zip, &member).unwrap();
+            let text = String::from_utf8(data).unwrap();
+            for track in emproc::tracks::parse_csv(&text).unwrap() {
+                recovered += track.obs.len() as u64;
+            }
+        }
+    }
+    assert_eq!(recovered, report.organize.observations);
+    let _ = std::fs::remove_dir_all(&work);
+}

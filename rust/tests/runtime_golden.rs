@@ -1,0 +1,112 @@
+//! Cross-language integration test: the rust PJRT runtime executing the
+//! AOT artifact must reproduce the Python oracle's numbers.
+//!
+//! `make artifacts` writes `artifacts/golden_track_model.txt` with
+//! deterministic inputs and the oracle outputs; here we feed the same
+//! inputs through the compiled HLO and compare.
+
+use emproc::runtime::{ArtifactManifest, TrackBatch, TrackModel};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn parse_golden(text: &str) -> (HashMap<String, Vec<f32>>, HashMap<String, Vec<f32>>) {
+    let mut ins = HashMap::new();
+    let mut outs = HashMap::new();
+    for line in text.lines() {
+        if line.starts_with('#') || line.trim().is_empty() {
+            continue;
+        }
+        let mut parts = line.splitn(3, ' ');
+        let kind = parts.next().unwrap();
+        let name = parts.next().unwrap().to_string();
+        let values: Vec<f32> = parts
+            .next()
+            .unwrap()
+            .split_whitespace()
+            .map(|v| v.parse::<f32>().unwrap())
+            .collect();
+        match kind {
+            "in" => ins.insert(name, values),
+            "out" => outs.insert(name, values),
+            other => panic!("bad golden line kind {other}"),
+        };
+    }
+    (ins, outs)
+}
+
+#[test]
+fn runtime_reproduces_python_golden() {
+    let dir = artifact_dir();
+    let golden_path = dir.join("golden_track_model.txt");
+    assert!(
+        golden_path.exists(),
+        "{} missing — run `make artifacts` first",
+        golden_path.display()
+    );
+    let (ins, outs) = parse_golden(&std::fs::read_to_string(&golden_path).unwrap());
+
+    let man = ArtifactManifest::load(&dir.join("track_model.manifest")).unwrap();
+    let mut model = TrackModel::load(&dir).unwrap();
+
+    // Build the batch directly from the golden inputs (bypassing the
+    // packing helpers — this tests the ABI exactly).
+    let mut batch = TrackBatch::empty(&man);
+    batch.obs_t.copy_from_slice(&ins["obs_t"]);
+    batch.obs_lat.copy_from_slice(&ins["obs_lat"]);
+    batch.obs_lon.copy_from_slice(&ins["obs_lon"]);
+    batch.obs_alt.copy_from_slice(&ins["obs_alt"]);
+    batch.obs_valid.copy_from_slice(&ins["obs_valid"]);
+    batch.grid_t.copy_from_slice(&ins["grid_t"]);
+    batch.dem.copy_from_slice(&ins["dem"]);
+    batch.dem_meta.copy_from_slice(&ins["dem_meta"]);
+
+    let got = model.execute(&batch).unwrap();
+
+    let checks: [(&str, &[f32]); 7] = [
+        ("lat", &got.lat),
+        ("lon", &got.lon),
+        ("alt", &got.alt),
+        ("vrate", &got.vrate),
+        ("gspeed", &got.gspeed),
+        ("agl", &got.agl),
+        ("valid", &got.valid),
+    ];
+    for (name, got_vals) in checks {
+        let want = &outs[name];
+        assert_eq!(got_vals.len(), want.len(), "{name} length");
+        let scale = want.iter().fold(1.0f32, |a, &b| a.max(b.abs()));
+        for (i, (&g, &w)) in got_vals.iter().zip(want).enumerate() {
+            let err = (g - w).abs();
+            assert!(
+                err <= 1e-4 * scale + 1e-3,
+                "output {name}[{i}]: got {g}, want {w} (scale {scale})"
+            );
+        }
+    }
+    let (calls, _) = model.exec_stats();
+    assert_eq!(calls, 1);
+}
+
+#[test]
+fn batch_shape_mismatch_is_rejected() {
+    let dir = artifact_dir();
+    let man = ArtifactManifest::load(&dir.join("track_model.manifest")).unwrap();
+    let mut model = TrackModel::load(&dir).unwrap();
+    let mut wrong = man.clone();
+    wrong.b += 1;
+    let batch = TrackBatch::empty(&wrong);
+    assert!(model.execute(&batch).is_err());
+}
+
+#[test]
+fn missing_artifact_is_helpful_error() {
+    let err = match TrackModel::load(std::path::Path::new("/nonexistent-dir")) {
+        Ok(_) => panic!("load of missing artifact unexpectedly succeeded"),
+        Err(e) => e,
+    };
+    assert!(err.to_string().contains("make artifacts"), "{err}");
+}

@@ -1,0 +1,126 @@
+//! Calibration guard: the simulator must stay within tolerance of the
+//! paper's Tables I-II and preserve every qualitative finding. If a cost-
+//! model change breaks reproduction, this test names the cell.
+
+use emproc::dist::{order_tasks, Task, TaskOrder};
+use emproc::selfsched::{AllocMode, SelfSchedConfig};
+use emproc::simcluster::{CostModel, SimConfig, Simulator, Stage};
+use emproc::triples::TriplesConfig;
+use emproc::util::Rng;
+
+/// (cores, nppn, paper seconds) for every populated cell.
+const TABLE1: [(usize, usize, f64); 9] = [
+    (2048, 32, 5640.0),
+    (1024, 32, 5944.0),
+    (512, 32, 7493.0),
+    (256, 32, 11944.0),
+    (1024, 16, 5963.0),
+    (512, 16, 7157.0),
+    (256, 16, 11860.0),
+    (512, 8, 6989.0),
+    (256, 8, 11860.0),
+];
+const TABLE2: [(usize, usize, f64); 9] = [
+    (2048, 32, 5456.0),
+    (1024, 32, 5704.0),
+    (512, 32, 6608.0),
+    (256, 32, 11015.0),
+    (1024, 16, 5568.0),
+    (512, 16, 6330.0),
+    (256, 16, 10428.0),
+    (512, 8, 6171.0),
+    (256, 8, 10428.0),
+];
+
+fn simulate(tasks: &[Task], ordered: &[usize], cores: usize, nppn: usize) -> f64 {
+    let cfg = SimConfig {
+        triples: TriplesConfig::table_config(cores, nppn).unwrap(),
+        alloc: AllocMode::SelfSched(SelfSchedConfig::default()),
+        stage: Stage::Organize,
+        cost: CostModel::paper_calibrated(),
+    };
+    Simulator::run(&cfg, tasks, ordered).job_time
+}
+
+fn monday_tasks() -> Vec<Task> {
+    let mut rng = Rng::new(42);
+    Task::from_manifest(&emproc::datasets::monday::manifest(&mut rng))
+}
+
+#[test]
+fn tables_1_and_2_within_tolerance() {
+    let tasks = monday_tasks();
+    let chrono = order_tasks(&tasks, TaskOrder::Chronological);
+    let size = order_tasks(&tasks, TaskOrder::LargestFirst);
+    for (table, order, cells) in [
+        ("I", &chrono, &TABLE1),
+        ("II", &size, &TABLE2),
+    ] {
+        for &(cores, nppn, want) in cells.iter() {
+            let got = simulate(&tasks, order, cores, nppn);
+            let ratio = got / want;
+            assert!(
+                (0.80..=1.25).contains(&ratio),
+                "Table {table} cell ({cores},{nppn}): sim {got:.0}s vs paper {want:.0}s \
+                 (ratio {ratio:.2})"
+            );
+        }
+    }
+}
+
+#[test]
+fn size_organization_always_wins() {
+    // "organizing tasks by size always outperformed chronological task
+    // organization" (§IV.A) — across all nine configurations.
+    let tasks = monday_tasks();
+    let chrono = order_tasks(&tasks, TaskOrder::Chronological);
+    let size = order_tasks(&tasks, TaskOrder::LargestFirst);
+    for &(cores, nppn, _) in TABLE1.iter() {
+        let c = simulate(&tasks, &chrono, cores, nppn);
+        let s = simulate(&tasks, &size, cores, nppn);
+        assert!(s < c, "size {s:.0} !< chrono {c:.0} at ({cores},{nppn})");
+    }
+}
+
+#[test]
+fn lower_nppn_improves_at_fixed_cores() {
+    // "When holding the requested compute nodes constant, minimizing NPPN
+    // also improved performance" (§IV.A).
+    let tasks = monday_tasks();
+    let chrono = order_tasks(&tasks, TaskOrder::Chronological);
+    for cores in [512usize, 256] {
+        let t32 = simulate(&tasks, &chrono, cores, 32);
+        let t16 = simulate(&tasks, &chrono, cores, 16);
+        let t8 = simulate(&tasks, &chrono, cores, 8);
+        assert!(t16 <= t32 && t8 <= t16, "{cores}: {t32:.0} {t16:.0} {t8:.0}");
+    }
+}
+
+#[test]
+fn fig4_crossover_1024_size_beats_2048_chrono() {
+    // "1024 compute nodes with file size organization and NPPN=16
+    // outperformed 2048 compute nodes with chronological organization and
+    // NPPN=32" — the paper's 50%-fewer-nodes headline.
+    let tasks = monday_tasks();
+    let chrono = order_tasks(&tasks, TaskOrder::Chronological);
+    let size = order_tasks(&tasks, TaskOrder::LargestFirst);
+    let big_chrono = simulate(&tasks, &chrono, 2048, 32);
+    let half_size = simulate(&tasks, &size, 1024, 16);
+    assert!(
+        half_size < big_chrono,
+        "size/1024/NPPN16 {half_size:.0} !< chrono/2048/NPPN32 {big_chrono:.0}"
+    );
+}
+
+#[test]
+fn scaling_saturates_like_fig4() {
+    // 256 -> 512 nearly halves; 1024 -> 2048 gains little.
+    let tasks = monday_tasks();
+    let chrono = order_tasks(&tasks, TaskOrder::Chronological);
+    let t256 = simulate(&tasks, &chrono, 256, 32);
+    let t512 = simulate(&tasks, &chrono, 512, 32);
+    let t1024 = simulate(&tasks, &chrono, 1024, 32);
+    let t2048 = simulate(&tasks, &chrono, 2048, 32);
+    assert!(t256 / t512 > 1.4, "first doubling {:.2}", t256 / t512);
+    assert!(t1024 / t2048 < 1.2, "last doubling {:.2}", t1024 / t2048);
+}
