@@ -14,4 +14,5 @@ fn main() {
     section("Fig 9 — radar follow-up worker-time eCDF");
     print!("{}", benchcmd::run_fig9(scale));
     println!("{}", benchcmd::run_serial());
+    emproc::bench_harness::json::write_file("fig9_radar_ecdf").expect("write bench json");
 }

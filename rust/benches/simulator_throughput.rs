@@ -1,9 +1,9 @@
 //! Perf bench: discrete-event simulator throughput (L3 §Perf target:
 //! paper-scale sweeps must run in seconds).
 
-use emproc::bench_harness::{bench, section};
+use emproc::bench_harness::{bench, json, section};
 use emproc::dist::{order_tasks, Task, TaskOrder};
-use emproc::selfsched::{AllocMode, SelfSchedConfig};
+use emproc::selfsched::{AllocMode, SchedTrace, SelfSchedConfig};
 use emproc::simcluster::{CostModel, SimConfig, Simulator, Stage};
 use emproc::triples::TriplesConfig;
 use emproc::util::Rng;
@@ -12,7 +12,8 @@ fn main() {
     section("simulator throughput");
     let mut rng = Rng::new(1);
 
-    // Dataset-1 scale (2,425 tasks).
+    // Dataset-1 scale (2,425 tasks). The timed closure stashes its last
+    // trace so the JSON record costs no extra simulator run.
     let monday = Task::from_manifest(&emproc::datasets::monday::manifest(&mut rng));
     let ordered = order_tasks(&monday, TaskOrder::Chronological);
     let cfg = SimConfig {
@@ -21,13 +22,17 @@ fn main() {
         stage: Stage::Organize,
         cost: CostModel::paper_calibrated(),
     };
+    let mut last: Option<SchedTrace> = None;
     let r = bench("sim organize DS#1 (2,425 tasks, 1023 workers)", 3, 20, || {
-        Simulator::run(&cfg, &monday, &ordered)
+        last = Some(Simulator::run(&cfg, &monday, &ordered));
     });
     println!(
         "-> {:.2} M tasks/s",
         monday.len() as f64 / r.mean.as_secs_f64() / 1e6
     );
+    if let Some(tr) = &last {
+        json::record_trace("throughput organize DS#1", tr);
+    }
 
     // Radar scale (1.32 M tasks at 0.1).
     let radar = emproc::datasets::processing::radar_tasks(&mut rng, 0.1);
@@ -38,13 +43,17 @@ fn main() {
         stage: Stage::Process,
         cost: CostModel::paper_calibrated(),
     };
+    let mut rlast: Option<SchedTrace> = None;
     let r2 = bench("sim radar processing (1.32 M tasks)", 1, 5, || {
-        Simulator::run(&rcfg, &radar, &rordered)
+        rlast = Some(Simulator::run(&rcfg, &radar, &rordered));
     });
     println!(
         "-> {:.2} M tasks/s",
         radar.len() as f64 / r2.mean.as_secs_f64() / 1e6
     );
+    if let Some(tr) = &rlast {
+        json::record_trace("throughput radar processing", tr);
+    }
 
     // DS#2 processing scale (120 k tasks).
     let p = emproc::datasets::processing::OpenSkyProcessing::default();
@@ -56,11 +65,16 @@ fn main() {
         stage: Stage::Process,
         cost: CostModel::paper_calibrated(),
     };
+    let mut plast: Option<SchedTrace> = None;
     let r3 = bench("sim process DS#2 (120 k tasks)", 1, 10, || {
-        Simulator::run(&pcfg, &ptasks, &pordered)
+        plast = Some(Simulator::run(&pcfg, &ptasks, &pordered));
     });
     println!(
         "-> {:.2} M tasks/s",
         ptasks.len() as f64 / r3.mean.as_secs_f64() / 1e6
     );
+    if let Some(tr) = &plast {
+        json::record_trace("throughput process DS#2", tr);
+    }
+    json::write_file("simulator_throughput").expect("write bench json");
 }

@@ -14,6 +14,8 @@ fn main() {
             &benchcmd::PAPER_TABLE1
         )
     );
+    emproc::bench_harness::json::write_file("table1_organize_chrono")
+        .expect("write bench json");
     bench("sim: one 2048-core organize run", 1, 5, || {
         benchcmd::run_table(
             TaskOrder::Chronological,

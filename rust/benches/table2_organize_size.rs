@@ -14,4 +14,6 @@ fn main() {
             &benchcmd::PAPER_TABLE2
         )
     );
+    emproc::bench_harness::json::write_file("table2_organize_size")
+        .expect("write bench json");
 }

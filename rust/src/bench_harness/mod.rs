@@ -64,6 +64,79 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Machine-readable bench results: every experiment scenario records its
+/// headline numbers (job time, messages sent) into a process-global
+/// collector; bench targets flush them to `BENCH_<target>.json` so the
+/// perf trajectory is diffable across PRs (`cargo bench` runs with the
+/// package root as CWD, so the files land next to `Cargo.toml`).
+pub mod json {
+    use std::path::PathBuf;
+    use std::sync::Mutex;
+
+    struct Scenario {
+        name: String,
+        job_time_s: f64,
+        messages_sent: usize,
+    }
+
+    static SCENARIOS: Mutex<Vec<Scenario>> = Mutex::new(Vec::new());
+
+    /// Record one scenario's headline numbers.
+    pub fn record(name: &str, job_time_s: f64, messages_sent: usize) {
+        SCENARIOS.lock().expect("scenario lock").push(Scenario {
+            name: name.to_string(),
+            job_time_s,
+            messages_sent,
+        });
+    }
+
+    /// Record straight from a scheduling trace.
+    pub fn record_trace(name: &str, trace: &crate::selfsched::SchedTrace) {
+        record(name, trace.job_time, trace.messages_sent);
+    }
+
+    /// Drop everything recorded so far (between unrelated bench targets).
+    pub fn clear() {
+        SCENARIOS.lock().expect("scenario lock").clear();
+    }
+
+    fn escape(s: &str) -> String {
+        s.chars()
+            .flat_map(|c| match c {
+                '"' => "\\\"".chars().collect::<Vec<_>>(),
+                '\\' => "\\\\".chars().collect(),
+                '\n' => "\\n".chars().collect(),
+                c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+                c => vec![c],
+            })
+            .collect()
+    }
+
+    /// Write (and drain) the recorded scenarios as `BENCH_<target>.json`
+    /// in the current directory. Hand-rolled JSON: serde is unavailable
+    /// offline.
+    pub fn write_file(target: &str) -> std::io::Result<PathBuf> {
+        let scenarios = std::mem::take(&mut *SCENARIOS.lock().expect("scenario lock"));
+        let mut body = String::from("{\n");
+        body.push_str(&format!("  \"bench\": \"{}\",\n", escape(target)));
+        body.push_str("  \"scenarios\": [\n");
+        for (i, s) in scenarios.iter().enumerate() {
+            body.push_str(&format!(
+                "    {{\"scenario\": \"{}\", \"job_time_s\": {:.6}, \"messages_sent\": {}}}{}\n",
+                escape(&s.name),
+                s.job_time_s,
+                s.messages_sent,
+                if i + 1 < scenarios.len() { "," } else { "" }
+            ));
+        }
+        body.push_str("  ]\n}\n");
+        let path = PathBuf::from(format!("BENCH_{target}.json"));
+        std::fs::write(&path, body)?;
+        println!("wrote {} ({} scenarios)", path.display(), scenarios.len());
+        Ok(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -75,5 +148,26 @@ mod tests {
         });
         assert_eq!(r.iters, 5);
         assert!(r.min <= r.mean && r.mean <= r.max.max(r.mean));
+    }
+
+    #[test]
+    fn json_records_and_writes_valid_output() {
+        json::clear();
+        json::record("scenario \"a\"", 12.5, 7);
+        json::record("scenario b", 0.25, 0);
+        let path = json::write_file("harness_selftest").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(text.contains("\"bench\": \"harness_selftest\""));
+        assert!(text.contains("\\\"a\\\""));
+        assert!(text.contains("\"messages_sent\": 7"));
+        // Balanced braces/brackets (cheap well-formedness check).
+        assert_eq!(text.matches('{').count(), text.matches('}').count());
+        assert_eq!(text.matches('[').count(), text.matches(']').count());
+        // Drained after writing.
+        let empty = json::write_file("harness_selftest_empty").unwrap();
+        let text2 = std::fs::read_to_string(&empty).unwrap();
+        let _ = std::fs::remove_file(&empty);
+        assert!(!text2.contains("scenario b"));
     }
 }

@@ -1,0 +1,333 @@
+//! Task organization (§II.B) and batch distribution (§II.A): the layer
+//! between "a pile of input files" and "work handed to processes".
+//!
+//! The paper's stage-1 experiments vary exactly two knobs upstream of the
+//! allocation protocol:
+//!
+//! * **task organization** — the *order* tasks are visited in
+//!   ([`TaskOrder`], [`order_tasks`]): chronological (Table I), largest
+//!   first (Table II, "organizing tasks by size always outperformed
+//!   chronological"), random (§IV.C processing runs), or filename-sorted
+//!   (the LLMapReduce default that made §IV.B archiving pathological);
+//! * **task distribution** — how a pre-assigned batch run splits the
+//!   ordered list across workers ([`Distribution`], [`distribute`]):
+//!   contiguous *block* or round-robin *cyclic*. Self-scheduled runs skip
+//!   this and pull from the ordered list dynamically
+//!   (see [`crate::sched`]).
+//!
+//! A [`Task`] is deliberately lightweight — an index plus the cost drivers
+//! the simulator's [`crate::simcluster::CostModel`] and the orderings need
+//! (bytes, observations, DEM footprint, a chronological key, a name). One
+//! `Task` = one raw file (stage 1), one bottom directory (stage 2), or one
+//! aircraft archive / deidentified id (stage 3, §V).
+
+use crate::util::Rng;
+use std::cmp::Reverse;
+
+/// One schedulable unit of work.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Task {
+    /// Stable identifier; by convention the index into the builder's list.
+    pub id: usize,
+    /// Input bytes (stages 1/2 cost driver). Stage-3 builders reuse this
+    /// field for the fixed per-task cost via [`Task::set_fixed_cost_s`].
+    pub bytes: u64,
+    /// Observation count (stage-3 dominant cost driver).
+    pub obs: u64,
+    /// DEM cells the task touches (stage-3 cost driver, §V).
+    pub dem_cells: u64,
+    /// Chronological sort key (ticks; any monotone encoding of time).
+    pub chrono_key: u64,
+    /// File/archive name (the [`TaskOrder::FilenameSorted`] key).
+    pub name: String,
+}
+
+impl Task {
+    /// Build stage-1 tasks from a dataset manifest: one task per raw file,
+    /// with the manifest's (day, hour) as the chronological key and ~110
+    /// bytes per CSV observation line.
+    pub fn from_manifest(manifest: &crate::datasets::FileManifest) -> Vec<Task> {
+        manifest
+            .entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| Task {
+                id: i,
+                bytes: e.size,
+                obs: e.size / 110,
+                dem_cells: 0,
+                chrono_key: e.day as u64 * 24 + e.hour as u64,
+                name: e.name.clone(),
+            })
+            .collect()
+    }
+}
+
+/// Task-organization policy (§II.B "organize" step).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskOrder {
+    /// Ascending [`Task::chrono_key`] (Table I).
+    Chronological,
+    /// Descending [`Task::bytes`], then descending [`Task::obs`] for
+    /// byte-less stage-3 tasks (Table II; LPT-style).
+    LargestFirst,
+    /// Seeded deterministic shuffle (§IV.C processing runs).
+    Random(u64),
+    /// Ascending [`Task::name`] (the LLMapReduce listing order, §IV.B).
+    FilenameSorted,
+}
+
+/// Visit order for `tasks` under `order`: a permutation of `0..tasks.len()`
+/// of indices into `tasks`. All sorts are stable with index tie-breaks, so
+/// the result is deterministic for any input.
+pub fn order_tasks(tasks: &[Task], order: TaskOrder) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..tasks.len()).collect();
+    match order {
+        TaskOrder::Chronological => {
+            idx.sort_by_key(|&i| (tasks[i].chrono_key, i));
+        }
+        TaskOrder::LargestFirst => {
+            idx.sort_by_key(|&i| (Reverse(tasks[i].bytes), Reverse(tasks[i].obs), i));
+        }
+        TaskOrder::Random(seed) => {
+            let mut rng = Rng::new(seed);
+            rng.shuffle(&mut idx);
+        }
+        TaskOrder::FilenameSorted => {
+            idx.sort_by(|&a, &b| tasks[a].name.cmp(&tasks[b].name).then(a.cmp(&b)));
+        }
+    }
+    idx
+}
+
+/// Batch distribution policy (§II.A): how pMatlab/LLMapReduce pre-assign
+/// an ordered task list to workers with no manager involvement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Distribution {
+    /// Contiguous chunks: worker `w` gets the `w`-th slice of the ordered
+    /// list. Pathological when cost is correlated with order (§IV.B).
+    Block,
+    /// Round-robin: worker `w` gets `ordered[w]`, `ordered[w + W]`, ...
+    Cyclic,
+}
+
+/// Split `ordered` across `nworkers` queues. The result is always a
+/// partition: every element of `ordered` appears in exactly one queue, in
+/// its original relative order, and exactly `nworkers` queues are returned
+/// (later ones empty when there are more workers than tasks).
+pub fn distribute(ordered: &[usize], nworkers: usize, dist: Distribution) -> Vec<Vec<usize>> {
+    assert!(nworkers >= 1, "need at least one worker");
+    let mut queues: Vec<Vec<usize>> = vec![Vec::new(); nworkers];
+    match dist {
+        Distribution::Block => {
+            let base = ordered.len() / nworkers;
+            let rem = ordered.len() % nworkers;
+            let mut start = 0usize;
+            for (w, queue) in queues.iter_mut().enumerate() {
+                let len = base + usize::from(w < rem);
+                queue.extend_from_slice(&ordered[start..start + len]);
+                start += len;
+            }
+        }
+        Distribution::Cyclic => {
+            for (i, &t) in ordered.iter().enumerate() {
+                queues[i % nworkers].push(t);
+            }
+        }
+    }
+    queues
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{DatasetKind, FileEntry, FileManifest};
+    use crate::prop_assert;
+    use crate::testing::{self, gen};
+
+    fn mk_tasks(rng: &mut Rng, n: usize) -> Vec<Task> {
+        (0..n)
+            .map(|i| Task {
+                id: i,
+                bytes: gen::file_size(rng),
+                obs: rng.below(10_000) as u64,
+                dem_cells: rng.below(1_000) as u64,
+                chrono_key: rng.below(500) as u64,
+                name: format!("f{:04}_{:03}.csv", rng.below(5_000), i),
+            })
+            .collect()
+    }
+
+    fn is_permutation(idx: &[usize], n: usize) -> bool {
+        let mut seen = vec![false; n];
+        if idx.len() != n {
+            return false;
+        }
+        for &i in idx {
+            if i >= n || seen[i] {
+                return false;
+            }
+            seen[i] = true;
+        }
+        true
+    }
+
+    #[test]
+    fn order_tasks_is_a_permutation_with_documented_keys() {
+        testing::check("order_tasks permutation", |rng| {
+            let n = gen::task_count(rng);
+            let tasks = mk_tasks(rng, n);
+            for order in [
+                TaskOrder::Chronological,
+                TaskOrder::LargestFirst,
+                TaskOrder::Random(rng.below(1_000) as u64),
+                TaskOrder::FilenameSorted,
+            ] {
+                let idx = order_tasks(&tasks, order);
+                prop_assert!(
+                    is_permutation(&idx, n),
+                    "{order:?} not a permutation of 0..{n}: {idx:?}"
+                );
+                match order {
+                    TaskOrder::Chronological => {
+                        for pair in idx.windows(2) {
+                            prop_assert!(
+                                tasks[pair[0]].chrono_key <= tasks[pair[1]].chrono_key,
+                                "chrono keys out of order"
+                            );
+                        }
+                    }
+                    TaskOrder::LargestFirst => {
+                        for pair in idx.windows(2) {
+                            prop_assert!(
+                                tasks[pair[0]].bytes >= tasks[pair[1]].bytes,
+                                "sizes out of order"
+                            );
+                        }
+                    }
+                    TaskOrder::FilenameSorted => {
+                        for pair in idx.windows(2) {
+                            prop_assert!(
+                                tasks[pair[0]].name <= tasks[pair[1]].name,
+                                "names out of order"
+                            );
+                        }
+                    }
+                    TaskOrder::Random(_) => {}
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn random_order_is_seed_deterministic() {
+        let mut rng = Rng::new(11);
+        let tasks = mk_tasks(&mut rng, 300);
+        assert_eq!(
+            order_tasks(&tasks, TaskOrder::Random(9)),
+            order_tasks(&tasks, TaskOrder::Random(9))
+        );
+        assert_ne!(
+            order_tasks(&tasks, TaskOrder::Random(9)),
+            order_tasks(&tasks, TaskOrder::Random(10))
+        );
+    }
+
+    #[test]
+    fn stable_tie_breaks_preserve_index_order() {
+        let tasks: Vec<Task> = (0..10)
+            .map(|i| Task {
+                id: i,
+                bytes: 100,
+                obs: 5,
+                dem_cells: 0,
+                chrono_key: 7,
+                name: "same".into(),
+            })
+            .collect();
+        let want: Vec<usize> = (0..10).collect();
+        for order in [
+            TaskOrder::Chronological,
+            TaskOrder::LargestFirst,
+            TaskOrder::FilenameSorted,
+        ] {
+            assert_eq!(order_tasks(&tasks, order), want, "{order:?}");
+        }
+    }
+
+    #[test]
+    fn distribute_returns_a_partition() {
+        testing::check("distribute partition", |rng| {
+            let n = gen::task_count(rng);
+            let nworkers = gen::worker_count(rng);
+            let ordered: Vec<usize> = order_tasks(&mk_tasks(rng, n), TaskOrder::Random(3));
+            for dist in [Distribution::Block, Distribution::Cyclic] {
+                let queues = distribute(&ordered, nworkers, dist);
+                prop_assert!(
+                    queues.len() == nworkers,
+                    "{dist:?}: {} queues for {nworkers} workers",
+                    queues.len()
+                );
+                let mut count = vec![0usize; n];
+                for q in &queues {
+                    for &t in q {
+                        prop_assert!(t < n, "{dist:?}: out-of-range index {t}");
+                        count[t] += 1;
+                    }
+                }
+                prop_assert!(
+                    count.iter().all(|&c| c == 1),
+                    "{dist:?}: not a partition (counts {count:?})"
+                );
+                // Fair sizes: queue lengths differ by at most one.
+                let lo = queues.iter().map(Vec::len).min().unwrap_or(0);
+                let hi = queues.iter().map(Vec::len).max().unwrap_or(0);
+                prop_assert!(hi - lo <= 1, "{dist:?}: unfair split {lo}..{hi}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn block_is_contiguous_and_cyclic_interleaves() {
+        let ordered: Vec<usize> = (0..7).collect();
+        let block = distribute(&ordered, 3, Distribution::Block);
+        assert_eq!(block, vec![vec![0, 1, 2], vec![3, 4], vec![5, 6]]);
+        let cyclic = distribute(&ordered, 3, Distribution::Cyclic);
+        assert_eq!(cyclic, vec![vec![0, 3, 6], vec![1, 4], vec![2, 5]]);
+    }
+
+    #[test]
+    fn distribute_handles_more_workers_than_tasks() {
+        let ordered = [4usize, 2];
+        for dist in [Distribution::Block, Distribution::Cyclic] {
+            let queues = distribute(&ordered, 5, dist);
+            assert_eq!(queues.len(), 5);
+            assert_eq!(queues.iter().map(Vec::len).sum::<usize>(), 2);
+        }
+    }
+
+    #[test]
+    fn from_manifest_matches_manifest_orderings() {
+        let manifest = FileManifest {
+            kind: DatasetKind::Monday,
+            entries: vec![
+                FileEntry { name: "d0h0.csv".into(), size: 100, day: 0, hour: 0, group: 0 },
+                FileEntry { name: "d1h0.csv".into(), size: 300, day: 1, hour: 0, group: 0 },
+                FileEntry { name: "d0h1.csv".into(), size: 200, day: 0, hour: 1, group: 0 },
+            ],
+        };
+        let tasks = Task::from_manifest(&manifest);
+        assert_eq!(tasks.len(), 3);
+        assert_eq!(tasks[1].bytes, 300);
+        assert_eq!(
+            order_tasks(&tasks, TaskOrder::Chronological),
+            manifest.chronological()
+        );
+        assert_eq!(
+            order_tasks(&tasks, TaskOrder::LargestFirst),
+            manifest.largest_first()
+        );
+    }
+}

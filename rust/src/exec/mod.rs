@@ -4,6 +4,10 @@
 //! manager/worker protocol (§II.D) driving *real* work (file parsing,
 //! zipping, PJRT execution) through `std::thread` + `mpsc` channels
 //! (tokio is unavailable offline; the workload is CPU/IO-bound anyway).
+//! All protocol decisions and bookkeeping live in the shared
+//! [`crate::sched`] core; this module supplies the wall-clock backend:
+//! real timestamps, real channels, and the manager's `poll_s` receive
+//! timeout.
 //!
 //! Fidelity notes: the manager polls for completions at `poll_s` exactly
 //! like the paper's prototype; workers block on their task channel instead
@@ -13,6 +17,7 @@
 //! matters for the numbers).
 
 use crate::dist::{distribute, Distribution};
+use crate::sched::{Manager, WorkerLog};
 use crate::selfsched::{SchedTrace, SelfSchedConfig};
 use anyhow::Result;
 use std::sync::mpsc;
@@ -55,7 +60,6 @@ where
 {
     assert!(nworkers >= 1, "need at least one worker");
     assert_eq!(ordered.len(), ntasks, "ordered must cover all tasks");
-    let k = cfg.tasks_per_message.max(1);
     let job_start = Instant::now();
 
     let (done_tx, done_rx) = mpsc::channel::<(usize, Result<()>)>();
@@ -98,64 +102,40 @@ where
         }
         drop(done_tx);
 
-        // Manager: sequential initial fan-out, "as fast as possible".
-        let mut cursor = 0usize;
-        let mut first_grant = vec![None::<Instant>; nworkers];
-        let mut last_done = vec![Duration::ZERO; nworkers];
-        let mut busy_estimate = vec![Duration::ZERO; nworkers];
-        let mut grant_at = vec![Instant::now(); nworkers];
-        let mut tasks_done = vec![0usize; nworkers];
-        let mut in_flight = vec![0usize; nworkers];
-        let mut messages = 0usize;
-        let mut outstanding = 0usize;
+        let mut mgr = Manager::new(ordered, nworkers, cfg);
         let mut first_error: Option<anyhow::Error> = None;
+        let elapsed = || job_start.elapsed().as_secs_f64();
 
-        for w in 0..nworkers {
-            if cursor >= ordered.len() {
+        // Manager: sequential initial fan-out, "as fast as possible".
+        for (w, tx) in task_txs.iter().enumerate() {
+            let Some(msg) = mgr.grant(w, elapsed()) else {
                 break;
-            }
-            let take = k.min(ordered.len() - cursor);
-            let msg = ordered[cursor..cursor + take].to_vec();
-            cursor += take;
-            in_flight[w] = take;
-            first_grant[w] = Some(Instant::now());
-            grant_at[w] = Instant::now();
-            task_txs[w].send(msg).expect("worker alive at fan-out");
-            messages += 1;
-            outstanding += 1;
+            };
+            // A failed send means the worker exited before receiving work,
+            // which only happens on init failure — and the worker queues
+            // its error report in `done_rx` *before* dropping its task
+            // receiver. Leave the grant outstanding: the loop below will
+            // consume that report, which completes the grant and aborts
+            // the run with the worker's error.
+            let _ = tx.send(msg);
         }
 
         // Grant-on-completion loop with the paper's manager-side poll.
-        while outstanding > 0 {
+        while mgr.outstanding() > 0 {
             match done_rx.recv_timeout(Duration::from_secs_f64(cfg.poll_s)) {
                 Ok((w, result)) => {
-                    // An init failure reports without an in-flight message.
-                    if in_flight[w] > 0 {
-                        outstanding -= 1;
-                    }
-                    let now = Instant::now();
-                    tasks_done[w] += in_flight[w];
-                    in_flight[w] = 0;
-                    busy_estimate[w] += now - grant_at[w];
-                    last_done[w] = now - job_start;
+                    // An init failure reports without an in-flight message;
+                    // the core ignores it (0 tasks) and we abort below.
+                    mgr.complete(w, elapsed());
                     if let Err(e) = result {
+                        mgr.abort();
                         if first_error.is_none() {
                             first_error = Some(e);
                         }
                         break; // abandon outstanding work; workers unwind on channel drop
                     }
-                    if first_error.is_none() && cursor < ordered.len() {
-                        let take = k.min(ordered.len() - cursor);
-                        let msg = ordered[cursor..cursor + take].to_vec();
-                        cursor += take;
-                        in_flight[w] = take;
-                        grant_at[w] = Instant::now();
-                        if first_grant[w].is_none() {
-                            first_grant[w] = Some(grant_at[w]);
-                        }
+                    if let Some(msg) = mgr.grant(w, elapsed()) {
                         task_txs[w].send(msg).expect("worker alive");
-                        messages += 1;
-                        outstanding += 1;
                     }
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => continue, // next poll
@@ -167,22 +147,7 @@ where
         if let Some(e) = first_error {
             return Err(e);
         }
-        let job_time = job_start.elapsed().as_secs_f64();
-        let worker_times: Vec<f64> = (0..nworkers)
-            .map(|w| match first_grant[w] {
-                Some(fg) => (last_done[w].as_secs_f64()
-                    - (fg - job_start).as_secs_f64())
-                .max(0.0),
-                None => 0.0,
-            })
-            .collect();
-        Ok(SchedTrace {
-            job_time,
-            worker_times,
-            worker_busy: busy_estimate.iter().map(Duration::as_secs_f64).collect(),
-            tasks_per_worker: tasks_done,
-            messages_sent: messages,
-        })
+        Ok(mgr.into_trace(job_start.elapsed().as_secs_f64()))
     })
 }
 
@@ -202,18 +167,18 @@ where
     assert_eq!(ordered.len(), ntasks);
     let queues = distribute(ordered, nworkers, dist);
     let job_start = Instant::now();
-    let results: Vec<Result<(f64, usize)>> = std::thread::scope(|scope| {
+    let results: Vec<Result<(f64, f64, usize)>> = std::thread::scope(|scope| {
         let handles: Vec<_> = queues
             .iter()
             .enumerate()
             .map(|(w, queue)| {
                 let work = &work;
-                scope.spawn(move || -> Result<(f64, usize)> {
-                    let start = Instant::now();
+                scope.spawn(move || -> Result<(f64, f64, usize)> {
+                    let begin = job_start.elapsed().as_secs_f64();
                     for &ti in queue {
                         work(w, ti)?;
                     }
-                    Ok((start.elapsed().as_secs_f64(), queue.len()))
+                    Ok((begin, job_start.elapsed().as_secs_f64(), queue.len()))
                 })
             })
             .collect();
@@ -222,20 +187,13 @@ where
             .map(|h| h.join().expect("worker panicked"))
             .collect()
     });
-    let mut worker_times = Vec::with_capacity(nworkers);
-    let mut tasks_done = Vec::with_capacity(nworkers);
-    for r in results {
-        let (t, n) = r?;
-        worker_times.push(t);
-        tasks_done.push(n);
+    let mut log = WorkerLog::new(nworkers);
+    for (w, r) in results.into_iter().enumerate() {
+        let (begin, end, n) = r?;
+        log.record_start(w, begin);
+        log.record_completion(w, end, end - begin, n);
     }
-    Ok(SchedTrace {
-        job_time: job_start.elapsed().as_secs_f64(),
-        worker_times: worker_times.clone(),
-        worker_busy: worker_times,
-        tasks_per_worker: tasks_done,
-        messages_sent: 0,
-    })
+    Ok(log.trace(job_start.elapsed().as_secs_f64()))
 }
 
 #[cfg(test)]
@@ -310,6 +268,26 @@ mod tests {
         });
         assert!(err.is_err());
         assert!(ran.load(Ordering::SeqCst) < n, "should stop early");
+    }
+
+    #[test]
+    fn init_failure_surfaces_as_error() {
+        let n = 20;
+        let ordered: Vec<usize> = (0..n).collect();
+        let err = run_self_scheduled_init(
+            n,
+            &ordered,
+            3,
+            fast_cfg(),
+            |w| {
+                if w == 2 {
+                    anyhow::bail!("worker 2 cannot init");
+                }
+                Ok(0usize)
+            },
+            |_, _, _| Ok(()),
+        );
+        assert!(err.is_err());
     }
 
     #[test]

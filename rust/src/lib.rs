@@ -7,10 +7,11 @@
 //! * **L3 (this crate)** — the paper's coordination contribution: the
 //!   triples-mode job launch model ([`triples`]), block/cyclic batch
 //!   distribution and task organization ([`dist`]), the self-scheduling
-//!   manager/worker protocol ([`selfsched`]), a discrete-event cluster
-//!   simulator calibrated to the LLSC ([`simcluster`]), a real thread-pool
-//!   executor ([`exec`]), and the three-stage processing workflow
-//!   ([`workflow`]): organize → archive → process.
+//!   protocol parameters ([`selfsched`]) and its clock-generic manager
+//!   core ([`sched`]), a discrete-event cluster simulator calibrated to
+//!   the LLSC ([`simcluster`]), a real thread-pool executor ([`exec`]) —
+//!   both driving the same [`sched`] core — and the three-stage processing
+//!   workflow ([`workflow`]): organize → archive → process.
 //! * **L2/L1 (build-time Python)** — the stage-3 numeric hot spot (track
 //!   resampling, dynamic rates, DEM/AGL) written in JAX + Pallas, AOT-lowered
 //!   to HLO text and executed from rust via PJRT ([`runtime`]). Python never
@@ -36,6 +37,7 @@ pub mod dem;
 pub mod dist;
 pub mod exec;
 pub mod metrics;
+pub mod sched;
 pub mod selfsched;
 pub mod simcluster;
 pub mod triples;

@@ -5,14 +5,20 @@
 //! HLO *text* plus a `key=value` manifest. At run time this module:
 //!
 //! 1. parses the manifest for the batch shapes and ABI order,
-//! 2. parses the HLO text into an [`xla::HloModuleProto`] (text, not a
+//! 2. parses the HLO text into an `HloModuleProto` (text, not a
 //!    serialized proto: xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit ids),
 //! 3. compiles it once on the PJRT CPU client,
 //! 4. executes it from the stage-3 worker hot path with zero Python.
+//!
+//! The offline build has no `xla` crate, so [`model`] is backed by
+//! [`xla_stub`]: an API-compatible native CPU implementation of the track
+//! model's reference semantics, pinned against the Python oracle by the
+//! checked-in golden file (`rust/tests/runtime_golden.rs`).
 
 pub mod batch;
 pub mod manifest;
 pub mod model;
+pub mod xla_stub;
 
 pub use batch::{TrackBatch, TrackOutputs};
 pub use manifest::ArtifactManifest;

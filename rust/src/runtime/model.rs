@@ -2,6 +2,9 @@
 
 use crate::runtime::batch::{TrackBatch, TrackOutputs};
 use crate::runtime::manifest::ArtifactManifest;
+// The offline toolchain has no real `xla` crate; the native stub mirrors
+// its API (swap this alias for `use xla;` on a PJRT-enabled build).
+use crate::runtime::xla_stub as xla;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};

@@ -1,0 +1,423 @@
+//! Native CPU stand-in for the `xla` crate's PJRT surface.
+//!
+//! The offline build environment has no `xla`/`xla_extension` crate, so
+//! [`crate::runtime::model`] aliases this module as `xla` and everything
+//! compiles with zero external dependencies. The API mirrors the subset of
+//! xla-rs the runtime uses (client, compile, device buffers, execute,
+//! literals); a build that does have the real crate only needs to switch
+//! the alias back.
+//!
+//! Instead of interpreting HLO, [`PjRtLoadedExecutable::execute_b`]
+//! evaluates the track model's *reference semantics* natively in `f32` —
+//! a line-for-line port of `python/compile/kernels/ref.py` (linear
+//! resampling onto the per-row grid, central-difference rates, and
+//! border-clamped bilinear AGL). The checked-in
+//! `artifacts/golden_track_model.txt` pins these semantics: the
+//! `runtime_golden` integration test feeds the Python oracle's inputs
+//! through this path and requires oracle-level agreement, so any drift
+//! between the artifact model and this fallback is caught by `cargo test`.
+//! Shapes are inferred from the uploaded buffer dims, exactly as the real
+//! PJRT executable would see them.
+
+use anyhow::{bail, Context, Result};
+
+const BIG_T: f32 = 1.0e9;
+const EPS_T: f32 = 1.0e-6;
+const NM_PER_DEG: f32 = 60.0;
+const FT_PER_M: f32 = 3.28084;
+
+/// Parsed (but uninterpreted) HLO module text.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    /// Retained for diagnostics only; the native path executes the
+    /// reference semantics, not this text.
+    pub text_len: usize,
+}
+
+impl HloModuleProto {
+    /// Read an HLO text artifact. The content is validated to be non-empty
+    /// and is otherwise carried as provenance.
+    pub fn from_text_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading HLO text {path}"))?;
+        if text.trim().is_empty() {
+            bail!("HLO text {path} is empty");
+        }
+        Ok(HloModuleProto { text_len: text.len() })
+    }
+}
+
+/// Computation handle (mirrors `xla::XlaComputation`).
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    text_len: usize,
+}
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(proto: &HloModuleProto) -> Self {
+        XlaComputation { text_len: proto.text_len }
+    }
+}
+
+/// Host/device value: a flat f32 array with dims, or a tuple of them.
+#[derive(Debug, Clone)]
+pub enum Literal {
+    /// Row-major f32 array.
+    Array { values: Vec<f32>, dims: Vec<usize> },
+    /// Tuple of literals (the model's 7-field output).
+    Tuple(Vec<Literal>),
+}
+
+/// Element types downloadable from a [`Literal`].
+pub trait NativeType: Copy {
+    /// Convert from the stub's single storage type.
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+}
+
+impl Literal {
+    /// Tuple fields, consuming the literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(parts) => Ok(parts),
+            Literal::Array { .. } => bail!("literal is not a tuple"),
+        }
+    }
+
+    /// Flat element download.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match self {
+            Literal::Array { values, .. } => {
+                Ok(values.iter().map(|&v| T::from_f32(v)).collect())
+            }
+            Literal::Tuple(_) => bail!("literal is a tuple, not an array"),
+        }
+    }
+}
+
+/// Device-resident buffer (mirrors `xla::PjRtBuffer`).
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    data: Literal,
+}
+
+impl AsRef<PjRtBuffer> for PjRtBuffer {
+    fn as_ref(&self) -> &PjRtBuffer {
+        self
+    }
+}
+
+impl PjRtBuffer {
+    /// Download to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.data.clone())
+    }
+
+    fn array(&self) -> Result<(&[f32], &[usize])> {
+        match &self.data {
+            Literal::Array { values, dims } => Ok((values, dims)),
+            Literal::Tuple(_) => bail!("argument buffer holds a tuple"),
+        }
+    }
+}
+
+/// CPU client (mirrors `xla::PjRtClient`).
+#[derive(Debug, Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// The native CPU "device".
+    pub fn cpu() -> Result<Self> {
+        Ok(PjRtClient)
+    }
+
+    /// Upload a host array.
+    pub fn buffer_from_host_buffer(
+        &self,
+        data: &[f32],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let want: usize = dims.iter().product();
+        if data.len() != want {
+            bail!("buffer has {} elements, dims {:?} want {want}", data.len(), dims);
+        }
+        Ok(PjRtBuffer {
+            data: Literal::Array { values: data.to_vec(), dims: dims.to_vec() },
+        })
+    }
+
+    /// "Compile" the computation: the native path has nothing to lower,
+    /// so this only records the module for diagnostics.
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable { _hlo_text_len: comp.text_len })
+    }
+}
+
+/// Loaded executable (mirrors `xla::PjRtLoadedExecutable`).
+#[derive(Debug, Clone)]
+pub struct PjRtLoadedExecutable {
+    _hlo_text_len: usize,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute on buffer arguments in the track-model ABI order
+    /// (`obs_t, obs_lat, obs_lon, obs_alt, obs_valid, grid_t, dem,
+    /// dem_meta`), returning `[[tuple]]` like PJRT's
+    /// per-device/per-output nesting.
+    pub fn execute_b<T: AsRef<PjRtBuffer>>(&self, args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        if args.len() != 8 {
+            bail!("track model expects 8 inputs, got {}", args.len());
+        }
+        let arrays: Vec<(&[f32], &[usize])> = args
+            .iter()
+            .map(|a| a.as_ref().array())
+            .collect::<Result<_>>()?;
+        let (b, n) = match arrays[0].1 {
+            [b, n] => (*b, *n),
+            other => bail!("obs_t dims {other:?}, want [b, n]"),
+        };
+        let m = match arrays[5].1 {
+            [gb, m] if *gb == b => *m,
+            other => bail!("grid_t dims {other:?}, want [{b}, m]"),
+        };
+        let tile = match arrays[6].1 {
+            [th, tw] if th == tw => *th,
+            other => bail!("dem dims {other:?}, want square"),
+        };
+        if m < 2 || tile < 2 {
+            bail!("degenerate shapes: m={m} tile={tile}");
+        }
+        for (i, (values, _)) in arrays.iter().enumerate().take(5) {
+            if values.len() != b * n {
+                bail!("input {i} has {} elements, want {}", values.len(), b * n);
+            }
+        }
+        if arrays[7].0.len() != 4 {
+            bail!("dem_meta has {} elements, want 4", arrays[7].0.len());
+        }
+        let meta: [f32; 4] = [arrays[7].0[0], arrays[7].0[1], arrays[7].0[2], arrays[7].0[3]];
+
+        let mut out: [Vec<f32>; 7] = std::array::from_fn(|_| Vec::with_capacity(b * m));
+        for row in 0..b {
+            let s = row * n;
+            let g = row * m;
+            let fields = interp_row(
+                &arrays[0].0[s..s + n],
+                &arrays[1].0[s..s + n],
+                &arrays[2].0[s..s + n],
+                &arrays[3].0[s..s + n],
+                &arrays[4].0[s..s + n],
+                &arrays[5].0[g..g + m],
+                arrays[6].0,
+                tile,
+                meta,
+            );
+            for (dst, src) in out.iter_mut().zip(fields) {
+                dst.extend(src);
+            }
+        }
+        let parts: Vec<Literal> = out
+            .into_iter()
+            .map(|values| Literal::Array { values, dims: vec![b, m] })
+            .collect();
+        Ok(vec![vec![PjRtBuffer { data: Literal::Tuple(parts) }]])
+    }
+}
+
+/// Resample one padded track row onto its grid and compute rates + AGL —
+/// the `f32` port of `ref._interp_one` + `ref.agl_tracks_ref`. Returns
+/// `[lat, lon, alt, vrate, gspeed, agl, valid]`, each of length `m`.
+#[allow(clippy::too_many_arguments)]
+fn interp_row(
+    t: &[f32],
+    lat: &[f32],
+    lon: &[f32],
+    alt: &[f32],
+    valid: &[f32],
+    grid: &[f32],
+    dem: &[f32],
+    tile: usize,
+    meta: [f32; 4],
+) -> [Vec<f32>; 7] {
+    let n = t.len();
+    let m = grid.len();
+    let n_valid: f32 = valid.iter().sum();
+    let last = (n_valid - 1.0).max(0.0);
+    let ovalid: f32 = if n_valid >= 2.0 { 1.0 } else { 0.0 };
+
+    let mut o_lat = vec![0.0f32; m];
+    let mut o_lon = vec![0.0f32; m];
+    let mut o_alt = vec![0.0f32; m];
+    for j in 0..m {
+        // Rank of the grid point among valid observation times.
+        let mut cnt = 0.0f32;
+        for i in 0..n {
+            let t_eff = if valid[i] > 0.5 { t[i] } else { BIG_T };
+            if t_eff <= grid[j] {
+                cnt += 1.0;
+            }
+        }
+        let idx_lo = (cnt - 1.0).clamp(0.0, last) as usize;
+        let idx_hi = cnt.clamp(0.0, last) as usize;
+        let t_lo = t[idx_lo];
+        let t_hi = t[idx_hi];
+        let dt = t_hi - t_lo;
+        let frac = if dt > EPS_T {
+            ((grid[j] - t_lo) / dt).clamp(0.0, 1.0)
+        } else {
+            0.0
+        };
+        o_lat[j] = lat[idx_lo] + frac * (lat[idx_hi] - lat[idx_lo]);
+        o_lon[j] = lon[idx_lo] + frac * (lon[idx_hi] - lon[idx_lo]);
+        o_alt[j] = alt[idx_lo] + frac * (alt[idx_hi] - alt[idx_lo]);
+    }
+
+    // Central differences on the uniform grid (one-sided at the ends).
+    let gdt = (grid[1] - grid[0]).max(EPS_T);
+    let cdiff = |x: &[f32], j: usize| -> f32 {
+        let next = x[(j + 1).min(m - 1)];
+        let prev = x[j.saturating_sub(1)];
+        let span: f32 = if j == 0 || j == m - 1 { 1.0 } else { 2.0 };
+        (next - prev) / (span * gdt)
+    };
+
+    let mut out_lat = vec![0.0f32; m];
+    let mut out_lon = vec![0.0f32; m];
+    let mut out_alt = vec![0.0f32; m];
+    let mut vrate = vec![0.0f32; m];
+    let mut gspeed = vec![0.0f32; m];
+    let mut agl = vec![0.0f32; m];
+    let valid_out = vec![ovalid; m];
+    for j in 0..m {
+        vrate[j] = cdiff(&o_alt, j) * 60.0 * ovalid;
+        let dlat = cdiff(&o_lat, j) * NM_PER_DEG;
+        let dlon = cdiff(&o_lon, j) * NM_PER_DEG * o_lat[j].to_radians().cos();
+        gspeed[j] = (dlat * dlat + dlon * dlon).sqrt() * 3600.0 * ovalid;
+        out_lat[j] = o_lat[j] * ovalid;
+        out_lon[j] = o_lon[j] * ovalid;
+        out_alt[j] = o_alt[j] * ovalid;
+        let elev_ft = bilinear(dem, tile, meta, out_lat[j], out_lon[j]) * FT_PER_M;
+        agl[j] = (out_alt[j] - elev_ft) * ovalid;
+    }
+    [out_lat, out_lon, out_alt, vrate, gspeed, agl, valid_out]
+}
+
+/// Border-clamped bilinear DEM sample in metres (`ref._bilinear_one`).
+fn bilinear(dem: &[f32], tile: usize, meta: [f32; 4], lat: f32, lon: f32) -> f32 {
+    let hi = tile as f32 - 1.000_001;
+    let ri = ((lat - meta[0]) / meta[2]).clamp(0.0, hi);
+    let ci = ((lon - meta[1]) / meta[3]).clamp(0.0, hi);
+    let r0 = ri.floor() as usize;
+    let c0 = ci.floor() as usize;
+    let fr = ri - r0 as f32;
+    let fc = ci - c0 as f32;
+    let at = |r: usize, c: usize| dem[r * tile + c];
+    let top = at(r0, c0) * (1.0 - fc) + at(r0, c0 + 1) * fc;
+    let bot = at(r0 + 1, c0) * (1.0 - fc) + at(r0 + 1, c0 + 1) * fc;
+    top * (1.0 - fr) + bot * fr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn upload(client: &PjRtClient, values: Vec<f32>, dims: &[usize]) -> PjRtBuffer {
+        client.buffer_from_host_buffer(&values, dims, None).unwrap()
+    }
+
+    /// Run a tiny 1-row model through the full stub API surface.
+    fn run_tiny(valid: Vec<f32>) -> Vec<Vec<f32>> {
+        let (b, n, m, tile) = (1usize, 4usize, 5usize, 2usize);
+        let client = PjRtClient::cpu().unwrap();
+        let exe = client
+            .compile(&XlaComputation::from_proto(&HloModuleProto { text_len: 1 }))
+            .unwrap();
+        let t = vec![0.0, 10.0, 20.0, 30.0];
+        let lat = vec![40.0, 40.0, 40.0, 40.0];
+        let lon = vec![-71.0, -71.0, -71.0, -71.0];
+        let alt = vec![1000.0, 1100.0, 1200.0, 1300.0];
+        let grid: Vec<f32> = (0..m).map(|j| j as f32 * 30.0 / (m - 1) as f32).collect();
+        let dem = vec![100.0, 100.0, 100.0, 100.0];
+        let meta = vec![39.0f32, -72.0, 1.0, 1.0];
+        let bufs = vec![
+            upload(&client, t, &[b, n]),
+            upload(&client, lat, &[b, n]),
+            upload(&client, lon, &[b, n]),
+            upload(&client, alt, &[b, n]),
+            upload(&client, valid, &[b, n]),
+            upload(&client, grid, &[b, m]),
+            upload(&client, dem, &[tile, tile]),
+            upload(&client, meta, &[4]),
+        ];
+        let refs: Vec<&PjRtBuffer> = bufs.iter().collect();
+        let result = exe.execute_b::<&PjRtBuffer>(&refs).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap();
+        result
+            .to_tuple()
+            .unwrap()
+            .iter()
+            .map(|p| p.to_vec::<f32>().unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn linear_track_resamples_exactly() {
+        let outs = run_tiny(vec![1.0; 4]);
+        let (alt, vrate, agl, valid) = (&outs[2], &outs[3], &outs[5], &outs[6]);
+        assert!(valid.iter().all(|&v| v == 1.0));
+        // Altitude is linear 1000..1300 over t=0..30; grid is uniform.
+        for (j, &a) in alt.iter().enumerate() {
+            let want = 1000.0 + 300.0 * j as f32 / 4.0;
+            assert!((a - want).abs() < 1e-2, "alt[{j}] {a} vs {want}");
+        }
+        // 10 ft/s climb = 600 ft/min everywhere on a linear profile.
+        for &v in vrate {
+            assert!((v - 600.0).abs() < 1.0, "vrate {v}");
+        }
+        // Flat 100 m DEM: AGL = alt - 328.084.
+        for (j, &a) in agl.iter().enumerate() {
+            let want = alt[j] - 100.0 * FT_PER_M;
+            assert!((a - want).abs() < 0.1, "agl[{j}] {a} vs {want}");
+        }
+    }
+
+    #[test]
+    fn under_two_valid_observations_masks_row() {
+        let outs = run_tiny(vec![1.0, 0.0, 0.0, 0.0]);
+        for field in &outs {
+            assert!(field.iter().all(|&v| v == 0.0), "row not masked: {field:?}");
+        }
+    }
+
+    #[test]
+    fn bilinear_interpolates_and_clamps() {
+        let dem = vec![0.0, 10.0, 20.0, 30.0]; // 2x2
+        let meta = [0.0f32, 0.0, 1.0, 1.0];
+        // Centre of the cell: mean of the four corners.
+        let mid = bilinear(&dem, 2, meta, 0.5, 0.5);
+        assert!((mid - 15.0).abs() < 1e-4, "{mid}");
+        // Far outside: clamps to the nearest corner.
+        let far = bilinear(&dem, 2, meta, -100.0, -100.0);
+        assert!((far - 0.0).abs() < 1e-4, "{far}");
+    }
+
+    #[test]
+    fn shape_mismatches_are_rejected() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.buffer_from_host_buffer(&[1.0, 2.0], &[3], None).is_err());
+        let exe = client
+            .compile(&XlaComputation::from_proto(&HloModuleProto { text_len: 1 }))
+            .unwrap();
+        let one = upload(&client, vec![0.0], &[1, 1]);
+        let refs: Vec<&PjRtBuffer> = vec![&one; 3];
+        assert!(exe.execute_b::<&PjRtBuffer>(&refs).is_err());
+    }
+}

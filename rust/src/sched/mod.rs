@@ -1,0 +1,418 @@
+//! Clock-generic scheduling core: the §II.D manager protocol, exactly once.
+//!
+//! The self-scheduling protocol (sequential initial fan-out, grant-on-
+//! completion, `tasks_per_message` packing, first-error abort) runs on two
+//! backends — real OS threads in [`crate::exec`] and the virtual-time fluid
+//! engine in [`crate::simcluster`]. Both used to hand-roll the manager's
+//! bookkeeping; now they drive the same state machine:
+//!
+//! * [`Manager`] — the manager's decisions and protocol state: which tasks
+//!   go into the next message, which workers have work in flight, when to
+//!   stop granting. It never reads a clock; the backend passes timestamps
+//!   (seconds since job start — wall-clock or virtual, the core cannot
+//!   tell).
+//! * [`WorkerLog`] — per-worker span/busy/count accounting plus the message
+//!   counter, shared by self-scheduled *and* batch runs in both backends,
+//!   so every [`SchedTrace`] in the system is assembled by the same code.
+//!
+//! The backend owns everything clock- and transport-specific: *when* to
+//! call [`Manager::grant`] (the `poll_s` poll loop in `exec`; poll/message
+//! delays folded into event times in `simcluster`) and *how* the message
+//! reaches the worker (an `mpsc` channel; a simulated start event).
+
+use crate::selfsched::{SchedTrace, SelfSchedConfig};
+
+/// Per-worker bookkeeping for one run, in seconds since job start.
+///
+/// Used directly by batch runs and embedded in [`Manager`] for
+/// self-scheduled runs; [`WorkerLog::trace`] is the only place a
+/// [`SchedTrace`] is assembled.
+#[derive(Debug, Clone)]
+pub struct WorkerLog {
+    /// First grant/start per worker; `INFINITY` = never started.
+    first_start: Vec<f64>,
+    /// Latest completion per worker.
+    last_done: Vec<f64>,
+    /// Accumulated busy time per worker.
+    busy: Vec<f64>,
+    /// Tasks completed per worker.
+    tasks_done: Vec<usize>,
+    /// Allocation messages sent (0 for batch runs).
+    messages: usize,
+}
+
+impl WorkerLog {
+    /// Empty log for `nworkers` workers.
+    pub fn new(nworkers: usize) -> Self {
+        WorkerLog {
+            first_start: vec![f64::INFINITY; nworkers],
+            last_done: vec![0.0; nworkers],
+            busy: vec![0.0; nworkers],
+            tasks_done: vec![0; nworkers],
+            messages: 0,
+        }
+    }
+
+    /// Number of workers tracked.
+    pub fn nworkers(&self) -> usize {
+        self.first_start.len()
+    }
+
+    /// Record that worker `w` first received work at `now_s` (later calls
+    /// for the same worker are no-ops).
+    pub fn record_start(&mut self, w: usize, now_s: f64) {
+        if !self.first_start[w].is_finite() {
+            self.first_start[w] = now_s;
+        }
+    }
+
+    /// Count one allocation message.
+    pub fn record_message(&mut self) {
+        self.messages += 1;
+    }
+
+    /// Record that worker `w` finished `ntasks` tasks at `now_s`, having
+    /// been busy for `busy_s` of the interval since they were granted.
+    pub fn record_completion(&mut self, w: usize, now_s: f64, busy_s: f64, ntasks: usize) {
+        self.busy[w] += busy_s.max(0.0);
+        self.last_done[w] = self.last_done[w].max(now_s);
+        self.tasks_done[w] += ntasks;
+    }
+
+    /// Latest completion across all workers (the virtual-time job end).
+    pub fn last_completion(&self) -> f64 {
+        self.last_done.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Messages recorded so far.
+    pub fn messages_sent(&self) -> usize {
+        self.messages
+    }
+
+    /// Assemble the run's [`SchedTrace`]. `job_time` is the manager-side
+    /// job duration (backends measure it; the virtual-time backend passes
+    /// [`WorkerLog::last_completion`]).
+    pub fn trace(&self, job_time: f64) -> SchedTrace {
+        let worker_times = self
+            .first_start
+            .iter()
+            .zip(&self.last_done)
+            .map(|(&first, &last)| {
+                if first.is_finite() {
+                    (last - first).max(0.0)
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        SchedTrace {
+            job_time,
+            worker_times,
+            worker_busy: self.busy.clone(),
+            tasks_per_worker: self.tasks_done.clone(),
+            messages_sent: self.messages,
+        }
+    }
+}
+
+/// The §II.D manager state machine over an ordered task list.
+///
+/// Drive it with [`Manager::grant`] whenever a worker is (or becomes)
+/// idle and [`Manager::complete`] / [`Manager::complete_with_busy`] when a
+/// worker reports; the core enforces the protocol invariants (packing, at
+/// most one outstanding message per worker, no grants after an abort).
+#[derive(Debug)]
+pub struct Manager<'a> {
+    cfg: SelfSchedConfig,
+    /// Task visit order (from [`crate::dist::order_tasks`]).
+    ordered: &'a [usize],
+    /// Next unallocated position in `ordered`.
+    cursor: usize,
+    /// Tasks in flight per worker (0 = idle).
+    in_flight: Vec<usize>,
+    /// Grant timestamp per worker (valid while `in_flight[w] > 0`).
+    granted_at: Vec<f64>,
+    /// Messages granted but not yet completed.
+    outstanding: usize,
+    /// Set by [`Manager::abort`]; stops all further granting.
+    aborted: bool,
+    log: WorkerLog,
+}
+
+impl<'a> Manager<'a> {
+    /// New manager over `ordered` for `nworkers` workers.
+    pub fn new(ordered: &'a [usize], nworkers: usize, cfg: SelfSchedConfig) -> Self {
+        assert!(nworkers >= 1, "need at least one worker");
+        Manager {
+            cfg,
+            ordered,
+            cursor: 0,
+            in_flight: vec![0; nworkers],
+            granted_at: vec![0.0; nworkers],
+            outstanding: 0,
+            aborted: false,
+            log: WorkerLog::new(nworkers),
+        }
+    }
+
+    /// Protocol parameters for this run.
+    pub fn cfg(&self) -> SelfSchedConfig {
+        self.cfg
+    }
+
+    /// Pack and grant the next message to idle worker `w` at `now_s`.
+    /// Returns `None` when there is nothing (or no permission) to grant:
+    /// tasks exhausted, run aborted, or `w` already has work in flight.
+    pub fn grant(&mut self, w: usize, now_s: f64) -> Option<Vec<usize>> {
+        if self.aborted || self.cursor >= self.ordered.len() || self.in_flight[w] > 0 {
+            return None;
+        }
+        let k = self.cfg.tasks_per_message.max(1);
+        let take = k.min(self.ordered.len() - self.cursor);
+        let msg = self.ordered[self.cursor..self.cursor + take].to_vec();
+        self.cursor += take;
+        self.in_flight[w] = take;
+        self.granted_at[w] = now_s;
+        self.outstanding += 1;
+        self.log.record_start(w, now_s);
+        self.log.record_message();
+        Some(msg)
+    }
+
+    /// Worker `w` reported completion at `now_s`; busy time defaults to
+    /// the full grant-to-report interval (what a wall-clock manager can
+    /// observe). Returns the number of tasks completed — 0 for a report
+    /// with nothing in flight (e.g. a worker-init failure), which leaves
+    /// all bookkeeping untouched.
+    pub fn complete(&mut self, w: usize, now_s: f64) -> usize {
+        let busy = (now_s - self.granted_at[w]).max(0.0);
+        self.complete_with_busy(w, now_s, busy)
+    }
+
+    /// Like [`Manager::complete`] with an explicit busy time (the
+    /// virtual-time backend knows exactly when work started).
+    pub fn complete_with_busy(&mut self, w: usize, now_s: f64, busy_s: f64) -> usize {
+        let ntasks = self.in_flight[w];
+        if ntasks == 0 {
+            return 0;
+        }
+        self.in_flight[w] = 0;
+        self.outstanding -= 1;
+        self.log.record_completion(w, now_s, busy_s, ntasks);
+        ntasks
+    }
+
+    /// Stop granting (first-error abort); outstanding work may still
+    /// complete or be abandoned by the backend.
+    pub fn abort(&mut self) {
+        self.aborted = true;
+    }
+
+    /// True once [`Manager::abort`] has been called.
+    pub fn aborted(&self) -> bool {
+        self.aborted
+    }
+
+    /// Messages granted but not yet completed.
+    pub fn outstanding(&self) -> usize {
+        self.outstanding
+    }
+
+    /// Tasks not yet allocated to any worker.
+    pub fn remaining(&self) -> usize {
+        self.ordered.len() - self.cursor
+    }
+
+    /// The run's bookkeeping so far.
+    pub fn log(&self) -> &WorkerLog {
+        &self.log
+    }
+
+    /// Finish the run and assemble its [`SchedTrace`].
+    pub fn into_trace(self, job_time: f64) -> SchedTrace {
+        self.log.trace(job_time)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{order_tasks, Distribution, Task, TaskOrder};
+    use crate::selfsched::AllocMode;
+    use crate::simcluster::{CostModel, SimConfig, Simulator, Stage};
+    use crate::triples::TriplesConfig;
+
+    fn cfg_k(k: usize) -> SelfSchedConfig {
+        SelfSchedConfig { poll_s: 0.01, msg_s: 0.001, tasks_per_message: k }
+    }
+
+    #[test]
+    fn fan_out_grants_pack_and_count() {
+        let ordered: Vec<usize> = (0..10).collect();
+        let mut mgr = Manager::new(&ordered, 4, cfg_k(3));
+        assert_eq!(mgr.grant(0, 0.0), Some(vec![0, 1, 2]));
+        assert_eq!(mgr.grant(1, 0.1), Some(vec![3, 4, 5]));
+        // A busy worker cannot be granted again.
+        assert_eq!(mgr.grant(0, 0.2), None);
+        assert_eq!(mgr.grant(2, 0.2), Some(vec![6, 7, 8]));
+        // Final short message.
+        assert_eq!(mgr.grant(3, 0.3), Some(vec![9]));
+        assert_eq!(mgr.remaining(), 0);
+        assert_eq!(mgr.outstanding(), 4);
+        assert_eq!(mgr.grant(3, 0.4), None); // still in flight
+        assert_eq!(mgr.complete(3, 0.5), 1);
+        assert_eq!(mgr.grant(3, 0.5), None); // exhausted
+        assert_eq!(mgr.log().messages_sent(), 4);
+    }
+
+    #[test]
+    fn completion_accounting_feeds_the_trace() {
+        let ordered: Vec<usize> = (0..4).collect();
+        let mut mgr = Manager::new(&ordered, 2, cfg_k(1));
+        mgr.grant(0, 1.0);
+        mgr.grant(1, 2.0);
+        assert_eq!(mgr.complete(0, 5.0), 1);
+        mgr.grant(0, 5.0);
+        assert_eq!(mgr.complete(0, 6.0), 1);
+        assert_eq!(mgr.complete(1, 9.0), 1);
+        mgr.grant(1, 9.0);
+        assert_eq!(mgr.complete(1, 10.0), 1);
+        assert_eq!(mgr.outstanding(), 0);
+        let trace = mgr.into_trace(10.5);
+        assert_eq!(trace.tasks_per_worker, vec![2, 2]);
+        assert_eq!(trace.messages_sent, 4);
+        assert!((trace.worker_times[0] - 5.0).abs() < 1e-12); // 6.0 - 1.0
+        assert!((trace.worker_times[1] - 8.0).abs() < 1e-12); // 10.0 - 2.0
+        assert!((trace.worker_busy[0] - 5.0).abs() < 1e-12); // (5-1) + (6-5)
+        trace.check_invariants(4).unwrap();
+    }
+
+    #[test]
+    fn abort_stops_granting_and_spurious_reports_are_ignored() {
+        let ordered: Vec<usize> = (0..10).collect();
+        let mut mgr = Manager::new(&ordered, 2, cfg_k(1));
+        mgr.grant(0, 0.0);
+        // Init-failure style report from a worker with nothing in flight.
+        assert_eq!(mgr.complete(1, 0.5), 0);
+        assert_eq!(mgr.outstanding(), 1);
+        mgr.abort();
+        assert!(mgr.aborted());
+        assert_eq!(mgr.grant(1, 0.6), None);
+        assert_eq!(mgr.complete(0, 1.0), 1);
+        let trace = mgr.into_trace(1.0);
+        assert_eq!(trace.tasks_per_worker, vec![1, 0]);
+        assert_eq!(trace.worker_times[1], 0.0);
+        assert_eq!(trace.worker_busy[1], 0.0);
+    }
+
+    #[test]
+    fn worker_log_trace_matches_hand_computation() {
+        let mut log = WorkerLog::new(3);
+        log.record_start(0, 0.0);
+        log.record_completion(0, 4.0, 3.0, 2);
+        log.record_start(1, 1.0);
+        log.record_completion(1, 3.0, 2.0, 1);
+        // Worker 2 never starts.
+        let trace = log.trace(4.5);
+        assert_eq!(trace.worker_times, vec![4.0, 2.0, 0.0]);
+        assert_eq!(trace.worker_busy, vec![3.0, 2.0, 0.0]);
+        assert_eq!(trace.tasks_per_worker, vec![2, 1, 0]);
+        assert_eq!(trace.messages_sent, 0);
+        assert_eq!(log.last_completion(), 4.0);
+        trace.check_invariants(3).unwrap();
+    }
+
+    /// Satellite acceptance: the wall-clock executor and the virtual-time
+    /// simulator, driven by the same core on the same config, must agree
+    /// on the protocol-level outcome — total tasks completed and messages
+    /// sent — for every packing factor.
+    #[test]
+    fn sim_and_exec_backends_agree_on_protocol_outcome() {
+        let n = 53;
+        let tasks: Vec<Task> = (0..n)
+            .map(|i| Task {
+                id: i,
+                bytes: 1_000_000 + (i as u64 % 7) * 500_000,
+                obs: 100,
+                dem_cells: 0,
+                chrono_key: i as u64,
+                name: format!("t{i:03}"),
+            })
+            .collect();
+        let ordered = order_tasks(&tasks, TaskOrder::LargestFirst);
+        let workers = 7;
+        for k in [1usize, 3, 10, 300] {
+            let ss = SelfSchedConfig { poll_s: 0.005, msg_s: 0.0, tasks_per_message: k };
+            let sim = Simulator::run(
+                &SimConfig {
+                    triples: TriplesConfig {
+                        nodes: 1,
+                        nppn: workers + 1,
+                        threads: 1,
+                        slots_per_job: 1,
+                        allocation: 4096,
+                    },
+                    alloc: AllocMode::SelfSched(ss),
+                    stage: Stage::Organize,
+                    cost: CostModel::paper_calibrated(),
+                },
+                &tasks,
+                &ordered,
+            );
+            let real =
+                crate::exec::run_self_scheduled(n, &ordered, workers, ss, |_, _| Ok(()))
+                    .unwrap();
+            sim.check_invariants(n).unwrap();
+            real.check_invariants(n).unwrap();
+            assert_eq!(sim.messages_sent, n.div_ceil(k), "sim messages at k={k}");
+            assert_eq!(real.messages_sent, n.div_ceil(k), "real messages at k={k}");
+            assert_eq!(
+                sim.tasks_per_worker.iter().sum::<usize>(),
+                real.tasks_per_worker.iter().sum::<usize>(),
+                "task totals at k={k}"
+            );
+        }
+    }
+
+    /// Both backends also agree on batch runs: same queues, same totals,
+    /// zero messages.
+    #[test]
+    fn sim_and_exec_batch_runs_agree_on_totals() {
+        let n = 41;
+        let tasks: Vec<Task> = (0..n)
+            .map(|i| Task {
+                id: i,
+                bytes: 2_000_000,
+                obs: 10,
+                dem_cells: 0,
+                chrono_key: i as u64,
+                name: format!("b{i:03}"),
+            })
+            .collect();
+        let ordered = order_tasks(&tasks, TaskOrder::FilenameSorted);
+        for dist in [Distribution::Block, Distribution::Cyclic] {
+            let sim = Simulator::run(
+                &SimConfig {
+                    triples: TriplesConfig {
+                        nodes: 1,
+                        nppn: 6,
+                        threads: 1,
+                        slots_per_job: 1,
+                        allocation: 4096,
+                    },
+                    alloc: AllocMode::Batch(dist),
+                    stage: Stage::Organize,
+                    cost: CostModel::paper_calibrated(),
+                },
+                &tasks,
+                &ordered,
+            );
+            let real = crate::exec::run_batch(n, &ordered, 5, dist, |_, _| Ok(())).unwrap();
+            sim.check_invariants(n).unwrap();
+            real.check_invariants(n).unwrap();
+            assert_eq!(sim.messages_sent, 0);
+            assert_eq!(real.messages_sent, 0);
+            assert_eq!(sim.tasks_per_worker, real.tasks_per_worker, "{dist:?}");
+        }
+    }
+}

@@ -14,9 +14,11 @@
 //! §IV.A found that *hurts* for dataset #1 (Fig 7) while §V used 300
 //! tasks/message profitably for 13.19 M tiny radar tasks.
 //!
-//! The protocol is executed in two places: the virtual-time simulator
+//! The protocol itself is implemented exactly once, as the clock-generic
+//! manager state machine in [`crate::sched`]; the virtual-time simulator
 //! ([`crate::simcluster`]) and the real thread-pool executor
-//! ([`crate::exec`]); both take this config and emit [`SchedTrace`].
+//! ([`crate::exec`]) are its two backends. Both take this config and emit
+//! [`SchedTrace`] from the core's shared bookkeeping.
 
 /// Protocol parameters.
 #[derive(Debug, Clone, Copy, PartialEq)]

@@ -11,11 +11,17 @@
 //! which is what keeps the paper's 2048-core job times close to the
 //! saturated-bandwidth bound instead of being tail-dominated.
 //!
+//! All manager-protocol decisions and bookkeeping (fan-out, packing,
+//! grant-on-completion, trace assembly) live in the shared [`crate::sched`]
+//! core; this engine is the virtual-time backend — it owns the event heaps
+//! and folds the protocol's `msg_s`/`poll_s` delays into event timestamps.
+//!
 //! Time is integer nanoseconds; work is integer micro-units. Runs are
 //! bit-reproducible.
 
 use crate::dist::{distribute, Task};
-use crate::selfsched::{AllocMode, SchedTrace, SelfSchedConfig};
+use crate::sched::{Manager, WorkerLog};
+use crate::selfsched::{AllocMode, SchedTrace};
 use crate::simcluster::cost::{ContentionCtx, CostModel, Stage};
 use crate::triples::TriplesConfig;
 use std::cmp::Reverse;
@@ -33,16 +39,14 @@ pub struct SimConfig {
 /// The simulator. Stateless between runs; [`Simulator::run`] is pure.
 pub struct Simulator;
 
-/// Work queue fed to a worker: either everything up front (batch) or
-/// message-by-message (self-scheduled).
+/// Work source for the run: pre-assigned queues (batch) or the shared
+/// manager state machine (self-scheduled). Each variant owns the run's
+/// bookkeeping — a bare [`WorkerLog`] for batch, the [`Manager`]'s
+/// embedded log for self-scheduling.
 #[derive(Debug)]
 enum Feed<'a> {
-    Batch(Vec<Vec<usize>>),
-    SelfSched {
-        ss: SelfSchedConfig,
-        ordered: &'a [usize],
-        cursor: usize,
-    },
+    Batch { queues: Vec<Vec<usize>>, log: WorkerLog },
+    SelfSched { mgr: Manager<'a> },
 }
 
 const WORK_SCALE: f64 = 1e6; // micro-work units
@@ -53,34 +57,38 @@ impl Simulator {
     pub fn run(cfg: &SimConfig, tasks: &[Task], ordered: &[usize]) -> SchedTrace {
         let workers = cfg.triples.workers().max(1);
         let mut feed = match cfg.alloc {
-            AllocMode::Batch(dist) => Feed::Batch(distribute(ordered, workers, dist)),
-            AllocMode::SelfSched(ss) => Feed::SelfSched { ss, ordered, cursor: 0 },
+            AllocMode::Batch(dist) => Feed::Batch {
+                queues: distribute(ordered, workers, dist),
+                log: WorkerLog::new(workers),
+            },
+            AllocMode::SelfSched(ss) => {
+                Feed::SelfSched { mgr: Manager::new(ordered, workers, ss) }
+            }
         };
 
         let mut st = FluidState::new(cfg, workers);
 
         // Seed initial work.
         match &mut feed {
-            Feed::Batch(queues) => {
+            Feed::Batch { queues, log } => {
                 for w in 0..workers {
                     if !queues[w].is_empty() {
-                        st.first_grant[w] = 0.0;
+                        log.record_start(w, 0.0);
                         let s = st.next_seq();
                         st.start_heap.push(Reverse((0, s, w, 0)));
                     }
                 }
             }
-            Feed::SelfSched { ss, ordered, cursor } => {
+            Feed::SelfSched { mgr } => {
                 // Sequential initial fan-out, no pausing (§II.D).
+                let ss = mgr.cfg();
                 for w in 0..workers {
-                    if *cursor >= ordered.len() {
+                    let granted = (w + 1) as f64 * ss.msg_s;
+                    let Some(msg) = mgr.grant(w, granted) else {
                         break;
-                    }
-                    let grant = (w + 1) as f64 * ss.msg_s;
-                    st.first_grant[w] = grant;
-                    st.pending_msg[w] = take_message(ordered, cursor, ss.tasks_per_message);
-                    st.messages += 1;
-                    let start = grant + ss.poll_s / 2.0;
+                    };
+                    st.pending_msg[w] = msg;
+                    let start = granted + ss.poll_s / 2.0;
                     let s = st.next_seq();
                     st.start_heap
                         .push(Reverse(((start * TIME_SCALE) as u64, s, w, 0)));
@@ -104,30 +112,17 @@ impl Simulator {
             }
         }
 
-        let worker_times: Vec<f64> = (0..workers)
-            .map(|w| {
-                if st.first_grant[w].is_finite() {
-                    (st.last_done[w] - st.first_grant[w]).max(0.0)
-                } else {
-                    0.0
-                }
-            })
-            .collect();
-        SchedTrace {
-            job_time: st.job_end,
-            worker_times,
-            worker_busy: st.busy_s.clone(),
-            tasks_per_worker: st.tasks_done.clone(),
-            messages_sent: st.messages,
+        match feed {
+            Feed::Batch { log, .. } => {
+                let job_end = log.last_completion();
+                log.trace(job_end)
+            }
+            Feed::SelfSched { mgr } => {
+                let job_end = mgr.log().last_completion();
+                mgr.into_trace(job_end)
+            }
         }
     }
-}
-
-fn take_message(ordered: &[usize], cursor: &mut usize, k: usize) -> Vec<usize> {
-    let take = k.max(1).min(ordered.len() - *cursor);
-    let msg = ordered[*cursor..*cursor + take].to_vec();
-    *cursor += take;
-    msg
 }
 
 /// Mutable engine state for one run.
@@ -146,11 +141,6 @@ struct FluidState<'c> {
     /// begins the fluid work.
     start_heap: BinaryHeap<Reverse<(u64, u64, usize, u8)>>,
     seq: u64,
-    /// Per-worker stats.
-    busy_s: Vec<f64>,
-    first_grant: Vec<f64>,
-    last_done: Vec<f64>,
-    tasks_done: Vec<usize>,
     /// Tasks granted but not yet started (message in flight), selfsched.
     pending_msg: Vec<Vec<usize>>,
     /// The message currently being executed per worker.
@@ -159,15 +149,12 @@ struct FluidState<'c> {
     qpos: Vec<usize>,
     /// Per-worker started-at (wall, v) for busy accounting.
     started_at: Vec<(f64, u64)>,
-    /// Tasks in the worker's current message (for tasks_done accounting).
+    /// Tasks in the worker's current message (for completion accounting).
     current_count: Vec<usize>,
-    job_end: f64,
-    messages: usize,
 }
 
 impl<'c> FluidState<'c> {
     fn new(cfg: &'c SimConfig, workers: usize) -> Self {
-        let _ = workers;
         FluidState {
             cfg,
             t: 0.0,
@@ -176,17 +163,11 @@ impl<'c> FluidState<'c> {
             comp_heap: BinaryHeap::new(),
             start_heap: BinaryHeap::new(),
             seq: 0,
-            busy_s: vec![0.0; workers],
-            first_grant: vec![f64::INFINITY; workers],
-            last_done: vec![0.0; workers],
-            tasks_done: vec![0; workers],
             pending_msg: vec![Vec::new(); workers],
             current_msg: vec![Vec::new(); workers],
             qpos: vec![0; workers],
             started_at: vec![(0.0, 0); workers],
             current_count: vec![0; workers],
-            job_end: 0.0,
-            messages: 0,
         }
     }
 
@@ -231,7 +212,7 @@ impl<'c> FluidState<'c> {
         self.advance_to(t_start);
         if phase == 0 {
             let msg: Vec<usize> = match feed {
-                Feed::Batch(queues) => {
+                Feed::Batch { queues, .. } => {
                     // One task per "message" in batch mode.
                     let q = &queues[w];
                     if self.qpos[w] < q.len() {
@@ -272,13 +253,12 @@ impl<'c> FluidState<'c> {
         let Reverse((_, _, w)) = self.comp_heap.pop().expect("completion event");
         self.advance_to(t_comp);
         self.active = self.active.saturating_sub(1);
-        self.busy_s[w] += self.t - self.started_at[w].0;
-        self.tasks_done[w] += self.current_count[w];
+        let busy = self.t - self.started_at[w].0;
+        let ntasks = self.current_count[w];
         self.current_count[w] = 0;
-        self.last_done[w] = self.t;
-        self.job_end = self.job_end.max(self.t);
         match feed {
-            Feed::Batch(queues) => {
+            Feed::Batch { queues, log } => {
+                log.record_completion(w, self.t, busy, ntasks);
                 if self.qpos[w] < queues[w].len() {
                     // Next task starts immediately.
                     let t_ns = (self.t * TIME_SCALE) as u64;
@@ -286,12 +266,13 @@ impl<'c> FluidState<'c> {
                     self.start_heap.push(Reverse((t_ns, s, w, 0)));
                 }
             }
-            Feed::SelfSched { ss, ordered, cursor } => {
-                if *cursor < ordered.len() {
+            Feed::SelfSched { mgr } => {
+                mgr.complete_with_busy(w, self.t, busy);
+                if let Some(msg) = mgr.grant(w, self.t) {
                     // Completion message + manager poll + worker poll.
+                    let ss = mgr.cfg();
                     let start = self.t + ss.msg_s + ss.poll_s;
-                    self.pending_msg[w] = take_message(ordered, cursor, ss.tasks_per_message);
-                    self.messages += 1;
+                    self.pending_msg[w] = msg;
                     let s = self.next_seq();
                     self.start_heap
                         .push(Reverse(((start * TIME_SCALE) as u64, s, w, 0)));
@@ -306,6 +287,7 @@ mod tests {
     use super::*;
     use crate::dist::{order_tasks, Distribution, TaskOrder};
     use crate::prop_assert;
+    use crate::selfsched::SelfSchedConfig;
     use crate::testing;
     use crate::util::Rng;
 

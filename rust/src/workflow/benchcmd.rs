@@ -5,6 +5,7 @@
 //! alongside. `emproc bench <exp>` and the `cargo bench` harnesses both
 //! call these, so EXPERIMENTS.md is regenerable from either entry point.
 
+use crate::bench_harness::json;
 use crate::cli::ArgParser;
 use crate::dist::{order_tasks, Distribution, Task, TaskOrder};
 use crate::metrics::{render_table, Ecdf, Histogram};
@@ -46,8 +47,12 @@ pub fn run_table(order: TaskOrder, title: &str, paper: &[[f64; 4]; 3]) -> String
         for (ci, &cores) in cores_cols.iter().enumerate() {
             match TriplesConfig::table_config(cores, nppn) {
                 Ok(_) => {
-                    let t = sim_organize(&tasks, &ordered, cores, nppn).job_time;
-                    row.push(format!("{:.0} ({:.0})", t, paper[ri][ci]));
+                    let tr = sim_organize(&tasks, &ordered, cores, nppn);
+                    json::record_trace(
+                        &format!("organize {order:?} cores{cores} nppn{nppn}"),
+                        &tr,
+                    );
+                    row.push(format!("{:.0} ({:.0})", tr.job_time, paper[ri][ci]));
                 }
                 Err(_) => row.push("- (-)".into()),
             }
@@ -111,8 +116,11 @@ pub fn run_fig4() -> String {
     let size = order_tasks(&tasks, TaskOrder::LargestFirst);
     let mut rows = Vec::new();
     for &cores in &[256usize, 512, 1024, 2048] {
-        let c = sim_organize(&tasks, &chrono, cores, 32).job_time;
-        let s = sim_organize(&tasks, &size, cores, 32).job_time;
+        let ct = sim_organize(&tasks, &chrono, cores, 32);
+        let st = sim_organize(&tasks, &size, cores, 32);
+        json::record_trace(&format!("fig4 chrono cores{cores}"), &ct);
+        json::record_trace(&format!("fig4 size cores{cores}"), &st);
+        let (c, s) = (ct.job_time, st.job_time);
         rows.push(vec![
             format!("{cores}"),
             format!("{c:.0}"),
@@ -149,6 +157,7 @@ pub fn run_fig56() -> String {
         let _ = writeln!(s, "{fig} — worker time distribution, {name} (255 workers)");
         for &nppn in &[32usize, 16, 8] {
             let tr = sim_organize(&tasks, &ordered, 512, nppn);
+            json::record_trace(&format!("{fig} {name} nppn{nppn}"), &tr);
             let r = tr.report();
             let _ = writeln!(
                 s,
@@ -239,6 +248,7 @@ pub fn run_fig7() -> String {
             cost: CostModel::paper_calibrated(),
         };
         let tr = Simulator::run(&cfg, &tasks, &interleaved);
+        json::record_trace(&format!("fig7 tasks_per_message{k}"), &tr);
         rows.push(vec![
             format!("{k}"),
             format!("{:.0}", tr.job_time),
@@ -275,6 +285,9 @@ pub fn run_archiving() -> String {
     let block = run(AllocMode::Batch(Distribution::Block));
     let cyclic = run(AllocMode::Batch(Distribution::Cyclic));
     let ss = run(AllocMode::SelfSched(SelfSchedConfig::default()));
+    json::record_trace("archiving block", &block);
+    json::record_trace("archiving cyclic", &cyclic);
+    json::record_trace("archiving selfsched", &ss);
     // "2% of parallel processes account for more than 95% of the total job
     // time" — busy-time concentration under block.
     let mut busy = block.worker_busy.clone();
@@ -321,6 +334,7 @@ pub fn run_fig8() -> String {
         cost: CostModel::paper_calibrated(),
     };
     let tr = Simulator::run(&cfg, &tasks, &ordered);
+    json::record_trace("fig8 selfsched random", &tr);
     let r = tr.report();
     let h = |x: f64| x / 3600.0;
     let baseline_cfg = SimConfig {
@@ -329,6 +343,7 @@ pub fn run_fig8() -> String {
     };
     let sorted = order_tasks(&tasks, TaskOrder::FilenameSorted);
     let baseline = Simulator::run(&baseline_cfg, &tasks, &sorted);
+    json::record_trace("fig8 batch_block filename_sorted", &baseline);
     format!(
         "Fig 8 — worker time, processing dataset #2 (random org, self-sched, \
          1023 workers)\n\
@@ -359,6 +374,7 @@ pub fn run_fig9(scale: f64) -> String {
         cost: CostModel::paper_calibrated(),
     };
     let tr = Simulator::run(&cfg, &tasks, &ordered);
+    json::record_trace(&format!("fig9 radar scale{scale}"), &tr);
     let r = tr.report();
     let e = Ecdf::new(tr.worker_times.clone());
     let mut s = format!(
@@ -431,7 +447,11 @@ pub fn run(which: &str, a: &ArgParser) -> Result<()> {
     emit("fig3", &run_fig3);
     emit("fig4", &run_fig4);
     emit("fig5", &run_fig56);
-    emit("fig6", &run_fig56);
+    if !all {
+        // Alias: under "all", figs 5-6 already ran (and recorded their
+        // scenarios) once via the "fig5" emission.
+        emit("fig6", &run_fig56);
+    }
     emit("fig7", &run_fig7);
     emit("archiving", &run_archiving);
     emit("fig8", &run_fig8);
@@ -440,5 +460,6 @@ pub fn run(which: &str, a: &ArgParser) -> Result<()> {
     if !any {
         anyhow::bail!("unknown experiment '{which}' (try `emproc help`)");
     }
+    json::write_file(&format!("cli_{which}"))?;
     Ok(())
 }
