@@ -56,7 +56,7 @@ fn main() -> anyhow::Result<()> {
             obs: size / 110,
             dem_cells: 0,
             chrono_key: i as u64,
-            name: p.display().to_string(),
+            name: p.display().to_string().into(),
         })
         .collect();
     let ordered = order_tasks(&tasks, TaskOrder::FilenameSorted);

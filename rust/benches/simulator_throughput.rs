@@ -1,7 +1,11 @@
 //! Perf bench: discrete-event simulator throughput (L3 §Perf target:
 //! paper-scale sweeps must run in seconds).
+//!
+//! Every timed kernel records a `tasks_per_sec` scenario into
+//! `BENCH_simulator_throughput.json` — the number `emproc bench-check`
+//! gates CI on (see `rust/bench_baseline/`).
 
-use emproc::bench_harness::{bench, json, section};
+use emproc::bench_harness::{bench, json, section, sweep};
 use emproc::dist::{order_tasks, Task, TaskOrder};
 use emproc::selfsched::{AllocMode, SchedTrace, SelfSchedConfig};
 use emproc::simcluster::{CostModel, SimConfig, Simulator, Stage};
@@ -31,7 +35,7 @@ fn main() {
         monday.len() as f64 / r.mean.as_secs_f64() / 1e6
     );
     if let Some(tr) = &last {
-        json::record_trace("throughput organize DS#1", tr);
+        json::record_timed("throughput organize DS#1", tr, monday.len(), r.mean.as_secs_f64());
     }
 
     // Radar scale (1.32 M tasks at 0.1).
@@ -52,7 +56,7 @@ fn main() {
         radar.len() as f64 / r2.mean.as_secs_f64() / 1e6
     );
     if let Some(tr) = &rlast {
-        json::record_trace("throughput radar processing", tr);
+        json::record_timed("throughput radar processing", tr, radar.len(), r2.mean.as_secs_f64());
     }
 
     // DS#2 processing scale (120 k tasks).
@@ -74,7 +78,61 @@ fn main() {
         ptasks.len() as f64 / r3.mean.as_secs_f64() / 1e6
     );
     if let Some(tr) = &plast {
-        json::record_trace("throughput process DS#2", tr);
+        json::record_timed("throughput process DS#2", tr, ptasks.len(), r3.mean.as_secs_f64());
     }
+
+    // Scenario sweep: the nine feasible Table-I cells across all host
+    // cores via the same `sweep` driver the experiment benches use —
+    // the wall-clock number behind "the NPPN×cores grid in seconds".
+    let cells: [(usize, usize); 9] = [
+        (2048, 32),
+        (1024, 32),
+        (512, 32),
+        (256, 32),
+        (1024, 16),
+        (512, 16),
+        (256, 16),
+        (512, 8),
+        (256, 8),
+    ];
+    let mut slast: Option<Vec<SchedTrace>> = None;
+    let r4 = bench(
+        &format!("sweep Table I (9 cells, {} threads)", sweep::threads()),
+        1,
+        5,
+        || {
+            slast = Some(sweep::run(&cells[..], |&(cores, nppn)| {
+                let c = SimConfig {
+                    triples: TriplesConfig::table_config(cores, nppn).unwrap(),
+                    alloc: AllocMode::SelfSched(SelfSchedConfig::default()),
+                    stage: Stage::Organize,
+                    cost: CostModel::paper_calibrated(),
+                };
+                Simulator::run(&c, &monday, &ordered)
+            }));
+        },
+    );
+    println!(
+        "-> {:.2} M tasks/s across the grid",
+        (monday.len() * cells.len()) as f64 / r4.mean.as_secs_f64() / 1e6
+    );
+    if let Some(traces) = &slast {
+        // Aggregate the grid honestly: slowest cell's job time, total
+        // messages (per-cell results live in the table benches' JSON).
+        let grid = SchedTrace {
+            job_time: traces.iter().map(|t| t.job_time).fold(0.0, f64::max),
+            worker_times: vec![],
+            worker_busy: vec![],
+            tasks_per_worker: vec![],
+            messages_sent: traces.iter().map(|t| t.messages_sent).sum(),
+        };
+        json::record_timed(
+            "throughput tableI sweep (9 cells)",
+            &grid,
+            monday.len() * cells.len(),
+            r4.mean.as_secs_f64(),
+        );
+    }
+
     json::write_file("simulator_throughput").expect("write bench json");
 }

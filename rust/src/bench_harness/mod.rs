@@ -64,35 +64,126 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Parallel scenario sweeps: map a pure function over independent items
+/// across scoped OS threads, self-scheduled over an atomic cursor — the
+/// paper's §II.D protocol at laptop scale. Used by every experiment
+/// driver in [`crate::workflow::benchcmd`] so the Table I/II NPPN×cores
+/// grid and the figure sweeps use all host cores.
+pub mod sweep {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Worker-thread count for [`run`]: the `EMPROC_SWEEP_THREADS` env
+    /// override (useful for CI and for timing single-threaded baselines),
+    /// else the host's available parallelism.
+    pub fn threads() -> usize {
+        std::env::var("EMPROC_SWEEP_THREADS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+            })
+    }
+
+    /// Map `f` over `items` on up to [`threads`] scoped workers and return
+    /// the results **in input order**. Items are claimed dynamically
+    /// (self-scheduling), so heterogeneous item costs still balance; `f`
+    /// must be pure per item — execution *order* across items is
+    /// nondeterministic even though result positions are stable.
+    pub fn run<S, T, F>(items: &[S], f: F) -> Vec<T>
+    where
+        S: Sync,
+        T: Send,
+        F: Fn(&S) -> T + Sync,
+    {
+        let n = items.len();
+        let workers = threads().min(n);
+        if workers <= 1 {
+            return items.iter().map(f).collect();
+        }
+        let cursor = AtomicUsize::new(0);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    let cursor = &cursor;
+                    let f = &f;
+                    scope.spawn(move || {
+                        let mut done = Vec::new();
+                        loop {
+                            let i = cursor.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            done.push((i, f(&items[i])));
+                        }
+                        done
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (i, r) in h.join().expect("sweep worker panicked") {
+                    slots[i] = Some(r);
+                }
+            }
+        });
+        slots
+            .into_iter()
+            .map(|s| s.expect("every sweep slot filled"))
+            .collect()
+    }
+}
+
 /// Machine-readable bench results: every experiment scenario records its
 /// headline numbers (job time, messages sent) into a process-global
 /// collector; bench targets flush them to `BENCH_<target>.json` so the
 /// perf trajectory is diffable across PRs (`cargo bench` runs with the
 /// package root as CWD, so the files land next to `Cargo.toml`).
 pub mod json {
-    use std::path::PathBuf;
+    use std::path::{Path, PathBuf};
     use std::sync::Mutex;
 
     struct Scenario {
         name: String,
         job_time_s: f64,
         messages_sent: usize,
+        /// Simulated tasks behind the scenario (0 = unknown).
+        tasks: usize,
+        /// Wall-clock seconds spent producing the scenario (0 = untimed);
+        /// `tasks / wall_s` is the scenario's simulator throughput.
+        wall_s: f64,
     }
 
     static SCENARIOS: Mutex<Vec<Scenario>> = Mutex::new(Vec::new());
 
-    /// Record one scenario's headline numbers.
-    pub fn record(name: &str, job_time_s: f64, messages_sent: usize) {
+    fn push(name: &str, job_time_s: f64, messages_sent: usize, tasks: usize, wall_s: f64) {
         SCENARIOS.lock().expect("scenario lock").push(Scenario {
             name: name.to_string(),
             job_time_s,
             messages_sent,
+            tasks,
+            wall_s,
         });
     }
 
-    /// Record straight from a scheduling trace.
-    pub fn record_trace(name: &str, trace: &crate::selfsched::SchedTrace) {
-        record(name, trace.job_time, trace.messages_sent);
+    /// Record one scenario's headline numbers (untimed — such scenarios
+    /// carry no `tasks_per_sec` and are invisible to the bench-check
+    /// gate; prefer [`record_timed`] for simulator scenarios).
+    pub fn record(name: &str, job_time_s: f64, messages_sent: usize) {
+        push(name, job_time_s, messages_sent, 0, 0.0);
+    }
+
+    /// Record a trace together with its simulator throughput inputs: how
+    /// many tasks the run simulated and the wall-clock seconds it took.
+    /// Timed scenarios carry a `tasks_per_sec` figure in the JSON, and
+    /// the file gets an aggregate one — the cross-PR perf trajectory.
+    pub fn record_timed(
+        name: &str,
+        trace: &crate::selfsched::SchedTrace,
+        tasks: usize,
+        wall_s: f64,
+    ) {
+        push(name, trace.job_time, trace.messages_sent, tasks, wall_s);
     }
 
     /// Drop everything recorded so far (between unrelated bench targets).
@@ -114,18 +205,37 @@ pub mod json {
 
     /// Write (and drain) the recorded scenarios as `BENCH_<target>.json`
     /// in the current directory. Hand-rolled JSON: serde is unavailable
-    /// offline.
+    /// offline. The file-level `tasks_per_sec` aggregates all timed
+    /// scenarios (0.0 when none were timed).
     pub fn write_file(target: &str) -> std::io::Result<PathBuf> {
         let scenarios = std::mem::take(&mut *SCENARIOS.lock().expect("scenario lock"));
+        let timed_tasks: usize =
+            scenarios.iter().filter(|s| s.wall_s > 0.0).map(|s| s.tasks).sum();
+        let timed_wall: f64 =
+            scenarios.iter().filter(|s| s.wall_s > 0.0).map(|s| s.wall_s).sum();
+        let aggregate = if timed_wall > 0.0 { timed_tasks as f64 / timed_wall } else { 0.0 };
         let mut body = String::from("{\n");
         body.push_str(&format!("  \"bench\": \"{}\",\n", escape(target)));
+        body.push_str(&format!("  \"tasks_per_sec\": {aggregate:.1},\n"));
         body.push_str("  \"scenarios\": [\n");
         for (i, s) in scenarios.iter().enumerate() {
+            let timing = if s.wall_s > 0.0 {
+                format!(
+                    ", \"sim_wall_s\": {:.6}, \"tasks_per_sec\": {:.1}",
+                    s.wall_s,
+                    s.tasks as f64 / s.wall_s
+                )
+            } else {
+                String::new()
+            };
             body.push_str(&format!(
-                "    {{\"scenario\": \"{}\", \"job_time_s\": {:.6}, \"messages_sent\": {}}}{}\n",
+                "    {{\"scenario\": \"{}\", \"job_time_s\": {:.6}, \"messages_sent\": {}, \
+                 \"tasks\": {}{}}}{}\n",
                 escape(&s.name),
                 s.job_time_s,
                 s.messages_sent,
+                s.tasks,
+                timing,
                 if i + 1 < scenarios.len() { "," } else { "" }
             ));
         }
@@ -134,6 +244,53 @@ pub mod json {
         std::fs::write(&path, body)?;
         println!("wrote {} ({} scenarios)", path.display(), scenarios.len());
         Ok(path)
+    }
+
+    /// Parse a `BENCH_*.json` written by [`write_file`]: the file-level
+    /// `tasks_per_sec` plus every scenario's `(name, tasks_per_sec)`
+    /// where present. Naive line-based parsing of our own stable format
+    /// (serde is unavailable offline); used by `emproc bench-check` to
+    /// gate CI on throughput regressions.
+    pub fn read_throughput(path: &Path) -> std::io::Result<(f64, Vec<(String, f64)>)> {
+        let text = std::fs::read_to_string(path)?;
+        let mut file_level = 0.0;
+        let mut scenarios = Vec::new();
+        for line in text.lines() {
+            let name = extract_str(line, "\"scenario\": \"");
+            let tps = extract_num(line, "\"tasks_per_sec\": ");
+            match (name, tps) {
+                (Some(n), Some(t)) => scenarios.push((n, t)),
+                (None, Some(t)) => file_level = t,
+                _ => {}
+            }
+        }
+        Ok((file_level, scenarios))
+    }
+
+    /// The quoted, `escape`d string following `key` on `line`, unescaped.
+    fn extract_str(line: &str, key: &str) -> Option<String> {
+        let rest = &line[line.find(key)? + key.len()..];
+        let mut out = String::new();
+        let mut chars = rest.chars();
+        while let Some(c) = chars.next() {
+            match c {
+                '"' => return Some(out),
+                '\\' => out.push(chars.next()?),
+                c => out.push(c),
+            }
+        }
+        None
+    }
+
+    /// The number following `key` on `line`.
+    fn extract_num(line: &str, key: &str) -> Option<f64> {
+        let rest = &line[line.find(key)? + key.len()..];
+        let end = rest
+            .find(|c: char| {
+                !(c.is_ascii_digit() || matches!(c, '.' | '-' | '+' | 'e' | 'E'))
+            })
+            .unwrap_or(rest.len());
+        rest[..end].parse().ok()
     }
 }
 
@@ -151,6 +308,25 @@ mod tests {
     }
 
     #[test]
+    fn sweep_preserves_input_order_and_covers_all_items() {
+        let items: Vec<usize> = (0..97).collect();
+        let out = sweep::run(&items, |&i| i * i);
+        assert_eq!(out.len(), 97);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i * i);
+        }
+    }
+
+    #[test]
+    fn sweep_handles_empty_and_single_item_lists() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(sweep::run(&empty, |&x| x).is_empty());
+        assert_eq!(sweep::run(&[7u32][..], |&x| x + 1), vec![8]);
+    }
+
+    // NOTE: a single test owns the process-global scenario collector —
+    // parallel tests draining it would race.
+    #[test]
     fn json_records_and_writes_valid_output() {
         json::clear();
         json::record("scenario \"a\"", 12.5, 7);
@@ -161,6 +337,8 @@ mod tests {
         assert!(text.contains("\"bench\": \"harness_selftest\""));
         assert!(text.contains("\\\"a\\\""));
         assert!(text.contains("\"messages_sent\": 7"));
+        // Untimed files still carry the (zero) throughput aggregate.
+        assert!(text.contains("\"tasks_per_sec\": 0.0"));
         // Balanced braces/brackets (cheap well-formedness check).
         assert_eq!(text.matches('{').count(), text.matches('}').count());
         assert_eq!(text.matches('[').count(), text.matches(']').count());
@@ -169,5 +347,25 @@ mod tests {
         let text2 = std::fs::read_to_string(&empty).unwrap();
         let _ = std::fs::remove_file(&empty);
         assert!(!text2.contains("scenario b"));
+
+        // Timed scenarios carry tasks_per_sec: 5000 tasks in 0.5 s ->
+        // 10000 tasks/s, per scenario and as the file aggregate (the
+        // untimed scenario contributes nothing to the aggregate).
+        let trace = crate::selfsched::SchedTrace {
+            job_time: 100.0,
+            worker_times: vec![],
+            worker_busy: vec![],
+            tasks_per_worker: vec![],
+            messages_sent: 3,
+        };
+        json::record_timed("timed", &trace, 5000, 0.5);
+        json::record("untimed", 1.0, 0);
+        let path = json::write_file("harness_tps").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"tasks_per_sec\": 10000.0"), "{text}");
+        let (file_tps, scenarios) = json::read_throughput(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(file_tps, 10000.0);
+        assert_eq!(scenarios, vec![("timed".to_string(), 10000.0)]);
     }
 }

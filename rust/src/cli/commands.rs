@@ -26,6 +26,8 @@ COMMANDS:
       --out FILE [--aerodromes N] [--seed N]
   bench <EXP|all>   regenerate a paper table/figure on the simulator
       EXP in: table1 table2 fig3 fig4 fig5 fig6 fig7 archiving fig8 fig9 serial
+  bench-check  gate a BENCH_*.json against a committed throughput baseline
+      --current FILE --baseline FILE [--tolerance F]   (default 0.30)
   info       report artifact, manifest and environment status
   help       this text
 ";
@@ -50,6 +52,7 @@ pub fn dispatch(args: &[String]) -> Result<()> {
         "pipeline" => cmd_pipeline(rest),
         "queries" => cmd_queries(rest),
         "bench" => cmd_bench(rest),
+        "bench-check" => cmd_bench_check(rest),
         other => bail!("unknown command '{other}' (try `emproc help`)"),
     }
 }
@@ -110,4 +113,53 @@ fn cmd_bench(args: &[String]) -> Result<()> {
     let a = ArgParser::parse(args, &[])?;
     let which = a.pos(0).unwrap_or("all");
     crate::workflow::benchcmd::run(which, &a)
+}
+
+/// Compare the `tasks_per_sec` figures of a freshly produced
+/// `BENCH_*.json` against a committed baseline; fail when any baseline
+/// scenario regresses by more than `--tolerance` (CI's quick-mode perf
+/// gate). Baseline scenarios with no throughput figure are skipped, so
+/// the committed file controls exactly what is gated.
+fn cmd_bench_check(args: &[String]) -> Result<()> {
+    let a = ArgParser::parse(args, &[])?;
+    let current = a.required("current")?;
+    let baseline = a.required("baseline")?;
+    let tolerance = a.get_num("tolerance", 0.30f64)?;
+    let (cur_file, cur) =
+        crate::bench_harness::json::read_throughput(std::path::Path::new(current))?;
+    let (base_file, base) =
+        crate::bench_harness::json::read_throughput(std::path::Path::new(baseline))?;
+    let mut failed = false;
+    let check = |name: &str, got: f64, want: f64| -> bool {
+        let ratio = got / want;
+        let ok = ratio >= 1.0 - tolerance;
+        println!(
+            "{} {name}: {got:.0} vs baseline {want:.0} tasks/s (x{ratio:.2})",
+            if ok { "ok  " } else { "FAIL" }
+        );
+        ok
+    };
+    for (bname, btps) in &base {
+        if *btps <= 0.0 {
+            continue;
+        }
+        match cur.iter().find(|(n, _)| n == bname) {
+            Some((_, ctps)) => failed |= !check(bname, *ctps, *btps),
+            None => {
+                println!("FAIL {bname}: missing from {current}");
+                failed = true;
+            }
+        }
+    }
+    if base_file > 0.0 {
+        failed |= !check("<file aggregate>", cur_file, base_file);
+    }
+    if failed {
+        bail!(
+            "throughput regressed more than {:.0}% against {baseline}",
+            tolerance * 100.0
+        );
+    }
+    println!("bench-check passed ({} gated scenarios)", base.iter().filter(|(_, t)| *t > 0.0).count());
+    Ok(())
 }

@@ -71,7 +71,8 @@ pub fn opensky_tasks(rng: &mut Rng, p: &OpenSkyProcessing) -> Vec<Task> {
             dem_cells: dem as u64,
             chrono_key: i as u64,
             // Hierarchy-sorted name: fleets are adjacent (see module docs).
-            name: format!("2019/t{:02}/s{:02}/icao_{:06}.zip", i / 20_000, (i / 2_000) % 10, i),
+            name: format!("2019/t{:02}/s{:02}/icao_{:06}.zip", i / 20_000, (i / 2_000) % 10, i)
+                .into(),
             };
         t.set_fixed_cost_s(1.5); // archive open + output write
         tasks.push(t);
@@ -161,7 +162,7 @@ pub fn archive_tasks(rng: &mut Rng, p: &ArchiveWorkload) -> Vec<Task> {
                 obs: bytes as u64 / 100,
                 dem_cells: 0,
                 chrono_key: i as u64,
-                name: format!("2019/arch/icao_{i:06}.zip"),
+                name: format!("2019/arch/icao_{i:06}.zip").into(),
             }
         })
         .collect()
@@ -185,7 +186,7 @@ pub fn radar_tasks(rng: &mut Rng, scale: f64) -> Vec<Task> {
                 obs,
                 dem_cells: 2_000 + (obs * 8).min(20_000), // bounded by radar volume
                 chrono_key: e.day as u64,
-                name: e.name.clone(),
+                name: e.name.as_str().into(),
             };
             t.set_fixed_cost_s(5.89); // SQL query + connection overhead
             t

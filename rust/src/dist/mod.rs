@@ -23,6 +23,7 @@
 
 use crate::util::Rng;
 use std::cmp::Reverse;
+use std::sync::Arc;
 
 /// One schedulable unit of work.
 #[derive(Debug, Clone, PartialEq)]
@@ -38,8 +39,11 @@ pub struct Task {
     pub dem_cells: u64,
     /// Chronological sort key (ticks; any monotone encoding of time).
     pub chrono_key: u64,
-    /// File/archive name (the [`TaskOrder::FilenameSorted`] key).
-    pub name: String,
+    /// File/archive name (the [`TaskOrder::FilenameSorted`] key). Shared
+    /// and immutable, so cloning a `Task` — 100k-task corpora get copied
+    /// into per-stage lists and traces — bumps a refcount instead of
+    /// allocating a fresh `String` per task.
+    pub name: Arc<str>,
 }
 
 impl Task {
@@ -57,7 +61,7 @@ impl Task {
                 obs: e.size / 110,
                 dem_cells: 0,
                 chrono_key: e.day as u64 * 24 + e.hour as u64,
-                name: e.name.clone(),
+                name: e.name.as_str().into(),
             })
             .collect()
     }
@@ -153,7 +157,7 @@ mod tests {
                 obs: rng.below(10_000) as u64,
                 dem_cells: rng.below(1_000) as u64,
                 chrono_key: rng.below(500) as u64,
-                name: format!("f{:04}_{:03}.csv", rng.below(5_000), i),
+                name: format!("f{:04}_{:03}.csv", rng.below(5_000), i).into(),
             })
             .collect()
     }
@@ -305,7 +309,66 @@ mod tests {
             let queues = distribute(&ordered, 5, dist);
             assert_eq!(queues.len(), 5);
             assert_eq!(queues.iter().map(Vec::len).sum::<usize>(), 2);
+            // The populated queues are the leading ones, in order.
+            assert_eq!(queues[0], vec![4]);
+            assert_eq!(queues[1], vec![2]);
+            assert!(queues[2..].iter().all(Vec::is_empty), "{dist:?}");
         }
+    }
+
+    #[test]
+    fn distribute_empty_ordered_yields_all_empty_queues() {
+        for dist in [Distribution::Block, Distribution::Cyclic] {
+            let queues = distribute(&[], 4, dist);
+            assert_eq!(queues.len(), 4, "{dist:?}");
+            assert!(queues.iter().all(Vec::is_empty), "{dist:?}");
+        }
+    }
+
+    #[test]
+    fn distribute_queue_lengths_match_closed_forms() {
+        // Block worker `w` holds `n/W + (w < n%W)` tasks, contiguous in
+        // the ordered list; cyclic worker `w` holds `ceil((n-w)/W)` tasks,
+        // striding by `W` — including the workers > tasks regime.
+        testing::check("distribute queue lengths", |rng| {
+            let n = rng.below(500);
+            let nworkers = 1 + rng.below(600); // frequently > n
+            let ordered: Vec<usize> = (0..n).collect();
+            let base = n / nworkers;
+            let rem = n % nworkers;
+            let block = distribute(&ordered, nworkers, Distribution::Block);
+            let cyclic = distribute(&ordered, nworkers, Distribution::Cyclic);
+            for w in 0..nworkers {
+                let bwant = base + usize::from(w < rem);
+                prop_assert!(
+                    block[w].len() == bwant,
+                    "block[{w}] len {} != {bwant} (n={n}, W={nworkers})",
+                    block[w].len()
+                );
+                let cwant = if w < n { (n - w).div_ceil(nworkers) } else { 0 };
+                prop_assert!(
+                    cyclic[w].len() == cwant,
+                    "cyclic[{w}] len {} != {cwant} (n={n}, W={nworkers})",
+                    cyclic[w].len()
+                );
+            }
+            // Structure: block queues are contiguous runs of the ordered
+            // list, cyclic queues stride by the worker count.
+            for q in &block {
+                for pair in q.windows(2) {
+                    prop_assert!(pair[1] == pair[0] + 1, "block not contiguous: {q:?}");
+                }
+            }
+            for q in &cyclic {
+                for pair in q.windows(2) {
+                    prop_assert!(
+                        pair[1] == pair[0] + nworkers,
+                        "cyclic stride broken (W={nworkers}): {q:?}"
+                    );
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

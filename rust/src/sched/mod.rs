@@ -164,19 +164,28 @@ impl<'a> Manager<'a> {
     /// Returns `None` when there is nothing (or no permission) to grant:
     /// tasks exhausted, run aborted, or `w` already has work in flight.
     pub fn grant(&mut self, w: usize, now_s: f64) -> Option<Vec<usize>> {
+        self.grant_range(w, now_s).map(|r| self.ordered[r].to_vec())
+    }
+
+    /// Allocation-free [`Manager::grant`]: the granted message is always a
+    /// contiguous slice of the ordered task list, so backends that keep
+    /// `ordered` around (the virtual-time engine) take it as a *position
+    /// range* into `ordered` instead of an owned `Vec` per message. All
+    /// protocol bookkeeping (packing, in-flight, log) is identical.
+    pub fn grant_range(&mut self, w: usize, now_s: f64) -> Option<std::ops::Range<usize>> {
         if self.aborted || self.cursor >= self.ordered.len() || self.in_flight[w] > 0 {
             return None;
         }
         let k = self.cfg.tasks_per_message.max(1);
         let take = k.min(self.ordered.len() - self.cursor);
-        let msg = self.ordered[self.cursor..self.cursor + take].to_vec();
+        let range = self.cursor..self.cursor + take;
         self.cursor += take;
         self.in_flight[w] = take;
         self.granted_at[w] = now_s;
         self.outstanding += 1;
         self.log.record_start(w, now_s);
         self.log.record_message();
-        Some(msg)
+        Some(range)
     }
 
     /// Worker `w` reported completion at `now_s`; busy time defaults to
@@ -266,6 +275,38 @@ mod tests {
     }
 
     #[test]
+    fn grant_range_is_the_allocation_free_grant() {
+        // `grant` and `grant_range` must make identical protocol decisions
+        // step for step; the range resolves to the same task slice.
+        let ordered: Vec<usize> = (0..11).map(|i| i * 3).collect();
+        let mut by_vec = Manager::new(&ordered, 2, cfg_k(4));
+        let mut by_range = Manager::new(&ordered, 2, cfg_k(4));
+        let mut t = 0.0;
+        loop {
+            t += 1.0;
+            let w = (t as usize) % 2;
+            let msg = by_vec.grant(w, t);
+            let range = by_range.grant_range(w, t);
+            match (&msg, &range) {
+                (Some(m), Some(r)) => assert_eq!(m.as_slice(), &ordered[r.clone()]),
+                (None, None) => {}
+                other => panic!("grant and grant_range disagree: {other:?}"),
+            }
+            assert_eq!(by_vec.remaining(), by_range.remaining());
+            assert_eq!(by_vec.outstanding(), by_range.outstanding());
+            if msg.is_some() {
+                assert_eq!(by_vec.complete(w, t + 0.5), by_range.complete(w, t + 0.5));
+            } else if by_vec.remaining() == 0 && by_vec.outstanding() == 0 {
+                break;
+            }
+        }
+        assert_eq!(
+            by_vec.log().messages_sent(),
+            by_range.log().messages_sent()
+        );
+    }
+
+    #[test]
     fn completion_accounting_feeds_the_trace() {
         let ordered: Vec<usize> = (0..4).collect();
         let mut mgr = Manager::new(&ordered, 2, cfg_k(1));
@@ -336,7 +377,7 @@ mod tests {
                 obs: 100,
                 dem_cells: 0,
                 chrono_key: i as u64,
-                name: format!("t{i:03}"),
+                name: format!("t{i:03}").into(),
             })
             .collect();
         let ordered = order_tasks(&tasks, TaskOrder::LargestFirst);
@@ -386,7 +427,7 @@ mod tests {
                 obs: 10,
                 dem_cells: 0,
                 chrono_key: i as u64,
-                name: format!("b{i:03}"),
+                name: format!("b{i:03}").into(),
             })
             .collect();
         let ordered = order_tasks(&tasks, TaskOrder::FilenameSorted);

@@ -5,19 +5,45 @@
 //! CPU-bound stage-3 rate). That makes the shared-rate dynamics exactly
 //! solvable: track cumulative per-process virtual work
 //! `V(t) = ∫ rate(A(τ)) dτ`; a task granted at `V0` with work `w` finishes
-//! when `V = V0 + w`. Completions are a heap on `V`-targets, wall-clock
-//! events (grants, polls) a heap on time, and between events `V` advances
+//! when `V = V0 + w`. Completions are keyed on `V`-targets, wall-clock
+//! events (grants, polls) on time, and between events `V` advances
 //! linearly — so stragglers correctly *accelerate* as the system drains,
 //! which is what keeps the paper's 2048-core job times close to the
 //! saturated-bandwidth bound instead of being tail-dominated.
 //!
 //! All manager-protocol decisions and bookkeeping (fan-out, packing,
 //! grant-on-completion, trace assembly) live in the shared [`crate::sched`]
-//! core; this engine is the virtual-time backend — it owns the event heaps
-//! and folds the protocol's `msg_s`/`poll_s` delays into event timestamps.
+//! core; this engine is the virtual-time backend — it owns the event
+//! [`Timeline`] and folds the protocol's `msg_s`/`poll_s` delays into
+//! event timestamps.
 //!
-//! Time is integer nanoseconds; work is integer micro-units. Runs are
-//! bit-reproducible.
+//! ## Hot-path design (allocation-free event loop)
+//!
+//! The loop processes ~3 events per message and is the hot path for every
+//! table/figure in the repo, so per-event work is kept to heap ops and a
+//! handful of integer/float operations:
+//!
+//! * **Cached contention rate.** The work rate depends only on the
+//!   run-constant topology plus the active-process count, so rates are
+//!   memoized per active-count ([`FluidState::set_active`]) — the
+//!   saturating-bandwidth curve (with its `powf`) is evaluated at most
+//!   once per distinct `A`, not per event.
+//! * **Precomputed work.** Per-task work is converted to integer
+//!   micro-units once per run; self-scheduled messages resolve to a prefix
+//!   -sum difference, so a 300-task radar message costs O(1), not O(300).
+//! * **No per-message allocation.** Messages are [`MsgRef`] index ranges
+//!   into the run's `ordered` list (granted via
+//!   [`Manager::grant_range`]) or a batch queue slot — the old per-grant
+//!   `Vec<usize>` churn is gone.
+//! * **Integer-keyed timeline.** Time is integer nanoseconds and work is
+//!   integer micro-units end to end; the [`Timeline`] compares the next
+//!   start event and the projected next completion in `u64` ns, so the
+//!   main loop does no f64↔u64 round-trips. At each completion pop the
+//!   engine clamps `v` up to the popped target, so virtual work is
+//!   monotone and `v >= v_target` holds exactly (the pre-timeline engine
+//!   accumulated f64 `round()` drift here).
+//!
+//! Runs are bit-reproducible.
 
 use crate::dist::{distribute, Task};
 use crate::sched::{Manager, WorkerLog};
@@ -39,6 +65,21 @@ pub struct SimConfig {
 /// The simulator. Stateless between runs; [`Simulator::run`] is pure.
 pub struct Simulator;
 
+/// Engine-internal counters from one run, exposed for perf tracking and
+/// the solver-accuracy property tests.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineStats {
+    /// Events processed (starts + completions).
+    pub events: u64,
+    /// Completion events processed.
+    pub completions: u64,
+    /// Worst observed gap `v_target - v` at a completion pop, in
+    /// micro-units, *before* the engine clamps `v` up to the target. The
+    /// integer-ns hop back into v-space bounds this to a few micro-units;
+    /// the old f64 accumulation could drift much further.
+    pub max_completion_shortfall_micro: u64,
+}
+
 /// Work source for the run: pre-assigned queues (batch) or the shared
 /// manager state machine (self-scheduled). Each variant owns the run's
 /// bookkeeping — a bare [`WorkerLog`] for batch, the [`Manager`]'s
@@ -52,17 +93,125 @@ enum Feed<'a> {
 const WORK_SCALE: f64 = 1e6; // micro-work units
 const TIME_SCALE: f64 = 1e9; // nanoseconds
 
+/// A granted message, by reference (no per-message allocation): for
+/// self-scheduled runs an index range into the run's `ordered` list
+/// (resolved through the work prefix sums); for batch runs the task index
+/// itself, with `len == 1`. `len == 0` means "no message".
+#[derive(Debug, Clone, Copy, Default)]
+struct MsgRef {
+    start: u32,
+    len: u32,
+}
+
+/// An event popped from the [`Timeline`].
+enum Event {
+    /// A worker's start event fires at `t_ns` (phase 0 = grant, phase 1 =
+    /// fluid work begins).
+    Start { t_ns: u64, worker: usize, phase: u8 },
+    /// A worker's message reaches its virtual-work target at `t_ns`.
+    Completion { t_ns: u64, v_target: u64, worker: usize },
+}
+
+/// The unified integer-keyed event timeline. Start events are keyed on
+/// their ns timestamps; completion events on their micro-unit v-targets.
+/// [`Timeline::pop_next`] projects the earliest completion into ns under
+/// the current rate and compares the two heads as `u64` — no f64↔u64
+/// round-trips, and ties go to the start event (matching the pre-timeline
+/// engine). A shared `seq` makes same-key ordering deterministic.
+struct Timeline {
+    /// (t_ns, seq, worker, phase).
+    starts: BinaryHeap<Reverse<(u64, u64, u32, u8)>>,
+    /// (v_target_micro, seq, worker).
+    comps: BinaryHeap<Reverse<(u64, u64, u32)>>,
+    seq: u64,
+}
+
+impl Timeline {
+    fn new() -> Self {
+        Timeline {
+            starts: BinaryHeap::new(),
+            comps: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    fn push_start(&mut self, t_ns: u64, w: usize, phase: u8) {
+        self.seq += 1;
+        self.starts.push(Reverse((t_ns, self.seq, w as u32, phase)));
+    }
+
+    fn push_completion(&mut self, v_target: u64, w: usize) {
+        self.seq += 1;
+        self.comps.push(Reverse((v_target, self.seq, w as u32)));
+    }
+
+    /// Pop the next event in causal order given the engine clock `t_ns`,
+    /// virtual work `v`, and the current `ns_per_micro` conversion.
+    fn pop_next(&mut self, t_ns: u64, v: u64, ns_per_micro: f64) -> Option<Event> {
+        let comp_t = self.comps.peek().map(|&Reverse((vt, _, _))| {
+            t_ns + (vt.saturating_sub(v) as f64 * ns_per_micro).round() as u64
+        });
+        let start_t = self.starts.peek().map(|&Reverse((t, _, _, _))| t);
+        match (start_t, comp_t) {
+            (None, None) => None,
+            (Some(st), Some(ct)) if st > ct => self.pop_completion(ct),
+            (Some(st), _) => {
+                let Reverse((_, _, w, phase)) = self.starts.pop().expect("peeked start");
+                Some(Event::Start { t_ns: st, worker: w as usize, phase })
+            }
+            (None, Some(ct)) => self.pop_completion(ct),
+        }
+    }
+
+    fn pop_completion(&mut self, ct: u64) -> Option<Event> {
+        let Reverse((vt, _, w)) = self.comps.pop().expect("peeked completion");
+        Some(Event::Completion { t_ns: ct, v_target: vt, worker: w as usize })
+    }
+}
+
 impl Simulator {
     /// Simulate one run over `tasks`, visiting them in `ordered` order.
     pub fn run(cfg: &SimConfig, tasks: &[Task], ordered: &[usize]) -> SchedTrace {
+        Self::run_with_stats(cfg, tasks, ordered).0
+    }
+
+    /// [`Simulator::run`] plus the engine's internal [`EngineStats`].
+    pub fn run_with_stats(
+        cfg: &SimConfig,
+        tasks: &[Task],
+        ordered: &[usize],
+    ) -> (SchedTrace, EngineStats) {
         let workers = cfg.triples.workers().max(1);
-        let mut feed = match cfg.alloc {
-            AllocMode::Batch(dist) => Feed::Batch {
-                queues: distribute(ordered, workers, dist),
-                log: WorkerLog::new(workers),
-            },
+        debug_assert!(
+            tasks.len() < u32::MAX as usize,
+            "task count exceeds the engine's u32 index width"
+        );
+
+        // Per-task work in integer micro-units, fixed for the whole run.
+        let work_micro: Vec<u64> = tasks
+            .iter()
+            .map(|t| (cfg.cost.task_work(cfg.stage, t) * WORK_SCALE).round() as u64)
+            .collect();
+
+        // Self-scheduled messages are contiguous ranges of `ordered`, so
+        // prefix sums make any message's work an O(1) difference.
+        let (mut feed, prefix) = match cfg.alloc {
+            AllocMode::Batch(dist) => (
+                Feed::Batch {
+                    queues: distribute(ordered, workers, dist),
+                    log: WorkerLog::new(workers),
+                },
+                Vec::new(),
+            ),
             AllocMode::SelfSched(ss) => {
-                Feed::SelfSched { mgr: Manager::new(ordered, workers, ss) }
+                let mut prefix = Vec::with_capacity(ordered.len() + 1);
+                let mut acc = 0u64;
+                prefix.push(0u64);
+                for &ti in ordered {
+                    acc += work_micro[ti];
+                    prefix.push(acc);
+                }
+                (Feed::SelfSched { mgr: Manager::new(ordered, workers, ss) }, prefix)
             }
         };
 
@@ -74,8 +223,7 @@ impl Simulator {
                 for w in 0..workers {
                     if !queues[w].is_empty() {
                         log.record_start(w, 0.0);
-                        let s = st.next_seq();
-                        st.start_heap.push(Reverse((0, s, w, 0)));
+                        st.timeline.push_start(0, w, 0);
                     }
                 }
             }
@@ -84,35 +232,39 @@ impl Simulator {
                 let ss = mgr.cfg();
                 for w in 0..workers {
                     let granted = (w + 1) as f64 * ss.msg_s;
-                    let Some(msg) = mgr.grant(w, granted) else {
+                    let Some(r) = mgr.grant_range(w, granted) else {
                         break;
                     };
-                    st.pending_msg[w] = msg;
+                    st.pending_msg[w] = MsgRef { start: r.start as u32, len: r.len() as u32 };
                     let start = granted + ss.poll_s / 2.0;
-                    let s = st.next_seq();
-                    st.start_heap
-                        .push(Reverse(((start * TIME_SCALE) as u64, s, w, 0)));
+                    st.timeline.push_start((start * TIME_SCALE) as u64, w, 0);
                 }
             }
         }
 
-        // Main loop: interleave wall-time start events and virtual-work
-        // completion events, whichever is earlier.
+        // Main loop: the timeline interleaves wall-time start events and
+        // virtual-work completion events, whichever is earlier.
+        let mut stats = EngineStats::default();
         loop {
-            let next_completion_t = st.peek_completion_time();
-            let next_start_t = st
-                .start_heap
-                .peek()
-                .map(|Reverse((t, _, _, _))| *t as f64 / TIME_SCALE);
-            match (next_completion_t, next_start_t) {
-                (None, None) => break,
-                (Some(ct), Some(stt)) if stt <= ct => st.handle_start(&mut feed, tasks, stt),
-                (None, Some(stt)) => st.handle_start(&mut feed, tasks, stt),
-                (Some(ct), _) => st.handle_completion(&mut feed, ct),
+            let (t_now, v_now, npm) = (st.t_ns, st.v, st.ns_per_micro);
+            let Some(ev) = st.timeline.pop_next(t_now, v_now, npm) else {
+                break;
+            };
+            stats.events += 1;
+            match ev {
+                Event::Start { t_ns, worker, phase } => {
+                    st.handle_start(&mut feed, &work_micro, &prefix, t_ns, worker, phase)
+                }
+                Event::Completion { t_ns, v_target, worker } => {
+                    stats.completions += 1;
+                    let short = st.handle_completion(&mut feed, t_ns, v_target, worker);
+                    stats.max_completion_shortfall_micro =
+                        stats.max_completion_shortfall_micro.max(short);
+                }
             }
         }
 
-        match feed {
+        let trace = match feed {
             Feed::Batch { log, .. } => {
                 let job_end = log.last_completion();
                 log.trace(job_end)
@@ -121,164 +273,176 @@ impl Simulator {
                 let job_end = mgr.log().last_completion();
                 mgr.into_trace(job_end)
             }
-        }
+        };
+        (trace, stats)
     }
 }
 
 /// Mutable engine state for one run.
 struct FluidState<'c> {
     cfg: &'c SimConfig,
-    /// Wall time, seconds.
-    t: f64,
-    /// Cumulative per-process virtual work, micro-units.
+    /// Wall clock, integer nanoseconds.
+    t_ns: u64,
+    /// Cumulative per-process virtual work, micro-units. Monotone: only
+    /// ever advanced (`+=`) or clamped up to a completion target (`max`).
     v: u64,
     /// Active (busy) process count.
     active: usize,
-    /// Completion heap: (v_target_micro, seq, worker).
-    comp_heap: BinaryHeap<Reverse<(u64, u64, usize)>>,
-    /// Start-event heap: (t_ns, seq, worker, phase). Phase 0 is the grant
-    /// (local per-task overhead, not consuming shared bandwidth); phase 1
-    /// begins the fluid work.
-    start_heap: BinaryHeap<Reverse<(u64, u64, usize, u8)>>,
-    seq: u64,
-    /// Tasks granted but not yet started (message in flight), selfsched.
-    pending_msg: Vec<Vec<usize>>,
+    /// Cached conversion for the current `active`: micro-units of work per
+    /// wall nanosecond, and its inverse.
+    micro_per_ns: f64,
+    ns_per_micro: f64,
+    /// Lazily memoized work rate per active-count (index `active.max(1)`;
+    /// NaN = not yet computed). The rate depends only on the run-constant
+    /// topology plus `active`, so the contention curve is evaluated at
+    /// most once per distinct count.
+    rates: Vec<f64>,
+    timeline: Timeline,
+    /// Message granted but not yet started (in flight), self-sched.
+    pending_msg: Vec<MsgRef>,
     /// The message currently being executed per worker.
-    current_msg: Vec<Vec<usize>>,
+    current_msg: Vec<MsgRef>,
     /// Batch: per-worker queue position.
     qpos: Vec<usize>,
-    /// Per-worker started-at (wall, v) for busy accounting.
-    started_at: Vec<(f64, u64)>,
-    /// Tasks in the worker's current message (for completion accounting).
-    current_count: Vec<usize>,
+    /// Per-worker fluid-entry wall time for busy accounting.
+    started_at_ns: Vec<u64>,
 }
 
 impl<'c> FluidState<'c> {
     fn new(cfg: &'c SimConfig, workers: usize) -> Self {
-        FluidState {
+        let mut st = FluidState {
             cfg,
-            t: 0.0,
+            t_ns: 0,
             v: 0,
             active: 0,
-            comp_heap: BinaryHeap::new(),
-            start_heap: BinaryHeap::new(),
-            seq: 0,
-            pending_msg: vec![Vec::new(); workers],
-            current_msg: vec![Vec::new(); workers],
+            micro_per_ns: 0.0,
+            ns_per_micro: 0.0,
+            rates: vec![f64::NAN; workers + 1],
+            timeline: Timeline::new(),
+            pending_msg: vec![MsgRef::default(); workers],
+            current_msg: vec![MsgRef::default(); workers],
             qpos: vec![0; workers],
-            started_at: vec![(0.0, 0); workers],
-            current_count: vec![0; workers],
-        }
-    }
-
-    fn next_seq(&mut self) -> u64 {
-        self.seq += 1;
-        self.seq
-    }
-
-    fn rate(&self) -> f64 {
-        let ctx = ContentionCtx {
-            active: self.active.max(1),
-            nodes: self.cfg.triples.nodes,
-            nppn: self.cfg.triples.nppn,
-            threads: self.cfg.triples.threads,
+            started_at_ns: vec![0; workers],
         };
-        self.cfg.cost.work_rate(self.cfg.stage, &ctx)
+        st.set_active(0);
+        st
     }
 
-    /// Wall time at which the earliest completion would occur under the
-    /// current rate.
-    fn peek_completion_time(&self) -> Option<f64> {
-        self.comp_heap.peek().map(|Reverse((vt, _, _))| {
-            let dv = (vt.saturating_sub(self.v)) as f64 / WORK_SCALE;
-            self.t + dv / self.rate()
-        })
+    /// Current wall clock in seconds (the unit the sched core records).
+    fn t_s(&self) -> f64 {
+        self.t_ns as f64 / TIME_SCALE
     }
 
-    /// Advance wall clock + virtual work to `t_new`.
-    fn advance_to(&mut self, t_new: f64) {
-        if t_new > self.t {
-            let dv = (t_new - self.t) * self.rate();
-            self.v += (dv * WORK_SCALE).round() as u64;
-            self.t = t_new;
+    /// Update the active count and refresh the cached rate conversions.
+    fn set_active(&mut self, active: usize) {
+        self.active = active;
+        let a = active.max(1);
+        let mut r = self.rates[a];
+        if r.is_nan() {
+            let ctx = ContentionCtx {
+                active: a,
+                nodes: self.cfg.triples.nodes,
+                nppn: self.cfg.triples.nppn,
+                threads: self.cfg.triples.threads,
+            };
+            r = self.cfg.cost.work_rate(self.cfg.stage, &ctx);
+            self.rates[a] = r;
+        }
+        self.micro_per_ns = r * (WORK_SCALE / TIME_SCALE);
+        self.ns_per_micro = TIME_SCALE / (r * WORK_SCALE);
+    }
+
+    /// Advance wall clock + virtual work to `t_new_ns` at the cached rate.
+    fn advance_to(&mut self, t_new_ns: u64) {
+        if t_new_ns > self.t_ns {
+            let dv = ((t_new_ns - self.t_ns) as f64 * self.micro_per_ns).round() as u64;
+            self.v += dv;
+            self.t_ns = t_new_ns;
         }
     }
 
     /// A worker's start event fires. Phase 0: the grant — fetch the
     /// message, account busy from now, and schedule phase 1 after the
     /// local (non-fs) per-task overhead. Phase 1: enter the fluid work.
-    fn handle_start(&mut self, feed: &mut Feed, tasks: &[Task], t_start: f64) {
-        let Reverse((_, _, w, phase)) = self.start_heap.pop().expect("start event");
-        self.advance_to(t_start);
+    fn handle_start(
+        &mut self,
+        feed: &mut Feed,
+        work_micro: &[u64],
+        prefix: &[u64],
+        t_ns: u64,
+        w: usize,
+        phase: u8,
+    ) {
+        self.advance_to(t_ns);
         if phase == 0 {
-            let msg: Vec<usize> = match feed {
+            let msg = match feed {
                 Feed::Batch { queues, .. } => {
                     // One task per "message" in batch mode.
                     let q = &queues[w];
                     if self.qpos[w] < q.len() {
-                        let t = q[self.qpos[w]];
+                        let ti = q[self.qpos[w]];
                         self.qpos[w] += 1;
-                        vec![t]
+                        MsgRef { start: ti as u32, len: 1 }
                     } else {
                         return;
                     }
                 }
                 Feed::SelfSched { .. } => std::mem::take(&mut self.pending_msg[w]),
             };
-            if msg.is_empty() {
+            if msg.len == 0 {
                 return;
             }
-            self.started_at[w] = (self.t, self.v);
-            self.current_count[w] = msg.len();
-            let ohead = self.cfg.cost.wall_overhead(self.cfg.stage) * msg.len() as f64;
+            self.started_at_ns[w] = self.t_ns;
+            let ohead = self.cfg.cost.wall_overhead(self.cfg.stage) * msg.len as f64;
             self.current_msg[w] = msg;
-            let s = self.next_seq();
-            self.start_heap
-                .push(Reverse((((self.t + ohead) * TIME_SCALE) as u64, s, w, 1)));
+            self.timeline
+                .push_start(self.t_ns + (ohead * TIME_SCALE).round() as u64, w, 1);
             return;
         }
         // Phase 1: work begins.
-        let work: f64 = self.current_msg[w]
-            .iter()
-            .map(|&ti| self.cfg.cost.task_work(self.cfg.stage, &tasks[ti]))
-            .sum();
-        self.active += 1;
-        let v_target = self.v + (work * WORK_SCALE).round() as u64;
-        let s = self.next_seq();
-        self.comp_heap.push(Reverse((v_target, s, w)));
+        let cur = self.current_msg[w];
+        let work = if prefix.is_empty() {
+            work_micro[cur.start as usize] // batch: `start` is the task index
+        } else {
+            prefix[(cur.start + cur.len) as usize] - prefix[cur.start as usize]
+        };
+        self.set_active(self.active + 1);
+        self.timeline.push_completion(self.v + work, w);
     }
 
-    /// A worker's message completes.
-    fn handle_completion(&mut self, feed: &mut Feed, t_comp: f64) {
-        let Reverse((_, _, w)) = self.comp_heap.pop().expect("completion event");
-        self.advance_to(t_comp);
-        self.active = self.active.saturating_sub(1);
-        let busy = self.t - self.started_at[w].0;
-        let ntasks = self.current_count[w];
-        self.current_count[w] = 0;
+    /// A worker's message completes. Returns the pre-clamp shortfall
+    /// `v_target - v` in micro-units (solver accuracy, see [`EngineStats`]).
+    fn handle_completion(&mut self, feed: &mut Feed, t_ns: u64, v_target: u64, w: usize) -> u64 {
+        self.advance_to(t_ns);
+        // The integer-ns hop back into v-space can land a hair short of
+        // the target; clamp so `v >= v_target` holds exactly at every pop.
+        let shortfall = v_target.saturating_sub(self.v);
+        self.v = self.v.max(v_target);
+        self.set_active(self.active.saturating_sub(1));
+        let now_s = self.t_s();
+        let busy = (self.t_ns - self.started_at_ns[w]) as f64 / TIME_SCALE;
+        let ntasks = self.current_msg[w].len as usize;
+        self.current_msg[w] = MsgRef::default();
         match feed {
             Feed::Batch { queues, log } => {
-                log.record_completion(w, self.t, busy, ntasks);
+                log.record_completion(w, now_s, busy, ntasks);
                 if self.qpos[w] < queues[w].len() {
                     // Next task starts immediately.
-                    let t_ns = (self.t * TIME_SCALE) as u64;
-                    let s = self.next_seq();
-                    self.start_heap.push(Reverse((t_ns, s, w, 0)));
+                    self.timeline.push_start(self.t_ns, w, 0);
                 }
             }
             Feed::SelfSched { mgr } => {
-                mgr.complete_with_busy(w, self.t, busy);
-                if let Some(msg) = mgr.grant(w, self.t) {
+                mgr.complete_with_busy(w, now_s, busy);
+                let ss = mgr.cfg();
+                if let Some(r) = mgr.grant_range(w, now_s) {
                     // Completion message + manager poll + worker poll.
-                    let ss = mgr.cfg();
-                    let start = self.t + ss.msg_s + ss.poll_s;
-                    self.pending_msg[w] = msg;
-                    let s = self.next_seq();
-                    self.start_heap
-                        .push(Reverse(((start * TIME_SCALE) as u64, s, w, 0)));
+                    self.pending_msg[w] = MsgRef { start: r.start as u32, len: r.len() as u32 };
+                    let start = now_s + ss.msg_s + ss.poll_s;
+                    self.timeline.push_start((start * TIME_SCALE) as u64, w, 0);
                 }
             }
         }
+        shortfall
     }
 }
 
@@ -299,7 +463,7 @@ mod tests {
                 obs: 1000,
                 dem_cells: 0,
                 chrono_key: i as u64,
-                name: format!("f{i:05}"),
+                name: format!("f{i:05}").into(),
             })
             .collect()
     }
@@ -352,6 +516,54 @@ mod tests {
         let b = Simulator::run(&c, &tasks, &ordered);
         assert_eq!(a.job_time, b.job_time);
         assert_eq!(a.worker_times, b.worker_times);
+    }
+
+    /// Satellite acceptance: the v-space solver must never pop a
+    /// completion with `v` meaningfully short of its target, and virtual
+    /// work must be monotone — across stages, packing factors and both
+    /// allocation modes. (`v` is structurally monotone — a `u64` only ever
+    /// advanced or clamped upward — so the property reduces to the
+    /// engine-reported shortfall staying within the integer-ns solver's
+    /// quantization, where the old repeated-`round()` f64 accumulation
+    /// could drift arbitrarily with event count.)
+    #[test]
+    fn virtual_work_is_monotone_and_completions_reach_targets() {
+        testing::check("completion targets reached", |rng| {
+            let n = 1 + rng.below(400);
+            let tasks = mk_tasks(rng, n);
+            let k = [1usize, 2, 7, 300][rng.below(4)];
+            let alloc = if rng.f64() < 0.5 {
+                AllocMode::SelfSched(SelfSchedConfig {
+                    tasks_per_message: k,
+                    ..Default::default()
+                })
+            } else if rng.f64() < 0.5 {
+                AllocMode::Batch(Distribution::Block)
+            } else {
+                AllocMode::Batch(Distribution::Cyclic)
+            };
+            let stage = [Stage::Organize, Stage::Archive, Stage::Process][rng.below(3)];
+            let c = SimConfig {
+                triples: TriplesConfig::table_config(256, 32).unwrap(),
+                alloc,
+                stage,
+                cost: CostModel::paper_calibrated(),
+            };
+            let ordered = order_tasks(&tasks, TaskOrder::Random(rng.below(1000) as u64));
+            let (trace, stats) = Simulator::run_with_stats(&c, &tasks, &ordered);
+            trace.check_invariants(n).map_err(|e| e.to_string())?;
+            prop_assert!(
+                stats.completions >= 1,
+                "no completions for {n} tasks ({} events)",
+                stats.events
+            );
+            prop_assert!(
+                stats.max_completion_shortfall_micro <= 8,
+                "completion popped {} micro-units short of its v-target",
+                stats.max_completion_shortfall_micro
+            );
+            Ok(())
+        });
     }
 
     #[test]

@@ -19,4 +19,4 @@ pub mod cost;
 pub mod engine;
 
 pub use cost::{ContentionCtx, CostModel, Stage};
-pub use engine::{SimConfig, Simulator};
+pub use engine::{EngineStats, SimConfig, Simulator};

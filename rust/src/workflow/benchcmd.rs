@@ -5,7 +5,7 @@
 //! alongside. `emproc bench <exp>` and the `cargo bench` harnesses both
 //! call these, so EXPERIMENTS.md is regenerable from either entry point.
 
-use crate::bench_harness::json;
+use crate::bench_harness::{json, sweep};
 use crate::cli::ArgParser;
 use crate::dist::{order_tasks, Distribution, Task, TaskOrder};
 use crate::metrics::{render_table, Ecdf, Histogram};
@@ -15,6 +15,7 @@ use crate::triples::TriplesConfig;
 use crate::util::{human_duration, Rng};
 use anyhow::Result;
 use std::fmt::Write as _;
+use std::time::Instant;
 
 /// Canonical seed for every experiment (results in EXPERIMENTS.md).
 pub const SEED: u64 = 42;
@@ -24,40 +25,78 @@ fn monday_tasks() -> Vec<Task> {
     Task::from_manifest(&crate::datasets::monday::manifest(&mut rng))
 }
 
-fn sim_organize(tasks: &[Task], ordered: &[usize], cores: usize, nppn: usize) -> SchedTrace {
-    let cfg = SimConfig {
+/// One simulator scenario in a sweep: a JSON-record name (None = run but
+/// don't record) plus everything [`Simulator::run`] needs.
+struct Job<'a> {
+    name: Option<String>,
+    cfg: SimConfig,
+    tasks: &'a [Task],
+    ordered: &'a [usize],
+}
+
+/// Run `jobs` across all host cores — `Simulator::run` is pure and `Send`,
+/// so independent scenarios sweep in parallel via [`sweep::run`] — then
+/// record each named job as a timed JSON scenario (in input order, so the
+/// `BENCH_*.json` layout is deterministic) and return the traces in input
+/// order.
+fn run_jobs(jobs: &[Job]) -> Vec<SchedTrace> {
+    let timed = sweep::run(jobs, |j| {
+        let t0 = Instant::now();
+        let tr = Simulator::run(&j.cfg, j.tasks, j.ordered);
+        (tr, t0.elapsed().as_secs_f64())
+    });
+    for (j, (tr, wall)) in jobs.iter().zip(&timed) {
+        if let Some(name) = &j.name {
+            json::record_timed(name, tr, j.tasks.len(), *wall);
+        }
+    }
+    timed.into_iter().map(|(tr, _)| tr).collect()
+}
+
+fn organize_cfg(cores: usize, nppn: usize) -> SimConfig {
+    SimConfig {
         triples: TriplesConfig::table_config(cores, nppn).expect("feasible cell"),
         alloc: AllocMode::SelfSched(SelfSchedConfig::default()),
         stage: Stage::Organize,
         cost: CostModel::paper_calibrated(),
-    };
-    Simulator::run(&cfg, tasks, ordered)
+    }
 }
 
 /// Tables I and II: job time to organize dataset #1 over the NPPN × cores
-/// sweep, for one task organization.
+/// sweep, for one task organization. The feasible cells run in parallel.
 pub fn run_table(order: TaskOrder, title: &str, paper: &[[f64; 4]; 3]) -> String {
     let tasks = monday_tasks();
     let ordered = order_tasks(&tasks, order);
     let cores_cols = [2048usize, 1024, 512, 256];
     let nppn_rows = [32usize, 16, 8];
-    let mut rows = Vec::new();
+    // Collect the feasible cells, sweep them in parallel, then assemble
+    // rows in table order (JSON records stay in row-major cell order).
+    let mut jobs = Vec::new();
+    let mut cells = Vec::new();
     for (ri, &nppn) in nppn_rows.iter().enumerate() {
-        let mut row = vec![format!("{nppn}")];
         for (ci, &cores) in cores_cols.iter().enumerate() {
             match TriplesConfig::table_config(cores, nppn) {
                 Ok(_) => {
-                    let tr = sim_organize(&tasks, &ordered, cores, nppn);
-                    json::record_trace(
-                        &format!("organize {order:?} cores{cores} nppn{nppn}"),
-                        &tr,
-                    );
-                    row.push(format!("{:.0} ({:.0})", tr.job_time, paper[ri][ci]));
+                    cells.push((ri, ci, Some(jobs.len())));
+                    jobs.push(Job {
+                        name: Some(format!("organize {order:?} cores{cores} nppn{nppn}")),
+                        cfg: organize_cfg(cores, nppn),
+                        tasks: &tasks,
+                        ordered: &ordered,
+                    });
                 }
-                Err(_) => row.push("- (-)".into()),
+                Err(_) => cells.push((ri, ci, None)),
             }
         }
-        rows.push(row);
+    }
+    let traces = run_jobs(&jobs);
+    let mut rows: Vec<Vec<String>> =
+        nppn_rows.iter().map(|&nppn| vec![format!("{nppn}")]).collect();
+    for (ri, ci, slot) in cells {
+        rows[ri].push(match slot {
+            Some(i) => format!("{:.0} ({:.0})", traces[i].job_time, paper[ri][ci]),
+            None => "- (-)".into(),
+        });
     }
     let headers: Vec<String> = std::iter::once("NPPN".to_string())
         .chain(cores_cols.iter().map(|c| format!("{c} cores sim (paper)")))
@@ -114,13 +153,34 @@ pub fn run_fig4() -> String {
     let tasks = monday_tasks();
     let chrono = order_tasks(&tasks, TaskOrder::Chronological);
     let size = order_tasks(&tasks, TaskOrder::LargestFirst);
+    let cores_list = [256usize, 512, 1024, 2048];
+    let mut jobs = Vec::new();
+    for &cores in &cores_list {
+        jobs.push(Job {
+            name: Some(format!("fig4 chrono cores{cores}")),
+            cfg: organize_cfg(cores, 32),
+            tasks: &tasks,
+            ordered: &chrono,
+        });
+        jobs.push(Job {
+            name: Some(format!("fig4 size cores{cores}")),
+            cfg: organize_cfg(cores, 32),
+            tasks: &tasks,
+            ordered: &size,
+        });
+    }
+    // The crossover's size/1024/NPPN16 run rides in the same sweep; the
+    // chrono/2048/NPPN32 side reuses the grid run (the engine is pure).
+    jobs.push(Job {
+        name: None,
+        cfg: organize_cfg(1024, 16),
+        tasks: &tasks,
+        ordered: &size,
+    });
+    let traces = run_jobs(&jobs);
     let mut rows = Vec::new();
-    for &cores in &[256usize, 512, 1024, 2048] {
-        let ct = sim_organize(&tasks, &chrono, cores, 32);
-        let st = sim_organize(&tasks, &size, cores, 32);
-        json::record_trace(&format!("fig4 chrono cores{cores}"), &ct);
-        json::record_trace(&format!("fig4 size cores{cores}"), &st);
-        let (c, s) = (ct.job_time, st.job_time);
+    for (i, &cores) in cores_list.iter().enumerate() {
+        let (c, s) = (traces[i * 2].job_time, traces[i * 2 + 1].job_time);
         rows.push(vec![
             format!("{cores}"),
             format!("{c:.0}"),
@@ -133,8 +193,8 @@ pub fn run_fig4() -> String {
         &["cores".into(), "chrono s".into(), "size s".into(), "size gain".into()],
         &rows,
     );
-    let big_chrono = sim_organize(&tasks, &chrono, 2048, 32).job_time;
-    let half_size = sim_organize(&tasks, &size, 1024, 16).job_time;
+    let big_chrono = traces[6].job_time; // chrono @ 2048 cores
+    let half_size = traces[8].job_time; // the extra crossover job
     let _ = writeln!(
         out,
         "crossover: size/1024/NPPN16 = {half_size:.0}s vs chrono/2048/NPPN32 = \
@@ -148,17 +208,30 @@ pub fn run_fig4() -> String {
 /// workers) for both orderings, NPPN ∈ {32, 16, 8}.
 pub fn run_fig56() -> String {
     let tasks = monday_tasks();
+    let chrono = order_tasks(&tasks, TaskOrder::Chronological);
+    let size = order_tasks(&tasks, TaskOrder::LargestFirst);
+    let figs: [(&str, &[usize], &str); 2] = [
+        ("Fig 5", &chrono, "chronological"),
+        ("Fig 6", &size, "largest-first"),
+    ];
+    let nppns = [32usize, 16, 8];
+    let mut jobs = Vec::new();
+    for &(fig, ordered, name) in &figs {
+        for &nppn in &nppns {
+            jobs.push(Job {
+                name: Some(format!("{fig} {name} nppn{nppn}")),
+                cfg: organize_cfg(512, nppn),
+                tasks: &tasks,
+                ordered,
+            });
+        }
+    }
+    let traces = run_jobs(&jobs);
     let mut s = String::new();
-    for (fig, order, name) in [
-        ("Fig 5", TaskOrder::Chronological, "chronological"),
-        ("Fig 6", TaskOrder::LargestFirst, "largest-first"),
-    ] {
-        let ordered = order_tasks(&tasks, order);
+    for (fi, &(fig, _, name)) in figs.iter().enumerate() {
         let _ = writeln!(s, "{fig} — worker time distribution, {name} (255 workers)");
-        for &nppn in &[32usize, 16, 8] {
-            let tr = sim_organize(&tasks, &ordered, 512, nppn);
-            json::record_trace(&format!("{fig} {name} nppn{nppn}"), &tr);
-            let r = tr.report();
+        for (ni, &nppn) in nppns.iter().enumerate() {
+            let r = traces[fi * nppns.len() + ni].report();
             let _ = writeln!(
                 s,
                 "  NPPN {nppn:2}: median {:>7.0}s  span {:>6.0}s  sd {:>6.0}s",
@@ -168,11 +241,10 @@ pub fn run_fig56() -> String {
             );
         }
     }
-    // The paper's cross-figure observations.
-    let chrono = order_tasks(&tasks, TaskOrder::Chronological);
-    let size = order_tasks(&tasks, TaskOrder::LargestFirst);
-    let rc = sim_organize(&tasks, &chrono, 512, 32).report();
-    let rs = sim_organize(&tasks, &size, 512, 32).report();
+    // The paper's cross-figure observations reuse the NPPN=32 runs above
+    // (the engine is pure, so re-simulating would give identical traces).
+    let rc = traces[0].report();
+    let rs = traces[nppns.len()].report();
     let _ = writeln!(
         s,
         "size-org vs chrono @NPPN32: span {:.0}s -> {:.0}s, sd {:.0}s -> {:.0}s \
@@ -230,31 +302,42 @@ pub fn run_fig7() -> String {
         }
         v
     };
-    let mut rows = Vec::new();
-    for &k in &[1usize, 2, 4, 8, 16, 32] {
-        let cfg = SimConfig {
-            triples: TriplesConfig {
-                nodes: 64,
-                nppn: 8,
-                threads: 1,
-                slots_per_job: 1,
-                allocation: crate::triples::UPGRADED_ALLOCATION,
+    let ks = [1usize, 2, 4, 8, 16, 32];
+    let jobs: Vec<Job> = ks
+        .iter()
+        .map(|&k| Job {
+            name: Some(format!("fig7 tasks_per_message{k}")),
+            cfg: SimConfig {
+                triples: TriplesConfig {
+                    nodes: 64,
+                    nppn: 8,
+                    threads: 1,
+                    slots_per_job: 1,
+                    allocation: crate::triples::UPGRADED_ALLOCATION,
+                },
+                alloc: AllocMode::SelfSched(SelfSchedConfig {
+                    tasks_per_message: k,
+                    ..Default::default()
+                }),
+                stage: Stage::Organize,
+                cost: CostModel::paper_calibrated(),
             },
-            alloc: AllocMode::SelfSched(SelfSchedConfig {
-                tasks_per_message: k,
-                ..Default::default()
-            }),
-            stage: Stage::Organize,
-            cost: CostModel::paper_calibrated(),
-        };
-        let tr = Simulator::run(&cfg, &tasks, &interleaved);
-        json::record_trace(&format!("fig7 tasks_per_message{k}"), &tr);
-        rows.push(vec![
-            format!("{k}"),
-            format!("{:.0}", tr.job_time),
-            format!("{}", tr.messages_sent),
-        ]);
-    }
+            tasks: &tasks,
+            ordered: &interleaved,
+        })
+        .collect();
+    let traces = run_jobs(&jobs);
+    let rows: Vec<Vec<String>> = ks
+        .iter()
+        .zip(&traces)
+        .map(|(&k, tr)| {
+            vec![
+                format!("{k}"),
+                format!("{:.0}", tr.job_time),
+                format!("{}", tr.messages_sent),
+            ]
+        })
+        .collect();
     render_table(
         "Fig 7 — job time vs tasks per message (64 nodes, NPPN 8, cyclic; \
          paper: monotone degradation)",
@@ -273,21 +356,28 @@ pub fn run_archiving() -> String {
     let tasks = crate::datasets::processing::archive_tasks(&mut rng, &p);
     let ordered = order_tasks(&tasks, TaskOrder::FilenameSorted);
     let triples = TriplesConfig::table_config(2048, 32).unwrap();
-    let run = |alloc: AllocMode| {
-        let cfg = SimConfig {
+    let jobs: Vec<Job> = [
+        ("archiving block", AllocMode::Batch(Distribution::Block)),
+        ("archiving cyclic", AllocMode::Batch(Distribution::Cyclic)),
+        ("archiving selfsched", AllocMode::SelfSched(SelfSchedConfig::default())),
+    ]
+    .into_iter()
+    .map(|(name, alloc)| Job {
+        name: Some(name.to_string()),
+        cfg: SimConfig {
             triples,
             alloc,
             stage: Stage::Archive,
             cost: CostModel::paper_calibrated(),
-        };
-        Simulator::run(&cfg, &tasks, &ordered)
-    };
-    let block = run(AllocMode::Batch(Distribution::Block));
-    let cyclic = run(AllocMode::Batch(Distribution::Cyclic));
-    let ss = run(AllocMode::SelfSched(SelfSchedConfig::default()));
-    json::record_trace("archiving block", &block);
-    json::record_trace("archiving cyclic", &cyclic);
-    json::record_trace("archiving selfsched", &ss);
+        },
+        tasks: &tasks,
+        ordered: &ordered,
+    })
+    .collect();
+    let mut traces = run_jobs(&jobs);
+    let ss = traces.pop().expect("selfsched trace");
+    let cyclic = traces.pop().expect("cyclic trace");
+    let block = traces.pop().expect("block trace");
     // "2% of parallel processes account for more than 95% of the total job
     // time" — busy-time concentration under block.
     let mut busy = block.worker_busy.clone();
@@ -333,17 +423,30 @@ pub fn run_fig8() -> String {
         stage: Stage::Process,
         cost: CostModel::paper_calibrated(),
     };
-    let tr = Simulator::run(&cfg, &tasks, &ordered);
-    json::record_trace("fig8 selfsched random", &tr);
-    let r = tr.report();
-    let h = |x: f64| x / 3600.0;
     let baseline_cfg = SimConfig {
         alloc: AllocMode::Batch(Distribution::Block),
         ..cfg.clone()
     };
     let sorted = order_tasks(&tasks, TaskOrder::FilenameSorted);
-    let baseline = Simulator::run(&baseline_cfg, &tasks, &sorted);
-    json::record_trace("fig8 batch_block filename_sorted", &baseline);
+    let jobs = [
+        Job {
+            name: Some("fig8 selfsched random".to_string()),
+            cfg,
+            tasks: &tasks,
+            ordered: &ordered,
+        },
+        Job {
+            name: Some("fig8 batch_block filename_sorted".to_string()),
+            cfg: baseline_cfg,
+            tasks: &tasks,
+            ordered: &sorted,
+        },
+    ];
+    let mut traces = run_jobs(&jobs);
+    let baseline = traces.pop().expect("baseline trace");
+    let tr = traces.pop().expect("fig8 trace");
+    let r = tr.report();
+    let h = |x: f64| x / 3600.0;
     format!(
         "Fig 8 — worker time, processing dataset #2 (random org, self-sched, \
          1023 workers)\n\
@@ -367,14 +470,18 @@ pub fn run_fig9(scale: f64) -> String {
     let mut rng = Rng::new(SEED);
     let tasks = crate::datasets::processing::radar_tasks(&mut rng, scale);
     let ordered = order_tasks(&tasks, TaskOrder::Random(SEED));
-    let cfg = SimConfig {
-        triples: TriplesConfig::followup_config(),
-        alloc: AllocMode::SelfSched(SelfSchedConfig::radar()),
-        stage: Stage::Process,
-        cost: CostModel::paper_calibrated(),
-    };
-    let tr = Simulator::run(&cfg, &tasks, &ordered);
-    json::record_trace(&format!("fig9 radar scale{scale}"), &tr);
+    let jobs = [Job {
+        name: Some(format!("fig9 radar scale{scale}")),
+        cfg: SimConfig {
+            triples: TriplesConfig::followup_config(),
+            alloc: AllocMode::SelfSched(SelfSchedConfig::radar()),
+            stage: Stage::Process,
+            cost: CostModel::paper_calibrated(),
+        },
+        tasks: &tasks,
+        ordered: &ordered,
+    }];
+    let tr = run_jobs(&jobs).pop().expect("fig9 trace");
     let r = tr.report();
     let e = Ecdf::new(tr.worker_times.clone());
     let mut s = format!(

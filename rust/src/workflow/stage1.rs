@@ -112,7 +112,7 @@ pub fn run(
             obs: size / 110,
             dem_cells: 0,
             chrono_key: i as u64,
-            name: path.display().to_string(),
+            name: path.display().to_string().into(),
         })
         .collect();
     let ordered = crate::dist::order_tasks(&tasks, order);

@@ -212,7 +212,7 @@ pub fn run(
             obs: 0,
             dem_cells: 0,
             chrono_key: i as u64,
-            name: p.display().to_string(),
+            name: p.display().to_string().into(),
         })
         .collect();
     let ordered = crate::dist::order_tasks(&tasks, order);

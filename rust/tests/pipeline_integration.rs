@@ -95,7 +95,7 @@ fn real_and_simulated_selfsched_allocate_identically() {
             obs: 10,
             dem_cells: 0,
             chrono_key: i as u64,
-            name: format!("t{i:03}"),
+            name: format!("t{i:03}").into(),
         })
         .collect();
     let ordered = order_tasks(&tasks, TaskOrder::LargestFirst);
