@@ -251,13 +251,39 @@ pub mod json {
     /// where present. Naive line-based parsing of our own stable format
     /// (serde is unavailable offline); used by `emproc bench-check` to
     /// gate CI on throughput regressions.
+    ///
+    /// Hardened against the gate silently passing on garbage: a file
+    /// without the `"bench"` header, a `tasks_per_sec` that is present
+    /// but unparseable, or a negative/non-finite throughput all fail with
+    /// `InvalidData` instead of being skipped (a skipped scenario looks
+    /// exactly like a healthy one to `bench-check`). Untimed scenarios
+    /// (no `tasks_per_sec` field at all) are legitimately absent and are
+    /// still skipped.
     pub fn read_throughput(path: &Path) -> std::io::Result<(f64, Vec<(String, f64)>)> {
+        let bad = |msg: String| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("{}: {msg}", path.display()),
+            )
+        };
         let text = std::fs::read_to_string(path)?;
+        if !text.lines().any(|l| extract_str(l, "\"bench\": \"").is_some()) {
+            return Err(bad("missing \"bench\" header — not a BENCH_*.json".into()));
+        }
         let mut file_level = 0.0;
         let mut scenarios = Vec::new();
         for line in text.lines() {
             let name = extract_str(line, "\"scenario\": \"");
-            let tps = extract_num(line, "\"tasks_per_sec\": ");
+            let tps = match extract_num(line, "\"tasks_per_sec\": ") {
+                None => None,
+                Some(Ok(t)) if t.is_finite() && t >= 0.0 => Some(t),
+                Some(Ok(t)) => {
+                    return Err(bad(format!("throughput {t} is not a sane tasks/s figure")))
+                }
+                Some(Err(raw)) => {
+                    return Err(bad(format!("cannot parse tasks_per_sec from '{raw}'")))
+                }
+            };
             match (name, tps) {
                 (Some(n), Some(t)) => scenarios.push((n, t)),
                 (None, Some(t)) => file_level = t,
@@ -282,15 +308,19 @@ pub mod json {
         None
     }
 
-    /// The number following `key` on `line`.
-    fn extract_num(line: &str, key: &str) -> Option<f64> {
+    /// The number following `key` on `line`: `None` when the key is
+    /// absent, `Some(Err(raw))` when it is present but not a number.
+    /// (A key inside a scenario *name* cannot false-match: `escape` turns
+    /// every `"` in a name into `\"`, so the key's closing `": ` sequence
+    /// never appears inside one.)
+    fn extract_num(line: &str, key: &str) -> Option<Result<f64, String>> {
         let rest = &line[line.find(key)? + key.len()..];
         let end = rest
             .find(|c: char| {
                 !(c.is_ascii_digit() || matches!(c, '.' | '-' | '+' | 'e' | 'E'))
             })
             .unwrap_or(rest.len());
-        rest[..end].parse().ok()
+        Some(rest[..end].parse().map_err(|_| rest[..end].to_string()))
     }
 }
 
@@ -322,6 +352,75 @@ mod tests {
         let empty: Vec<u32> = Vec::new();
         assert!(sweep::run(&empty, |&x| x).is_empty());
         assert_eq!(sweep::run(&[7u32][..], |&x| x + 1), vec![8]);
+    }
+
+    /// Write `text` to a unique temp file and parse it back.
+    fn parse_text(tag: &str, text: &str) -> std::io::Result<(f64, Vec<(String, f64)>)> {
+        let path = std::env::temp_dir()
+            .join(format!("emproc_bench_rt_{tag}_{}.json", std::process::id()));
+        std::fs::write(&path, text).unwrap();
+        let r = json::read_throughput(&path);
+        let _ = std::fs::remove_file(&path);
+        r
+    }
+
+    #[test]
+    fn read_throughput_skips_untimed_scenarios_but_keeps_zero_ones() {
+        // Missing tasks_per_sec = legitimately untimed -> skipped;
+        // an explicit 0.0 (zero-throughput scenario) must be reported so
+        // the committed baseline decides whether it gates.
+        let (file_tps, scenarios) = parse_text(
+            "fields",
+            "{\n  \"bench\": \"t\",\n  \"tasks_per_sec\": 0.0,\n  \"scenarios\": [\n    \
+             {\"scenario\": \"untimed\", \"job_time_s\": 1.0, \"messages_sent\": 2, \"tasks\": 0},\n    \
+             {\"scenario\": \"zero\", \"job_time_s\": 1.0, \"messages_sent\": 0, \"tasks\": 0, \
+             \"sim_wall_s\": 0.5, \"tasks_per_sec\": 0.0},\n    \
+             {\"scenario\": \"timed\", \"job_time_s\": 1.0, \"messages_sent\": 1, \"tasks\": 10, \
+             \"sim_wall_s\": 0.5, \"tasks_per_sec\": 20.0}\n  ]\n}\n",
+        )
+        .unwrap();
+        assert_eq!(file_tps, 0.0);
+        assert_eq!(
+            scenarios,
+            vec![("zero".to_string(), 0.0), ("timed".to_string(), 20.0)]
+        );
+    }
+
+    #[test]
+    fn read_throughput_rejects_files_without_bench_header() {
+        let err = parse_text("nothdr", "{\"scenarios\": []}").unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        let err = parse_text("garbage", "complete nonsense, not json at all").unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(
+            json::read_throughput(std::path::Path::new("/nonexistent/BENCH_x.json")).is_err()
+        );
+    }
+
+    #[test]
+    fn read_throughput_rejects_malformed_and_insane_numbers() {
+        for (tag, tps) in [("nan", "NaN"), ("neg", "-3.0"), ("junk", "fast")] {
+            let text = format!(
+                "{{\n  \"bench\": \"t\",\n  \"scenarios\": [\n    {{\"scenario\": \"s\", \
+                 \"tasks_per_sec\": {tps}}}\n  ]\n}}\n"
+            );
+            let err = parse_text(tag, &text).unwrap_err();
+            assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{tag}");
+        }
+    }
+
+    #[test]
+    fn read_throughput_is_not_fooled_by_key_text_inside_names() {
+        // `escape` turns `"` into `\"`, so a name that *contains* the
+        // tasks_per_sec key must not be parsed as a field.
+        let (_, scenarios) = parse_text(
+            "evil",
+            "{\n  \"bench\": \"t\",\n  \"scenarios\": [\n    \
+             {\"scenario\": \"evil \\\"tasks_per_sec\\\": 9\", \"job_time_s\": 1.0, \
+             \"messages_sent\": 0, \"tasks\": 0}\n  ]\n}\n",
+        )
+        .unwrap();
+        assert!(scenarios.is_empty(), "{scenarios:?}");
     }
 
     // NOTE: a single test owns the process-global scenario collector —

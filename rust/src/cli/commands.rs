@@ -15,13 +15,22 @@ COMMANDS:
       --scale F      fraction of paper scale for real files (default 0.001)
       --seed N       RNG seed (default 42)
   organize   stage 1: parse + organize into the 4-tier hierarchy
-      --data DIR --out DIR [--workers N] [--order chrono|size|random]
+      --data DIR --out DIR [--workers N] [--order chrono|size|random|filename]
+      [--seed N] [--alloc selfsched|block|cyclic]
   archive    stage 2: zip bottom-tier directories
-      --data DIR --out DIR [--dist block|cyclic] [--workers N]
+      --data DIR --out DIR [--dist block|cyclic|selfsched] [--workers N]
+      [--order O] [--seed N]
   process    stage 3: interpolate into track segments (PJRT hot path)
       --data DIR --out DIR [--workers N] [--artifacts DIR]
+      [--order O] [--seed N] [--alloc selfsched|block|cyclic]
   pipeline   all three stages end-to-end on a generated corpus
-      --out DIR [--scale F] [--workers N] [--seed N]
+      --out DIR [--dataset monday|aerodrome] [--scale F] [--workers N] [--seed N]
+  scenarios  the paper's strategy matrix on the real executor:
+             {selfsched,block,cyclic} x {chrono,size,filename,random} over
+             both mini corpora, per-stage traces to BENCH_<NAME>.json
+      --out DIR [--workers N] [--scale F] [--seed N]
+      [--datasets monday,aerodrome] [--strategies selfsched,block,cyclic]
+      [--orders chrono,size,filename,random] [--json NAME]
   queries    §III.B aerodrome query generation (geometry pipeline)
       --out FILE [--aerodromes N] [--seed N]
   bench <EXP|all>   regenerate a paper table/figure on the simulator
@@ -50,6 +59,7 @@ pub fn dispatch(args: &[String]) -> Result<()> {
         "archive" => cmd_archive(rest),
         "process" => cmd_process(rest),
         "pipeline" => cmd_pipeline(rest),
+        "scenarios" => cmd_scenarios(rest),
         "queries" => cmd_queries(rest),
         "bench" => cmd_bench(rest),
         "bench-check" => cmd_bench_check(rest),
@@ -102,6 +112,11 @@ fn cmd_process(args: &[String]) -> Result<()> {
 fn cmd_pipeline(args: &[String]) -> Result<()> {
     let a = ArgParser::parse(args, &[])?;
     crate::workflow::commands::pipeline(&a)
+}
+
+fn cmd_scenarios(args: &[String]) -> Result<()> {
+    let a = ArgParser::parse(args, &[])?;
+    crate::workflow::commands::scenarios(&a)
 }
 
 fn cmd_queries(args: &[String]) -> Result<()> {

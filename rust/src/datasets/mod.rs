@@ -28,6 +28,45 @@ pub enum DatasetKind {
     Radar,
 }
 
+impl DatasetKind {
+    /// Stable lowercase name (CLI flags, scenario labels, directories).
+    pub fn label(self) -> &'static str {
+        match self {
+            DatasetKind::Monday => "monday",
+            DatasetKind::Aerodrome => "aerodrome",
+            DatasetKind::Radar => "radar",
+        }
+    }
+
+    /// Parse a [`DatasetKind::label`] back.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "monday" | "mondays" => DatasetKind::Monday,
+            "aerodrome" | "aerodromes" => DatasetKind::Aerodrome,
+            "radar" => DatasetKind::Radar,
+            other => anyhow::bail!("unknown dataset '{other}' (monday|aerodrome|radar)"),
+        })
+    }
+
+    /// Scaled-down manifest for miniature real-corpus runs. The radar
+    /// dataset is manifest-only (§V tasks are deidentified ids, not
+    /// files), so it has no real corpus.
+    pub fn mini_manifest(
+        self,
+        rng: &mut Rng,
+        days: u32,
+        max_file_bytes: u64,
+    ) -> anyhow::Result<FileManifest> {
+        Ok(match self {
+            DatasetKind::Monday => monday::mini_manifest(rng, days, max_file_bytes),
+            DatasetKind::Aerodrome => aerodrome::mini_manifest(rng, days, max_file_bytes),
+            DatasetKind::Radar => {
+                anyhow::bail!("the radar dataset is manifest-only (no miniature real corpus)")
+            }
+        })
+    }
+}
+
 /// One raw input file (= one stage-1 task).
 #[derive(Debug, Clone)]
 pub struct FileEntry {
@@ -103,9 +142,31 @@ pub fn write_real_corpus(
     scale: f64,
     rng: &mut Rng,
 ) -> anyhow::Result<Vec<std::path::PathBuf>> {
+    write_real_corpus_skewed(manifest, registry, dir, scale, 0.0, rng)
+}
+
+/// Like [`write_real_corpus`], but with traffic concentrated on a
+/// low-ICAO-address head of the registry: each track's aircraft is drawn
+/// with probability density `∝ u^(1 + aircraft_skew)` over the registry
+/// sorted by ICAO24 (`aircraft_skew = 0` is uniform). Because the
+/// organized hierarchy's bottom tier buckets *contiguous* ICAO ranges
+/// ([`crate::hierarchy::icao_bucket`]) and stage 2 visits those buckets
+/// filename-sorted, a positive skew makes early archive tasks heavy and
+/// late ones light — the §IV.B cost-correlates-with-order regime that
+/// made block distribution pathological on the aerodrome corpus.
+pub fn write_real_corpus_skewed(
+    manifest: &FileManifest,
+    registry: &[crate::registry::RegistryEntry],
+    dir: &Path,
+    scale: f64,
+    aircraft_skew: f64,
+    rng: &mut Rng,
+) -> anyhow::Result<Vec<std::path::PathBuf>> {
     use crate::tracks::{write_csv, Observation, Track};
     std::fs::create_dir_all(dir)?;
     let mut out = Vec::with_capacity(manifest.entries.len());
+    let mut by_icao: Vec<usize> = (0..registry.len()).collect();
+    by_icao.sort_by_key(|&i| registry[i].icao24);
     // ~110 bytes per CSV observation line.
     const BYTES_PER_OBS: f64 = 110.0;
     for entry in &manifest.entries {
@@ -114,7 +175,14 @@ pub fn write_real_corpus(
         let mut written = 0usize;
         let base_t = 1_500_000_000.0 + entry.day as f64 * 86_400.0 + entry.hour as f64 * 3600.0;
         while written < target {
-            let reg = &registry[rng.below(registry.len())];
+            let pick = if aircraft_skew > 0.0 {
+                let u = rng.uniform(0.0, 1.0);
+                let at = (registry.len() as f64 * u.powf(1.0 + aircraft_skew)) as usize;
+                by_icao[at.min(registry.len() - 1)]
+            } else {
+                rng.below(registry.len())
+            };
+            let reg = &registry[pick];
             let n = (15 + rng.below(40)).min(target - written.min(target) + 15);
             let lat0 = rng.uniform(28.0, 45.0);
             let lon0 = rng.uniform(-120.0, -70.0);
@@ -168,6 +236,61 @@ mod tests {
         assert_eq!(m.chronological(), vec![0, 2, 1]);
         assert_eq!(m.largest_first(), vec![1, 2, 0]);
         assert_eq!(m.total_bytes(), 600);
+    }
+
+    #[test]
+    fn skewed_corpus_concentrates_on_low_icao_aircraft() {
+        let mut rng = Rng::new(6);
+        let registry = crate::registry::generate(&mut rng, 40);
+        let mut icaos: Vec<u32> = registry.iter().map(|e| e.icao24).collect();
+        icaos.sort_unstable();
+        let cutoff = icaos[icaos.len() / 4]; // lowest quarter of addresses
+        let dir = std::env::temp_dir().join(format!("emproc_skew_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let m = FileManifest {
+            kind: DatasetKind::Aerodrome,
+            entries: (0..6)
+                .map(|i| FileEntry {
+                    name: format!("q{i}.csv"),
+                    size: 40_000,
+                    day: 0,
+                    hour: 0,
+                    group: 0,
+                })
+                .collect(),
+        };
+        let paths = write_real_corpus_skewed(&m, &registry, &dir, 1.0, 3.0, &mut rng).unwrap();
+        let mut head = 0u64;
+        let mut total = 0u64;
+        for p in &paths {
+            let text = std::fs::read_to_string(p).unwrap();
+            for t in crate::tracks::parse_csv(&text).unwrap() {
+                total += t.obs.len() as u64;
+                if t.icao24 <= cutoff {
+                    head += t.obs.len() as u64;
+                }
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(
+            head as f64 > 0.6 * total as f64,
+            "skew 3.0 should route most traffic to the low-ICAO quarter \
+             ({head} of {total} observations)"
+        );
+    }
+
+    #[test]
+    fn kind_labels_round_trip_and_radar_has_no_corpus() {
+        for kind in [DatasetKind::Monday, DatasetKind::Aerodrome, DatasetKind::Radar] {
+            assert_eq!(DatasetKind::parse(kind.label()).unwrap(), kind);
+        }
+        assert!(DatasetKind::parse("nope").is_err());
+        let mut rng = Rng::new(1);
+        assert!(DatasetKind::Radar.mini_manifest(&mut rng, 1, 1_000).is_err());
+        assert_eq!(
+            DatasetKind::Monday.mini_manifest(&mut rng, 1, 1_000).unwrap().kind,
+            DatasetKind::Monday
+        );
     }
 
     #[test]

@@ -19,9 +19,31 @@
 use crate::dist::{distribute, Distribution};
 use crate::sched::{Manager, WorkerLog};
 use crate::selfsched::{SchedTrace, SelfSchedConfig};
-use anyhow::Result;
+use anyhow::{anyhow, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
+
+/// Best-effort text of a panic payload (what `panic!` carried).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run `f`, converting a panic into an `Err` so a worker that panics is
+/// reported through the completion channel like any failing task instead
+/// of silently taking down its thread (and, with it, the run's accounting).
+fn catch_panics<T>(f: impl FnOnce() -> Result<T>) -> Result<T> {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(r) => r,
+        Err(payload) => Err(anyhow!("worker panicked: {}", panic_message(&*payload))),
+    }
+}
 
 /// Run `work(worker_idx, task_idx)` over `ordered` task indices with one
 /// manager (this thread) and `nworkers` worker threads, allocating tasks
@@ -79,7 +101,7 @@ where
             let work = &work;
             let init = &init;
             scope.spawn(move || {
-                let mut state = match init(w) {
+                let mut state = match catch_panics(|| init(w)) {
                     Ok(s) => s,
                     Err(e) => {
                         let _ = done_tx.send((w, Err(e)));
@@ -89,7 +111,11 @@ where
                 while let Ok(msg) = rx.recv() {
                     let mut result = Ok(());
                     for ti in msg {
-                        if let Err(e) = work(&mut state, w, ti) {
+                        // A panicking task is reported exactly like a
+                        // failing one; letting it unwind the thread would
+                        // leave the manager waiting on a grant that can
+                        // never complete.
+                        if let Err(e) = catch_panics(|| work(&mut state, w, ti)) {
                             result = Err(e);
                             break;
                         }
@@ -135,11 +161,37 @@ where
                         break; // abandon outstanding work; workers unwind on channel drop
                     }
                     if let Some(msg) = mgr.grant(w, elapsed()) {
-                        task_txs[w].send(msg).expect("worker alive");
+                        if task_txs[w].send(msg).is_err() {
+                            // The worker's receiver is gone even though it
+                            // just reported success — its thread died
+                            // between the two. Abort rather than wait on a
+                            // grant that can never complete.
+                            mgr.abort();
+                            if first_error.is_none() {
+                                first_error =
+                                    Some(anyhow!("worker {w} hung up before receiving work"));
+                            }
+                            break;
+                        }
                     }
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => continue, // next poll
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    // Every worker dropped its completion sender while
+                    // grants are still outstanding: the run is incomplete
+                    // and must not be reported as a success (workers that
+                    // fail or panic normally report through the channel
+                    // first, so this is a last-resort guard against
+                    // silently truncated traces).
+                    if first_error.is_none() {
+                        first_error = Some(anyhow!(
+                            "all workers disconnected with {} grant(s) outstanding — \
+                             run is incomplete",
+                            mgr.outstanding()
+                        ));
+                    }
+                    break;
+                }
             }
         }
         drop(task_txs); // workers exit their recv loops
@@ -163,6 +215,26 @@ pub fn run_batch<F>(
 where
     F: Fn(usize, usize) -> Result<()> + Send + Sync,
 {
+    run_batch_init(ntasks, ordered, nworkers, dist, |_| Ok(()), move |_, w, ti| work(w, ti))
+}
+
+/// Like [`run_batch`], but each worker first builds private state with
+/// `init(worker_idx)` inside its own thread — the batch-mode counterpart
+/// of [`run_self_scheduled_init`], so stage 3 can run its non-`Send`
+/// PJRT model under block/cyclic distribution too. Worker panics are
+/// reported as errors, never as a silently truncated trace.
+pub fn run_batch_init<S, I, F>(
+    ntasks: usize,
+    ordered: &[usize],
+    nworkers: usize,
+    dist: Distribution,
+    init: I,
+    work: F,
+) -> Result<SchedTrace>
+where
+    I: Fn(usize) -> Result<S> + Send + Sync,
+    F: Fn(&mut S, usize, usize) -> Result<()> + Send + Sync,
+{
     assert!(nworkers >= 1);
     assert_eq!(ordered.len(), ntasks);
     let queues = distribute(ordered, nworkers, dist);
@@ -173,18 +245,31 @@ where
             .enumerate()
             .map(|(w, queue)| {
                 let work = &work;
+                let init = &init;
                 scope.spawn(move || -> Result<(f64, f64, usize)> {
-                    let begin = job_start.elapsed().as_secs_f64();
-                    for &ti in queue {
-                        work(w, ti)?;
-                    }
-                    Ok((begin, job_start.elapsed().as_secs_f64(), queue.len()))
+                    catch_panics(|| {
+                        let mut state = init(w)?;
+                        let begin = job_start.elapsed().as_secs_f64();
+                        for &ti in queue {
+                            work(&mut state, w, ti)?;
+                        }
+                        Ok((begin, job_start.elapsed().as_secs_f64(), queue.len()))
+                    })
                 })
             })
             .collect();
         handles
             .into_iter()
-            .map(|h| h.join().expect("worker panicked"))
+            .map(|h| match h.join() {
+                Ok(r) => r,
+                // catch_panics makes this unreachable in practice, but a
+                // dead worker must still surface as an error, not a panic
+                // of the caller.
+                Err(payload) => Err(anyhow!(
+                    "worker thread died: {}",
+                    panic_message(&*payload)
+                )),
+            })
             .collect()
     });
     let mut log = WorkerLog::new(nworkers);
@@ -288,6 +373,85 @@ mod tests {
             |_, _, _| Ok(()),
         );
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn panicking_worker_is_an_error_not_a_truncated_ok() {
+        // Regression: a worker panic used to tear down the completion
+        // channel, and the manager's `Disconnected => break` turned the
+        // truncated run into an `Ok` trace. It must surface as an error.
+        let n = 30;
+        let ordered: Vec<usize> = (0..n).collect();
+        for workers in [1, 4] {
+            let r = run_self_scheduled(n, &ordered, workers, fast_cfg(), |_, ti| {
+                if ti == 7 {
+                    panic!("task 7 exploded");
+                }
+                Ok(())
+            });
+            let err = r.expect_err("panicking worker must fail the run");
+            assert!(
+                format!("{err:#}").contains("panicked"),
+                "error should mention the panic: {err:#}"
+            );
+        }
+    }
+
+    #[test]
+    fn panicking_init_is_an_error() {
+        let n = 10;
+        let ordered: Vec<usize> = (0..n).collect();
+        let r = run_self_scheduled_init(
+            n,
+            &ordered,
+            3,
+            fast_cfg(),
+            |w| {
+                if w == 1 {
+                    panic!("init exploded");
+                }
+                Ok(0usize)
+            },
+            |_, _, _| Ok(()),
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn batch_worker_panic_is_an_error() {
+        let ordered: Vec<usize> = (0..12).collect();
+        for dist in [Distribution::Block, Distribution::Cyclic] {
+            let r = run_batch(12, &ordered, 3, dist, |_, ti| {
+                if ti == 4 {
+                    panic!("batch task 4 exploded");
+                }
+                Ok(())
+            });
+            let err = r.expect_err("panicking batch worker must fail the run");
+            assert!(format!("{err:#}").contains("panicked"), "{err:#}");
+        }
+    }
+
+    #[test]
+    fn batch_init_builds_per_worker_state() {
+        let n = 20;
+        let ordered: Vec<usize> = (0..n).collect();
+        let total = AtomicUsize::new(0);
+        let trace = run_batch_init(
+            n,
+            &ordered,
+            4,
+            Distribution::Cyclic,
+            |w| Ok(w * 100),
+            |state, w, _ti| {
+                assert_eq!(*state, w * 100);
+                total.fetch_add(1, Ordering::SeqCst);
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(total.load(Ordering::SeqCst), n);
+        trace.check_invariants(n).unwrap();
     }
 
     #[test]

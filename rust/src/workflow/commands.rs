@@ -1,21 +1,44 @@
 //! CLI subcommand implementations (thin wrappers over the library).
 
 use crate::cli::ArgParser;
+use crate::datasets::DatasetKind;
 use crate::dist::TaskOrder;
 use crate::registry::Registry;
 use crate::selfsched::{AllocMode, SelfSchedConfig};
 use crate::util::Rng;
+use crate::workflow::scenario;
 use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
 
-fn parse_order(s: &str) -> Result<TaskOrder> {
+/// Parse a `--order` value. `random` shuffles with the run's `--seed`
+/// (it used to silently pin seed 1, discarding the user's flag).
+pub(crate) fn parse_order(s: &str, seed: u64) -> Result<TaskOrder> {
     Ok(match s {
         "chrono" | "chronological" => TaskOrder::Chronological,
         "size" | "largest" => TaskOrder::LargestFirst,
-        "random" => TaskOrder::Random(1),
+        "random" => TaskOrder::Random(seed),
         "filename" => TaskOrder::FilenameSorted,
         other => bail!("unknown order '{other}' (chrono|size|random|filename)"),
     })
+}
+
+/// Parse an `--alloc` (or stage-2 `--dist`) value.
+pub(crate) fn parse_alloc(s: &str) -> Result<AllocMode> {
+    Ok(match s {
+        "selfsched" | "self-sched" | "ss" => AllocMode::SelfSched(SelfSchedConfig::default()),
+        "block" => AllocMode::Batch(crate::dist::Distribution::Block),
+        "cyclic" => AllocMode::Batch(crate::dist::Distribution::Cyclic),
+        other => bail!("unknown allocation '{other}' (selfsched|block|cyclic)"),
+    })
+}
+
+/// Parse a comma-separated flag value through `one`.
+fn parse_list<T>(csv: &str, one: impl Fn(&str) -> Result<T>) -> Result<Vec<T>> {
+    csv.split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| one(s))
+        .collect()
 }
 
 /// `emproc generate <monday|aerodrome|radar> --out DIR [--scale F] [--seed N]`
@@ -78,19 +101,22 @@ fn load_registry(data_dir: &std::path::Path) -> Result<Registry> {
     Ok(reg)
 }
 
-/// `emproc organize --data DIR --out DIR [--workers N] [--order O]`
+/// `emproc organize --data DIR --out DIR [--workers N] [--order O]
+/// [--seed N] [--alloc selfsched|block|cyclic]`
 pub fn organize(a: &ArgParser) -> Result<()> {
     let data = PathBuf::from(a.required("data")?);
     let out = PathBuf::from(a.required("out")?);
     let workers = a.get_num("workers", 4usize)?;
-    let order = parse_order(a.get_or("order", "size"))?;
+    let seed = a.get_num("seed", 1u64)?;
+    let order = parse_order(a.get_or("order", "size"), seed)?;
+    let alloc = parse_alloc(a.get_or("alloc", "selfsched"))?;
     let registry = load_registry(&data)?;
     let outcome = crate::workflow::stage1::run(
         &crate::workflow::stage1::OrganizeJob { data_dir: data, out_dir: out, year: 2019 },
         &registry,
         workers,
         order,
-        SelfSchedConfig::default(),
+        alloc,
     )?;
     println!(
         "organized {} files ({} obs): {}",
@@ -101,21 +127,20 @@ pub fn organize(a: &ArgParser) -> Result<()> {
     Ok(())
 }
 
-/// `emproc archive --data DIR --out DIR [--dist block|cyclic] [--workers N]`
+/// `emproc archive --data DIR --out DIR [--dist block|cyclic|selfsched]
+/// [--workers N] [--order O] [--seed N]`
 pub fn archive(a: &ArgParser) -> Result<()> {
     let data = PathBuf::from(a.required("data")?);
     let out = PathBuf::from(a.required("out")?);
     let workers = a.get_num("workers", 4usize)?;
-    let alloc = match a.get_or("dist", "cyclic") {
-        "block" => AllocMode::Batch(crate::dist::Distribution::Block),
-        "cyclic" => AllocMode::Batch(crate::dist::Distribution::Cyclic),
-        "selfsched" => AllocMode::SelfSched(SelfSchedConfig::default()),
-        other => bail!("unknown distribution '{other}'"),
-    };
+    let seed = a.get_num("seed", 1u64)?;
+    let alloc = parse_alloc(a.get_or("dist", "cyclic"))?;
+    let order = parse_order(a.get_or("order", "filename"), seed)?;
     let outcome = crate::workflow::stage2::run(
         &crate::workflow::stage2::ArchiveJob { organized_dir: data, archive_dir: out },
         workers,
         alloc,
+        order,
     )?;
     println!(
         "archived {} dirs, {} in, {} Lustre blocks saved: {}",
@@ -127,11 +152,15 @@ pub fn archive(a: &ArgParser) -> Result<()> {
     Ok(())
 }
 
-/// `emproc process --data DIR --out DIR [--workers N] [--artifacts DIR]`
+/// `emproc process --data DIR --out DIR [--workers N] [--artifacts DIR]
+/// [--order O] [--seed N] [--alloc selfsched|block|cyclic]`
 pub fn process(a: &ArgParser) -> Result<()> {
     let data = PathBuf::from(a.required("data")?);
     let out = PathBuf::from(a.required("out")?);
     let workers = a.get_num("workers", 4usize)?;
+    let seed = a.get_num("seed", 1u64)?;
+    let order = parse_order(a.get_or("order", "random"), seed)?;
+    let alloc = parse_alloc(a.get_or("alloc", "selfsched"))?;
     let artifacts = a
         .get("artifacts")
         .map(PathBuf::from)
@@ -144,8 +173,8 @@ pub fn process(a: &ArgParser) -> Result<()> {
             segment: crate::tracks::SegmentConfig::default(),
         },
         workers,
-        TaskOrder::Random(1),
-        SelfSchedConfig::default(),
+        order,
+        alloc,
     )?;
     println!(
         "processed {} archives -> {} segments ({} PJRT batches, {:.3}s in PJRT): {}",
@@ -158,18 +187,150 @@ pub fn process(a: &ArgParser) -> Result<()> {
     Ok(())
 }
 
-/// `emproc pipeline --out DIR [--scale F] [--workers N] [--seed N]`
+/// `emproc pipeline --out DIR [--dataset monday|aerodrome] [--scale F]
+/// [--workers N] [--seed N]`
 pub fn pipeline(a: &ArgParser) -> Result<()> {
     let out = PathBuf::from(a.required("out")?);
     let scale = a.get_num("scale", 1.0f64)?;
     let mut cfg = crate::workflow::PipelineConfig::small(out);
+    cfg.dataset = DatasetKind::parse(a.get_or("dataset", "monday"))?;
+    cfg.aircraft_skew = crate::workflow::ScenarioSpec::aircraft_skew(cfg.dataset);
     cfg.workers = a.get_num("workers", cfg.workers)?;
     cfg.seed = a.get_num("seed", cfg.seed)?;
+    cfg.process_order = TaskOrder::Random(cfg.seed);
     cfg.days = ((cfg.days as f64 * scale).ceil() as u32).max(1);
     cfg.max_file_bytes = (cfg.max_file_bytes as f64 * scale) as u64 + 1_000;
     let report = crate::workflow::Pipeline::new(cfg).generate_and_run()?;
     print!("{}", report.render());
     Ok(())
+}
+
+/// `emproc scenarios --out DIR [--workers N] [--scale F] [--seed N]
+/// [--datasets monday,aerodrome] [--strategies selfsched,block,cyclic]
+/// [--orders chrono,size,filename,random] [--json NAME]`
+///
+/// Runs the paper's strategy matrix — every (dataset × allocation ×
+/// order) cell — end-to-end on the real executor over shared miniature
+/// corpora, prints one line per scenario plus the §IV.B archiving
+/// comparison, and writes every stage's trace to `BENCH_<NAME>.json`
+/// (gate with `emproc bench-check`).
+pub fn scenarios(a: &ArgParser) -> Result<()> {
+    let out = PathBuf::from(a.required("out")?);
+    let workers = a.get_num("workers", 2usize)?;
+    let seed = a.get_num("seed", 42u64)?;
+    let scale = a.get_num("scale", 1.0f64)?;
+    let json_name = a.get_or("json", "scenarios");
+    // Defaults come from the scenario module so the CLI and the library
+    // describe the same matrix (flags narrow or reorder it).
+    let datasets = match a.get("datasets") {
+        None => vec![DatasetKind::Monday, DatasetKind::Aerodrome],
+        Some(csv) => parse_list(csv, DatasetKind::parse)?,
+    };
+    let strategies = match a.get("strategies") {
+        None => scenario::default_strategies(0.02),
+        Some(csv) => parse_list(csv, parse_alloc)?,
+    };
+    let orders = match a.get("orders") {
+        None => scenario::default_orders(seed),
+        Some(csv) => parse_list(csv, |s| parse_order(s, seed))?,
+    };
+    let days = ((2.0 * scale).ceil() as u32).max(1);
+    let max_file_bytes = (40_000.0 * scale) as u64 + 2_000;
+    let specs = scenario::matrix(
+        &datasets,
+        &strategies,
+        &orders,
+        workers,
+        days,
+        max_file_bytes,
+        seed,
+    );
+    println!(
+        "running {} scenarios ({} datasets x {} strategies x {} orders, {workers} workers) \
+         under {}",
+        specs.len(),
+        datasets.len(),
+        strategies.len(),
+        orders.len(),
+        out.display()
+    );
+    let reports = scenario::run_matrix(&specs, &out)?;
+    for r in &reports {
+        println!("{}", r.summary_line());
+    }
+    if let Some((block_s, cyclic_s)) = scenario::archiving_comparison(&reports) {
+        println!(
+            "§IV.B archiving (aerodrome, filename-sorted): block {block_s:.3}s vs cyclic \
+             {cyclic_s:.3}s ({})",
+            if cyclic_s <= block_s {
+                let gain = (1.0 - cyclic_s / block_s) * 100.0;
+                format!("cyclic {gain:.0}% faster — paper direction")
+            } else {
+                "direction NOT reproduced at this scale".to_string()
+            }
+        );
+    }
+    scenario::record_reports(&reports);
+    crate::bench_harness::json::write_file(json_name)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{order_tasks, Task};
+
+    #[test]
+    fn parse_order_threads_the_seed_through_random() {
+        // Regression: `--order random` used to pin seed 1, silently
+        // ignoring `--seed`. Two seeds must shuffle differently (and a
+        // seed must shuffle reproducibly).
+        assert_eq!(parse_order("random", 5).unwrap(), TaskOrder::Random(5));
+        let tasks: Vec<Task> = (0..200)
+            .map(|i| Task {
+                id: i,
+                bytes: 10,
+                obs: 1,
+                dem_cells: 0,
+                chrono_key: i as u64,
+                name: format!("f{i:03}").into(),
+            })
+            .collect();
+        let a = order_tasks(&tasks, parse_order("random", 5).unwrap());
+        let b = order_tasks(&tasks, parse_order("random", 6).unwrap());
+        let a2 = order_tasks(&tasks, parse_order("random", 5).unwrap());
+        assert_eq!(a, a2, "same seed must reproduce the same order");
+        assert_ne!(a, b, "different seeds must give different orders");
+    }
+
+    #[test]
+    fn parse_order_names_and_errors() {
+        assert_eq!(parse_order("chrono", 0).unwrap(), TaskOrder::Chronological);
+        assert_eq!(parse_order("size", 0).unwrap(), TaskOrder::LargestFirst);
+        assert_eq!(parse_order("filename", 0).unwrap(), TaskOrder::FilenameSorted);
+        assert!(parse_order("alphabetical", 0).is_err());
+    }
+
+    #[test]
+    fn parse_alloc_covers_all_modes() {
+        assert!(matches!(parse_alloc("selfsched").unwrap(), AllocMode::SelfSched(_)));
+        assert_eq!(
+            parse_alloc("block").unwrap(),
+            AllocMode::Batch(crate::dist::Distribution::Block)
+        );
+        assert_eq!(
+            parse_alloc("cyclic").unwrap(),
+            AllocMode::Batch(crate::dist::Distribution::Cyclic)
+        );
+        assert!(parse_alloc("static").is_err());
+    }
+
+    #[test]
+    fn parse_list_splits_and_trims() {
+        let kinds = parse_list("monday, aerodrome", DatasetKind::parse).unwrap();
+        assert_eq!(kinds, vec![DatasetKind::Monday, DatasetKind::Aerodrome]);
+        assert!(parse_list("monday,mars", DatasetKind::parse).is_err());
+    }
 }
 
 /// `emproc queries --out FILE [--aerodromes N] [--seed N]`

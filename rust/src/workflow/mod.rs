@@ -10,13 +10,17 @@
 //!
 //! Every stage runs under either executor: real threads
 //! ([`crate::exec`], self-scheduled or batch) on miniature corpora, or the
-//! calibrated simulator ([`crate::simcluster`]) at paper scale.
+//! calibrated simulator ([`crate::simcluster`]) at paper scale. The
+//! [`scenario`] layer drives the real executor across the paper's full
+//! strategy matrix (dataset × per-stage allocation × task order).
 
 pub mod benchcmd;
 pub mod commands;
 pub mod pipeline;
+pub mod scenario;
 pub mod stage1;
 pub mod stage2;
 pub mod stage3;
 
 pub use pipeline::{Pipeline, PipelineConfig, PipelineReport};
+pub use scenario::{ScenarioReport, ScenarioSpec};

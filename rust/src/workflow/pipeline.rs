@@ -1,8 +1,14 @@
 //! End-to-end pipeline driver: generate → organize → archive → process.
+//!
+//! Nothing here is hardcoded to one scenario any more: the dataset kind,
+//! each stage's allocation mode, and each stage's task order are all
+//! [`PipelineConfig`] knobs, so the same driver runs every cell of the
+//! paper's strategy matrix (see [`crate::workflow::scenario`]).
 
-use crate::dist::TaskOrder;
+use crate::datasets::DatasetKind;
+use crate::dist::{Distribution, TaskOrder};
 use crate::registry::Registry;
-use crate::selfsched::SelfSchedConfig;
+use crate::selfsched::{AllocMode, SelfSchedConfig};
 use crate::tracks::SegmentConfig;
 use crate::util::Rng;
 use anyhow::Result;
@@ -13,38 +19,69 @@ use std::path::PathBuf;
 pub struct PipelineConfig {
     /// Working directory (raw/, organized/, archived/, processed/).
     pub work_dir: PathBuf,
+    /// Raw-corpus override: read (and generate) the corpus here instead of
+    /// `work_dir/raw`, so many scenario runs can share one corpus.
+    pub raw_dir: Option<PathBuf>,
     /// Artifact directory for the AOT model.
     pub artifact_dir: PathBuf,
+    /// Which miniature corpus to generate (Monday or aerodrome).
+    pub dataset: DatasetKind,
     /// Worker threads.
     pub workers: usize,
     /// RNG seed for the synthetic corpus.
     pub seed: u64,
-    /// Mondays of data to generate.
+    /// Days of data to generate.
     pub days: u32,
     /// Largest raw file size, bytes.
     pub max_file_bytes: u64,
     /// Registry size (aircraft).
     pub registry_size: usize,
+    /// Per-aircraft traffic skew for the generated corpus
+    /// (see [`crate::datasets::write_real_corpus_skewed`]).
+    pub aircraft_skew: f64,
+    /// Per-stage allocation mode: `[organize, archive, process]`.
+    pub alloc: [AllocMode; 3],
     /// Stage-1 task order.
     pub order: TaskOrder,
-    /// Self-scheduling parameters.
-    pub ss: SelfSchedConfig,
+    /// Stage-2 task order (the paper's LLMapReduce default is
+    /// filename-sorted — the §IV.B mechanism).
+    pub archive_order: TaskOrder,
+    /// Stage-3 task order.
+    pub process_order: TaskOrder,
 }
 
 impl PipelineConfig {
-    /// Quick laptop-scale defaults.
+    /// Quick laptop-scale defaults: the original hardcoded scenario
+    /// (Monday corpus, self-scheduled organize/process, cyclic archive).
     pub fn small(work_dir: PathBuf) -> Self {
+        let ss = SelfSchedConfig { poll_s: 0.02, ..Default::default() };
         PipelineConfig {
             work_dir,
+            raw_dir: None,
             artifact_dir: crate::runtime::TrackModel::default_dir(),
+            dataset: DatasetKind::Monday,
             workers: 4,
             seed: 42,
             days: 2,
             max_file_bytes: 60_000,
             registry_size: 60,
+            aircraft_skew: 0.0,
+            alloc: [
+                AllocMode::SelfSched(ss),
+                AllocMode::Batch(Distribution::Cyclic),
+                AllocMode::SelfSched(ss),
+            ],
             order: TaskOrder::LargestFirst,
-            ss: SelfSchedConfig { poll_s: 0.02, ..Default::default() },
+            archive_order: TaskOrder::FilenameSorted,
+            process_order: TaskOrder::Random(42),
         }
+    }
+
+    /// The effective raw-corpus directory.
+    pub fn raw_path(&self) -> PathBuf {
+        self.raw_dir
+            .clone()
+            .unwrap_or_else(|| self.work_dir.join("raw"))
     }
 }
 
@@ -94,15 +131,21 @@ impl Pipeline {
         Pipeline { cfg }
     }
 
-    /// Generate the synthetic corpus + registry into `work_dir/raw`.
+    /// Generate the synthetic corpus + registry into [`PipelineConfig::raw_path`].
     pub fn generate(&self) -> Result<(Registry, usize)> {
         let mut rng = Rng::new(self.cfg.seed);
         let entries = crate::registry::generate(&mut rng, self.cfg.registry_size);
         let manifest =
-            crate::datasets::monday::mini_manifest(&mut rng, self.cfg.days, self.cfg.max_file_bytes);
-        let raw_dir = self.cfg.work_dir.join("raw");
-        let paths =
-            crate::datasets::write_real_corpus(&manifest, &entries, &raw_dir, 1.0, &mut rng)?;
+            self.cfg.dataset.mini_manifest(&mut rng, self.cfg.days, self.cfg.max_file_bytes)?;
+        let raw_dir = self.cfg.raw_path();
+        let paths = crate::datasets::write_real_corpus_skewed(
+            &manifest,
+            &entries,
+            &raw_dir,
+            1.0,
+            self.cfg.aircraft_skew,
+            &mut rng,
+        )?;
         std::fs::write(
             raw_dir.join("registry.csv"),
             crate::registry::write_registry(&entries),
@@ -117,21 +160,23 @@ impl Pipeline {
         let w = &self.cfg.work_dir;
         let organize = crate::workflow::stage1::run(
             &crate::workflow::stage1::OrganizeJob {
-                data_dir: w.join("raw"),
+                data_dir: self.cfg.raw_path(),
                 out_dir: w.join("organized"),
                 year: 2019,
             },
             registry,
             self.cfg.workers,
             self.cfg.order,
-            self.cfg.ss,
+            self.cfg.alloc[0],
         )?;
-        let archive = crate::workflow::stage2::run_cyclic(
+        let archive = crate::workflow::stage2::run(
             &crate::workflow::stage2::ArchiveJob {
                 organized_dir: w.join("organized"),
                 archive_dir: w.join("archived"),
             },
             self.cfg.workers,
+            self.cfg.alloc[1],
+            self.cfg.archive_order,
         )?;
         let process = crate::workflow::stage3::run(
             &crate::workflow::stage3::ProcessJob {
@@ -141,8 +186,8 @@ impl Pipeline {
                 segment: SegmentConfig::default(),
             },
             self.cfg.workers,
-            TaskOrder::Random(self.cfg.seed),
-            self.cfg.ss,
+            self.cfg.process_order,
+            self.cfg.alloc[2],
         )?;
         Ok(PipelineReport { raw_files, organize, archive, process })
     }
@@ -174,5 +219,53 @@ mod tests {
         let rendered = report.render();
         assert!(rendered.contains("stage 3"));
         let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn full_pipeline_aerodrome_batch_modes() {
+        // The aerodrome corpus as a first-class real-executor workload,
+        // with every stage pre-distributed (no self-scheduling involved).
+        let tmp = std::env::temp_dir().join(format!("emproc_pipe_aero_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&tmp);
+        let mut cfg = PipelineConfig::small(tmp.clone());
+        cfg.dataset = DatasetKind::Aerodrome;
+        cfg.days = 1;
+        cfg.max_file_bytes = 15_000;
+        cfg.workers = 2;
+        cfg.aircraft_skew = 2.0;
+        cfg.alloc = [
+            AllocMode::Batch(Distribution::Block),
+            AllocMode::Batch(Distribution::Block),
+            AllocMode::Batch(Distribution::Cyclic),
+        ];
+        cfg.order = TaskOrder::FilenameSorted;
+        let report = Pipeline::new(cfg).generate_and_run().unwrap();
+        assert!(report.raw_files > 0);
+        assert!(report.organize.files_written > 0);
+        assert!(report.archive.archives > 0);
+        assert!(report.process.segments > 0);
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn shared_raw_dir_is_honored() {
+        // Two pipelines over one generated corpus (the scenario-matrix
+        // sharing mode): the second run must not need its own raw/ tree.
+        let base = std::env::temp_dir().join(format!("emproc_pipe_shared_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let mut gen_cfg = PipelineConfig::small(base.join("corpus"));
+        gen_cfg.days = 1;
+        gen_cfg.max_file_bytes = 15_000;
+        let gen_pipe = Pipeline::new(gen_cfg.clone());
+        let (registry, raw_files) = gen_pipe.generate().unwrap();
+
+        let mut run_cfg = gen_cfg.clone();
+        run_cfg.work_dir = base.join("run_a");
+        run_cfg.raw_dir = Some(gen_cfg.raw_path());
+        run_cfg.workers = 2;
+        let report = Pipeline::new(run_cfg).run(&registry, raw_files).unwrap();
+        assert!(report.organize.files_written > 0);
+        assert!(!base.join("run_a/raw").exists(), "run dir must not grow a raw/ tree");
+        let _ = std::fs::remove_dir_all(&base);
     }
 }

@@ -1,0 +1,459 @@
+//! The scenario layer: the paper's strategy matrix over the *real*
+//! executor.
+//!
+//! The paper's headline result is a comparison — self-scheduling vs
+//! block/cyclic batch distribution, across task organizations, on both
+//! datasets. A [`ScenarioSpec`] names one cell of that matrix (dataset ×
+//! per-stage [`AllocMode`] × [`TaskOrder`] × workers × scale × seed);
+//! [`run_scenario`] drives the full generate → organize → archive →
+//! process pipeline for it; [`run_matrix`] sweeps a whole matrix in
+//! parallel (via [`crate::bench_harness::sweep`]) over shared per-dataset
+//! corpora, and [`record_reports`] emits every stage's [`SchedTrace`]
+//! timings as `BENCH_*.json` scenarios for the `emproc bench-check` gate.
+//!
+//! The aerodrome corpus is generated with a positive aircraft skew
+//! (many small files, cost correlated with the filename-sorted archive
+//! order), so the matrix reproduces the §IV.B direction — cyclic archive
+//! wall-clock ≤ block — on a laptop-scale corpus; see
+//! [`archiving_comparison`].
+
+use crate::bench_harness::{json, sweep};
+use crate::datasets::DatasetKind;
+use crate::dist::{Distribution, TaskOrder};
+use crate::registry::Registry;
+use crate::selfsched::{AllocMode, SelfSchedConfig};
+use crate::workflow::{Pipeline, PipelineConfig, PipelineReport};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// One cell of the strategy matrix.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    /// Which miniature corpus the cell runs on.
+    pub dataset: DatasetKind,
+    /// Per-stage allocation mode: `[organize, archive, process]`.
+    pub alloc: [AllocMode; 3],
+    /// Task organization for stages 1 and 3. Stage 2 always visits its
+    /// tasks filename-sorted (the LLMapReduce listing order whose
+    /// interaction with block distribution is the §IV.B result).
+    pub order: TaskOrder,
+    /// Worker threads.
+    pub workers: usize,
+    /// Days of data in the generated corpus.
+    pub days: u32,
+    /// Largest raw file size, bytes.
+    pub max_file_bytes: u64,
+    /// Registry size (aircraft).
+    pub registry_size: usize,
+    /// RNG seed for corpus generation (shared per dataset).
+    pub seed: u64,
+}
+
+/// Short name for an allocation mode (scenario labels, CLI).
+pub fn alloc_label(alloc: AllocMode) -> &'static str {
+    match alloc {
+        AllocMode::SelfSched(_) => "selfsched",
+        AllocMode::Batch(Distribution::Block) => "block",
+        AllocMode::Batch(Distribution::Cyclic) => "cyclic",
+    }
+}
+
+/// Short name for a task order (scenario labels, CLI).
+pub fn order_label(order: TaskOrder) -> String {
+    match order {
+        TaskOrder::Chronological => "chrono".into(),
+        TaskOrder::LargestFirst => "size".into(),
+        TaskOrder::FilenameSorted => "filename".into(),
+        TaskOrder::Random(seed) => format!("random{seed}"),
+    }
+}
+
+impl ScenarioSpec {
+    /// The corpus skew for a dataset: aerodrome traffic is heavy-tailed
+    /// across aircraft (its Fig-3 histogram slopes), Monday traffic is not.
+    pub fn aircraft_skew(dataset: DatasetKind) -> f64 {
+        match dataset {
+            DatasetKind::Aerodrome => 2.5,
+            _ => 0.0,
+        }
+    }
+
+    /// Stable label, e.g. `aerodrome/cyclic/filename/w2`. The allocation
+    /// component is stage agnostic when all stages share a mode, else
+    /// `s1+s2+s3` labels are joined.
+    pub fn label(&self) -> String {
+        let a = if alloc_label(self.alloc[0]) == alloc_label(self.alloc[1])
+            && alloc_label(self.alloc[1]) == alloc_label(self.alloc[2])
+        {
+            alloc_label(self.alloc[0]).to_string()
+        } else {
+            format!(
+                "{}+{}+{}",
+                alloc_label(self.alloc[0]),
+                alloc_label(self.alloc[1]),
+                alloc_label(self.alloc[2])
+            )
+        };
+        format!(
+            "{}/{}/{}/w{}",
+            self.dataset.label(),
+            a,
+            order_label(self.order),
+            self.workers
+        )
+    }
+
+    /// Filesystem-safe form of [`ScenarioSpec::label`].
+    pub fn dir_name(&self) -> String {
+        self.label().replace('/', "-")
+    }
+
+    /// The pipeline configuration realizing this cell.
+    pub fn pipeline_config(&self, work_dir: PathBuf, raw_dir: Option<PathBuf>) -> PipelineConfig {
+        let mut cfg = PipelineConfig::small(work_dir);
+        cfg.raw_dir = raw_dir;
+        cfg.dataset = self.dataset;
+        cfg.workers = self.workers;
+        cfg.seed = self.seed;
+        cfg.days = self.days;
+        cfg.max_file_bytes = self.max_file_bytes;
+        cfg.registry_size = self.registry_size;
+        cfg.aircraft_skew = Self::aircraft_skew(self.dataset);
+        cfg.alloc = self.alloc;
+        cfg.order = self.order;
+        cfg.archive_order = TaskOrder::FilenameSorted;
+        cfg.process_order = self.order;
+        cfg
+    }
+}
+
+/// Report of one completed scenario.
+#[derive(Debug)]
+pub struct ScenarioReport {
+    /// The spec that produced it.
+    pub spec: ScenarioSpec,
+    /// [`ScenarioSpec::label`], precomputed.
+    pub label: String,
+    /// The pipeline's per-stage outcomes (each carries its `SchedTrace`).
+    pub report: PipelineReport,
+    /// Wall-clock seconds for the three stages (excludes corpus
+    /// generation, which is shared across the matrix).
+    pub wall_s: f64,
+}
+
+impl ScenarioReport {
+    /// One summary line: label + per-stage job times.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "{:<40} organize {:>8.3}s  archive {:>8.3}s  process {:>8.3}s  (wall {:.3}s)",
+            self.label,
+            self.report.organize.trace.job_time,
+            self.report.archive.trace.job_time,
+            self.report.process.trace.job_time,
+            self.wall_s
+        )
+    }
+}
+
+/// The default strategy matrix: every (dataset × allocation strategy ×
+/// order) cell, with one allocation mode shared by all three stages.
+/// `{self-sched, block, cyclic} × {chrono, size, filename, random}` over
+/// both miniature corpora is the paper's §IV comparison space.
+pub fn matrix(
+    datasets: &[DatasetKind],
+    strategies: &[AllocMode],
+    orders: &[TaskOrder],
+    workers: usize,
+    days: u32,
+    max_file_bytes: u64,
+    seed: u64,
+) -> Vec<ScenarioSpec> {
+    let mut specs = Vec::with_capacity(datasets.len() * strategies.len() * orders.len());
+    for &dataset in datasets {
+        for &alloc in strategies {
+            for &order in orders {
+                specs.push(ScenarioSpec {
+                    dataset,
+                    alloc: [alloc; 3],
+                    order,
+                    workers,
+                    days,
+                    max_file_bytes,
+                    registry_size: 60,
+                    seed,
+                });
+            }
+        }
+    }
+    specs
+}
+
+/// The three allocation strategies of the paper's comparison.
+pub fn default_strategies(poll_s: f64) -> Vec<AllocMode> {
+    vec![
+        AllocMode::SelfSched(SelfSchedConfig { poll_s, ..Default::default() }),
+        AllocMode::Batch(Distribution::Block),
+        AllocMode::Batch(Distribution::Cyclic),
+    ]
+}
+
+/// The four task organizations of §II.B.
+pub fn default_orders(seed: u64) -> Vec<TaskOrder> {
+    vec![
+        TaskOrder::Chronological,
+        TaskOrder::LargestFirst,
+        TaskOrder::FilenameSorted,
+        TaskOrder::Random(seed),
+    ]
+}
+
+/// Run one scenario standalone: generate its corpus under `work_dir` and
+/// run the three stages.
+pub fn run_scenario(spec: &ScenarioSpec, work_dir: &Path) -> Result<ScenarioReport> {
+    let cfg = spec.pipeline_config(work_dir.to_path_buf(), None);
+    let pipeline = Pipeline::new(cfg);
+    let (registry, raw_files) = pipeline.generate()?;
+    run_prepared(spec, &pipeline, &registry, raw_files)
+}
+
+/// Run an already-prepared scenario (corpus on disk, registry in memory).
+fn run_prepared(
+    spec: &ScenarioSpec,
+    pipeline: &Pipeline,
+    registry: &Registry,
+    raw_files: usize,
+) -> Result<ScenarioReport> {
+    let t0 = Instant::now();
+    let report = pipeline
+        .run(registry, raw_files)
+        .with_context(|| format!("scenario {}", spec.label()))?;
+    Ok(ScenarioReport {
+        spec: spec.clone(),
+        label: spec.label(),
+        report,
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// One generated corpus, shared by every scenario on its dataset.
+struct Corpus {
+    dataset: DatasetKind,
+    raw_dir: PathBuf,
+    registry: Registry,
+    raw_files: usize,
+}
+
+/// Run a scenario matrix under `base_dir`: one shared corpus per dataset
+/// (`base_dir/corpus_<dataset>/raw`), then every scenario in parallel on
+/// the sweep pool (each scenario's own worker threads do the stage work,
+/// so the matrix uses the host fully even when single scenarios cannot).
+/// Results come back in `specs` order.
+pub fn run_matrix(specs: &[ScenarioSpec], base_dir: &Path) -> Result<Vec<ScenarioReport>> {
+    // Specs sharing a dataset share its generated corpus, so they must
+    // agree on every corpus-shaping knob — a mismatch would silently run
+    // a cell against data its spec does not describe.
+    for spec in specs {
+        let first = specs
+            .iter()
+            .find(|s| s.dataset == spec.dataset)
+            .expect("spec's own dataset is present");
+        let shape = |s: &ScenarioSpec| (s.days, s.max_file_bytes, s.registry_size, s.seed);
+        if shape(first) != shape(spec) {
+            anyhow::bail!(
+                "scenario {} disagrees with {} on the shared {} corpus \
+                 (days/max_file_bytes/registry_size/seed must match per dataset)",
+                spec.label(),
+                first.label(),
+                spec.dataset.label()
+            );
+        }
+    }
+    let mut corpora: Vec<Corpus> = Vec::new();
+    for spec in specs {
+        if corpora.iter().any(|c| c.dataset == spec.dataset) {
+            continue;
+        }
+        let corpus_dir = base_dir.join(format!("corpus_{}", spec.dataset.label()));
+        let cfg = spec.pipeline_config(corpus_dir, None);
+        let raw_dir = cfg.raw_path();
+        let (registry, raw_files) = Pipeline::new(cfg)
+            .generate()
+            .with_context(|| format!("generating {} corpus", spec.dataset.label()))?;
+        corpora.push(Corpus { dataset: spec.dataset, raw_dir, registry, raw_files });
+    }
+
+    let items: Vec<(&ScenarioSpec, &Corpus)> = specs
+        .iter()
+        .map(|spec| {
+            let corpus = corpora
+                .iter()
+                .find(|c| c.dataset == spec.dataset)
+                .expect("corpus generated above");
+            (spec, corpus)
+        })
+        .collect();
+    let results: Vec<Result<ScenarioReport>> = sweep::run(&items, |(spec, corpus)| {
+        let cfg = spec
+            .pipeline_config(base_dir.join(spec.dir_name()), Some(corpus.raw_dir.clone()));
+        run_prepared(spec, &Pipeline::new(cfg), &corpus.registry, corpus.raw_files)
+    });
+    results.into_iter().collect()
+}
+
+/// Record every stage of every report as a timed `BENCH_*.json` scenario
+/// (in report order — the JSON layout stays deterministic even though the
+/// matrix ran in parallel). Real-executor traces use the stage's own
+/// wall-clock job time, so `tasks_per_sec` is real throughput — but when
+/// cells ran concurrently on the sweep pool it includes cross-cell
+/// contention, so treat per-cell figures as indicative and gate only on
+/// deliberately conservative floors (set `EMPROC_SWEEP_THREADS=1` for
+/// contention-free numbers).
+pub fn record_reports(reports: &[ScenarioReport]) {
+    for r in reports {
+        json::record_timed(
+            &format!("{} stage1 organize", r.label),
+            &r.report.organize.trace,
+            r.report.raw_files,
+            r.report.organize.trace.job_time,
+        );
+        json::record_timed(
+            &format!("{} stage2 archive", r.label),
+            &r.report.archive.trace,
+            r.report.archive.archives,
+            r.report.archive.trace.job_time,
+        );
+        json::record_timed(
+            &format!("{} stage3 process", r.label),
+            &r.report.process.trace,
+            r.report.process.archives,
+            r.report.process.trace.job_time,
+        );
+    }
+}
+
+/// The §IV.B archiving comparison: mean filename-sorted archive-stage
+/// job time under block vs cyclic distribution on the aerodrome corpus
+/// (the skewed many-small-files workload). `None` until the matrix
+/// contains at least one of each.
+pub fn archiving_comparison(reports: &[ScenarioReport]) -> Option<(f64, f64)> {
+    let mean_for = |want: Distribution| -> Option<f64> {
+        let times: Vec<f64> = reports
+            .iter()
+            .filter(|r| {
+                r.spec.dataset == DatasetKind::Aerodrome
+                    && r.spec.alloc[1] == AllocMode::Batch(want)
+            })
+            .map(|r| r.report.archive.trace.job_time)
+            .collect();
+        (!times.is_empty()).then(|| times.iter().sum::<f64>() / times.len() as f64)
+    };
+    Some((mean_for(Distribution::Block)?, mean_for(Distribution::Cyclic)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec(dataset: DatasetKind, alloc: AllocMode, order: TaskOrder) -> ScenarioSpec {
+        ScenarioSpec {
+            dataset,
+            alloc: [alloc; 3],
+            order,
+            workers: 2,
+            days: 1,
+            max_file_bytes: 12_000,
+            registry_size: 40,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn matrix_builder_covers_the_full_cross_product() {
+        let datasets = [DatasetKind::Monday, DatasetKind::Aerodrome];
+        let strategies = default_strategies(0.02);
+        let orders = default_orders(9);
+        let specs = matrix(&datasets, &strategies, &orders, 2, 2, 30_000, 9);
+        assert_eq!(specs.len(), 2 * 3 * 4);
+        let labels: std::collections::BTreeSet<String> =
+            specs.iter().map(|s| s.label()).collect();
+        assert_eq!(labels.len(), specs.len(), "labels must be unique");
+        assert!(labels.contains("monday/selfsched/chrono/w2"));
+        assert!(labels.contains("aerodrome/cyclic/filename/w2"));
+        assert!(labels.contains("aerodrome/block/random9/w2"));
+    }
+
+    #[test]
+    fn labels_mark_mixed_per_stage_allocations() {
+        let mut spec = tiny_spec(
+            DatasetKind::Monday,
+            AllocMode::Batch(Distribution::Cyclic),
+            TaskOrder::LargestFirst,
+        );
+        spec.alloc[0] = AllocMode::SelfSched(SelfSchedConfig::default());
+        assert_eq!(spec.label(), "monday/selfsched+cyclic+cyclic/size/w2");
+        assert_eq!(spec.dir_name(), "monday-selfsched+cyclic+cyclic-size-w2");
+    }
+
+    #[test]
+    fn single_scenario_runs_end_to_end_on_each_dataset() {
+        for (tag, spec) in [
+            (
+                "mon",
+                tiny_spec(
+                    DatasetKind::Monday,
+                    AllocMode::SelfSched(SelfSchedConfig { poll_s: 0.01, ..Default::default() }),
+                    TaskOrder::LargestFirst,
+                ),
+            ),
+            (
+                "aero",
+                tiny_spec(
+                    DatasetKind::Aerodrome,
+                    AllocMode::Batch(Distribution::Block),
+                    TaskOrder::FilenameSorted,
+                ),
+            ),
+        ] {
+            let tmp = std::env::temp_dir()
+                .join(format!("emproc_scen_{tag}_{}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&tmp);
+            let report = run_scenario(&spec, &tmp).unwrap();
+            assert!(report.report.raw_files > 0, "{tag}");
+            assert!(report.report.organize.files_written > 0, "{tag}");
+            assert!(report.report.archive.archives > 0, "{tag}");
+            assert!(report.report.process.segments > 0, "{tag}");
+            report
+                .report
+                .organize
+                .trace
+                .check_invariants(report.report.raw_files)
+                .unwrap();
+            let _ = std::fs::remove_dir_all(&tmp);
+        }
+    }
+
+    #[test]
+    fn archiving_comparison_needs_both_distributions() {
+        assert!(archiving_comparison(&[]).is_none());
+    }
+
+    #[test]
+    fn run_matrix_rejects_mismatched_corpus_knobs() {
+        // Two specs sharing a dataset but shaping its corpus differently
+        // must be rejected up front, not silently run on the first
+        // spec's corpus. (The check fires before any generation, so no
+        // work dir is ever created.)
+        let a = tiny_spec(
+            DatasetKind::Monday,
+            AllocMode::Batch(Distribution::Cyclic),
+            TaskOrder::LargestFirst,
+        );
+        let mut b = a.clone();
+        b.seed = 99;
+        let never = std::env::temp_dir().join("emproc_scen_mismatch_never_created");
+        let err = run_matrix(&[a, b], &never);
+        assert!(err.is_err(), "mismatched corpus knobs must be rejected");
+        assert!(!never.exists(), "no corpus may be generated on rejection");
+    }
+}

@@ -9,7 +9,7 @@
 
 use crate::dist::TaskOrder;
 use crate::registry::Registry;
-use crate::selfsched::{SchedTrace, SelfSchedConfig};
+use crate::selfsched::{AllocMode, SchedTrace};
 use crate::tracks;
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
@@ -94,13 +94,14 @@ pub fn organize_file(
     Ok((files, obs))
 }
 
-/// Run stage 1 with the real self-scheduled executor.
+/// Run stage 1 on the real executor under the requested allocation mode
+/// (self-scheduled or pre-distributed block/cyclic batch).
 pub fn run(
     job: &OrganizeJob,
     registry: &Registry,
     workers: usize,
     order: TaskOrder,
-    ss: SelfSchedConfig,
+    alloc: AllocMode,
 ) -> Result<OrganizeOutcome> {
     let raw = list_raw_files(&job.data_dir)?;
     let tasks: Vec<crate::dist::Task> = raw
@@ -118,18 +119,20 @@ pub fn run(
     let ordered = crate::dist::order_tasks(&tasks, order);
     let written = std::sync::atomic::AtomicUsize::new(0);
     let observations = std::sync::atomic::AtomicU64::new(0);
-    let trace = crate::exec::run_self_scheduled(
-        tasks.len(),
-        &ordered,
-        workers,
-        ss,
-        |_w, ti| {
-            let (f, o) = organize_file(&raw[ti].0, registry, &job.out_dir, job.year)?;
-            written.fetch_add(f, std::sync::atomic::Ordering::Relaxed);
-            observations.fetch_add(o, std::sync::atomic::Ordering::Relaxed);
-            Ok(())
-        },
-    )?;
+    let work = |_w: usize, ti: usize| -> Result<()> {
+        let (f, o) = organize_file(&raw[ti].0, registry, &job.out_dir, job.year)?;
+        written.fetch_add(f, std::sync::atomic::Ordering::Relaxed);
+        observations.fetch_add(o, std::sync::atomic::Ordering::Relaxed);
+        Ok(())
+    };
+    let trace = match alloc {
+        AllocMode::Batch(dist) => {
+            crate::exec::run_batch(tasks.len(), &ordered, workers, dist, work)?
+        }
+        AllocMode::SelfSched(ss) => {
+            crate::exec::run_self_scheduled(tasks.len(), &ordered, workers, ss, work)?
+        }
+    };
     Ok(OrganizeOutcome {
         trace,
         files_written: written.into_inner(),
@@ -140,6 +143,7 @@ pub fn run(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::selfsched::SelfSchedConfig;
     use crate::util::Rng;
 
     fn setup(tag: &str) -> (PathBuf, Registry, Vec<crate::registry::RegistryEntry>) {
@@ -213,7 +217,7 @@ mod tests {
             &reg,
             4,
             TaskOrder::LargestFirst,
-            SelfSchedConfig { poll_s: 0.01, ..Default::default() },
+            AllocMode::SelfSched(SelfSchedConfig { poll_s: 0.01, ..Default::default() }),
         )
         .unwrap();
         assert!(outcome.files_written > 0);
@@ -234,6 +238,39 @@ mod tests {
             }
         }
         assert_eq!(found, outcome.files_written);
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn batch_modes_organize_the_same_corpus() {
+        // Block and cyclic pre-distribution must organize exactly what
+        // self-scheduling does (same files, same observation count).
+        let (tmp, reg, entries) = setup("batch");
+        let mut rng = Rng::new(12);
+        let manifest = crate::datasets::monday::mini_manifest(&mut rng, 1, 15_000);
+        let raw_dir = tmp.join("raw");
+        crate::datasets::write_real_corpus(&manifest, &entries, &raw_dir, 1.0, &mut rng)
+            .unwrap();
+        let mut seen = Vec::new();
+        for (i, alloc) in [
+            AllocMode::Batch(crate::dist::Distribution::Block),
+            AllocMode::Batch(crate::dist::Distribution::Cyclic),
+            AllocMode::SelfSched(SelfSchedConfig { poll_s: 0.01, ..Default::default() }),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let job = OrganizeJob {
+                data_dir: raw_dir.clone(),
+                out_dir: tmp.join(format!("organized_{i}")),
+                year: 2019,
+            };
+            let outcome = run(&job, &reg, 3, TaskOrder::Chronological, alloc).unwrap();
+            outcome.trace.check_invariants(manifest.len()).unwrap();
+            seen.push((outcome.files_written, outcome.observations));
+        }
+        assert_eq!(seen[0], seen[1]);
+        assert_eq!(seen[1], seen[2]);
         let _ = std::fs::remove_dir_all(&tmp);
     }
 }

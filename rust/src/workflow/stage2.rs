@@ -6,7 +6,7 @@
 //! pathological and cyclic >90% faster.
 
 use crate::archive::zipdir::{archive_dir, ArchivePlan};
-use crate::dist::Distribution;
+use crate::dist::{Distribution, TaskOrder};
 use crate::selfsched::{AllocMode, SchedTrace};
 use anyhow::Result;
 use std::path::PathBuf;
@@ -32,11 +32,35 @@ pub struct ArchiveOutcome {
     pub lustre_blocks_saved: u64,
 }
 
-/// Run stage 2 with real threads under the requested allocation mode.
-pub fn run(job: &ArchiveJob, workers: usize, alloc: AllocMode) -> Result<ArchiveOutcome> {
+/// Run stage 2 with real threads under the requested allocation mode and
+/// task organization. [`TaskOrder::FilenameSorted`] reproduces the paper's
+/// LLMapReduce listing order (the plan is already destination-sorted, so
+/// it is the identity); the other orders let the scenario matrix probe how
+/// much of the §IV.B pathology is the order and how much the distribution.
+pub fn run(
+    job: &ArchiveJob,
+    workers: usize,
+    alloc: AllocMode,
+    order: TaskOrder,
+) -> Result<ArchiveOutcome> {
     let plan = ArchivePlan::plan(&job.organized_dir, &job.archive_dir)?;
     let n = plan.tasks.len();
-    let ordered: Vec<usize> = (0..n).collect(); // already filename-sorted
+    let tasks: Vec<crate::dist::Task> = plan
+        .tasks
+        .iter()
+        .enumerate()
+        .map(|(i, t)| crate::dist::Task {
+            id: i,
+            bytes: t.bytes,
+            obs: 0,
+            dem_cells: 0,
+            // The plan's destination sort is the stage's native order, so
+            // it doubles as the chronological key.
+            chrono_key: i as u64,
+            name: t.dst_zip.display().to_string().into(),
+        })
+        .collect();
+    let ordered = crate::dist::order_tasks(&tasks, order);
     let work = |_w: usize, ti: usize| -> Result<()> {
         archive_dir(&plan.tasks[ti])?;
         Ok(())
@@ -72,9 +96,15 @@ pub fn run(job: &ArchiveJob, workers: usize, alloc: AllocMode) -> Result<Archive
     })
 }
 
-/// Convenience: default cyclic-batch stage-2 run (the paper's fix).
+/// Convenience: default cyclic-batch stage-2 run over the filename-sorted
+/// task list (the paper's fix).
 pub fn run_cyclic(job: &ArchiveJob, workers: usize) -> Result<ArchiveOutcome> {
-    run(job, workers, AllocMode::Batch(Distribution::Cyclic))
+    run(
+        job,
+        workers,
+        AllocMode::Batch(Distribution::Cyclic),
+        TaskOrder::FilenameSorted,
+    )
 }
 
 #[cfg(test)]
@@ -128,8 +158,25 @@ mod tests {
             archive_dir: tmp.join("archived"),
         };
         let ss = SelfSchedConfig { poll_s: 0.01, ..Default::default() };
-        let out = run(&job, 2, AllocMode::SelfSched(ss)).unwrap();
+        let out = run(&job, 2, AllocMode::SelfSched(ss), TaskOrder::FilenameSorted).unwrap();
         assert_eq!(out.archives, 6);
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn alternate_orders_archive_everything_too() {
+        // The §IV.B knob: same plan, different visit orders — every order
+        // must still produce exactly one zip per bottom dir.
+        let tmp = organized_tree("ord");
+        let job = ArchiveJob {
+            organized_dir: tmp.join("organized"),
+            archive_dir: tmp.join("archived"),
+        };
+        for order in [TaskOrder::LargestFirst, TaskOrder::Random(5), TaskOrder::Chronological] {
+            let out = run(&job, 2, AllocMode::Batch(Distribution::Block), order).unwrap();
+            assert_eq!(out.archives, 6, "{order:?}");
+            out.trace.check_invariants(6).unwrap();
+        }
         let _ = std::fs::remove_dir_all(&tmp);
     }
 

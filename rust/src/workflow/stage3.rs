@@ -15,8 +15,7 @@
 use crate::dem::Dem;
 use crate::geometry::Rect;
 use crate::runtime::{TrackBatch, TrackModel};
-use crate::selfsched::SchedTrace;
-use crate::selfsched::SelfSchedConfig;
+use crate::selfsched::{AllocMode, SchedTrace};
 use crate::tracks::{segment_track, SegmentConfig, TrackSegment};
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
@@ -106,6 +105,44 @@ pub fn segments_bbox(segments: &[TrackSegment]) -> Rect {
     }
 }
 
+/// Pack `segments` into `batch` rows, calling `flush(pending, batch)`
+/// whenever the batch fills and once more at the end. The invariant this
+/// function owns: **at every `flush` call, `pending` holds exactly the
+/// segments occupying `batch`'s used rows, in row order** — i.e.
+/// `pending.len() == batch.used_rows`. `flush` must consume both (clear
+/// `pending`, [`TrackBatch::clear_rows`]); a flush that leaves residue, or
+/// a segment the batch rejects even when empty, is an error rather than a
+/// silent row/segment misalignment.
+pub fn pack_segments<'a>(
+    segments: &'a [TrackSegment],
+    batch: &mut TrackBatch,
+    mut flush: impl FnMut(&mut Vec<&'a TrackSegment>, &mut TrackBatch) -> Result<()>,
+) -> Result<()> {
+    let mut pending: Vec<&TrackSegment> = Vec::with_capacity(batch.b);
+    for seg in segments {
+        let packed = seg.to_segment_obs();
+        if batch.push_segment(&packed).is_none() {
+            flush(&mut pending, batch)?;
+            if !pending.is_empty() || batch.used_rows != 0 {
+                anyhow::bail!(
+                    "flush left {} pending segment(s) and {} used row(s)",
+                    pending.len(),
+                    batch.used_rows
+                );
+            }
+            // Regression guard (the old code ignored this result): a
+            // rejected re-push would desynchronize rows from `pending` and
+            // misattribute every later output row to the wrong segment.
+            if batch.push_segment(&packed).is_none() {
+                anyhow::bail!("segment rejected by an empty batch (capacity {})", batch.b);
+            }
+        }
+        pending.push(seg);
+        debug_assert_eq!(pending.len(), batch.used_rows);
+    }
+    flush(&mut pending, batch)
+}
+
 /// Process one archive with the worker's model. Returns
 /// `(segments, observations, batches)` and writes the output CSV.
 pub fn process_archive(
@@ -135,21 +172,16 @@ pub fn process_archive(
     }
     let mut out = String::from("segment,icao24,t,lat,lon,alt_ft,vrate_fpm,gspeed_kt,agl_ft\n");
 
-    let mut obs_count = 0u64;
+    let obs_count: u64 = segments.iter().map(|s| s.obs.len() as u64).sum();
     let mut batches = 0u64;
-    let mut pending: Vec<&TrackSegment> = Vec::with_capacity(man.b);
     let mut seg_serial = 0u64;
 
-    let mut flush = |pending: &mut Vec<&TrackSegment>,
-                     batch: &mut TrackBatch,
-                     out: &mut String,
-                     batches: &mut u64|
-     -> Result<()> {
+    pack_segments(&segments, &mut batch, |pending, batch| {
         if pending.is_empty() {
             return Ok(());
         }
         let outputs = model.execute(batch)?;
-        *batches += 1;
+        batches += 1;
         for (row, seg) in pending.iter().enumerate() {
             if !outputs.row_valid(row) {
                 continue;
@@ -177,30 +209,20 @@ pub fn process_archive(
         pending.clear();
         batch.clear_rows();
         Ok(())
-    };
-
-    for seg in &segments {
-        obs_count += seg.obs.len() as u64;
-        let packed = seg.to_segment_obs();
-        if batch.push_segment(&packed).is_none() {
-            flush(&mut pending, &mut batch, &mut out, &mut batches)?;
-            batch.push_segment(&packed);
-        }
-        pending.push(seg);
-    }
-    flush(&mut pending, &mut batch, &mut out, &mut batches)?;
+    })?;
     std::fs::write(&out_path, out)?;
     Ok((segments.len() as u64, obs_count, batches))
 }
 
-/// Run stage 3 with the real self-scheduled executor. Each worker compiles
-/// its own model before the clock starts (mirroring job launch, which the
-/// paper does not count in task time).
+/// Run stage 3 on the real executor under the requested allocation mode.
+/// Each worker compiles its own model before the clock starts (mirroring
+/// job launch, which the paper does not count in task time) — in batch
+/// mode too, via [`crate::exec::run_batch_init`].
 pub fn run(
     job: &ProcessJob,
     workers: usize,
     order: crate::dist::TaskOrder,
-    ss: SelfSchedConfig,
+    alloc: AllocMode,
 ) -> Result<ProcessOutcome> {
     let archives = list_archives(&job.archive_dir)?;
     let tasks: Vec<crate::dist::Task> = archives
@@ -222,23 +244,35 @@ pub fn run(
     let batches = AtomicU64::new(0);
     let pjrt_ns = AtomicU64::new(0);
 
-    let trace = crate::exec::run_self_scheduled_init(
-        archives.len(),
-        &ordered,
-        workers,
-        ss,
-        |_w| TrackModel::load(&job.artifact_dir),
-        |model, _w, ti| {
-            let before = model.exec_stats().1;
-            let (s, o, b) = process_archive(&archives[ti], job, model)?;
-            let after = model.exec_stats().1;
-            segments.fetch_add(s, Ordering::Relaxed);
-            observations.fetch_add(o, Ordering::Relaxed);
-            batches.fetch_add(b, Ordering::Relaxed);
-            pjrt_ns.fetch_add((after - before).as_nanos() as u64, Ordering::Relaxed);
-            Ok(())
-        },
-    )?;
+    let init = |_w: usize| TrackModel::load(&job.artifact_dir);
+    let work = |model: &mut TrackModel, _w: usize, ti: usize| -> Result<()> {
+        let before = model.exec_stats().1;
+        let (s, o, b) = process_archive(&archives[ti], job, model)?;
+        let after = model.exec_stats().1;
+        segments.fetch_add(s, Ordering::Relaxed);
+        observations.fetch_add(o, Ordering::Relaxed);
+        batches.fetch_add(b, Ordering::Relaxed);
+        pjrt_ns.fetch_add((after - before).as_nanos() as u64, Ordering::Relaxed);
+        Ok(())
+    };
+    let trace = match alloc {
+        AllocMode::Batch(dist) => crate::exec::run_batch_init(
+            archives.len(),
+            &ordered,
+            workers,
+            dist,
+            init,
+            work,
+        )?,
+        AllocMode::SelfSched(ss) => crate::exec::run_self_scheduled_init(
+            archives.len(),
+            &ordered,
+            workers,
+            ss,
+            init,
+            work,
+        )?,
+    };
     let pjrt_seconds = pjrt_ns.into_inner() as f64 * 1e-9;
     Ok(ProcessOutcome {
         trace,
@@ -253,7 +287,81 @@ pub fn run(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::selfsched::SelfSchedConfig;
     use crate::util::Rng;
+
+    /// A segment of `n` synthetic observations.
+    fn seg(n: usize, icao24: u32) -> TrackSegment {
+        TrackSegment {
+            icao24,
+            obs: (0..n)
+                .map(|i| crate::tracks::Observation {
+                    t: 1000.0 + i as f64 * 10.0,
+                    lat: 40.0,
+                    lon: -100.0,
+                    alt_ft: 3000.0,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn pack_segments_keeps_pending_in_lockstep_with_batch_rows() {
+        // Regression for the swallowed re-push: at EVERY flush the pending
+        // list must mirror the batch rows exactly, and all flushes except
+        // the last must be full.
+        let man = crate::runtime::ArtifactManifest {
+            name: "pack_test".into(),
+            b: 2,
+            n: 16,
+            m: 4,
+            tile: 4,
+            inputs: vec![],
+            outputs: vec![],
+        };
+        let mut batch = TrackBatch::empty(&man);
+        let segments: Vec<TrackSegment> = (0..5).map(|i| seg(12, i as u32)).collect();
+        let mut flushed: Vec<usize> = Vec::new();
+        let mut total = 0usize;
+        pack_segments(&segments, &mut batch, |pending, batch| {
+            assert_eq!(
+                pending.len(),
+                batch.used_rows,
+                "pending out of lockstep with batch rows at flush {}",
+                flushed.len()
+            );
+            flushed.push(pending.len());
+            total += pending.len();
+            pending.clear();
+            batch.clear_rows();
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(total, segments.len(), "every segment flushed exactly once");
+        assert_eq!(flushed, vec![2, 2, 1], "full batches then the remainder");
+    }
+
+    #[test]
+    fn pack_segments_rejects_a_flush_that_leaves_residue() {
+        // A flush implementation that forgets clear_rows() must be caught,
+        // not silently desynchronized.
+        let man = crate::runtime::ArtifactManifest {
+            name: "pack_bad_flush".into(),
+            b: 2,
+            n: 16,
+            m: 4,
+            tile: 4,
+            inputs: vec![],
+            outputs: vec![],
+        };
+        let mut batch = TrackBatch::empty(&man);
+        let segments: Vec<TrackSegment> = (0..3).map(|i| seg(12, i as u32)).collect();
+        let err = pack_segments(&segments, &mut batch, |pending, _batch| {
+            pending.clear(); // but the batch rows are left in place
+            Ok(())
+        });
+        assert!(err.is_err(), "residual batch rows after flush must error");
+    }
 
     fn artifact_dir() -> PathBuf {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -292,7 +400,7 @@ mod tests {
             &job,
             2,
             crate::dist::TaskOrder::Random(1),
-            SelfSchedConfig { poll_s: 0.01, ..Default::default() },
+            AllocMode::SelfSched(SelfSchedConfig { poll_s: 0.01, ..Default::default() }),
         )
         .unwrap();
         assert!(out.archives > 0);
@@ -322,6 +430,24 @@ mod tests {
             }
         }
         assert!(checked > 0, "no output rows checked");
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn batch_mode_processes_all_archives() {
+        // The batch executor path (per-worker model via run_batch_init)
+        // must process the same archives the self-scheduled path does.
+        let (tmp, job) = fixture("batch");
+        let out = run(
+            &job,
+            2,
+            crate::dist::TaskOrder::FilenameSorted,
+            AllocMode::Batch(crate::dist::Distribution::Cyclic),
+        )
+        .unwrap();
+        assert!(out.archives > 0);
+        assert!(out.segments > 0);
+        out.trace.check_invariants(out.archives).unwrap();
         let _ = std::fs::remove_dir_all(&tmp);
     }
 
