@@ -16,19 +16,24 @@ COMMANDS:
       --seed N       RNG seed (default 42)
   organize   stage 1: parse + organize into the 4-tier hierarchy
       --data DIR --out DIR [--workers N] [--order chrono|size|random|filename]
-      [--seed N] [--alloc selfsched|block|cyclic]
+      [--seed N] [--alloc selfsched|block|cyclic] [--launch inprocess|processes]
   archive    stage 2: zip bottom-tier directories
       --data DIR --out DIR [--dist block|cyclic|selfsched] [--workers N]
-      [--order O] [--seed N]
+      [--order O] [--seed N] [--launch L]
   process    stage 3: interpolate into track segments (PJRT hot path)
       --data DIR --out DIR [--workers N] [--artifacts DIR]
-      [--order O] [--seed N] [--alloc selfsched|block|cyclic]
+      [--order O] [--seed N] [--alloc selfsched|block|cyclic] [--launch L]
   pipeline   all three stages end-to-end on a generated corpus
       --out DIR [--dataset monday|aerodrome] [--scale F] [--workers N] [--seed N]
+      [--launch L]
   scenarios  the paper's strategy matrix on the real executor:
              {selfsched,block,cyclic} x {chrono,size,filename,random} over
-             both mini corpora, per-stage traces to BENCH_<NAME>.json
-      --out DIR [--workers N] [--scale F] [--seed N]
+             both mini corpora, per-stage traces to BENCH_<NAME>.json;
+             --launch processes runs every cell in real worker subprocesses
+             (§II.C triples-mode, laptop-capped), --triples sizes workers
+             from a Table I/II cell via the local planner
+      --out DIR [--workers N] [--scale F] [--seed N] [--launch L]
+      [--triples CORESxNPPN] [--max-procs N]
       [--datasets monday,aerodrome] [--strategies selfsched,block,cyclic]
       [--orders chrono,size,filename,random] [--json NAME]
   queries    §III.B aerodrome query generation (geometry pipeline)
@@ -60,6 +65,9 @@ pub fn dispatch(args: &[String]) -> Result<()> {
         "process" => cmd_process(rest),
         "pipeline" => cmd_pipeline(rest),
         "scenarios" => cmd_scenarios(rest),
+        // Hidden: the subprocess side of `--launch processes`, spawned by
+        // the launch manager (never by hand — absent from HELP).
+        "worker" => cmd_worker(rest),
         "queries" => cmd_queries(rest),
         "bench" => cmd_bench(rest),
         "bench-check" => cmd_bench_check(rest),
@@ -119,6 +127,11 @@ fn cmd_scenarios(args: &[String]) -> Result<()> {
     crate::workflow::commands::scenarios(&a)
 }
 
+fn cmd_worker(args: &[String]) -> Result<()> {
+    let a = ArgParser::parse(args, &[])?;
+    crate::workflow::commands::worker(&a)
+}
+
 fn cmd_queries(args: &[String]) -> Result<()> {
     let a = ArgParser::parse(args, &[])?;
     crate::workflow::commands::queries(&a)
@@ -175,6 +188,9 @@ fn cmd_bench_check(args: &[String]) -> Result<()> {
             tolerance * 100.0
         );
     }
-    println!("bench-check passed ({} gated scenarios)", base.iter().filter(|(_, t)| *t > 0.0).count());
+    println!(
+        "bench-check passed ({} gated scenarios)",
+        base.iter().filter(|(_, t)| *t > 0.0).count()
+    );
     Ok(())
 }

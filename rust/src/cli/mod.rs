@@ -8,10 +8,16 @@
 //! emproc archive  --data DIR --out DIR [--dist block|cyclic]
 //! emproc process  --data DIR --out DIR [--workers N] [--artifacts DIR]
 //! emproc pipeline --out DIR [--scale F]         # all three stages, e2e
+//! emproc scenarios --out DIR [--launch processes] # the strategy matrix
 //! emproc bench <table1|table2|fig3|...|all>     # regenerate paper results
 //! emproc queries  --out FILE [--aerodromes N]   # §III.B query generation
 //! emproc info                                   # artifact + env report
 //! ```
+//!
+//! Stage commands and `pipeline`/`scenarios` accept `--launch
+//! inprocess|processes`; the hidden `worker` subcommand is the subprocess
+//! side of the launch layer (see `DESIGN.md` §9) and never appears in
+//! help.
 
 mod args;
 mod commands;

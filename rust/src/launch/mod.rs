@@ -1,0 +1,710 @@
+//! The launch layer: §II.C triples-mode job launch, for real.
+//!
+//! Everything below `workflow` used to run inside one OS process — real
+//! threads (`exec`) or virtual time (`simcluster`). This module adds the
+//! third backend the paper actually benchmarks: **separate worker
+//! processes**, spawned like an LLSC triples-mode job launches its
+//! `nppn × nodes` processes (laptop-capped via
+//! [`crate::triples::TriplesConfig::plan_local`]).
+//!
+//! [`run_processes`] is the manager side: it spawns workers (the hidden
+//! `emproc worker` subcommand, or any program speaking the
+//! [`protocol`]), drives them with the *same* clock-generic
+//! [`crate::sched`] core the in-process executor uses, and assembles the
+//! same [`SchedTrace`] — so in-process and multi-process runs of one
+//! scenario are directly comparable, grant for grant.
+//!
+//! Failure discipline (the whole point of a real launch layer): a worker
+//! that exits without its final `trace` line — crash, kill, panic — is a
+//! run **error** carrying the worker's captured stderr, never a silently
+//! truncated `Ok` trace. A `result err` from any worker aborts the run
+//! first-error style, exactly like the in-process executor.
+
+pub mod protocol;
+pub mod worker;
+
+pub use worker::worker_loop;
+
+use crate::dist::distribute;
+use crate::sched::{Manager, WorkerLog};
+use crate::selfsched::{AllocMode, SchedTrace};
+use crate::triples::TriplesConfig;
+use anyhow::{bail, Context, Result};
+use protocol::{accumulate_stats, WorkerMsg};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::PathBuf;
+use std::process::{Child as OsChild, ChildStdin, Command, Stdio};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Where a scenario's stage work runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaunchMode {
+    /// Worker threads inside this process (the classic `exec` backend).
+    InProcess,
+    /// Real worker subprocesses over the stdio [`protocol`].
+    Processes,
+}
+
+impl LaunchMode {
+    /// Short name (labels, CLI).
+    pub fn label(self) -> &'static str {
+        match self {
+            LaunchMode::InProcess => "inprocess",
+            LaunchMode::Processes => "processes",
+        }
+    }
+
+    /// Parse a [`LaunchMode::label`] (CLI `--launch` flag).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "inprocess" | "in-process" | "threads" => LaunchMode::InProcess,
+            "processes" | "procs" => LaunchMode::Processes,
+            other => bail!("unknown launch mode '{other}' (inprocess|processes)"),
+        })
+    }
+}
+
+/// The program + arguments a worker subprocess is spawned with.
+#[derive(Debug, Clone)]
+pub struct WorkerCommand {
+    pub program: PathBuf,
+    pub args: Vec<String>,
+}
+
+impl WorkerCommand {
+    /// A hidden `emproc worker ...` invocation of this very binary.
+    /// `EMPROC_WORKER_BIN` overrides the program — integration tests run
+    /// under the test binary, which has no `worker` subcommand.
+    pub fn emproc(args: Vec<String>) -> Result<WorkerCommand> {
+        Ok(WorkerCommand { program: worker_binary()?, args })
+    }
+}
+
+/// The binary to spawn workers from: the `EMPROC_WORKER_BIN` override,
+/// else the current executable.
+pub fn worker_binary() -> Result<PathBuf> {
+    if let Ok(p) = std::env::var("EMPROC_WORKER_BIN") {
+        return Ok(PathBuf::from(p));
+    }
+    std::env::current_exe().context("locating the emproc binary for worker spawning")
+}
+
+/// A local, laptop-capped realization of a triples-mode launch: how many
+/// worker subprocesses a stage run spawns.
+#[derive(Debug, Clone, Copy)]
+pub struct LocalLauncher {
+    /// Worker subprocesses per stage run (the parent is the manager).
+    pub workers: usize,
+}
+
+impl LocalLauncher {
+    /// A launcher with an explicit worker count.
+    pub fn new(workers: usize) -> Self {
+        assert!(workers >= 1, "need at least one worker process");
+        LocalLauncher { workers }
+    }
+
+    /// Downscale a triples cell to this machine: `nppn × nodes` worker
+    /// processes, capped at `max_procs` total (manager included), with
+    /// the cell's nodes : NPPN ratio preserved
+    /// (see [`TriplesConfig::plan_local`]).
+    pub fn from_triples(cfg: &TriplesConfig, max_procs: usize) -> Result<Self> {
+        let plan = cfg.plan_local(max_procs)?;
+        Ok(LocalLauncher::new(plan.workers()))
+    }
+}
+
+/// Result of one multi-process run.
+#[derive(Debug)]
+pub struct LaunchOutcome {
+    /// The run's trace, assembled by the same [`crate::sched`] core as
+    /// in-process runs.
+    pub trace: SchedTrace,
+    /// Elementwise sum of every worker message's stage counters.
+    pub stats: Vec<u64>,
+}
+
+impl LaunchOutcome {
+    /// Stage counter `i`, 0 when the workers reported fewer counters.
+    pub fn stat(&self, i: usize) -> u64 {
+        self.stats.get(i).copied().unwrap_or(0)
+    }
+}
+
+/// How long workers get to print `ready` (stage init — e.g. model
+/// compilation — happens before it and is not counted as task time).
+const READY_TIMEOUT: Duration = Duration::from_secs(120);
+/// How long workers get to seal their session with `trace` after the
+/// manager closes their stdin.
+const TRACE_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// One event from a worker's stdout-reader thread.
+enum Event {
+    Msg(WorkerMsg),
+    /// A stdout line that did not parse.
+    Malformed(String),
+    /// stdout closed: the worker is exiting (or dead).
+    Eof,
+}
+
+/// Parent-side handle on one worker subprocess.
+struct WorkerProc {
+    proc: OsChild,
+    stdin: Option<ChildStdin>,
+    stderr_buf: Arc<Mutex<String>>,
+    stderr_thread: Option<std::thread::JoinHandle<()>>,
+    /// Final `trace` line received.
+    traced: bool,
+}
+
+/// Write one grant line to a worker; false when its stdin is gone.
+fn send_grant(child: &mut WorkerProc, tasks: &[usize]) -> bool {
+    let Some(stdin) = child.stdin.as_mut() else {
+        return false;
+    };
+    let line = protocol::grant_line(tasks);
+    writeln!(stdin, "{line}").and_then(|()| stdin.flush()).is_ok()
+}
+
+/// Run `ordered` task ids across `nworkers` worker subprocesses spawned
+/// from `cmd`, allocating via `alloc` — self-scheduled through the shared
+/// [`Manager`] core (grant-on-completion with the protocol's `poll_s`
+/// receive poll) or pre-distributed block/cyclic (each worker gets its
+/// whole queue as one grant; zero allocation messages, like
+/// [`crate::exec::run_batch`]).
+///
+/// Returns the run's [`SchedTrace`] plus the summed stage counters.
+/// Any worker failure — a reported task error, a crash or kill without
+/// the final `trace` line, a protocol violation, a task-list mismatch —
+/// fails the run with the worker's captured stderr attached.
+pub fn run_processes(
+    ntasks: usize,
+    ordered: &[usize],
+    nworkers: usize,
+    alloc: AllocMode,
+    cmd: &WorkerCommand,
+) -> Result<LaunchOutcome> {
+    assert!(nworkers >= 1, "need at least one worker");
+    assert_eq!(ordered.len(), ntasks, "ordered must cover all tasks");
+
+    let (tx, rx) = mpsc::channel::<(usize, Event)>();
+    let mut children: Vec<WorkerProc> = Vec::with_capacity(nworkers);
+    let mut spawn_failure: Option<anyhow::Error> = None;
+    for w in 0..nworkers {
+        let spawned = Command::new(&cmd.program)
+            .args(&cmd.args)
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn()
+            .with_context(|| format!("spawning worker {w} ({})", cmd.program.display()));
+        let mut proc = match spawned {
+            Ok(p) => p,
+            Err(e) => {
+                spawn_failure = Some(e);
+                break;
+            }
+        };
+        let stdin = proc.stdin.take();
+        let stdout = proc.stdout.take().expect("piped stdout");
+        let stderr = proc.stderr.take().expect("piped stderr");
+        let tx2 = tx.clone();
+        std::thread::spawn(move || {
+            for line in BufReader::new(stdout).lines() {
+                let Ok(line) = line else { break };
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let ev = match WorkerMsg::parse(&line) {
+                    Ok(m) => Event::Msg(m),
+                    Err(_) => Event::Malformed(line),
+                };
+                if tx2.send((w, ev)).is_err() {
+                    return; // manager gone
+                }
+            }
+            let _ = tx2.send((w, Event::Eof));
+        });
+        let stderr_buf = Arc::new(Mutex::new(String::new()));
+        let buf2 = Arc::clone(&stderr_buf);
+        let stderr_thread = std::thread::spawn(move || {
+            let mut text = String::new();
+            let _ = BufReader::new(stderr).read_to_string(&mut text);
+            *buf2.lock().expect("stderr buffer lock") = text;
+        });
+        children.push(WorkerProc {
+            proc,
+            stdin,
+            stderr_buf,
+            stderr_thread: Some(stderr_thread),
+            traced: false,
+        });
+    }
+    drop(tx);
+
+    // (worker index, what went wrong) — stderr is attached during cleanup.
+    let mut failure: Option<(usize, String)> = None;
+    if let Some(e) = &spawn_failure {
+        failure = Some((children.len(), format!("{e:#}")));
+    }
+
+    // Phase 1: wait for every worker's `ready` (init + task enumeration).
+    let ready_deadline = Instant::now() + READY_TIMEOUT;
+    let mut ready = vec![false; nworkers];
+    let mut nready = 0usize;
+    while failure.is_none() && nready < children.len() {
+        let now = Instant::now();
+        if now >= ready_deadline {
+            let w = ready.iter().position(|r| !r).unwrap_or(0);
+            failure = Some((w, format!("not ready within {READY_TIMEOUT:?}")));
+            break;
+        }
+        match rx.recv_timeout(ready_deadline - now) {
+            Ok((w, Event::Msg(WorkerMsg::Ready { ntasks: n }))) => {
+                if n != ntasks {
+                    failure = Some((
+                        w,
+                        format!(
+                            "enumerated {n} task(s) but the manager has {ntasks} — \
+                             stage inputs out of sync"
+                        ),
+                    ));
+                } else if !ready[w] {
+                    ready[w] = true;
+                    nready += 1;
+                }
+            }
+            Ok((w, Event::Msg(WorkerMsg::Err { message }))) => {
+                failure = Some((w, format!("failed during init: {message}")));
+            }
+            Ok((w, Event::Msg(WorkerMsg::Trace { .. }))) => {
+                children[w].traced = true;
+                if failure.is_none() {
+                    failure = Some((w, "exited before the run began".into()));
+                }
+            }
+            Ok((w, Event::Msg(WorkerMsg::Ok { .. }))) => {
+                failure = Some((w, "sent a result before any grant".into()));
+            }
+            Ok((w, Event::Malformed(line))) => {
+                failure = Some((w, format!("sent an unparseable line {line:?}")));
+            }
+            Ok((w, Event::Eof)) => {
+                if !children[w].traced && failure.is_none() {
+                    failure = Some((w, "exited without a final trace line".into()));
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                failure = Some((0, "all workers disconnected before becoming ready".into()));
+            }
+        }
+    }
+
+    // Phase 2: the run itself.
+    let mut stats: Vec<u64> = Vec::new();
+    // Tasks the manager accounted per worker (checked against `trace`).
+    let mut accounted = vec![0usize; nworkers];
+    let mut trace: Option<SchedTrace> = None;
+    if failure.is_none() {
+        let job_start = Instant::now();
+        match alloc {
+            AllocMode::SelfSched(ss) => {
+                let mut mgr = Manager::new(ordered, nworkers, ss);
+                // Sequential initial fan-out, "as fast as possible".
+                for w in 0..nworkers {
+                    let now = job_start.elapsed().as_secs_f64();
+                    let Some(msg) = mgr.grant(w, now) else { break };
+                    if !send_grant(&mut children[w], &msg) {
+                        failure = Some((w, "hung up before receiving initial work".into()));
+                        mgr.abort();
+                        break;
+                    }
+                }
+                // Grant-on-completion with the protocol's manager poll.
+                while failure.is_none() && mgr.outstanding() > 0 {
+                    match rx.recv_timeout(Duration::from_secs_f64(ss.poll_s.max(1e-3))) {
+                        Ok((w, Event::Msg(WorkerMsg::Ok { stats: s }))) => {
+                            let now = job_start.elapsed().as_secs_f64();
+                            let n = mgr.complete(w, now);
+                            if n == 0 {
+                                failure =
+                                    Some((w, "sent a result with no message in flight".into()));
+                                continue;
+                            }
+                            accounted[w] += n;
+                            accumulate_stats(&mut stats, &s);
+                            if let Some(msg) = mgr.grant(w, now) {
+                                if !send_grant(&mut children[w], &msg) {
+                                    failure = Some((w, "hung up before receiving work".into()));
+                                    mgr.abort();
+                                }
+                            }
+                        }
+                        Ok((w, Event::Msg(WorkerMsg::Err { message }))) => {
+                            mgr.complete(w, job_start.elapsed().as_secs_f64());
+                            mgr.abort();
+                            failure = Some((w, format!("task failed: {message}")));
+                        }
+                        Ok((w, Event::Msg(WorkerMsg::Trace { .. }))) => {
+                            children[w].traced = true;
+                            failure = Some((w, "sent its final trace mid-run".into()));
+                        }
+                        Ok((w, Event::Msg(WorkerMsg::Ready { .. }))) => {
+                            failure = Some((w, "sent a duplicate ready".into()));
+                        }
+                        Ok((w, Event::Malformed(line))) => {
+                            failure = Some((w, format!("sent an unparseable line {line:?}")));
+                        }
+                        Ok((w, Event::Eof)) => {
+                            if !children[w].traced {
+                                failure = Some((w, "exited without a final trace line".into()));
+                            }
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => {} // next poll
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            failure = Some((
+                                0,
+                                format!(
+                                    "all workers disconnected with {} grant(s) outstanding",
+                                    mgr.outstanding()
+                                ),
+                            ));
+                        }
+                    }
+                }
+                trace = Some(mgr.into_trace(job_start.elapsed().as_secs_f64()));
+            }
+            AllocMode::Batch(dist) => {
+                // Pre-distribute: each worker receives its whole queue as
+                // one grant, and reports once. Zero allocation messages.
+                let queues = distribute(ordered, nworkers, dist);
+                let qlen: Vec<usize> = queues.iter().map(Vec::len).collect();
+                let mut log = WorkerLog::new(nworkers);
+                let mut starts = vec![0.0f64; nworkers];
+                let mut pending = 0usize;
+                for (w, queue) in queues.iter().enumerate() {
+                    if queue.is_empty() {
+                        continue;
+                    }
+                    let now = job_start.elapsed().as_secs_f64();
+                    log.record_start(w, now);
+                    starts[w] = now;
+                    if !send_grant(&mut children[w], queue) {
+                        failure = Some((w, "hung up before receiving its queue".into()));
+                        break;
+                    }
+                    pending += 1;
+                }
+                while failure.is_none() && pending > 0 {
+                    match rx.recv() {
+                        Ok((w, Event::Msg(WorkerMsg::Ok { stats: s }))) => {
+                            let now = job_start.elapsed().as_secs_f64();
+                            log.record_completion(w, now, now - starts[w], qlen[w]);
+                            accounted[w] += qlen[w];
+                            accumulate_stats(&mut stats, &s);
+                            pending -= 1;
+                        }
+                        Ok((w, Event::Msg(WorkerMsg::Err { message }))) => {
+                            failure = Some((w, format!("task failed: {message}")));
+                        }
+                        Ok((w, Event::Msg(WorkerMsg::Trace { .. }))) => {
+                            children[w].traced = true;
+                            failure = Some((w, "sent its final trace mid-run".into()));
+                        }
+                        Ok((w, Event::Msg(WorkerMsg::Ready { .. }))) => {
+                            failure = Some((w, "sent a duplicate ready".into()));
+                        }
+                        Ok((w, Event::Malformed(line))) => {
+                            failure = Some((w, format!("sent an unparseable line {line:?}")));
+                        }
+                        Ok((w, Event::Eof)) => {
+                            if !children[w].traced {
+                                failure = Some((w, "exited without a final trace line".into()));
+                            }
+                        }
+                        Err(mpsc::RecvError) => {
+                            failure = Some((
+                                0,
+                                format!("all workers disconnected, {pending} report(s) pending"),
+                            ));
+                        }
+                    }
+                }
+                trace = Some(log.trace(job_start.elapsed().as_secs_f64()));
+            }
+        }
+    }
+
+    // Phase 3: shutdown — close stdins, collect every worker's `trace`
+    // seal and check it against the manager's own accounting.
+    for c in &mut children {
+        c.stdin = None;
+    }
+    if failure.is_none() {
+        let deadline = Instant::now() + TRACE_TIMEOUT;
+        while failure.is_none() && children.iter().any(|c| !c.traced) {
+            let now = Instant::now();
+            if now >= deadline {
+                let w = children.iter().position(|c| !c.traced).unwrap_or(0);
+                failure = Some((w, format!("no final trace line within {TRACE_TIMEOUT:?}")));
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok((w, Event::Msg(WorkerMsg::Trace { tasks_done }))) => {
+                    children[w].traced = true;
+                    if tasks_done != accounted[w] {
+                        failure = Some((
+                            w,
+                            format!(
+                                "trace reports {tasks_done} task(s) but the manager \
+                                 accounted {}",
+                                accounted[w]
+                            ),
+                        ));
+                    }
+                }
+                Ok((w, Event::Eof)) => {
+                    if !children[w].traced {
+                        failure = Some((w, "exited without a final trace line".into()));
+                    }
+                }
+                Ok((w, Event::Msg(_))) => {
+                    failure = Some((w, "sent an unexpected line after shutdown".into()));
+                }
+                Ok((w, Event::Malformed(line))) => {
+                    failure = Some((w, format!("sent an unparseable line {line:?}")));
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    if let Some(w) = children.iter().position(|c| !c.traced) {
+                        failure = Some((w, "exited without a final trace line".into()));
+                    }
+                }
+            }
+        }
+    }
+
+    // Phase 4: cleanup (always runs). Kill stragglers on failure, reap
+    // everything, join the stderr captures.
+    if failure.is_some() {
+        for c in &mut children {
+            let _ = c.proc.kill();
+        }
+    }
+    let mut statuses = Vec::with_capacity(children.len());
+    for c in &mut children {
+        statuses.push(c.proc.wait());
+        if let Some(h) = c.stderr_thread.take() {
+            let _ = h.join();
+        }
+    }
+    if failure.is_none() {
+        for (w, st) in statuses.iter().enumerate() {
+            if let Ok(s) = st {
+                if !s.success() {
+                    failure = Some((w, format!("exited with {s} after completing its work")));
+                    break;
+                }
+            }
+        }
+    }
+
+    if let Some((w, msg)) = failure {
+        let stderr = children
+            .get(w)
+            .map(|c| c.stderr_buf.lock().expect("stderr buffer lock").trim().to_string())
+            .unwrap_or_default();
+        let stderr = if stderr.is_empty() { "<empty>".to_string() } else { stderr };
+        bail!("worker {w}: {msg}; worker stderr: {stderr}");
+    }
+    let trace = trace.expect("trace assembled on every non-failure path");
+    Ok(LaunchOutcome { trace, stats })
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use crate::selfsched::SelfSchedConfig;
+
+    /// A scripted stand-in worker (the protocol is plain lines, so a
+    /// shell one-liner can play the role).
+    fn sh_worker(script: &str) -> WorkerCommand {
+        WorkerCommand {
+            program: PathBuf::from("/bin/sh"),
+            args: vec!["-c".to_string(), script.to_string()],
+        }
+    }
+
+    /// A well-behaved scripted worker for `n` tasks: acks every grant
+    /// with `result ok <tasks_in_grant> 2` and seals with a trace.
+    fn good_script(n: usize) -> String {
+        format!(
+            "echo 'ready {n}'; done=0; \
+             while read -r cmd rest; do \
+               [ \"$cmd\" = grant ] || continue; \
+               c=0; for t in $rest; do c=$((c+1)); done; \
+               done=$((done+c)); \
+               echo \"result ok $c 2\"; \
+             done; \
+             echo \"trace $done\""
+        )
+    }
+
+    fn ss(k: usize) -> AllocMode {
+        AllocMode::SelfSched(SelfSchedConfig { poll_s: 0.01, msg_s: 0.0, tasks_per_message: k })
+    }
+
+    #[test]
+    fn selfsched_processes_complete_and_sum_stats() {
+        let n = 7;
+        let ordered: Vec<usize> = (0..n).collect();
+        let out = run_processes(n, &ordered, 3, ss(2), &sh_worker(&good_script(n))).unwrap();
+        out.trace.check_invariants(n).unwrap();
+        let messages = n.div_ceil(2);
+        assert_eq!(out.trace.messages_sent, messages);
+        // stats[0] sums per-grant task counts; stats[1] is 2 per message.
+        assert_eq!(out.stats, vec![n as u64, 2 * messages as u64]);
+        assert_eq!(out.stat(0), n as u64);
+        assert_eq!(out.stat(9), 0);
+    }
+
+    #[test]
+    fn batch_processes_complete_with_zero_messages() {
+        let n = 7;
+        let ordered: Vec<usize> = (0..n).collect();
+        for dist in [crate::dist::Distribution::Block, crate::dist::Distribution::Cyclic] {
+            let out = run_processes(
+                n,
+                &ordered,
+                3,
+                AllocMode::Batch(dist),
+                &sh_worker(&good_script(n)),
+            )
+            .unwrap();
+            out.trace.check_invariants(n).unwrap();
+            assert_eq!(out.trace.messages_sent, 0, "{dist:?}");
+            // One grant per non-empty queue, each acking `2` once.
+            assert_eq!(out.stats, vec![n as u64, 2 * 3], "{dist:?}");
+        }
+    }
+
+    #[test]
+    fn more_workers_than_tasks_is_fine() {
+        let n = 2;
+        let ordered: Vec<usize> = (0..n).collect();
+        let out = run_processes(n, &ordered, 4, ss(1), &sh_worker(&good_script(n))).unwrap();
+        out.trace.check_invariants(n).unwrap();
+        assert_eq!(out.trace.messages_sent, n);
+    }
+
+    #[test]
+    fn killed_worker_is_an_error_with_stderr_not_a_truncated_ok() {
+        // Regression (satellite): a worker killed mid-run exits without
+        // its final trace line; the run must fail and carry the worker's
+        // stderr — never report a truncated Ok trace.
+        let n = 6;
+        let ordered: Vec<usize> = (0..n).collect();
+        let script =
+            format!("echo 'ready {n}'; read -r line; echo 'about to vanish' >&2; kill -9 $$");
+        let err = run_processes(n, &ordered, 2, ss(1), &sh_worker(&script)).unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("without a final trace line"), "{text}");
+        assert!(text.contains("about to vanish"), "stderr must be attached: {text}");
+    }
+
+    #[test]
+    fn crashing_worker_exit_code_is_an_error_with_stderr() {
+        let n = 5;
+        let ordered: Vec<usize> = (0..n).collect();
+        let script = format!("echo 'ready {n}'; read -r line; echo 'exploding' >&2; exit 3");
+        let err = run_processes(n, &ordered, 2, ss(1), &sh_worker(&script)).unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("without a final trace line"), "{text}");
+        assert!(text.contains("exploding"), "{text}");
+    }
+
+    #[test]
+    fn reported_task_error_aborts_the_run() {
+        let n = 5;
+        let ordered: Vec<usize> = (0..n).collect();
+        let script = format!(
+            "echo 'ready {n}'; read -r line; echo 'result err task 0: disk on fire'; \
+             while read -r line; do :; done; echo 'trace 0'"
+        );
+        let err = run_processes(n, &ordered, 2, ss(1), &sh_worker(&script)).unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("disk on fire"), "{text}");
+    }
+
+    #[test]
+    fn init_failure_surfaces_with_its_message() {
+        let script = "echo 'result err worker init failed: no model'; echo 'trace 0'";
+        let ordered: Vec<usize> = (0..4).collect();
+        let err = run_processes(4, &ordered, 2, ss(1), &sh_worker(script)).unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("failed during init"), "{text}");
+        assert!(text.contains("no model"), "{text}");
+    }
+
+    #[test]
+    fn task_list_mismatch_is_rejected() {
+        // Worker enumerates 3 tasks, manager has 5: stage inputs are out
+        // of sync and granting blind would corrupt the run.
+        let ordered: Vec<usize> = (0..5).collect();
+        let err = run_processes(5, &ordered, 2, ss(1), &sh_worker(&good_script(3))).unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("out of sync"), "{text}");
+    }
+
+    #[test]
+    fn trace_undercount_is_detected() {
+        // A worker whose final trace disagrees with the manager's
+        // accounting indicates lost work — must fail, not pass silently.
+        let n = 4;
+        let ordered: Vec<usize> = (0..n).collect();
+        let script = format!(
+            "echo 'ready {n}'; \
+             while read -r cmd rest; do \
+               [ \"$cmd\" = grant ] || continue; echo 'result ok'; \
+             done; \
+             echo 'trace 0'"
+        );
+        let err = run_processes(n, &ordered, 1, ss(1), &sh_worker(&script)).unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("manager accounted"), "{text}");
+    }
+
+    #[test]
+    fn unspawnable_worker_is_a_clean_error() {
+        let ordered: Vec<usize> = (0..3).collect();
+        let cmd = WorkerCommand {
+            program: PathBuf::from("/nonexistent/emproc-worker"),
+            args: vec![],
+        };
+        assert!(run_processes(3, &ordered, 2, ss(1), &cmd).is_err());
+    }
+
+    #[test]
+    fn local_launcher_sizes_from_a_table_cell() {
+        // (512, 32): 8 nodes x NPPN 32 -> local plan (1, 4) under 8
+        // processes -> 1 manager + 3 workers.
+        let cfg = TriplesConfig::table_config(512, 32).unwrap();
+        let launcher = LocalLauncher::from_triples(&cfg, 8).unwrap();
+        assert_eq!(launcher.workers, 3);
+        assert!(LocalLauncher::from_triples(&cfg, 1).is_err());
+    }
+
+    #[test]
+    fn worker_binary_honors_the_env_override() {
+        // Serialized with nothing: no other test reads this variable.
+        std::env::set_var("EMPROC_WORKER_BIN", "/tmp/fake-emproc");
+        let p = worker_binary().unwrap();
+        std::env::remove_var("EMPROC_WORKER_BIN");
+        assert_eq!(p, PathBuf::from("/tmp/fake-emproc"));
+        // Without the override we fall back to the current executable.
+        assert!(worker_binary().is_ok());
+    }
+}

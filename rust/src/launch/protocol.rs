@@ -1,0 +1,173 @@
+//! The line-delimited stdio protocol between the launch manager (parent
+//! process) and its worker subprocesses.
+//!
+//! Four message kinds, one line each, all plain ASCII so a worker can be
+//! faked by a shell script in tests:
+//!
+//! ```text
+//! worker  → manager   ready <ntasks>          init done, task list enumerated
+//! manager → worker    grant <i> <i> ...       task ids into the stage's list
+//! worker  → manager   result ok <stat> ...    message done, stage counters
+//! worker  → manager   result err <message>    task failed (first-error abort)
+//! worker  → manager   trace <tasks_done>      final line before a clean exit
+//! ```
+//!
+//! The `ready` count lets the manager verify both sides enumerated the
+//! same task list (both derive it from the same deterministic directory
+//! walk); the final `trace` line is the integrity seal — a worker that
+//! exits without one crashed or was killed, and the run must fail.
+
+use anyhow::{bail, Context, Result};
+
+/// A message a worker writes on its stdout, one line each.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WorkerMsg {
+    /// Init complete; the worker enumerated `ntasks` tasks.
+    Ready { ntasks: usize },
+    /// One granted message finished; `stats` are the stage-specific
+    /// counters summed over the message's tasks (e.g. files written).
+    Ok { stats: Vec<u64> },
+    /// A task (or the worker's init) failed; the manager aborts the run.
+    Err { message: String },
+    /// Final line before exit: total tasks this worker completed.
+    Trace { tasks_done: usize },
+}
+
+impl WorkerMsg {
+    /// Render as one protocol line (no trailing newline).
+    pub fn render(&self) -> String {
+        match self {
+            WorkerMsg::Ready { ntasks } => format!("ready {ntasks}"),
+            WorkerMsg::Ok { stats } => {
+                let mut s = String::from("result ok");
+                for v in stats {
+                    s.push(' ');
+                    s.push_str(&v.to_string());
+                }
+                s
+            }
+            WorkerMsg::Err { message } => format!("result err {}", flatten(message)),
+            WorkerMsg::Trace { tasks_done } => format!("trace {tasks_done}"),
+        }
+    }
+
+    /// Parse one worker line.
+    pub fn parse(line: &str) -> Result<WorkerMsg> {
+        let line = line.trim();
+        if let Some(rest) = line.strip_prefix("ready ") {
+            let ntasks = rest.trim().parse().with_context(|| format!("bad ready count '{rest}'"))?;
+            return Ok(WorkerMsg::Ready { ntasks });
+        }
+        if let Some(rest) = line.strip_prefix("result ok") {
+            let stats = rest
+                .split_whitespace()
+                .map(|v| v.parse::<u64>().with_context(|| format!("bad stat '{v}'")))
+                .collect::<Result<Vec<u64>>>()?;
+            return Ok(WorkerMsg::Ok { stats });
+        }
+        if let Some(rest) = line.strip_prefix("result err") {
+            return Ok(WorkerMsg::Err { message: rest.trim_start().to_string() });
+        }
+        if let Some(rest) = line.strip_prefix("trace ") {
+            let tasks_done =
+                rest.trim().parse().with_context(|| format!("bad trace count '{rest}'"))?;
+            return Ok(WorkerMsg::Trace { tasks_done });
+        }
+        bail!("unparseable worker line {line:?}");
+    }
+}
+
+/// Render a manager→worker grant line (no trailing newline).
+pub fn grant_line(tasks: &[usize]) -> String {
+    let mut s = String::from("grant");
+    for t in tasks {
+        s.push(' ');
+        s.push_str(&t.to_string());
+    }
+    s
+}
+
+/// Parse a manager→worker line (the worker side).
+pub fn parse_grant(line: &str) -> Result<Vec<usize>> {
+    let mut it = line.split_whitespace();
+    match it.next() {
+        Some("grant") => it
+            .map(|t| t.parse::<usize>().with_context(|| format!("bad grant index '{t}'")))
+            .collect(),
+        other => bail!("unexpected manager line {other:?} (want 'grant ...')"),
+    }
+}
+
+/// The protocol is line-delimited, so an embedded newline in an error
+/// message would desynchronize it.
+fn flatten(msg: &str) -> String {
+    msg.replace(['\n', '\r'], " | ")
+}
+
+/// Elementwise-add `s` into `acc`, growing `acc` as needed — the stage
+/// counters both sides of the protocol sum.
+pub(crate) fn accumulate_stats(acc: &mut Vec<u64>, s: &[u64]) {
+    if acc.len() < s.len() {
+        acc.resize(s.len(), 0);
+    }
+    for (a, v) in acc.iter_mut().zip(s) {
+        *a += v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_messages_round_trip() {
+        let msgs = [
+            WorkerMsg::Ready { ntasks: 42 },
+            WorkerMsg::Ok { stats: vec![] },
+            WorkerMsg::Ok { stats: vec![3, 1200, 0] },
+            WorkerMsg::Err { message: "task 7: file vanished".into() },
+            WorkerMsg::Trace { tasks_done: 9 },
+        ];
+        for m in msgs {
+            let line = m.render();
+            assert!(!line.contains('\n'));
+            assert_eq!(WorkerMsg::parse(&line).unwrap(), m, "{line}");
+        }
+    }
+
+    #[test]
+    fn error_messages_are_newline_safe() {
+        let m = WorkerMsg::Err { message: "line one\nline two\r\nthree".into() };
+        let line = m.render();
+        assert!(!line.contains('\n') && !line.contains('\r'), "{line:?}");
+        match WorkerMsg::parse(&line).unwrap() {
+            WorkerMsg::Err { message } => assert!(message.contains("line one")),
+            other => panic!("parsed {other:?}"),
+        }
+    }
+
+    #[test]
+    fn grant_lines_round_trip() {
+        assert_eq!(grant_line(&[5, 0, 12]), "grant 5 0 12");
+        assert_eq!(parse_grant("grant 5 0 12").unwrap(), vec![5, 0, 12]);
+        assert_eq!(parse_grant("grant").unwrap(), Vec::<usize>::new());
+        assert!(parse_grant("grant x").is_err());
+        assert!(parse_grant("stop").is_err());
+    }
+
+    #[test]
+    fn malformed_worker_lines_are_rejected() {
+        for bad in ["ready", "ready x", "result", "trace", "trace -1", "hello", ""] {
+            assert!(WorkerMsg::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn stats_accumulate_elementwise_and_grow() {
+        let mut acc = Vec::new();
+        accumulate_stats(&mut acc, &[1, 2]);
+        accumulate_stats(&mut acc, &[10, 20, 30]);
+        accumulate_stats(&mut acc, &[]);
+        assert_eq!(acc, vec![11, 22, 30]);
+    }
+}

@@ -1,0 +1,184 @@
+//! Worker-subprocess side of the launch protocol — the body of the hidden
+//! `emproc worker` subcommand.
+//!
+//! A worker enumerates the same task list as the manager (both walk the
+//! same directories with the same deterministic sort), builds its private
+//! stage state (`init` — e.g. the stage-3 PJRT model, which is not
+//! `Send` and so *must* live in its own process for EPPAC-style
+//! placement), then loops: read a grant line, run the granted tasks,
+//! report one `result` line, until stdin closes — at which point it seals
+//! the session with a final `trace` line. A worker that dies without that
+//! line (crash, kill, panic) is detected by the manager and surfaces as a
+//! run error carrying the worker's captured stderr.
+//!
+//! A failing task does not exit the worker: it reports `result err` and
+//! keeps reading (the manager aborts the run and closes stdin, which is
+//! the worker's cue to wrap up cleanly).
+
+use super::protocol::{accumulate_stats, parse_grant, WorkerMsg};
+use anyhow::{Context, Result};
+use std::io::{BufRead, Write};
+
+/// Run the worker loop over real stdin/stdout. `init` builds the worker's
+/// private stage state; `work(state, task_idx)` runs one task and returns
+/// its stage counters (summed per message and again by the manager).
+pub fn worker_loop<S, I, F>(ntasks: usize, init: I, work: F) -> Result<()>
+where
+    I: FnOnce() -> Result<S>,
+    F: FnMut(&mut S, usize) -> Result<Vec<u64>>,
+{
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    run_loop(ntasks, init, work, stdin.lock(), stdout.lock())
+}
+
+/// Testable core of [`worker_loop`] over any line source/sink.
+pub(crate) fn run_loop<S, I, F>(
+    ntasks: usize,
+    init: I,
+    mut work: F,
+    input: impl BufRead,
+    mut output: impl Write,
+) -> Result<()>
+where
+    I: FnOnce() -> Result<S>,
+    F: FnMut(&mut S, usize) -> Result<Vec<u64>>,
+{
+    let mut emit = |msg: &WorkerMsg| -> Result<()> {
+        writeln!(output, "{}", msg.render()).context("writing to manager")?;
+        output.flush().context("flushing to manager")
+    };
+    // Init before `ready`: the clock-relevant part of the run starts once
+    // every worker is ready, so model compilation is never counted as
+    // task time (matching the paper, which excludes job launch).
+    let mut state = match init() {
+        Ok(s) => s,
+        Err(e) => {
+            emit(&WorkerMsg::Err { message: format!("worker init failed: {e:#}") })?;
+            emit(&WorkerMsg::Trace { tasks_done: 0 })?;
+            return Ok(());
+        }
+    };
+    emit(&WorkerMsg::Ready { ntasks })?;
+    let mut done = 0usize;
+    for line in input.lines() {
+        let line = line.context("reading manager line")?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let granted = match parse_grant(&line) {
+            Ok(g) => g,
+            Err(e) => {
+                emit(&WorkerMsg::Err { message: format!("{e:#}") })?;
+                continue;
+            }
+        };
+        let mut stats: Vec<u64> = Vec::new();
+        let mut failed: Option<String> = None;
+        for &ti in &granted {
+            if ti >= ntasks {
+                failed = Some(format!("granted task {ti} out of range (ntasks {ntasks})"));
+                break;
+            }
+            match work(&mut state, ti) {
+                Ok(s) => {
+                    accumulate_stats(&mut stats, &s);
+                    done += 1;
+                }
+                Err(e) => {
+                    failed = Some(format!("task {ti}: {e:#}"));
+                    break;
+                }
+            }
+        }
+        match failed {
+            None => emit(&WorkerMsg::Ok { stats })?,
+            Some(message) => emit(&WorkerMsg::Err { message })?,
+        }
+    }
+    // stdin closed: the manager is done with us. Seal the session.
+    emit(&WorkerMsg::Trace { tasks_done: done })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_to_lines<S>(
+        ntasks: usize,
+        init: impl FnOnce() -> Result<S>,
+        work: impl FnMut(&mut S, usize) -> Result<Vec<u64>>,
+        input: &str,
+    ) -> Vec<String> {
+        let mut out = Vec::new();
+        run_loop(ntasks, init, work, input.as_bytes(), &mut out).unwrap();
+        String::from_utf8(out).unwrap().lines().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn speaks_ready_result_trace_in_order() {
+        let lines = run_to_lines(
+            5,
+            || Ok(0u64),
+            |calls, ti| {
+                *calls += 1;
+                Ok(vec![ti as u64, 1])
+            },
+            "grant 0 1\ngrant 4\n",
+        );
+        assert_eq!(lines, vec!["ready 5", "result ok 1 2", "result ok 4 1", "trace 3"]);
+    }
+
+    #[test]
+    fn task_error_reports_err_and_keeps_serving() {
+        let lines = run_to_lines(
+            5,
+            || Ok(()),
+            |_, ti| {
+                if ti == 1 {
+                    anyhow::bail!("boom");
+                }
+                Ok(vec![1])
+            },
+            "grant 0 1 2\ngrant 3\n",
+        );
+        // Task 0 succeeded before task 1 failed; the grant reports err and
+        // later grants still run (the manager decides when to stop).
+        assert_eq!(lines[0], "ready 5");
+        assert!(lines[1].starts_with("result err task 1:"), "{}", lines[1]);
+        assert!(lines[1].contains("boom"));
+        assert_eq!(lines[2], "result ok 1");
+        assert_eq!(lines[3], "trace 2");
+    }
+
+    #[test]
+    fn out_of_range_grant_is_an_err_not_a_panic() {
+        let lines = run_to_lines(3, || Ok(()), |_, _| Ok(vec![]), "grant 7\n");
+        assert!(lines[1].starts_with("result err"), "{}", lines[1]);
+        assert!(lines[1].contains("out of range"));
+        assert_eq!(lines[2], "trace 0");
+    }
+
+    #[test]
+    fn init_failure_reports_err_then_sealed_trace() {
+        let lines = run_to_lines(
+            3,
+            || Err::<(), _>(anyhow::anyhow!("no model")),
+            |_, _| Ok(vec![]),
+            "grant 0\n",
+        );
+        assert!(lines[0].starts_with("result err worker init failed"), "{}", lines[0]);
+        assert!(lines[0].contains("no model"));
+        assert_eq!(lines[1], "trace 0");
+        assert_eq!(lines.len(), 2, "{lines:?}");
+    }
+
+    #[test]
+    fn malformed_manager_line_is_reported_not_fatal() {
+        let lines = run_to_lines(3, || Ok(()), |_, _| Ok(vec![2]), "purr\ngrant 0\n");
+        assert_eq!(lines[0], "ready 3");
+        assert!(lines[1].starts_with("result err"), "{}", lines[1]);
+        assert_eq!(lines[2], "result ok 2");
+        assert_eq!(lines[3], "trace 1");
+    }
+}

@@ -9,9 +9,11 @@
 //!   distribution and task organization ([`dist`]), the self-scheduling
 //!   protocol parameters ([`selfsched`]) and its clock-generic manager
 //!   core ([`sched`]), a discrete-event cluster simulator calibrated to
-//!   the LLSC ([`simcluster`]), a real thread-pool executor ([`exec`]) —
-//!   both driving the same [`sched`] core — and the three-stage processing
-//!   workflow ([`workflow`]): organize → archive → process.
+//!   the LLSC ([`simcluster`]), a real thread-pool executor ([`exec`]), a
+//!   multi-process launch layer spawning real worker subprocesses over a
+//!   stdio protocol ([`launch`]) — all driving the same [`sched`] core —
+//!   and the three-stage processing workflow ([`workflow`]):
+//!   organize → archive → process.
 //! * **L2/L1 (build-time Python)** — the stage-3 numeric hot spot (track
 //!   resampling, dynamic rates, DEM/AGL) written in JAX + Pallas, AOT-lowered
 //!   to HLO text and executed from rust via PJRT ([`runtime`]). Python never
@@ -36,6 +38,7 @@ pub mod datasets;
 pub mod dem;
 pub mod dist;
 pub mod exec;
+pub mod launch;
 pub mod metrics;
 pub mod sched;
 pub mod selfsched;
@@ -55,6 +58,7 @@ pub mod util;
 pub mod prelude {
     pub use crate::datasets::{DatasetKind, FileManifest};
     pub use crate::dist::{Distribution, Task, TaskOrder};
+    pub use crate::launch::{LaunchMode, LocalLauncher};
     pub use crate::metrics::WorkerReport;
     pub use crate::runtime::{TrackBatch, TrackModel};
     pub use crate::selfsched::{AllocMode, SelfSchedConfig};

@@ -140,6 +140,89 @@ impl TriplesConfig {
     }
 }
 
+/// A laptop-scale downscaling of a feasible triples-mode cell: how many
+/// real processes (manager + workers) to launch locally for it. Produced
+/// by [`TriplesConfig::plan_local`] and consumed by
+/// [`crate::launch::LocalLauncher`]. The LLSC-specific rules (NPPN a
+/// multiple of 8, 64-core nodes) deliberately do not apply to a laptop;
+/// what the plan preserves is the cell's *shape* — its nodes : NPPN
+/// proportion — so two table cells keep their relative process placement
+/// when both are scaled down to the same machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LocalPlan {
+    /// Simulated node groups (ratio bookkeeping only — everything runs on
+    /// one physical machine).
+    pub nodes: usize,
+    /// Worker processes per simulated node.
+    pub nppn: usize,
+    /// Threads per worker process (carried through from the cell).
+    pub threads: usize,
+}
+
+impl LocalPlan {
+    /// Total local processes (manager + workers).
+    pub fn processes(&self) -> usize {
+        self.nodes * self.nppn
+    }
+
+    /// Worker subprocesses to spawn (one process is the manager).
+    pub fn workers(&self) -> usize {
+        self.processes().saturating_sub(1)
+    }
+}
+
+/// Greatest common divisor (Euclid).
+fn gcd(mut a: usize, mut b: usize) -> usize {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+impl TriplesConfig {
+    /// Downscale this cell to a feasible *local* process count: at most
+    /// `max_procs` processes (manager included), at least 2 (manager +
+    /// one worker), preserving the cell's nodes : NPPN ratio exactly
+    /// whenever that ratio fits. Infeasible cells (the "-" entries of
+    /// Tables I-II) are rejected up front with their violated rule, so a
+    /// local run can never silently "fix" a configuration the LLSC would
+    /// refuse.
+    pub fn plan_local(&self, max_procs: usize) -> Result<LocalPlan> {
+        self.validate()?;
+        if max_procs < 2 {
+            bail!("max_procs {max_procs} cannot host a manager and a worker");
+        }
+        let procs = self.processes();
+        if procs <= max_procs {
+            // Already laptop-sized; run it as-is.
+            return Ok(LocalPlan { nodes: self.nodes, nppn: self.nppn, threads: self.threads });
+        }
+        // Smallest integer pair with the exact nodes : NPPN ratio, scaled
+        // back up by the largest k that still fits under the cap (and
+        // never beyond the original cell).
+        let g = gcd(self.nodes, self.nppn);
+        let (b_nodes, b_nppn) = (self.nodes / g, self.nppn / g);
+        let base = b_nodes * b_nppn;
+        if base > max_procs {
+            // The exact ratio cannot fit; fall back to the densest local
+            // shape (one node group, capped NPPN).
+            return Ok(LocalPlan { nodes: 1, nppn: max_procs, threads: self.threads });
+        }
+        let mut k = 1usize;
+        while k < g && (k + 1) * (k + 1) * base <= max_procs {
+            k += 1;
+        }
+        let mut plan = LocalPlan { nodes: b_nodes * k, nppn: b_nppn * k, threads: self.threads };
+        if plan.processes() < 2 {
+            // A 1x1 ratio at k=1: bump to the minimum viable pair.
+            plan.nppn = 2;
+        }
+        Ok(plan)
+    }
+}
+
 /// The Table I/II sweep: NPPN rows x core columns, in paper order. Returns
 /// `(cores, nppn, Result<TriplesConfig>)` for all 12 cells — infeasible
 /// cells carry the validation error (rendered as "-").
@@ -231,5 +314,98 @@ mod tests {
         let sweep = table_sweep();
         assert_eq!(sweep.len(), 12);
         assert_eq!(sweep.iter().filter(|(_, _, r)| r.is_ok()).count(), 9);
+    }
+
+    /// Every "-" cell of Tables I-II must reject with the *specific*
+    /// violated rule, not a generic failure — the launch layer surfaces
+    /// these messages to users planning local runs.
+    #[test]
+    fn each_infeasible_cell_names_its_violated_rule() {
+        // (2048, 16): 1024 processes over 64 nodes -> 64x64x2 = 8192
+        // charged cores > the 4096 allocation.
+        let e = TriplesConfig::table_config(2048, 16).unwrap_err();
+        assert!(format!("{e:#}").contains("allocation"), "{e:#}");
+        // (2048, 8): 1024 processes over 128 nodes > the 64-node ceiling.
+        let e = TriplesConfig::table_config(2048, 8).unwrap_err();
+        assert!(format!("{e:#}").contains("node ceiling"), "{e:#}");
+        // (1024, 8): 512 processes over 64 nodes -> 8192 charged > 4096.
+        let e = TriplesConfig::table_config(1024, 8).unwrap_err();
+        assert!(format!("{e:#}").contains("allocation"), "{e:#}");
+
+        // The four rule families, probed directly.
+        let base = TriplesConfig {
+            nodes: 4,
+            nppn: 16,
+            threads: 1,
+            slots_per_job: 2,
+            allocation: DEFAULT_ALLOCATION,
+        };
+        let e = TriplesConfig { nppn: 40, ..base }.validate().unwrap_err();
+        assert!(format!("{e:#}").contains("max of 32"), "{e:#}");
+        let e = TriplesConfig { nppn: 12, ..base }.validate().unwrap_err();
+        assert!(format!("{e:#}").contains("multiple of 8"), "{e:#}");
+        let e = TriplesConfig { nodes: 65, ..base }.validate().unwrap_err();
+        assert!(format!("{e:#}").contains("node ceiling"), "{e:#}");
+        let e = TriplesConfig { nodes: 33, ..base }.validate().unwrap_err();
+        assert!(format!("{e:#}").contains("allocation"), "{e:#}");
+    }
+
+    #[test]
+    fn plan_local_preserves_ratio_and_feasibility() {
+        // Every feasible table cell downscales to a runnable local plan
+        // (2..=max processes) with the exact nodes : NPPN ratio.
+        for (cores, nppn, cfg) in table_sweep() {
+            let Ok(cfg) = cfg else { continue };
+            let plan = cfg.plan_local(8).unwrap();
+            assert!(
+                plan.processes() >= 2 && plan.processes() <= 8,
+                "({cores},{nppn}) planned {} processes",
+                plan.processes()
+            );
+            assert!(plan.workers() >= 1, "({cores},{nppn}) has no workers");
+            assert_eq!(
+                plan.nppn * cfg.nodes,
+                cfg.nppn * plan.nodes,
+                "({cores},{nppn}) broke the nodes:NPPN ratio: {plan:?}"
+            );
+            assert_eq!(plan.threads, cfg.threads);
+        }
+        // Infeasible cells are rejected by the local planner too — the
+        // laptop must not silently "fix" an LLSC-invalid configuration.
+        for (cores, nppn) in [(2048, 16), (2048, 8), (1024, 8)] {
+            let cfg = TriplesConfig {
+                nodes: cores / 2 / nppn,
+                nppn,
+                threads: 1,
+                slots_per_job: 2,
+                allocation: DEFAULT_ALLOCATION,
+            };
+            assert!(cfg.plan_local(8).is_err(), "({cores},{nppn}) must not plan");
+        }
+    }
+
+    #[test]
+    fn plan_local_edge_cases() {
+        let cell = TriplesConfig::table_config(512, 32).unwrap(); // 256 procs
+        // A cap below manager+worker is rejected.
+        assert!(cell.plan_local(1).is_err());
+        // A cap the exact ratio cannot fit falls back to one dense group.
+        let tight = cell.plan_local(2).unwrap(); // base ratio 1:4 needs 4
+        assert_eq!((tight.nodes, tight.nppn), (1, 2));
+        // An already-laptop-sized config passes through unchanged.
+        let small = TriplesConfig {
+            nodes: 1,
+            nppn: 8,
+            threads: 1,
+            slots_per_job: 1,
+            allocation: DEFAULT_ALLOCATION,
+        };
+        let plan = small.plan_local(16).unwrap();
+        assert_eq!((plan.nodes, plan.nppn), (1, 8));
+        // The 1x1-ratio headline cell still yields a worker at tiny caps.
+        let big = TriplesConfig::table_config(2048, 32).unwrap();
+        let plan = big.plan_local(3).unwrap();
+        assert_eq!(plan.processes(), 2);
+        assert_eq!(plan.workers(), 1);
     }
 }

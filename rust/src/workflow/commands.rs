@@ -3,6 +3,7 @@
 use crate::cli::ArgParser;
 use crate::datasets::DatasetKind;
 use crate::dist::TaskOrder;
+use crate::launch::LaunchMode;
 use crate::registry::Registry;
 use crate::selfsched::{AllocMode, SelfSchedConfig};
 use crate::util::Rng;
@@ -32,12 +33,17 @@ pub(crate) fn parse_alloc(s: &str) -> Result<AllocMode> {
     })
 }
 
+/// Parse the `--launch` flag shared by every stage/pipeline command.
+pub(crate) fn parse_launch(a: &ArgParser) -> Result<LaunchMode> {
+    LaunchMode::parse(a.get_or("launch", "inprocess"))
+}
+
 /// Parse a comma-separated flag value through `one`.
 fn parse_list<T>(csv: &str, one: impl Fn(&str) -> Result<T>) -> Result<Vec<T>> {
     csv.split(',')
         .map(str::trim)
         .filter(|s| !s.is_empty())
-        .map(|s| one(s))
+        .map(one)
         .collect()
 }
 
@@ -102,7 +108,7 @@ fn load_registry(data_dir: &std::path::Path) -> Result<Registry> {
 }
 
 /// `emproc organize --data DIR --out DIR [--workers N] [--order O]
-/// [--seed N] [--alloc selfsched|block|cyclic]`
+/// [--seed N] [--alloc selfsched|block|cyclic] [--launch inprocess|processes]`
 pub fn organize(a: &ArgParser) -> Result<()> {
     let data = PathBuf::from(a.required("data")?);
     let out = PathBuf::from(a.required("out")?);
@@ -110,13 +116,15 @@ pub fn organize(a: &ArgParser) -> Result<()> {
     let seed = a.get_num("seed", 1u64)?;
     let order = parse_order(a.get_or("order", "size"), seed)?;
     let alloc = parse_alloc(a.get_or("alloc", "selfsched"))?;
+    let launch = parse_launch(a)?;
     let registry = load_registry(&data)?;
-    let outcome = crate::workflow::stage1::run(
+    let outcome = crate::workflow::stage1::run_launched(
         &crate::workflow::stage1::OrganizeJob { data_dir: data, out_dir: out, year: 2019 },
         &registry,
         workers,
         order,
         alloc,
+        launch,
     )?;
     println!(
         "organized {} files ({} obs): {}",
@@ -128,7 +136,7 @@ pub fn organize(a: &ArgParser) -> Result<()> {
 }
 
 /// `emproc archive --data DIR --out DIR [--dist block|cyclic|selfsched]
-/// [--workers N] [--order O] [--seed N]`
+/// [--workers N] [--order O] [--seed N] [--launch inprocess|processes]`
 pub fn archive(a: &ArgParser) -> Result<()> {
     let data = PathBuf::from(a.required("data")?);
     let out = PathBuf::from(a.required("out")?);
@@ -136,11 +144,13 @@ pub fn archive(a: &ArgParser) -> Result<()> {
     let seed = a.get_num("seed", 1u64)?;
     let alloc = parse_alloc(a.get_or("dist", "cyclic"))?;
     let order = parse_order(a.get_or("order", "filename"), seed)?;
-    let outcome = crate::workflow::stage2::run(
+    let launch = parse_launch(a)?;
+    let outcome = crate::workflow::stage2::run_launched(
         &crate::workflow::stage2::ArchiveJob { organized_dir: data, archive_dir: out },
         workers,
         alloc,
         order,
+        launch,
     )?;
     println!(
         "archived {} dirs, {} in, {} Lustre blocks saved: {}",
@@ -153,7 +163,8 @@ pub fn archive(a: &ArgParser) -> Result<()> {
 }
 
 /// `emproc process --data DIR --out DIR [--workers N] [--artifacts DIR]
-/// [--order O] [--seed N] [--alloc selfsched|block|cyclic]`
+/// [--order O] [--seed N] [--alloc selfsched|block|cyclic]
+/// [--launch inprocess|processes]`
 pub fn process(a: &ArgParser) -> Result<()> {
     let data = PathBuf::from(a.required("data")?);
     let out = PathBuf::from(a.required("out")?);
@@ -161,11 +172,12 @@ pub fn process(a: &ArgParser) -> Result<()> {
     let seed = a.get_num("seed", 1u64)?;
     let order = parse_order(a.get_or("order", "random"), seed)?;
     let alloc = parse_alloc(a.get_or("alloc", "selfsched"))?;
+    let launch = parse_launch(a)?;
     let artifacts = a
         .get("artifacts")
         .map(PathBuf::from)
         .unwrap_or_else(crate::runtime::TrackModel::default_dir);
-    let outcome = crate::workflow::stage3::run(
+    let outcome = crate::workflow::stage3::run_launched(
         &crate::workflow::stage3::ProcessJob {
             archive_dir: data,
             out_dir: out,
@@ -175,6 +187,7 @@ pub fn process(a: &ArgParser) -> Result<()> {
         workers,
         order,
         alloc,
+        launch,
     )?;
     println!(
         "processed {} archives -> {} segments ({} PJRT batches, {:.3}s in PJRT): {}",
@@ -188,7 +201,7 @@ pub fn process(a: &ArgParser) -> Result<()> {
 }
 
 /// `emproc pipeline --out DIR [--dataset monday|aerodrome] [--scale F]
-/// [--workers N] [--seed N]`
+/// [--workers N] [--seed N] [--launch inprocess|processes]`
 pub fn pipeline(a: &ArgParser) -> Result<()> {
     let out = PathBuf::from(a.required("out")?);
     let scale = a.get_num("scale", 1.0f64)?;
@@ -197,6 +210,7 @@ pub fn pipeline(a: &ArgParser) -> Result<()> {
     cfg.aircraft_skew = crate::workflow::ScenarioSpec::aircraft_skew(cfg.dataset);
     cfg.workers = a.get_num("workers", cfg.workers)?;
     cfg.seed = a.get_num("seed", cfg.seed)?;
+    cfg.launch = parse_launch(a)?;
     cfg.process_order = TaskOrder::Random(cfg.seed);
     cfg.days = ((cfg.days as f64 * scale).ceil() as u32).max(1);
     cfg.max_file_bytes = (cfg.max_file_bytes as f64 * scale) as u64 + 1_000;
@@ -206,6 +220,7 @@ pub fn pipeline(a: &ArgParser) -> Result<()> {
 }
 
 /// `emproc scenarios --out DIR [--workers N] [--scale F] [--seed N]
+/// [--launch inprocess|processes] [--triples CORESxNPPN] [--max-procs N]
 /// [--datasets monday,aerodrome] [--strategies selfsched,block,cyclic]
 /// [--orders chrono,size,filename,random] [--json NAME]`
 ///
@@ -213,12 +228,41 @@ pub fn pipeline(a: &ArgParser) -> Result<()> {
 /// order) cell — end-to-end on the real executor over shared miniature
 /// corpora, prints one line per scenario plus the §IV.B archiving
 /// comparison, and writes every stage's trace to `BENCH_<NAME>.json`
-/// (gate with `emproc bench-check`).
+/// (gate with `emproc bench-check`). With `--launch processes` every
+/// cell's stage work runs in real worker subprocesses (§II.C for real);
+/// `--triples 512x32` sizes the worker count by downscaling that Table
+/// I/II cell via [`crate::triples::TriplesConfig::plan_local`], capped at
+/// `--max-procs` (default 8) and the host's parallelism.
 pub fn scenarios(a: &ArgParser) -> Result<()> {
     let out = PathBuf::from(a.required("out")?);
-    let workers = a.get_num("workers", 2usize)?;
     let seed = a.get_num("seed", 42u64)?;
     let scale = a.get_num("scale", 1.0f64)?;
+    let launch = parse_launch(a)?;
+    let workers = match a.get("triples") {
+        None => a.get_num("workers", 2usize)?,
+        Some(cell) => {
+            if a.get("workers").is_some() {
+                bail!("--workers and --triples both size the worker pool; pass only one");
+            }
+            let (cores, nppn) = cell
+                .split_once('x')
+                .with_context(|| format!("--triples '{cell}' is not CORESxNPPN"))?;
+            let cfg = crate::triples::TriplesConfig::table_config(
+                cores.trim().parse().with_context(|| format!("bad cores in '{cell}'"))?,
+                nppn.trim().parse().with_context(|| format!("bad NPPN in '{cell}'"))?,
+            )?;
+            let host = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(2);
+            let max_procs = a.get_num("max-procs", 8usize)?.min(host.max(2));
+            let launcher = crate::launch::LocalLauncher::from_triples(&cfg, max_procs)?;
+            println!(
+                "triples cell {cell}: {} processes on the LLSC -> {} local worker(s) \
+                 (max {max_procs} processes)",
+                cfg.processes(),
+                launcher.workers
+            );
+            launcher.workers
+        }
+    };
     let json_name = a.get_or("json", "scenarios");
     // Defaults come from the scenario module so the CLI and the library
     // describe the same matrix (flags narrow or reorder it).
@@ -236,22 +280,16 @@ pub fn scenarios(a: &ArgParser) -> Result<()> {
     };
     let days = ((2.0 * scale).ceil() as u32).max(1);
     let max_file_bytes = (40_000.0 * scale) as u64 + 2_000;
-    let specs = scenario::matrix(
-        &datasets,
-        &strategies,
-        &orders,
-        workers,
-        days,
-        max_file_bytes,
-        seed,
-    );
+    let shape = scenario::MatrixShape { workers, days, max_file_bytes, seed, launch };
+    let specs = scenario::matrix(&datasets, &strategies, &orders, shape);
     println!(
-        "running {} scenarios ({} datasets x {} strategies x {} orders, {workers} workers) \
-         under {}",
+        "running {} scenarios ({} datasets x {} strategies x {} orders, {workers} workers, \
+         {} launch) under {}",
         specs.len(),
         datasets.len(),
         strategies.len(),
         orders.len(),
+        launch.label(),
         out.display()
     );
     let reports = scenario::run_matrix(&specs, &out)?;
@@ -326,10 +364,97 @@ mod tests {
     }
 
     #[test]
+    fn parse_launch_accepts_both_modes_and_defaults_inprocess() {
+        let parsed = |args: &[&str]| {
+            let a = ArgParser::parse(
+                &args.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+                &[],
+            )
+            .unwrap();
+            parse_launch(&a)
+        };
+        assert_eq!(parsed(&[]).unwrap(), LaunchMode::InProcess);
+        assert_eq!(parsed(&["--launch", "inprocess"]).unwrap(), LaunchMode::InProcess);
+        assert_eq!(parsed(&["--launch", "processes"]).unwrap(), LaunchMode::Processes);
+        assert_eq!(parsed(&["--launch", "procs"]).unwrap(), LaunchMode::Processes);
+        assert!(parsed(&["--launch", "fork"]).is_err());
+    }
+
+    #[test]
     fn parse_list_splits_and_trims() {
         let kinds = parse_list("monday, aerodrome", DatasetKind::parse).unwrap();
         assert_eq!(kinds, vec![DatasetKind::Monday, DatasetKind::Aerodrome]);
         assert!(parse_list("monday,mars", DatasetKind::parse).is_err());
+    }
+}
+
+/// Hidden `emproc worker --stage <organize|archive|process> ...`: the
+/// subprocess side of [`crate::launch::run_processes`]. Speaks the launch
+/// protocol on stdin/stdout and is only ever spawned by the manager —
+/// never invoked by hand (hence absent from `emproc help`). Each stage
+/// enumerates its task list with the same deterministic walk the manager
+/// uses; the manager cross-checks the count via the `ready` line.
+pub fn worker(a: &ArgParser) -> Result<()> {
+    let stage = a.required("stage")?;
+    let data = PathBuf::from(a.required("data")?);
+    let out = PathBuf::from(a.required("out")?);
+    match stage {
+        "organize" => {
+            let year = a.get_num("year", 2019u16)?;
+            let registry = load_registry(&data)?;
+            let raw = crate::workflow::stage1::list_raw_files(&data)?;
+            crate::launch::worker_loop(
+                raw.len(),
+                || Ok(()),
+                |_, ti| {
+                    let (files, obs) =
+                        crate::workflow::stage1::organize_file(&raw[ti].0, &registry, &out, year)?;
+                    Ok(vec![files as u64, obs])
+                },
+            )
+        }
+        "archive" => {
+            let plan = crate::archive::ArchivePlan::plan(&data, &out)?;
+            crate::launch::worker_loop(
+                plan.tasks.len(),
+                || Ok(()),
+                |_, ti| {
+                    crate::archive::zipdir::archive_dir(&plan.tasks[ti])?;
+                    Ok(Vec::new())
+                },
+            )
+        }
+        "process" => {
+            let artifacts = a
+                .get("artifacts")
+                .map(PathBuf::from)
+                .unwrap_or_else(crate::runtime::TrackModel::default_dir);
+            let default_seg = crate::tracks::SegmentConfig::default();
+            let segment = crate::tracks::SegmentConfig {
+                max_gap_s: a.get_num("max-gap-s", default_seg.max_gap_s)?,
+                min_obs: a.get_num("min-obs", default_seg.min_obs)?,
+                max_obs: a.get_num("max-obs", default_seg.max_obs)?,
+            };
+            let archives = crate::workflow::stage3::list_archives(&data)?;
+            let job = crate::workflow::stage3::ProcessJob {
+                archive_dir: data,
+                out_dir: out,
+                artifact_dir: artifacts.clone(),
+                segment,
+            };
+            crate::launch::worker_loop(
+                archives.len(),
+                || crate::runtime::TrackModel::load(&artifacts),
+                |model, ti| {
+                    let before = model.exec_stats().1;
+                    let (s, o, b) =
+                        crate::workflow::stage3::process_archive(&archives[ti], &job, model)?;
+                    let after = model.exec_stats().1;
+                    Ok(vec![s, o, b, (after - before).as_nanos() as u64])
+                },
+            )
+        }
+        other => bail!("unknown worker stage '{other}' (organize|archive|process)"),
     }
 }
 

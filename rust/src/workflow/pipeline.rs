@@ -7,6 +7,7 @@
 
 use crate::datasets::DatasetKind;
 use crate::dist::{Distribution, TaskOrder};
+use crate::launch::LaunchMode;
 use crate::registry::Registry;
 use crate::selfsched::{AllocMode, SelfSchedConfig};
 use crate::tracks::SegmentConfig;
@@ -48,6 +49,9 @@ pub struct PipelineConfig {
     pub archive_order: TaskOrder,
     /// Stage-3 task order.
     pub process_order: TaskOrder,
+    /// Launch layer for every stage: worker threads in this process, or
+    /// real worker subprocesses over the [`crate::launch`] protocol.
+    pub launch: LaunchMode,
 }
 
 impl PipelineConfig {
@@ -74,6 +78,7 @@ impl PipelineConfig {
             order: TaskOrder::LargestFirst,
             archive_order: TaskOrder::FilenameSorted,
             process_order: TaskOrder::Random(42),
+            launch: LaunchMode::InProcess,
         }
     }
 
@@ -158,7 +163,7 @@ impl Pipeline {
     /// Run all three stages; the corpus must exist (see [`Pipeline::generate`]).
     pub fn run(&self, registry: &Registry, raw_files: usize) -> Result<PipelineReport> {
         let w = &self.cfg.work_dir;
-        let organize = crate::workflow::stage1::run(
+        let organize = crate::workflow::stage1::run_launched(
             &crate::workflow::stage1::OrganizeJob {
                 data_dir: self.cfg.raw_path(),
                 out_dir: w.join("organized"),
@@ -168,8 +173,9 @@ impl Pipeline {
             self.cfg.workers,
             self.cfg.order,
             self.cfg.alloc[0],
+            self.cfg.launch,
         )?;
-        let archive = crate::workflow::stage2::run(
+        let archive = crate::workflow::stage2::run_launched(
             &crate::workflow::stage2::ArchiveJob {
                 organized_dir: w.join("organized"),
                 archive_dir: w.join("archived"),
@@ -177,8 +183,9 @@ impl Pipeline {
             self.cfg.workers,
             self.cfg.alloc[1],
             self.cfg.archive_order,
+            self.cfg.launch,
         )?;
-        let process = crate::workflow::stage3::run(
+        let process = crate::workflow::stage3::run_launched(
             &crate::workflow::stage3::ProcessJob {
                 archive_dir: w.join("archived"),
                 out_dir: w.join("processed"),
@@ -188,6 +195,7 @@ impl Pipeline {
             self.cfg.workers,
             self.cfg.process_order,
             self.cfg.alloc[2],
+            self.cfg.launch,
         )?;
         Ok(PipelineReport { raw_files, organize, archive, process })
     }

@@ -20,6 +20,7 @@
 use crate::bench_harness::{json, sweep};
 use crate::datasets::DatasetKind;
 use crate::dist::{Distribution, TaskOrder};
+use crate::launch::LaunchMode;
 use crate::registry::Registry;
 use crate::selfsched::{AllocMode, SelfSchedConfig};
 use crate::workflow::{Pipeline, PipelineConfig, PipelineReport};
@@ -48,6 +49,9 @@ pub struct ScenarioSpec {
     pub registry_size: usize,
     /// RNG seed for corpus generation (shared per dataset).
     pub seed: u64,
+    /// Launch layer: worker threads in this process, or real worker
+    /// subprocesses (the §II.C triples-mode dimension, laptop-capped).
+    pub launch: LaunchMode,
 }
 
 /// Short name for an allocation mode (scenario labels, CLI).
@@ -79,9 +83,11 @@ impl ScenarioSpec {
         }
     }
 
-    /// Stable label, e.g. `aerodrome/cyclic/filename/w2`. The allocation
-    /// component is stage agnostic when all stages share a mode, else
-    /// `s1+s2+s3` labels are joined.
+    /// Stable label, e.g. `aerodrome/cyclic/filename/w2` — with a
+    /// `/procs` suffix when the cell runs in real worker subprocesses, so
+    /// in-process and multi-process timings of one cell sit side by side
+    /// in `BENCH_*.json`. The allocation component is stage agnostic when
+    /// all stages share a mode, else `s1+s2+s3` labels are joined.
     pub fn label(&self) -> String {
         let a = if alloc_label(self.alloc[0]) == alloc_label(self.alloc[1])
             && alloc_label(self.alloc[1]) == alloc_label(self.alloc[2])
@@ -95,13 +101,17 @@ impl ScenarioSpec {
                 alloc_label(self.alloc[2])
             )
         };
-        format!(
+        let base = format!(
             "{}/{}/{}/w{}",
             self.dataset.label(),
             a,
             order_label(self.order),
             self.workers
-        )
+        );
+        match self.launch {
+            LaunchMode::InProcess => base,
+            LaunchMode::Processes => format!("{base}/procs"),
+        }
     }
 
     /// Filesystem-safe form of [`ScenarioSpec::label`].
@@ -124,6 +134,7 @@ impl ScenarioSpec {
         cfg.order = self.order;
         cfg.archive_order = TaskOrder::FilenameSorted;
         cfg.process_order = self.order;
+        cfg.launch = self.launch;
         cfg
     }
 }
@@ -156,18 +167,32 @@ impl ScenarioReport {
     }
 }
 
+/// Scale/launch shape shared by every cell of one matrix (the knobs that
+/// are *not* part of the comparison).
+#[derive(Debug, Clone, Copy)]
+pub struct MatrixShape {
+    /// Workers per cell (threads in-process, subprocesses otherwise).
+    pub workers: usize,
+    /// Days of data in each generated corpus.
+    pub days: u32,
+    /// Largest raw file size, bytes.
+    pub max_file_bytes: u64,
+    /// Corpus + shuffle seed.
+    pub seed: u64,
+    /// Launch layer every cell runs under.
+    pub launch: LaunchMode,
+}
+
 /// The default strategy matrix: every (dataset × allocation strategy ×
 /// order) cell, with one allocation mode shared by all three stages.
 /// `{self-sched, block, cyclic} × {chrono, size, filename, random}` over
-/// both miniature corpora is the paper's §IV comparison space.
+/// both miniature corpora is the paper's §IV comparison space; `shape`
+/// holds the scale and launch-layer knobs every cell shares.
 pub fn matrix(
     datasets: &[DatasetKind],
     strategies: &[AllocMode],
     orders: &[TaskOrder],
-    workers: usize,
-    days: u32,
-    max_file_bytes: u64,
-    seed: u64,
+    shape: MatrixShape,
 ) -> Vec<ScenarioSpec> {
     let mut specs = Vec::with_capacity(datasets.len() * strategies.len() * orders.len());
     for &dataset in datasets {
@@ -177,11 +202,12 @@ pub fn matrix(
                     dataset,
                     alloc: [alloc; 3],
                     order,
-                    workers,
-                    days,
-                    max_file_bytes,
+                    workers: shape.workers,
+                    days: shape.days,
+                    max_file_bytes: shape.max_file_bytes,
                     registry_size: 60,
-                    seed,
+                    seed: shape.seed,
+                    launch: shape.launch,
                 });
             }
         }
@@ -365,6 +391,7 @@ mod tests {
             max_file_bytes: 12_000,
             registry_size: 40,
             seed: 7,
+            launch: LaunchMode::InProcess,
         }
     }
 
@@ -373,7 +400,14 @@ mod tests {
         let datasets = [DatasetKind::Monday, DatasetKind::Aerodrome];
         let strategies = default_strategies(0.02);
         let orders = default_orders(9);
-        let specs = matrix(&datasets, &strategies, &orders, 2, 2, 30_000, 9);
+        let shape = MatrixShape {
+            workers: 2,
+            days: 2,
+            max_file_bytes: 30_000,
+            seed: 9,
+            launch: LaunchMode::InProcess,
+        };
+        let specs = matrix(&datasets, &strategies, &orders, shape);
         assert_eq!(specs.len(), 2 * 3 * 4);
         let labels: std::collections::BTreeSet<String> =
             specs.iter().map(|s| s.label()).collect();
@@ -381,6 +415,14 @@ mod tests {
         assert!(labels.contains("monday/selfsched/chrono/w2"));
         assert!(labels.contains("aerodrome/cyclic/filename/w2"));
         assert!(labels.contains("aerodrome/block/random9/w2"));
+        // The launch axis shows up in (and only in) multi-process labels.
+        let specs = matrix(
+            &datasets,
+            &strategies,
+            &orders,
+            MatrixShape { launch: LaunchMode::Processes, ..shape },
+        );
+        assert!(specs.iter().all(|s| s.label().ends_with("/procs")));
     }
 
     #[test]

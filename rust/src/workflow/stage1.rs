@@ -8,6 +8,7 @@
 //! free — the paper's pMatlab processes were similarly independent.
 
 use crate::dist::TaskOrder;
+use crate::launch::LaunchMode;
 use crate::registry::Registry;
 use crate::selfsched::{AllocMode, SchedTrace};
 use crate::tracks;
@@ -103,6 +104,22 @@ pub fn run(
     order: TaskOrder,
     alloc: AllocMode,
 ) -> Result<OrganizeOutcome> {
+    run_launched(job, registry, workers, order, alloc, LaunchMode::InProcess)
+}
+
+/// Like [`run`], but selecting the launch layer: [`LaunchMode::InProcess`]
+/// runs worker threads, [`LaunchMode::Processes`] spawns real worker
+/// subprocesses (the `emproc worker --stage organize` side of
+/// [`crate::launch`]) that enumerate the same sorted raw-file list and
+/// report per-message `(files_written, observations)` counters.
+pub fn run_launched(
+    job: &OrganizeJob,
+    registry: &Registry,
+    workers: usize,
+    order: TaskOrder,
+    alloc: AllocMode,
+    launch: LaunchMode,
+) -> Result<OrganizeOutcome> {
     let raw = list_raw_files(&job.data_dir)?;
     let tasks: Vec<crate::dist::Task> = raw
         .iter()
@@ -117,6 +134,25 @@ pub fn run(
         })
         .collect();
     let ordered = crate::dist::order_tasks(&tasks, order);
+    if launch == LaunchMode::Processes {
+        let cmd = crate::launch::WorkerCommand::emproc(vec![
+            "worker".into(),
+            "--stage".into(),
+            "organize".into(),
+            "--data".into(),
+            job.data_dir.display().to_string(),
+            "--out".into(),
+            job.out_dir.display().to_string(),
+            "--year".into(),
+            job.year.to_string(),
+        ])?;
+        let out = crate::launch::run_processes(tasks.len(), &ordered, workers, alloc, &cmd)?;
+        return Ok(OrganizeOutcome {
+            files_written: out.stat(0) as usize,
+            observations: out.stat(1),
+            trace: out.trace,
+        });
+    }
     let written = std::sync::atomic::AtomicUsize::new(0);
     let observations = std::sync::atomic::AtomicU64::new(0);
     let work = |_w: usize, ti: usize| -> Result<()> {

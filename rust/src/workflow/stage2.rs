@@ -7,6 +7,7 @@
 
 use crate::archive::zipdir::{archive_dir, ArchivePlan};
 use crate::dist::{Distribution, TaskOrder};
+use crate::launch::LaunchMode;
 use crate::selfsched::{AllocMode, SchedTrace};
 use anyhow::Result;
 use std::path::PathBuf;
@@ -43,6 +44,21 @@ pub fn run(
     alloc: AllocMode,
     order: TaskOrder,
 ) -> Result<ArchiveOutcome> {
+    run_launched(job, workers, alloc, order, LaunchMode::InProcess)
+}
+
+/// Like [`run`], but selecting the launch layer: [`LaunchMode::Processes`]
+/// spawns real worker subprocesses (`emproc worker --stage archive`) that
+/// build the identical destination-sorted [`ArchivePlan`] from the shared
+/// organized tree. The Lustre accounting below is manager-side either way
+/// (it rescans the filesystem after the run).
+pub fn run_launched(
+    job: &ArchiveJob,
+    workers: usize,
+    alloc: AllocMode,
+    order: TaskOrder,
+    launch: LaunchMode,
+) -> Result<ArchiveOutcome> {
     let plan = ArchivePlan::plan(&job.organized_dir, &job.archive_dir)?;
     let n = plan.tasks.len();
     let tasks: Vec<crate::dist::Task> = plan
@@ -61,14 +77,27 @@ pub fn run(
         })
         .collect();
     let ordered = crate::dist::order_tasks(&tasks, order);
-    let work = |_w: usize, ti: usize| -> Result<()> {
-        archive_dir(&plan.tasks[ti])?;
-        Ok(())
-    };
-    let trace = match alloc {
-        AllocMode::Batch(dist) => crate::exec::run_batch(n, &ordered, workers, dist, work)?,
-        AllocMode::SelfSched(ss) => {
-            crate::exec::run_self_scheduled(n, &ordered, workers, ss, work)?
+    let trace = if launch == LaunchMode::Processes {
+        let cmd = crate::launch::WorkerCommand::emproc(vec![
+            "worker".into(),
+            "--stage".into(),
+            "archive".into(),
+            "--data".into(),
+            job.organized_dir.display().to_string(),
+            "--out".into(),
+            job.archive_dir.display().to_string(),
+        ])?;
+        crate::launch::run_processes(n, &ordered, workers, alloc, &cmd)?.trace
+    } else {
+        let work = |_w: usize, ti: usize| -> Result<()> {
+            archive_dir(&plan.tasks[ti])?;
+            Ok(())
+        };
+        match alloc {
+            AllocMode::Batch(dist) => crate::exec::run_batch(n, &ordered, workers, dist, work)?,
+            AllocMode::SelfSched(ss) => {
+                crate::exec::run_self_scheduled(n, &ordered, workers, ss, work)?
+            }
         }
     };
 

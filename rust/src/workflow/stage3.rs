@@ -14,6 +14,7 @@
 
 use crate::dem::Dem;
 use crate::geometry::Rect;
+use crate::launch::LaunchMode;
 use crate::runtime::{TrackBatch, TrackModel};
 use crate::selfsched::{AllocMode, SchedTrace};
 use crate::tracks::{segment_track, SegmentConfig, TrackSegment};
@@ -224,6 +225,22 @@ pub fn run(
     order: crate::dist::TaskOrder,
     alloc: AllocMode,
 ) -> Result<ProcessOutcome> {
+    run_launched(job, workers, order, alloc, LaunchMode::InProcess)
+}
+
+/// Like [`run`], but selecting the launch layer: [`LaunchMode::Processes`]
+/// spawns real worker subprocesses (`emproc worker --stage process`), each
+/// owning its own compiled model in its own address space — the paper's
+/// actual EPPAC placement, not just a thread-affinity approximation. The
+/// segment configuration is threaded through the worker argv so both
+/// sides segment identically.
+pub fn run_launched(
+    job: &ProcessJob,
+    workers: usize,
+    order: crate::dist::TaskOrder,
+    alloc: AllocMode,
+    launch: LaunchMode,
+) -> Result<ProcessOutcome> {
     let archives = list_archives(&job.archive_dir)?;
     let tasks: Vec<crate::dist::Task> = archives
         .iter()
@@ -238,6 +255,34 @@ pub fn run(
         })
         .collect();
     let ordered = crate::dist::order_tasks(&tasks, order);
+    if launch == LaunchMode::Processes {
+        let cmd = crate::launch::WorkerCommand::emproc(vec![
+            "worker".into(),
+            "--stage".into(),
+            "process".into(),
+            "--data".into(),
+            job.archive_dir.display().to_string(),
+            "--out".into(),
+            job.out_dir.display().to_string(),
+            "--artifacts".into(),
+            job.artifact_dir.display().to_string(),
+            "--max-gap-s".into(),
+            job.segment.max_gap_s.to_string(),
+            "--min-obs".into(),
+            job.segment.min_obs.to_string(),
+            "--max-obs".into(),
+            job.segment.max_obs.to_string(),
+        ])?;
+        let out = crate::launch::run_processes(archives.len(), &ordered, workers, alloc, &cmd)?;
+        return Ok(ProcessOutcome {
+            archives: archives.len(),
+            segments: out.stat(0),
+            observations: out.stat(1),
+            batches: out.stat(2),
+            pjrt_seconds: out.stat(3) as f64 * 1e-9,
+            trace: out.trace,
+        });
+    }
 
     let segments = AtomicU64::new(0);
     let observations = AtomicU64::new(0);

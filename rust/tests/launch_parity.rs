@@ -1,0 +1,164 @@
+//! Launch-layer parity: the same scenario spec + seed must produce
+//! identical stage outputs whether its workers are threads in one process
+//! (`LaunchMode::InProcess`) or real worker subprocesses driven over the
+//! stdio protocol (`LaunchMode::Processes`) — and for pre-distributed
+//! batch modes, the identical task *assignment* too.
+//!
+//! The worker subprocesses are the real `emproc` binary's hidden `worker`
+//! subcommand; cargo exposes its path to integration tests via
+//! `CARGO_BIN_EXE_emproc`, and the launch layer picks it up through the
+//! `EMPROC_WORKER_BIN` override (tests run under the test harness binary,
+//! which has no `worker` subcommand).
+
+use emproc::datasets::DatasetKind;
+use emproc::dist::{Distribution, TaskOrder};
+use emproc::launch::LaunchMode;
+use emproc::selfsched::{AllocMode, SelfSchedConfig};
+use emproc::workflow::scenario::{run_scenario, ScenarioSpec};
+use emproc::workflow::ScenarioReport;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+fn use_real_worker_binary() {
+    // Idempotent: every test sets the same value, so parallel test
+    // threads cannot disagree.
+    std::env::set_var("EMPROC_WORKER_BIN", env!("CARGO_BIN_EXE_emproc"));
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("emproc_lpar_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn spec(alloc: AllocMode, launch: LaunchMode) -> ScenarioSpec {
+    ScenarioSpec {
+        dataset: DatasetKind::Monday,
+        alloc: [alloc; 3],
+        order: TaskOrder::FilenameSorted,
+        workers: 2,
+        days: 1,
+        max_file_bytes: 12_000,
+        registry_size: 40,
+        seed: 7,
+        launch,
+    }
+}
+
+/// Every file under `root`, as relative path -> contents.
+fn dir_map(root: &Path) -> BTreeMap<String, Vec<u8>> {
+    let mut out = BTreeMap::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let entry = entry.unwrap();
+            let path = entry.path();
+            if entry.file_type().unwrap().is_dir() {
+                stack.push(path);
+            } else {
+                let rel = path.strip_prefix(root).unwrap().to_string_lossy().into_owned();
+                out.insert(rel, std::fs::read(&path).unwrap());
+            }
+        }
+    }
+    out
+}
+
+/// Stage outputs (not timings) of two runs of the same cell must match
+/// byte for byte: organized CSVs, archive names, processed track CSVs.
+fn assert_same_outputs(a_dir: &Path, b_dir: &Path, a: &ScenarioReport, b: &ScenarioReport) {
+    assert_eq!(a.report.raw_files, b.report.raw_files);
+    assert_eq!(a.report.organize.files_written, b.report.organize.files_written);
+    assert_eq!(a.report.organize.observations, b.report.organize.observations);
+    assert_eq!(a.report.archive.archives, b.report.archive.archives);
+    assert_eq!(a.report.archive.bytes_in, b.report.archive.bytes_in);
+    assert_eq!(a.report.archive.lustre_blocks_saved, b.report.archive.lustre_blocks_saved);
+    assert_eq!(a.report.process.archives, b.report.process.archives);
+    assert_eq!(a.report.process.segments, b.report.process.segments);
+    assert_eq!(a.report.process.observations, b.report.process.observations);
+    assert_eq!(a.report.process.batches, b.report.process.batches);
+
+    // Stage 1: identical organized trees, byte for byte.
+    let org_a = dir_map(&a_dir.join("organized"));
+    let org_b = dir_map(&b_dir.join("organized"));
+    assert_eq!(org_a, org_b, "organized trees differ");
+    // Stage 2: identical archive sets (zip bytes may embed metadata, so
+    // compare the replicated-tree names; members derive from stage 1).
+    let arch_a: Vec<String> = dir_map(&a_dir.join("archived")).into_keys().collect();
+    let arch_b: Vec<String> = dir_map(&b_dir.join("archived")).into_keys().collect();
+    assert_eq!(arch_a, arch_b, "archive trees differ");
+    assert!(!arch_a.is_empty());
+    // Stage 3: identical output rows — the acceptance bar.
+    let proc_a = dir_map(&a_dir.join("processed"));
+    let proc_b = dir_map(&b_dir.join("processed"));
+    assert_eq!(proc_a, proc_b, "processed outputs differ");
+    assert!(!proc_a.is_empty());
+}
+
+#[test]
+fn batch_modes_have_identical_outputs_and_assignment_across_launches() {
+    use_real_worker_binary();
+    for (tag, dist) in [("blk", Distribution::Block), ("cyc", Distribution::Cyclic)] {
+        let dir_t = tmp(&format!("{tag}_threads"));
+        let dir_p = tmp(&format!("{tag}_procs"));
+        let a =
+            run_scenario(&spec(AllocMode::Batch(dist), LaunchMode::InProcess), &dir_t).unwrap();
+        let b =
+            run_scenario(&spec(AllocMode::Batch(dist), LaunchMode::Processes), &dir_p).unwrap();
+        assert_same_outputs(&dir_t, &dir_p, &a, &b);
+        // Pre-distributed assignment is deterministic, so the per-worker
+        // task counts must be identical launch for launch, stage by stage.
+        assert_eq!(
+            a.report.organize.trace.tasks_per_worker,
+            b.report.organize.trace.tasks_per_worker,
+            "{dist:?} stage1 assignment"
+        );
+        assert_eq!(
+            a.report.archive.trace.tasks_per_worker,
+            b.report.archive.trace.tasks_per_worker,
+            "{dist:?} stage2 assignment"
+        );
+        assert_eq!(
+            a.report.process.trace.tasks_per_worker,
+            b.report.process.trace.tasks_per_worker,
+            "{dist:?} stage3 assignment"
+        );
+        // Batch runs send zero allocation messages in both launch modes.
+        assert_eq!(a.report.organize.trace.messages_sent, 0);
+        assert_eq!(b.report.organize.trace.messages_sent, 0);
+        let _ = std::fs::remove_dir_all(&dir_t);
+        let _ = std::fs::remove_dir_all(&dir_p);
+    }
+}
+
+#[test]
+fn selfsched_has_identical_outputs_and_protocol_counts_across_launches() {
+    use_real_worker_binary();
+    let ss = AllocMode::SelfSched(SelfSchedConfig { poll_s: 0.01, ..Default::default() });
+    let dir_t = tmp("ss_threads");
+    let dir_p = tmp("ss_procs");
+    let a = run_scenario(&spec(ss, LaunchMode::InProcess), &dir_t).unwrap();
+    let b = run_scenario(&spec(ss, LaunchMode::Processes), &dir_p).unwrap();
+    assert_same_outputs(&dir_t, &dir_p, &a, &b);
+    // Self-scheduled per-worker splits are timing-dependent, but the
+    // protocol-level outcome is not: same messages (one task each at
+    // tasks_per_message=1), same task totals, same trace shape.
+    for (s1, s2, stage) in [
+        (&a.report.organize.trace, &b.report.organize.trace, "organize"),
+        (&a.report.archive.trace, &b.report.archive.trace, "archive"),
+        (&a.report.process.trace, &b.report.process.trace, "process"),
+    ] {
+        assert_eq!(s1.messages_sent, s2.messages_sent, "{stage} messages");
+        assert_eq!(
+            s1.tasks_per_worker.iter().sum::<usize>(),
+            s2.tasks_per_worker.iter().sum::<usize>(),
+            "{stage} task totals"
+        );
+        assert_eq!(s1.tasks_per_worker.len(), s2.tasks_per_worker.len(), "{stage} workers");
+    }
+    // The multi-process cell advertises itself in its label.
+    assert!(b.label.ends_with("/procs"), "{}", b.label);
+    assert!(!a.label.ends_with("/procs"), "{}", a.label);
+    let _ = std::fs::remove_dir_all(&dir_t);
+    let _ = std::fs::remove_dir_all(&dir_p);
+}

@@ -6,6 +6,7 @@
 use emproc::bench_harness::json;
 use emproc::datasets::DatasetKind;
 use emproc::dist::TaskOrder;
+use emproc::launch::LaunchMode;
 use emproc::workflow::scenario;
 use std::path::PathBuf;
 
@@ -27,10 +28,13 @@ fn matrix_runs_both_datasets_and_gates_cleanly() {
         &[DatasetKind::Monday, DatasetKind::Aerodrome],
         &scenario::default_strategies(0.01),
         &[TaskOrder::FilenameSorted],
-        2,
-        1,
-        20_000,
-        11,
+        scenario::MatrixShape {
+            workers: 2,
+            days: 1,
+            max_file_bytes: 20_000,
+            seed: 11,
+            launch: LaunchMode::InProcess,
+        },
     );
     assert_eq!(specs.len(), 6); // 2 datasets x 3 strategies x 1 order
     let reports = scenario::run_matrix(&specs, &base).unwrap();
