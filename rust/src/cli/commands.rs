@@ -17,15 +17,18 @@ COMMANDS:
   organize   stage 1: parse + organize into the 4-tier hierarchy
       --data DIR --out DIR [--workers N] [--order chrono|size|random|filename]
       [--seed N] [--alloc selfsched|block|cyclic] [--launch inprocess|processes]
+      [--max-retries N] [--run-dir DIR | --resume DIR]
   archive    stage 2: zip bottom-tier directories
       --data DIR --out DIR [--dist block|cyclic|selfsched] [--workers N]
-      [--order O] [--seed N] [--launch L]
+      [--order O] [--seed N] [--launch L] [--max-retries N]
+      [--run-dir DIR | --resume DIR]
   process    stage 3: interpolate into track segments (PJRT hot path)
       --data DIR --out DIR [--workers N] [--artifacts DIR]
       [--order O] [--seed N] [--alloc selfsched|block|cyclic] [--launch L]
+      [--max-retries N] [--run-dir DIR | --resume DIR]
   pipeline   all three stages end-to-end on a generated corpus
       --out DIR [--dataset monday|aerodrome] [--scale F] [--workers N] [--seed N]
-      [--launch L]
+      [--launch L] [--max-retries N]   (or: --resume DIR to finish a killed run)
   scenarios  the paper's strategy matrix on the real executor:
              {selfsched,block,cyclic} x {chrono,size,filename,random} over
              both mini corpora, per-stage traces to BENCH_<NAME>.json;
@@ -33,9 +36,16 @@ COMMANDS:
              (§II.C triples-mode, laptop-capped), --triples sizes workers
              from a Table I/II cell via the local planner
       --out DIR [--workers N] [--scale F] [--seed N] [--launch L]
-      [--triples CORESxNPPN] [--max-procs N]
+      [--triples CORESxNPPN] [--max-procs N] [--max-retries N]
       [--datasets monday,aerodrome] [--strategies selfsched,block,cyclic]
       [--orders chrono,size,filename,random] [--json NAME]
+      (or: --resume DIR to finish a killed matrix run)
+
+  Crash tolerance: every pipeline/scenario stage journals completed tasks
+  (fsync'd) under <run-dir>/journal/; a worker kill -9'd mid self-scheduled
+  `--launch processes` run is retried on the survivors (--max-retries,
+  default 2; batch runs fail fast — pre-assignment has no one to requeue
+  to), and a killed job is finished by rerunning with --resume DIR.
   queries    §III.B aerodrome query generation (geometry pipeline)
       --out FILE [--aerodromes N] [--seed N]
   bench <EXP|all>   regenerate a paper table/figure on the simulator

@@ -17,7 +17,11 @@
 //! Stage commands and `pipeline`/`scenarios` accept `--launch
 //! inprocess|processes`; the hidden `worker` subcommand is the subprocess
 //! side of the launch layer (see `DESIGN.md` §9) and never appears in
-//! help.
+//! help. All of them also take the recovery flags (`--max-retries N`,
+//! `--run-dir DIR` / `--resume DIR` on stages, `--resume DIR` on
+//! `pipeline`/`scenarios`) — see `DESIGN.md` §10: a self-scheduled
+//! worker death is retried on the survivors, and a killed job is
+//! finished in place from its fsync'd run journal.
 
 mod args;
 mod commands;

@@ -19,6 +19,18 @@
 //! run **error** carrying the worker's captured stderr, never a silently
 //! truncated `Ok` trace. A `result err` from any worker aborts the run
 //! first-error style, exactly like the in-process executor.
+//!
+//! Crash *tolerance* sits on top of that discipline (see
+//! [`crate::recovery`]): with [`RunOptions::max_retries`] > 0, a
+//! self-scheduled worker that dies **mid-run** has its outstanding grant
+//! requeued onto the surviving workers (via [`Manager::requeue`]), up to
+//! `max_retries` attempts per task — exhausting them, or losing every
+//! worker, fails the run with *all* the dead workers' stderr attached.
+//! Batch (block/cyclic) runs still fail fast: the work was pre-assigned,
+//! so there is no one to requeue a dead worker's queue to. Deaths during
+//! init (before `ready`) also fail fast — an init failure is systematic,
+//! not a node loss. Every completed grant can be journaled through
+//! [`RunOptions::journal`] for `--resume`.
 
 pub mod protocol;
 pub mod worker;
@@ -26,6 +38,7 @@ pub mod worker;
 pub use worker::worker_loop;
 
 use crate::dist::distribute;
+use crate::recovery::{JournalEvent, JournalWriter};
 use crate::sched::{Manager, WorkerLog};
 use crate::selfsched::{AllocMode, SchedTrace};
 use crate::triples::TriplesConfig;
@@ -33,7 +46,7 @@ use anyhow::{bail, Context, Result};
 use protocol::{accumulate_stats, WorkerMsg};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::path::PathBuf;
-use std::process::{Child as OsChild, ChildStdin, Command, Stdio};
+use std::process::{Child as OsChild, ChildStdin, Command, ExitStatus, Stdio};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -133,6 +146,19 @@ impl LaunchOutcome {
     }
 }
 
+/// Per-run recovery knobs for [`run_processes`].
+#[derive(Debug, Default)]
+pub struct RunOptions<'a> {
+    /// Grant-level retries per task when a self-scheduled worker dies
+    /// mid-run (0 = the strict PR-4 behavior: any death fails the run).
+    /// Batch runs ignore this and always fail fast.
+    pub max_retries: u32,
+    /// Journal to append one [`JournalEvent::Ok`] per completed grant
+    /// (and one [`JournalEvent::Retry`] per requeued task) to, fsync'd —
+    /// the durable state `--resume` replays.
+    pub journal: Option<&'a mut JournalWriter>,
+}
+
 /// How long workers get to print `ready` (stage init — e.g. model
 /// compilation — happens before it and is not counted as task time).
 const READY_TIMEOUT: Duration = Duration::from_secs(120);
@@ -157,6 +183,40 @@ struct WorkerProc {
     stderr_thread: Option<std::thread::JoinHandle<()>>,
     /// Final `trace` line received.
     traced: bool,
+    /// Exit status, once the worker has been reaped (mid-run deaths are
+    /// reaped immediately so their stderr can be captured for the retry
+    /// accounting).
+    reaped: Option<ExitStatus>,
+}
+
+impl WorkerProc {
+    /// Reap the process (idempotent) and finish the stderr capture;
+    /// returns the captured stderr (`"<empty>"` when there was none).
+    fn reap(&mut self) -> String {
+        if self.reaped.is_none() {
+            self.reaped = self.proc.wait().ok();
+        }
+        if let Some(h) = self.stderr_thread.take() {
+            let _ = h.join();
+        }
+        let text = self.stderr_buf.lock().expect("stderr buffer lock").trim().to_string();
+        if text.is_empty() {
+            "<empty>".to_string()
+        } else {
+            text
+        }
+    }
+}
+
+/// Render every recovered death's stderr for a retries-exhausted error —
+/// each failed attempt corresponds to one dead worker, so this is "all
+/// attempts' stderr".
+fn render_deaths(deaths: &[(usize, String)]) -> String {
+    let mut s = String::from("attempt stderr:");
+    for (w, stderr) in deaths {
+        s.push_str(&format!(" [worker {w}: {stderr}]"));
+    }
+    s
 }
 
 /// Write one grant line to a worker; false when its stdin is gone.
@@ -175,19 +235,29 @@ fn send_grant(child: &mut WorkerProc, tasks: &[usize]) -> bool {
 /// whole queue as one grant; zero allocation messages, like
 /// [`crate::exec::run_batch`]).
 ///
+/// `ntasks` is the size of the stage's full task list (what workers
+/// enumerate and `ready` is checked against); `ordered` may be a subset
+/// of it when a resumed run skips already-journaled tasks.
+///
 /// Returns the run's [`SchedTrace`] plus the summed stage counters.
 /// Any worker failure — a reported task error, a crash or kill without
 /// the final `trace` line, a protocol violation, a task-list mismatch —
-/// fails the run with the worker's captured stderr attached.
+/// fails the run with the worker's captured stderr attached, except a
+/// mid-run self-scheduled death with [`RunOptions::max_retries`] > 0,
+/// which requeues the dead worker's grant onto the survivors instead.
 pub fn run_processes(
     ntasks: usize,
     ordered: &[usize],
     nworkers: usize,
     alloc: AllocMode,
     cmd: &WorkerCommand,
+    mut opts: RunOptions<'_>,
 ) -> Result<LaunchOutcome> {
     assert!(nworkers >= 1, "need at least one worker");
-    assert_eq!(ordered.len(), ntasks, "ordered must cover all tasks");
+    assert!(
+        ordered.len() <= ntasks,
+        "ordered may skip completed tasks but never exceed the task list"
+    );
 
     let (tx, rx) = mpsc::channel::<(usize, Event)>();
     let mut children: Vec<WorkerProc> = Vec::with_capacity(nworkers);
@@ -240,6 +310,7 @@ pub fn run_processes(
             stderr_buf,
             stderr_thread: Some(stderr_thread),
             traced: false,
+            reaped: None,
         });
     }
     drop(tx);
@@ -307,6 +378,17 @@ pub fn run_processes(
     let mut stats: Vec<u64> = Vec::new();
     // Tasks the manager accounted per worker (checked against `trace`).
     let mut accounted = vec![0usize; nworkers];
+    // Workers still attached; mid-run deaths flip this off when retry is
+    // enabled instead of failing the run.
+    let mut alive = vec![true; nworkers];
+    // Mid-run deaths recovered from so far: (worker, captured stderr).
+    let mut deaths: Vec<(usize, String)> = Vec::new();
+    // Per-task attempt counts (index = task id). Only *delivered* grants
+    // count: a grant whose send failed because its worker was already
+    // dying was never attempted, so it must not burn a retry.
+    let mut attempts = vec![0u32; ntasks];
+    // Whether worker w's current flight was actually delivered to it.
+    let mut delivered = vec![true; nworkers];
     let mut trace: Option<SchedTrace> = None;
     if failure.is_none() {
         let job_start = Instant::now();
@@ -317,7 +399,12 @@ pub fn run_processes(
                 for w in 0..nworkers {
                     let now = job_start.elapsed().as_secs_f64();
                     let Some(msg) = mgr.grant(w, now) else { break };
-                    if !send_grant(&mut children[w], &msg) {
+                    delivered[w] = send_grant(&mut children[w], &msg);
+                    if !delivered[w] {
+                        if opts.max_retries > 0 {
+                            // Dying worker: its Eof event requeues this.
+                            continue;
+                        }
                         failure = Some((w, "hung up before receiving initial work".into()));
                         mgr.abort();
                         break;
@@ -328,6 +415,12 @@ pub fn run_processes(
                     match rx.recv_timeout(Duration::from_secs_f64(ss.poll_s.max(1e-3))) {
                         Ok((w, Event::Msg(WorkerMsg::Ok { stats: s }))) => {
                             let now = job_start.elapsed().as_secs_f64();
+                            let flight = if opts.journal.is_some() {
+                                mgr.flight_tasks(w)
+                            } else {
+                                Vec::new()
+                            };
+                            let granted_at = mgr.granted_at(w);
                             let n = mgr.complete(w, now);
                             if n == 0 {
                                 failure =
@@ -336,11 +429,30 @@ pub fn run_processes(
                             }
                             accounted[w] += n;
                             accumulate_stats(&mut stats, &s);
+                            if let Some(j) = opts.journal.as_mut() {
+                                let attempt =
+                                    flight.iter().map(|&t| attempts[t]).max().unwrap_or(0);
+                                let ev = JournalEvent::Ok {
+                                    attempt,
+                                    worker: w,
+                                    busy_us: ((now - granted_at).max(0.0) * 1e6) as u64,
+                                    tasks: flight,
+                                    stats: s,
+                                };
+                                if let Err(e) = j.append(&ev) {
+                                    failure =
+                                        Some((w, format!("journal append failed: {e:#}")));
+                                    continue;
+                                }
+                            }
                             if let Some(msg) = mgr.grant(w, now) {
-                                if !send_grant(&mut children[w], &msg) {
+                                delivered[w] = send_grant(&mut children[w], &msg);
+                                if !delivered[w] && opts.max_retries == 0 {
                                     failure = Some((w, "hung up before receiving work".into()));
                                     mgr.abort();
                                 }
+                                // With retries, the worker's Eof requeues
+                                // the unsendable grant.
                             }
                         }
                         Ok((w, Event::Msg(WorkerMsg::Err { message }))) => {
@@ -359,8 +471,87 @@ pub fn run_processes(
                             failure = Some((w, format!("sent an unparseable line {line:?}")));
                         }
                         Ok((w, Event::Eof)) => {
-                            if !children[w].traced {
-                                failure = Some((w, "exited without a final trace line".into()));
+                            if children[w].traced {
+                                // Sealed and gone mid-run: already failed
+                                // above when the trace arrived.
+                            } else if opts.max_retries == 0 {
+                                failure =
+                                    Some((w, "exited without a final trace line".into()));
+                            } else {
+                                // Mid-run death with retry enabled: take
+                                // the worker out of the pool, requeue its
+                                // outstanding grant, and re-fan-out.
+                                // Eof can also mean an unreadable stdout
+                                // on a still-live process, so close its
+                                // stdin and kill before reaping — wait()
+                                // on a live worker would hang the run.
+                                alive[w] = false;
+                                children[w].stdin = None;
+                                let _ = children[w].proc.kill();
+                                deaths.push((w, children[w].reap()));
+                                // A grant the dying worker never received
+                                // was never attempted — requeue it without
+                                // burning a retry (or a journal record).
+                                let was_attempted = delivered[w];
+                                let requeued = mgr.requeue(w);
+                                for &t in &requeued {
+                                    if !was_attempted {
+                                        continue;
+                                    }
+                                    attempts[t] += 1;
+                                    if let Some(j) = opts.journal.as_mut() {
+                                        let ev = JournalEvent::Retry {
+                                            attempt: attempts[t],
+                                            tasks: vec![t],
+                                        };
+                                        if let Err(e) = j.append(&ev) {
+                                            failure = Some((
+                                                w,
+                                                format!("journal append failed: {e:#}"),
+                                            ));
+                                            break;
+                                        }
+                                    }
+                                    if attempts[t] > opts.max_retries {
+                                        failure = Some((
+                                            w,
+                                            format!(
+                                                "task {t} lost to {} worker death(s), \
+                                                 exhausting --max-retries {}; {}",
+                                                attempts[t],
+                                                opts.max_retries,
+                                                render_deaths(&deaths)
+                                            ),
+                                        ));
+                                        break;
+                                    }
+                                }
+                                if failure.is_some() {
+                                    continue;
+                                }
+                                // Survivors that are idle pick the
+                                // requeued work up immediately.
+                                for w2 in 0..nworkers {
+                                    if !alive[w2] {
+                                        continue;
+                                    }
+                                    let now = job_start.elapsed().as_secs_f64();
+                                    if let Some(msg) = mgr.grant(w2, now) {
+                                        // A failed send is another dying
+                                        // worker; its own Eof requeues.
+                                        delivered[w2] = send_grant(&mut children[w2], &msg);
+                                    }
+                                }
+                                if mgr.outstanding() == 0 && mgr.remaining() > 0 {
+                                    failure = Some((
+                                        w,
+                                        format!(
+                                            "no surviving workers for {} unfinished task(s); {}",
+                                            mgr.remaining(),
+                                            render_deaths(&deaths)
+                                        ),
+                                    ));
+                                }
                             }
                         }
                         Err(mpsc::RecvTimeoutError::Timeout) => {} // next poll
@@ -398,6 +589,9 @@ pub fn run_processes(
                     }
                     pending += 1;
                 }
+                // Batch deaths fail fast regardless of `max_retries`: the
+                // queues were pre-assigned, so a dead worker's queue has
+                // no one to be requeued to (the §II.D asymmetry).
                 while failure.is_none() && pending > 0 {
                     match rx.recv() {
                         Ok((w, Event::Msg(WorkerMsg::Ok { stats: s }))) => {
@@ -406,6 +600,19 @@ pub fn run_processes(
                             accounted[w] += qlen[w];
                             accumulate_stats(&mut stats, &s);
                             pending -= 1;
+                            if let Some(j) = opts.journal.as_mut() {
+                                let ev = JournalEvent::Ok {
+                                    attempt: 0,
+                                    worker: w,
+                                    busy_us: ((now - starts[w]).max(0.0) * 1e6) as u64,
+                                    tasks: queues[w].clone(),
+                                    stats: s,
+                                };
+                                if let Err(e) = j.append(&ev) {
+                                    failure =
+                                        Some((w, format!("journal append failed: {e:#}")));
+                                }
+                            }
                         }
                         Ok((w, Event::Msg(WorkerMsg::Err { message }))) => {
                             failure = Some((w, format!("task failed: {message}")));
@@ -438,18 +645,38 @@ pub fn run_processes(
         }
     }
 
-    // Phase 3: shutdown — close stdins, collect every worker's `trace`
-    // seal and check it against the manager's own accounting.
+    // Phase 3: shutdown — close stdins, collect every *surviving*
+    // worker's `trace` seal and check it against the manager's own
+    // accounting (recovered mid-run deaths have no seal to give; their
+    // unacknowledged work was requeued and accounted elsewhere).
     for c in &mut children {
         c.stdin = None;
     }
+    // With retries on a self-scheduled run, a worker that dies *after*
+    // its last acknowledgment but before its seal is the same node loss
+    // phase 2 tolerates — all its work was acked and nothing is
+    // outstanding to requeue — so losing only the seal must not throw
+    // the finished run away. (Strict mode and batch runs keep the seal
+    // mandatory.)
+    let tolerate_seal_loss =
+        opts.max_retries > 0 && matches!(alloc, AllocMode::SelfSched(_));
     if failure.is_none() {
         let deadline = Instant::now() + TRACE_TIMEOUT;
-        while failure.is_none() && children.iter().any(|c| !c.traced) {
+        loop {
+            if failure.is_some() {
+                break;
+            }
+            let unsealed = children
+                .iter()
+                .enumerate()
+                .find_map(|(w, c)| (alive[w] && !c.traced).then_some(w));
+            let Some(first_unsealed) = unsealed else { break };
             let now = Instant::now();
             if now >= deadline {
-                let w = children.iter().position(|c| !c.traced).unwrap_or(0);
-                failure = Some((w, format!("no final trace line within {TRACE_TIMEOUT:?}")));
+                failure = Some((
+                    first_unsealed,
+                    format!("no final trace line within {TRACE_TIMEOUT:?}"),
+                ));
                 break;
             }
             match rx.recv_timeout(deadline - now) {
@@ -468,7 +695,14 @@ pub fn run_processes(
                 }
                 Ok((w, Event::Eof)) => {
                     if !children[w].traced {
-                        failure = Some((w, "exited without a final trace line".into()));
+                        if tolerate_seal_loss {
+                            // Post-completion node loss: everything the
+                            // worker did was acked, nothing is left to
+                            // requeue — only the seal is gone.
+                            alive[w] = false;
+                        } else {
+                            failure = Some((w, "exited without a final trace line".into()));
+                        }
                     }
                 }
                 Ok((w, Event::Msg(_))) => {
@@ -479,7 +713,11 @@ pub fn run_processes(
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    if let Some(w) = children.iter().position(|c| !c.traced) {
+                    let w = children
+                        .iter()
+                        .enumerate()
+                        .find_map(|(w, c)| (alive[w] && !c.traced).then_some(w));
+                    if let Some(w) = w {
                         failure = Some((w, "exited without a final trace line".into()));
                     }
                 }
@@ -488,22 +726,23 @@ pub fn run_processes(
     }
 
     // Phase 4: cleanup (always runs). Kill stragglers on failure, reap
-    // everything, join the stderr captures.
+    // everything, join the stderr captures. Recovered deaths were reaped
+    // when they happened; their (expectedly unclean) exit codes are not
+    // re-judged here.
     if failure.is_some() {
         for c in &mut children {
             let _ = c.proc.kill();
         }
     }
-    let mut statuses = Vec::with_capacity(children.len());
     for c in &mut children {
-        statuses.push(c.proc.wait());
-        if let Some(h) = c.stderr_thread.take() {
-            let _ = h.join();
-        }
+        c.reap();
     }
     if failure.is_none() {
-        for (w, st) in statuses.iter().enumerate() {
-            if let Ok(s) = st {
+        for (w, c) in children.iter().enumerate() {
+            if !alive[w] {
+                continue;
+            }
+            if let Some(s) = c.reaped {
                 if !s.success() {
                     failure = Some((w, format!("exited with {s} after completing its work")));
                     break;
@@ -561,7 +800,9 @@ mod tests {
     fn selfsched_processes_complete_and_sum_stats() {
         let n = 7;
         let ordered: Vec<usize> = (0..n).collect();
-        let out = run_processes(n, &ordered, 3, ss(2), &sh_worker(&good_script(n))).unwrap();
+        let out =
+            run_processes(n, &ordered, 3, ss(2), &sh_worker(&good_script(n)), RunOptions::default())
+                .unwrap();
         out.trace.check_invariants(n).unwrap();
         let messages = n.div_ceil(2);
         assert_eq!(out.trace.messages_sent, messages);
@@ -582,6 +823,7 @@ mod tests {
                 3,
                 AllocMode::Batch(dist),
                 &sh_worker(&good_script(n)),
+                RunOptions::default(),
             )
             .unwrap();
             out.trace.check_invariants(n).unwrap();
@@ -595,7 +837,9 @@ mod tests {
     fn more_workers_than_tasks_is_fine() {
         let n = 2;
         let ordered: Vec<usize> = (0..n).collect();
-        let out = run_processes(n, &ordered, 4, ss(1), &sh_worker(&good_script(n))).unwrap();
+        let out =
+            run_processes(n, &ordered, 4, ss(1), &sh_worker(&good_script(n)), RunOptions::default())
+                .unwrap();
         out.trace.check_invariants(n).unwrap();
         assert_eq!(out.trace.messages_sent, n);
     }
@@ -609,10 +853,221 @@ mod tests {
         let ordered: Vec<usize> = (0..n).collect();
         let script =
             format!("echo 'ready {n}'; read -r line; echo 'about to vanish' >&2; kill -9 $$");
-        let err = run_processes(n, &ordered, 2, ss(1), &sh_worker(&script)).unwrap_err();
+        let err = run_processes(n, &ordered, 2, ss(1), &sh_worker(&script), RunOptions::default())
+            .unwrap_err();
         let text = format!("{err:#}");
         assert!(text.contains("without a final trace line"), "{text}");
         assert!(text.contains("about to vanish"), "stderr must be attached: {text}");
+    }
+
+    /// One-shot killer script: dies (kill -9, before acking) the first
+    /// time it is granted task 0 — but only for the worker that wins the
+    /// `mkdir` lock, so the retried task 0 completes on a survivor.
+    fn die_once_on_task0_script(n: usize, lock_dir: &std::path::Path) -> String {
+        format!(
+            "echo 'ready {n}'; done=0; \
+             while read -r cmd rest; do \
+               [ \"$cmd\" = grant ] || continue; \
+               for t in $rest; do \
+                 if [ \"$t\" = 0 ] && mkdir {lock} 2>/dev/null; then \
+                   echo 'fault: dying on task 0' >&2; kill -9 $$; \
+                 fi; \
+               done; \
+               c=0; for t in $rest; do c=$((c+1)); done; \
+               done=$((done+c)); \
+               echo \"result ok $c\"; \
+             done; \
+             echo \"trace $done\"",
+            lock = lock_dir.display()
+        )
+    }
+
+    #[test]
+    fn dead_worker_grants_requeue_onto_survivors_and_count_once() {
+        // Tentpole: a worker killed mid-run no longer fails the run when
+        // retries are enabled — its outstanding grant is requeued onto a
+        // survivor, and the retried task appears exactly once in the
+        // final trace and stats.
+        let n = 6;
+        let ordered: Vec<usize> = (0..n).collect();
+        let lock = std::env::temp_dir()
+            .join(format!("emproc_requeue_lock_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&lock);
+        let jdir = std::env::temp_dir()
+            .join(format!("emproc_requeue_j_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&jdir);
+        let jpath = crate::recovery::journal_path(&jdir, "organize");
+        let names: Vec<String> = (0..n).map(|i| format!("t{i}")).collect();
+        let plan =
+            crate::recovery::JournalPlan::new("organize", names.iter().map(String::as_str));
+        let mut journal = JournalWriter::create(&jpath, &plan).unwrap();
+        let out = run_processes(
+            n,
+            &ordered,
+            3,
+            ss(1),
+            &sh_worker(&die_once_on_task0_script(n, &lock)),
+            RunOptions { max_retries: 2, journal: Some(&mut journal) },
+        )
+        .unwrap();
+        assert!(lock.exists(), "the scripted worker must actually have died");
+        out.trace.check_invariants(n).unwrap();
+        // No double counting: stats sum the per-grant task counts once.
+        assert_eq!(out.stat(0), n as u64);
+        // Every task is one message, plus exactly one abandoned grant.
+        assert_eq!(out.trace.messages_sent, n + 1);
+        // The journal replays: one Retry for task 0 at attempt 1, and Ok
+        // records covering every task exactly once.
+        drop(journal);
+        let events = crate::recovery::load_verified(&jpath, &plan).unwrap();
+        let retries: Vec<_> = events
+            .iter()
+            .filter(|e| matches!(e, JournalEvent::Retry { .. }))
+            .collect();
+        assert_eq!(retries.len(), 1);
+        assert_eq!(retries[0], &JournalEvent::Retry { attempt: 1, tasks: vec![0] });
+        let mut ok_tasks: Vec<usize> = events
+            .iter()
+            .filter(|e| matches!(e, JournalEvent::Ok { .. }))
+            .flat_map(|e| e.tasks().iter().copied())
+            .collect();
+        ok_tasks.sort_unstable();
+        assert_eq!(ok_tasks, (0..n).collect::<Vec<_>>());
+        let _ = std::fs::remove_dir_all(&lock);
+        let _ = std::fs::remove_dir_all(&jdir);
+    }
+
+    #[test]
+    fn exhausting_max_retries_fails_with_every_attempts_stderr() {
+        // Every worker dies when granted task 0 (no once-lock), so the
+        // task burns through max_retries=1: two deaths, then a failure
+        // that must carry BOTH dead workers' stderr.
+        let n = 4;
+        let ordered: Vec<usize> = (0..n).collect();
+        let script = format!(
+            "echo 'ready {n}'; \
+             while read -r cmd rest; do \
+               [ \"$cmd\" = grant ] || continue; \
+               for t in $rest; do \
+                 if [ \"$t\" = 0 ]; then echo \"boom from pid $$\" >&2; kill -9 $$; fi; \
+               done; \
+               echo 'result ok 1'; \
+             done; \
+             echo 'trace 0'"
+        );
+        let err = run_processes(
+            n,
+            &ordered,
+            3,
+            ss(1),
+            &sh_worker(&script),
+            RunOptions { max_retries: 1, journal: None },
+        )
+        .unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("exhausting --max-retries 1"), "{text}");
+        // Both dead workers' stderr (the final bail also re-attaches the
+        // last death's, so at least the two distinct attempts appear).
+        assert!(
+            text.matches("boom from pid").count() >= 2,
+            "both attempts' stderr must be attached: {text}"
+        );
+    }
+
+    #[test]
+    fn losing_every_worker_is_an_error_not_a_hang() {
+        let n = 4;
+        let ordered: Vec<usize> = (0..n).collect();
+        let script =
+            format!("echo 'ready {n}'; read -r line; echo 'node lost' >&2; kill -9 $$");
+        let err = run_processes(
+            n,
+            &ordered,
+            2,
+            ss(1),
+            &sh_worker(&script),
+            RunOptions { max_retries: 5, journal: None },
+        )
+        .unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("no surviving workers"), "{text}");
+        assert!(text.contains("node lost"), "{text}");
+    }
+
+    #[test]
+    fn seal_loss_after_completion_is_tolerated_only_with_retries() {
+        // A worker killed AFTER acking all its work but before its trace
+        // seal (node lost at the finish line): with retries this is the
+        // same loss phase 2 absorbs — nothing outstanding, nothing to
+        // requeue — so the finished run must not be thrown away. Strict
+        // mode keeps the seal mandatory.
+        let n = 4;
+        let ordered: Vec<usize> = (0..n).collect();
+        let script = format!(
+            "echo 'ready {n}'; \
+             while read -r cmd rest; do \
+               [ \"$cmd\" = grant ] || continue; echo 'result ok 1'; \
+             done; \
+             echo 'dying at the finish line' >&2; kill -9 $$"
+        );
+        let out = run_processes(
+            n,
+            &ordered,
+            2,
+            ss(1),
+            &sh_worker(&script),
+            RunOptions { max_retries: 1, journal: None },
+        )
+        .unwrap();
+        out.trace.check_invariants(n).unwrap();
+        assert_eq!(out.stat(0), n as u64);
+        let err = run_processes(n, &ordered, 2, ss(1), &sh_worker(&script), RunOptions::default())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("without a final trace line"), "{err:#}");
+    }
+
+    #[test]
+    fn batch_death_fails_fast_even_with_retries_enabled() {
+        // The documented asymmetry: pre-assigned queues have no one to
+        // requeue to, so batch runs keep the strict PR-4 behavior no
+        // matter what max_retries says.
+        let n = 4;
+        let ordered: Vec<usize> = (0..n).collect();
+        let script =
+            format!("echo 'ready {n}'; read -r line; echo 'batch death' >&2; kill -9 $$");
+        let err = run_processes(
+            n,
+            &ordered,
+            2,
+            AllocMode::Batch(crate::dist::Distribution::Cyclic),
+            &sh_worker(&script),
+            RunOptions { max_retries: 5, journal: None },
+        )
+        .unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("without a final trace line"), "{text}");
+        assert!(text.contains("batch death"), "{text}");
+    }
+
+    #[test]
+    fn resume_subset_runs_only_the_remaining_tasks() {
+        // A resumed stage passes the full task-list size (what workers
+        // enumerate and `ready` is checked against) with a filtered
+        // ordered subset; only the subset runs.
+        let n = 5;
+        let remaining = vec![3usize, 4];
+        let out = run_processes(
+            n,
+            &remaining,
+            2,
+            ss(1),
+            &sh_worker(&good_script(n)),
+            RunOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(out.trace.tasks_per_worker.iter().sum::<usize>(), 2);
+        assert_eq!(out.trace.messages_sent, 2);
+        assert_eq!(out.stat(0), 2);
     }
 
     #[test]
@@ -620,7 +1075,8 @@ mod tests {
         let n = 5;
         let ordered: Vec<usize> = (0..n).collect();
         let script = format!("echo 'ready {n}'; read -r line; echo 'exploding' >&2; exit 3");
-        let err = run_processes(n, &ordered, 2, ss(1), &sh_worker(&script)).unwrap_err();
+        let err = run_processes(n, &ordered, 2, ss(1), &sh_worker(&script), RunOptions::default())
+            .unwrap_err();
         let text = format!("{err:#}");
         assert!(text.contains("without a final trace line"), "{text}");
         assert!(text.contains("exploding"), "{text}");
@@ -634,7 +1090,8 @@ mod tests {
             "echo 'ready {n}'; read -r line; echo 'result err task 0: disk on fire'; \
              while read -r line; do :; done; echo 'trace 0'"
         );
-        let err = run_processes(n, &ordered, 2, ss(1), &sh_worker(&script)).unwrap_err();
+        let err = run_processes(n, &ordered, 2, ss(1), &sh_worker(&script), RunOptions::default())
+            .unwrap_err();
         let text = format!("{err:#}");
         assert!(text.contains("disk on fire"), "{text}");
     }
@@ -643,7 +1100,8 @@ mod tests {
     fn init_failure_surfaces_with_its_message() {
         let script = "echo 'result err worker init failed: no model'; echo 'trace 0'";
         let ordered: Vec<usize> = (0..4).collect();
-        let err = run_processes(4, &ordered, 2, ss(1), &sh_worker(script)).unwrap_err();
+        let err = run_processes(4, &ordered, 2, ss(1), &sh_worker(script), RunOptions::default())
+            .unwrap_err();
         let text = format!("{err:#}");
         assert!(text.contains("failed during init"), "{text}");
         assert!(text.contains("no model"), "{text}");
@@ -654,7 +1112,9 @@ mod tests {
         // Worker enumerates 3 tasks, manager has 5: stage inputs are out
         // of sync and granting blind would corrupt the run.
         let ordered: Vec<usize> = (0..5).collect();
-        let err = run_processes(5, &ordered, 2, ss(1), &sh_worker(&good_script(3))).unwrap_err();
+        let err =
+            run_processes(5, &ordered, 2, ss(1), &sh_worker(&good_script(3)), RunOptions::default())
+                .unwrap_err();
         let text = format!("{err:#}");
         assert!(text.contains("out of sync"), "{text}");
     }
@@ -672,7 +1132,8 @@ mod tests {
              done; \
              echo 'trace 0'"
         );
-        let err = run_processes(n, &ordered, 1, ss(1), &sh_worker(&script)).unwrap_err();
+        let err = run_processes(n, &ordered, 1, ss(1), &sh_worker(&script), RunOptions::default())
+            .unwrap_err();
         let text = format!("{err:#}");
         assert!(text.contains("manager accounted"), "{text}");
     }
@@ -684,7 +1145,7 @@ mod tests {
             program: PathBuf::from("/nonexistent/emproc-worker"),
             args: vec![],
         };
-        assert!(run_processes(3, &ordered, 2, ss(1), &cmd).is_err());
+        assert!(run_processes(3, &ordered, 2, ss(1), &cmd, RunOptions::default()).is_err());
     }
 
     #[test]

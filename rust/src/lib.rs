@@ -12,8 +12,9 @@
 //!   the LLSC ([`simcluster`]), a real thread-pool executor ([`exec`]), a
 //!   multi-process launch layer spawning real worker subprocesses over a
 //!   stdio protocol ([`launch`]) — all driving the same [`sched`] core —
-//!   and the three-stage processing workflow ([`workflow`]):
-//!   organize → archive → process.
+//!   a crash-tolerance layer (grant-level retry + a resumable, fsync'd
+//!   run journal, [`recovery`]), and the three-stage processing workflow
+//!   ([`workflow`]): organize → archive → process.
 //! * **L2/L1 (build-time Python)** — the stage-3 numeric hot spot (track
 //!   resampling, dynamic rates, DEM/AGL) written in JAX + Pallas, AOT-lowered
 //!   to HLO text and executed from rust via PJRT ([`runtime`]). Python never
@@ -40,6 +41,7 @@ pub mod dist;
 pub mod exec;
 pub mod launch;
 pub mod metrics;
+pub mod recovery;
 pub mod sched;
 pub mod selfsched;
 pub mod simcluster;

@@ -1,0 +1,66 @@
+//! Deliberate fault injection for the crash-tolerance tests and the CI
+//! `fault-injection` job.
+//!
+//! Armed by two environment variables, both required:
+//!
+//! * `EMPROC_FAULT_KILL=<stage>:<task-id>` — which stage task triggers
+//!   the fault. The worker subprocess that finishes running that task
+//!   dies **after doing the task's work but before acknowledging it** —
+//!   the most adversarial window: the output files exist, the manager
+//!   never hears about them, and the retry must rewrite them
+//!   byte-identically.
+//! * `EMPROC_FAULT_ONCE=<path>` — a lock file making the fault fire at
+//!   most once per harness run (atomic `create_new` across processes), so
+//!   the retried task does not re-trigger it. The file's existence
+//!   doubles as the harness's proof that a worker really died.
+//!
+//! The death is a real `kill -9` of the worker's own pid (SIGKILL cannot
+//! be caught, exactly like a node failure taking the process out), with
+//! `std::process::abort` as the fallback if no `kill` binary exists.
+//! Unset, the hook compiles to a pair of cheap env lookups that fail on
+//! the first check.
+
+/// Die (once, via the `EMPROC_FAULT_ONCE` lock) if the armed fault names
+/// this `stage` and `task`. Called by the worker subcommand after each
+/// task's work, before the result is acknowledged to the manager.
+pub fn maybe_kill(stage: &str, task: usize) {
+    let Ok(spec) = std::env::var("EMPROC_FAULT_KILL") else {
+        return;
+    };
+    let Some((want_stage, want_task)) = spec.split_once(':') else {
+        return;
+    };
+    if want_stage != stage || want_task.parse() != Ok(task) {
+        return;
+    }
+    let Ok(once) = std::env::var("EMPROC_FAULT_ONCE") else {
+        return;
+    };
+    if std::fs::OpenOptions::new().write(true).create_new(true).open(&once).is_err() {
+        return; // someone already died for this harness run
+    }
+    eprintln!("fault injection: killing this worker after {stage} task {task}");
+    let pid = std::process::id();
+    let _ = std::process::Command::new("sh")
+        .arg("-c")
+        .arg(format!("kill -9 {pid}"))
+        .status();
+    // SIGKILL is not deliverable-but-ignorable; if we are still alive the
+    // `kill` binary was missing — die the portable way.
+    std::process::abort();
+}
+
+#[cfg(test)]
+mod tests {
+    // `maybe_kill` is deliberately lethal, so only its inert paths are
+    // unit-testable; the armed path is exercised end-to-end by
+    // `tests/recovery.rs` and the CI fault-injection job.
+    use super::*;
+
+    #[test]
+    fn unarmed_hook_is_inert() {
+        // No EMPROC_FAULT_KILL in the test environment: must return.
+        std::env::remove_var("EMPROC_FAULT_KILL");
+        maybe_kill("organize", 0);
+    }
+}

@@ -1,0 +1,833 @@
+//! The recovery layer: a crash-tolerant run journal + resume/retry glue.
+//!
+//! The paper's workloads run for days over billions of observations, and
+//! its predecessor workflow paper (arXiv:2008.00861) is explicit that at
+//! that scale node and task failures are routine. PR 3/4 gave the
+//! executors strict failure *detection* — this module adds *recovery*:
+//!
+//! * [`JournalWriter`] / [`replay`] — an append-only, line-delimited
+//!   **run journal** (`journal/<stage>.emproc` per stage), fsync'd on
+//!   every append, written by both the in-process executor path and the
+//!   multi-process launch manager. A line torn by a crash mid-write is
+//!   tolerated (dropped, so its task simply re-runs); a corrupted line or
+//!   a journal that does not match the planned task list is a **hard
+//!   error** quoting the offending line.
+//! * [`StageRecovery`] — the per-stage glue: verify a resumed journal
+//!   against the stage's planned task list, skip completed tasks, and
+//!   merge the journaled completions back into one seamless
+//!   [`SchedTrace`] and stage-stat totals.
+//! * [`fault`] — the deliberate fault-injection hook CI uses to `kill -9`
+//!   exactly one worker mid-run.
+//!
+//! Retry itself (requeuing a dead worker's outstanding grants onto the
+//! surviving workers) lives in [`crate::sched::Manager::requeue`] and
+//! [`crate::launch::run_processes`]; this module owns the durable state.
+//!
+//! ## Journal format
+//!
+//! Plain ASCII lines. Every complete line ends with a lone `;` token —
+//! the completeness sentinel that makes torn writes detectable even when
+//! a prefix of the line would still parse:
+//!
+//! ```text
+//! plan <stage> <ntasks> <name-hash-hex> ;
+//! ok <attempt> <worker> <busy_us> t <task-id> ... s <stat> ... ;
+//! retry <attempt> t <task-id> ... ;
+//! ```
+//!
+//! `plan` pins the journal to one task list (count + FNV-1a hash over the
+//! ordered task names); `ok` records one completed grant with its worker,
+//! busy time and stage counters; `retry` records a dead worker's grant
+//! being requeued at its new per-task attempt count.
+
+pub mod fault;
+
+use crate::selfsched::SchedTrace;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeSet;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// The completeness sentinel closing every journal line.
+const SENTINEL: &str = ";";
+
+/// Identity of one stage's planned task list: the journal is only valid
+/// against the exact plan that wrote it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JournalPlan {
+    /// Stage name (`organize` | `archive` | `process`).
+    pub stage: String,
+    /// Total tasks in the plan (task ids are `0..ntasks`).
+    pub ntasks: usize,
+    /// FNV-1a hash over the task names in id order.
+    pub name_hash: u64,
+}
+
+impl JournalPlan {
+    /// Plan for `stage` over task names in id order.
+    pub fn new<'a>(stage: &str, names: impl IntoIterator<Item = &'a str>) -> Self {
+        // FNV-1a, with a separator byte between names so ["ab","c"] and
+        // ["a","bc"] hash differently.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut ntasks = 0usize;
+        for name in names {
+            for b in name.bytes().chain(std::iter::once(0u8)) {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+            ntasks += 1;
+        }
+        JournalPlan { stage: stage.to_string(), ntasks, name_hash: h }
+    }
+
+    fn render(&self) -> String {
+        format!("plan {} {} {:016x} {SENTINEL}", self.stage, self.ntasks, self.name_hash)
+    }
+}
+
+/// One journaled event.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JournalEvent {
+    /// One grant completed: `worker` finished `tasks` (stage counters
+    /// summed in `stats`) after `busy_us` microseconds, on attempt
+    /// `attempt` (0 = never retried).
+    Ok { attempt: u32, worker: usize, busy_us: u64, tasks: Vec<usize>, stats: Vec<u64> },
+    /// A dead worker's outstanding tasks were requeued; `attempt` is the
+    /// tasks' new attempt count.
+    Retry { attempt: u32, tasks: Vec<usize> },
+}
+
+impl JournalEvent {
+    /// Render as one journal line (no trailing newline).
+    pub fn render(&self) -> String {
+        match self {
+            JournalEvent::Ok { attempt, worker, busy_us, tasks, stats } => {
+                let mut s = format!("ok {attempt} {worker} {busy_us} t");
+                for t in tasks {
+                    s.push(' ');
+                    s.push_str(&t.to_string());
+                }
+                s.push_str(" s");
+                for v in stats {
+                    s.push(' ');
+                    s.push_str(&v.to_string());
+                }
+                s.push(' ');
+                s.push_str(SENTINEL);
+                s
+            }
+            JournalEvent::Retry { attempt, tasks } => {
+                let mut s = format!("retry {attempt} t");
+                for t in tasks {
+                    s.push(' ');
+                    s.push_str(&t.to_string());
+                }
+                s.push(' ');
+                s.push_str(SENTINEL);
+                s
+            }
+        }
+    }
+
+    /// Task ids this event names.
+    pub fn tasks(&self) -> &[usize] {
+        match self {
+            JournalEvent::Ok { tasks, .. } | JournalEvent::Retry { tasks, .. } => tasks,
+        }
+    }
+
+    fn parse(line: &str) -> Result<JournalEvent> {
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        if toks.last() != Some(&SENTINEL) {
+            bail!("missing line sentinel");
+        }
+        let body = &toks[..toks.len() - 1];
+        let num = |i: usize, what: &str| -> Result<u64> {
+            let tok = *body.get(i).with_context(|| format!("missing {what}"))?;
+            tok.parse::<u64>().with_context(|| format!("bad {what} '{tok}'"))
+        };
+        let ids = |section: &[&str]| -> Result<Vec<usize>> {
+            section
+                .iter()
+                .map(|tok| tok.parse::<usize>().with_context(|| format!("bad task id '{tok}'")))
+                .collect()
+        };
+        match body.first().copied() {
+            Some("ok") => {
+                let attempt = num(1, "attempt")? as u32;
+                let worker = num(2, "worker")? as usize;
+                let busy_us = num(3, "busy_us")?;
+                if body.get(4) != Some(&"t") {
+                    bail!("expected task marker 't'");
+                }
+                let s_at = body
+                    .iter()
+                    .position(|&tok| tok == "s")
+                    .context("missing stats marker 's'")?;
+                let tasks = ids(&body[5..s_at])?;
+                let stats = body[s_at + 1..]
+                    .iter()
+                    .map(|tok| tok.parse::<u64>().with_context(|| format!("bad stat '{tok}'")))
+                    .collect::<Result<Vec<u64>>>()?;
+                Ok(JournalEvent::Ok { attempt, worker, busy_us, tasks, stats })
+            }
+            Some("retry") => {
+                let attempt = num(1, "attempt")? as u32;
+                if body.get(2) != Some(&"t") {
+                    bail!("expected task marker 't'");
+                }
+                Ok(JournalEvent::Retry { attempt, tasks: ids(&body[3..])? })
+            }
+            other => bail!("unknown journal record {other:?}"),
+        }
+    }
+}
+
+/// The canonical journal path for one stage of a run directory.
+pub fn journal_path(run_dir: &Path, stage: &str) -> PathBuf {
+    run_dir.join("journal").join(format!("{stage}.emproc"))
+}
+
+/// Append-only journal file handle. Every append is fsync'd before it
+/// returns, so a record the manager has acted on survives a crash of the
+/// whole job.
+#[derive(Debug)]
+pub struct JournalWriter {
+    file: File,
+}
+
+impl JournalWriter {
+    /// Start a fresh journal at `path` (truncating any stale one) with
+    /// `plan` as its header line.
+    pub fn create(path: &Path, plan: &JournalPlan) -> Result<JournalWriter> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+        let file = File::create(path).with_context(|| format!("creating {}", path.display()))?;
+        let mut w = JournalWriter { file };
+        w.write_line(&plan.render())?;
+        Ok(w)
+    }
+
+    /// Reopen an existing (already verified) journal for appending,
+    /// first repairing a crash-damaged tail so the next append starts on
+    /// a fresh line: a torn final fragment (no sentinel) is cut off —
+    /// exactly the record [`replay`] drops — and a complete final record
+    /// that only lost its newline gets one. Without this, appending
+    /// after a torn line would glue two records into one permanently
+    /// unparseable line and brick every later resume.
+    pub fn append_to(path: &Path) -> Result<JournalWriter> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {} before append", path.display()))?;
+        let file = OpenOptions::new()
+            .write(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening {} for append", path.display()))?;
+        let mut w = JournalWriter { file };
+        let tail_start = text.rfind('\n').map(|i| i + 1).unwrap_or(0);
+        let tail = &text[tail_start..];
+        if !tail.is_empty() {
+            if tail.trim_end().ends_with(SENTINEL) {
+                // Complete record, newline lost mid-crash: finish the line.
+                w.file
+                    .write_all(b"\n")
+                    .and_then(|()| w.file.sync_data())
+                    .context("repairing journal tail")?;
+            } else {
+                // Torn record (replay drops it): cut it off so the next
+                // append does not fuse with the fragment.
+                w.file.set_len(tail_start as u64).context("truncating torn journal tail")?;
+            }
+        }
+        Ok(w)
+    }
+
+    /// Append one event and fsync it.
+    pub fn append(&mut self, event: &JournalEvent) -> Result<()> {
+        self.write_line(&event.render())
+    }
+
+    fn write_line(&mut self, line: &str) -> Result<()> {
+        self.file
+            .write_all(format!("{line}\n").as_bytes())
+            .and_then(|()| self.file.sync_data())
+            .context("appending to run journal")
+    }
+}
+
+/// The journal's lines with the torn tail (a crash mid-append) dropped:
+/// `split('\n')` yields a trailing `""` for a newline-terminated file, so
+/// a non-empty final fragment means the last append was cut mid-write —
+/// unless it still carries the sentinel (only the newline was lost), in
+/// which case the record was complete and is kept.
+fn complete_lines(text: &str) -> Vec<&str> {
+    let mut lines: Vec<&str> = text.split('\n').collect();
+    match lines.pop() {
+        Some("") | None => {}
+        Some(torn) => {
+            if torn.trim_end().ends_with(SENTINEL) {
+                lines.push(torn);
+            }
+        }
+    }
+    lines
+}
+
+/// True when the journal records nothing at all — a file whose only
+/// content is a torn plan line (the job died during the very first,
+/// fsync-pending append) or no content. Resuming from it is the same as
+/// resuming from no journal: run the stage in full.
+fn is_blank(text: &str) -> bool {
+    complete_lines(text).iter().all(|l| l.trim().is_empty())
+}
+
+/// Parse journal `text` into its plan and events.
+///
+/// Tolerates exactly one kind of damage: a **torn final line** — the file
+/// not ending in a newline, or its last line missing the `;` sentinel —
+/// which is what a crash mid-append leaves behind. The torn record is
+/// dropped (its task re-runs). Anything else — a garbage line, a
+/// mid-file line without its sentinel — is a hard error quoting the line.
+pub fn replay(text: &str) -> Result<(JournalPlan, Vec<JournalEvent>)> {
+    let mut it = complete_lines(text).into_iter().filter(|l| !l.trim().is_empty());
+    let plan_line = it.next().context("journal is empty (no plan line)")?;
+    let plan = parse_plan(plan_line)?;
+    let mut events = Vec::new();
+    for line in it {
+        if !line.trim_end().ends_with(SENTINEL) {
+            bail!("corrupt journal line (missing sentinel, not the final line): {line:?}");
+        }
+        let ev = JournalEvent::parse(line)
+            .with_context(|| format!("corrupt journal line {line:?}"))?;
+        for &t in ev.tasks() {
+            if t >= plan.ntasks {
+                bail!(
+                    "journal names task {t} but the plan has only {} task(s): {line:?}",
+                    plan.ntasks
+                );
+            }
+        }
+        events.push(ev);
+    }
+    Ok((plan, events))
+}
+
+fn parse_plan(line: &str) -> Result<JournalPlan> {
+    let toks: Vec<&str> = line.split_whitespace().collect();
+    match toks.as_slice() {
+        ["plan", stage, ntasks, hash, s] if *s == SENTINEL => Ok(JournalPlan {
+            stage: stage.to_string(),
+            ntasks: ntasks.parse().with_context(|| format!("bad plan count in {line:?}"))?,
+            name_hash: u64::from_str_radix(hash, 16)
+                .with_context(|| format!("bad plan hash in {line:?}"))?,
+        }),
+        _ => bail!("journal does not start with a plan line: {line:?}"),
+    }
+}
+
+/// Load + verify the journal at `path` against `expected`: the stage,
+/// task count and task-name hash must all match, and every recorded task
+/// id must be in range. Any mismatch is a hard error — resuming against
+/// the wrong plan would silently skip the wrong tasks.
+pub fn load_verified(path: &Path, expected: &JournalPlan) -> Result<Vec<JournalEvent>> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+    let (plan, events) =
+        replay(&text).with_context(|| format!("replaying {}", path.display()))?;
+    if plan != *expected {
+        bail!(
+            "journal {} was written for a different plan: journal has \
+             (stage {}, {} tasks, hash {:016x}) but this run plans \
+             (stage {}, {} tasks, hash {:016x}) — refusing to resume",
+            path.display(),
+            plan.stage,
+            plan.ntasks,
+            plan.name_hash,
+            expected.stage,
+            expected.ntasks,
+            expected.name_hash,
+        );
+    }
+    Ok(events)
+}
+
+/// Per-stage recovery knobs, threaded from the CLI / pipeline config into
+/// each stage runner.
+#[derive(Debug, Clone, Default)]
+pub struct RecoveryOptions {
+    /// Where this stage's journal lives; `None` disables journaling (and
+    /// with it resume) for bare library runs.
+    pub journal: Option<PathBuf>,
+    /// Resume: load the journal, verify it against the plan, skip
+    /// completed tasks. A missing journal file resumes from nothing (the
+    /// stage simply runs in full).
+    pub resume: bool,
+    /// Grant-level retries per task for the self-scheduled multi-process
+    /// path (see [`crate::launch::run_processes`]). Batch runs fail fast
+    /// regardless — pre-assignment has no one to requeue to.
+    pub max_retries: u32,
+}
+
+impl RecoveryOptions {
+    /// No journal, no resume, no retries — the bare-library default.
+    pub fn disabled() -> Self {
+        RecoveryOptions::default()
+    }
+
+    /// Journal under `run_dir/journal/<stage>.emproc`.
+    pub fn in_run_dir(run_dir: &Path, stage: &str, resume: bool, max_retries: u32) -> Self {
+        RecoveryOptions { journal: Some(journal_path(run_dir, stage)), resume, max_retries }
+    }
+}
+
+/// Append one in-process task completion to a stage's shared journal —
+/// the common tail of every stage's work closure: `worker` ran `task`
+/// starting at `started`, producing `stats`. A `None` journal is a
+/// no-op, so closures call this unconditionally.
+pub fn journal_task(
+    journal: &Option<std::sync::Mutex<JournalWriter>>,
+    worker: usize,
+    task: usize,
+    started: std::time::Instant,
+    stats: Vec<u64>,
+) -> Result<()> {
+    let Some(j) = journal else { return Ok(()) };
+    j.lock().expect("journal lock").append(&JournalEvent::Ok {
+        attempt: 0,
+        worker,
+        busy_us: started.elapsed().as_micros() as u64,
+        tasks: vec![task],
+        stats,
+    })
+}
+
+/// One stage's prepared recovery state: the open journal (if any), the
+/// set of already-completed tasks, and the prior run's journaled stats.
+#[derive(Debug, Default)]
+pub struct StageRecovery {
+    /// Open journal (fresh, or appending after a verified resume).
+    pub writer: Option<JournalWriter>,
+    /// Ok events loaded from a resumed journal.
+    prior: Vec<JournalEvent>,
+    /// Tasks completed by the prior run.
+    completed: BTreeSet<usize>,
+    /// Elementwise sum of the prior Ok events' stage counters, computed
+    /// once at prepare time.
+    prior_totals: Vec<u64>,
+}
+
+impl StageRecovery {
+    /// Prepare recovery for one stage run. `names` are the stage's task
+    /// names in id order (the plan identity). On resume, an existing
+    /// journal is verified against that plan (mismatch = hard error) and
+    /// its completed tasks are loaded; otherwise a fresh journal is
+    /// started (truncating any stale file from an older run).
+    pub fn prepare<'a>(
+        opts: &RecoveryOptions,
+        stage: &str,
+        names: impl IntoIterator<Item = &'a str>,
+    ) -> Result<StageRecovery> {
+        let Some(path) = &opts.journal else {
+            return Ok(StageRecovery::default());
+        };
+        let plan = JournalPlan::new(stage, names);
+        // A journal that exists but records nothing (empty file, or only
+        // a torn plan line from a job killed during its very first
+        // append) resumes the same as no journal at all: run in full.
+        let resumable = opts.resume
+            && path.exists()
+            && !std::fs::read_to_string(path).map(|t| is_blank(&t)).unwrap_or(true);
+        if resumable {
+            let prior = load_verified(path, &plan)?;
+            let completed: BTreeSet<usize> = prior
+                .iter()
+                .filter(|e| matches!(e, JournalEvent::Ok { .. }))
+                .flat_map(|e| e.tasks().iter().copied())
+                .collect();
+            let mut prior_totals: Vec<u64> = Vec::new();
+            for e in &prior {
+                if let JournalEvent::Ok { stats, .. } = e {
+                    if prior_totals.len() < stats.len() {
+                        prior_totals.resize(stats.len(), 0);
+                    }
+                    for (a, v) in prior_totals.iter_mut().zip(stats) {
+                        *a += v;
+                    }
+                }
+            }
+            let writer = JournalWriter::append_to(path)?;
+            Ok(StageRecovery { writer: Some(writer), prior, completed, prior_totals })
+        } else {
+            let writer = JournalWriter::create(path, &plan)?;
+            Ok(StageRecovery { writer: Some(writer), ..StageRecovery::default() })
+        }
+    }
+
+    /// Tasks completed by the prior run (empty unless resuming).
+    pub fn completed(&self) -> &BTreeSet<usize> {
+        &self.completed
+    }
+
+    /// `ordered` minus the already-completed tasks.
+    pub fn filter_ordered(&self, ordered: &[usize]) -> Vec<usize> {
+        ordered.iter().copied().filter(|t| !self.completed.contains(t)).collect()
+    }
+
+    /// Elementwise sum of the prior run's journaled stage counters
+    /// (computed once at prepare time).
+    pub fn prior_stats(&self) -> &[u64] {
+        &self.prior_totals
+    }
+
+    /// Stat `i` of [`StageRecovery::prior_stats`] (0 when absent).
+    pub fn prior_stat(&self, i: usize) -> u64 {
+        self.prior_totals.get(i).copied().unwrap_or(0)
+    }
+
+    /// Fold the prior run's journaled completions into `trace` so a
+    /// resumed stage reports one seamless [`SchedTrace`] covering every
+    /// task. Journaled grants contribute their worker's task counts and
+    /// busy time (busy stands in for span — the interrupted run's idle
+    /// gaps are not replayed); `messages_sent` counts only the resumed
+    /// run's live messages, and `job_time` grows just enough to keep the
+    /// slowest merged worker inside it.
+    pub fn merge_trace(&self, trace: SchedTrace) -> SchedTrace {
+        if self.prior.is_empty() {
+            return trace;
+        }
+        let mut t = trace;
+        for e in &self.prior {
+            let JournalEvent::Ok { worker, busy_us, tasks, .. } = e else {
+                continue;
+            };
+            if t.tasks_per_worker.len() <= *worker {
+                t.tasks_per_worker.resize(worker + 1, 0);
+                t.worker_busy.resize(worker + 1, 0.0);
+                t.worker_times.resize(worker + 1, 0.0);
+            }
+            t.tasks_per_worker[*worker] += tasks.len();
+            let busy_s = *busy_us as f64 * 1e-6;
+            t.worker_busy[*worker] += busy_s;
+            t.worker_times[*worker] += busy_s;
+        }
+        let max_worker = t.worker_times.iter().cloned().fold(0.0, f64::max);
+        t.job_time = t.job_time.max(max_worker);
+        t
+    }
+
+    /// An empty trace for `nworkers` (the all-tasks-already-done resume
+    /// short-circuit merges the journal into this).
+    pub fn empty_trace(nworkers: usize) -> SchedTrace {
+        crate::sched::WorkerLog::new(nworkers).trace(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("emproc_rec_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn plan3() -> JournalPlan {
+        JournalPlan::new("organize", ["a.csv", "b.csv", "c.csv"])
+    }
+
+    fn ev_ok(worker: usize, tasks: &[usize], stats: &[u64]) -> JournalEvent {
+        JournalEvent::Ok {
+            attempt: 0,
+            worker,
+            busy_us: 1500,
+            tasks: tasks.to_vec(),
+            stats: stats.to_vec(),
+        }
+    }
+
+    #[test]
+    fn plan_hash_depends_on_names_and_boundaries() {
+        let a = JournalPlan::new("organize", ["ab", "c"]);
+        let b = JournalPlan::new("organize", ["a", "bc"]);
+        assert_eq!(a.ntasks, 2);
+        assert_ne!(a.name_hash, b.name_hash, "name boundaries must matter");
+        assert_eq!(a, JournalPlan::new("organize", ["ab", "c"]));
+    }
+
+    #[test]
+    fn write_then_replay_round_trips() {
+        let dir = tmp("rt");
+        let path = journal_path(&dir, "organize");
+        let plan = plan3();
+        let events = vec![
+            ev_ok(0, &[0], &[1, 12]),
+            JournalEvent::Retry { attempt: 1, tasks: vec![1, 2] },
+            ev_ok(1, &[1, 2], &[2, 30]),
+        ];
+        let mut w = JournalWriter::create(&path, &plan).unwrap();
+        for e in &events {
+            w.append(e).unwrap();
+        }
+        drop(w);
+        let got = load_verified(&path, &plan).unwrap();
+        assert_eq!(got, events);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Satellite: replay(append(events)) == events for arbitrary event
+    /// sequences (seeded pseudo-random property test).
+    #[test]
+    fn replay_append_round_trips_for_arbitrary_event_sequences() {
+        let mut rng = Rng::new(0xEC0_7E51);
+        for case in 0..200 {
+            let ntasks = 1 + rng.below(40);
+            let names: Vec<String> = (0..ntasks).map(|i| format!("task_{i}")).collect();
+            let plan = JournalPlan::new(
+                ["organize", "archive", "process"][rng.below(3)],
+                names.iter().map(String::as_str),
+            );
+            let nev = rng.below(12);
+            let events: Vec<JournalEvent> = (0..nev)
+                .map(|_| {
+                    let k = 1 + rng.below(4.min(ntasks));
+                    let tasks: Vec<usize> = (0..k).map(|_| rng.below(ntasks)).collect();
+                    if rng.below(4) == 0 {
+                        JournalEvent::Retry { attempt: rng.below(5) as u32, tasks }
+                    } else {
+                        let stats: Vec<u64> =
+                            (0..rng.below(5)).map(|_| rng.below(1_000_000) as u64).collect();
+                        JournalEvent::Ok {
+                            attempt: rng.below(3) as u32,
+                            worker: rng.below(8),
+                            busy_us: rng.below(10_000_000) as u64,
+                            tasks,
+                            stats,
+                        }
+                    }
+                })
+                .collect();
+            let mut text = format!("{}\n", plan.render());
+            for e in &events {
+                text.push_str(&e.render());
+                text.push('\n');
+            }
+            let (got_plan, got) = replay(&text).unwrap_or_else(|e| panic!("case {case}: {e:#}"));
+            assert_eq!(got_plan, plan, "case {case}");
+            assert_eq!(got, events, "case {case}");
+        }
+    }
+
+    #[test]
+    fn torn_final_line_is_dropped_and_its_task_reruns() {
+        let plan = plan3();
+        let whole = ev_ok(0, &[0], &[1, 10]);
+        // The second append was cut mid-write: no sentinel, no newline.
+        let text = format!("{}\n{}\nok 0 1 900 t 1 s 5", plan.render(), whole.render());
+        let (_, events) = replay(&text).unwrap();
+        assert_eq!(events, vec![whole], "torn record must be dropped");
+
+        // Via StageRecovery: the torn task (1) is NOT completed, so it
+        // stays in the filtered order and re-runs.
+        let dir = tmp("torn");
+        let path = journal_path(&dir, "organize");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &text).unwrap();
+        let opts = RecoveryOptions { journal: Some(path), resume: true, max_retries: 0 };
+        let rec =
+            StageRecovery::prepare(&opts, "organize", ["a.csv", "b.csv", "c.csv"]).unwrap();
+        assert_eq!(rec.filter_ordered(&[0, 1, 2]), vec![1, 2]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_append_after_a_torn_tail_does_not_glue_records() {
+        // Crash-after-crash: a journal with a torn final line is resumed
+        // and appended to, the resumed run is interrupted again, and the
+        // NEXT resume must still replay cleanly — the torn fragment must
+        // not fuse with the first new append into one unparseable line.
+        let dir = tmp("glue");
+        let path = journal_path(&dir, "organize");
+        let plan = plan3();
+        let whole = ev_ok(0, &[0], &[1, 10]);
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        // Torn mid-append: no sentinel, no newline.
+        std::fs::write(
+            &path,
+            format!("{}\n{}\nok 0 1 900 t 1 s 5", plan.render(), whole.render()),
+        )
+        .unwrap();
+        let mut w = JournalWriter::append_to(&path).unwrap();
+        let second = ev_ok(1, &[1], &[2, 20]);
+        w.append(&second).unwrap();
+        drop(w);
+        let events = load_verified(&path, &plan).unwrap();
+        assert_eq!(events, vec![whole.clone(), second.clone()]);
+
+        // The sibling damage — a complete record that only lost its
+        // newline — must keep the record AND not glue either.
+        std::fs::write(&path, format!("{}\n{}", plan.render(), whole.render())).unwrap();
+        let mut w = JournalWriter::append_to(&path).unwrap();
+        w.append(&second).unwrap();
+        drop(w);
+        let events = load_verified(&path, &plan).unwrap();
+        assert_eq!(events, vec![whole, second]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_newline_only_keeps_the_complete_record() {
+        // The crash can also land between the sentinel and the newline;
+        // the record itself is complete and must be kept.
+        let plan = plan3();
+        let ev = ev_ok(0, &[2], &[]);
+        let text = format!("{}\n{}", plan.render(), ev.render());
+        let (_, events) = replay(&text).unwrap();
+        assert_eq!(events, vec![ev]);
+    }
+
+    #[test]
+    fn garbage_line_is_a_hard_error_quoting_the_line() {
+        let plan = plan3();
+        let text = format!("{}\nok 0 0 5 t 0 s 1 ;\npurr purr purr ;\n", plan.render());
+        let err = replay(&text).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("purr purr purr"), "must quote the line: {msg}");
+
+        // A mid-file line with no sentinel is damage, not a torn tail.
+        let text = format!("{}\nok 0 0 5 t 0 s 1\nok 0 0 5 t 1 s 1 ;\n", plan.render());
+        let err = replay(&text).unwrap_err();
+        assert!(format!("{err:#}").contains("missing sentinel"), "{err:#}");
+    }
+
+    #[test]
+    fn out_of_plan_task_ids_are_a_hard_error() {
+        let plan = plan3();
+        let text = format!("{}\nok 0 0 5 t 7 s 1 ;\n", plan.render());
+        let err = replay(&text).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("task 7") && msg.contains("3 task(s)"), "{msg}");
+    }
+
+    #[test]
+    fn plan_mismatch_is_a_hard_error() {
+        let dir = tmp("plan");
+        let path = journal_path(&dir, "organize");
+        let mut w = JournalWriter::create(&path, &plan3()).unwrap();
+        w.append(&ev_ok(0, &[0], &[1])).unwrap();
+        drop(w);
+        // Same count, different names -> different hash -> refuse.
+        let other = JournalPlan::new("organize", ["x.csv", "y.csv", "z.csv"]);
+        let err = load_verified(&path, &other).unwrap_err();
+        assert!(format!("{err:#}").contains("different plan"), "{err:#}");
+        // Different stage or count refuse too.
+        let err = load_verified(&path, &JournalPlan::new("archive", ["a.csv", "b.csv", "c.csv"]))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("different plan"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_or_planless_journal_is_an_error() {
+        assert!(replay("").is_err());
+        assert!(replay("ok 0 0 5 t 0 s 1 ;\n").is_err());
+    }
+
+    #[test]
+    fn resume_over_a_blank_or_torn_plan_journal_starts_fresh() {
+        // A job killed during the journal's very first append leaves an
+        // empty file or a torn plan line; resuming from it must run the
+        // stage in full, not hard-error.
+        for content in ["", "plan organize 3 00000000000"] {
+            let dir = tmp("blank");
+            let path = journal_path(&dir, "organize");
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, content).unwrap();
+            let opts =
+                RecoveryOptions { journal: Some(path.clone()), resume: true, max_retries: 0 };
+            let rec = StageRecovery::prepare(&opts, "organize", ["a.csv", "b.csv", "c.csv"])
+                .unwrap_or_else(|e| panic!("content {content:?}: {e:#}"));
+            assert!(rec.completed().is_empty(), "content {content:?}");
+            assert_eq!(rec.filter_ordered(&[0, 1, 2]), vec![0, 1, 2]);
+            // And the fresh journal is immediately usable.
+            let (_, events) = replay(&std::fs::read_to_string(&path).unwrap()).unwrap();
+            assert!(events.is_empty());
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn stage_recovery_merges_stats_and_trace() {
+        let dir = tmp("merge");
+        let path = journal_path(&dir, "process");
+        let names = ["a.zip", "b.zip", "c.zip", "d.zip"];
+        let plan = JournalPlan::new("process", names);
+        let mut w = JournalWriter::create(&path, &plan).unwrap();
+        w.append(&JournalEvent::Ok {
+            attempt: 0,
+            worker: 1,
+            busy_us: 2_000_000,
+            tasks: vec![0, 2],
+            stats: vec![4, 100],
+        })
+        .unwrap();
+        drop(w);
+        let opts = RecoveryOptions { journal: Some(path), resume: true, max_retries: 2 };
+        let rec = StageRecovery::prepare(&opts, "process", names).unwrap();
+        assert_eq!(rec.filter_ordered(&[3, 2, 1, 0]), vec![3, 1]);
+        assert_eq!(rec.prior_stats(), vec![4, 100]);
+        assert_eq!(rec.prior_stat(1), 100);
+        assert_eq!(rec.prior_stat(9), 0);
+
+        // Merge into a 1-worker live trace: worker 1 gains the journaled
+        // tasks and busy time, the totals cover all 4 tasks, and the
+        // invariants hold.
+        let live = SchedTrace {
+            job_time: 0.5,
+            worker_times: vec![0.4],
+            worker_busy: vec![0.3],
+            tasks_per_worker: vec![2],
+            messages_sent: 2,
+        };
+        let merged = rec.merge_trace(live);
+        assert_eq!(merged.tasks_per_worker, vec![2, 2]);
+        assert!((merged.worker_busy[1] - 2.0).abs() < 1e-9);
+        assert!(merged.job_time >= 2.0);
+        merged.check_invariants(4).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fresh_prepare_truncates_a_stale_journal() {
+        let dir = tmp("fresh");
+        let path = journal_path(&dir, "organize");
+        let names = ["a.csv", "b.csv", "c.csv"];
+        let plan = JournalPlan::new("organize", names);
+        let mut w = JournalWriter::create(&path, &plan).unwrap();
+        w.append(&ev_ok(0, &[0], &[1])).unwrap();
+        drop(w);
+        // resume=false: the stale journal is replaced, nothing is skipped.
+        let opts =
+            RecoveryOptions { journal: Some(path.clone()), resume: false, max_retries: 0 };
+        let rec = StageRecovery::prepare(&opts, "organize", names).unwrap();
+        assert!(rec.completed().is_empty());
+        assert_eq!(rec.filter_ordered(&[0, 1, 2]), vec![0, 1, 2]);
+        let (_, events) = replay(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert!(events.is_empty(), "stale events must be gone");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn disabled_recovery_is_a_no_op() {
+        let rec = StageRecovery::prepare(&RecoveryOptions::disabled(), "organize", []).unwrap();
+        assert!(rec.writer.is_none());
+        assert_eq!(rec.filter_ordered(&[1, 0]), vec![1, 0]);
+        let t = StageRecovery::empty_trace(2);
+        let merged = rec.merge_trace(t.clone());
+        assert_eq!(merged.tasks_per_worker, t.tasks_per_worker);
+    }
+}

@@ -115,12 +115,40 @@ impl WorkerLog {
     }
 }
 
+/// What one worker currently has in flight.
+///
+/// Cursor grants are contiguous ranges of the ordered list (kept as a
+/// range so the simulator's hot path stays allocation-free); requeued
+/// grants after a worker death carry an owned task-id list.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Flight {
+    /// Nothing in flight (the worker is idle).
+    Idle,
+    /// A contiguous *position range* into `ordered`.
+    Range(std::ops::Range<usize>),
+    /// An owned list of task ids (requeued work).
+    List(Vec<usize>),
+}
+
+impl Flight {
+    fn len(&self) -> usize {
+        match self {
+            Flight::Idle => 0,
+            Flight::Range(r) => r.len(),
+            Flight::List(v) => v.len(),
+        }
+    }
+}
+
 /// The §II.D manager state machine over an ordered task list.
 ///
 /// Drive it with [`Manager::grant`] whenever a worker is (or becomes)
 /// idle and [`Manager::complete`] / [`Manager::complete_with_busy`] when a
 /// worker reports; the core enforces the protocol invariants (packing, at
 /// most one outstanding message per worker, no grants after an abort).
+/// When a worker dies mid-run, [`Manager::requeue`] hands its in-flight
+/// tasks back to the queue so surviving workers pick them up — the
+/// manager already owns exactly the state needed to reschedule.
 #[derive(Debug)]
 pub struct Manager<'a> {
     cfg: SelfSchedConfig,
@@ -128,9 +156,11 @@ pub struct Manager<'a> {
     ordered: &'a [usize],
     /// Next unallocated position in `ordered`.
     cursor: usize,
-    /// Tasks in flight per worker (0 = idle).
-    in_flight: Vec<usize>,
-    /// Grant timestamp per worker (valid while `in_flight[w] > 0`).
+    /// What each worker has in flight.
+    flight: Vec<Flight>,
+    /// Tasks taken back from dead workers, granted before new cursor work.
+    requeued: std::collections::VecDeque<usize>,
+    /// Grant timestamp per worker (valid while work is in flight).
     granted_at: Vec<f64>,
     /// Messages granted but not yet completed.
     outstanding: usize,
@@ -147,7 +177,8 @@ impl<'a> Manager<'a> {
             cfg,
             ordered,
             cursor: 0,
-            in_flight: vec![0; nworkers],
+            flight: vec![Flight::Idle; nworkers],
+            requeued: std::collections::VecDeque::new(),
             granted_at: vec![0.0; nworkers],
             outstanding: 0,
             aborted: false,
@@ -163,7 +194,20 @@ impl<'a> Manager<'a> {
     /// Pack and grant the next message to idle worker `w` at `now_s`.
     /// Returns `None` when there is nothing (or no permission) to grant:
     /// tasks exhausted, run aborted, or `w` already has work in flight.
+    /// Requeued tasks (from [`Manager::requeue`]) are granted before new
+    /// cursor work, so recovered tasks never starve behind the queue.
     pub fn grant(&mut self, w: usize, now_s: f64) -> Option<Vec<usize>> {
+        if !self.requeued.is_empty() {
+            if self.aborted || self.flight[w] != Flight::Idle {
+                return None;
+            }
+            let k = self.cfg.tasks_per_message.max(1);
+            let take = k.min(self.requeued.len());
+            let msg: Vec<usize> = self.requeued.drain(..take).collect();
+            self.flight[w] = Flight::List(msg.clone());
+            self.record_grant(w, now_s);
+            return Some(msg);
+        }
         self.grant_range(w, now_s).map(|r| self.ordered[r].to_vec())
     }
 
@@ -172,20 +216,65 @@ impl<'a> Manager<'a> {
     /// `ordered` around (the virtual-time engine) take it as a *position
     /// range* into `ordered` instead of an owned `Vec` per message. All
     /// protocol bookkeeping (packing, in-flight, log) is identical.
+    /// Backends that never call [`Manager::requeue`] (the simulator, the
+    /// in-process executor) can use this exclusively; with requeued tasks
+    /// pending the message is no longer a range, so use [`Manager::grant`].
     pub fn grant_range(&mut self, w: usize, now_s: f64) -> Option<std::ops::Range<usize>> {
-        if self.aborted || self.cursor >= self.ordered.len() || self.in_flight[w] > 0 {
+        debug_assert!(
+            self.requeued.is_empty(),
+            "grant_range cannot serve requeued tasks; use grant()"
+        );
+        if self.aborted || self.cursor >= self.ordered.len() || self.flight[w] != Flight::Idle {
             return None;
         }
         let k = self.cfg.tasks_per_message.max(1);
         let take = k.min(self.ordered.len() - self.cursor);
         let range = self.cursor..self.cursor + take;
         self.cursor += take;
-        self.in_flight[w] = take;
+        self.flight[w] = Flight::Range(range.clone());
+        self.record_grant(w, now_s);
+        Some(range)
+    }
+
+    /// Shared grant bookkeeping.
+    fn record_grant(&mut self, w: usize, now_s: f64) {
         self.granted_at[w] = now_s;
         self.outstanding += 1;
         self.log.record_start(w, now_s);
         self.log.record_message();
-        Some(range)
+    }
+
+    /// Task ids worker `w` currently has in flight (empty when idle).
+    pub fn flight_tasks(&self, w: usize) -> Vec<usize> {
+        match &self.flight[w] {
+            Flight::Idle => Vec::new(),
+            Flight::Range(r) => self.ordered[r.clone()].to_vec(),
+            Flight::List(v) => v.clone(),
+        }
+    }
+
+    /// When worker `w` last received a grant (valid while it has work in
+    /// flight) — lets a wall-clock backend compute the grant's busy time.
+    pub fn granted_at(&self, w: usize) -> f64 {
+        self.granted_at[w]
+    }
+
+    /// Worker `w` died with work in flight: take its tasks back and queue
+    /// them for re-granting to surviving workers. Returns the requeued
+    /// task ids (empty if `w` was idle). The dead worker's grant message
+    /// stays counted (it *was* sent) but no completion is recorded, so a
+    /// retried task appears exactly once in the final trace — when it
+    /// finally completes on a survivor.
+    pub fn requeue(&mut self, w: usize) -> Vec<usize> {
+        let taken = std::mem::replace(&mut self.flight[w], Flight::Idle);
+        let tasks = match taken {
+            Flight::Idle => return Vec::new(),
+            Flight::Range(r) => self.ordered[r].to_vec(),
+            Flight::List(v) => v,
+        };
+        self.outstanding -= 1;
+        self.requeued.extend(tasks.iter().copied());
+        tasks
     }
 
     /// Worker `w` reported completion at `now_s`; busy time defaults to
@@ -201,11 +290,11 @@ impl<'a> Manager<'a> {
     /// Like [`Manager::complete`] with an explicit busy time (the
     /// virtual-time backend knows exactly when work started).
     pub fn complete_with_busy(&mut self, w: usize, now_s: f64, busy_s: f64) -> usize {
-        let ntasks = self.in_flight[w];
+        let ntasks = self.flight[w].len();
         if ntasks == 0 {
             return 0;
         }
-        self.in_flight[w] = 0;
+        self.flight[w] = Flight::Idle;
         self.outstanding -= 1;
         self.log.record_completion(w, now_s, busy_s, ntasks);
         ntasks
@@ -227,9 +316,9 @@ impl<'a> Manager<'a> {
         self.outstanding
     }
 
-    /// Tasks not yet allocated to any worker.
+    /// Tasks not yet allocated to any worker (requeued tasks included).
     pub fn remaining(&self) -> usize {
-        self.ordered.len() - self.cursor
+        self.ordered.len() - self.cursor + self.requeued.len()
     }
 
     /// The run's bookkeeping so far.
@@ -344,6 +433,63 @@ mod tests {
         assert_eq!(trace.tasks_per_worker, vec![1, 0]);
         assert_eq!(trace.worker_times[1], 0.0);
         assert_eq!(trace.worker_busy[1], 0.0);
+    }
+
+    #[test]
+    fn requeue_hands_dead_worker_tasks_to_survivors_exactly_once() {
+        let ordered: Vec<usize> = (0..6).map(|i| i * 10).collect();
+        let mut mgr = Manager::new(&ordered, 3, cfg_k(2));
+        assert_eq!(mgr.grant(0, 0.0), Some(vec![0, 10]));
+        assert_eq!(mgr.grant(1, 0.1), Some(vec![20, 30]));
+        assert_eq!(mgr.flight_tasks(1), vec![20, 30]);
+        assert_eq!(mgr.granted_at(1), 0.1);
+        // Worker 1 dies: its grant goes back to the queue.
+        assert_eq!(mgr.requeue(1), vec![20, 30]);
+        assert_eq!(mgr.outstanding(), 1);
+        assert_eq!(mgr.remaining(), 4, "requeued tasks count as remaining");
+        assert!(mgr.flight_tasks(1).is_empty());
+        // Requeued work is granted before new cursor work.
+        assert_eq!(mgr.grant(2, 0.2), Some(vec![20, 30]));
+        assert_eq!(mgr.grant(1, 0.3), Some(vec![40, 50]));
+        assert_eq!(mgr.complete(0, 1.0), 2);
+        assert_eq!(mgr.complete(2, 1.1), 2);
+        assert_eq!(mgr.complete(1, 1.2), 2);
+        let trace = mgr.into_trace(1.5);
+        // Retried tasks appear exactly once: totals cover all 6 tasks,
+        // and the dead worker's abandoned grant contributed nothing.
+        assert_eq!(trace.tasks_per_worker.iter().sum::<usize>(), 6);
+        assert_eq!(trace.tasks_per_worker, vec![2, 2, 2]);
+        // 4 messages were sent (including the abandoned one).
+        assert_eq!(trace.messages_sent, 4);
+        trace.check_invariants(6).unwrap();
+    }
+
+    #[test]
+    fn requeue_of_an_idle_worker_is_a_no_op() {
+        let ordered: Vec<usize> = (0..3).collect();
+        let mut mgr = Manager::new(&ordered, 2, cfg_k(1));
+        assert!(mgr.requeue(1).is_empty());
+        assert_eq!(mgr.outstanding(), 0);
+        assert_eq!(mgr.remaining(), 3);
+    }
+
+    #[test]
+    fn requeued_list_grants_survive_a_second_death() {
+        // A requeued (list) grant on a worker that also dies must requeue
+        // again intact — the List flight path, not just the Range one.
+        let ordered: Vec<usize> = vec![7, 8, 9];
+        let mut mgr = Manager::new(&ordered, 2, cfg_k(3));
+        assert_eq!(mgr.grant(0, 0.0), Some(vec![7, 8, 9]));
+        assert_eq!(mgr.requeue(0), vec![7, 8, 9]);
+        assert_eq!(mgr.grant(1, 0.1), Some(vec![7, 8, 9]));
+        assert_eq!(mgr.requeue(1), vec![7, 8, 9]);
+        assert_eq!(mgr.grant(0, 0.2), Some(vec![7, 8, 9]));
+        assert_eq!(mgr.complete(0, 0.5), 3);
+        assert_eq!(mgr.remaining(), 0);
+        assert_eq!(mgr.outstanding(), 0);
+        let trace = mgr.into_trace(0.6);
+        assert_eq!(trace.tasks_per_worker, vec![3, 0]);
+        trace.check_invariants(3).unwrap();
     }
 
     #[test]

@@ -4,6 +4,7 @@ use crate::cli::ArgParser;
 use crate::datasets::DatasetKind;
 use crate::dist::TaskOrder;
 use crate::launch::LaunchMode;
+use crate::recovery::RecoveryOptions;
 use crate::registry::Registry;
 use crate::selfsched::{AllocMode, SelfSchedConfig};
 use crate::util::Rng;
@@ -36,6 +37,40 @@ pub(crate) fn parse_alloc(s: &str) -> Result<AllocMode> {
 /// Parse the `--launch` flag shared by every stage/pipeline command.
 pub(crate) fn parse_launch(a: &ArgParser) -> Result<LaunchMode> {
     LaunchMode::parse(a.get_or("launch", "inprocess"))
+}
+
+/// Parse the per-stage recovery flags: `--run-dir DIR` journals the run
+/// under `DIR/journal/<stage>.emproc`, `--resume DIR` additionally skips
+/// the tasks that journal records as complete, and `--max-retries N`
+/// (default 2) bounds grant-level retries for `--launch processes`
+/// self-scheduled runs. Without a run dir there is no journal (and so
+/// nothing to resume), but retries still apply.
+pub(crate) fn parse_recovery(a: &ArgParser, stage: &str) -> Result<RecoveryOptions> {
+    let max_retries = a.get_num("max-retries", 2u32)?;
+    match (a.get("resume"), a.get("run-dir")) {
+        (Some(_), Some(_)) => bail!("pass either --run-dir or --resume, not both"),
+        (Some(d), None) => {
+            Ok(RecoveryOptions::in_run_dir(&PathBuf::from(d), stage, true, max_retries))
+        }
+        (None, Some(d)) => {
+            Ok(RecoveryOptions::in_run_dir(&PathBuf::from(d), stage, false, max_retries))
+        }
+        (None, None) => Ok(RecoveryOptions { journal: None, resume: false, max_retries }),
+    }
+}
+
+/// The run directory for `pipeline`/`scenarios`: `--out DIR` for a fresh
+/// run, or `--resume DIR` to finish an interrupted one in place (the two
+/// name the same directory, so exactly one must be given).
+fn out_or_resume(a: &ArgParser) -> Result<(PathBuf, bool)> {
+    match (a.get("resume"), a.get("out")) {
+        (Some(_), Some(_)) => {
+            bail!("--resume names the run directory itself; pass either --out or --resume")
+        }
+        (Some(d), None) => Ok((PathBuf::from(d), true)),
+        (None, Some(d)) => Ok((PathBuf::from(d), false)),
+        (None, None) => bail!("missing required flag --out (or --resume DIR)"),
+    }
 }
 
 /// Parse a comma-separated flag value through `one`.
@@ -117,6 +152,7 @@ pub fn organize(a: &ArgParser) -> Result<()> {
     let order = parse_order(a.get_or("order", "size"), seed)?;
     let alloc = parse_alloc(a.get_or("alloc", "selfsched"))?;
     let launch = parse_launch(a)?;
+    let recovery = parse_recovery(a, "organize")?;
     let registry = load_registry(&data)?;
     let outcome = crate::workflow::stage1::run_launched(
         &crate::workflow::stage1::OrganizeJob { data_dir: data, out_dir: out, year: 2019 },
@@ -125,6 +161,7 @@ pub fn organize(a: &ArgParser) -> Result<()> {
         order,
         alloc,
         launch,
+        &recovery,
     )?;
     println!(
         "organized {} files ({} obs): {}",
@@ -145,12 +182,14 @@ pub fn archive(a: &ArgParser) -> Result<()> {
     let alloc = parse_alloc(a.get_or("dist", "cyclic"))?;
     let order = parse_order(a.get_or("order", "filename"), seed)?;
     let launch = parse_launch(a)?;
+    let recovery = parse_recovery(a, "archive")?;
     let outcome = crate::workflow::stage2::run_launched(
         &crate::workflow::stage2::ArchiveJob { organized_dir: data, archive_dir: out },
         workers,
         alloc,
         order,
         launch,
+        &recovery,
     )?;
     println!(
         "archived {} dirs, {} in, {} Lustre blocks saved: {}",
@@ -177,6 +216,7 @@ pub fn process(a: &ArgParser) -> Result<()> {
         .get("artifacts")
         .map(PathBuf::from)
         .unwrap_or_else(crate::runtime::TrackModel::default_dir);
+    let recovery = parse_recovery(a, "process")?;
     let outcome = crate::workflow::stage3::run_launched(
         &crate::workflow::stage3::ProcessJob {
             archive_dir: data,
@@ -188,6 +228,7 @@ pub fn process(a: &ArgParser) -> Result<()> {
         order,
         alloc,
         launch,
+        &recovery,
     )?;
     println!(
         "processed {} archives -> {} segments ({} PJRT batches, {:.3}s in PJRT): {}",
@@ -201,9 +242,14 @@ pub fn process(a: &ArgParser) -> Result<()> {
 }
 
 /// `emproc pipeline --out DIR [--dataset monday|aerodrome] [--scale F]
-/// [--workers N] [--seed N] [--launch inprocess|processes]`
+/// [--workers N] [--seed N] [--launch inprocess|processes]
+/// [--max-retries N] [--resume DIR]`
+///
+/// `--resume DIR` finishes an interrupted run in place of `--out DIR`
+/// (pass the same remaining flags so the per-stage journals verify
+/// against the same task lists).
 pub fn pipeline(a: &ArgParser) -> Result<()> {
-    let out = PathBuf::from(a.required("out")?);
+    let (out, resume) = out_or_resume(a)?;
     let scale = a.get_num("scale", 1.0f64)?;
     let mut cfg = crate::workflow::PipelineConfig::small(out);
     cfg.dataset = DatasetKind::parse(a.get_or("dataset", "monday"))?;
@@ -211,6 +257,8 @@ pub fn pipeline(a: &ArgParser) -> Result<()> {
     cfg.workers = a.get_num("workers", cfg.workers)?;
     cfg.seed = a.get_num("seed", cfg.seed)?;
     cfg.launch = parse_launch(a)?;
+    cfg.max_retries = a.get_num("max-retries", cfg.max_retries)?;
+    cfg.resume = resume;
     cfg.process_order = TaskOrder::Random(cfg.seed);
     cfg.days = ((cfg.days as f64 * scale).ceil() as u32).max(1);
     cfg.max_file_bytes = (cfg.max_file_bytes as f64 * scale) as u64 + 1_000;
@@ -221,6 +269,7 @@ pub fn pipeline(a: &ArgParser) -> Result<()> {
 
 /// `emproc scenarios --out DIR [--workers N] [--scale F] [--seed N]
 /// [--launch inprocess|processes] [--triples CORESxNPPN] [--max-procs N]
+/// [--max-retries N] [--resume DIR]
 /// [--datasets monday,aerodrome] [--strategies selfsched,block,cyclic]
 /// [--orders chrono,size,filename,random] [--json NAME]`
 ///
@@ -234,7 +283,14 @@ pub fn pipeline(a: &ArgParser) -> Result<()> {
 /// I/II cell via [`crate::triples::TriplesConfig::plan_local`], capped at
 /// `--max-procs` (default 8) and the host's parallelism.
 pub fn scenarios(a: &ArgParser) -> Result<()> {
-    let out = PathBuf::from(a.required("out")?);
+    let (out, resume) = out_or_resume(a)?;
+    let recovery = scenario::MatrixRecovery {
+        resume,
+        max_retries: match a.get("max-retries") {
+            None => None,
+            Some(_) => Some(a.get_num("max-retries", 2u32)?),
+        },
+    };
     let seed = a.get_num("seed", 42u64)?;
     let scale = a.get_num("scale", 1.0f64)?;
     let launch = parse_launch(a)?;
@@ -292,7 +348,7 @@ pub fn scenarios(a: &ArgParser) -> Result<()> {
         launch.label(),
         out.display()
     );
-    let reports = scenario::run_matrix(&specs, &out)?;
+    let reports = scenario::run_matrix_opts(&specs, &out, recovery)?;
     for r in &reports {
         println!("{}", r.summary_line());
     }
@@ -386,6 +442,50 @@ mod tests {
         assert_eq!(kinds, vec![DatasetKind::Monday, DatasetKind::Aerodrome]);
         assert!(parse_list("monday,mars", DatasetKind::parse).is_err());
     }
+
+    fn parsed(args: &[&str]) -> ArgParser {
+        ArgParser::parse(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>(), &[]).unwrap()
+    }
+
+    #[test]
+    fn parse_recovery_wires_run_dir_resume_and_retries() {
+        // Bare: no journal, retries default to 2.
+        let r = parse_recovery(&parsed(&[]), "organize").unwrap();
+        assert!(r.journal.is_none() && !r.resume);
+        assert_eq!(r.max_retries, 2);
+        // --run-dir journals without resuming.
+        let r = parse_recovery(&parsed(&["--run-dir", "/tmp/r", "--max-retries", "5"]), "archive")
+            .unwrap();
+        assert_eq!(
+            r.journal.as_deref(),
+            Some(std::path::Path::new("/tmp/r/journal/archive.emproc"))
+        );
+        assert!(!r.resume);
+        assert_eq!(r.max_retries, 5);
+        // --resume journals AND resumes from the same run dir.
+        let r = parse_recovery(&parsed(&["--resume", "/tmp/r"]), "process").unwrap();
+        assert_eq!(
+            r.journal.as_deref(),
+            Some(std::path::Path::new("/tmp/r/journal/process.emproc"))
+        );
+        assert!(r.resume);
+        // Both at once is ambiguous.
+        assert!(parse_recovery(&parsed(&["--resume", "/a", "--run-dir", "/b"]), "x").is_err());
+    }
+
+    #[test]
+    fn out_or_resume_requires_exactly_one_of_the_two() {
+        assert_eq!(
+            out_or_resume(&parsed(&["--out", "/tmp/o"])).unwrap(),
+            (PathBuf::from("/tmp/o"), false)
+        );
+        assert_eq!(
+            out_or_resume(&parsed(&["--resume", "/tmp/o"])).unwrap(),
+            (PathBuf::from("/tmp/o"), true)
+        );
+        assert!(out_or_resume(&parsed(&[])).is_err());
+        assert!(out_or_resume(&parsed(&["--out", "/a", "--resume", "/b"])).is_err());
+    }
 }
 
 /// Hidden `emproc worker --stage <organize|archive|process> ...`: the
@@ -394,6 +494,12 @@ mod tests {
 /// never invoked by hand (hence absent from `emproc help`). Each stage
 /// enumerates its task list with the same deterministic walk the manager
 /// uses; the manager cross-checks the count via the `ready` line.
+///
+/// Every stage's work closure ends with the
+/// [`crate::recovery::fault::maybe_kill`] hook — inert unless the
+/// fault-injection environment is armed (the CI crash-tolerance matrix
+/// uses it to `kill -9` exactly one worker mid-run, after the task's
+/// work but before its acknowledgment).
 pub fn worker(a: &ArgParser) -> Result<()> {
     let stage = a.required("stage")?;
     let data = PathBuf::from(a.required("data")?);
@@ -409,6 +515,7 @@ pub fn worker(a: &ArgParser) -> Result<()> {
                 |_, ti| {
                     let (files, obs) =
                         crate::workflow::stage1::organize_file(&raw[ti].0, &registry, &out, year)?;
+                    crate::recovery::fault::maybe_kill("organize", ti);
                     Ok(vec![files as u64, obs])
                 },
             )
@@ -420,6 +527,7 @@ pub fn worker(a: &ArgParser) -> Result<()> {
                 || Ok(()),
                 |_, ti| {
                     crate::archive::zipdir::archive_dir(&plan.tasks[ti])?;
+                    crate::recovery::fault::maybe_kill("archive", ti);
                     Ok(Vec::new())
                 },
             )
@@ -450,6 +558,7 @@ pub fn worker(a: &ArgParser) -> Result<()> {
                     let (s, o, b) =
                         crate::workflow::stage3::process_archive(&archives[ti], &job, model)?;
                     let after = model.exec_stats().1;
+                    crate::recovery::fault::maybe_kill("process", ti);
                     Ok(vec![s, o, b, (after - before).as_nanos() as u64])
                 },
             )

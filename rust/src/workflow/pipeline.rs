@@ -52,6 +52,15 @@ pub struct PipelineConfig {
     /// Launch layer for every stage: worker threads in this process, or
     /// real worker subprocesses over the [`crate::launch`] protocol.
     pub launch: LaunchMode,
+    /// Grant-level retries per task when a self-scheduled worker process
+    /// dies mid-run (see [`crate::launch::RunOptions::max_retries`];
+    /// batch stages always fail fast).
+    pub max_retries: u32,
+    /// Resume an interrupted run: verify each stage's journal under
+    /// `work_dir/journal/` against that stage's planned task list, skip
+    /// its completed tasks, and merge the journaled stats back in. A
+    /// stage with no journal on disk simply runs in full.
+    pub resume: bool,
 }
 
 impl PipelineConfig {
@@ -79,7 +88,21 @@ impl PipelineConfig {
             archive_order: TaskOrder::FilenameSorted,
             process_order: TaskOrder::Random(42),
             launch: LaunchMode::InProcess,
+            max_retries: 2,
+            resume: false,
         }
+    }
+
+    /// Recovery knobs for one stage of this pipeline: the journal always
+    /// lives at `work_dir/journal/<stage>.emproc`, so any pipeline run
+    /// can be resumed with `--resume <work_dir>`.
+    pub fn recovery(&self, stage: &str) -> crate::recovery::RecoveryOptions {
+        crate::recovery::RecoveryOptions::in_run_dir(
+            &self.work_dir,
+            stage,
+            self.resume,
+            self.max_retries,
+        )
     }
 
     /// The effective raw-corpus directory.
@@ -161,6 +184,10 @@ impl Pipeline {
     }
 
     /// Run all three stages; the corpus must exist (see [`Pipeline::generate`]).
+    /// Each stage journals its completed tasks under `work_dir/journal/`
+    /// (fsync'd per task), so an interrupted run can be finished with
+    /// [`PipelineConfig::resume`] — later stages whose journals never got
+    /// written simply run in full.
     pub fn run(&self, registry: &Registry, raw_files: usize) -> Result<PipelineReport> {
         let w = &self.cfg.work_dir;
         let organize = crate::workflow::stage1::run_launched(
@@ -174,6 +201,7 @@ impl Pipeline {
             self.cfg.order,
             self.cfg.alloc[0],
             self.cfg.launch,
+            &self.cfg.recovery("organize"),
         )?;
         let archive = crate::workflow::stage2::run_launched(
             &crate::workflow::stage2::ArchiveJob {
@@ -184,6 +212,7 @@ impl Pipeline {
             self.cfg.alloc[1],
             self.cfg.archive_order,
             self.cfg.launch,
+            &self.cfg.recovery("archive"),
         )?;
         let process = crate::workflow::stage3::run_launched(
             &crate::workflow::stage3::ProcessJob {
@@ -196,6 +225,7 @@ impl Pipeline {
             self.cfg.process_order,
             self.cfg.alloc[2],
             self.cfg.launch,
+            &self.cfg.recovery("process"),
         )?;
         Ok(PipelineReport { raw_files, organize, archive, process })
     }
@@ -252,6 +282,36 @@ mod tests {
         assert!(report.organize.files_written > 0);
         assert!(report.archive.archives > 0);
         assert!(report.process.segments > 0);
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn resume_of_a_completed_run_replays_totals_from_the_journals() {
+        // Resuming a run that already finished re-runs nothing: every
+        // stage short-circuits on its journal and the merged report
+        // carries the same totals (stats from the journal, traces
+        // covering every task).
+        let tmp = std::env::temp_dir().join(format!("emproc_pipe_res_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&tmp);
+        let mut cfg = PipelineConfig::small(tmp.clone());
+        cfg.days = 1;
+        cfg.max_file_bytes = 20_000;
+        cfg.workers = 2;
+        let first = Pipeline::new(cfg.clone()).generate_and_run().unwrap();
+
+        cfg.resume = true;
+        let resumed = Pipeline::new(cfg).generate_and_run().unwrap();
+        assert_eq!(resumed.raw_files, first.raw_files);
+        assert_eq!(resumed.organize.files_written, first.organize.files_written);
+        assert_eq!(resumed.organize.observations, first.organize.observations);
+        assert_eq!(resumed.archive.archives, first.archive.archives);
+        assert_eq!(resumed.archive.bytes_in, first.archive.bytes_in);
+        assert_eq!(resumed.process.segments, first.process.segments);
+        assert_eq!(resumed.process.batches, first.process.batches);
+        // The merged traces still account for every task exactly once.
+        resumed.organize.trace.check_invariants(first.raw_files).unwrap();
+        resumed.archive.trace.check_invariants(first.archive.archives).unwrap();
+        resumed.process.trace.check_invariants(first.process.archives).unwrap();
         let _ = std::fs::remove_dir_all(&tmp);
     }
 

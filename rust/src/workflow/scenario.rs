@@ -270,12 +270,38 @@ struct Corpus {
     raw_files: usize,
 }
 
+/// Matrix-wide recovery knobs (the cells of one matrix share them, like
+/// the [`MatrixShape`] scale knobs).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MatrixRecovery {
+    /// Resume every cell from its journals under `base_dir/<cell>/journal`
+    /// (cells that already completed skip all their work; cells that
+    /// never started run in full).
+    pub resume: bool,
+    /// Override the per-cell [`crate::workflow::PipelineConfig::max_retries`]
+    /// (None keeps the pipeline default).
+    pub max_retries: Option<u32>,
+}
+
 /// Run a scenario matrix under `base_dir`: one shared corpus per dataset
 /// (`base_dir/corpus_<dataset>/raw`), then every scenario in parallel on
 /// the sweep pool (each scenario's own worker threads do the stage work,
 /// so the matrix uses the host fully even when single scenarios cannot).
 /// Results come back in `specs` order.
 pub fn run_matrix(specs: &[ScenarioSpec], base_dir: &Path) -> Result<Vec<ScenarioReport>> {
+    run_matrix_opts(specs, base_dir, MatrixRecovery::default())
+}
+
+/// [`run_matrix`] with explicit recovery knobs — the `emproc scenarios
+/// --resume <dir>` / `--max-retries N` entry point. Corpus generation is
+/// deterministic per (dataset, seed), so a resumed matrix regenerates the
+/// identical corpora and each cell's journals verify against the same
+/// per-stage task lists.
+pub fn run_matrix_opts(
+    specs: &[ScenarioSpec],
+    base_dir: &Path,
+    recovery: MatrixRecovery,
+) -> Result<Vec<ScenarioReport>> {
     // Specs sharing a dataset share its generated corpus, so they must
     // agree on every corpus-shaping knob — a mismatch would silently run
     // a cell against data its spec does not describe.
@@ -320,8 +346,12 @@ pub fn run_matrix(specs: &[ScenarioSpec], base_dir: &Path) -> Result<Vec<Scenari
         })
         .collect();
     let results: Vec<Result<ScenarioReport>> = sweep::run(&items, |(spec, corpus)| {
-        let cfg = spec
+        let mut cfg = spec
             .pipeline_config(base_dir.join(spec.dir_name()), Some(corpus.raw_dir.clone()));
+        cfg.resume = recovery.resume;
+        if let Some(m) = recovery.max_retries {
+            cfg.max_retries = m;
+        }
         run_prepared(spec, &Pipeline::new(cfg), &corpus.registry, corpus.raw_files)
     });
     results.into_iter().collect()

@@ -9,6 +9,7 @@
 
 use crate::dist::TaskOrder;
 use crate::launch::LaunchMode;
+use crate::recovery::{RecoveryOptions, StageRecovery};
 use crate::registry::Registry;
 use crate::selfsched::{AllocMode, SchedTrace};
 use crate::tracks;
@@ -104,14 +105,27 @@ pub fn run(
     order: TaskOrder,
     alloc: AllocMode,
 ) -> Result<OrganizeOutcome> {
-    run_launched(job, registry, workers, order, alloc, LaunchMode::InProcess)
+    run_launched(
+        job,
+        registry,
+        workers,
+        order,
+        alloc,
+        LaunchMode::InProcess,
+        &RecoveryOptions::disabled(),
+    )
 }
 
-/// Like [`run`], but selecting the launch layer: [`LaunchMode::InProcess`]
-/// runs worker threads, [`LaunchMode::Processes`] spawns real worker
-/// subprocesses (the `emproc worker --stage organize` side of
-/// [`crate::launch`]) that enumerate the same sorted raw-file list and
-/// report per-message `(files_written, observations)` counters.
+/// Like [`run`], but selecting the launch layer and the recovery knobs:
+/// [`LaunchMode::InProcess`] runs worker threads,
+/// [`LaunchMode::Processes`] spawns real worker subprocesses (the
+/// `emproc worker --stage organize` side of [`crate::launch`]) that
+/// enumerate the same sorted raw-file list and report per-message
+/// `(files_written, observations)` counters. With a journal configured
+/// in `rec`, every completed task is recorded (fsync'd) and a resumed
+/// run verifies the journal against this exact file list, skips the
+/// completed tasks, and folds their journaled stats and timings back
+/// into one seamless outcome.
 pub fn run_launched(
     job: &OrganizeJob,
     registry: &Registry,
@@ -119,6 +133,7 @@ pub fn run_launched(
     order: TaskOrder,
     alloc: AllocMode,
     launch: LaunchMode,
+    rec: &RecoveryOptions,
 ) -> Result<OrganizeOutcome> {
     let raw = list_raw_files(&job.data_dir)?;
     let tasks: Vec<crate::dist::Task> = raw
@@ -134,6 +149,16 @@ pub fn run_launched(
         })
         .collect();
     let ordered = crate::dist::order_tasks(&tasks, order);
+    let mut recov = StageRecovery::prepare(rec, "organize", tasks.iter().map(|t| &*t.name))?;
+    let run_ordered = recov.filter_ordered(&ordered);
+    if run_ordered.is_empty() {
+        // Everything was journaled by the interrupted run.
+        return Ok(OrganizeOutcome {
+            files_written: recov.prior_stat(0) as usize,
+            observations: recov.prior_stat(1),
+            trace: recov.merge_trace(StageRecovery::empty_trace(workers)),
+        });
+    }
     if launch == LaunchMode::Processes {
         let cmd = crate::launch::WorkerCommand::emproc(vec![
             "worker".into(),
@@ -146,33 +171,45 @@ pub fn run_launched(
             "--year".into(),
             job.year.to_string(),
         ])?;
-        let out = crate::launch::run_processes(tasks.len(), &ordered, workers, alloc, &cmd)?;
+        let out = crate::launch::run_processes(
+            tasks.len(),
+            &run_ordered,
+            workers,
+            alloc,
+            &cmd,
+            crate::launch::RunOptions {
+                max_retries: rec.max_retries,
+                journal: recov.writer.as_mut(),
+            },
+        )?;
         return Ok(OrganizeOutcome {
-            files_written: out.stat(0) as usize,
-            observations: out.stat(1),
-            trace: out.trace,
+            files_written: (out.stat(0) + recov.prior_stat(0)) as usize,
+            observations: out.stat(1) + recov.prior_stat(1),
+            trace: recov.merge_trace(out.trace),
         });
     }
     let written = std::sync::atomic::AtomicUsize::new(0);
     let observations = std::sync::atomic::AtomicU64::new(0);
-    let work = |_w: usize, ti: usize| -> Result<()> {
+    let journal = recov.writer.take().map(std::sync::Mutex::new);
+    let work = |w: usize, ti: usize| -> Result<()> {
+        let t0 = std::time::Instant::now();
         let (f, o) = organize_file(&raw[ti].0, registry, &job.out_dir, job.year)?;
         written.fetch_add(f, std::sync::atomic::Ordering::Relaxed);
         observations.fetch_add(o, std::sync::atomic::Ordering::Relaxed);
-        Ok(())
+        crate::recovery::journal_task(&journal, w, ti, t0, vec![f as u64, o])
     };
     let trace = match alloc {
         AllocMode::Batch(dist) => {
-            crate::exec::run_batch(tasks.len(), &ordered, workers, dist, work)?
+            crate::exec::run_batch(run_ordered.len(), &run_ordered, workers, dist, work)?
         }
         AllocMode::SelfSched(ss) => {
-            crate::exec::run_self_scheduled(tasks.len(), &ordered, workers, ss, work)?
+            crate::exec::run_self_scheduled(run_ordered.len(), &run_ordered, workers, ss, work)?
         }
     };
     Ok(OrganizeOutcome {
-        trace,
-        files_written: written.into_inner(),
-        observations: observations.into_inner(),
+        trace: recov.merge_trace(trace),
+        files_written: written.into_inner() + recov.prior_stat(0) as usize,
+        observations: observations.into_inner() + recov.prior_stat(1),
     })
 }
 

@@ -8,6 +8,7 @@
 use crate::archive::zipdir::{archive_dir, ArchivePlan};
 use crate::dist::{Distribution, TaskOrder};
 use crate::launch::LaunchMode;
+use crate::recovery::{RecoveryOptions, StageRecovery};
 use crate::selfsched::{AllocMode, SchedTrace};
 use anyhow::Result;
 use std::path::PathBuf;
@@ -44,20 +45,23 @@ pub fn run(
     alloc: AllocMode,
     order: TaskOrder,
 ) -> Result<ArchiveOutcome> {
-    run_launched(job, workers, alloc, order, LaunchMode::InProcess)
+    run_launched(job, workers, alloc, order, LaunchMode::InProcess, &RecoveryOptions::disabled())
 }
 
-/// Like [`run`], but selecting the launch layer: [`LaunchMode::Processes`]
-/// spawns real worker subprocesses (`emproc worker --stage archive`) that
-/// build the identical destination-sorted [`ArchivePlan`] from the shared
-/// organized tree. The Lustre accounting below is manager-side either way
-/// (it rescans the filesystem after the run).
+/// Like [`run`], but selecting the launch layer and the recovery knobs:
+/// [`LaunchMode::Processes`] spawns real worker subprocesses
+/// (`emproc worker --stage archive`) that build the identical
+/// destination-sorted [`ArchivePlan`] from the shared organized tree.
+/// With a journal in `rec`, completed zips are recorded and a resumed
+/// run re-archives only the missing ones. The Lustre accounting below is
+/// manager-side either way (it rescans the filesystem after the run).
 pub fn run_launched(
     job: &ArchiveJob,
     workers: usize,
     alloc: AllocMode,
     order: TaskOrder,
     launch: LaunchMode,
+    rec: &RecoveryOptions,
 ) -> Result<ArchiveOutcome> {
     let plan = ArchivePlan::plan(&job.organized_dir, &job.archive_dir)?;
     let n = plan.tasks.len();
@@ -77,7 +81,11 @@ pub fn run_launched(
         })
         .collect();
     let ordered = crate::dist::order_tasks(&tasks, order);
-    let trace = if launch == LaunchMode::Processes {
+    let mut recov = StageRecovery::prepare(rec, "archive", tasks.iter().map(|t| &*t.name))?;
+    let run_ordered = recov.filter_ordered(&ordered);
+    let trace = if run_ordered.is_empty() {
+        recov.merge_trace(StageRecovery::empty_trace(workers))
+    } else if launch == LaunchMode::Processes {
         let cmd = crate::launch::WorkerCommand::emproc(vec![
             "worker".into(),
             "--stage".into(),
@@ -87,18 +95,38 @@ pub fn run_launched(
             "--out".into(),
             job.archive_dir.display().to_string(),
         ])?;
-        crate::launch::run_processes(n, &ordered, workers, alloc, &cmd)?.trace
+        let out = crate::launch::run_processes(
+            n,
+            &run_ordered,
+            workers,
+            alloc,
+            &cmd,
+            crate::launch::RunOptions {
+                max_retries: rec.max_retries,
+                journal: recov.writer.as_mut(),
+            },
+        )?;
+        recov.merge_trace(out.trace)
     } else {
-        let work = |_w: usize, ti: usize| -> Result<()> {
+        let journal = recov.writer.take().map(std::sync::Mutex::new);
+        let work = |w: usize, ti: usize| -> Result<()> {
+            let t0 = std::time::Instant::now();
             archive_dir(&plan.tasks[ti])?;
-            Ok(())
+            crate::recovery::journal_task(&journal, w, ti, t0, Vec::new())
         };
-        match alloc {
-            AllocMode::Batch(dist) => crate::exec::run_batch(n, &ordered, workers, dist, work)?,
-            AllocMode::SelfSched(ss) => {
-                crate::exec::run_self_scheduled(n, &ordered, workers, ss, work)?
+        let live = match alloc {
+            AllocMode::Batch(dist) => {
+                crate::exec::run_batch(run_ordered.len(), &run_ordered, workers, dist, work)?
             }
-        }
+            AllocMode::SelfSched(ss) => crate::exec::run_self_scheduled(
+                run_ordered.len(),
+                &run_ordered,
+                workers,
+                ss,
+                work,
+            )?,
+        };
+        recov.merge_trace(live)
     };
 
     // Lustre accounting: per-member small files vs one zip per dir.

@@ -15,6 +15,7 @@
 use crate::dem::Dem;
 use crate::geometry::Rect;
 use crate::launch::LaunchMode;
+use crate::recovery::{RecoveryOptions, StageRecovery};
 use crate::runtime::{TrackBatch, TrackModel};
 use crate::selfsched::{AllocMode, SchedTrace};
 use crate::tracks::{segment_track, SegmentConfig, TrackSegment};
@@ -225,21 +226,25 @@ pub fn run(
     order: crate::dist::TaskOrder,
     alloc: AllocMode,
 ) -> Result<ProcessOutcome> {
-    run_launched(job, workers, order, alloc, LaunchMode::InProcess)
+    run_launched(job, workers, order, alloc, LaunchMode::InProcess, &RecoveryOptions::disabled())
 }
 
-/// Like [`run`], but selecting the launch layer: [`LaunchMode::Processes`]
-/// spawns real worker subprocesses (`emproc worker --stage process`), each
-/// owning its own compiled model in its own address space — the paper's
-/// actual EPPAC placement, not just a thread-affinity approximation. The
-/// segment configuration is threaded through the worker argv so both
-/// sides segment identically.
+/// Like [`run`], but selecting the launch layer and the recovery knobs:
+/// [`LaunchMode::Processes`] spawns real worker subprocesses
+/// (`emproc worker --stage process`), each owning its own compiled model
+/// in its own address space — the paper's actual EPPAC placement, not
+/// just a thread-affinity approximation. The segment configuration is
+/// threaded through the worker argv so both sides segment identically.
+/// With a journal in `rec`, completed archives are recorded (with their
+/// segment/batch/PJRT counters) and a resumed run processes only the
+/// remainder, folding the journaled counters back into the outcome.
 pub fn run_launched(
     job: &ProcessJob,
     workers: usize,
     order: crate::dist::TaskOrder,
     alloc: AllocMode,
     launch: LaunchMode,
+    rec: &RecoveryOptions,
 ) -> Result<ProcessOutcome> {
     let archives = list_archives(&job.archive_dir)?;
     let tasks: Vec<crate::dist::Task> = archives
@@ -255,6 +260,18 @@ pub fn run_launched(
         })
         .collect();
     let ordered = crate::dist::order_tasks(&tasks, order);
+    let mut recov = StageRecovery::prepare(rec, "process", tasks.iter().map(|t| &*t.name))?;
+    let run_ordered = recov.filter_ordered(&ordered);
+    if run_ordered.is_empty() {
+        return Ok(ProcessOutcome {
+            archives: archives.len(),
+            segments: recov.prior_stat(0),
+            observations: recov.prior_stat(1),
+            batches: recov.prior_stat(2),
+            pjrt_seconds: recov.prior_stat(3) as f64 * 1e-9,
+            trace: recov.merge_trace(StageRecovery::empty_trace(workers)),
+        });
+    }
     if launch == LaunchMode::Processes {
         let cmd = crate::launch::WorkerCommand::emproc(vec![
             "worker".into(),
@@ -273,14 +290,24 @@ pub fn run_launched(
             "--max-obs".into(),
             job.segment.max_obs.to_string(),
         ])?;
-        let out = crate::launch::run_processes(archives.len(), &ordered, workers, alloc, &cmd)?;
+        let out = crate::launch::run_processes(
+            archives.len(),
+            &run_ordered,
+            workers,
+            alloc,
+            &cmd,
+            crate::launch::RunOptions {
+                max_retries: rec.max_retries,
+                journal: recov.writer.as_mut(),
+            },
+        )?;
         return Ok(ProcessOutcome {
             archives: archives.len(),
-            segments: out.stat(0),
-            observations: out.stat(1),
-            batches: out.stat(2),
-            pjrt_seconds: out.stat(3) as f64 * 1e-9,
-            trace: out.trace,
+            segments: out.stat(0) + recov.prior_stat(0),
+            observations: out.stat(1) + recov.prior_stat(1),
+            batches: out.stat(2) + recov.prior_stat(2),
+            pjrt_seconds: (out.stat(3) + recov.prior_stat(3)) as f64 * 1e-9,
+            trace: recov.merge_trace(out.trace),
         });
     }
 
@@ -288,43 +315,46 @@ pub fn run_launched(
     let observations = AtomicU64::new(0);
     let batches = AtomicU64::new(0);
     let pjrt_ns = AtomicU64::new(0);
+    let journal = recov.writer.take().map(std::sync::Mutex::new);
 
     let init = |_w: usize| TrackModel::load(&job.artifact_dir);
-    let work = |model: &mut TrackModel, _w: usize, ti: usize| -> Result<()> {
+    let work = |model: &mut TrackModel, w: usize, ti: usize| -> Result<()> {
+        let t0 = std::time::Instant::now();
         let before = model.exec_stats().1;
         let (s, o, b) = process_archive(&archives[ti], job, model)?;
         let after = model.exec_stats().1;
+        let task_pjrt_ns = (after - before).as_nanos() as u64;
         segments.fetch_add(s, Ordering::Relaxed);
         observations.fetch_add(o, Ordering::Relaxed);
         batches.fetch_add(b, Ordering::Relaxed);
-        pjrt_ns.fetch_add((after - before).as_nanos() as u64, Ordering::Relaxed);
-        Ok(())
+        pjrt_ns.fetch_add(task_pjrt_ns, Ordering::Relaxed);
+        crate::recovery::journal_task(&journal, w, ti, t0, vec![s, o, b, task_pjrt_ns])
     };
     let trace = match alloc {
         AllocMode::Batch(dist) => crate::exec::run_batch_init(
-            archives.len(),
-            &ordered,
+            run_ordered.len(),
+            &run_ordered,
             workers,
             dist,
             init,
             work,
         )?,
         AllocMode::SelfSched(ss) => crate::exec::run_self_scheduled_init(
-            archives.len(),
-            &ordered,
+            run_ordered.len(),
+            &run_ordered,
             workers,
             ss,
             init,
             work,
         )?,
     };
-    let pjrt_seconds = pjrt_ns.into_inner() as f64 * 1e-9;
+    let pjrt_seconds = (pjrt_ns.into_inner() + recov.prior_stat(3)) as f64 * 1e-9;
     Ok(ProcessOutcome {
-        trace,
+        trace: recov.merge_trace(trace),
         archives: archives.len(),
-        segments: segments.into_inner(),
-        observations: observations.into_inner(),
-        batches: batches.into_inner(),
+        segments: segments.into_inner() + recov.prior_stat(0),
+        observations: observations.into_inner() + recov.prior_stat(1),
+        batches: batches.into_inner() + recov.prior_stat(2),
         pjrt_seconds,
     })
 }
