@@ -1,0 +1,583 @@
+//! The columnar track store: one packed `.ctrk` file per archive task.
+//!
+//! The zip data plane re-reads small per-track CSV members (open, scan
+//! the central directory, inflate, parse text) for every stage-3 access —
+//! the §II.B small-file problem in miniature. The columnar store packs an
+//! archive task's tracks into a single file of length-prefixed,
+//! delta-varint-compressed segments (see
+//! [`crate::tracks::codec::encode_tracks`]) closed by a footer index
+//! (member name → byte range + row count) and a magic/version trailer, so
+//! stage 3 can seek straight to any member's byte range without inflating
+//! or even touching the rest of the file. On-disk layout:
+//!
+//! ```text
+//! entry_0 .. entry_{n-1} footer trailer
+//! entry   := u32 LE payload_len || payload           (encode_tracks blob)
+//! footer  := u64 LE count || count × ( u32 LE name_len || name
+//!            || u64 LE offset || u32 LE payload_len || u64 LE rows )
+//! trailer := u64 LE footer_len || u32 LE version || b"EMCTRK01"
+//! ```
+//!
+//! `offset` points at the entry's length prefix; range reads re-check the
+//! prefix against the footer, so a truncated or overwritten segment is a
+//! hard [`ArchiveError::Corrupt`] quoting the offending byte range — as
+//! is a missing or torn footer. (mmap is unavailable offline; the
+//! "mmap-friendly" property is delivered as positioned byte-range reads
+//! over the same index an mmap consumer would use.)
+
+use super::error::ArchiveError;
+use super::zipdir::ArchiveTask;
+use crate::tracks::{decode_tracks, encode_tracks, Track};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::fs;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// Trailer magic: format name + major version in the bytes themselves.
+pub const MAGIC: &[u8; 8] = b"EMCTRK01";
+/// Format version in the trailer.
+pub const VERSION: u32 = 1;
+/// File extension of columnar archives.
+pub const EXTENSION: &str = "ctrk";
+/// Fixed trailer size: footer_len (8) + version (4) + magic (8).
+const TRAILER_LEN: u64 = 20;
+
+/// One member's slot in the footer index.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MemberEntry {
+    /// Member name (the zip data plane's member file name).
+    pub name: String,
+    /// Byte offset of the entry's length prefix.
+    pub offset: u64,
+    /// Payload length in bytes (excludes the 4-byte prefix).
+    pub len: u32,
+    /// Observation rows in the member.
+    pub rows: u64,
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Streaming writer: append members, then `finish()` to seal the footer
+/// and trailer. Dropping without `finish` leaves a file with no trailer,
+/// which the reader rejects — a torn write can never read as complete.
+pub struct ColumnarWriter {
+    file: std::io::BufWriter<fs::File>,
+    path: PathBuf,
+    entries: Vec<MemberEntry>,
+    pos: u64,
+}
+
+impl ColumnarWriter {
+    /// Create `path` (and its parent directories).
+    pub fn create(path: &Path) -> Result<ColumnarWriter> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let file = fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        Ok(ColumnarWriter {
+            file: std::io::BufWriter::new(file),
+            path: path.to_path_buf(),
+            entries: Vec::new(),
+            pos: 0,
+        })
+    }
+
+    /// Append one member (a named track set). Returns its row count.
+    pub fn append_tracks(&mut self, name: &str, tracks: &[Track]) -> Result<u64> {
+        anyhow::ensure!(
+            !self.entries.iter().any(|e| e.name == name),
+            "duplicate member '{name}' in {}",
+            self.path.display()
+        );
+        let payload = encode_tracks(tracks)
+            .with_context(|| format!("encoding member '{name}'"))?;
+        let len = u32::try_from(payload.len()).context("member payload over 4 GiB")?;
+        let rows: u64 = tracks.iter().map(|t| t.obs.len() as u64).sum();
+        self.file.write_all(&len.to_le_bytes())?;
+        self.file.write_all(&payload)?;
+        self.entries.push(MemberEntry {
+            name: name.to_string(),
+            offset: self.pos,
+            len,
+            rows,
+        });
+        self.pos += 4 + u64::from(len);
+        Ok(rows)
+    }
+
+    /// Write the footer + trailer and flush. Returns total file bytes.
+    pub fn finish(mut self) -> Result<u64> {
+        let mut footer = Vec::new();
+        put_u64(&mut footer, self.entries.len() as u64);
+        for e in &self.entries {
+            put_u32(&mut footer, u32::try_from(e.name.len()).context("member name too long")?);
+            footer.extend_from_slice(e.name.as_bytes());
+            put_u64(&mut footer, e.offset);
+            put_u32(&mut footer, e.len);
+            put_u64(&mut footer, e.rows);
+        }
+        self.file.write_all(&footer)?;
+        let mut trailer = Vec::new();
+        put_u64(&mut trailer, footer.len() as u64);
+        put_u32(&mut trailer, VERSION);
+        trailer.extend_from_slice(MAGIC);
+        self.file.write_all(&trailer)?;
+        self.file.flush()?;
+        Ok(self.pos + footer.len() as u64 + TRAILER_LEN)
+    }
+}
+
+/// Cursor over a little-endian byte slice with corruption-typed errors.
+struct FooterCursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    /// Absolute file offset of `buf[0]` (for error ranges).
+    base: u64,
+    path: &'a Path,
+}
+
+impl<'a> FooterCursor<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], ArchiveError> {
+        if self.pos + n > self.buf.len() {
+            return Err(ArchiveError::corrupt(
+                self.path,
+                self.base + self.pos as u64,
+                (self.buf.len() - self.pos) as u64,
+                format!("footer torn: {what} needs {n} byte(s)"),
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, ArchiveError> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, ArchiveError> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().expect("8 bytes")))
+    }
+}
+
+/// Footer-indexed reader. Opening parses and validates the trailer and
+/// footer once; member reads are positioned byte-range reads.
+pub struct ColumnarReader {
+    file: fs::File,
+    path: PathBuf,
+    entries: Vec<MemberEntry>,
+    index: HashMap<String, usize>,
+    /// End of the entry region (= footer start).
+    data_end: u64,
+}
+
+impl ColumnarReader {
+    /// Open and validate `path`. Every structural defect — short file,
+    /// wrong magic, unsupported version, torn footer, entry range outside
+    /// the data region — is an [`ArchiveError::Corrupt`] quoting the
+    /// offending byte range.
+    pub fn open(path: &Path) -> Result<ColumnarReader> {
+        let mut file = fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let file_len = file.metadata()?.len();
+        if file_len < TRAILER_LEN {
+            return Err(ArchiveError::corrupt(
+                path,
+                0,
+                file_len,
+                format!("file is {file_len} byte(s), shorter than the {TRAILER_LEN}-byte trailer"),
+            )
+            .into());
+        }
+        let trailer_off = file_len - TRAILER_LEN;
+        let mut trailer = [0u8; TRAILER_LEN as usize];
+        file.seek(SeekFrom::Start(trailer_off))?;
+        file.read_exact(&mut trailer)?;
+        if &trailer[12..20] != MAGIC {
+            return Err(ArchiveError::corrupt(
+                path,
+                trailer_off + 12,
+                8,
+                format!("bad magic {:?} (want {:?})", &trailer[12..20], MAGIC),
+            )
+            .into());
+        }
+        let version = u32::from_le_bytes(trailer[8..12].try_into().expect("4 bytes"));
+        if version != VERSION {
+            return Err(ArchiveError::corrupt(
+                path,
+                trailer_off + 8,
+                4,
+                format!("unsupported version {version} (want {VERSION})"),
+            )
+            .into());
+        }
+        let footer_len = u64::from_le_bytes(trailer[0..8].try_into().expect("8 bytes"));
+        if footer_len > trailer_off {
+            return Err(ArchiveError::corrupt(
+                path,
+                trailer_off,
+                8,
+                format!("footer length {footer_len} overruns the {trailer_off} bytes before the trailer"),
+            )
+            .into());
+        }
+        let data_end = trailer_off - footer_len;
+        let mut footer = vec![0u8; footer_len as usize];
+        file.seek(SeekFrom::Start(data_end))?;
+        file.read_exact(&mut footer)?;
+
+        let mut cur = FooterCursor { buf: &footer, pos: 0, base: data_end, path };
+        let count = cur.u64("entry count")?;
+        if count > footer_len {
+            return Err(ArchiveError::corrupt(
+                path,
+                data_end,
+                8,
+                format!("entry count {count} exceeds footer size {footer_len}"),
+            )
+            .into());
+        }
+        let mut entries = Vec::with_capacity(count as usize);
+        let mut index = HashMap::with_capacity(count as usize);
+        for i in 0..count {
+            let name_len = cur.u32("name length")? as usize;
+            let name_off = data_end + cur.pos as u64;
+            let name = std::str::from_utf8(cur.take(name_len, "member name")?)
+                .map_err(|_| {
+                    ArchiveError::corrupt(path, name_off, name_len as u64, "member name is not UTF-8")
+                })?
+                .to_string();
+            let offset = cur.u64("member offset")?;
+            let len = cur.u32("member length")?;
+            let rows = cur.u64("member rows")?;
+            if offset + 4 + u64::from(len) > data_end {
+                return Err(ArchiveError::corrupt(
+                    path,
+                    offset,
+                    4 + u64::from(len),
+                    format!("member '{name}' range overruns the data region (ends at {data_end})"),
+                )
+                .into());
+            }
+            if index.insert(name.clone(), i as usize).is_some() {
+                return Err(ArchiveError::corrupt(
+                    path,
+                    name_off,
+                    name_len as u64,
+                    format!("duplicate member '{name}' in footer"),
+                )
+                .into());
+            }
+            entries.push(MemberEntry { name, offset, len, rows });
+        }
+        if cur.pos != footer.len() {
+            return Err(ArchiveError::corrupt(
+                path,
+                data_end + cur.pos as u64,
+                (footer.len() - cur.pos) as u64,
+                format!("{} trailing footer byte(s) after the last entry", footer.len() - cur.pos),
+            )
+            .into());
+        }
+        Ok(ColumnarReader { file, path: path.to_path_buf(), entries, index, data_end })
+    }
+
+    /// The footer index, in on-disk (member insertion) order.
+    pub fn entries(&self) -> &[MemberEntry] {
+        &self.entries
+    }
+
+    /// Member names in on-disk order.
+    pub fn member_names(&self) -> Vec<String> {
+        self.entries.iter().map(|e| e.name.clone()).collect()
+    }
+
+    /// Total observation rows across all members (from the footer alone —
+    /// no entry bytes are touched).
+    pub fn total_rows(&self) -> u64 {
+        self.entries.iter().map(|e| e.rows).sum()
+    }
+
+    /// Range-read and decode one member by footer position.
+    pub fn read_entry(&mut self, i: usize) -> Result<Vec<Track>> {
+        let e = self.entries.get(i).with_context(|| {
+            format!("entry {i} out of range ({} members)", self.entries.len())
+        })?;
+        let (name, offset, len) = (e.name.clone(), e.offset, e.len);
+        let mut buf = vec![0u8; 4 + len as usize];
+        self.file.seek(SeekFrom::Start(offset))?;
+        self.file.read_exact(&mut buf).map_err(|err| {
+            anyhow::Error::from(ArchiveError::corrupt(
+                &self.path,
+                offset,
+                4 + u64::from(len),
+                format!("member '{name}' range unreadable: {err}"),
+            ))
+        })?;
+        let prefix = u32::from_le_bytes(buf[0..4].try_into().expect("4 bytes"));
+        if prefix != len {
+            return Err(ArchiveError::corrupt(
+                &self.path,
+                offset,
+                4,
+                format!("member '{name}' length prefix {prefix} disagrees with footer length {len} (truncated or overwritten segment)"),
+            )
+            .into());
+        }
+        decode_tracks(&buf[4..]).map_err(|err| {
+            ArchiveError::corrupt(
+                &self.path,
+                offset + 4,
+                u64::from(len),
+                format!("member '{name}' payload does not decode: {err}"),
+            )
+            .into()
+        })
+    }
+
+    /// Range-read and decode one member by name. A readable archive
+    /// without the member is [`ArchiveError::MemberNotFound`], cleanly
+    /// distinguishable from corruption.
+    pub fn read_tracks(&mut self, name: &str) -> Result<Vec<Track>> {
+        match self.index.get(name).copied() {
+            Some(i) => self.read_entry(i),
+            None => Err(ArchiveError::member_not_found(&self.path, name).into()),
+        }
+    }
+
+    /// End of the member-entry region (diagnostics, tests).
+    pub fn data_end(&self) -> u64 {
+        self.data_end
+    }
+}
+
+/// Execute one archive task in columnar form: parse every CSV file in
+/// `task.src_dir` (sorted by name, like the zip writer) and pack the
+/// tracks into `task.dst`. Returns bytes written.
+pub fn archive_dir_columnar(task: &ArchiveTask) -> Result<u64> {
+    let mut names: Vec<PathBuf> = fs::read_dir(&task.src_dir)?
+        .filter_map(|e| e.ok())
+        .filter(|e| e.file_type().map(|t| t.is_file()).unwrap_or(false))
+        .map(|e| e.path())
+        .collect();
+    names.sort();
+    let mut w = ColumnarWriter::create(&task.dst)?;
+    for path in names {
+        let name = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .context("non-utf8 file name")?
+            .to_string();
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let tracks = crate::tracks::parse_csv(&text)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        w.append_tracks(&name, &tracks)?;
+    }
+    w.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tracks::Observation;
+    use crate::util::Rng;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("emproc_ctrk_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// A representable random track: integer seconds, micro-degree
+    /// positions, deci-foot altitudes.
+    fn rand_track(rng: &mut Rng, icao: u32, n: usize) -> Track {
+        let mut t = 1_600_000_000i64 + rng.below(1000) as i64;
+        let mut lat = 40_000_000i64 + rng.below(2_000_000) as i64;
+        let mut lon = -100_000_000i64 + rng.below(2_000_000) as i64;
+        let mut alt = 30_000i64 + rng.below(10_000) as i64;
+        let obs = (0..n)
+            .map(|_| {
+                t += 1 + rng.below(30) as i64;
+                lat += rng.below(2_000) as i64 - 1_000;
+                lon += rng.below(2_000) as i64 - 1_000;
+                alt += rng.below(100) as i64 - 50;
+                Observation {
+                    t: t as f64,
+                    lat: lat as f64 / 1e6,
+                    lon: lon as f64 / 1e6,
+                    alt_ft: alt as f64 / 10.0,
+                }
+            })
+            .collect();
+        Track { icao24: icao, obs }
+    }
+
+    #[test]
+    fn pack_index_range_read_round_trips() {
+        // The tentpole property test: pack → index → range-read returns
+        // the original tracks bit-for-bit, member by member, across many
+        // random archives.
+        let dir = tmp("rt");
+        let mut rng = Rng::new(11);
+        for case in 0..20usize {
+            let path = dir.join(format!("a{case}.ctrk"));
+            let members: Vec<(String, Vec<Track>)> = (0..rng.below(6))
+                .map(|m| {
+                    let tracks: Vec<Track> = (0..1 + rng.below(3))
+                        .map(|k| rand_track(&mut rng, (case * 100 + m * 10 + k) as u32 + 1, 1 + rng.below(40)))
+                        .collect();
+                    (format!("m{m}.csv"), tracks)
+                })
+                .collect();
+            let mut w = ColumnarWriter::create(&path).unwrap();
+            for (name, tracks) in &members {
+                w.append_tracks(name, tracks).unwrap();
+            }
+            let bytes = w.finish().unwrap();
+            assert_eq!(bytes, fs::metadata(&path).unwrap().len());
+
+            let mut r = ColumnarReader::open(&path).unwrap();
+            assert_eq!(r.member_names(), members.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>());
+            for (name, tracks) in &members {
+                let got = r.read_tracks(name).unwrap();
+                assert_eq!(&got, tracks, "member {name} of case {case}");
+            }
+            let rows: u64 =
+                members.iter().flat_map(|(_, ts)| ts).map(|t| t.obs.len() as u64).sum();
+            assert_eq!(r.total_rows(), rows);
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_archive_is_valid_and_empty() {
+        let dir = tmp("empty");
+        let path = dir.join("empty.ctrk");
+        ColumnarWriter::create(&path).unwrap().finish().unwrap();
+        let mut r = ColumnarReader::open(&path).unwrap();
+        assert!(r.entries().is_empty());
+        assert_eq!(r.total_rows(), 0);
+        let err = r.read_tracks("nope.csv").unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<ArchiveError>(),
+            Some(ArchiveError::MemberNotFound { .. })
+        ));
+        // A member whose payload is an empty track set is also fine.
+        let path2 = dir.join("empty_member.ctrk");
+        let mut w = ColumnarWriter::create(&path2).unwrap();
+        assert_eq!(w.append_tracks("void.csv", &[]).unwrap(), 0);
+        w.finish().unwrap();
+        let mut r = ColumnarReader::open(&path2).unwrap();
+        assert!(r.read_tracks("void.csv").unwrap().is_empty());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// Build a small valid archive and return its path + bytes.
+    fn sample_archive(dir: &Path) -> (PathBuf, Vec<u8>) {
+        let path = dir.join("sample.ctrk");
+        let mut rng = Rng::new(7);
+        let mut w = ColumnarWriter::create(&path).unwrap();
+        w.append_tracks("a.csv", &[rand_track(&mut rng, 1, 20)]).unwrap();
+        w.append_tracks("b.csv", &[rand_track(&mut rng, 2, 30)]).unwrap();
+        w.finish().unwrap();
+        let bytes = fs::read(&path).unwrap();
+        (path, bytes)
+    }
+
+    fn expect_corrupt(path: &Path) -> ArchiveError {
+        let err = match ColumnarReader::open(path) {
+            Err(e) => e,
+            Ok(mut r) => (0..r.entries().len())
+                .find_map(|i| r.read_entry(i).err())
+                .expect("archive opened and every member read cleanly"),
+        };
+        let ae = err
+            .downcast_ref::<ArchiveError>()
+            .unwrap_or_else(|| panic!("untyped error: {err:#}"))
+            .clone();
+        assert!(ae.is_corrupt(), "{ae}");
+        ae
+    }
+
+    #[test]
+    fn wrong_magic_torn_footer_and_truncated_segment_are_hard_errors() {
+        let dir = tmp("corrupt");
+        let (path, bytes) = sample_archive(&dir);
+
+        // Wrong magic.
+        let mut b = bytes.clone();
+        let n = b.len();
+        b[n - 1] ^= 0xff;
+        fs::write(&path, &b).unwrap();
+        let e = expect_corrupt(&path);
+        assert!(e.to_string().contains("bad magic"), "{e}");
+
+        // Torn footer: drop bytes from the middle of the footer region
+        // (keep the trailer, which now points past what remains).
+        let mut b = bytes.clone();
+        b.drain(n - 40..n - 30);
+        fs::write(&path, &b).unwrap();
+        expect_corrupt(&path);
+
+        // Truncated segment: cut a member's payload short and shift
+        // everything after it (footer offsets now disagree).
+        let mut b = bytes.clone();
+        b.drain(10..14);
+        fs::write(&path, &b).unwrap();
+        expect_corrupt(&path);
+
+        // Overwritten length prefix.
+        let mut b = bytes.clone();
+        b[0] ^= 0x55;
+        fs::write(&path, &b).unwrap();
+        let e = expect_corrupt(&path);
+        assert!(e.to_string().contains("length prefix"), "{e}");
+
+        // Zeroed payload: decodes as "0 tracks" + trailing garbage — a
+        // payload-level defect surfaced as corruption quoting the range.
+        let mut b = bytes.clone();
+        let len_a = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+        for x in &mut b[4..4 + len_a] {
+            *x = 0;
+        }
+        fs::write(&path, &b).unwrap();
+        let e = expect_corrupt(&path);
+        assert!(e.to_string().contains("does not decode"), "{e}");
+
+        // Whole-file truncation below the trailer size.
+        fs::write(&path, &bytes[..10]).unwrap();
+        let e = expect_corrupt(&path);
+        assert!(e.to_string().contains("trailer"), "{e}");
+
+        // Version bump is rejected.
+        let mut b = bytes.clone();
+        b[n - 12] = 99;
+        fs::write(&path, &b).unwrap();
+        let e = expect_corrupt(&path);
+        assert!(e.to_string().contains("version"), "{e}");
+
+        // Errors quote a byte range.
+        assert!(e.to_string().contains("bytes "), "{e}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn writer_rejects_duplicate_members() {
+        let dir = tmp("dup");
+        let mut w = ColumnarWriter::create(&dir.join("d.ctrk")).unwrap();
+        w.append_tracks("same.csv", &[]).unwrap();
+        assert!(w.append_tracks("same.csv", &[]).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,103 @@
+//! Typed archive error taxonomy, shared by the zip and columnar readers.
+//!
+//! Stage 3 needs to distinguish a member that is *absent* (a planning or
+//! naming bug — the archive is fine) from an archive that is *corrupt*
+//! (torn footer, truncated segment, bad magic — the bytes are wrong).
+//! Both readers surface these as [`ArchiveError`] inside their `anyhow`
+//! results, so callers can `downcast_ref::<ArchiveError>()` to branch on
+//! the variant while plain `?` propagation keeps working.
+
+use std::path::{Path, PathBuf};
+
+/// A structured archive read failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ArchiveError {
+    /// The archive is readable but does not contain the requested member.
+    MemberNotFound {
+        /// Archive that was searched.
+        archive: PathBuf,
+        /// Member name that was requested.
+        member: String,
+    },
+    /// The archive bytes are invalid. `offset..offset+len` quotes the
+    /// offending byte range so the on-disk damage can be inspected
+    /// directly (`len == 0` marks a range that could not be read at all).
+    Corrupt {
+        /// Archive whose bytes are bad.
+        archive: PathBuf,
+        /// Start of the offending byte range.
+        offset: u64,
+        /// Length of the offending byte range.
+        len: u64,
+        /// What was wrong with those bytes.
+        detail: String,
+    },
+}
+
+impl ArchiveError {
+    /// Construct a [`ArchiveError::MemberNotFound`].
+    pub fn member_not_found(archive: &Path, member: &str) -> Self {
+        ArchiveError::MemberNotFound {
+            archive: archive.to_path_buf(),
+            member: member.to_string(),
+        }
+    }
+
+    /// Construct a [`ArchiveError::Corrupt`] quoting the offending range.
+    pub fn corrupt(archive: &Path, offset: u64, len: u64, detail: impl Into<String>) -> Self {
+        ArchiveError::Corrupt {
+            archive: archive.to_path_buf(),
+            offset,
+            len,
+            detail: detail.into(),
+        }
+    }
+
+    /// True for the corruption variant (stage 3's "bytes are bad" branch).
+    pub fn is_corrupt(&self) -> bool {
+        matches!(self, ArchiveError::Corrupt { .. })
+    }
+}
+
+impl std::fmt::Display for ArchiveError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArchiveError::MemberNotFound { archive, member } => {
+                write!(f, "member '{member}' not found in {}", archive.display())
+            }
+            ArchiveError::Corrupt { archive, offset, len, detail } => write!(
+                f,
+                "corrupt archive {}: {detail} (bytes {offset}..{})",
+                archive.display(),
+                offset + len
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ArchiveError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_quotes_member_and_range() {
+        let e = ArchiveError::member_not_found(Path::new("/a/b.zip"), "x.csv");
+        assert_eq!(e.to_string(), "member 'x.csv' not found in /a/b.zip");
+        assert!(!e.is_corrupt());
+        let e = ArchiveError::corrupt(Path::new("/a/b.ctrk"), 10, 4, "bad magic");
+        assert_eq!(e.to_string(), "corrupt archive /a/b.ctrk: bad magic (bytes 10..14)");
+        assert!(e.is_corrupt());
+    }
+
+    #[test]
+    fn downcasts_through_anyhow() {
+        let err: anyhow::Error =
+            ArchiveError::member_not_found(Path::new("a.zip"), "m.csv").into();
+        match err.downcast_ref::<ArchiveError>() {
+            Some(ArchiveError::MemberNotFound { member, .. }) => assert_eq!(member, "m.csv"),
+            other => panic!("wrong downcast: {other:?}"),
+        }
+    }
+}

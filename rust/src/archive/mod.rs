@@ -3,11 +3,73 @@
 //! The organize step creates many small per-aircraft files; on Lustre
 //! (1 MB blocks) they waste space, and thousands of concurrent processes
 //! doing random small-file I/O generate pathological network traffic. The
-//! mitigation is zip-archiving every bottom-tier directory while
-//! replicating the first three hierarchy tiers in a parallel tree.
+//! mitigation is archiving every bottom-tier directory while replicating
+//! the first three hierarchy tiers in a parallel tree — either as one zip
+//! per directory ([`zipdir`], the paper's layout) or as one packed
+//! columnar track store ([`columnar`], the byte-range data plane).
 
+pub mod columnar;
+pub mod error;
 pub mod lustre;
 pub mod zipdir;
 
+pub use columnar::{ColumnarReader, ColumnarWriter};
+pub use error::ArchiveError;
 pub use lustre::{blocks_for, lustre_bytes, LUSTRE_BLOCK};
-pub use zipdir::{archive_bottom_dirs, ArchivePlan, ArchiveTask};
+pub use zipdir::{archive_bottom_dirs, ArchivePlan, ArchiveTask, ZipReader};
+
+use anyhow::{bail, Result};
+
+/// On-disk archive format for stage-2 output (and stage-3 input).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ArchiveFormat {
+    /// One deflated zip per bottom directory (the paper's §III.A layout).
+    #[default]
+    Zip,
+    /// One packed columnar track store per bottom directory: footer-indexed
+    /// byte-range reads, no per-member inflation (see [`columnar`]).
+    Columnar,
+}
+
+impl ArchiveFormat {
+    /// CLI / scenario-label name.
+    pub fn label(self) -> &'static str {
+        match self {
+            ArchiveFormat::Zip => "zip",
+            ArchiveFormat::Columnar => "columnar",
+        }
+    }
+
+    /// Destination file extension.
+    pub fn extension(self) -> &'static str {
+        match self {
+            ArchiveFormat::Zip => "zip",
+            ArchiveFormat::Columnar => columnar::EXTENSION,
+        }
+    }
+
+    /// Parse a `--format` value.
+    pub fn parse(s: &str) -> Result<ArchiveFormat> {
+        Ok(match s {
+            "zip" => ArchiveFormat::Zip,
+            "columnar" | "ctrk" => ArchiveFormat::Columnar,
+            other => bail!("unknown archive format '{other}' (zip|columnar)"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_labels_extensions_and_parsing_agree() {
+        for f in [ArchiveFormat::Zip, ArchiveFormat::Columnar] {
+            assert_eq!(ArchiveFormat::parse(f.label()).unwrap(), f);
+        }
+        assert_eq!(ArchiveFormat::default(), ArchiveFormat::Zip);
+        assert_eq!(ArchiveFormat::Zip.extension(), "zip");
+        assert_eq!(ArchiveFormat::Columnar.extension(), "ctrk");
+        assert!(ArchiveFormat::parse("tar").is_err());
+    }
+}

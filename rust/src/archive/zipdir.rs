@@ -3,21 +3,28 @@
 //! "In a new parent directory, we replicated the first three tiers of the
 //! directory hierarchy... Then instead of creating directories based on the
 //! ICAO 24-bit addresses, we archive each directory" (§III.A). Each bottom
-//! directory becomes one `*.zip` whose entries are the directory's files —
-//! and each such archive is one stage-2 task.
+//! directory becomes one archive whose entries are the directory's files —
+//! and each such archive is one stage-2 task. The planner is shared with
+//! the columnar data plane (`--format columnar` swaps the destination
+//! extension and the per-task executor, nothing else); the zip *member*
+//! readers here surface the typed [`ArchiveError`] taxonomy so stage 3
+//! can tell a missing member from corrupt bytes.
 
+use super::error::ArchiveError;
+use super::ArchiveFormat;
 use anyhow::{Context, Result};
 use std::fs;
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
-/// One archiving task: a bottom-tier directory and its destination zip.
+/// One archiving task: a bottom-tier directory and its destination
+/// archive (`*.zip` or `*.ctrk` depending on the plan's format).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ArchiveTask {
     /// Bottom-tier source directory.
     pub src_dir: PathBuf,
-    /// Destination `.zip` (under the replicated three-tier tree).
-    pub dst_zip: PathBuf,
+    /// Destination archive (under the replicated three-tier tree).
+    pub dst: PathBuf,
     /// Total bytes of the files inside (drives scheduling cost).
     pub bytes: u64,
 }
@@ -29,10 +36,21 @@ pub struct ArchivePlan {
 }
 
 impl ArchivePlan {
+    /// [`ArchivePlan::plan_format`] for the zip layout.
+    pub fn plan(organized_root: &Path, archive_root: &Path) -> Result<Self> {
+        Self::plan_format(organized_root, archive_root, ArchiveFormat::Zip)
+    }
+
     /// Walk an organized 4-tier tree and plan one task per bottom dir,
     /// sorted by destination filename — matching LLMapReduce's task sort,
-    /// which is what correlates adjacent tasks by aircraft (§IV.B).
-    pub fn plan(organized_root: &Path, archive_root: &Path) -> Result<Self> {
+    /// which is what correlates adjacent tasks by aircraft (§IV.B). The
+    /// format only decides the destination extension, so a zip and a
+    /// columnar run of the same tree schedule identically.
+    pub fn plan_format(
+        organized_root: &Path,
+        archive_root: &Path,
+        format: ArchiveFormat,
+    ) -> Result<Self> {
         let mut tasks = Vec::new();
         let mut bottoms = Vec::new();
         find_bottom_dirs(organized_root, 0, &mut bottoms)?;
@@ -47,10 +65,10 @@ impl ArchivePlan {
                     bytes += entry.metadata()?.len();
                 }
             }
-            let dst = archive_root.join(rel).with_extension("zip");
-            tasks.push(ArchiveTask { src_dir: src, dst_zip: dst, bytes });
+            let dst = archive_root.join(rel).with_extension(format.extension());
+            tasks.push(ArchiveTask { src_dir: src, dst, bytes });
         }
-        tasks.sort_by(|a, b| a.dst_zip.cmp(&b.dst_zip));
+        tasks.sort_by(|a, b| a.dst.cmp(&b.dst));
         Ok(ArchivePlan { tasks })
     }
 }
@@ -72,37 +90,47 @@ fn find_bottom_dirs(dir: &Path, depth: usize, out: &mut Vec<PathBuf>) -> Result<
     Ok(())
 }
 
-/// Execute one archive task: zip every file in `src_dir` into `dst_zip`
-/// (deflate). Returns bytes written.
-pub fn archive_dir(task: &ArchiveTask) -> Result<u64> {
-    if let Some(parent) = task.dst_zip.parent() {
+/// Write a zip at `dst` holding `members` in the given order (deflate).
+/// Returns bytes written. (Shared by the task executor and the scaling
+/// corpus generator.)
+pub fn write_members(dst: &Path, members: &[(String, Vec<u8>)]) -> Result<u64> {
+    if let Some(parent) = dst.parent() {
         fs::create_dir_all(parent)?;
     }
-    let file = fs::File::create(&task.dst_zip)
-        .with_context(|| format!("creating {}", task.dst_zip.display()))?;
+    let file = fs::File::create(dst)
+        .with_context(|| format!("creating {}", dst.display()))?;
     let mut zip = zip::ZipWriter::new(file);
     let opts = zip::write::FileOptions::default()
         .compression_method(zip::CompressionMethod::Deflated);
+    for (name, data) in members {
+        zip.start_file(name.clone(), opts)?;
+        zip.write_all(data)?;
+    }
+    zip.finish()?;
+    Ok(fs::metadata(dst)?.len())
+}
+
+/// Execute one archive task: zip every file in `src_dir` into `task.dst`
+/// (deflate, members sorted by name). Returns bytes written.
+pub fn archive_dir(task: &ArchiveTask) -> Result<u64> {
     let mut names: Vec<PathBuf> = fs::read_dir(&task.src_dir)?
         .filter_map(|e| e.ok())
         .filter(|e| e.file_type().map(|t| t.is_file()).unwrap_or(false))
         .map(|e| e.path())
         .collect();
     names.sort();
-    let mut buf = Vec::new();
+    let mut members = Vec::with_capacity(names.len());
     for path in names {
         let name = path
             .file_name()
             .and_then(|n| n.to_str())
             .context("non-utf8 file name")?
             .to_string();
-        zip.start_file(name, opts)?;
-        buf.clear();
+        let mut buf = Vec::new();
         fs::File::open(&path)?.read_to_end(&mut buf)?;
-        zip.write_all(&buf)?;
+        members.push((name, buf));
     }
-    zip.finish()?;
-    Ok(fs::metadata(&task.dst_zip)?.len())
+    write_members(&task.dst, &members)
 }
 
 /// Plan + execute archiving serially (the parallel path goes through the
@@ -115,22 +143,65 @@ pub fn archive_bottom_dirs(organized_root: &Path, archive_root: &Path) -> Result
     Ok(plan)
 }
 
-/// Read one member file back out of an archive (used by stage 3 and tests).
-pub fn read_member(zip_path: &Path, member: &str) -> Result<Vec<u8>> {
-    let file = fs::File::open(zip_path)
-        .with_context(|| format!("opening {}", zip_path.display()))?;
-    let mut ar = zip::ZipArchive::new(file)?;
-    let mut entry = ar.by_name(member)?;
-    let mut buf = Vec::with_capacity(entry.size() as usize);
-    entry.read_to_end(&mut buf)?;
-    Ok(buf)
+/// An opened zip archive with its member list scanned once. Stage 3 holds
+/// one of these per archive task, so the member list and the central
+/// directory are not re-read per member (the old per-call
+/// [`list_members`] + [`read_member`] pattern re-opened and re-scanned
+/// the archive for every single member).
+pub struct ZipReader {
+    path: PathBuf,
+    ar: zip::ZipArchive<fs::File>,
+    members: Vec<String>,
 }
 
-/// List member names of an archive.
+impl ZipReader {
+    /// Open `path` and scan its member list (sorted by name, matching the
+    /// writer's insertion order — and the columnar footer's).
+    pub fn open(path: &Path) -> Result<ZipReader> {
+        let file = fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let ar = zip::ZipArchive::new(file)
+            .with_context(|| format!("reading zip {}", path.display()))?;
+        let mut members: Vec<String> = ar.file_names().map(str::to_string).collect();
+        members.sort();
+        Ok(ZipReader { path: path.to_path_buf(), ar, members })
+    }
+
+    /// The cached member list, sorted by name.
+    pub fn members(&self) -> &[String] {
+        &self.members
+    }
+
+    /// Inflate one member. A readable archive without the member is the
+    /// typed [`ArchiveError::MemberNotFound`]; anything else the zip
+    /// layer reports is passed through.
+    pub fn read(&mut self, member: &str) -> Result<Vec<u8>> {
+        let mut entry = match self.ar.by_name(member) {
+            Ok(entry) => entry,
+            Err(zip::result::ZipError::FileNotFound) => {
+                return Err(ArchiveError::member_not_found(&self.path, member).into())
+            }
+            Err(e) => {
+                return Err(anyhow::Error::from(e)
+                    .context(format!("member '{member}' of {}", self.path.display())))
+            }
+        };
+        let mut buf = Vec::with_capacity(entry.size() as usize);
+        entry.read_to_end(&mut buf)?;
+        Ok(buf)
+    }
+}
+
+/// Read one member file back out of an archive (one-shot convenience;
+/// loops should hold a [`ZipReader`] instead).
+pub fn read_member(zip_path: &Path, member: &str) -> Result<Vec<u8>> {
+    ZipReader::open(zip_path)?.read(member)
+}
+
+/// List member names of an archive (one-shot convenience; loops should
+/// hold a [`ZipReader`] instead).
 pub fn list_members(zip_path: &Path) -> Result<Vec<String>> {
-    let file = fs::File::open(zip_path)?;
-    let ar = zip::ZipArchive::new(file)?;
-    Ok(ar.file_names().map(str::to_string).collect())
+    Ok(ZipReader::open(zip_path)?.members().to_vec())
 }
 
 #[cfg(test)]
@@ -156,8 +227,28 @@ mod tests {
         make_tree(&root);
         let plan = ArchivePlan::plan(&root, &tmp.join("arch_plan")).unwrap();
         assert_eq!(plan.tasks.len(), 2);
-        assert!(plan.tasks.windows(2).all(|w| w[0].dst_zip <= w[1].dst_zip));
+        assert!(plan.tasks.windows(2).all(|w| w[0].dst <= w[1].dst));
         assert!(plan.tasks[0].bytes > 0);
+        let _ = fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn plan_format_only_swaps_the_extension() {
+        let tmp = std::env::temp_dir().join(format!("emproc_zip_fmt_{}", std::process::id()));
+        let root = tmp.join("org");
+        let _ = fs::remove_dir_all(&tmp);
+        make_tree(&root);
+        let arch = tmp.join("arch");
+        let zip = ArchivePlan::plan_format(&root, &arch, ArchiveFormat::Zip).unwrap();
+        let col = ArchivePlan::plan_format(&root, &arch, ArchiveFormat::Columnar).unwrap();
+        assert_eq!(zip.tasks.len(), col.tasks.len());
+        for (z, c) in zip.tasks.iter().zip(&col.tasks) {
+            assert_eq!(z.src_dir, c.src_dir);
+            assert_eq!(z.bytes, c.bytes);
+            assert_eq!(z.dst.with_extension(""), c.dst.with_extension(""));
+            assert_eq!(z.dst.extension().unwrap(), "zip");
+            assert_eq!(c.dst.extension().unwrap(), "ctrk");
+        }
         let _ = fs::remove_dir_all(&tmp);
     }
 
@@ -171,10 +262,10 @@ mod tests {
         let plan = archive_bottom_dirs(&org, &arch).unwrap();
         assert_eq!(plan.tasks.len(), 2);
         for t in &plan.tasks {
-            assert!(t.dst_zip.exists(), "{} missing", t.dst_zip.display());
+            assert!(t.dst.exists(), "{} missing", t.dst.display());
         }
         // Three-tier replication: zip lives under year/type/seats/.
-        let z = &plan.tasks[0].dst_zip;
+        let z = &plan.tasks[0].dst;
         let rel = z.strip_prefix(&arch).unwrap();
         assert_eq!(rel.iter().count(), 4); // 3 tiers + file
         // Members round-trip.
@@ -182,6 +273,33 @@ mod tests {
         assert_eq!(members.len(), 2);
         let data = read_member(z, "a.csv").unwrap();
         assert_eq!(data, b"time,icao24\n1,000001\n");
+        let _ = fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn cached_reader_matches_one_shot_reads_and_types_absence() {
+        let tmp = std::env::temp_dir().join(format!("emproc_zip_rd_{}", std::process::id()));
+        let org = tmp.join("org");
+        let arch = tmp.join("arch");
+        let _ = fs::remove_dir_all(&tmp);
+        make_tree(&org);
+        let plan = archive_bottom_dirs(&org, &arch).unwrap();
+        let z = &plan.tasks[0].dst;
+        let mut rd = ZipReader::open(z).unwrap();
+        assert_eq!(rd.members(), list_members(z).unwrap().as_slice());
+        let members = rd.members().to_vec();
+        for m in members {
+            assert_eq!(rd.read(&m).unwrap(), read_member(z, &m).unwrap());
+        }
+        // A missing member is the typed error, not a stringly one.
+        let err = rd.read("ghost.csv").unwrap_err();
+        match err.downcast_ref::<ArchiveError>() {
+            Some(ArchiveError::MemberNotFound { member, archive }) => {
+                assert_eq!(member, "ghost.csv");
+                assert_eq!(archive, z);
+            }
+            other => panic!("expected MemberNotFound, got {other:?}: {err:#}"),
+        }
         let _ = fs::remove_dir_all(&tmp);
     }
 }

@@ -186,6 +186,14 @@ pub mod json {
         push(name, trace.job_time, trace.messages_sent, tasks, wall_s);
     }
 
+    /// Record a plain throughput measurement with no scheduler trace
+    /// behind it (I/O benchmarks): `tasks` work items done in `wall_s`
+    /// wall-clock seconds. Carries a `tasks_per_sec` figure and counts
+    /// toward the file aggregate like any timed scenario.
+    pub fn record_throughput(name: &str, tasks: usize, wall_s: f64) {
+        push(name, wall_s, 0, tasks, wall_s);
+    }
+
     /// Drop everything recorded so far (between unrelated bench targets).
     pub fn clear() {
         SCENARIOS.lock().expect("scenario lock").clear();

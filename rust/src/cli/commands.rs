@@ -18,17 +18,23 @@ COMMANDS:
       --data DIR --out DIR [--workers N] [--order chrono|size|random|filename]
       [--seed N] [--alloc selfsched|block|cyclic] [--launch inprocess|processes]
       [--max-retries N] [--run-dir DIR | --resume DIR]
-  archive    stage 2: zip bottom-tier directories
+  archive    stage 2: pack bottom-tier directories into archives
       --data DIR --out DIR [--dist block|cyclic|selfsched] [--workers N]
-      [--order O] [--seed N] [--launch L] [--max-retries N]
-      [--run-dir DIR | --resume DIR]
+      [--order O] [--seed N] [--launch L] [--format zip|columnar]
+      [--max-retries N] [--run-dir DIR | --resume DIR]
   process    stage 3: interpolate into track segments (PJRT hot path)
       --data DIR --out DIR [--workers N] [--artifacts DIR]
       [--order O] [--seed N] [--alloc selfsched|block|cyclic] [--launch L]
-      [--max-retries N] [--run-dir DIR | --resume DIR]
+      [--format zip|columnar] [--max-retries N] [--run-dir DIR | --resume DIR]
   pipeline   all three stages end-to-end on a generated corpus
       --out DIR [--dataset monday|aerodrome] [--scale F] [--workers N] [--seed N]
-      [--launch L] [--max-retries N]   (or: --resume DIR to finish a killed run)
+      [--launch L] [--format zip|columnar] [--max-retries N]
+      (or: --resume DIR to finish a killed run — same --format, the
+       stage-2/3 journals embed the archive extension)
+  gen        write a scaling stage-2 archive corpus directly (both formats
+             hold identical content; feeds `bench columnar`)
+      --out DIR [--tracks N] [--obs-per-track M] [--tracks-per-archive K]
+      [--seed N] [--format zip|columnar|both]
   scenarios  the paper's strategy matrix on the real executor:
              {selfsched,block,cyclic} x {chrono,size,filename,random} over
              both mini corpora, per-stage traces to BENCH_<NAME>.json;
@@ -39,6 +45,7 @@ COMMANDS:
       [--triples CORESxNPPN] [--max-procs N] [--max-retries N]
       [--datasets monday,aerodrome] [--strategies selfsched,block,cyclic]
       [--orders chrono,size,filename,random] [--json NAME]
+      [--format zip|columnar]
       (or: --resume DIR to finish a killed matrix run)
 
   Crash tolerance: every pipeline/scenario stage journals completed tasks
@@ -50,6 +57,10 @@ COMMANDS:
       --out FILE [--aerodromes N] [--seed N]
   bench <EXP|all>   regenerate a paper table/figure on the simulator
       EXP in: table1 table2 fig3 fig4 fig5 fig6 fig7 archiving fig8 fig9 serial
+      also: columnar — real-I/O zip-vs-columnar read throughput on a
+      generated corpus -> BENCH_columnar.json
+      [--tracks N] [--obs-per-track M] [--tracks-per-archive K] [--seed N]
+      [--data DIR] [--min-speedup F]
   bench-check  gate a BENCH_*.json against a committed throughput baseline
       --current FILE --baseline FILE [--tolerance F]   (default 0.30)
   info       report artifact, manifest and environment status
@@ -70,6 +81,7 @@ pub fn dispatch(args: &[String]) -> Result<()> {
         }
         "info" => cmd_info(),
         "generate" => cmd_generate(rest),
+        "gen" => cmd_gen(rest),
         "organize" => cmd_organize(rest),
         "archive" => cmd_archive(rest),
         "process" => cmd_process(rest),
@@ -110,6 +122,11 @@ fn cmd_info() -> Result<()> {
 fn cmd_generate(args: &[String]) -> Result<()> {
     let a = ArgParser::parse(args, &[])?;
     crate::workflow::commands::generate(&a)
+}
+
+fn cmd_gen(args: &[String]) -> Result<()> {
+    let a = ArgParser::parse(args, &[])?;
+    crate::workflow::commands::gen(&a)
 }
 
 fn cmd_organize(args: &[String]) -> Result<()> {

@@ -1,0 +1,200 @@
+//! Synthetic archive-tree generator for data-plane benchmarks.
+//!
+//! The miniature Monday/aerodrome corpora top out around a thousand
+//! tracks — three orders of magnitude short of the paper's datasets. This
+//! generator skips stages 1–2 and writes stage-2 output directly: a
+//! three-tier archive tree in either (or both) on-disk formats, with
+//! *identical logical content* in each, so zip-vs-columnar read timings
+//! compare the formats and nothing else. Track values are constructed on
+//! the CSV grammar's quantization lattice (whole seconds, micro-degrees,
+//! deci-feet), so the columnar codec round-trips them bit-exactly.
+
+use crate::archive::columnar::ColumnarWriter;
+use crate::archive::{zipdir, ArchiveFormat};
+use crate::tracks::{icao24_hex, write_csv, Observation, Track};
+use crate::util::Rng;
+use anyhow::{ensure, Result};
+use std::path::{Path, PathBuf};
+
+/// Shape of a generated corpus.
+#[derive(Debug, Clone, Copy)]
+pub struct GenSpec {
+    /// Total tracks (aircraft) across the corpus.
+    pub tracks: usize,
+    /// Observations per track.
+    pub obs_per_track: usize,
+    /// Tracks per archive (one member file per track, like the
+    /// per-aircraft files of the organized hierarchy).
+    pub tracks_per_archive: usize,
+    /// RNG seed; the corpus is fully deterministic in (spec, seed).
+    pub seed: u64,
+}
+
+impl Default for GenSpec {
+    fn default() -> Self {
+        GenSpec { tracks: 100_000, obs_per_track: 20, tracks_per_archive: 100, seed: 42 }
+    }
+}
+
+/// What one format's tree came out as.
+#[derive(Debug)]
+pub struct GenTree {
+    pub format: ArchiveFormat,
+    /// Tree root: `<out>/<format label>/`.
+    pub root: PathBuf,
+    pub archives: usize,
+    /// Archive bytes on disk.
+    pub bytes: u64,
+}
+
+/// Deterministic synthetic track `i` of the corpus: values on the CSV
+/// quantization lattice (see module docs), with per-track jitter so
+/// archives do not deflate into near-nothing.
+pub fn synth_track(spec: &GenSpec, i: usize, rng: &mut Rng) -> Track {
+    // icao24 must be nonzero, unique, and fit 24 bits.
+    let icao24 = (i as u32 % 0x00FF_FFFE) + 1;
+    let t0 = 1_500_000_000u64 + (i as u64 % 86_400);
+    let lat0 = 20_000_000i64 + (rng.below(40_000_000) as i64); // 20..60 deg, micro-deg
+    let lon0 = -120_000_000i64 + (rng.below(60_000_000) as i64); // -120..-60 deg
+    let alt0 = 10_000i64 + (rng.below(300_000) as i64); // 1000..31000 ft, deci-ft
+    let obs = (0..spec.obs_per_track)
+        .map(|j| {
+            let dj = j as i64;
+            Observation {
+                t: (t0 + j as u64 * 10) as f64,
+                lat: (lat0 + dj * (100 + rng.below(900) as i64)) as f64 / 1e6,
+                lon: (lon0 + dj * (100 + rng.below(900) as i64)) as f64 / 1e6,
+                alt_ft: (alt0 + dj * (rng.below(200) as i64 - 100)) as f64 / 10.0,
+            }
+        })
+        .collect();
+    Track { icao24, obs }
+}
+
+/// The three-tier-replicated destination of archive `a` (extension-less;
+/// the format appends its own).
+fn archive_stem(root: &Path, a: usize) -> PathBuf {
+    root.join(format!("t{:03}", a / 4096))
+        .join(format!("t{:02}", (a / 64) % 64))
+        .join(format!("batch_{a:06}"))
+}
+
+/// Write the corpus under `out/<format label>/` for each requested
+/// format. Member `{icao24}_gen.csv` of archive `a` holds track
+/// `a * tracks_per_archive + k` — identically in every format.
+pub fn write_corpus(spec: &GenSpec, out: &Path, formats: &[ArchiveFormat]) -> Result<Vec<GenTree>> {
+    ensure!(spec.tracks > 0, "--tracks must be positive");
+    ensure!(spec.obs_per_track > 0, "--obs-per-track must be positive");
+    ensure!(spec.tracks_per_archive > 0, "--tracks-per-archive must be positive");
+    let archives = spec.tracks.div_ceil(spec.tracks_per_archive);
+    let mut trees: Vec<GenTree> = formats
+        .iter()
+        .map(|&format| GenTree {
+            format,
+            root: out.join(format.label()),
+            archives,
+            bytes: 0,
+        })
+        .collect();
+    let mut rng = Rng::new(spec.seed);
+    for a in 0..archives {
+        let lo = a * spec.tracks_per_archive;
+        let hi = (lo + spec.tracks_per_archive).min(spec.tracks);
+        // One deterministic track set per archive, shared by the formats.
+        let batch: Vec<Track> = (lo..hi).map(|i| synth_track(spec, i, &mut rng)).collect();
+        for tree in &mut trees {
+            let dst = archive_stem(&tree.root, a).with_extension(tree.format.extension());
+            tree.bytes += match tree.format {
+                ArchiveFormat::Zip => {
+                    let members: Vec<(String, Vec<u8>)> = batch
+                        .iter()
+                        .map(|t| {
+                            (
+                                format!("{}_gen.csv", icao24_hex(t.icao24)),
+                                write_csv(std::slice::from_ref(t)).into_bytes(),
+                            )
+                        })
+                        .collect();
+                    zipdir::write_members(&dst, &members)?
+                }
+                ArchiveFormat::Columnar => {
+                    let mut w = ColumnarWriter::create(&dst)?;
+                    for t in &batch {
+                        w.append_tracks(
+                            &format!("{}_gen.csv", icao24_hex(t.icao24)),
+                            std::slice::from_ref(t),
+                        )?;
+                    }
+                    w.finish()?
+                }
+            };
+        }
+    }
+    Ok(trees)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::archive::ColumnarReader;
+    use crate::tracks::parse_csv;
+
+    #[test]
+    fn both_formats_hold_identical_logical_content() {
+        let tmp = std::env::temp_dir().join(format!("emproc_gen_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&tmp);
+        let spec = GenSpec { tracks: 35, obs_per_track: 7, tracks_per_archive: 10, seed: 9 };
+        let trees =
+            write_corpus(&spec, &tmp, &[ArchiveFormat::Zip, ArchiveFormat::Columnar]).unwrap();
+        assert_eq!(trees.len(), 2);
+        assert!(trees.iter().all(|t| t.archives == 4 && t.bytes > 0));
+
+        let zips = crate::workflow::stage3::list_archives(&trees[0].root, ArchiveFormat::Zip)
+            .unwrap();
+        let cols =
+            crate::workflow::stage3::list_archives(&trees[1].root, ArchiveFormat::Columnar)
+                .unwrap();
+        assert_eq!(zips.len(), 4);
+        assert_eq!(cols.len(), 4);
+        let mut total = 0usize;
+        for (z, c) in zips.iter().zip(&cols) {
+            let mut zr = crate::archive::ZipReader::open(z).unwrap();
+            let mut cr = ColumnarReader::open(c).unwrap();
+            assert_eq!(zr.members(), cr.member_names().as_slice());
+            let names = zr.members().to_vec();
+            for (i, m) in names.iter().enumerate() {
+                let text = String::from_utf8(zr.read(m).unwrap()).unwrap();
+                let from_zip = parse_csv(&text).unwrap();
+                let from_col = cr.read_entry(i).unwrap();
+                assert_eq!(from_zip, from_col, "member {m} differs between formats");
+                total += 1;
+            }
+        }
+        assert_eq!(total, 35, "one member per track");
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn corpus_is_deterministic_in_the_seed() {
+        let tmp = std::env::temp_dir().join(format!("emproc_gen_det_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&tmp);
+        let spec = GenSpec { tracks: 12, obs_per_track: 5, tracks_per_archive: 5, seed: 4 };
+        write_corpus(&spec, &tmp.join("a"), &[ArchiveFormat::Columnar]).unwrap();
+        write_corpus(&spec, &tmp.join("b"), &[ArchiveFormat::Columnar]).unwrap();
+        let a = crate::workflow::stage3::list_archives(
+            &tmp.join("a/columnar"),
+            ArchiveFormat::Columnar,
+        )
+        .unwrap();
+        let b = crate::workflow::stage3::list_archives(
+            &tmp.join("b/columnar"),
+            ArchiveFormat::Columnar,
+        )
+        .unwrap();
+        assert_eq!(a.len(), b.len());
+        for (pa, pb) in a.iter().zip(&b) {
+            assert_eq!(std::fs::read(pa).unwrap(), std::fs::read(pb).unwrap());
+        }
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+}

@@ -13,6 +13,7 @@
 //! examples.
 
 pub mod aerodrome;
+pub mod gencorpus;
 pub mod monday;
 pub mod processing;
 pub mod radar;

@@ -75,6 +75,169 @@ pub fn write_csv(tracks: &[Track]) -> String {
     out
 }
 
+// --- binary columnar track codec -----------------------------------------
+//
+// The packed form behind `archive::columnar`: tracks quantized to the
+// exact integers the CSV schema can express (seconds, micro-degrees,
+// deci-feet), stored as per-track columns of zigzag + LEB128-varint
+// delta streams. Quantization is checked at encode time, so a value the
+// CSV grammar cannot represent is a hard error instead of silent loss,
+// and `decode_tracks(encode_tracks(t)) == t` bit-for-bit — which is what
+// makes `--format zip` and `--format columnar` pipeline outputs
+// byte-identical. (Deflate is unavailable offline; the delta-varint
+// columns are the compression.)
+
+/// Column quantization scales: time in whole seconds, positions in
+/// micro-degrees (the CSV's 6 decimals), altitude in deci-feet (1 decimal).
+const COLUMN_SCALES: [f64; 4] = [1.0, 1e6, 1e6, 10.0];
+const COLUMN_NAMES: [&str; 4] = ["time", "lat", "lon", "alt_ft"];
+
+/// Append `v` as an unsigned LEB128 varint.
+fn put_uvarint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            break;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Read an unsigned LEB128 varint at `*pos`, advancing it.
+fn get_uvarint(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = *buf.get(*pos).context("varint truncated")?;
+        *pos += 1;
+        if shift == 63 && b > 1 {
+            bail!("varint overflows u64");
+        }
+        v |= u64::from(b & 0x7f) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+        if shift > 63 {
+            bail!("varint overflows u64");
+        }
+    }
+}
+
+/// Zigzag-map a signed delta into an unsigned varint payload.
+fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// Inverse of [`zigzag`].
+fn unzigzag(u: u64) -> i64 {
+    ((u >> 1) as i64) ^ -((u & 1) as i64)
+}
+
+/// Quantize `v` to an integer at `scale` steps per unit, failing unless
+/// the mapping is exactly invertible (i.e. `v` is a value the CSV schema
+/// can express at that column's precision).
+fn quantize(v: f64, scale: f64, what: &str) -> Result<i64> {
+    let q = (v * scale).round();
+    if !q.is_finite() || q.abs() >= 9.0e15 {
+        bail!("{what} value {v} is out of integer range");
+    }
+    let q = q as i64;
+    if (q as f64) / scale != v {
+        bail!("{what} value {v} is not representable at 1/{scale} resolution");
+    }
+    Ok(q)
+}
+
+/// Encode tracks into the packed columnar form. Observation order and
+/// track order are preserved exactly (no normalization happens here).
+pub fn encode_tracks(tracks: &[Track]) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    put_uvarint(&mut out, tracks.len() as u64);
+    for tr in tracks {
+        put_uvarint(&mut out, u64::from(tr.icao24));
+        put_uvarint(&mut out, tr.obs.len() as u64);
+        for (col, (&scale, name)) in
+            COLUMN_SCALES.iter().zip(COLUMN_NAMES).enumerate()
+        {
+            let mut prev = 0i64;
+            for o in &tr.obs {
+                let raw = match col {
+                    0 => o.t,
+                    1 => o.lat,
+                    2 => o.lon,
+                    _ => o.alt_ft,
+                };
+                let q = quantize(raw, scale, name)?;
+                let delta = q.checked_sub(prev).context("delta overflow")?;
+                put_uvarint(&mut out, zigzag(delta));
+                prev = q;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Decode a blob written by [`encode_tracks`]. The whole buffer must be
+/// consumed; trailing bytes, truncated columns, or out-of-range values
+/// are all hard errors (the columnar reader wraps them as corruption).
+pub fn decode_tracks(buf: &[u8]) -> Result<Vec<Track>> {
+    let mut pos = 0usize;
+    let ntracks = get_uvarint(buf, &mut pos)?;
+    if ntracks > buf.len() as u64 {
+        bail!("track count {ntracks} exceeds blob size {}", buf.len());
+    }
+    let mut tracks = Vec::with_capacity(ntracks as usize);
+    for _ in 0..ntracks {
+        let icao = get_uvarint(buf, &mut pos)?;
+        if icao > 0xFF_FFFF {
+            bail!("icao24 {icao:#x} exceeds 24 bits");
+        }
+        let nobs = get_uvarint(buf, &mut pos)?;
+        // Each observation spans ≥ 4 varint bytes (one per column), so a
+        // count beyond the remaining bytes is corruption, not a big track.
+        if nobs > (buf.len() - pos) as u64 {
+            bail!("observation count {nobs} exceeds remaining {} bytes", buf.len() - pos);
+        }
+        let nobs = nobs as usize;
+        let mut cols: [Vec<f64>; 4] = Default::default();
+        for (col, (&scale, name)) in
+            COLUMN_SCALES.iter().zip(COLUMN_NAMES).enumerate()
+        {
+            let mut prev = 0i64;
+            let vals = &mut cols[col];
+            vals.reserve_exact(nobs);
+            for _ in 0..nobs {
+                let delta = unzigzag(get_uvarint(buf, &mut pos)?);
+                prev = prev
+                    .checked_add(delta)
+                    .with_context(|| format!("{name} column delta overflow"))?;
+                vals.push(prev as f64 / scale);
+            }
+        }
+        let obs: Vec<Observation> = (0..nobs)
+            .map(|i| Observation {
+                t: cols[0][i],
+                lat: cols[1][i],
+                lon: cols[2][i],
+                alt_ft: cols[3][i],
+            })
+            .collect();
+        for o in &obs {
+            if !(-90.0..=90.0).contains(&o.lat) || !(-180.0..=180.0).contains(&o.lon) {
+                bail!("out-of-range position ({}, {})", o.lat, o.lon);
+            }
+        }
+        tracks.push(Track { icao24: icao as u32, obs });
+    }
+    if pos != buf.len() {
+        bail!("{} trailing byte(s) after the last track", buf.len() - pos);
+    }
+    Ok(tracks)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -125,5 +288,89 @@ mod tests {
                      1,a1b2c3,42.0,-71.0,100.0,250.0\n";
         let tracks = parse_csv(extra).unwrap();
         assert_eq!(tracks.len(), 1);
+    }
+
+    #[test]
+    fn binary_codec_round_trips_csv_values_exactly() {
+        // The whole parity story in one assertion: parse the CSV form,
+        // encode to the packed columns, decode, and demand bit equality.
+        let tracks = parse_csv(SAMPLE).unwrap();
+        let blob = encode_tracks(&tracks).unwrap();
+        let again = decode_tracks(&blob).unwrap();
+        assert_eq!(tracks.len(), again.len());
+        for (a, b) in tracks.iter().zip(&again) {
+            assert_eq!(a.icao24, b.icao24);
+            assert_eq!(a.obs.len(), b.obs.len());
+            for (x, y) in a.obs.iter().zip(&b.obs) {
+                assert_eq!(x.t.to_bits(), y.t.to_bits());
+                assert_eq!(x.lat.to_bits(), y.lat.to_bits());
+                assert_eq!(x.lon.to_bits(), y.lon.to_bits());
+                assert_eq!(x.alt_ft.to_bits(), y.alt_ft.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn binary_codec_round_trips_through_the_csv_writer_too() {
+        // write_csv(decode(encode(t))) must equal write_csv(t): the
+        // quantization grid is exactly the CSV column precision.
+        let tracks = parse_csv(SAMPLE).unwrap();
+        let again = decode_tracks(&encode_tracks(&tracks).unwrap()).unwrap();
+        assert_eq!(write_csv(&tracks), write_csv(&again));
+    }
+
+    #[test]
+    fn encode_rejects_values_the_csv_grammar_cannot_express() {
+        // 1/3 of a degree has no finite 6-decimal form: encoding must be
+        // a hard error, never a silent rounding.
+        let t = Track {
+            icao24: 1,
+            obs: vec![Observation { t: 10.0, lat: 1.0 / 3.0, lon: 0.0, alt_ft: 0.0 }],
+        };
+        let err = encode_tracks(&[t]).unwrap_err().to_string();
+        assert!(err.contains("not representable"), "{err}");
+        // Fractional seconds are likewise unrepresentable (CSV prints i64).
+        let t = Track {
+            icao24: 1,
+            obs: vec![Observation { t: 10.5, lat: 0.0, lon: 0.0, alt_ft: 0.0 }],
+        };
+        assert!(encode_tracks(&[t]).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_truncation_trailing_bytes_and_insane_counts() {
+        let tracks = parse_csv(SAMPLE).unwrap();
+        let blob = encode_tracks(&tracks).unwrap();
+        // Truncation anywhere is an error (never a partial decode).
+        for cut in [1, blob.len() / 2, blob.len() - 1] {
+            assert!(decode_tracks(&blob[..cut]).is_err(), "cut at {cut}");
+        }
+        // Trailing garbage is an error.
+        let mut noisy = blob.clone();
+        noisy.push(0);
+        assert!(decode_tracks(&noisy).is_err());
+        // An absurd track count is rejected before allocating for it.
+        assert!(decode_tracks(&[0xff, 0xff, 0xff, 0xff, 0x0f]).is_err());
+        // Empty set round-trips.
+        assert!(decode_tracks(&encode_tracks(&[]).unwrap()).unwrap().is_empty());
+    }
+
+    #[test]
+    fn varint_zigzag_primitives_cover_the_integer_edges() {
+        for v in [0i64, 1, -1, 63, -64, 300, -300, i64::MAX, i64::MIN] {
+            assert_eq!(unzigzag(zigzag(v)), v, "{v}");
+        }
+        let mut buf = Vec::new();
+        for v in [0u64, 1, 127, 128, 16_383, 16_384, u64::MAX] {
+            buf.clear();
+            put_uvarint(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(get_uvarint(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len());
+        }
+        // A 10-byte varint with payload bits above 2^64 must be rejected.
+        let too_big = [0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0x02];
+        let mut pos = 0;
+        assert!(get_uvarint(&too_big, &mut pos).is_err());
     }
 }

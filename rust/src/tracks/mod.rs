@@ -8,7 +8,7 @@
 pub mod codec;
 pub mod segment;
 
-pub use codec::{parse_csv, write_csv};
+pub use codec::{decode_tracks, encode_tracks, parse_csv, write_csv};
 pub use segment::{segment_track, SegmentConfig};
 
 /// One surveillance observation of one aircraft.

@@ -534,8 +534,116 @@ pub fn run_serial() -> String {
     )
 }
 
+/// `emproc bench columnar [--data DIR] [--tracks N] [--obs-per-track M]
+/// [--tracks-per-archive K] [--seed N] [--min-speedup F]`
+///
+/// The data-plane benchmark: generate one scaling corpus (identical
+/// logical content in both formats, see
+/// [`crate::datasets::gencorpus::write_corpus`]), read every archive of
+/// each tree end-to-end the way stage 3 does, and report observation-row
+/// read throughput. Writes `BENCH_columnar.json`; with `--min-speedup F`
+/// the run fails unless columnar reads at least `F`× the zip rate.
+/// Without `--data`, the corpus lives in (and is removed from) a temp
+/// directory.
+fn run_columnar(a: &ArgParser) -> Result<()> {
+    use crate::archive::{ArchiveFormat, ColumnarReader, ZipReader};
+    let spec = crate::datasets::gencorpus::GenSpec {
+        tracks: a.get_num("tracks", 100_000usize)?,
+        obs_per_track: a.get_num("obs-per-track", 20usize)?,
+        tracks_per_archive: a.get_num("tracks-per-archive", 100usize)?,
+        seed: a.get_num("seed", SEED)?,
+    };
+    let min_speedup = a.get_num("min-speedup", 0.0f64)?;
+    let (data, ephemeral) = match a.get("data") {
+        Some(d) => (std::path::PathBuf::from(d), false),
+        None => (
+            std::env::temp_dir()
+                .join(format!("emproc_bench_columnar_{}", std::process::id())),
+            true,
+        ),
+    };
+    println!(
+        "generating {} tracks x {} obs ({} per archive) in both formats under {}",
+        spec.tracks,
+        spec.obs_per_track,
+        spec.tracks_per_archive,
+        data.display()
+    );
+    let trees = crate::datasets::gencorpus::write_corpus(
+        &spec,
+        &data,
+        &[ArchiveFormat::Zip, ArchiveFormat::Columnar],
+    )?;
+
+    // Full stage-3-shaped read of one tree: every archive, every member,
+    // decoded to Track rows.
+    let read_tree = |root: &std::path::Path, format: ArchiveFormat| -> Result<(u64, f64)> {
+        let archives = crate::workflow::stage3::list_archives(root, format)?;
+        let t0 = Instant::now();
+        let mut rows = 0u64;
+        for p in &archives {
+            match format {
+                ArchiveFormat::Zip => {
+                    let mut rd = ZipReader::open(p)?;
+                    let members = rd.members().to_vec();
+                    for m in members {
+                        let text = String::from_utf8(rd.read(&m)?)
+                            .map_err(|_| anyhow::anyhow!("non-utf8 member {m}"))?;
+                        for t in crate::tracks::parse_csv(&text)? {
+                            rows += t.obs.len() as u64;
+                        }
+                    }
+                }
+                ArchiveFormat::Columnar => {
+                    let mut rd = ColumnarReader::open(p)?;
+                    for i in 0..rd.entries().len() {
+                        for t in rd.read_entry(i)? {
+                            rows += t.obs.len() as u64;
+                        }
+                    }
+                }
+            }
+        }
+        Ok((rows, t0.elapsed().as_secs_f64()))
+    };
+    let (zip_rows, zip_s) = read_tree(&trees[0].root, ArchiveFormat::Zip)?;
+    let (col_rows, col_s) = read_tree(&trees[1].root, ArchiveFormat::Columnar)?;
+    if ephemeral {
+        let _ = std::fs::remove_dir_all(&data);
+    }
+    anyhow::ensure!(
+        zip_rows == col_rows,
+        "formats disagree on row count: zip {zip_rows} vs columnar {col_rows}"
+    );
+    let zip_tput = zip_rows as f64 / zip_s;
+    let col_tput = col_rows as f64 / col_s;
+    let speedup = zip_s / col_s;
+    println!(
+        "zip     : {zip_rows} rows in {zip_s:.3}s ({zip_tput:.0} rows/s, {} on disk)",
+        crate::util::human_bytes(trees[0].bytes)
+    );
+    println!(
+        "columnar: {col_rows} rows in {col_s:.3}s ({col_tput:.0} rows/s, {} on disk)",
+        crate::util::human_bytes(trees[1].bytes)
+    );
+    println!("columnar read speedup: {speedup:.2}x");
+    json::record_throughput("columnar corpus read zip rows", zip_rows as usize, zip_s);
+    json::record_throughput("columnar corpus read columnar rows", col_rows as usize, col_s);
+    json::write_file("columnar")?;
+    anyhow::ensure!(
+        speedup >= min_speedup,
+        "columnar read speedup {speedup:.2}x is below the required {min_speedup:.2}x"
+    );
+    Ok(())
+}
+
 /// Dispatch for `emproc bench <exp>`.
 pub fn run(which: &str, a: &ArgParser) -> Result<()> {
+    if which == "columnar" {
+        // The data-plane benchmark is real I/O, not a simulator figure;
+        // it owns its JSON file (BENCH_columnar.json) and its own flags.
+        return run_columnar(a);
+    }
     let scale = a.get_num("scale", 0.1f64)?;
     let all = which == "all";
     let mut any = false;

@@ -1,5 +1,6 @@
 //! CLI subcommand implementations (thin wrappers over the library).
 
+use crate::archive::ArchiveFormat;
 use crate::cli::ArgParser;
 use crate::datasets::DatasetKind;
 use crate::dist::TaskOrder;
@@ -37,6 +38,12 @@ pub(crate) fn parse_alloc(s: &str) -> Result<AllocMode> {
 /// Parse the `--launch` flag shared by every stage/pipeline command.
 pub(crate) fn parse_launch(a: &ArgParser) -> Result<LaunchMode> {
     LaunchMode::parse(a.get_or("launch", "inprocess"))
+}
+
+/// Parse the `--format` flag shared by the archive-touching commands
+/// (default: the paper's zip layout).
+pub(crate) fn parse_format(a: &ArgParser) -> Result<ArchiveFormat> {
+    ArchiveFormat::parse(a.get_or("format", "zip"))
 }
 
 /// Parse the per-stage recovery flags: `--run-dir DIR` journals the run
@@ -134,6 +141,41 @@ pub fn generate(a: &ArgParser) -> Result<()> {
     Ok(())
 }
 
+/// `emproc gen --out DIR [--tracks N] [--obs-per-track M]
+/// [--tracks-per-archive K] [--seed N] [--format zip|columnar|both]`
+///
+/// Write a scaling corpus of stage-2 archive trees directly (no raw CSVs,
+/// no organize pass): `--tracks 100000` is three orders of magnitude past
+/// the miniature corpora. With `both` (the default) the zip and columnar
+/// trees hold identical logical content, which is what makes
+/// `emproc bench columnar` a format comparison rather than a data one.
+pub fn gen(a: &ArgParser) -> Result<()> {
+    let out = PathBuf::from(a.required("out")?);
+    let spec = crate::datasets::gencorpus::GenSpec {
+        tracks: a.get_num("tracks", 100_000usize)?,
+        obs_per_track: a.get_num("obs-per-track", 20usize)?,
+        tracks_per_archive: a.get_num("tracks-per-archive", 100usize)?,
+        seed: a.get_num("seed", 42u64)?,
+    };
+    let formats: Vec<ArchiveFormat> = match a.get_or("format", "both") {
+        "both" => vec![ArchiveFormat::Zip, ArchiveFormat::Columnar],
+        one => vec![ArchiveFormat::parse(one)?],
+    };
+    let trees = crate::datasets::gencorpus::write_corpus(&spec, &out, &formats)?;
+    for t in &trees {
+        println!(
+            "{:<8} {} archives, {} tracks x {} obs, {} -> {}",
+            t.format.label(),
+            t.archives,
+            spec.tracks,
+            spec.obs_per_track,
+            crate::util::human_bytes(t.bytes),
+            t.root.display()
+        );
+    }
+    Ok(())
+}
+
 fn load_registry(data_dir: &std::path::Path) -> Result<Registry> {
     let text = std::fs::read_to_string(data_dir.join("registry.csv"))
         .context("registry.csv not found in --data dir (run `emproc generate` first)")?;
@@ -173,7 +215,8 @@ pub fn organize(a: &ArgParser) -> Result<()> {
 }
 
 /// `emproc archive --data DIR --out DIR [--dist block|cyclic|selfsched]
-/// [--workers N] [--order O] [--seed N] [--launch inprocess|processes]`
+/// [--workers N] [--order O] [--seed N] [--launch inprocess|processes]
+/// [--format zip|columnar]`
 pub fn archive(a: &ArgParser) -> Result<()> {
     let data = PathBuf::from(a.required("data")?);
     let out = PathBuf::from(a.required("out")?);
@@ -182,9 +225,10 @@ pub fn archive(a: &ArgParser) -> Result<()> {
     let alloc = parse_alloc(a.get_or("dist", "cyclic"))?;
     let order = parse_order(a.get_or("order", "filename"), seed)?;
     let launch = parse_launch(a)?;
+    let format = parse_format(a)?;
     let recovery = parse_recovery(a, "archive")?;
     let outcome = crate::workflow::stage2::run_launched(
-        &crate::workflow::stage2::ArchiveJob { organized_dir: data, archive_dir: out },
+        &crate::workflow::stage2::ArchiveJob { organized_dir: data, archive_dir: out, format },
         workers,
         alloc,
         order,
@@ -203,7 +247,7 @@ pub fn archive(a: &ArgParser) -> Result<()> {
 
 /// `emproc process --data DIR --out DIR [--workers N] [--artifacts DIR]
 /// [--order O] [--seed N] [--alloc selfsched|block|cyclic]
-/// [--launch inprocess|processes]`
+/// [--launch inprocess|processes] [--format zip|columnar]`
 pub fn process(a: &ArgParser) -> Result<()> {
     let data = PathBuf::from(a.required("data")?);
     let out = PathBuf::from(a.required("out")?);
@@ -217,12 +261,14 @@ pub fn process(a: &ArgParser) -> Result<()> {
         .map(PathBuf::from)
         .unwrap_or_else(crate::runtime::TrackModel::default_dir);
     let recovery = parse_recovery(a, "process")?;
+    let format = parse_format(a)?;
     let outcome = crate::workflow::stage3::run_launched(
         &crate::workflow::stage3::ProcessJob {
             archive_dir: data,
             out_dir: out,
             artifact_dir: artifacts,
             segment: crate::tracks::SegmentConfig::default(),
+            format,
         },
         workers,
         order,
@@ -243,11 +289,13 @@ pub fn process(a: &ArgParser) -> Result<()> {
 
 /// `emproc pipeline --out DIR [--dataset monday|aerodrome] [--scale F]
 /// [--workers N] [--seed N] [--launch inprocess|processes]
-/// [--max-retries N] [--resume DIR]`
+/// [--max-retries N] [--resume DIR] [--format zip|columnar]`
 ///
 /// `--resume DIR` finishes an interrupted run in place of `--out DIR`
 /// (pass the same remaining flags so the per-stage journals verify
-/// against the same task lists).
+/// against the same task lists — in particular the same `--format`:
+/// stage-2/3 task names embed the archive extension, so resuming under
+/// the other format is a hard plan-mismatch error).
 pub fn pipeline(a: &ArgParser) -> Result<()> {
     let (out, resume) = out_or_resume(a)?;
     let scale = a.get_num("scale", 1.0f64)?;
@@ -259,6 +307,7 @@ pub fn pipeline(a: &ArgParser) -> Result<()> {
     cfg.launch = parse_launch(a)?;
     cfg.max_retries = a.get_num("max-retries", cfg.max_retries)?;
     cfg.resume = resume;
+    cfg.format = parse_format(a)?;
     cfg.process_order = TaskOrder::Random(cfg.seed);
     cfg.days = ((cfg.days as f64 * scale).ceil() as u32).max(1);
     cfg.max_file_bytes = (cfg.max_file_bytes as f64 * scale) as u64 + 1_000;
@@ -271,7 +320,8 @@ pub fn pipeline(a: &ArgParser) -> Result<()> {
 /// [--launch inprocess|processes] [--triples CORESxNPPN] [--max-procs N]
 /// [--max-retries N] [--resume DIR]
 /// [--datasets monday,aerodrome] [--strategies selfsched,block,cyclic]
-/// [--orders chrono,size,filename,random] [--json NAME]`
+/// [--orders chrono,size,filename,random] [--json NAME]
+/// [--format zip|columnar]`
 ///
 /// Runs the paper's strategy matrix — every (dataset × allocation ×
 /// order) cell — end-to-end on the real executor over shared miniature
@@ -336,7 +386,8 @@ pub fn scenarios(a: &ArgParser) -> Result<()> {
     };
     let days = ((2.0 * scale).ceil() as u32).max(1);
     let max_file_bytes = (40_000.0 * scale) as u64 + 2_000;
-    let shape = scenario::MatrixShape { workers, days, max_file_bytes, seed, launch };
+    let format = parse_format(a)?;
+    let shape = scenario::MatrixShape { workers, days, max_file_bytes, seed, launch, format };
     let specs = scenario::matrix(&datasets, &strategies, &orders, shape);
     println!(
         "running {} scenarios ({} datasets x {} strategies x {} orders, {workers} workers, \
@@ -521,12 +572,20 @@ pub fn worker(a: &ArgParser) -> Result<()> {
             )
         }
         "archive" => {
-            let plan = crate::archive::ArchivePlan::plan(&data, &out)?;
+            let format = parse_format(a)?;
+            let plan = crate::archive::ArchivePlan::plan_format(&data, &out, format)?;
             crate::launch::worker_loop(
                 plan.tasks.len(),
                 || Ok(()),
                 |_, ti| {
-                    crate::archive::zipdir::archive_dir(&plan.tasks[ti])?;
+                    match format {
+                        ArchiveFormat::Zip => {
+                            crate::archive::zipdir::archive_dir(&plan.tasks[ti])?
+                        }
+                        ArchiveFormat::Columnar => {
+                            crate::archive::columnar::archive_dir_columnar(&plan.tasks[ti])?
+                        }
+                    };
                     crate::recovery::fault::maybe_kill("archive", ti);
                     Ok(Vec::new())
                 },
@@ -543,12 +602,14 @@ pub fn worker(a: &ArgParser) -> Result<()> {
                 min_obs: a.get_num("min-obs", default_seg.min_obs)?,
                 max_obs: a.get_num("max-obs", default_seg.max_obs)?,
             };
-            let archives = crate::workflow::stage3::list_archives(&data)?;
+            let format = parse_format(a)?;
+            let archives = crate::workflow::stage3::list_archives(&data, format)?;
             let job = crate::workflow::stage3::ProcessJob {
                 archive_dir: data,
                 out_dir: out,
                 artifact_dir: artifacts.clone(),
                 segment,
+                format,
             };
             crate::launch::worker_loop(
                 archives.len(),

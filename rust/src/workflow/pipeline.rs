@@ -5,6 +5,7 @@
 //! [`PipelineConfig`] knobs, so the same driver runs every cell of the
 //! paper's strategy matrix (see [`crate::workflow::scenario`]).
 
+use crate::archive::ArchiveFormat;
 use crate::datasets::DatasetKind;
 use crate::dist::{Distribution, TaskOrder};
 use crate::launch::LaunchMode;
@@ -61,6 +62,10 @@ pub struct PipelineConfig {
     /// its completed tasks, and merge the journaled stats back in. A
     /// stage with no journal on disk simply runs in full.
     pub resume: bool,
+    /// Stage-2 output / stage-3 input archive format. Task names embed
+    /// the destination extension, so resuming a journaled run under the
+    /// other format is a hard plan-mismatch error, not a silent mix.
+    pub format: ArchiveFormat,
 }
 
 impl PipelineConfig {
@@ -90,6 +95,7 @@ impl PipelineConfig {
             launch: LaunchMode::InProcess,
             max_retries: 2,
             resume: false,
+            format: ArchiveFormat::Zip,
         }
     }
 
@@ -207,6 +213,7 @@ impl Pipeline {
             &crate::workflow::stage2::ArchiveJob {
                 organized_dir: w.join("organized"),
                 archive_dir: w.join("archived"),
+                format: self.cfg.format,
             },
             self.cfg.workers,
             self.cfg.alloc[1],
@@ -220,6 +227,7 @@ impl Pipeline {
                 out_dir: w.join("processed"),
                 artifact_dir: self.cfg.artifact_dir.clone(),
                 segment: SegmentConfig::default(),
+                format: self.cfg.format,
             },
             self.cfg.workers,
             self.cfg.process_order,

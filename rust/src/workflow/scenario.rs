@@ -17,6 +17,7 @@
 //! wall-clock ≤ block — on a laptop-scale corpus; see
 //! [`archiving_comparison`].
 
+use crate::archive::ArchiveFormat;
 use crate::bench_harness::{json, sweep};
 use crate::datasets::DatasetKind;
 use crate::dist::{Distribution, TaskOrder};
@@ -52,6 +53,9 @@ pub struct ScenarioSpec {
     /// Launch layer: worker threads in this process, or real worker
     /// subprocesses (the §II.C triples-mode dimension, laptop-capped).
     pub launch: LaunchMode,
+    /// Stage-2/3 archive format (zip per the paper, or the columnar
+    /// track store).
+    pub format: ArchiveFormat,
 }
 
 /// Short name for an allocation mode (scenario labels, CLI).
@@ -84,10 +88,11 @@ impl ScenarioSpec {
     }
 
     /// Stable label, e.g. `aerodrome/cyclic/filename/w2` — with a
-    /// `/procs` suffix when the cell runs in real worker subprocesses, so
-    /// in-process and multi-process timings of one cell sit side by side
-    /// in `BENCH_*.json`. The allocation component is stage agnostic when
-    /// all stages share a mode, else `s1+s2+s3` labels are joined.
+    /// `/procs` suffix when the cell runs in real worker subprocesses and
+    /// a `/columnar` suffix when it runs on the columnar data plane, so
+    /// the variants of one cell sit side by side in `BENCH_*.json`. The
+    /// allocation component is stage agnostic when all stages share a
+    /// mode, else `s1+s2+s3` labels are joined.
     pub fn label(&self) -> String {
         let a = if alloc_label(self.alloc[0]) == alloc_label(self.alloc[1])
             && alloc_label(self.alloc[1]) == alloc_label(self.alloc[2])
@@ -108,9 +113,13 @@ impl ScenarioSpec {
             order_label(self.order),
             self.workers
         );
-        match self.launch {
+        let base = match self.launch {
             LaunchMode::InProcess => base,
             LaunchMode::Processes => format!("{base}/procs"),
+        };
+        match self.format {
+            ArchiveFormat::Zip => base,
+            ArchiveFormat::Columnar => format!("{base}/columnar"),
         }
     }
 
@@ -135,6 +144,7 @@ impl ScenarioSpec {
         cfg.archive_order = TaskOrder::FilenameSorted;
         cfg.process_order = self.order;
         cfg.launch = self.launch;
+        cfg.format = self.format;
         cfg
     }
 }
@@ -181,6 +191,8 @@ pub struct MatrixShape {
     pub seed: u64,
     /// Launch layer every cell runs under.
     pub launch: LaunchMode,
+    /// Archive format every cell runs on.
+    pub format: ArchiveFormat,
 }
 
 /// The default strategy matrix: every (dataset × allocation strategy ×
@@ -208,6 +220,7 @@ pub fn matrix(
                     registry_size: 60,
                     seed: shape.seed,
                     launch: shape.launch,
+                    format: shape.format,
                 });
             }
         }
@@ -422,6 +435,7 @@ mod tests {
             registry_size: 40,
             seed: 7,
             launch: LaunchMode::InProcess,
+            format: ArchiveFormat::Zip,
         }
     }
 
@@ -436,6 +450,7 @@ mod tests {
             max_file_bytes: 30_000,
             seed: 9,
             launch: LaunchMode::InProcess,
+            format: ArchiveFormat::Zip,
         };
         let specs = matrix(&datasets, &strategies, &orders, shape);
         assert_eq!(specs.len(), 2 * 3 * 4);
@@ -453,6 +468,19 @@ mod tests {
             MatrixShape { launch: LaunchMode::Processes, ..shape },
         );
         assert!(specs.iter().all(|s| s.label().ends_with("/procs")));
+        // And the format axis in (and only in) columnar labels, after
+        // the launch suffix.
+        let specs = matrix(
+            &datasets,
+            &strategies,
+            &orders,
+            MatrixShape {
+                launch: LaunchMode::Processes,
+                format: ArchiveFormat::Columnar,
+                ..shape
+            },
+        );
+        assert!(specs.iter().all(|s| s.label().ends_with("/procs/columnar")));
     }
 
     #[test]

@@ -5,7 +5,9 @@
 //! tasks by aircraft — the §IV.B mechanism that made block distribution
 //! pathological and cyclic >90% faster.
 
-use crate::archive::zipdir::{archive_dir, ArchivePlan};
+use crate::archive::columnar::archive_dir_columnar;
+use crate::archive::zipdir::{archive_dir, ArchivePlan, ArchiveTask};
+use crate::archive::ArchiveFormat;
 use crate::dist::{Distribution, TaskOrder};
 use crate::launch::LaunchMode;
 use crate::recovery::{RecoveryOptions, StageRecovery};
@@ -18,8 +20,18 @@ use std::path::PathBuf;
 pub struct ArchiveJob {
     /// Organized hierarchy root (stage-1 output).
     pub organized_dir: PathBuf,
-    /// Archive tree root (three replicated tiers + zips).
+    /// Archive tree root (three replicated tiers + archives).
     pub archive_dir: PathBuf,
+    /// On-disk archive format (zip per §III.A, or the columnar store).
+    pub format: ArchiveFormat,
+}
+
+/// Execute one planned archive task in the job's format.
+fn run_task(format: ArchiveFormat, task: &ArchiveTask) -> Result<u64> {
+    match format {
+        ArchiveFormat::Zip => archive_dir(task),
+        ArchiveFormat::Columnar => archive_dir_columnar(task),
+    }
 }
 
 /// Result of archiving.
@@ -63,7 +75,7 @@ pub fn run_launched(
     launch: LaunchMode,
     rec: &RecoveryOptions,
 ) -> Result<ArchiveOutcome> {
-    let plan = ArchivePlan::plan(&job.organized_dir, &job.archive_dir)?;
+    let plan = ArchivePlan::plan_format(&job.organized_dir, &job.archive_dir, job.format)?;
     let n = plan.tasks.len();
     let tasks: Vec<crate::dist::Task> = plan
         .tasks
@@ -77,7 +89,7 @@ pub fn run_launched(
             // The plan's destination sort is the stage's native order, so
             // it doubles as the chronological key.
             chrono_key: i as u64,
-            name: t.dst_zip.display().to_string().into(),
+            name: t.dst.display().to_string().into(),
         })
         .collect();
     let ordered = crate::dist::order_tasks(&tasks, order);
@@ -94,6 +106,8 @@ pub fn run_launched(
             job.organized_dir.display().to_string(),
             "--out".into(),
             job.archive_dir.display().to_string(),
+            "--format".into(),
+            job.format.label().into(),
         ])?;
         let out = crate::launch::run_processes(
             n,
@@ -111,7 +125,7 @@ pub fn run_launched(
         let journal = recov.writer.take().map(std::sync::Mutex::new);
         let work = |w: usize, ti: usize| -> Result<()> {
             let t0 = std::time::Instant::now();
-            archive_dir(&plan.tasks[ti])?;
+            run_task(job.format, &plan.tasks[ti])?;
             crate::recovery::journal_task(&journal, w, ti, t0, Vec::new())
         };
         let live = match alloc {
@@ -142,7 +156,7 @@ pub fn run_launched(
             }
         }
         blocks_zipped += crate::archive::lustre::blocks_for(
-            std::fs::metadata(&t.dst_zip).map(|m| m.len()).unwrap_or(0),
+            std::fs::metadata(&t.dst).map(|m| m.len()).unwrap_or(0),
         );
     }
     Ok(ArchiveOutcome {
@@ -193,6 +207,7 @@ mod tests {
         let job = ArchiveJob {
             organized_dir: tmp.join("organized"),
             archive_dir: tmp.join("archived"),
+            format: ArchiveFormat::Zip,
         };
         let out = run_cyclic(&job, 3).unwrap();
         assert_eq!(out.archives, 6);
@@ -201,8 +216,73 @@ mod tests {
         // Every zip exists and holds 3 members.
         let plan = ArchivePlan::plan(&job.organized_dir, &job.archive_dir).unwrap();
         for t in &plan.tasks {
-            let members = crate::archive::zipdir::list_members(&t.dst_zip).unwrap();
+            let members = crate::archive::zipdir::list_members(&t.dst).unwrap();
             assert_eq!(members.len(), 3);
+        }
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    /// An organized tree whose files are real track CSVs (the columnar
+    /// writer parses members; the raw-byte fixtures above would be
+    /// rejected at the header check).
+    fn organized_csv_tree(tag: &str) -> PathBuf {
+        let tmp = std::env::temp_dir().join(format!("emproc_s2_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&tmp);
+        for b in 0..4u32 {
+            let dir = tmp
+                .join("organized/2019/fixed_wing_single/seats_02_03")
+                .join(format!("icao_{b:03}"));
+            std::fs::create_dir_all(&dir).unwrap();
+            for f in 0..2u32 {
+                let icao = b * 16 + f + 1;
+                let tr = crate::tracks::Track {
+                    icao24: icao,
+                    obs: (0..5)
+                        .map(|i| crate::tracks::Observation {
+                            t: 1_000.0 + f64::from(i) * 10.0,
+                            lat: 42.0 + f64::from(i) * 1e-6,
+                            lon: -71.0,
+                            alt_ft: 1_200.0 + f64::from(i) * 0.1,
+                        })
+                        .collect(),
+                };
+                std::fs::write(
+                    dir.join(format!("{}_x.csv", crate::tracks::icao24_hex(icao))),
+                    crate::tracks::write_csv(&[tr]),
+                )
+                .unwrap();
+            }
+        }
+        tmp
+    }
+
+    #[test]
+    fn columnar_format_archives_everything_with_footer_indexes() {
+        let tmp = organized_csv_tree("col");
+        let job = ArchiveJob {
+            organized_dir: tmp.join("organized"),
+            archive_dir: tmp.join("archived"),
+            format: ArchiveFormat::Columnar,
+        };
+        let out = run_cyclic(&job, 2).unwrap();
+        assert_eq!(out.archives, 4);
+        out.trace.check_invariants(4).unwrap();
+        let plan = ArchivePlan::plan_format(
+            &job.organized_dir,
+            &job.archive_dir,
+            ArchiveFormat::Columnar,
+        )
+        .unwrap();
+        for t in &plan.tasks {
+            assert_eq!(t.dst.extension().unwrap(), "ctrk");
+            let mut rd = crate::archive::ColumnarReader::open(&t.dst).unwrap();
+            assert_eq!(rd.member_names().len(), 2);
+            assert_eq!(rd.total_rows(), 10);
+            for name in rd.member_names() {
+                let tracks = rd.read_tracks(&name).unwrap();
+                assert_eq!(tracks.len(), 1);
+                assert_eq!(tracks[0].obs.len(), 5);
+            }
         }
         let _ = std::fs::remove_dir_all(&tmp);
     }
@@ -213,6 +293,7 @@ mod tests {
         let job = ArchiveJob {
             organized_dir: tmp.join("organized"),
             archive_dir: tmp.join("archived"),
+            format: ArchiveFormat::Zip,
         };
         let ss = SelfSchedConfig { poll_s: 0.01, ..Default::default() };
         let out = run(&job, 2, AllocMode::SelfSched(ss), TaskOrder::FilenameSorted).unwrap();
@@ -228,6 +309,7 @@ mod tests {
         let job = ArchiveJob {
             organized_dir: tmp.join("organized"),
             archive_dir: tmp.join("archived"),
+            format: ArchiveFormat::Zip,
         };
         for order in [TaskOrder::LargestFirst, TaskOrder::Random(5), TaskOrder::Chronological] {
             let out = run(&job, 2, AllocMode::Batch(Distribution::Block), order).unwrap();
@@ -243,6 +325,7 @@ mod tests {
         let job = ArchiveJob {
             organized_dir: tmp.join("organized"),
             archive_dir: tmp.join("archived"),
+            format: ArchiveFormat::Zip,
         };
         let out = run_cyclic(&job, 2).unwrap();
         // 18 small files -> 18 blocks; 6 zips -> 6 blocks; saved 12.

@@ -12,6 +12,7 @@
 //! placement: one process, one resource set — and the executable is not
 //! Sync). Python is never invoked.
 
+use crate::archive::{ArchiveFormat, ColumnarReader, ZipReader};
 use crate::dem::Dem;
 use crate::geometry::Rect;
 use crate::launch::LaunchMode;
@@ -34,6 +35,8 @@ pub struct ProcessJob {
     pub artifact_dir: PathBuf,
     /// Segmentation rules.
     pub segment: SegmentConfig,
+    /// Archive format of the stage-2 tree being read.
+    pub format: ArchiveFormat,
 }
 
 /// Result of processing.
@@ -52,8 +55,8 @@ pub struct ProcessOutcome {
     pub pjrt_seconds: f64,
 }
 
-/// Find all stage-2 zips under the archive tree.
-pub fn list_archives(archive_dir: &Path) -> Result<Vec<PathBuf>> {
+/// Find all stage-2 archives of `format` under the archive tree.
+pub fn list_archives(archive_dir: &Path, format: ArchiveFormat) -> Result<Vec<PathBuf>> {
     let mut out = Vec::new();
     let mut stack = vec![archive_dir.to_path_buf()];
     while let Some(dir) = stack.pop() {
@@ -64,7 +67,7 @@ pub fn list_archives(archive_dir: &Path) -> Result<Vec<PathBuf>> {
             let path = entry.path();
             if entry.file_type()?.is_dir() {
                 stack.push(path);
-            } else if path.extension().and_then(|e| e.to_str()) == Some("zip") {
+            } else if path.extension().and_then(|e| e.to_str()) == Some(format.extension()) {
                 out.push(path);
             }
         }
@@ -73,11 +76,16 @@ pub fn list_archives(archive_dir: &Path) -> Result<Vec<PathBuf>> {
     Ok(out)
 }
 
-/// Load + segment all tracks inside one archive.
+/// Load + segment all tracks inside one zip archive. The archive is
+/// opened **once** and its member list cached ([`ZipReader`]); the old
+/// per-member `list_members` + `read_member` pattern re-opened and
+/// re-scanned the zip central directory for every member.
 pub fn segments_from_archive(zip_path: &Path, cfg: &SegmentConfig) -> Result<Vec<TrackSegment>> {
     let mut segments = Vec::new();
-    for member in crate::archive::zipdir::list_members(zip_path)? {
-        let data = crate::archive::zipdir::read_member(zip_path, &member)?;
+    let mut rd = ZipReader::open(zip_path)?;
+    let members = rd.members().to_vec();
+    for member in members {
+        let data = rd.read(&member)?;
         let text = String::from_utf8(data).context("non-utf8 CSV member")?;
         for mut track in crate::tracks::parse_csv(&text)? {
             track.normalize();
@@ -85,6 +93,35 @@ pub fn segments_from_archive(zip_path: &Path, cfg: &SegmentConfig) -> Result<Vec
         }
     }
     Ok(segments)
+}
+
+/// Load + segment all tracks inside one columnar store. Entries are
+/// decoded straight from footer-indexed byte ranges, in footer order —
+/// which is the writer's sorted member order, i.e. exactly the order
+/// [`segments_from_archive`] visits zip members. No CSV parse, no
+/// inflation.
+pub fn segments_from_columnar(path: &Path, cfg: &SegmentConfig) -> Result<Vec<TrackSegment>> {
+    let mut segments = Vec::new();
+    let mut rd = ColumnarReader::open(path)?;
+    for i in 0..rd.entries().len() {
+        for mut track in rd.read_entry(i)? {
+            track.normalize();
+            segments.extend(segment_track(&track, cfg));
+        }
+    }
+    Ok(segments)
+}
+
+/// Format-dispatching segment loader for one stage-2 archive.
+pub fn segments_for(
+    path: &Path,
+    format: ArchiveFormat,
+    cfg: &SegmentConfig,
+) -> Result<Vec<TrackSegment>> {
+    match format {
+        ArchiveFormat::Zip => segments_from_archive(path, cfg),
+        ArchiveFormat::Columnar => segments_from_columnar(path, cfg),
+    }
 }
 
 /// Bounding box of a segment set, padded for the DEM tile.
@@ -148,11 +185,11 @@ pub fn pack_segments<'a>(
 /// Process one archive with the worker's model. Returns
 /// `(segments, observations, batches)` and writes the output CSV.
 pub fn process_archive(
-    zip_path: &Path,
+    archive_path: &Path,
     job: &ProcessJob,
     model: &mut TrackModel,
 ) -> Result<(u64, u64, u64)> {
-    let segments = segments_from_archive(zip_path, &job.segment)?;
+    let segments = segments_for(archive_path, job.format, &job.segment)?;
     if segments.is_empty() {
         return Ok((0, 0, 0));
     }
@@ -164,9 +201,11 @@ pub fn process_archive(
     let mut batch = TrackBatch::empty(&man);
     batch.set_dem(&tile, meta)?;
 
-    let rel = zip_path
+    // `with_extension` replaces `.zip`/`.ctrk` alike, so zip and columnar
+    // runs of the same corpus produce identical output trees.
+    let rel = archive_path
         .strip_prefix(&job.archive_dir)
-        .unwrap_or(zip_path)
+        .unwrap_or(archive_path)
         .with_extension("tracks.csv");
     let out_path = job.out_dir.join(rel);
     if let Some(parent) = out_path.parent() {
@@ -246,7 +285,7 @@ pub fn run_launched(
     launch: LaunchMode,
     rec: &RecoveryOptions,
 ) -> Result<ProcessOutcome> {
-    let archives = list_archives(&job.archive_dir)?;
+    let archives = list_archives(&job.archive_dir, job.format)?;
     let tasks: Vec<crate::dist::Task> = archives
         .iter()
         .enumerate()
@@ -289,6 +328,8 @@ pub fn run_launched(
             job.segment.min_obs.to_string(),
             "--max-obs".into(),
             job.segment.max_obs.to_string(),
+            "--format".into(),
+            job.format.label().into(),
         ])?;
         let out = crate::launch::run_processes(
             archives.len(),
@@ -464,6 +505,7 @@ mod tests {
             out_dir: tmp.join("proc"),
             artifact_dir: artifact_dir(),
             segment: SegmentConfig::default(),
+            format: ArchiveFormat::Zip,
         };
         (tmp, job)
     }
@@ -531,7 +573,7 @@ mod tests {
         // Cross-check the PJRT AGL against the rust-side bilinear sampler
         // on one archive.
         let (tmp, job) = fixture("agl");
-        let archives = list_archives(&job.archive_dir).unwrap();
+        let archives = list_archives(&job.archive_dir, job.format).unwrap();
         let mut model = TrackModel::load(&job.artifact_dir).unwrap();
         let segs = segments_from_archive(&archives[0], &job.segment).unwrap();
         if !segs.is_empty() {

@@ -1,0 +1,171 @@
+//! Integration: the columnar data plane against the zip baseline.
+//!
+//! The load-bearing guarantee is *parity*: a columnar pipeline run must
+//! produce a byte-identical `processed/` tree to a zip run of the same
+//! corpus (the codec quantizes exactly onto the CSV grammar, both
+//! writers sort members, and stage 3 visits archives and members in the
+//! same order either way). On top of that, the recovery journals must
+//! treat the two formats as different plans, and the generated scaling
+//! corpus must flow through stage 3 unchanged.
+
+use emproc::archive::ArchiveFormat;
+use emproc::datasets::DatasetKind;
+use emproc::prelude::*;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("emproc_col_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Every file under `root`, as relative path -> content bytes.
+fn tree_files(root: &Path) -> BTreeMap<PathBuf, Vec<u8>> {
+    let mut out = BTreeMap::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        for e in std::fs::read_dir(&d).unwrap() {
+            let e = e.unwrap();
+            if e.file_type().unwrap().is_dir() {
+                stack.push(e.path());
+            } else {
+                let rel = e.path().strip_prefix(root).unwrap().to_path_buf();
+                out.insert(rel, std::fs::read(e.path()).unwrap());
+            }
+        }
+    }
+    out
+}
+
+/// The in-Rust `diff -r`: identical relative paths, identical bytes.
+fn assert_trees_identical(a: &Path, b: &Path, what: &str) {
+    let ta = tree_files(a);
+    let tb = tree_files(b);
+    let names_a: Vec<_> = ta.keys().collect();
+    let names_b: Vec<_> = tb.keys().collect();
+    assert_eq!(names_a, names_b, "{what}: output file sets differ");
+    assert!(!ta.is_empty(), "{what}: no output files at all");
+    for (rel, bytes) in &ta {
+        assert_eq!(
+            bytes,
+            &tb[rel],
+            "{what}: {} differs between zip and columnar runs",
+            rel.display()
+        );
+    }
+}
+
+fn small_cfg(work: PathBuf, dataset: DatasetKind, format: ArchiveFormat) -> PipelineConfig {
+    let mut cfg = PipelineConfig::small(work);
+    cfg.dataset = dataset;
+    cfg.aircraft_skew = emproc::workflow::ScenarioSpec::aircraft_skew(dataset);
+    cfg.days = 1;
+    cfg.workers = 2;
+    cfg.max_file_bytes = 25_000;
+    cfg.format = format;
+    cfg
+}
+
+#[test]
+fn columnar_pipeline_output_is_byte_identical_to_zip_on_both_corpora() {
+    for dataset in [DatasetKind::Monday, DatasetKind::Aerodrome] {
+        let base = tmp(&format!("parity_{}", dataset.label()));
+        let zip_run = Pipeline::new(small_cfg(base.join("zip"), dataset, ArchiveFormat::Zip))
+            .generate_and_run()
+            .unwrap();
+        let col_run =
+            Pipeline::new(small_cfg(base.join("col"), dataset, ArchiveFormat::Columnar))
+                .generate_and_run()
+                .unwrap();
+        // Same logical work...
+        assert_eq!(zip_run.archive.archives, col_run.archive.archives, "{dataset:?}");
+        assert_eq!(zip_run.process.segments, col_run.process.segments, "{dataset:?}");
+        assert_eq!(
+            zip_run.process.observations, col_run.process.observations,
+            "{dataset:?}"
+        );
+        // ...and bit-identical output trees.
+        assert_trees_identical(
+            &base.join("zip/processed"),
+            &base.join("col/processed"),
+            dataset.label(),
+        );
+        // The columnar tree really is columnar (no stray zips).
+        let ctrks = emproc::workflow::stage3::list_archives(
+            &base.join("col/archived"),
+            ArchiveFormat::Columnar,
+        )
+        .unwrap();
+        assert_eq!(ctrks.len(), col_run.archive.archives);
+        assert!(emproc::workflow::stage3::list_archives(
+            &base.join("col/archived"),
+            ArchiveFormat::Zip
+        )
+        .unwrap()
+        .is_empty());
+        let _ = std::fs::remove_dir_all(&base);
+    }
+}
+
+#[test]
+fn resuming_a_journaled_run_under_the_other_format_is_a_hard_error() {
+    // Stage-2/3 task names embed the destination extension, so a journal
+    // written by a zip run must not validate against a columnar plan: the
+    // resume must fail loudly instead of silently mixing formats.
+    let work = tmp("resume_cross");
+    let mut cfg = small_cfg(work.clone(), DatasetKind::Monday, ArchiveFormat::Zip);
+    Pipeline::new(cfg.clone()).generate_and_run().unwrap();
+
+    cfg.resume = true;
+    cfg.format = ArchiveFormat::Columnar;
+    let err = Pipeline::new(cfg.clone()).generate_and_run();
+    assert!(err.is_err(), "cross-format resume must be rejected");
+
+    // Same-format resume of the finished run still replays cleanly.
+    cfg.format = ArchiveFormat::Zip;
+    let resumed = Pipeline::new(cfg).generate_and_run().unwrap();
+    assert!(resumed.process.segments > 0);
+    let _ = std::fs::remove_dir_all(&work);
+}
+
+#[test]
+fn generated_scaling_corpus_flows_through_stage3_in_both_formats() {
+    use emproc::selfsched::AllocMode;
+    let work = tmp("gen_stage3");
+    let spec = emproc::datasets::gencorpus::GenSpec {
+        tracks: 60,
+        obs_per_track: 15,
+        tracks_per_archive: 20,
+        seed: 11,
+    };
+    let trees = emproc::datasets::gencorpus::write_corpus(
+        &spec,
+        &work.join("corpus"),
+        &[ArchiveFormat::Zip, ArchiveFormat::Columnar],
+    )
+    .unwrap();
+    let artifact_dir = emproc::runtime::TrackModel::default_dir();
+    let mut outs = Vec::new();
+    for tree in &trees {
+        let out_dir = work.join(format!("proc_{}", tree.format.label()));
+        let outcome = emproc::workflow::stage3::run(
+            &emproc::workflow::stage3::ProcessJob {
+                archive_dir: tree.root.clone(),
+                out_dir: out_dir.clone(),
+                artifact_dir: artifact_dir.clone(),
+                segment: emproc::tracks::SegmentConfig::default(),
+                format: tree.format,
+            },
+            2,
+            TaskOrder::FilenameSorted,
+            AllocMode::Batch(Distribution::Cyclic),
+        )
+        .unwrap();
+        assert_eq!(outcome.archives, tree.archives, "{}", tree.format.label());
+        assert!(outcome.segments > 0, "{}", tree.format.label());
+        outs.push(out_dir);
+    }
+    assert_trees_identical(&outs[0], &outs[1], "gen corpus stage-3 output");
+    let _ = std::fs::remove_dir_all(&work);
+}

@@ -136,11 +136,16 @@ fn organize_then_archive_round_trips_observations() {
     let report = pipeline.run(&registry, raw_files).unwrap();
 
     let mut recovered = 0u64;
-    let archives =
-        emproc::workflow::stage3::list_archives(&work.join("archived")).unwrap();
+    let archives = emproc::workflow::stage3::list_archives(
+        &work.join("archived"),
+        emproc::archive::ArchiveFormat::Zip,
+    )
+    .unwrap();
     for zip in &archives {
-        for member in emproc::archive::zipdir::list_members(zip).unwrap() {
-            let data = emproc::archive::zipdir::read_member(zip, &member).unwrap();
+        let mut rd = emproc::archive::ZipReader::open(zip).unwrap();
+        let members = rd.members().to_vec();
+        for member in members {
+            let data = rd.read(&member).unwrap();
             let text = String::from_utf8(data).unwrap();
             for track in emproc::tracks::parse_csv(&text).unwrap() {
                 recovered += track.obs.len() as u64;
