@@ -125,6 +125,7 @@ fn main() {
             worker_busy: vec![],
             tasks_per_worker: vec![],
             messages_sent: traces.iter().map(|t| t.messages_sent).sum(),
+            steals: traces.iter().map(|t| t.steals).sum(),
         };
         json::record_timed(
             "throughput tableI sweep (9 cells)",

@@ -464,6 +464,7 @@ mod tests {
             worker_busy: vec![],
             tasks_per_worker: vec![],
             messages_sent: 3,
+            steals: 0,
         };
         json::record_timed("timed", &trace, 5000, 0.5);
         json::record("untimed", 1.0, 0);

@@ -16,19 +16,21 @@ COMMANDS:
       --seed N       RNG seed (default 42)
   organize   stage 1: parse + organize into the 4-tier hierarchy
       --data DIR --out DIR [--workers N] [--order chrono|size|random|filename]
-      [--seed N] [--alloc selfsched|block|cyclic] [--launch inprocess|processes]
+      [--seed N] [--alloc A] [--launch inprocess|processes]
       [--max-retries N] [--run-dir DIR | --resume DIR]
+      A in: selfsched block cyclic lpt steal steal-block steal-cyclic steal-lpt
   archive    stage 2: pack bottom-tier directories into archives
-      --data DIR --out DIR [--dist block|cyclic|selfsched] [--workers N]
+      --data DIR --out DIR [--dist A] [--workers N]
       [--order O] [--seed N] [--launch L] [--format zip|columnar]
       [--max-retries N] [--run-dir DIR | --resume DIR]
   process    stage 3: interpolate into track segments (PJRT hot path)
       --data DIR --out DIR [--workers N] [--artifacts DIR]
-      [--order O] [--seed N] [--alloc selfsched|block|cyclic] [--launch L]
+      [--order O] [--seed N] [--alloc A] [--launch L]
       [--format zip|columnar] [--max-retries N] [--run-dir DIR | --resume DIR]
   pipeline   all three stages end-to-end on a generated corpus
       --out DIR [--dataset monday|aerodrome] [--scale F] [--workers N] [--seed N]
       [--launch L] [--format zip|columnar] [--max-retries N]
+      [--policy fixed|steal|lpt|adaptive]
       (or: --resume DIR to finish a killed run — same --format, the
        stage-2/3 journals embed the archive extension)
   gen        write a scaling stage-2 archive corpus directly (both formats
@@ -45,14 +47,21 @@ COMMANDS:
       [--triples CORESxNPPN] [--max-procs N] [--max-retries N]
       [--datasets monday,aerodrome] [--strategies selfsched,block,cyclic]
       [--orders chrono,size,filename,random] [--json NAME]
+      [--policy P | --policies fixed,steal,lpt,adaptive]
       [--format zip|columnar]
       (or: --resume DIR to finish a killed matrix run)
 
+  Scheduling policies: --policy rewrites every stage's run shape before
+  dispatch — steal (work stealing over the pre-assigned batch queues),
+  lpt (cost-guided longest-processing-time packing), adaptive (AIMD
+  tasks-per-message under self-scheduling, capped at the Fig 7 optimum).
+
   Crash tolerance: every pipeline/scenario stage journals completed tasks
   (fsync'd) under <run-dir>/journal/; a worker kill -9'd mid self-scheduled
-  `--launch processes` run is retried on the survivors (--max-retries,
-  default 2; batch runs fail fast — pre-assignment has no one to requeue
-  to), and a killed job is finished by rerunning with --resume DIR.
+  or stealing `--launch processes` run is retried on the survivors
+  (--max-retries, default 2; plain block/cyclic batch runs fail fast —
+  pre-assignment has no one to requeue to), and a killed job is finished
+  by rerunning with --resume DIR.
   queries    §III.B aerodrome query generation (geometry pipeline)
       --out FILE [--aerodromes N] [--seed N]
   bench <EXP|all>   regenerate a paper table/figure on the simulator

@@ -67,6 +67,47 @@ impl Task {
     }
 }
 
+/// Per-task scalar cost estimate feeding LPT packing and the
+/// cost-descending task order. The drivers and weights mirror
+/// `CostModel::paper_calibrated` (stage-1/2 work is `bytes / 1e6` MB;
+/// stage 3 adds `obs * c_obs + dem_cells * c_dem`), so the estimate ranks
+/// tasks the same way the calibrated simulator charges for them — the
+/// absolute scale is irrelevant, only the ordering and ratios matter.
+#[derive(Debug, Clone)]
+pub struct CostEstimate {
+    costs: Vec<f64>,
+}
+
+impl CostEstimate {
+    /// The scalar estimate for one task.
+    pub fn of(task: &Task) -> f64 {
+        task.bytes as f64 * 1e-6 + task.obs as f64 * 5.0e-3 + task.dem_cells as f64 * 2.0e-4
+    }
+
+    /// Estimates for a builder's task list, indexed like the list (by
+    /// convention `tasks[i].id == i`, so this is also indexed by id).
+    pub fn from_tasks(tasks: &[Task]) -> Self {
+        CostEstimate { costs: tasks.iter().map(Self::of).collect() }
+    }
+
+    /// Cost of task `id` (0.0 for ids beyond the estimated list — the
+    /// neutral value: an unknown task neither attracts nor repels a bin).
+    pub fn get(&self, id: usize) -> f64 {
+        self.costs.get(id).copied().unwrap_or(0.0)
+    }
+
+    /// All costs, indexed by task id.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.costs
+    }
+
+    /// All costs, owned — e.g. for [`crate::launch::RunOptions`]'s
+    /// `cost` field.
+    pub fn into_vec(self) -> Vec<f64> {
+        self.costs
+    }
+}
+
 /// Task-organization policy (§II.B "organize" step).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TaskOrder {
@@ -79,6 +120,10 @@ pub enum TaskOrder {
     Random(u64),
     /// Ascending [`Task::name`] (the LLMapReduce listing order, §IV.B).
     FilenameSorted,
+    /// Descending [`CostEstimate`] — the self-scheduled counterpart of
+    /// LPT packing: grant the most expensive work first so the tail of
+    /// the run is made of cheap tasks (`--policy lpt`).
+    CostDescending,
 }
 
 /// Visit order for `tasks` under `order`: a permutation of `0..tasks.len()`
@@ -100,6 +145,12 @@ pub fn order_tasks(tasks: &[Task], order: TaskOrder) -> Vec<usize> {
         TaskOrder::FilenameSorted => {
             idx.sort_by(|&a, &b| tasks[a].name.cmp(&tasks[b].name).then(a.cmp(&b)));
         }
+        TaskOrder::CostDescending => {
+            let cost = CostEstimate::from_tasks(tasks);
+            idx.sort_by(|&a, &b| {
+                cost.get(b).total_cmp(&cost.get(a)).then(a.cmp(&b))
+            });
+        }
     }
     idx
 }
@@ -113,13 +164,35 @@ pub enum Distribution {
     Block,
     /// Round-robin: worker `w` gets `ordered[w]`, `ordered[w + W]`, ...
     Cyclic,
+    /// Longest-processing-time-first bin packing: tasks are assigned
+    /// cost-descending, each to the currently least-loaded worker (tie:
+    /// lowest index). Balances *cost*, not count — [`distribute`] runs it
+    /// with unit costs (degenerating to round-robin); feed real estimates
+    /// through [`distribute_costed`].
+    Lpt,
 }
 
 /// Split `ordered` across `nworkers` queues. The result is always a
 /// partition: every element of `ordered` appears in exactly one queue, in
-/// its original relative order, and exactly `nworkers` queues are returned
-/// (later ones empty when there are more workers than tasks).
+/// its original relative order (block/cyclic), and exactly `nworkers`
+/// queues are returned (later ones empty when there are more workers than
+/// tasks). [`Distribution::Lpt`] packs with unit costs here; use
+/// [`distribute_costed`] to feed a real [`CostEstimate`].
 pub fn distribute(ordered: &[usize], nworkers: usize, dist: Distribution) -> Vec<Vec<usize>> {
+    distribute_costed(ordered, nworkers, dist, &[])
+}
+
+/// Cost-aware [`distribute`]: `cost` is indexed by task id (see
+/// [`CostEstimate::as_slice`]; ids beyond it cost 0.0, and an empty slice
+/// means unit costs). Block and cyclic ignore the costs entirely — their
+/// assignment is positional by definition — so this is a drop-in superset
+/// of [`distribute`]; only [`Distribution::Lpt`] consumes them.
+pub fn distribute_costed(
+    ordered: &[usize],
+    nworkers: usize,
+    dist: Distribution,
+    cost: &[f64],
+) -> Vec<Vec<usize>> {
     assert!(nworkers >= 1, "need at least one worker");
     let mut queues: Vec<Vec<usize>> = vec![Vec::new(); nworkers];
     match dist {
@@ -136,6 +209,32 @@ pub fn distribute(ordered: &[usize], nworkers: usize, dist: Distribution) -> Vec
         Distribution::Cyclic => {
             for (i, &t) in ordered.iter().enumerate() {
                 queues[i % nworkers].push(t);
+            }
+        }
+        Distribution::Lpt => {
+            let unknown = if cost.is_empty() { 1.0 } else { 0.0 };
+            let cost_of = |t: usize| -> f64 { cost.get(t).copied().unwrap_or(unknown) };
+            // Visit positions cost-descending (stable: ties keep their
+            // order in `ordered`), assigning each task to the least-loaded
+            // queue so far — the classic LPT greedy, deterministic for any
+            // input.
+            let mut pos: Vec<usize> = (0..ordered.len()).collect();
+            pos.sort_by(|&a, &b| {
+                cost_of(ordered[b]).total_cmp(&cost_of(ordered[a])).then(a.cmp(&b))
+            });
+            let mut load = vec![0.0f64; nworkers];
+            for p in pos {
+                let t = ordered[p];
+                // Least-loaded bin, lowest index on ties (strict `<` keeps
+                // the earliest minimum).
+                let mut w = 0usize;
+                for i in 1..nworkers {
+                    if load[i] < load[w] {
+                        w = i;
+                    }
+                }
+                queues[w].push(t);
+                load[w] += cost_of(t);
             }
         }
     }
@@ -186,6 +285,7 @@ mod tests {
                 TaskOrder::LargestFirst,
                 TaskOrder::Random(rng.below(1_000) as u64),
                 TaskOrder::FilenameSorted,
+                TaskOrder::CostDescending,
             ] {
                 let idx = order_tasks(&tasks, order);
                 prop_assert!(
@@ -214,6 +314,15 @@ mod tests {
                             prop_assert!(
                                 tasks[pair[0]].name <= tasks[pair[1]].name,
                                 "names out of order"
+                            );
+                        }
+                    }
+                    TaskOrder::CostDescending => {
+                        let cost = CostEstimate::from_tasks(&tasks);
+                        for pair in idx.windows(2) {
+                            prop_assert!(
+                                cost.get(pair[0]) >= cost.get(pair[1]),
+                                "costs out of order"
                             );
                         }
                     }
@@ -255,6 +364,7 @@ mod tests {
             TaskOrder::Chronological,
             TaskOrder::LargestFirst,
             TaskOrder::FilenameSorted,
+            TaskOrder::CostDescending,
         ] {
             assert_eq!(order_tasks(&tasks, order), want, "{order:?}");
         }
@@ -369,6 +479,105 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn lpt_closed_form_on_a_skewed_cost_vector() {
+        // Costs [5, 4, 3, 2, 2] over 2 workers: LPT assigns 5->w0, 4->w1,
+        // 3->w1 (load 4 < 5), 2->w0 (5 < 7), 2->w0 (tie 7/7 -> lowest
+        // index) — final loads 9 and 7, the optimal makespan for this
+        // vector (greedy LPT is optimal here; any split has a side >= 8,
+        // and {5,2,2}/{4,3} achieves 9 vs the naive block split's 12).
+        let ordered: Vec<usize> = (0..5).collect();
+        let cost = [5.0, 4.0, 3.0, 2.0, 2.0];
+        let queues = distribute_costed(&ordered, 2, Distribution::Lpt, &cost);
+        assert_eq!(queues, vec![vec![0, 3, 4], vec![1, 2]]);
+        let load = |q: &[usize]| q.iter().map(|&t| cost[t]).sum::<f64>();
+        assert_eq!(load(&queues[0]), 9.0);
+        assert_eq!(load(&queues[1]), 7.0);
+    }
+
+    #[test]
+    fn lpt_beats_block_on_monotone_costs() {
+        // Monotonically falling costs (the aerodrome archiving skew):
+        // block gives the first worker all the heavy tasks; LPT's max bin
+        // load must never exceed block's.
+        let n = 40;
+        let ordered: Vec<usize> = (0..n).collect();
+        let cost: Vec<f64> = (0..n).map(|i| (n - i) as f64).collect();
+        let max_load = |queues: &[Vec<usize>]| -> f64 {
+            queues
+                .iter()
+                .map(|q| q.iter().map(|&t| cost[t]).sum::<f64>())
+                .fold(0.0, f64::max)
+        };
+        for nworkers in [2, 3, 7] {
+            let lpt = distribute_costed(&ordered, nworkers, Distribution::Lpt, &cost);
+            let block = distribute_costed(&ordered, nworkers, Distribution::Block, &cost);
+            assert!(
+                max_load(&lpt) <= max_load(&block),
+                "LPT {} > block {} at W={nworkers}",
+                max_load(&lpt),
+                max_load(&block)
+            );
+        }
+    }
+
+    #[test]
+    fn lpt_is_a_cost_partition() {
+        // LPT balances cost, not count, so it sits outside the
+        // count-fairness loop above — but it must still be a partition,
+        // and with unit costs (plain `distribute`) it degenerates to
+        // exactly the cyclic round-robin assignment.
+        testing::check("lpt partition", |rng| {
+            let n = gen::task_count(rng);
+            let nworkers = gen::worker_count(rng);
+            let tasks = mk_tasks(rng, n);
+            let ordered: Vec<usize> = order_tasks(&tasks, TaskOrder::Random(5));
+            let cost = CostEstimate::from_tasks(&tasks);
+            let queues = distribute_costed(&ordered, nworkers, Distribution::Lpt, cost.as_slice());
+            prop_assert!(queues.len() == nworkers, "queue count");
+            let mut count = vec![0usize; n];
+            for q in &queues {
+                for &t in q {
+                    prop_assert!(t < n, "out-of-range index {t}");
+                    count[t] += 1;
+                }
+            }
+            prop_assert!(count.iter().all(|&c| c == 1), "not a partition: {count:?}");
+            let unit = distribute(&ordered, nworkers, Distribution::Lpt);
+            let cyclic = distribute(&ordered, nworkers, Distribution::Cyclic);
+            prop_assert!(unit == cyclic, "unit-cost LPT must round-robin");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cost_descending_order_sorts_by_estimate() {
+        let mut rng = Rng::new(17);
+        let tasks = mk_tasks(&mut rng, 200);
+        let cost = CostEstimate::from_tasks(&tasks);
+        let idx = order_tasks(&tasks, TaskOrder::CostDescending);
+        assert!(is_permutation(&idx, tasks.len()));
+        for pair in idx.windows(2) {
+            assert!(
+                cost.get(pair[0]) >= cost.get(pair[1]),
+                "costs out of order: {} then {}",
+                cost.get(pair[0]),
+                cost.get(pair[1])
+            );
+        }
+        // The estimate weighs all three drivers, with obs dominating at
+        // the calibrated weights (5e-3/obs vs 1e-6/byte vs 2e-4/cell).
+        let t = Task {
+            id: 0,
+            bytes: 2_000_000,
+            obs: 100,
+            dem_cells: 500,
+            chrono_key: 0,
+            name: "t".into(),
+        };
+        assert!((CostEstimate::of(&t) - (2.0 + 0.5 + 0.1)).abs() < 1e-9);
     }
 
     #[test]

@@ -84,7 +84,10 @@ where
     assert_eq!(ordered.len(), ntasks, "ordered must cover all tasks");
     let job_start = Instant::now();
 
-    let (done_tx, done_rx) = mpsc::channel::<(usize, Result<()>)>();
+    // Completion reports carry the worker's *measured* busy seconds for
+    // the message, so the manager can tell protocol overhead (round-trip
+    // minus busy) from work — the signal the adaptive packing rule needs.
+    let (done_tx, done_rx) = mpsc::channel::<(usize, Result<()>, f64)>();
     let mut task_txs = Vec::with_capacity(nworkers);
     let mut task_rxs = Vec::with_capacity(nworkers);
     for _ in 0..nworkers {
@@ -104,11 +107,12 @@ where
                 let mut state = match catch_panics(|| init(w)) {
                     Ok(s) => s,
                     Err(e) => {
-                        let _ = done_tx.send((w, Err(e)));
+                        let _ = done_tx.send((w, Err(e), 0.0));
                         return;
                     }
                 };
                 while let Ok(msg) = rx.recv() {
+                    let began = Instant::now();
                     let mut result = Ok(());
                     for ti in msg {
                         // A panicking task is reported exactly like a
@@ -120,7 +124,8 @@ where
                             break;
                         }
                     }
-                    if done_tx.send((w, result)).is_err() {
+                    let busy = began.elapsed().as_secs_f64();
+                    if done_tx.send((w, result, busy)).is_err() {
                         break; // manager gone
                     }
                 }
@@ -149,10 +154,10 @@ where
         // Grant-on-completion loop with the paper's manager-side poll.
         while mgr.outstanding() > 0 {
             match done_rx.recv_timeout(Duration::from_secs_f64(cfg.poll_s)) {
-                Ok((w, result)) => {
+                Ok((w, result, busy)) => {
                     // An init failure reports without an in-flight message;
                     // the core ignores it (0 tasks) and we abort below.
-                    mgr.complete(w, elapsed());
+                    mgr.complete_with_busy(w, elapsed(), busy);
                     if let Err(e) = result {
                         mgr.abort();
                         if first_error.is_none() {
@@ -237,7 +242,39 @@ where
 {
     assert!(nworkers >= 1);
     assert_eq!(ordered.len(), ntasks);
-    let queues = distribute(ordered, nworkers, dist);
+    run_batch_queues_init(ntasks, distribute(ordered, nworkers, dist), init, work)
+}
+
+/// Batch run over caller-supplied per-worker queues — the entry point
+/// behind every pre-assigned distribution, including cost-guided LPT
+/// packing where the caller computes queues with
+/// [`crate::dist::distribute_costed`].
+pub fn run_batch_queues<F>(ntasks: usize, queues: Vec<Vec<usize>>, work: F) -> Result<SchedTrace>
+where
+    F: Fn(usize, usize) -> Result<()> + Send + Sync,
+{
+    run_batch_queues_init(ntasks, queues, |_| Ok(()), move |_, w, ti| work(w, ti))
+}
+
+/// [`run_batch_queues`] with per-worker state built inside each worker's
+/// own thread (see [`run_batch_init`]).
+pub fn run_batch_queues_init<S, I, F>(
+    ntasks: usize,
+    queues: Vec<Vec<usize>>,
+    init: I,
+    work: F,
+) -> Result<SchedTrace>
+where
+    I: Fn(usize) -> Result<S> + Send + Sync,
+    F: Fn(&mut S, usize, usize) -> Result<()> + Send + Sync,
+{
+    let nworkers = queues.len();
+    assert!(nworkers >= 1);
+    assert_eq!(
+        queues.iter().map(Vec::len).sum::<usize>(),
+        ntasks,
+        "queues must cover all tasks"
+    );
     let job_start = Instant::now();
     let results: Vec<Result<(f64, f64, usize)>> = std::thread::scope(|scope| {
         let handles: Vec<_> = queues
@@ -281,13 +318,104 @@ where
     Ok(log.trace(job_start.elapsed().as_secs_f64()))
 }
 
+/// Work-stealing batch run: `queues` are pre-assigned per-worker queues
+/// exactly as in [`run_batch_queues`], but a worker that drains its own
+/// queue steals the tail of the longest remaining one instead of going
+/// idle — closing §IV.B's block-vs-cyclic gap at run time instead of at
+/// assignment time. All allocation decisions live in the shared
+/// [`Manager`] core ([`Manager::take_batch`]); this backend supplies
+/// wall-clock timestamps, threads, and a mutex around the core. No
+/// allocation messages are sent (`messages_sent` stays 0); stolen tasks
+/// are counted in the trace's `steals`.
+pub fn run_batch_steal<F>(ntasks: usize, queues: Vec<Vec<usize>>, work: F) -> Result<SchedTrace>
+where
+    F: Fn(usize, usize) -> Result<()> + Send + Sync,
+{
+    run_batch_steal_init(ntasks, queues, |_| Ok(()), move |_, w, ti| work(w, ti))
+}
+
+/// [`run_batch_steal`] with per-worker state built inside each worker's
+/// own thread (see [`run_batch_init`]).
+pub fn run_batch_steal_init<S, I, F>(
+    ntasks: usize,
+    queues: Vec<Vec<usize>>,
+    init: I,
+    work: F,
+) -> Result<SchedTrace>
+where
+    I: Fn(usize) -> Result<S> + Send + Sync,
+    F: Fn(&mut S, usize, usize) -> Result<()> + Send + Sync,
+{
+    let nworkers = queues.len();
+    assert!(nworkers >= 1);
+    assert_eq!(
+        queues.iter().map(Vec::len).sum::<usize>(),
+        ntasks,
+        "queues must cover all tasks"
+    );
+    let job_start = Instant::now();
+    // The cursor/packing side of the core is unused in steal mode, so the
+    // config is inert; the manager only arbitrates the deques.
+    let mut mgr = Manager::new(
+        &[],
+        nworkers,
+        SelfSchedConfig { poll_s: 0.0, msg_s: 0.0, tasks_per_message: 1, adaptive: false },
+    );
+    mgr.assign_queues(queues);
+    // Manager + first error behind one lock: take/complete are O(workers)
+    // pointer moves, so contention is negligible next to real task work.
+    let shared = std::sync::Mutex::new((mgr, None::<anyhow::Error>));
+    std::thread::scope(|scope| {
+        for w in 0..nworkers {
+            let shared = &shared;
+            let init = &init;
+            let work = &work;
+            scope.spawn(move || {
+                let elapsed = || job_start.elapsed().as_secs_f64();
+                let mut state = match catch_panics(|| init(w)) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        let mut g = shared.lock().unwrap();
+                        g.0.abort();
+                        g.1.get_or_insert(e);
+                        return;
+                    }
+                };
+                loop {
+                    // In-process queues only shrink (no worker deaths, no
+                    // requeue), so a `None` means the run is over for us.
+                    let taken = shared.lock().unwrap().0.take_batch(w, elapsed());
+                    let Some((ti, _stolen)) = taken else { return };
+                    let began = Instant::now();
+                    let result = catch_panics(|| work(&mut state, w, ti));
+                    let busy = began.elapsed().as_secs_f64();
+                    let mut g = shared.lock().unwrap();
+                    g.0.complete_with_busy(w, elapsed(), busy);
+                    if let Err(e) = result {
+                        // First-error abort, batch flavor: stop taking new
+                        // tasks everywhere.
+                        g.0.abort();
+                        g.1.get_or_insert(e);
+                        return;
+                    }
+                }
+            });
+        }
+    });
+    let (mgr, err) = shared.into_inner().expect("no worker holds the lock");
+    if let Some(e) = err {
+        return Err(e);
+    }
+    Ok(mgr.into_trace(job_start.elapsed().as_secs_f64()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
 
     fn fast_cfg() -> SelfSchedConfig {
-        SelfSchedConfig { poll_s: 0.01, msg_s: 0.0, tasks_per_message: 1 }
+        SelfSchedConfig { poll_s: 0.01, msg_s: 0.0, tasks_per_message: 1, adaptive: false }
     }
 
     #[test]
@@ -480,6 +608,110 @@ mod tests {
             Ok(())
         });
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn steal_runs_every_task_exactly_once_and_rebalances_block_skew() {
+        // Block distribution puts all eight slow tasks on worker 0 (the
+        // §IV.B pathology); idle workers must steal them off its tail.
+        let n = 64;
+        let ordered: Vec<usize> = (0..n).collect();
+        let queues = distribute(&ordered, 8, Distribution::Block);
+        let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let trace = run_batch_steal(n, queues, |_, ti| {
+            counts[ti].fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(Duration::from_millis(if ti < 8 { 20 } else { 1 }));
+            Ok(())
+        })
+        .unwrap();
+        assert!(counts.iter().all(|c| c.load(Ordering::SeqCst) == 1));
+        trace.check_invariants(n).unwrap();
+        assert_eq!(trace.messages_sent, 0, "stealing keeps batch semantics");
+        assert!(trace.steals > 0, "idle workers must steal under block skew");
+    }
+
+    #[test]
+    fn steal_init_builds_state_and_errors_abort_the_run() {
+        let n = 30;
+        let ordered: Vec<usize> = (0..n).collect();
+        let queues = distribute(&ordered, 3, Distribution::Cyclic);
+        let trace = run_batch_steal_init(
+            n,
+            queues.clone(),
+            |w| Ok(w * 10),
+            |state, w, _ti| {
+                assert_eq!(*state, w * 10);
+                Ok(())
+            },
+        )
+        .unwrap();
+        trace.check_invariants(n).unwrap();
+
+        let ran = AtomicUsize::new(0);
+        let err = run_batch_steal(n, queues, |_, ti| {
+            ran.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(Duration::from_millis(1));
+            if ti == 4 {
+                anyhow::bail!("task 4 exploded");
+            }
+            Ok(())
+        });
+        assert!(err.is_err());
+        assert!(ran.load(Ordering::SeqCst) < n, "abort must stop the takers");
+    }
+
+    #[test]
+    fn steal_worker_panic_is_an_error() {
+        let n = 12;
+        let ordered: Vec<usize> = (0..n).collect();
+        let queues = distribute(&ordered, 3, Distribution::Block);
+        let r = run_batch_steal(n, queues, |_, ti| {
+            if ti == 5 {
+                panic!("steal task 5 exploded");
+            }
+            Ok(())
+        });
+        let err = r.expect_err("panicking steal worker must fail the run");
+        assert!(format!("{err:#}").contains("panicked"), "{err:#}");
+    }
+
+    #[test]
+    fn batch_queues_runs_caller_supplied_lpt_queues() {
+        // The queue-level entry point accepts any partition, e.g. LPT.
+        let n = 9;
+        let ordered: Vec<usize> = (0..n).collect();
+        let cost: Vec<f64> = (0..n).map(|i| (n - i) as f64).collect();
+        let queues =
+            crate::dist::distribute_costed(&ordered, 2, Distribution::Lpt, &cost);
+        let done = AtomicUsize::new(0);
+        let trace = run_batch_queues(n, queues, |_, _| {
+            done.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(done.load(Ordering::SeqCst), n);
+        trace.check_invariants(n).unwrap();
+        assert_eq!(trace.messages_sent, 0);
+    }
+
+    #[test]
+    fn adaptive_selfsched_runs_every_task_exactly_once() {
+        let n = 150;
+        let cfg = SelfSchedConfig { adaptive: true, ..fast_cfg() };
+        let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let ordered: Vec<usize> = (0..n).collect();
+        let trace = run_self_scheduled(n, &ordered, 6, cfg, |_, ti| {
+            counts[ti].fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        })
+        .unwrap();
+        assert!(counts.iter().all(|c| c.load(Ordering::SeqCst) == 1));
+        trace.check_invariants(n).unwrap();
+        // The factor may grow, so there are at most as many messages as
+        // the static config would send — and at least enough to cover
+        // every task at the 300-task ceiling.
+        assert!(trace.messages_sent <= n);
+        assert!(trace.messages_sent >= n.div_ceil(300));
     }
 
     #[test]

@@ -22,14 +22,17 @@
 //!
 //! Crash *tolerance* sits on top of that discipline (see
 //! [`crate::recovery`]): with [`RunOptions::max_retries`] > 0, a
-//! self-scheduled worker that dies **mid-run** has its outstanding grant
-//! requeued onto the surviving workers (via [`Manager::requeue`]), up to
-//! `max_retries` attempts per task — exhausting them, or losing every
-//! worker, fails the run with *all* the dead workers' stderr attached.
-//! Batch (block/cyclic) runs still fail fast: the work was pre-assigned,
-//! so there is no one to requeue a dead worker's queue to. Deaths during
-//! init (before `ready`) also fail fast — an init failure is systematic,
-//! not a node loss. Every completed grant can be journaled through
+//! self-scheduled or work-stealing worker that dies **mid-run** has its
+//! outstanding grant requeued onto the surviving workers (via
+//! [`Manager::requeue`]), up to `max_retries` attempts per task —
+//! exhausting them, or losing every worker, fails the run with *all* the
+//! dead workers' stderr attached. Under [`AllocMode::Steal`] the dead
+//! worker's *unstarted* queue needs no requeue at all: survivors drain it
+//! through ordinary steals. Plain batch (block/cyclic) runs still fail
+//! fast: the work was pre-assigned and nothing dynamic remains, so there
+//! is no one to requeue a dead worker's queue to. Deaths during init
+//! (before `ready`) also fail fast — an init failure is systematic, not
+//! a node loss. Every completed grant can be journaled through
 //! [`RunOptions::journal`] for `--resume`.
 
 pub mod protocol;
@@ -37,10 +40,10 @@ pub mod worker;
 
 pub use worker::worker_loop;
 
-use crate::dist::distribute;
+use crate::dist::distribute_costed;
 use crate::recovery::{JournalEvent, JournalWriter};
 use crate::sched::{Manager, WorkerLog};
-use crate::selfsched::{AllocMode, SchedTrace};
+use crate::selfsched::{AllocMode, SchedTrace, SelfSchedConfig};
 use crate::triples::TriplesConfig;
 use anyhow::{bail, Context, Result};
 use protocol::{accumulate_stats, WorkerMsg};
@@ -146,17 +149,22 @@ impl LaunchOutcome {
     }
 }
 
-/// Per-run recovery knobs for [`run_processes`].
+/// Per-run recovery and cost knobs for [`run_processes`].
 #[derive(Debug, Default)]
 pub struct RunOptions<'a> {
-    /// Grant-level retries per task when a self-scheduled worker dies
-    /// mid-run (0 = the strict PR-4 behavior: any death fails the run).
-    /// Batch runs ignore this and always fail fast.
+    /// Grant-level retries per task when a self-scheduled or stealing
+    /// worker dies mid-run (0 = the strict PR-4 behavior: any death
+    /// fails the run). Plain batch runs ignore this and always fail fast.
     pub max_retries: u32,
     /// Journal to append one [`JournalEvent::Ok`] per completed grant
     /// (and one [`JournalEvent::Retry`] per requeued task) to, fsync'd —
     /// the durable state `--resume` replays.
     pub journal: Option<&'a mut JournalWriter>,
+    /// Per-task cost estimates indexed by task id (see
+    /// [`crate::dist::CostEstimate::as_slice`]), consumed by
+    /// [`crate::dist::Distribution::Lpt`] queue packing under batch and
+    /// steal modes. Empty = unit costs.
+    pub cost: Vec<f64>,
 }
 
 /// How long workers get to print `ready` (stage init — e.g. model
@@ -228,12 +236,26 @@ fn send_grant(child: &mut WorkerProc, tasks: &[usize]) -> bool {
     writeln!(stdin, "{line}").and_then(|()| stdin.flush()).is_ok()
 }
 
+/// Next message for idle worker `w` under either dynamic mode: packed
+/// cursor grants for self-scheduling, single tasks off the pre-assigned
+/// queues (own front, then requeued work, then the longest tail) for
+/// work stealing.
+fn next_grant(mgr: &mut Manager<'_>, steal: bool, w: usize, now_s: f64) -> Option<Vec<usize>> {
+    if steal {
+        mgr.take_batch(w, now_s).map(|(t, _)| vec![t])
+    } else {
+        mgr.grant(w, now_s)
+    }
+}
+
 /// Run `ordered` task ids across `nworkers` worker subprocesses spawned
 /// from `cmd`, allocating via `alloc` — self-scheduled through the shared
 /// [`Manager`] core (grant-on-completion with the protocol's `poll_s`
-/// receive poll) or pre-distributed block/cyclic (each worker gets its
+/// receive poll), pre-distributed block/cyclic/LPT (each worker gets its
 /// whole queue as one grant; zero allocation messages, like
-/// [`crate::exec::run_batch`]).
+/// [`crate::exec::run_batch`]), or work-stealing over pre-assigned
+/// queues (single-task grant-on-completion via [`Manager::take_batch`];
+/// steals counted, `messages_sent` 0 like any batch run).
 ///
 /// `ntasks` is the size of the stage's full task list (what workers
 /// enumerate and `ready` is checked against); `ordered` may be a subset
@@ -243,8 +265,10 @@ fn send_grant(child: &mut WorkerProc, tasks: &[usize]) -> bool {
 /// Any worker failure — a reported task error, a crash or kill without
 /// the final `trace` line, a protocol violation, a task-list mismatch —
 /// fails the run with the worker's captured stderr attached, except a
-/// mid-run self-scheduled death with [`RunOptions::max_retries`] > 0,
-/// which requeues the dead worker's grant onto the survivors instead.
+/// mid-run self-scheduled or stealing death with
+/// [`RunOptions::max_retries`] > 0, which requeues the dead worker's
+/// grant onto the survivors instead (stealing survivors also drain its
+/// unstarted queue).
 pub fn run_processes(
     ntasks: usize,
     ordered: &[usize],
@@ -393,12 +417,29 @@ pub fn run_processes(
     if failure.is_none() {
         let job_start = Instant::now();
         match alloc {
-            AllocMode::SelfSched(ss) => {
-                let mut mgr = Manager::new(ordered, nworkers, ss);
+            AllocMode::SelfSched(_) | AllocMode::Steal(_) => {
+                // One driver for both dynamic modes: self-scheduling
+                // grants packed messages from the ordered cursor; stealing
+                // grants one task at a time from pre-assigned queues (own
+                // front first, then the longest remaining tail). They
+                // share the poll loop and the death-recovery path — a dead
+                // stealing worker's in-flight task is requeued and its
+                // unstarted queue is drained by survivors through
+                // ordinary steals.
+                let steal = matches!(alloc, AllocMode::Steal(_));
+                let (mut mgr, poll_s) = match alloc {
+                    AllocMode::SelfSched(ss) => (Manager::new(ordered, nworkers, ss), ss.poll_s),
+                    AllocMode::Steal(dist) => {
+                        let mut m = Manager::new(&[], nworkers, SelfSchedConfig::default());
+                        m.assign_queues(distribute_costed(ordered, nworkers, dist, &opts.cost));
+                        (m, SelfSchedConfig::default().poll_s)
+                    }
+                    AllocMode::Batch(_) => unreachable!("batch is handled below"),
+                };
                 // Sequential initial fan-out, "as fast as possible".
                 for w in 0..nworkers {
                     let now = job_start.elapsed().as_secs_f64();
-                    let Some(msg) = mgr.grant(w, now) else { break };
+                    let Some(msg) = next_grant(&mut mgr, steal, w, now) else { continue };
                     delivered[w] = send_grant(&mut children[w], &msg);
                     if !delivered[w] {
                         if opts.max_retries > 0 {
@@ -412,7 +453,7 @@ pub fn run_processes(
                 }
                 // Grant-on-completion with the protocol's manager poll.
                 while failure.is_none() && mgr.outstanding() > 0 {
-                    match rx.recv_timeout(Duration::from_secs_f64(ss.poll_s.max(1e-3))) {
+                    match rx.recv_timeout(Duration::from_secs_f64(poll_s.max(1e-3))) {
                         Ok((w, Event::Msg(WorkerMsg::Ok { stats: s }))) => {
                             let now = job_start.elapsed().as_secs_f64();
                             let flight = if opts.journal.is_some() {
@@ -445,7 +486,7 @@ pub fn run_processes(
                                     continue;
                                 }
                             }
-                            if let Some(msg) = mgr.grant(w, now) {
+                            if let Some(msg) = next_grant(&mut mgr, steal, w, now) {
                                 delivered[w] = send_grant(&mut children[w], &msg);
                                 if !delivered[w] && opts.max_retries == 0 {
                                     failure = Some((w, "hung up before receiving work".into()));
@@ -536,7 +577,7 @@ pub fn run_processes(
                                         continue;
                                     }
                                     let now = job_start.elapsed().as_secs_f64();
-                                    if let Some(msg) = mgr.grant(w2, now) {
+                                    if let Some(msg) = next_grant(&mut mgr, steal, w2, now) {
                                         // A failed send is another dying
                                         // worker; its own Eof requeues.
                                         delivered[w2] = send_grant(&mut children[w2], &msg);
@@ -571,7 +612,7 @@ pub fn run_processes(
             AllocMode::Batch(dist) => {
                 // Pre-distribute: each worker receives its whole queue as
                 // one grant, and reports once. Zero allocation messages.
-                let queues = distribute(ordered, nworkers, dist);
+                let queues = distribute_costed(ordered, nworkers, dist, &opts.cost);
                 let qlen: Vec<usize> = queues.iter().map(Vec::len).collect();
                 let mut log = WorkerLog::new(nworkers);
                 let mut starts = vec![0.0f64; nworkers];
@@ -652,14 +693,14 @@ pub fn run_processes(
     for c in &mut children {
         c.stdin = None;
     }
-    // With retries on a self-scheduled run, a worker that dies *after*
-    // its last acknowledgment but before its seal is the same node loss
-    // phase 2 tolerates — all its work was acked and nothing is
-    // outstanding to requeue — so losing only the seal must not throw
-    // the finished run away. (Strict mode and batch runs keep the seal
-    // mandatory.)
-    let tolerate_seal_loss =
-        opts.max_retries > 0 && matches!(alloc, AllocMode::SelfSched(_));
+    // With retries on a self-scheduled or stealing run, a worker that
+    // dies *after* its last acknowledgment but before its seal is the
+    // same node loss phase 2 tolerates — all its work was acked and
+    // nothing is outstanding to requeue — so losing only the seal must
+    // not throw the finished run away. (Strict mode and plain batch runs
+    // keep the seal mandatory.)
+    let tolerate_seal_loss = opts.max_retries > 0
+        && matches!(alloc, AllocMode::SelfSched(_) | AllocMode::Steal(_));
     if failure.is_none() {
         let deadline = Instant::now() + TRACE_TIMEOUT;
         loop {
@@ -793,7 +834,12 @@ mod tests {
     }
 
     fn ss(k: usize) -> AllocMode {
-        AllocMode::SelfSched(SelfSchedConfig { poll_s: 0.01, msg_s: 0.0, tasks_per_message: k })
+        AllocMode::SelfSched(SelfSchedConfig {
+            poll_s: 0.01,
+            msg_s: 0.0,
+            tasks_per_message: k,
+            adaptive: false,
+        })
     }
 
     #[test]
@@ -831,6 +877,102 @@ mod tests {
             // One grant per non-empty queue, each acking `2` once.
             assert_eq!(out.stats, vec![n as u64, 2 * 3], "{dist:?}");
         }
+    }
+
+    #[test]
+    fn steal_processes_complete_with_zero_messages() {
+        // Work stealing keeps batch accounting: no allocation messages,
+        // every task exactly once, one `result ok` ack per (single-task)
+        // grant.
+        let n = 12;
+        let ordered: Vec<usize> = (0..n).collect();
+        let out = run_processes(
+            n,
+            &ordered,
+            3,
+            AllocMode::Steal(crate::dist::Distribution::Block),
+            &sh_worker(&good_script(n)),
+            RunOptions::default(),
+        )
+        .unwrap();
+        out.trace.check_invariants(n).unwrap();
+        assert_eq!(out.trace.messages_sent, 0);
+        assert_eq!(out.stats, vec![n as u64, 2 * n as u64]);
+    }
+
+    #[test]
+    fn steal_death_mid_run_requeues_onto_thieving_survivors() {
+        // Satellite: under `--policy steal` a dead worker no longer fails
+        // the batch run — its in-flight task is requeued and its
+        // unstarted queue is stolen by the survivors.
+        let n = 6;
+        let ordered: Vec<usize> = (0..n).collect();
+        let lock =
+            std::env::temp_dir().join(format!("emproc_steal_lock_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&lock);
+        let out = run_processes(
+            n,
+            &ordered,
+            3,
+            AllocMode::Steal(crate::dist::Distribution::Block),
+            &sh_worker(&die_once_on_task0_script(n, &lock)),
+            RunOptions { max_retries: 2, ..Default::default() },
+        )
+        .unwrap();
+        assert!(lock.exists(), "the scripted worker must actually have died");
+        out.trace.check_invariants(n).unwrap();
+        assert_eq!(out.stat(0), n as u64);
+        assert_eq!(out.trace.messages_sent, 0);
+        // Block queues of 2: the dead worker's retried task 0 and its
+        // unstarted task 1 both complete off their assigned worker.
+        assert!(out.trace.steals >= 2, "steals = {}", out.trace.steals);
+        assert_eq!(out.trace.tasks_per_worker[0], 0);
+        let _ = std::fs::remove_dir_all(&lock);
+    }
+
+    #[test]
+    fn steal_death_without_retries_is_still_an_error() {
+        // The retry gate is shared with self-scheduling: strict mode
+        // keeps any death fatal, stealing or not.
+        let n = 4;
+        let ordered: Vec<usize> = (0..n).collect();
+        let script =
+            format!("echo 'ready {n}'; read -r line; echo 'steal death' >&2; kill -9 $$");
+        let err = run_processes(
+            n,
+            &ordered,
+            2,
+            AllocMode::Steal(crate::dist::Distribution::Cyclic),
+            &sh_worker(&script),
+            RunOptions::default(),
+        )
+        .unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("without a final trace line"), "{text}");
+        assert!(text.contains("steal death"), "{text}");
+    }
+
+    #[test]
+    fn lpt_batch_processes_pack_by_the_supplied_costs() {
+        // LPT queues flow through RunOptions::cost: with task 0 costing
+        // as much as everything else combined, it must sit alone while
+        // the other worker takes the rest (stats still sum once).
+        let n = 5;
+        let ordered: Vec<usize> = (0..n).collect();
+        let out = run_processes(
+            n,
+            &ordered,
+            2,
+            AllocMode::Batch(crate::dist::Distribution::Lpt),
+            &sh_worker(&good_script(n)),
+            RunOptions { cost: vec![10.0, 2.0, 2.0, 2.0, 2.0], ..Default::default() },
+        )
+        .unwrap();
+        out.trace.check_invariants(n).unwrap();
+        assert_eq!(out.trace.messages_sent, 0);
+        let mut per_worker = out.trace.tasks_per_worker.clone();
+        per_worker.sort_unstable();
+        assert_eq!(per_worker, vec![1, 4]);
     }
 
     #[test]
@@ -907,7 +1049,7 @@ mod tests {
             3,
             ss(1),
             &sh_worker(&die_once_on_task0_script(n, &lock)),
-            RunOptions { max_retries: 2, journal: Some(&mut journal) },
+            RunOptions { max_retries: 2, journal: Some(&mut journal), ..Default::default() },
         )
         .unwrap();
         assert!(lock.exists(), "the scripted worker must actually have died");
@@ -961,7 +1103,7 @@ mod tests {
             3,
             ss(1),
             &sh_worker(&script),
-            RunOptions { max_retries: 1, journal: None },
+            RunOptions { max_retries: 1, ..Default::default() },
         )
         .unwrap_err();
         let text = format!("{err:#}");
@@ -986,7 +1128,7 @@ mod tests {
             2,
             ss(1),
             &sh_worker(&script),
-            RunOptions { max_retries: 5, journal: None },
+            RunOptions { max_retries: 5, ..Default::default() },
         )
         .unwrap_err();
         let text = format!("{err:#}");
@@ -1016,7 +1158,7 @@ mod tests {
             2,
             ss(1),
             &sh_worker(&script),
-            RunOptions { max_retries: 1, journal: None },
+            RunOptions { max_retries: 1, ..Default::default() },
         )
         .unwrap();
         out.trace.check_invariants(n).unwrap();
@@ -1041,7 +1183,7 @@ mod tests {
             2,
             AllocMode::Batch(crate::dist::Distribution::Cyclic),
             &sh_worker(&script),
-            RunOptions { max_retries: 5, journal: None },
+            RunOptions { max_retries: 5, ..Default::default() },
         )
         .unwrap_err();
         let text = format!("{err:#}");

@@ -792,6 +792,7 @@ mod tests {
             worker_busy: vec![0.3],
             tasks_per_worker: vec![2],
             messages_sent: 2,
+            steals: 0,
         };
         let merged = rec.merge_trace(live);
         assert_eq!(merged.tasks_per_worker, vec![2, 2]);

@@ -39,6 +39,9 @@ pub struct WorkerLog {
     tasks_done: Vec<usize>,
     /// Allocation messages sent (0 for batch runs).
     messages: usize,
+    /// Tasks taken from another worker's pre-assigned queue (work
+    /// stealing only).
+    steals: usize,
 }
 
 impl WorkerLog {
@@ -50,6 +53,7 @@ impl WorkerLog {
             busy: vec![0.0; nworkers],
             tasks_done: vec![0; nworkers],
             messages: 0,
+            steals: 0,
         }
     }
 
@@ -89,6 +93,17 @@ impl WorkerLog {
         self.messages
     }
 
+    /// Count one stolen task (a task executed off another worker's
+    /// pre-assigned queue).
+    pub fn record_steal(&mut self) {
+        self.steals += 1;
+    }
+
+    /// Steals recorded so far.
+    pub fn steals(&self) -> usize {
+        self.steals
+    }
+
     /// Assemble the run's [`SchedTrace`]. `job_time` is the manager-side
     /// job duration (backends measure it; the virtual-time backend passes
     /// [`WorkerLog::last_completion`]).
@@ -111,6 +126,7 @@ impl WorkerLog {
             worker_busy: self.busy.clone(),
             tasks_per_worker: self.tasks_done.clone(),
             messages_sent: self.messages,
+            steals: self.steals,
         }
     }
 }
@@ -166,6 +182,17 @@ pub struct Manager<'a> {
     outstanding: usize,
     /// Set by [`Manager::abort`]; stops all further granting.
     aborted: bool,
+    /// Pre-assigned per-worker deques for work-stealing runs (empty and
+    /// unused otherwise); set by [`Manager::assign_queues`].
+    queues: Vec<std::collections::VecDeque<usize>>,
+    /// True once [`Manager::assign_queues`] switched this run to
+    /// stealing: tasks come from the deques via [`Manager::take_batch`],
+    /// never from the cursor.
+    steal_mode: bool,
+    /// Current adaptive packing factor (`cfg.adaptive` only); starts at
+    /// the static `tasks_per_message` and moves AIMD-style with each
+    /// completion.
+    adaptive_k: usize,
     log: WorkerLog,
 }
 
@@ -182,8 +209,16 @@ impl<'a> Manager<'a> {
             granted_at: vec![0.0; nworkers],
             outstanding: 0,
             aborted: false,
+            queues: Vec::new(),
+            steal_mode: false,
+            adaptive_k: cfg.tasks_per_message.max(1),
             log: WorkerLog::new(nworkers),
         }
+    }
+
+    /// Number of workers this manager drives.
+    pub fn nworkers(&self) -> usize {
+        self.flight.len()
     }
 
     /// Protocol parameters for this run.
@@ -201,14 +236,31 @@ impl<'a> Manager<'a> {
             if self.aborted || self.flight[w] != Flight::Idle {
                 return None;
             }
-            let k = self.cfg.tasks_per_message.max(1);
-            let take = k.min(self.requeued.len());
+            let take = self.pack_take(self.requeued.len());
             let msg: Vec<usize> = self.requeued.drain(..take).collect();
             self.flight[w] = Flight::List(msg.clone());
             self.record_grant(w, now_s);
             return Some(msg);
         }
         self.grant_range(w, now_s).map(|r| self.ordered[r].to_vec())
+    }
+
+    /// The one `tasks_per_message` packing decision, shared by every
+    /// grant path (requeued lists and cursor ranges alike): how many of
+    /// `avail` allocatable tasks go into the next message. The static
+    /// factor is `cfg.tasks_per_message`; under `cfg.adaptive` the
+    /// current AIMD factor is used instead, additionally capped at a fair
+    /// share of the remaining work (`ceil(remaining / nworkers)`) so the
+    /// adapted factor can never recreate Fig 7's tail imbalance by
+    /// handing one worker the whole end of the queue.
+    fn pack_take(&self, avail: usize) -> usize {
+        let k = if self.cfg.adaptive {
+            let fair = self.remaining().div_ceil(self.nworkers()).max(1);
+            self.adaptive_k.min(fair)
+        } else {
+            self.cfg.tasks_per_message.max(1)
+        };
+        k.min(avail)
     }
 
     /// Allocation-free [`Manager::grant`]: the granted message is always a
@@ -227,8 +279,7 @@ impl<'a> Manager<'a> {
         if self.aborted || self.cursor >= self.ordered.len() || self.flight[w] != Flight::Idle {
             return None;
         }
-        let k = self.cfg.tasks_per_message.max(1);
-        let take = k.min(self.ordered.len() - self.cursor);
+        let take = self.pack_take(self.ordered.len() - self.cursor);
         let range = self.cursor..self.cursor + take;
         self.cursor += take;
         self.flight[w] = Flight::Range(range.clone());
@@ -242,6 +293,58 @@ impl<'a> Manager<'a> {
         self.outstanding += 1;
         self.log.record_start(w, now_s);
         self.log.record_message();
+    }
+
+    /// Switch this run to work stealing over `queues` — one pre-assigned
+    /// task queue per worker (from [`crate::dist::distribute`]). After
+    /// this, allocate with [`Manager::take_batch`] instead of the grant
+    /// methods: tasks come from the deques, never from the cursor.
+    pub fn assign_queues(&mut self, queues: Vec<Vec<usize>>) {
+        assert_eq!(queues.len(), self.flight.len(), "one queue per worker");
+        self.queues = queues.into_iter().map(std::collections::VecDeque::from).collect();
+        self.steal_mode = true;
+    }
+
+    /// Next task for idle worker `w` in a work-stealing run, with the
+    /// §II.D priority extended by stealing: requeued tasks first (a dead
+    /// worker's in-flight work), then the front of `w`'s own queue, else
+    /// the *tail* of the longest other queue (tie: lowest index) — the
+    /// tail is where a block queue keeps the work its owner is furthest
+    /// from reaching. Returns `(task, stolen)`; `stolen` covers both real
+    /// steals and requeued pickups (either way the task left its assigned
+    /// worker) and is counted in the trace's `steals`. Batch semantics
+    /// are preserved: no allocation message is recorded, so
+    /// `messages_sent` stays 0.
+    pub fn take_batch(&mut self, w: usize, now_s: f64) -> Option<(usize, bool)> {
+        debug_assert!(self.steal_mode, "take_batch needs assign_queues first");
+        if self.aborted || self.flight[w] != Flight::Idle {
+            return None;
+        }
+        let (task, stolen) = if let Some(t) = self.requeued.pop_front() {
+            (t, true)
+        } else if let Some(t) = self.queues[w].pop_front() {
+            (t, false)
+        } else {
+            let mut victim: Option<usize> = None;
+            for (i, q) in self.queues.iter().enumerate() {
+                if i == w || q.is_empty() {
+                    continue;
+                }
+                // Strict `>` keeps the lowest index among equals.
+                if victim.is_none_or(|v| q.len() > self.queues[v].len()) {
+                    victim = Some(i);
+                }
+            }
+            (self.queues[victim?].pop_back().expect("victim is non-empty"), true)
+        };
+        self.flight[w] = Flight::List(vec![task]);
+        self.granted_at[w] = now_s;
+        self.outstanding += 1;
+        self.log.record_start(w, now_s);
+        if stolen {
+            self.log.record_steal();
+        }
+        Some((task, stolen))
     }
 
     /// Task ids worker `w` currently has in flight (empty when idle).
@@ -288,11 +391,30 @@ impl<'a> Manager<'a> {
     }
 
     /// Like [`Manager::complete`] with an explicit busy time (the
-    /// virtual-time backend knows exactly when work started).
+    /// virtual-time backend knows exactly when work started; the
+    /// wall-clock backends pass the worker's measured task time). Under
+    /// `cfg.adaptive` each completion also adjusts the packing factor
+    /// AIMD-style from the grant's observed round-trip vs busy time:
+    /// when protocol overhead (round-trip minus busy) exceeds 10% of the
+    /// busy time, messages are too small — additively grow the factor;
+    /// when overhead drops under 2%, packing is pure balance risk (Fig 7)
+    /// — halve it back toward the paper's 1-task message. The band in
+    /// between is hysteresis, and the factor never exceeds the static
+    /// Fig 7 optimum (max(`tasks_per_message`, 300)).
     pub fn complete_with_busy(&mut self, w: usize, now_s: f64, busy_s: f64) -> usize {
         let ntasks = self.flight[w].len();
         if ntasks == 0 {
             return 0;
+        }
+        if self.cfg.adaptive {
+            let rtt = (now_s - self.granted_at[w]).max(0.0);
+            let overhead = (rtt - busy_s).max(0.0);
+            let ceiling = self.cfg.tasks_per_message.max(300);
+            if overhead > 0.1 * busy_s {
+                self.adaptive_k = (self.adaptive_k + 1).min(ceiling);
+            } else if overhead < 0.02 * busy_s {
+                self.adaptive_k = (self.adaptive_k / 2).max(1);
+            }
         }
         self.flight[w] = Flight::Idle;
         self.outstanding -= 1;
@@ -318,7 +440,20 @@ impl<'a> Manager<'a> {
 
     /// Tasks not yet allocated to any worker (requeued tasks included).
     pub fn remaining(&self) -> usize {
-        self.ordered.len() - self.cursor + self.requeued.len()
+        let unallocated = if self.steal_mode {
+            self.queues.iter().map(std::collections::VecDeque::len).sum()
+        } else {
+            self.ordered.len() - self.cursor
+        };
+        unallocated + self.requeued.len()
+    }
+
+    /// The packing factor the next grant would use on `avail` available
+    /// tasks — the static `tasks_per_message` unless `cfg.adaptive`, then
+    /// the current AIMD value (fair-share-capped). Exposed so backends
+    /// and tests can observe the adaptation without granting.
+    pub fn current_pack(&self, avail: usize) -> usize {
+        self.pack_take(avail)
     }
 
     /// The run's bookkeeping so far.
@@ -341,7 +476,7 @@ mod tests {
     use crate::triples::TriplesConfig;
 
     fn cfg_k(k: usize) -> SelfSchedConfig {
-        SelfSchedConfig { poll_s: 0.01, msg_s: 0.001, tasks_per_message: k }
+        SelfSchedConfig { poll_s: 0.01, msg_s: 0.001, tasks_per_message: k, adaptive: false }
     }
 
     #[test]
@@ -529,7 +664,12 @@ mod tests {
         let ordered = order_tasks(&tasks, TaskOrder::LargestFirst);
         let workers = 7;
         for k in [1usize, 3, 10, 300] {
-            let ss = SelfSchedConfig { poll_s: 0.005, msg_s: 0.0, tasks_per_message: k };
+            let ss = SelfSchedConfig {
+                poll_s: 0.005,
+                msg_s: 0.0,
+                tasks_per_message: k,
+                adaptive: false,
+            };
             let sim = Simulator::run(
                 &SimConfig {
                     triples: TriplesConfig {
@@ -559,6 +699,140 @@ mod tests {
                 "task totals at k={k}"
             );
         }
+    }
+
+    #[test]
+    fn take_batch_prefers_own_queue_then_steals_longest_tail() {
+        let ordered: Vec<usize> = (0..6).collect();
+        let mut mgr = Manager::new(&ordered, 3, cfg_k(1));
+        // Skewed queues: worker 0 holds four tasks, worker 1 two, worker
+        // 2 none — the §IV.B block pathology in miniature.
+        mgr.assign_queues(vec![vec![0, 1, 2, 3], vec![4, 5], vec![]]);
+        assert_eq!(mgr.remaining(), 6);
+        // Own-queue fronts first, no steal counted.
+        assert_eq!(mgr.take_batch(0, 0.0), Some((0, false)));
+        assert_eq!(mgr.take_batch(1, 0.0), Some((4, false)));
+        // Worker 2's queue is empty: steal the tail of the longest other
+        // queue (worker 0's, len 3 vs 1).
+        assert_eq!(mgr.take_batch(2, 0.1), Some((3, true)));
+        // A busy worker cannot take again.
+        assert_eq!(mgr.take_batch(2, 0.2), None);
+        assert_eq!(mgr.complete(2, 0.3), 1);
+        assert_eq!(mgr.take_batch(2, 0.3), Some((2, true)));
+        assert_eq!(mgr.outstanding(), 3);
+        // Drain the rest.
+        for w in [0, 1, 2] {
+            assert_eq!(mgr.complete(w, 1.0), 1);
+        }
+        assert_eq!(mgr.take_batch(0, 1.0), Some((1, false)));
+        // Queues 0 (len 0) and 1 (len 1): worker 0's next take steals
+        // from worker 1.
+        assert_eq!(mgr.complete(0, 1.1), 1);
+        assert_eq!(mgr.take_batch(0, 1.1), Some((5, true)));
+        assert_eq!(mgr.remaining(), 0);
+        assert_eq!(mgr.complete(0, 1.5), 1);
+        assert_eq!(mgr.take_batch(1, 1.5), None, "no work left");
+        let trace = mgr.into_trace(1.5);
+        assert_eq!(trace.tasks_per_worker.iter().sum::<usize>(), 6);
+        assert_eq!(trace.steals, 3);
+        assert_eq!(trace.messages_sent, 0, "stealing is batch: no messages");
+        trace.check_invariants(6).unwrap();
+    }
+
+    #[test]
+    fn take_batch_requeue_hands_dead_workers_tasks_to_thieves() {
+        let ordered: Vec<usize> = (0..4).collect();
+        let mut mgr = Manager::new(&ordered, 2, cfg_k(1));
+        mgr.assign_queues(vec![vec![0, 1, 2], vec![3]]);
+        assert_eq!(mgr.take_batch(0, 0.0), Some((0, false)));
+        assert_eq!(mgr.take_batch(1, 0.0), Some((3, false)));
+        // Worker 0 dies with task 0 in flight: the task requeues, and its
+        // remaining queue is simply stolen by the survivor.
+        assert_eq!(mgr.requeue(0), vec![0]);
+        assert_eq!(mgr.remaining(), 3);
+        assert_eq!(mgr.complete(1, 0.5), 1);
+        assert_eq!(mgr.take_batch(1, 0.5), Some((0, true)), "requeued first");
+        assert_eq!(mgr.complete(1, 0.8), 1);
+        assert_eq!(mgr.take_batch(1, 0.8), Some((2, true)), "steals the tail");
+        assert_eq!(mgr.complete(1, 1.0), 1);
+        assert_eq!(mgr.take_batch(1, 1.0), Some((1, true)));
+        assert_eq!(mgr.complete(1, 1.2), 1);
+        assert_eq!(mgr.take_batch(1, 1.2), None);
+        let trace = mgr.into_trace(1.2);
+        assert_eq!(trace.tasks_per_worker, vec![0, 4]);
+        assert_eq!(trace.steals, 3);
+        trace.check_invariants(4).unwrap();
+    }
+
+    #[test]
+    fn adaptive_packing_moves_aimd_and_respects_the_ceiling() {
+        let ordered: Vec<usize> = (0..100_000).collect();
+        let cfg = SelfSchedConfig {
+            poll_s: 0.01,
+            msg_s: 0.001,
+            tasks_per_message: 1,
+            adaptive: true,
+        };
+        // One worker: the fair-share tail guard is `remaining` itself, so
+        // it never binds here and the pure AIMD dynamics are observable.
+        let mut mgr = Manager::new(&ordered, 1, cfg);
+        // Overhead-dominated completions (busy 0.1s of a 1.0s round
+        // trip): the factor grows additively, one step per completion.
+        for step in 0..5 {
+            assert_eq!(mgr.current_pack(usize::MAX), step + 1);
+            let r = mgr.grant_range(0, step as f64).unwrap();
+            assert_eq!(r.len(), step + 1);
+            mgr.complete_with_busy(0, step as f64 + 1.0, 0.1);
+        }
+        assert_eq!(mgr.current_pack(usize::MAX), 6);
+        // Busy-dominated completions (overhead < 2% of busy): halved back
+        // toward single-task messages, never below 1.
+        let r = mgr.grant_range(0, 10.0).unwrap();
+        mgr.complete_with_busy(0, 11.0, 1.0 - 1e-6);
+        assert_eq!(r.len(), 6);
+        assert_eq!(mgr.current_pack(usize::MAX), 3);
+        for t in 0..5 {
+            let _ = mgr.grant_range(0, 20.0 + t as f64).unwrap();
+            mgr.complete_with_busy(0, 21.0 + t as f64, 1.0 - 1e-6);
+        }
+        assert_eq!(mgr.current_pack(usize::MAX), 1);
+        // In the hysteresis band (2%..10% overhead) the factor holds.
+        let _ = mgr.grant_range(0, 30.0).unwrap();
+        mgr.complete_with_busy(0, 31.0, 0.95);
+        assert_eq!(mgr.current_pack(usize::MAX), 1);
+        // The ceiling is the static Fig 7 optimum: 300 completions of
+        // pure overhead cannot push the factor past it.
+        for t in 0..400 {
+            let _ = mgr.grant_range(0, 100.0 + t as f64).unwrap();
+            mgr.complete_with_busy(0, 100.5 + t as f64, 0.0);
+        }
+        assert_eq!(mgr.current_pack(usize::MAX), 300);
+    }
+
+    #[test]
+    fn adaptive_packing_tail_guard_keeps_the_end_of_the_queue_shared() {
+        // 4 workers, 20 tasks, adaptive factor pushed high: grants near
+        // the end must shrink to a fair share instead of handing one
+        // worker the whole tail.
+        let ordered: Vec<usize> = (0..20).collect();
+        let cfg = SelfSchedConfig {
+            poll_s: 0.01,
+            msg_s: 0.001,
+            tasks_per_message: 16,
+            adaptive: true,
+        };
+        let mut mgr = Manager::new(&ordered, 4, cfg);
+        // remaining = 20, fair share = ceil(20/4) = 5 < 16.
+        let r = mgr.grant_range(0, 0.0).unwrap();
+        assert_eq!(r.len(), 5);
+        // remaining = 15, fair = ceil(15/4) = 4.
+        assert_eq!(mgr.grant_range(1, 0.1).unwrap().len(), 4);
+        assert_eq!(mgr.grant_range(2, 0.2).unwrap().len(), 3);
+        assert_eq!(mgr.grant_range(3, 0.3).unwrap().len(), 2);
+        // The static config ignores the guard entirely.
+        let static_cfg = SelfSchedConfig { adaptive: false, ..cfg };
+        let mut st = Manager::new(&ordered, 4, static_cfg);
+        assert_eq!(st.grant_range(0, 0.0).unwrap().len(), 16);
     }
 
     /// Both backends also agree on batch runs: same queues, same totals,

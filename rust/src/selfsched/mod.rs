@@ -30,6 +30,11 @@ pub struct SelfSchedConfig {
     /// Tasks packed into each allocation message (paper: 1 for OpenSky,
     /// 300 for radar).
     pub tasks_per_message: usize,
+    /// Adapt the packing factor mid-run (AIMD on observed grant
+    /// round-trip vs busy time) instead of holding `tasks_per_message`
+    /// fixed; the static value becomes the starting point and the
+    /// adapted factor is capped at the Fig 7 static optimum (300).
+    pub adaptive: bool,
 }
 
 impl Default for SelfSchedConfig {
@@ -38,6 +43,7 @@ impl Default for SelfSchedConfig {
             poll_s: 0.3,
             msg_s: 0.003,
             tasks_per_message: 1,
+            adaptive: false,
         }
     }
 }
@@ -55,8 +61,90 @@ pub enum AllocMode {
     /// All tasks pre-assigned up front (pMatlab/LLMapReduce batch) with a
     /// block or cyclic distribution.
     Batch(crate::dist::Distribution),
+    /// Batch pre-assignment plus work stealing: queues are distributed up
+    /// front exactly as `Batch`, but a worker that drains its own queue
+    /// steals from the tail of the longest remaining one instead of going
+    /// idle — and a dead worker's queue is stolen by survivors instead of
+    /// failing the run.
+    Steal(crate::dist::Distribution),
     /// Dynamic manager/worker self-scheduling.
     SelfSched(SelfSchedConfig),
+}
+
+/// The `--policy` axis: a workflow-level scheduling policy applied on top
+/// of a cell's base allocation modes before stage dispatch. `Fixed` is
+/// the identity (the incumbent block/cyclic/selfsched behavior); the
+/// other three each rewrite the base mode into the strategy they name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedPolicy {
+    /// No rewrite: run the spec's allocation modes as-is.
+    #[default]
+    Fixed,
+    /// Batch stages gain work stealing over their pre-assigned queues
+    /// (`Batch(d)` -> `Steal(d)`); self-scheduled stages are unchanged
+    /// (they are already dynamic).
+    Steal,
+    /// Cost-guided packing: batch stages use LPT bin packing
+    /// (`Batch(_)` -> `Batch(Lpt)`), self-scheduled stages visit tasks
+    /// cost-descending.
+    Lpt,
+    /// Self-scheduled stages adapt `tasks_per_message` mid-run (AIMD);
+    /// batch stages are unchanged (they send no allocation messages).
+    Adaptive,
+}
+
+impl SchedPolicy {
+    /// Scenario-label / CLI token.
+    pub fn label(self) -> &'static str {
+        match self {
+            SchedPolicy::Fixed => "fixed",
+            SchedPolicy::Steal => "steal",
+            SchedPolicy::Lpt => "lpt",
+            SchedPolicy::Adaptive => "adaptive",
+        }
+    }
+
+    /// Parse a CLI token (the inverse of [`SchedPolicy::label`]).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "fixed" => Some(SchedPolicy::Fixed),
+            "steal" => Some(SchedPolicy::Steal),
+            "lpt" => Some(SchedPolicy::Lpt),
+            "adaptive" => Some(SchedPolicy::Adaptive),
+            _ => None,
+        }
+    }
+
+    /// Rewrite one stage's base allocation mode under this policy. The
+    /// mapping is total and deliberately partial in effect: each policy
+    /// only touches the run shape it targets, so e.g. `Adaptive` leaves
+    /// batch stages exactly as `Fixed` would.
+    pub fn apply_alloc(self, base: AllocMode) -> AllocMode {
+        match (self, base) {
+            (SchedPolicy::Fixed, a) => a,
+            (SchedPolicy::Steal, AllocMode::Batch(d)) => AllocMode::Steal(d),
+            (SchedPolicy::Steal, a) => a,
+            (SchedPolicy::Lpt, AllocMode::Batch(_)) => {
+                AllocMode::Batch(crate::dist::Distribution::Lpt)
+            }
+            (SchedPolicy::Lpt, a) => a,
+            (SchedPolicy::Adaptive, AllocMode::SelfSched(cfg)) => {
+                AllocMode::SelfSched(SelfSchedConfig { adaptive: true, ..cfg })
+            }
+            (SchedPolicy::Adaptive, a) => a,
+        }
+    }
+
+    /// Rewrite a stage's task order under this policy: LPT turns any
+    /// order into cost-descending (the self-scheduled counterpart of LPT
+    /// packing — grant the most expensive tasks first); the other
+    /// policies keep the spec's order.
+    pub fn apply_order(self, base: crate::dist::TaskOrder) -> crate::dist::TaskOrder {
+        match self {
+            SchedPolicy::Lpt => crate::dist::TaskOrder::CostDescending,
+            _ => base,
+        }
+    }
 }
 
 /// Execution trace of one run, sufficient for every figure the paper draws.
@@ -72,6 +160,9 @@ pub struct SchedTrace {
     pub tasks_per_worker: Vec<usize>,
     /// Messages the manager sent.
     pub messages_sent: usize,
+    /// Tasks taken from another worker's pre-assigned queue (work
+    /// stealing only; 0 for plain batch and self-scheduled runs).
+    pub steals: usize,
 }
 
 impl SchedTrace {
@@ -125,6 +216,7 @@ mod tests {
             worker_busy: vec![7.0, 9.0],
             tasks_per_worker: vec![2, 3],
             messages_sent: 5,
+            steals: 0,
         };
         assert!(good.check_invariants(5).is_ok());
         assert!(good.check_invariants(6).is_err());
@@ -135,5 +227,56 @@ mod tests {
         assert!(bad_busy.check_invariants(5).is_err());
         let bad_job = SchedTrace { job_time: 5.0, ..good };
         assert!(bad_job.check_invariants(5).is_err());
+    }
+
+    #[test]
+    fn policy_labels_round_trip() {
+        for p in [
+            SchedPolicy::Fixed,
+            SchedPolicy::Steal,
+            SchedPolicy::Lpt,
+            SchedPolicy::Adaptive,
+        ] {
+            assert_eq!(SchedPolicy::parse(p.label()), Some(p));
+        }
+        assert_eq!(SchedPolicy::parse("bogus"), None);
+        assert_eq!(SchedPolicy::default(), SchedPolicy::Fixed);
+    }
+
+    #[test]
+    fn policies_rewrite_only_the_run_shape_they_target() {
+        use crate::dist::{Distribution, TaskOrder};
+        let batch = AllocMode::Batch(Distribution::Cyclic);
+        let ss = AllocMode::SelfSched(SelfSchedConfig::default());
+
+        assert_eq!(SchedPolicy::Fixed.apply_alloc(batch), batch);
+        assert_eq!(SchedPolicy::Fixed.apply_alloc(ss), ss);
+
+        assert_eq!(
+            SchedPolicy::Steal.apply_alloc(batch),
+            AllocMode::Steal(Distribution::Cyclic)
+        );
+        assert_eq!(SchedPolicy::Steal.apply_alloc(ss), ss);
+
+        assert_eq!(
+            SchedPolicy::Lpt.apply_alloc(batch),
+            AllocMode::Batch(Distribution::Lpt)
+        );
+        assert_eq!(SchedPolicy::Lpt.apply_alloc(ss), ss);
+        assert_eq!(
+            SchedPolicy::Lpt.apply_order(TaskOrder::Chronological),
+            TaskOrder::CostDescending
+        );
+        assert_eq!(
+            SchedPolicy::Steal.apply_order(TaskOrder::Chronological),
+            TaskOrder::Chronological
+        );
+
+        assert_eq!(SchedPolicy::Adaptive.apply_alloc(batch), batch);
+        let AllocMode::SelfSched(cfg) = SchedPolicy::Adaptive.apply_alloc(ss) else {
+            panic!("adaptive must stay self-scheduled");
+        };
+        assert!(cfg.adaptive);
+        assert_eq!(cfg.poll_s, SelfSchedConfig::default().poll_s);
     }
 }

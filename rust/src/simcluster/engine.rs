@@ -45,7 +45,7 @@
 //!
 //! Runs are bit-reproducible.
 
-use crate::dist::{distribute, Task};
+use crate::dist::{distribute_costed, CostEstimate, Task};
 use crate::sched::{Manager, WorkerLog};
 use crate::selfsched::{AllocMode, SchedTrace};
 use crate::simcluster::cost::{ContentionCtx, CostModel, Stage};
@@ -86,7 +86,10 @@ pub struct EngineStats {
 /// embedded log for self-scheduling.
 #[derive(Debug)]
 enum Feed<'a> {
-    Batch { queues: Vec<Vec<usize>>, log: WorkerLog },
+    /// Pre-assigned queues; with `steal` set, a worker that drains its own
+    /// queue takes the tail of the longest remaining one instead of going
+    /// idle ([`AllocMode::Steal`]).
+    Batch { queues: Vec<Vec<usize>>, steal: bool, log: WorkerLog },
     SelfSched { mgr: Manager<'a> },
 }
 
@@ -196,9 +199,17 @@ impl Simulator {
         // Self-scheduled messages are contiguous ranges of `ordered`, so
         // prefix sums make any message's work an O(1) difference.
         let (mut feed, prefix) = match cfg.alloc {
-            AllocMode::Batch(dist) => (
+            AllocMode::Batch(dist) | AllocMode::Steal(dist) => (
                 Feed::Batch {
-                    queues: distribute(ordered, workers, dist),
+                    // Cost-aware distribution: block/cyclic ignore the
+                    // estimates; LPT packs by them.
+                    queues: distribute_costed(
+                        ordered,
+                        workers,
+                        dist,
+                        CostEstimate::from_tasks(tasks).as_slice(),
+                    ),
+                    steal: matches!(cfg.alloc, AllocMode::Steal(_)),
                     log: WorkerLog::new(workers),
                 },
                 Vec::new(),
@@ -216,13 +227,21 @@ impl Simulator {
         };
 
         let mut st = FluidState::new(cfg, workers);
+        if let Feed::Batch { queues, .. } = &feed {
+            st.qend = queues.iter().map(Vec::len).collect();
+        }
 
         // Seed initial work.
         match &mut feed {
-            Feed::Batch { queues, log } => {
+            Feed::Batch { queues, steal, log } => {
+                let any_work = queues.iter().any(|q| !q.is_empty());
                 for w in 0..workers {
                     if !queues[w].is_empty() {
                         log.record_start(w, 0.0);
+                        st.timeline.push_start(0, w, 0);
+                    } else if *steal && any_work {
+                        // Under stealing an empty-queue worker still
+                        // starts: its first act is a steal.
                         st.timeline.push_start(0, w, 0);
                     }
                 }
@@ -302,8 +321,12 @@ struct FluidState<'c> {
     pending_msg: Vec<MsgRef>,
     /// The message currently being executed per worker.
     current_msg: Vec<MsgRef>,
-    /// Batch: per-worker queue position.
+    /// Batch: per-worker queue front position.
     qpos: Vec<usize>,
+    /// Batch: per-worker queue end (exclusive). Constant for plain batch;
+    /// work stealing shrinks a victim's end as its tail is stolen, so a
+    /// queue's remaining work is always `qpos[w]..qend[w]`.
+    qend: Vec<usize>,
     /// Per-worker fluid-entry wall time for busy accounting.
     started_at_ns: Vec<u64>,
 }
@@ -322,6 +345,7 @@ impl<'c> FluidState<'c> {
             pending_msg: vec![MsgRef::default(); workers],
             current_msg: vec![MsgRef::default(); workers],
             qpos: vec![0; workers],
+            qend: vec![0; workers],
             started_at_ns: vec![0; workers],
         };
         st.set_active(0);
@@ -376,16 +400,39 @@ impl<'c> FluidState<'c> {
         self.advance_to(t_ns);
         if phase == 0 {
             let msg = match feed {
-                Feed::Batch { queues, .. } => {
-                    // One task per "message" in batch mode.
-                    let q = &queues[w];
-                    if self.qpos[w] < q.len() {
-                        let ti = q[self.qpos[w]];
+                Feed::Batch { queues, steal, log } => {
+                    // One task per "message" in batch mode: the own-queue
+                    // front, or (stealing only) the tail of the longest
+                    // remaining other queue.
+                    let ti = if self.qpos[w] < self.qend[w] {
+                        let t = queues[w][self.qpos[w]];
                         self.qpos[w] += 1;
-                        MsgRef { start: ti as u32, len: 1 }
+                        Some(t)
+                    } else if *steal {
+                        let mut victim: Option<usize> = None;
+                        for i in 0..queues.len() {
+                            if i == w || self.qpos[i] >= self.qend[i] {
+                                continue;
+                            }
+                            let left = self.qend[i] - self.qpos[i];
+                            // Strict `>` keeps the lowest index among equals.
+                            if victim.is_none_or(|v| left > self.qend[v] - self.qpos[v]) {
+                                victim = Some(i);
+                            }
+                        }
+                        victim.map(|v| {
+                            self.qend[v] -= 1;
+                            log.record_steal();
+                            queues[v][self.qend[v]]
+                        })
                     } else {
-                        return;
-                    }
+                        None
+                    };
+                    let Some(ti) = ti else { return };
+                    // Idempotent: seeds already recorded non-empty queues'
+                    // owners; this covers thieves starting off empty queues.
+                    log.record_start(w, self.t_s());
+                    MsgRef { start: ti as u32, len: 1 }
                 }
                 Feed::SelfSched { .. } => std::mem::take(&mut self.pending_msg[w]),
             };
@@ -424,9 +471,12 @@ impl<'c> FluidState<'c> {
         let ntasks = self.current_msg[w].len as usize;
         self.current_msg[w] = MsgRef::default();
         match feed {
-            Feed::Batch { queues, log } => {
+            Feed::Batch { queues, steal, log } => {
                 log.record_completion(w, now_s, busy, ntasks);
-                if self.qpos[w] < queues[w].len() {
+                let own = self.qpos[w] < self.qend[w];
+                let stealable = *steal
+                    && (0..queues.len()).any(|i| self.qpos[i] < self.qend[i]);
+                if own || stealable {
                     // Next task starts immediately.
                     self.timeline.push_start(self.t_ns, w, 0);
                 }
@@ -497,8 +547,14 @@ mod tests {
             let n = 1 + rng.below(500);
             let tasks = mk_tasks(rng, n);
             let ordered = order_tasks(&tasks, TaskOrder::FilenameSorted);
-            for dist in [Distribution::Block, Distribution::Cyclic] {
-                let c = cfg(256, 32, AllocMode::Batch(dist));
+            for alloc in [
+                AllocMode::Batch(Distribution::Block),
+                AllocMode::Batch(Distribution::Cyclic),
+                AllocMode::Batch(Distribution::Lpt),
+                AllocMode::Steal(Distribution::Block),
+                AllocMode::Steal(Distribution::Cyclic),
+            ] {
+                let c = cfg(256, 32, alloc);
                 let trace = Simulator::run(&c, &tasks, &ordered);
                 trace.check_invariants(n).map_err(|e| e.to_string())?;
             }
@@ -539,8 +595,10 @@ mod tests {
                 })
             } else if rng.f64() < 0.5 {
                 AllocMode::Batch(Distribution::Block)
-            } else {
+            } else if rng.f64() < 0.5 {
                 AllocMode::Batch(Distribution::Cyclic)
+            } else {
+                AllocMode::Steal(Distribution::Block)
             };
             let stage = [Stage::Organize, Stage::Archive, Stage::Process][rng.below(3)];
             let c = SimConfig {
@@ -688,5 +746,122 @@ mod tests {
         let t32 = time_at(32);
         assert!(t8 > t1, "k=8 {t8} <= k=1 {t1}");
         assert!(t32 > t8, "k=32 {t32} <= k=8 {t8}");
+    }
+
+    /// Tentpole acceptance (sim side): work stealing over block queues
+    /// matches cyclic's makespan on the skewed corpus — and crushes plain
+    /// block, whose front-loaded queues it redistributes at run time.
+    #[test]
+    fn stealing_matches_cyclic_on_the_skewed_corpus() {
+        let mut rng = Rng::new(7);
+        let mut tasks = mk_tasks(&mut rng, 800);
+        for (i, t) in tasks.iter_mut().enumerate() {
+            t.bytes = if i < 200 { 400_000_000 } else { 5_000_000 };
+        }
+        let ordered: Vec<usize> = (0..tasks.len()).collect();
+        let run = |alloc| Simulator::run(&cfg(512, 32, alloc), &tasks, &ordered);
+        let block = run(AllocMode::Batch(Distribution::Block));
+        let cyclic = run(AllocMode::Batch(Distribution::Cyclic));
+        let steal = run(AllocMode::Steal(Distribution::Block));
+        steal.check_invariants(tasks.len()).unwrap();
+        assert!(steal.steals > 0, "skew must trigger steals");
+        assert_eq!(steal.messages_sent, 0, "stealing keeps batch semantics");
+        assert!(
+            steal.job_time <= cyclic.job_time * 1.05,
+            "steal {} vs cyclic {}",
+            steal.job_time,
+            cyclic.job_time
+        );
+        assert!(
+            steal.job_time < block.job_time * 0.8,
+            "steal {} vs block {}",
+            steal.job_time,
+            block.job_time
+        );
+    }
+
+    /// Tentpole acceptance (sim side): cost-guided LPT packing matches
+    /// largest-first self-scheduling on a Table-II-style skewed cell —
+    /// the same balance, without the per-message protocol overhead.
+    #[test]
+    fn lpt_batch_matches_largest_first_selfsched() {
+        let mut rng = Rng::new(9);
+        let tasks = mk_tasks(&mut rng, 2425);
+        let chrono = order_tasks(&tasks, TaskOrder::Chronological);
+        let largest = order_tasks(&tasks, TaskOrder::LargestFirst);
+        let lpt = Simulator::run(
+            &cfg(512, 32, AllocMode::Batch(Distribution::Lpt)),
+            &tasks,
+            &chrono, // LPT re-ranks by cost itself; input order is irrelevant
+        );
+        let ss = Simulator::run(
+            &cfg(512, 32, AllocMode::SelfSched(SelfSchedConfig::default())),
+            &tasks,
+            &largest,
+        );
+        let block = Simulator::run(
+            &cfg(512, 32, AllocMode::Batch(Distribution::Block)),
+            &tasks,
+            &chrono,
+        );
+        lpt.check_invariants(tasks.len()).unwrap();
+        assert!(
+            lpt.job_time <= ss.job_time * 1.05,
+            "LPT {} vs largest-first selfsched {}",
+            lpt.job_time,
+            ss.job_time
+        );
+        assert!(
+            lpt.job_time <= block.job_time,
+            "LPT {} vs block {}",
+            lpt.job_time,
+            block.job_time
+        );
+    }
+
+    /// Tentpole acceptance (sim side): adaptive tasks-per-message lands
+    /// within 10% of the best *static* Fig 7 point — on the aerodrome-like
+    /// corpus (big skewed files, optimum k=1) and on a radar-like corpus
+    /// (tiny uniform tasks, interior optimum) alike, with no hand tuning.
+    #[test]
+    fn adaptive_packing_tracks_the_best_static_fig7_point() {
+        let sweep = [1usize, 3, 10, 30, 100, 300];
+        let run = |tasks: &[Task], ordered: &[usize], ss: SelfSchedConfig| {
+            Simulator::run(&cfg(512, 32, AllocMode::SelfSched(ss)), tasks, ordered).job_time
+        };
+        let mut rng = Rng::new(10);
+        let aerodrome = mk_tasks(&mut rng, 2425);
+        let radar: Vec<Task> = (0..20_000)
+            .map(|i| Task {
+                id: i,
+                bytes: 100_000,
+                obs: 10,
+                dem_cells: 0,
+                chrono_key: i as u64,
+                name: format!("r{i:05}").into(),
+            })
+            .collect();
+        for (name, tasks) in [("aerodrome", &aerodrome), ("radar", &radar)] {
+            let ordered = order_tasks(tasks, TaskOrder::Random(3));
+            let best = sweep
+                .iter()
+                .map(|&k| {
+                    run(
+                        tasks,
+                        &ordered,
+                        SelfSchedConfig { tasks_per_message: k, ..Default::default() },
+                    )
+                })
+                .fold(f64::INFINITY, f64::min);
+            let adaptive = run(
+                tasks,
+                &ordered,
+                SelfSchedConfig { adaptive: true, ..Default::default() },
+            );
+            assert!(
+                adaptive <= best * 1.10,
+                "{name}: adaptive {adaptive} vs best static {best}"
+            );
+        }
     }
 }

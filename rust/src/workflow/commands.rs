@@ -7,7 +7,7 @@ use crate::dist::TaskOrder;
 use crate::launch::LaunchMode;
 use crate::recovery::RecoveryOptions;
 use crate::registry::Registry;
-use crate::selfsched::{AllocMode, SelfSchedConfig};
+use crate::selfsched::{AllocMode, SchedPolicy, SelfSchedConfig};
 use crate::util::Rng;
 use crate::workflow::scenario;
 use anyhow::{bail, Context, Result};
@@ -27,12 +27,26 @@ pub(crate) fn parse_order(s: &str, seed: u64) -> Result<TaskOrder> {
 
 /// Parse an `--alloc` (or stage-2 `--dist`) value.
 pub(crate) fn parse_alloc(s: &str) -> Result<AllocMode> {
+    use crate::dist::Distribution;
     Ok(match s {
         "selfsched" | "self-sched" | "ss" => AllocMode::SelfSched(SelfSchedConfig::default()),
-        "block" => AllocMode::Batch(crate::dist::Distribution::Block),
-        "cyclic" => AllocMode::Batch(crate::dist::Distribution::Cyclic),
-        other => bail!("unknown allocation '{other}' (selfsched|block|cyclic)"),
+        "block" => AllocMode::Batch(Distribution::Block),
+        "cyclic" => AllocMode::Batch(Distribution::Cyclic),
+        "lpt" => AllocMode::Batch(Distribution::Lpt),
+        "steal-block" => AllocMode::Steal(Distribution::Block),
+        "steal-cyclic" | "steal" => AllocMode::Steal(Distribution::Cyclic),
+        "steal-lpt" => AllocMode::Steal(Distribution::Lpt),
+        other => bail!(
+            "unknown allocation '{other}' (selfsched|block|cyclic|lpt|steal-block|\
+             steal-cyclic|steal-lpt)"
+        ),
     })
+}
+
+/// Parse a `--policy` / `--policies` value.
+pub(crate) fn parse_policy(s: &str) -> Result<SchedPolicy> {
+    SchedPolicy::parse(s)
+        .with_context(|| format!("unknown policy '{s}' (fixed|steal|lpt|adaptive)"))
 }
 
 /// Parse the `--launch` flag shared by every stage/pipeline command.
@@ -308,6 +322,7 @@ pub fn pipeline(a: &ArgParser) -> Result<()> {
     cfg.max_retries = a.get_num("max-retries", cfg.max_retries)?;
     cfg.resume = resume;
     cfg.format = parse_format(a)?;
+    cfg.policy = parse_policy(a.get_or("policy", "fixed"))?;
     cfg.process_order = TaskOrder::Random(cfg.seed);
     cfg.days = ((cfg.days as f64 * scale).ceil() as u32).max(1);
     cfg.max_file_bytes = (cfg.max_file_bytes as f64 * scale) as u64 + 1_000;
@@ -320,7 +335,8 @@ pub fn pipeline(a: &ArgParser) -> Result<()> {
 /// [--launch inprocess|processes] [--triples CORESxNPPN] [--max-procs N]
 /// [--max-retries N] [--resume DIR]
 /// [--datasets monday,aerodrome] [--strategies selfsched,block,cyclic]
-/// [--orders chrono,size,filename,random] [--json NAME]
+/// [--orders chrono,size,filename,random]
+/// [--policy P | --policies fixed,steal,lpt,adaptive] [--json NAME]
 /// [--format zip|columnar]`
 ///
 /// Runs the paper's strategy matrix — every (dataset × allocation ×
@@ -331,7 +347,10 @@ pub fn pipeline(a: &ArgParser) -> Result<()> {
 /// cell's stage work runs in real worker subprocesses (§II.C for real);
 /// `--triples 512x32` sizes the worker count by downscaling that Table
 /// I/II cell via [`crate::triples::TriplesConfig::plan_local`], capped at
-/// `--max-procs` (default 8) and the host's parallelism.
+/// `--max-procs` (default 8) and the host's parallelism. `--policies`
+/// crosses every cell with each scheduling policy (work stealing, LPT
+/// packing, adaptive tasks-per-message), so `fixed` cells and their
+/// rewrites land side by side in the JSON.
 pub fn scenarios(a: &ArgParser) -> Result<()> {
     let (out, resume) = out_or_resume(a)?;
     let recovery = scenario::MatrixRecovery {
@@ -384,18 +403,25 @@ pub fn scenarios(a: &ArgParser) -> Result<()> {
         None => scenario::default_orders(seed),
         Some(csv) => parse_list(csv, |s| parse_order(s, seed))?,
     };
+    let policies = match (a.get("policy"), a.get("policies")) {
+        (Some(_), Some(_)) => bail!("pass either --policy or --policies, not both"),
+        (Some(p), None) => vec![parse_policy(p)?],
+        (None, Some(csv)) => parse_list(csv, parse_policy)?,
+        (None, None) => vec![SchedPolicy::Fixed],
+    };
     let days = ((2.0 * scale).ceil() as u32).max(1);
     let max_file_bytes = (40_000.0 * scale) as u64 + 2_000;
     let format = parse_format(a)?;
     let shape = scenario::MatrixShape { workers, days, max_file_bytes, seed, launch, format };
-    let specs = scenario::matrix(&datasets, &strategies, &orders, shape);
+    let specs = scenario::matrix_policies(&datasets, &strategies, &orders, &policies, shape);
     println!(
-        "running {} scenarios ({} datasets x {} strategies x {} orders, {workers} workers, \
-         {} launch) under {}",
+        "running {} scenarios ({} datasets x {} strategies x {} orders x {} policies, \
+         {workers} workers, {} launch) under {}",
         specs.len(),
         datasets.len(),
         strategies.len(),
         orders.len(),
+        policies.len(),
         launch.label(),
         out.display()
     );
@@ -458,16 +484,27 @@ mod tests {
 
     #[test]
     fn parse_alloc_covers_all_modes() {
+        use crate::dist::Distribution;
         assert!(matches!(parse_alloc("selfsched").unwrap(), AllocMode::SelfSched(_)));
+        assert_eq!(parse_alloc("block").unwrap(), AllocMode::Batch(Distribution::Block));
+        assert_eq!(parse_alloc("cyclic").unwrap(), AllocMode::Batch(Distribution::Cyclic));
+        assert_eq!(parse_alloc("lpt").unwrap(), AllocMode::Batch(Distribution::Lpt));
         assert_eq!(
-            parse_alloc("block").unwrap(),
-            AllocMode::Batch(crate::dist::Distribution::Block)
+            parse_alloc("steal-block").unwrap(),
+            AllocMode::Steal(Distribution::Block)
         );
-        assert_eq!(
-            parse_alloc("cyclic").unwrap(),
-            AllocMode::Batch(crate::dist::Distribution::Cyclic)
-        );
+        assert_eq!(parse_alloc("steal").unwrap(), AllocMode::Steal(Distribution::Cyclic));
+        assert_eq!(parse_alloc("steal-lpt").unwrap(), AllocMode::Steal(Distribution::Lpt));
         assert!(parse_alloc("static").is_err());
+    }
+
+    #[test]
+    fn parse_policy_covers_every_policy() {
+        assert_eq!(parse_policy("fixed").unwrap(), SchedPolicy::Fixed);
+        assert_eq!(parse_policy("steal").unwrap(), SchedPolicy::Steal);
+        assert_eq!(parse_policy("lpt").unwrap(), SchedPolicy::Lpt);
+        assert_eq!(parse_policy("adaptive").unwrap(), SchedPolicy::Adaptive);
+        assert!(parse_policy("greedy").is_err());
     }
 
     #[test]

@@ -10,7 +10,7 @@ use crate::datasets::DatasetKind;
 use crate::dist::{Distribution, TaskOrder};
 use crate::launch::LaunchMode;
 use crate::registry::Registry;
-use crate::selfsched::{AllocMode, SelfSchedConfig};
+use crate::selfsched::{AllocMode, SchedPolicy, SelfSchedConfig};
 use crate::tracks::SegmentConfig;
 use crate::util::Rng;
 use anyhow::Result;
@@ -66,6 +66,11 @@ pub struct PipelineConfig {
     /// the destination extension, so resuming a journaled run under the
     /// other format is a hard plan-mismatch error, not a silent mix.
     pub format: ArchiveFormat,
+    /// Scheduling policy applied on top of each stage's base allocation
+    /// mode and task order before dispatch (work stealing, LPT packing,
+    /// adaptive tasks-per-message); [`SchedPolicy::Fixed`] is the
+    /// incumbent behavior.
+    pub policy: SchedPolicy,
 }
 
 impl PipelineConfig {
@@ -96,6 +101,7 @@ impl PipelineConfig {
             max_retries: 2,
             resume: false,
             format: ArchiveFormat::Zip,
+            policy: SchedPolicy::Fixed,
         }
     }
 
@@ -196,6 +202,10 @@ impl Pipeline {
     /// written simply run in full.
     pub fn run(&self, registry: &Registry, raw_files: usize) -> Result<PipelineReport> {
         let w = &self.cfg.work_dir;
+        // The policy axis is a transform over the spec's base modes and
+        // orders, applied once here so every stage backend (in-process,
+        // processes) sees the already-rewritten run shape.
+        let p = self.cfg.policy;
         let organize = crate::workflow::stage1::run_launched(
             &crate::workflow::stage1::OrganizeJob {
                 data_dir: self.cfg.raw_path(),
@@ -204,8 +214,8 @@ impl Pipeline {
             },
             registry,
             self.cfg.workers,
-            self.cfg.order,
-            self.cfg.alloc[0],
+            p.apply_order(self.cfg.order),
+            p.apply_alloc(self.cfg.alloc[0]),
             self.cfg.launch,
             &self.cfg.recovery("organize"),
         )?;
@@ -216,8 +226,8 @@ impl Pipeline {
                 format: self.cfg.format,
             },
             self.cfg.workers,
-            self.cfg.alloc[1],
-            self.cfg.archive_order,
+            p.apply_alloc(self.cfg.alloc[1]),
+            p.apply_order(self.cfg.archive_order),
             self.cfg.launch,
             &self.cfg.recovery("archive"),
         )?;
@@ -230,8 +240,8 @@ impl Pipeline {
                 format: self.cfg.format,
             },
             self.cfg.workers,
-            self.cfg.process_order,
-            self.cfg.alloc[2],
+            p.apply_order(self.cfg.process_order),
+            p.apply_alloc(self.cfg.alloc[2]),
             self.cfg.launch,
             &self.cfg.recovery("process"),
         )?;
@@ -291,6 +301,36 @@ mod tests {
         assert!(report.archive.archives > 0);
         assert!(report.process.segments > 0);
         let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn full_pipeline_policies_run_end_to_end() {
+        // Every non-default policy drives all three stages to completion:
+        // Steal exercises the work-stealing batch executor, Lpt the
+        // cost-packed queues, Adaptive the AIMD tasks-per-message loop.
+        for policy in [SchedPolicy::Steal, SchedPolicy::Lpt, SchedPolicy::Adaptive] {
+            let tmp = std::env::temp_dir().join(format!(
+                "emproc_pipe_{}_{}",
+                policy.label(),
+                std::process::id()
+            ));
+            let _ = std::fs::remove_dir_all(&tmp);
+            let mut cfg = PipelineConfig::small(tmp.clone());
+            cfg.days = 1;
+            cfg.max_file_bytes = 20_000;
+            cfg.workers = 2;
+            cfg.policy = policy;
+            // Give Steal/Lpt a batch stage 1 and 3 to rewrite as well.
+            if policy != SchedPolicy::Adaptive {
+                cfg.alloc[0] = AllocMode::Batch(Distribution::Cyclic);
+                cfg.alloc[2] = AllocMode::Batch(Distribution::Block);
+            }
+            let report = Pipeline::new(cfg).generate_and_run().unwrap();
+            assert!(report.organize.files_written > 0, "{policy:?}");
+            assert!(report.archive.archives > 0, "{policy:?}");
+            assert!(report.process.segments > 0, "{policy:?}");
+            let _ = std::fs::remove_dir_all(&tmp);
+        }
     }
 
     #[test]

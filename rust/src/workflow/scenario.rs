@@ -23,7 +23,7 @@ use crate::datasets::DatasetKind;
 use crate::dist::{Distribution, TaskOrder};
 use crate::launch::LaunchMode;
 use crate::registry::Registry;
-use crate::selfsched::{AllocMode, SelfSchedConfig};
+use crate::selfsched::{AllocMode, SchedPolicy, SelfSchedConfig};
 use crate::workflow::{Pipeline, PipelineConfig, PipelineReport};
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
@@ -56,6 +56,10 @@ pub struct ScenarioSpec {
     /// Stage-2/3 archive format (zip per the paper, or the columnar
     /// track store).
     pub format: ArchiveFormat,
+    /// Scheduling policy applied on top of the base allocation modes and
+    /// order (work stealing, LPT packing, adaptive tasks-per-message);
+    /// [`SchedPolicy::Fixed`] is the incumbent matrix.
+    pub policy: SchedPolicy,
 }
 
 /// Short name for an allocation mode (scenario labels, CLI).
@@ -64,6 +68,10 @@ pub fn alloc_label(alloc: AllocMode) -> &'static str {
         AllocMode::SelfSched(_) => "selfsched",
         AllocMode::Batch(Distribution::Block) => "block",
         AllocMode::Batch(Distribution::Cyclic) => "cyclic",
+        AllocMode::Batch(Distribution::Lpt) => "lpt",
+        AllocMode::Steal(Distribution::Block) => "steal-block",
+        AllocMode::Steal(Distribution::Cyclic) => "steal-cyclic",
+        AllocMode::Steal(Distribution::Lpt) => "steal-lpt",
     }
 }
 
@@ -74,6 +82,7 @@ pub fn order_label(order: TaskOrder) -> String {
         TaskOrder::LargestFirst => "size".into(),
         TaskOrder::FilenameSorted => "filename".into(),
         TaskOrder::Random(seed) => format!("random{seed}"),
+        TaskOrder::CostDescending => "costdesc".into(),
     }
 }
 
@@ -88,11 +97,12 @@ impl ScenarioSpec {
     }
 
     /// Stable label, e.g. `aerodrome/cyclic/filename/w2` — with a
-    /// `/procs` suffix when the cell runs in real worker subprocesses and
-    /// a `/columnar` suffix when it runs on the columnar data plane, so
-    /// the variants of one cell sit side by side in `BENCH_*.json`. The
-    /// allocation component is stage agnostic when all stages share a
-    /// mode, else `s1+s2+s3` labels are joined.
+    /// `/procs` suffix when the cell runs in real worker subprocesses, a
+    /// `/columnar` suffix when it runs on the columnar data plane, and a
+    /// `/steal|/lpt|/adaptive` suffix when a non-`Fixed` policy rewrites
+    /// the cell, so the variants of one cell sit side by side in
+    /// `BENCH_*.json`. The allocation component is stage agnostic when
+    /// all stages share a mode, else `s1+s2+s3` labels are joined.
     pub fn label(&self) -> String {
         let a = if alloc_label(self.alloc[0]) == alloc_label(self.alloc[1])
             && alloc_label(self.alloc[1]) == alloc_label(self.alloc[2])
@@ -117,9 +127,13 @@ impl ScenarioSpec {
             LaunchMode::InProcess => base,
             LaunchMode::Processes => format!("{base}/procs"),
         };
-        match self.format {
+        let base = match self.format {
             ArchiveFormat::Zip => base,
             ArchiveFormat::Columnar => format!("{base}/columnar"),
+        };
+        match self.policy {
+            SchedPolicy::Fixed => base,
+            p => format!("{base}/{}", p.label()),
         }
     }
 
@@ -145,6 +159,7 @@ impl ScenarioSpec {
         cfg.process_order = self.order;
         cfg.launch = self.launch;
         cfg.format = self.format;
+        cfg.policy = self.policy;
         cfg
     }
 }
@@ -206,22 +221,39 @@ pub fn matrix(
     orders: &[TaskOrder],
     shape: MatrixShape,
 ) -> Vec<ScenarioSpec> {
-    let mut specs = Vec::with_capacity(datasets.len() * strategies.len() * orders.len());
+    matrix_policies(datasets, strategies, orders, &[SchedPolicy::Fixed], shape)
+}
+
+/// [`matrix`] with a fourth axis: every cell is additionally crossed with
+/// each scheduling policy, so one sweep compares the incumbent `fixed`
+/// cells directly against their `steal`/`lpt`/`adaptive` rewrites.
+pub fn matrix_policies(
+    datasets: &[DatasetKind],
+    strategies: &[AllocMode],
+    orders: &[TaskOrder],
+    policies: &[SchedPolicy],
+    shape: MatrixShape,
+) -> Vec<ScenarioSpec> {
+    let mut specs =
+        Vec::with_capacity(datasets.len() * strategies.len() * orders.len() * policies.len());
     for &dataset in datasets {
         for &alloc in strategies {
             for &order in orders {
-                specs.push(ScenarioSpec {
-                    dataset,
-                    alloc: [alloc; 3],
-                    order,
-                    workers: shape.workers,
-                    days: shape.days,
-                    max_file_bytes: shape.max_file_bytes,
-                    registry_size: 60,
-                    seed: shape.seed,
-                    launch: shape.launch,
-                    format: shape.format,
-                });
+                for &policy in policies {
+                    specs.push(ScenarioSpec {
+                        dataset,
+                        alloc: [alloc; 3],
+                        order,
+                        workers: shape.workers,
+                        days: shape.days,
+                        max_file_bytes: shape.max_file_bytes,
+                        registry_size: 60,
+                        seed: shape.seed,
+                        launch: shape.launch,
+                        format: shape.format,
+                        policy,
+                    });
+                }
             }
         }
     }
@@ -436,6 +468,7 @@ mod tests {
             seed: 7,
             launch: LaunchMode::InProcess,
             format: ArchiveFormat::Zip,
+            policy: SchedPolicy::Fixed,
         }
     }
 
@@ -481,6 +514,38 @@ mod tests {
             },
         );
         assert!(specs.iter().all(|s| s.label().ends_with("/procs/columnar")));
+    }
+
+    #[test]
+    fn policy_axis_crosses_the_matrix_and_suffixes_labels() {
+        let datasets = [DatasetKind::Monday];
+        let strategies = default_strategies(0.02);
+        let orders = [TaskOrder::LargestFirst];
+        let shape = MatrixShape {
+            workers: 2,
+            days: 1,
+            max_file_bytes: 12_000,
+            seed: 7,
+            launch: LaunchMode::InProcess,
+            format: ArchiveFormat::Zip,
+        };
+        let policies =
+            [SchedPolicy::Fixed, SchedPolicy::Steal, SchedPolicy::Lpt, SchedPolicy::Adaptive];
+        let specs = matrix_policies(&datasets, &strategies, &orders, &policies, shape);
+        assert_eq!(specs.len(), 3 * 4, "strategies x policies");
+        let labels: std::collections::BTreeSet<String> =
+            specs.iter().map(|s| s.label()).collect();
+        assert_eq!(labels.len(), specs.len(), "labels must be unique");
+        // Fixed cells keep the incumbent labels; rewritten cells get the
+        // policy suffix after every other axis.
+        assert!(labels.contains("monday/selfsched/size/w2"));
+        assert!(labels.contains("monday/cyclic/size/w2/steal"));
+        assert!(labels.contains("monday/block/size/w2/lpt"));
+        assert!(labels.contains("monday/selfsched/size/w2/adaptive"));
+        // And `matrix` stays the policy-free subset.
+        let fixed = matrix(&datasets, &strategies, &orders, shape);
+        assert!(fixed.iter().all(|s| s.policy == SchedPolicy::Fixed));
+        assert_eq!(fixed.len(), 3);
     }
 
     #[test]

@@ -180,6 +180,7 @@ pub fn run_launched(
             crate::launch::RunOptions {
                 max_retries: rec.max_retries,
                 journal: recov.writer.as_mut(),
+                cost: crate::dist::CostEstimate::from_tasks(&tasks).into_vec(),
             },
         )?;
         return Ok(OrganizeOutcome {
@@ -198,10 +199,18 @@ pub fn run_launched(
         observations.fetch_add(o, std::sync::atomic::Ordering::Relaxed);
         crate::recovery::journal_task(&journal, w, ti, t0, vec![f as u64, o])
     };
+    let cost = crate::dist::CostEstimate::from_tasks(&tasks);
     let trace = match alloc {
-        AllocMode::Batch(dist) => {
-            crate::exec::run_batch(run_ordered.len(), &run_ordered, workers, dist, work)?
-        }
+        AllocMode::Batch(dist) => crate::exec::run_batch_queues(
+            run_ordered.len(),
+            crate::dist::distribute_costed(&run_ordered, workers, dist, cost.as_slice()),
+            work,
+        )?,
+        AllocMode::Steal(dist) => crate::exec::run_batch_steal(
+            run_ordered.len(),
+            crate::dist::distribute_costed(&run_ordered, workers, dist, cost.as_slice()),
+            work,
+        )?,
         AllocMode::SelfSched(ss) => {
             crate::exec::run_self_scheduled(run_ordered.len(), &run_ordered, workers, ss, work)?
         }

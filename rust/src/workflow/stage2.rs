@@ -118,6 +118,7 @@ pub fn run_launched(
             crate::launch::RunOptions {
                 max_retries: rec.max_retries,
                 journal: recov.writer.as_mut(),
+                cost: crate::dist::CostEstimate::from_tasks(&tasks).into_vec(),
             },
         )?;
         recov.merge_trace(out.trace)
@@ -128,10 +129,18 @@ pub fn run_launched(
             run_task(job.format, &plan.tasks[ti])?;
             crate::recovery::journal_task(&journal, w, ti, t0, Vec::new())
         };
+        let cost = crate::dist::CostEstimate::from_tasks(&tasks);
         let live = match alloc {
-            AllocMode::Batch(dist) => {
-                crate::exec::run_batch(run_ordered.len(), &run_ordered, workers, dist, work)?
-            }
+            AllocMode::Batch(dist) => crate::exec::run_batch_queues(
+                run_ordered.len(),
+                crate::dist::distribute_costed(&run_ordered, workers, dist, cost.as_slice()),
+                work,
+            )?,
+            AllocMode::Steal(dist) => crate::exec::run_batch_steal(
+                run_ordered.len(),
+                crate::dist::distribute_costed(&run_ordered, workers, dist, cost.as_slice()),
+                work,
+            )?,
             AllocMode::SelfSched(ss) => crate::exec::run_self_scheduled(
                 run_ordered.len(),
                 &run_ordered,

@@ -340,6 +340,7 @@ pub fn run_launched(
             crate::launch::RunOptions {
                 max_retries: rec.max_retries,
                 journal: recov.writer.as_mut(),
+                cost: crate::dist::CostEstimate::from_tasks(&tasks).into_vec(),
             },
         )?;
         return Ok(ProcessOutcome {
@@ -371,12 +372,17 @@ pub fn run_launched(
         pjrt_ns.fetch_add(task_pjrt_ns, Ordering::Relaxed);
         crate::recovery::journal_task(&journal, w, ti, t0, vec![s, o, b, task_pjrt_ns])
     };
+    let cost = crate::dist::CostEstimate::from_tasks(&tasks);
     let trace = match alloc {
-        AllocMode::Batch(dist) => crate::exec::run_batch_init(
+        AllocMode::Batch(dist) => crate::exec::run_batch_queues_init(
             run_ordered.len(),
-            &run_ordered,
-            workers,
-            dist,
+            crate::dist::distribute_costed(&run_ordered, workers, dist, cost.as_slice()),
+            init,
+            work,
+        )?,
+        AllocMode::Steal(dist) => crate::exec::run_batch_steal_init(
+            run_ordered.len(),
+            crate::dist::distribute_costed(&run_ordered, workers, dist, cost.as_slice()),
             init,
             work,
         )?,

@@ -10,10 +10,11 @@
 //! `EMPROC_WORKER_BIN` override (tests run under the test harness binary,
 //! which has no `worker` subcommand).
 
+use emproc::archive::ArchiveFormat;
 use emproc::datasets::DatasetKind;
 use emproc::dist::{Distribution, TaskOrder};
 use emproc::launch::LaunchMode;
-use emproc::selfsched::{AllocMode, SelfSchedConfig};
+use emproc::selfsched::{AllocMode, SchedPolicy, SelfSchedConfig};
 use emproc::workflow::scenario::{run_scenario, ScenarioSpec};
 use emproc::workflow::ScenarioReport;
 use std::collections::BTreeMap;
@@ -42,6 +43,8 @@ fn spec(alloc: AllocMode, launch: LaunchMode) -> ScenarioSpec {
         registry_size: 40,
         seed: 7,
         launch,
+        format: ArchiveFormat::Zip,
+        policy: SchedPolicy::Fixed,
     }
 }
 
@@ -161,4 +164,56 @@ fn selfsched_has_identical_outputs_and_protocol_counts_across_launches() {
     assert!(!a.label.ends_with("/procs"), "{}", a.label);
     let _ = std::fs::remove_dir_all(&dir_t);
     let _ = std::fs::remove_dir_all(&dir_p);
+}
+
+#[test]
+fn every_policy_has_identical_outputs_across_launches() {
+    use_real_worker_binary();
+    // Which worker runs a task is timing-dependent under stealing and
+    // adaptive packing, but the stage *outputs* never are: the same
+    // policy-rewritten cell must produce byte-identical trees whether its
+    // workers are threads or subprocesses.
+    let cells = [
+        ("steal", AllocMode::Batch(Distribution::Cyclic), SchedPolicy::Steal),
+        ("lpt", AllocMode::Batch(Distribution::Block), SchedPolicy::Lpt),
+        (
+            "adaptive",
+            AllocMode::SelfSched(SelfSchedConfig { poll_s: 0.01, ..Default::default() }),
+            SchedPolicy::Adaptive,
+        ),
+    ];
+    for (tag, alloc, policy) in cells {
+        let dir_t = tmp(&format!("{tag}_threads"));
+        let dir_p = tmp(&format!("{tag}_procs"));
+        let mut spec_t = spec(alloc, LaunchMode::InProcess);
+        spec_t.policy = policy;
+        let mut spec_p = spec(alloc, LaunchMode::Processes);
+        spec_p.policy = policy;
+        let a = run_scenario(&spec_t, &dir_t).unwrap();
+        let b = run_scenario(&spec_p, &dir_p).unwrap();
+        assert_same_outputs(&dir_t, &dir_p, &a, &b);
+        // Policy cells advertise themselves in their labels.
+        assert!(a.label.ends_with(&format!("/{tag}")), "{}", a.label);
+        assert!(b.label.contains("/procs/"), "{}", b.label);
+        // Task totals agree launch for launch, stage by stage.
+        for (s1, s2, stage) in [
+            (&a.report.organize.trace, &b.report.organize.trace, "organize"),
+            (&a.report.archive.trace, &b.report.archive.trace, "archive"),
+            (&a.report.process.trace, &b.report.process.trace, "process"),
+        ] {
+            assert_eq!(
+                s1.tasks_per_worker.iter().sum::<usize>(),
+                s2.tasks_per_worker.iter().sum::<usize>(),
+                "{tag} {stage} task totals"
+            );
+        }
+        if policy == SchedPolicy::Steal {
+            // Stealing runs grant over pre-assigned queues: zero
+            // allocation messages in both launch modes.
+            assert_eq!(a.report.organize.trace.messages_sent, 0, "{}", a.label);
+            assert_eq!(b.report.organize.trace.messages_sent, 0, "{}", b.label);
+        }
+        let _ = std::fs::remove_dir_all(&dir_t);
+        let _ = std::fs::remove_dir_all(&dir_p);
+    }
 }

@@ -99,7 +99,7 @@ fn real_and_simulated_selfsched_allocate_identically() {
         })
         .collect();
     let ordered = order_tasks(&tasks, TaskOrder::LargestFirst);
-    let ss = SelfSchedConfig { poll_s: 0.005, msg_s: 0.0, tasks_per_message: 3 };
+    let ss = SelfSchedConfig { poll_s: 0.005, msg_s: 0.0, tasks_per_message: 3, adaptive: false };
 
     let sim = Simulator::run(
         &SimConfig {

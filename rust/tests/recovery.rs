@@ -14,10 +14,11 @@
 //! `CARGO_BIN_EXE_emproc`, wired through the `EMPROC_WORKER_BIN`
 //! override exactly like `tests/launch_parity.rs`).
 
+use emproc::archive::ArchiveFormat;
 use emproc::datasets::DatasetKind;
 use emproc::dist::TaskOrder;
 use emproc::launch::LaunchMode;
-use emproc::selfsched::{AllocMode, SelfSchedConfig};
+use emproc::selfsched::{AllocMode, SchedPolicy, SelfSchedConfig};
 use emproc::workflow::scenario::{run_scenario, ScenarioSpec};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -84,6 +85,8 @@ fn worker_killed_mid_selfsched_processes_run_recovers_byte_identically() {
         registry_size: 40,
         seed: 7,
         launch: LaunchMode::Processes,
+        format: ArchiveFormat::Zip,
+        policy: SchedPolicy::Fixed,
     };
     let ref_dir = tmp("kill_ref");
     let fault_dir = tmp("kill_fault");

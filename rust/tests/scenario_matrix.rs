@@ -3,12 +3,20 @@
 //! json round-trip, and the §IV.B archiving direction on the skewed
 //! aerodrome corpus.
 
+use emproc::archive::ArchiveFormat;
 use emproc::bench_harness::json;
 use emproc::datasets::DatasetKind;
-use emproc::dist::TaskOrder;
+use emproc::dist::{Distribution, TaskOrder};
 use emproc::launch::LaunchMode;
+use emproc::selfsched::{AllocMode, SchedPolicy, SelfSchedConfig};
 use emproc::workflow::scenario;
 use std::path::PathBuf;
+use std::sync::Mutex;
+
+/// Both tests in this binary compare single-cell wall-clock times, which
+/// must not be inflated by the sibling test's work contending for the
+/// same cores — run them strictly one at a time.
+static TIMING: Mutex<()> = Mutex::new(());
 
 fn tmp(tag: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!("emproc_scmx_{tag}_{}", std::process::id()));
@@ -18,10 +26,11 @@ fn tmp(tag: &str) -> PathBuf {
 
 #[test]
 fn matrix_runs_both_datasets_and_gates_cleanly() {
+    let _serial = TIMING.lock().unwrap_or_else(|e| e.into_inner());
     // Serialize the sweep: the §IV.B direction check below compares
     // single-cell wall-clock archive times, which must not be inflated by
-    // sibling cells' PJRT work contending for the same cores. (This test
-    // is the only one in this binary, so the env var cannot race.)
+    // sibling cells' PJRT work contending for the same cores. (Both tests
+    // set the same value, so the env var cannot race.)
     std::env::set_var("EMPROC_SWEEP_THREADS", "1");
     let base = tmp("matrix");
     let specs = scenario::matrix(
@@ -34,6 +43,7 @@ fn matrix_runs_both_datasets_and_gates_cleanly() {
             max_file_bytes: 20_000,
             seed: 11,
             launch: LaunchMode::InProcess,
+            format: ArchiveFormat::Zip,
         },
     );
     assert_eq!(specs.len(), 6); // 2 datasets x 3 strategies x 1 order
@@ -102,4 +112,104 @@ fn matrix_runs_both_datasets_and_gates_cleanly() {
     assert_eq!(text.matches('{').count(), text.matches('}').count());
 
     let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
+fn policy_wins_hold_on_the_real_executor() {
+    let _serial = TIMING.lock().unwrap_or_else(|e| e.into_inner());
+    std::env::set_var("EMPROC_SWEEP_THREADS", "1");
+
+    // One cell per (dataset, alloc, order, policy) comparison pair. The
+    // paper's directions hold at scale; at laptop scale we assert them
+    // with the same generous 1.5x timing slack as the §IV.B check above
+    // (single-digit-millisecond stages are noisy).
+    let cell = |tag: &str,
+                dataset: DatasetKind,
+                alloc: AllocMode,
+                order: TaskOrder,
+                policy: SchedPolicy|
+     -> (String, f64) {
+        let spec = scenario::ScenarioSpec {
+            dataset,
+            alloc: [alloc; 3],
+            order,
+            workers: 2,
+            days: 1,
+            max_file_bytes: 15_000,
+            registry_size: 40,
+            seed: 13,
+            launch: LaunchMode::InProcess,
+            format: ArchiveFormat::Zip,
+            policy,
+        };
+        let dir = tmp(tag);
+        let r = scenario::run_scenario(&spec, &dir).unwrap();
+        r.report.organize.trace.check_invariants(r.report.raw_files).unwrap();
+        r.report.archive.trace.check_invariants(r.report.archive.archives).unwrap();
+        r.report.process.trace.check_invariants(r.report.process.archives).unwrap();
+        let total = r.report.organize.trace.job_time
+            + r.report.archive.trace.job_time
+            + r.report.process.trace.job_time;
+        let label = r.label.clone();
+        let _ = std::fs::remove_dir_all(&dir);
+        (label, total)
+    };
+    let cyc = AllocMode::Batch(Distribution::Cyclic);
+    let ss = AllocMode::SelfSched(SelfSchedConfig { poll_s: 0.01, ..Default::default() });
+
+    // Work stealing keeps up with plain cyclic on the skewed aerodrome
+    // corpus (at scale it wins on stragglers; it must never regress).
+    let (_, cyclic_s) = cell(
+        "pw_cyc",
+        DatasetKind::Aerodrome,
+        cyc,
+        TaskOrder::FilenameSorted,
+        SchedPolicy::Fixed,
+    );
+    let (steal_label, steal_s) = cell(
+        "pw_steal",
+        DatasetKind::Aerodrome,
+        cyc,
+        TaskOrder::FilenameSorted,
+        SchedPolicy::Steal,
+    );
+    assert!(steal_label.ends_with("/steal"), "{steal_label}");
+    assert!(
+        steal_s <= cyclic_s * 1.5,
+        "stealing regressed vs cyclic: {steal_s:.4}s vs {cyclic_s:.4}s"
+    );
+
+    // Cost-guided LPT packing keeps up with the paper's best static
+    // strategy, size-ordered self-scheduling (the Table II direction).
+    let (_, ss_largest_s) = cell(
+        "pw_ss",
+        DatasetKind::Monday,
+        ss,
+        TaskOrder::LargestFirst,
+        SchedPolicy::Fixed,
+    );
+    let (lpt_label, lpt_s) = cell(
+        "pw_lpt",
+        DatasetKind::Monday,
+        AllocMode::Batch(Distribution::Block),
+        TaskOrder::FilenameSorted,
+        SchedPolicy::Lpt,
+    );
+    assert!(lpt_label.ends_with("/lpt"), "{lpt_label}");
+    assert!(
+        lpt_s <= ss_largest_s * 1.5,
+        "LPT regressed vs size-ordered selfsched: {lpt_s:.4}s vs {ss_largest_s:.4}s"
+    );
+
+    // Adaptive tasks-per-message tracks the static tasks_per_message=1
+    // operating point it starts from (big-file corpora keep k low).
+    let (_, fixed_ss_s) =
+        cell("pw_ssf", DatasetKind::Monday, ss, TaskOrder::FilenameSorted, SchedPolicy::Fixed);
+    let (ad_label, adaptive_s) =
+        cell("pw_ad", DatasetKind::Monday, ss, TaskOrder::FilenameSorted, SchedPolicy::Adaptive);
+    assert!(ad_label.ends_with("/adaptive"), "{ad_label}");
+    assert!(
+        adaptive_s <= fixed_ss_s * 1.5,
+        "adaptive regressed vs static selfsched: {adaptive_s:.4}s vs {fixed_ss_s:.4}s"
+    );
 }
