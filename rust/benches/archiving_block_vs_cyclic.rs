@@ -5,7 +5,7 @@ use emproc::workflow::benchcmd;
 
 fn main() {
     section("§IV.B — archiving organized data: block vs cyclic");
-    print!("{}", benchcmd::run_archiving());
+    print!("{}", benchcmd::run_archiving().expect("archiving"));
     emproc::bench_harness::json::write_file("archiving_block_vs_cyclic")
         .expect("write bench json");
 }

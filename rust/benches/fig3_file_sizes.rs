@@ -4,5 +4,5 @@ use emproc::workflow::benchcmd;
 
 fn main() {
     section("Fig 3 — dataset file-size distributions");
-    print!("{}", benchcmd::run_fig3());
+    print!("{}", benchcmd::run_fig3().expect("fig3"));
 }

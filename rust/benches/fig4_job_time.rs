@@ -4,6 +4,6 @@ use emproc::workflow::benchcmd;
 
 fn main() {
     section("Fig 4 — job time for parsing and organizing dataset #1");
-    print!("{}", benchcmd::run_fig4());
+    print!("{}", benchcmd::run_fig4().expect("fig4"));
     emproc::bench_harness::json::write_file("fig4_job_time").expect("write bench json");
 }

@@ -5,7 +5,7 @@ use emproc::workflow::benchcmd;
 
 fn main() {
     section("Figs 5-6 — worker-time distributions while organizing DS#1");
-    print!("{}", benchcmd::run_fig56());
+    print!("{}", benchcmd::run_fig56().expect("fig5/6"));
     emproc::bench_harness::json::write_file("fig5_fig6_worker_dist")
         .expect("write bench json");
 }

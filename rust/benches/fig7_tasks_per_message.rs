@@ -5,7 +5,7 @@ use emproc::workflow::benchcmd;
 
 fn main() {
     section("Fig 7 — tasks per self-scheduling message");
-    print!("{}", benchcmd::run_fig7());
+    print!("{}", benchcmd::run_fig7().expect("fig7"));
     emproc::bench_harness::json::write_file("fig7_tasks_per_message")
         .expect("write bench json");
 }

@@ -5,7 +5,7 @@ use emproc::workflow::benchcmd;
 
 fn main() {
     section("Fig 8 — processing the archived datasets");
-    print!("{}", benchcmd::run_fig8());
+    print!("{}", benchcmd::run_fig8().expect("fig8"));
     emproc::bench_harness::json::write_file("fig8_processing_dist")
         .expect("write bench json");
 }

@@ -12,7 +12,7 @@ fn main() {
         .and_then(|s| s.parse().ok())
         .unwrap_or(0.1);
     section("Fig 9 — radar follow-up worker-time eCDF");
-    print!("{}", benchcmd::run_fig9(scale));
-    println!("{}", benchcmd::run_serial());
+    print!("{}", benchcmd::run_fig9(scale).expect("fig9"));
+    println!("{}", benchcmd::run_serial().expect("serial"));
     emproc::bench_harness::json::write_file("fig9_radar_ecdf").expect("write bench json");
 }

@@ -13,6 +13,7 @@ fn main() {
             "TABLE I — sim (paper) seconds",
             &benchcmd::PAPER_TABLE1
         )
+        .expect("table1")
     );
     emproc::bench_harness::json::write_file("table1_organize_chrono")
         .expect("write bench json");

@@ -13,6 +13,7 @@ fn main() {
             "TABLE II — sim (paper) seconds",
             &benchcmd::PAPER_TABLE2
         )
+        .expect("table2")
     );
     emproc::bench_harness::json::write_file("table2_organize_size")
         .expect("write bench json");

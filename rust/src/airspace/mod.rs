@@ -46,14 +46,18 @@ impl AirspaceClass {
 pub struct Aerodrome {
     /// Four-letter-style identifier (`SYN0`, `SYN1`, ...).
     pub id: String,
+    /// Center latitude, degrees.
     pub lat: f64,
+    /// Center longitude, degrees.
     pub lon: f64,
+    /// Airspace class of the controlled cylinder.
     pub class: AirspaceClass,
 }
 
 /// The set of aerodromes forming the synthetic airspace map.
 #[derive(Debug, Clone, Default)]
 pub struct AirspaceMap {
+    /// Every aerodrome on the map.
     pub aerodromes: Vec<Aerodrome>,
 }
 

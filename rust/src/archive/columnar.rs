@@ -160,11 +160,13 @@ impl<'a> FooterCursor<'a> {
     }
 
     fn u32(&mut self, what: &str) -> Result<u32, ArchiveError> {
-        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().expect("4 bytes")))
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
     fn u64(&mut self, what: &str) -> Result<u64, ArchiveError> {
-        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().expect("8 bytes")))
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
     }
 }
 
@@ -210,7 +212,7 @@ impl ColumnarReader {
             )
             .into());
         }
-        let version = u32::from_le_bytes(trailer[8..12].try_into().expect("4 bytes"));
+        let version = u32::from_le_bytes([trailer[8], trailer[9], trailer[10], trailer[11]]);
         if version != VERSION {
             return Err(ArchiveError::corrupt(
                 path,
@@ -220,7 +222,9 @@ impl ColumnarReader {
             )
             .into());
         }
-        let footer_len = u64::from_le_bytes(trailer[0..8].try_into().expect("8 bytes"));
+        let mut fl = [0u8; 8];
+        fl.copy_from_slice(&trailer[0..8]);
+        let footer_len = u64::from_le_bytes(fl);
         if footer_len > trailer_off {
             return Err(ArchiveError::corrupt(
                 path,
@@ -259,7 +263,11 @@ impl ColumnarReader {
             let offset = cur.u64("member offset")?;
             let len = cur.u32("member length")?;
             let rows = cur.u64("member rows")?;
-            if offset + 4 + u64::from(len) > data_end {
+            // Checked arithmetic: a corrupt footer can carry an offset
+            // near u64::MAX, and `offset + 4 + len` must not wrap into a
+            // small (seemingly valid) end position.
+            let end = offset.checked_add(4 + u64::from(len));
+            if end.is_none() || end > Some(data_end) {
                 return Err(ArchiveError::corrupt(
                     path,
                     offset,
@@ -323,7 +331,7 @@ impl ColumnarReader {
                 format!("member '{name}' range unreadable: {err}"),
             ))
         })?;
-        let prefix = u32::from_le_bytes(buf[0..4].try_into().expect("4 bytes"));
+        let prefix = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
         if prefix != len {
             return Err(ArchiveError::corrupt(
                 &self.path,

@@ -8,9 +8,13 @@
 //! per directory ([`zipdir`], the paper's layout) or as one packed
 //! columnar track store ([`columnar`], the byte-range data plane).
 
+/// Packed, footer-indexed `.ctrk` columnar track store.
 pub mod columnar;
+/// Typed archive error ([`ArchiveError`]) shared by both formats.
 pub mod error;
+/// Lustre-style block accounting for archive size comparisons.
 pub mod lustre;
+/// One zip archive per bottom-tier directory (the paper's layout).
 pub mod zipdir;
 
 pub use columnar::{ColumnarReader, ColumnarWriter};

@@ -32,6 +32,7 @@ pub struct ArchiveTask {
 /// The full archiving plan for an organized tree.
 #[derive(Debug, Default)]
 pub struct ArchivePlan {
+    /// One archiving task per bottom-tier directory.
     pub tasks: Vec<ArchiveTask>,
 }
 

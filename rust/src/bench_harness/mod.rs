@@ -12,11 +12,17 @@ use std::time::{Duration, Instant};
 /// Result of one timed benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark name (one target can time several).
     pub name: String,
+    /// Timed iterations behind the statistics.
     pub iters: u32,
+    /// Mean per-iteration time.
     pub mean: Duration,
+    /// Per-iteration standard deviation.
     pub stddev: Duration,
+    /// Fastest iteration.
     pub min: Duration,
+    /// Slowest iteration.
     pub max: Duration,
 }
 
@@ -102,7 +108,7 @@ pub mod sweep {
             return items.iter().map(f).collect();
         }
         let cursor = AtomicUsize::new(0);
-        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut pairs: Vec<(usize, T)> = Vec::with_capacity(n);
         std::thread::scope(|scope| {
             let handles: Vec<_> = (0..workers)
                 .map(|_| {
@@ -122,15 +128,18 @@ pub mod sweep {
                 })
                 .collect();
             for h in handles {
-                for (i, r) in h.join().expect("sweep worker panicked") {
-                    slots[i] = Some(r);
+                // A panicked closure already poisoned the sweep; carry
+                // the panic instead of inventing a result.
+                match h.join() {
+                    Ok(done) => pairs.extend(done),
+                    Err(payload) => std::panic::resume_unwind(payload),
                 }
             }
         });
-        slots
-            .into_iter()
-            .map(|s| s.expect("every sweep slot filled"))
-            .collect()
+        // The claim loop hands out each index exactly once, so after the
+        // joins `pairs` is a permutation of 0..n.
+        pairs.sort_by_key(|&(i, _)| i);
+        pairs.into_iter().map(|(_, r)| r).collect()
     }
 }
 
@@ -157,7 +166,7 @@ pub mod json {
     static SCENARIOS: Mutex<Vec<Scenario>> = Mutex::new(Vec::new());
 
     fn push(name: &str, job_time_s: f64, messages_sent: usize, tasks: usize, wall_s: f64) {
-        SCENARIOS.lock().expect("scenario lock").push(Scenario {
+        SCENARIOS.lock().unwrap_or_else(std::sync::PoisonError::into_inner).push(Scenario {
             name: name.to_string(),
             job_time_s,
             messages_sent,
@@ -196,7 +205,7 @@ pub mod json {
 
     /// Drop everything recorded so far (between unrelated bench targets).
     pub fn clear() {
-        SCENARIOS.lock().expect("scenario lock").clear();
+        SCENARIOS.lock().unwrap_or_else(std::sync::PoisonError::into_inner).clear();
     }
 
     fn escape(s: &str) -> String {
@@ -216,7 +225,9 @@ pub mod json {
     /// offline. The file-level `tasks_per_sec` aggregates all timed
     /// scenarios (0.0 when none were timed).
     pub fn write_file(target: &str) -> std::io::Result<PathBuf> {
-        let scenarios = std::mem::take(&mut *SCENARIOS.lock().expect("scenario lock"));
+        let scenarios = std::mem::take(&mut *SCENARIOS
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner));
         let timed_tasks: usize =
             scenarios.iter().filter(|s| s.wall_s > 0.0).map(|s| s.tasks).sum();
         let timed_wall: f64 =

@@ -72,6 +72,20 @@ COMMANDS:
       [--data DIR] [--min-speedup F]
   bench-check  gate a BENCH_*.json against a committed throughput baseline
       --current FILE --baseline FILE [--tolerance F]   (default 0.30)
+  check      exhaustively model-check the §II.D scheduling protocol: every
+             interleaving of grants, steals, completions and worker deaths
+             is walked on the real manager for each policy, with the
+             exactly-once / no-lost-grant / no-duplicate-steal / counter
+             invariants machine-checked at every state (DESIGN.md §13)
+      [--workers LIST] [--tasks LIST] [--deaths LIST]   comma lists
+      (defaults 2,3 / 3,5 / 0,1)
+      [--policies block,cyclic,lpt,steal,selfsched,adaptive]
+      [--max-states N]          per-config state-space guard (default 500000)
+      [--min-interleavings N]   fail under this many total (default 10000)
+  xtask <lint>  repo static-analysis wall: panic-free library code,
+             documented pub items, README flag coverage, corruption-path
+             test coverage
+      [--root DIR]   repo root (default: auto-detect from cwd)
   info       report artifact, manifest and environment status
   help       this text
 ";
@@ -102,6 +116,8 @@ pub fn dispatch(args: &[String]) -> Result<()> {
         "queries" => cmd_queries(rest),
         "bench" => cmd_bench(rest),
         "bench-check" => cmd_bench_check(rest),
+        "check" => cmd_check(rest),
+        "xtask" => cmd_xtask(rest),
         other => bail!("unknown command '{other}' (try `emproc help`)"),
     }
 }
@@ -177,6 +193,78 @@ fn cmd_bench(args: &[String]) -> Result<()> {
     let a = ArgParser::parse(args, &[])?;
     let which = a.pos(0).unwrap_or("all");
     crate::workflow::benchcmd::run(which, &a)
+}
+
+/// `emproc check`: run the exhaustive protocol model checker over a
+/// policy × workers × tasks × deaths matrix (see [`crate::modelcheck`]).
+/// Prints one row per configuration and fails on the first invariant
+/// violation, on a state-space overflow, or when the total distinct
+/// interleavings fall below `--min-interleavings` (the exhaustiveness
+/// floor CI pins).
+fn cmd_check(args: &[String]) -> Result<()> {
+    use crate::modelcheck::{matrix, run_check, CheckPolicy, ALL_POLICIES};
+    let a = ArgParser::parse(args, &[])?;
+    let list = |name: &str, default: &str| -> Result<Vec<usize>> {
+        a.get_or(name, default)
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("flag --{name}: cannot parse '{s}'"))
+            })
+            .collect()
+    };
+    let workers = list("workers", "2,3")?;
+    let tasks = list("tasks", "3,5")?;
+    let deaths = list("deaths", "0,1")?;
+    let policies: Vec<CheckPolicy> = match a.get("policies") {
+        None => ALL_POLICIES.to_vec(),
+        Some(s) => s.split(',').map(|p| CheckPolicy::parse(p.trim())).collect::<Result<_>>()?,
+    };
+    let max_states = a.get_num("max-states", 500_000usize)?;
+    let min_inter = a.get_num("min-interleavings", 10_000u128)?;
+    let mut total_states = 0usize;
+    let mut total_inter = 0u128;
+    println!("{:<28} {:>8} {:>14} {:>8} {:>8}", "config", "states", "interleavings", "terminal", "journal");
+    for cfg in matrix(&policies, &workers, &tasks, &deaths, max_states) {
+        let r = run_check(&cfg)?;
+        println!(
+            "{:<28} {:>8} {:>14} {:>8} {:>8}",
+            r.config, r.states, r.interleavings, r.terminals, r.journal_checks
+        );
+        total_states += r.states;
+        total_inter = total_inter.saturating_add(r.interleavings);
+    }
+    println!("total: {total_states} states, {total_inter} distinct interleavings, 0 violations");
+    if total_inter < min_inter {
+        bail!("only {total_inter} interleavings explored (< {min_inter}); widen the matrix");
+    }
+    Ok(())
+}
+
+/// `emproc xtask lint`: the in-repo static-analysis pass (see
+/// [`crate::lint`]). Exits non-zero when any finding is reported.
+fn cmd_xtask(args: &[String]) -> Result<()> {
+    let Some(task) = args.first().map(String::as_str) else {
+        bail!("usage: emproc xtask lint [--root DIR]");
+    };
+    match task {
+        "lint" => {
+            let a = ArgParser::parse(&args[1..], &[])?;
+            let root = std::path::PathBuf::from(a.get_or("root", "."));
+            let findings = crate::lint::run_lint(&root)?;
+            for f in &findings {
+                println!("{f}");
+            }
+            if findings.is_empty() {
+                println!("xtask lint: clean");
+                Ok(())
+            } else {
+                bail!("xtask lint: {} finding(s)", findings.len())
+            }
+        }
+        other => bail!("unknown xtask '{other}' (only: lint)"),
+    }
 }
 
 /// Compare the `tasks_per_sec` figures of a freshly produced

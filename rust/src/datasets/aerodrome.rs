@@ -15,9 +15,13 @@ use crate::util::Rng;
 
 /// Paper-scale constants.
 pub const FILES: usize = 136_884;
+/// Aerodrome query boxes (paper: 695).
 pub const BOXES: usize = 695;
+/// Campaign days (first 14 of each month, Jan 2019 - Feb 2020).
 pub const DAYS: u32 = 196;
+/// Total dataset size (paper: 847 GB).
 pub const TOTAL_BYTES: u64 = 847_000_000_000;
+/// Load-balancing storage groups.
 pub const GROUPS: u32 = 16;
 
 /// Generate the paper-scale manifest.
@@ -46,7 +50,7 @@ pub fn manifest(rng: &mut Rng) -> FileManifest {
     }
     // Top-up split files from the heaviest boxes.
     let mut heavy: Vec<usize> = (0..BOXES).collect();
-    heavy.sort_by(|&a, &b| activity[b].partial_cmp(&activity[a]).unwrap());
+    heavy.sort_by(|&a, &b| activity[b].total_cmp(&activity[a]));
     let mut k = 0;
     while entries.len() < FILES {
         let b = heavy[k % 64];

@@ -39,9 +39,11 @@ impl Default for GenSpec {
 /// What one format's tree came out as.
 #[derive(Debug)]
 pub struct GenTree {
+    /// Which archive format this tree holds.
     pub format: ArchiveFormat,
     /// Tree root: `<out>/<format label>/`.
     pub root: PathBuf,
+    /// Archives written.
     pub archives: usize,
     /// Archive bytes on disk.
     pub bytes: u64,

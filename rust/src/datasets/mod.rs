@@ -12,10 +12,15 @@
 //! corpus** (scaled CSV files on disk) for the end-to-end executor and
 //! examples.
 
+/// Dataset #2: 136,884 aerodrome query result files.
 pub mod aerodrome;
+/// Scaling corpus generator (identical zip/columnar content).
 pub mod gencorpus;
+/// Dataset #1: 104 Mondays of global ADS-B data.
 pub mod monday;
+/// Archive- and processing-stage task workloads (§IV.B-C).
 pub mod processing;
+/// The §V radar dataset on the follow-up configuration.
 pub mod radar;
 
 use crate::util::Rng;
@@ -87,7 +92,9 @@ pub struct FileEntry {
 /// A dataset manifest: the complete file inventory at paper scale.
 #[derive(Debug, Clone)]
 pub struct FileManifest {
+    /// Which dataset this inventory describes.
     pub kind: DatasetKind,
+    /// Every file in the dataset.
     pub entries: Vec<FileEntry>,
 }
 

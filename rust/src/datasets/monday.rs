@@ -14,7 +14,9 @@ use crate::util::Rng;
 
 /// Paper-scale constants.
 pub const MONDAYS: u32 = 104;
+/// Raw files (paper: 2,425).
 pub const FILES: usize = 2_425;
+/// Total dataset size (paper: 714 GB).
 pub const TOTAL_BYTES: u64 = 714_000_000_000;
 
 /// Diurnal traffic factor for a UTC hour: global ADS-B volume peaks in the

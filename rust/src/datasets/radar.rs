@@ -127,7 +127,7 @@ mod tests {
         let m = manifest(&mut rng, 0.003);
         let sizes: Vec<f64> = m.entries.iter().map(|e| e.size as f64).collect();
         let mean = crate::util::mean(&sizes);
-        let max = sizes.iter().cloned().fold(0.0, f64::max);
+        let max = sizes.iter().copied().fold(0.0, f64::max);
         assert!(mean < 100_000.0, "mean {mean}");
         assert!(max < 200.0 * mean, "tail too heavy: max {max} mean {mean}");
     }

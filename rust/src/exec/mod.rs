@@ -375,7 +375,10 @@ where
                 let mut state = match catch_panics(|| init(w)) {
                     Ok(s) => s,
                     Err(e) => {
-                        let mut g = shared.lock().unwrap();
+                        // A panicking lock holder is itself a first error;
+                        // keep the state and record ours.
+                        let mut g =
+                            shared.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
                         g.0.abort();
                         g.1.get_or_insert(e);
                         return;
@@ -384,12 +387,17 @@ where
                 loop {
                     // In-process queues only shrink (no worker deaths, no
                     // requeue), so a `None` means the run is over for us.
-                    let taken = shared.lock().unwrap().0.take_batch(w, elapsed());
+                    let taken = shared
+                        .lock()
+                        .unwrap_or_else(std::sync::PoisonError::into_inner)
+                        .0
+                        .take_batch(w, elapsed());
                     let Some((ti, _stolen)) = taken else { return };
                     let began = Instant::now();
                     let result = catch_panics(|| work(&mut state, w, ti));
                     let busy = began.elapsed().as_secs_f64();
-                    let mut g = shared.lock().unwrap();
+                    let mut g =
+                        shared.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
                     g.0.complete_with_busy(w, elapsed(), busy);
                     if let Err(e) = result {
                         // First-error abort, batch flavor: stop taking new
@@ -402,7 +410,7 @@ where
             });
         }
     });
-    let (mgr, err) = shared.into_inner().expect("no worker holds the lock");
+    let (mgr, err) = shared.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
     if let Some(e) = err {
         return Err(e);
     }

@@ -12,8 +12,11 @@ use std::collections::{BTreeMap, BTreeSet};
 /// A rasterization domain: origin + square cell size (degrees).
 #[derive(Debug, Clone, Copy)]
 pub struct CellGrid {
+    /// Grid origin latitude, degrees.
     pub lat0: f64,
+    /// Grid origin longitude, degrees.
     pub lon0: f64,
+    /// Square cell size, degrees.
     pub cell_deg: f64,
 }
 

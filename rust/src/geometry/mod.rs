@@ -8,7 +8,9 @@
 //! large (Fig 2). This module implements that chain on a configurable
 //! cell grid.
 
+/// Cell rasterization and connected-component extraction.
 pub mod grid;
+/// Axis-aligned rectangles on the lat/lon plane.
 pub mod rect;
 
 pub use grid::{CellGrid, Component};
@@ -20,8 +22,11 @@ pub const DEG_PER_NM_LAT: f64 = 1.0 / 60.0;
 /// A circle on the lat/lon plane (radius in nautical miles).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Circle {
+    /// Center latitude, degrees.
     pub lat: f64,
+    /// Center longitude, degrees.
     pub lon: f64,
+    /// Radius in nautical miles.
     pub radius_nm: f64,
 }
 

@@ -3,9 +3,13 @@
 /// Closed axis-aligned rectangle in degrees.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Rect {
+    /// South edge, degrees latitude.
     pub lat_lo: f64,
+    /// North edge, degrees latitude.
     pub lat_hi: f64,
+    /// West edge, degrees longitude.
     pub lon_lo: f64,
+    /// East edge, degrees longitude.
     pub lon_hi: f64,
 }
 

@@ -35,7 +35,9 @@
 //! a node loss. Every completed grant can be journaled through
 //! [`RunOptions::journal`] for `--resume`.
 
+/// Line protocol between manager and worker subprocesses.
 pub mod protocol;
+/// The worker-side loop of the stdio protocol.
 pub mod worker;
 
 pub use worker::worker_loop;
@@ -85,7 +87,9 @@ impl LaunchMode {
 /// The program + arguments a worker subprocess is spawned with.
 #[derive(Debug, Clone)]
 pub struct WorkerCommand {
+    /// Executable to spawn.
     pub program: PathBuf,
+    /// Arguments before the per-worker protocol arguments.
     pub args: Vec<String>,
 }
 
@@ -207,7 +211,12 @@ impl WorkerProc {
         if let Some(h) = self.stderr_thread.take() {
             let _ = h.join();
         }
-        let text = self.stderr_buf.lock().expect("stderr buffer lock").trim().to_string();
+        let text = self
+            .stderr_buf
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .trim()
+            .to_string();
         if text.is_empty() {
             "<empty>".to_string()
         } else {
@@ -302,8 +311,12 @@ pub fn run_processes(
             }
         };
         let stdin = proc.stdin.take();
-        let stdout = proc.stdout.take().expect("piped stdout");
-        let stderr = proc.stderr.take().expect("piped stderr");
+        // Both are piped in the Command above, so `None` is impossible;
+        // treat it as a spawn failure rather than panicking.
+        let (Some(stdout), Some(stderr)) = (proc.stdout.take(), proc.stderr.take()) else {
+            spawn_failure = Some(anyhow::anyhow!("worker {w}: stdio pipes missing after spawn"));
+            break;
+        };
         let tx2 = tx.clone();
         std::thread::spawn(move || {
             for line in BufReader::new(stdout).lines() {
@@ -326,7 +339,7 @@ pub fn run_processes(
         let stderr_thread = std::thread::spawn(move || {
             let mut text = String::new();
             let _ = BufReader::new(stderr).read_to_string(&mut text);
-            *buf2.lock().expect("stderr buffer lock") = text;
+            *buf2.lock().unwrap_or_else(std::sync::PoisonError::into_inner) = text;
         });
         children.push(WorkerProc {
             proc,
@@ -434,7 +447,9 @@ pub fn run_processes(
                         m.assign_queues(distribute_costed(ordered, nworkers, dist, &opts.cost));
                         (m, SelfSchedConfig::default().poll_s)
                     }
-                    AllocMode::Batch(_) => unreachable!("batch is handled below"),
+                    AllocMode::Batch(_) => {
+                        bail!("batch allocation cannot drive the self-scheduled launch path")
+                    }
                 };
                 // Sequential initial fan-out, "as fast as possible".
                 for w in 0..nworkers {
@@ -795,12 +810,18 @@ pub fn run_processes(
     if let Some((w, msg)) = failure {
         let stderr = children
             .get(w)
-            .map(|c| c.stderr_buf.lock().expect("stderr buffer lock").trim().to_string())
+            .map(|c| {
+                c.stderr_buf
+                    .lock()
+                    .unwrap_or_else(std::sync::PoisonError::into_inner)
+                    .trim()
+                    .to_string()
+            })
             .unwrap_or_default();
         let stderr = if stderr.is_empty() { "<empty>".to_string() } else { stderr };
         bail!("worker {w}: {msg}; worker stderr: {stderr}");
     }
-    let trace = trace.expect("trace assembled on every non-failure path");
+    let trace = trace.context("trace assembled on every non-failure path")?;
     Ok(LaunchOutcome { trace, stats })
 }
 

@@ -29,31 +29,63 @@
 //! ([`archive`]).
 //!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! paper-vs-measured results. The verification layer (DESIGN.md §13) is
+//! [`modelcheck`] — an exhaustive interleaving explorer over the real
+//! [`sched`] core — plus the repo lint in [`lint`] (`emproc xtask lint`).
 
+#![warn(missing_docs, rust_2018_idioms)]
+
+/// Airspace classes (B/C/D/other) and the paper's class-lookup geometry.
 pub mod airspace;
+/// Timed-run / sweep / JSON-record harness behind `cargo bench`.
 pub mod bench_harness;
+/// The `emproc` command-line interface: flag parsing and subcommands.
 pub mod cli;
+/// Archive data plane: zip + packed columnar `.ctrk`, Lustre accounting.
 pub mod archive;
+/// Generators for the paper's datasets (Mondays, aerodromes, radar).
 pub mod datasets;
+/// GLOBE-like digital elevation model for AGL altitude derivation.
 pub mod dem;
+/// Block/cyclic/LPT batch distribution and task-organization orders.
 pub mod dist;
+/// In-process thread-pool executor driving the [`sched`] core.
 pub mod exec;
+/// Multi-process launch layer: worker subprocesses over stdio.
 pub mod launch;
+/// The repo's own static-analysis wall (`emproc xtask lint`).
+pub mod lint;
+/// Histograms, eCDFs, worker reports, and table rendering.
 pub mod metrics;
+/// Exhaustive interleaving explorer over [`sched`] (`emproc check`).
+pub mod modelcheck;
+/// Crash tolerance: grant-level retry and the resumable run journal.
 pub mod recovery;
+/// Clock-generic self-scheduling manager state machine (§II.D).
 pub mod sched;
+/// Self-scheduling protocol parameters and trace accounting.
 pub mod selfsched;
+/// Discrete-event cluster simulator calibrated to the LLSC.
 pub mod simcluster;
+/// Triples-mode job launch model (nodes × NPPN × threads).
 pub mod triples;
+/// The three-stage workflow: organize → archive → process.
 pub mod workflow;
+/// Planar geometry for the aerodrome query pipeline.
 pub mod geometry;
+/// Node/process/thread hierarchy math shared by launch layers.
 pub mod hierarchy;
+/// Aerodrome query generation (the paper's stage-1 workload).
 pub mod queries;
+/// Synthetic aircraft registries keyed by the paper's fleet mix.
 pub mod registry;
+/// PJRT-backed numeric runtime for the stage-3 hot spot.
 pub mod runtime;
+/// Shared test fixtures and invariant checkers (not part of the API).
 pub mod testing;
+/// Track and observation model plus the CSV/binary codecs.
 pub mod tracks;
+/// Small utilities: deterministic RNG, stats, human formatting.
 pub mod util;
 
 /// Convenience re-exports for examples and downstream users.

@@ -1,0 +1,583 @@
+//! The repo's custom static-analysis pass (`emproc xtask lint`).
+//!
+//! Clippy and rustc enforce language-level hygiene; this pass enforces
+//! *project* invariants they cannot see:
+//!
+//! 1. **No panics in library code** — `.unwrap()`, `.expect(`,
+//!    `panic!(`, `unreachable!(`, `todo!(`, `unimplemented!(` are
+//!    forbidden in `rust/src` outside `#[cfg(test)]` blocks and the
+//!    [`crate::testing`] helpers. A crash-tolerant scheduler whose
+//!    library panics is lying about its failure model.
+//! 2. **Every `pub` item is documented** — a `///` (or `#[doc]`) must
+//!    immediately precede every `pub` item and `pub` field. (Compile-time
+//!    `missing_docs` also warns; the lint makes it a CI failure without
+//!    needing a compiler.)
+//! 3. **Every CLI flag is in the README** — any flag name the code reads
+//!    through [`crate::cli::ArgParser`] must appear as `--flag` in
+//!    `README.md`, so the README can never silently fall behind the CLI.
+//! 4. **Every corruption path is tested** — each
+//!    [`crate::archive::ArchiveError`] variant and each journal-corruption
+//!    message in [`crate::recovery`] must be referenced by at least one
+//!    test (integration tests or `#[cfg(test)]` blocks).
+//!
+//! The scanner is line-based over comment- and string-stripped source
+//! (so tokens inside strings or comments never count), with
+//! `#[cfg(test)]` regions excluded by brace tracking. [`run_lint`]
+//! returns the finding list; the CLI exits non-zero when it is
+//! non-empty.
+
+use anyhow::{ensure, Context, Result};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Panic-family tokens forbidden in library code (rule 1). Matched
+/// against string/comment-stripped source, so mentions like this one
+/// don't trip the lint.
+const FORBIDDEN: [&str; 6] =
+    [".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+
+/// One scanned source file: original and stripped lines, plus which
+/// lines sit inside `#[cfg(test)]` regions.
+struct SourceFile {
+    path: PathBuf,
+    raw: Vec<String>,
+    stripped: Vec<String>,
+    in_test: Vec<bool>,
+}
+
+/// Replace comments and string/char-literal contents with spaces,
+/// preserving line structure so findings keep their line numbers.
+fn strip_source(text: &str) -> String {
+    #[derive(PartialEq)]
+    enum Mode {
+        Code,
+        LineComment,
+        Block(u32),
+        Str,
+        RawStr(usize),
+        Char,
+    }
+    let chars: Vec<char> = text.chars().collect();
+    let mut out = String::with_capacity(text.len());
+    let mut mode = Mode::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        let next = chars.get(i + 1).copied();
+        match mode {
+            Mode::Code => match c {
+                '/' if next == Some('/') => {
+                    mode = Mode::LineComment;
+                    out.push(' ');
+                }
+                '/' if next == Some('*') => {
+                    mode = Mode::Block(1);
+                    out.push(' ');
+                }
+                '"' => {
+                    mode = Mode::Str;
+                    out.push('"');
+                }
+                'r' if next == Some('"') || (next == Some('#') && !prev_is_ident(&chars, i)) => {
+                    // r"..." / r#"..."# raw string: count the hashes.
+                    if !prev_is_ident(&chars, i) {
+                        let mut hashes = 0;
+                        let mut j = i + 1;
+                        while chars.get(j) == Some(&'#') {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        if chars.get(j) == Some(&'"') {
+                            mode = Mode::RawStr(hashes);
+                            for _ in i..=j {
+                                out.push(' ');
+                            }
+                            i = j + 1;
+                            continue;
+                        }
+                    }
+                    out.push(c);
+                }
+                '\'' => {
+                    // Char literal vs lifetime: a literal closes within a
+                    // few chars (or starts with a backslash escape).
+                    let is_char = next == Some('\\')
+                        || (chars.get(i + 2) == Some(&'\''))
+                        || (next == Some('\'') /* '' is invalid but terminate */);
+                    if is_char {
+                        mode = Mode::Char;
+                    }
+                    out.push('\'');
+                }
+                _ => out.push(c),
+            },
+            Mode::LineComment => {
+                if c == '\n' {
+                    mode = Mode::Code;
+                    out.push('\n');
+                } else {
+                    out.push(' ');
+                }
+            }
+            Mode::Block(depth) => {
+                if c == '*' && next == Some('/') {
+                    mode = if depth == 1 { Mode::Code } else { Mode::Block(depth - 1) };
+                    out.push_str("  ");
+                    i += 2;
+                    continue;
+                } else if c == '/' && next == Some('*') {
+                    mode = Mode::Block(depth + 1);
+                    out.push_str("  ");
+                    i += 2;
+                    continue;
+                } else if c == '\n' {
+                    out.push('\n');
+                } else {
+                    out.push(' ');
+                }
+            }
+            Mode::Str => match c {
+                '\\' => {
+                    // Preserve an escaped newline (line continuation) so
+                    // raw and stripped line counts stay aligned.
+                    out.push(' ');
+                    out.push(if next == Some('\n') { '\n' } else { ' ' });
+                    i += 2;
+                    continue;
+                }
+                '"' => {
+                    mode = Mode::Code;
+                    out.push('"');
+                }
+                '\n' => out.push('\n'),
+                _ => out.push(' '),
+            },
+            Mode::RawStr(hashes) => {
+                if c == '"' && (0..hashes).all(|k| chars.get(i + 1 + k) == Some(&'#')) {
+                    mode = Mode::Code;
+                    for _ in 0..=hashes {
+                        out.push(' ');
+                    }
+                    i += 1 + hashes;
+                    continue;
+                } else if c == '\n' {
+                    out.push('\n');
+                } else {
+                    out.push(' ');
+                }
+            }
+            Mode::Char => match c {
+                '\\' => {
+                    out.push(' ');
+                    out.push(if next == Some('\n') { '\n' } else { ' ' });
+                    i += 2;
+                    continue;
+                }
+                '\'' => {
+                    mode = Mode::Code;
+                    out.push('\'');
+                }
+                _ => out.push(' '),
+            },
+        }
+        i += 1;
+    }
+    out
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+}
+
+/// Mark every line inside a `#[cfg(test)] { ... }` region (the attribute
+/// line itself included) by brace tracking over the stripped lines.
+fn test_regions(stripped: &[String]) -> Vec<bool> {
+    let mut in_test = vec![false; stripped.len()];
+    let mut armed = false;
+    let mut depth: i64 = 0;
+    let mut active = false;
+    for (n, line) in stripped.iter().enumerate() {
+        let t = line.trim();
+        let arming_line = !active && t.starts_with("#[cfg(") && t.contains("test");
+        if arming_line {
+            armed = true;
+        }
+        if armed || active {
+            in_test[n] = true;
+        }
+        for c in line.chars() {
+            match c {
+                '{' => {
+                    if armed {
+                        armed = false;
+                        active = true;
+                        depth = 0;
+                    }
+                    if active {
+                        depth += 1;
+                    }
+                }
+                '}' => {
+                    if active {
+                        depth -= 1;
+                        if depth == 0 {
+                            active = false;
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        // A braceless cfg(test) target — a struct field or a one-line
+        // statement — ends at `,`/`;`; don't let it swallow the next
+        // unrelated block.
+        if armed && !arming_line && (t.ends_with(',') || t.ends_with(';')) {
+            armed = false;
+        }
+    }
+    in_test
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted for determinism.
+fn rust_files(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        let entries =
+            fs::read_dir(&d).with_context(|| format!("reading directory {}", d.display()))?;
+        for entry in entries {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn load(path: &Path) -> Result<SourceFile> {
+    let text = fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+    let stripped_text = strip_source(&text);
+    let raw: Vec<String> = text.lines().map(str::to_string).collect();
+    let stripped: Vec<String> = stripped_text.lines().map(str::to_string).collect();
+    let in_test = test_regions(&stripped);
+    Ok(SourceFile { path: path.to_path_buf(), raw, stripped, in_test })
+}
+
+/// Rule 1: forbidden panic tokens in library code.
+fn lint_panics(file: &SourceFile, findings: &mut Vec<String>) {
+    if file.path.components().any(|c| c.as_os_str() == "testing") {
+        return;
+    }
+    for (n, line) in file.stripped.iter().enumerate() {
+        if *file.in_test.get(n).unwrap_or(&false) {
+            continue;
+        }
+        for tok in FORBIDDEN {
+            if line.contains(tok) {
+                findings.push(format!(
+                    "{}:{}: `{}` in library code (return a typed error instead)",
+                    file.path.display(),
+                    n + 1,
+                    tok.trim_end_matches('(')
+                ));
+            }
+        }
+    }
+}
+
+/// Rule 2: every fully-`pub` item or field carries a doc comment.
+fn lint_pub_docs(file: &SourceFile, findings: &mut Vec<String>) {
+    if file.path.components().any(|c| c.as_os_str() == "testing") {
+        return;
+    }
+    const ITEM_KINDS: [&str; 10] =
+        ["fn", "struct", "enum", "trait", "type", "const", "static", "mod", "unsafe", "async"];
+    for (n, line) in file.stripped.iter().enumerate() {
+        if *file.in_test.get(n).unwrap_or(&false) {
+            continue;
+        }
+        let t = line.trim_start();
+        let Some(rest) = t.strip_prefix("pub ") else { continue };
+        let head = rest.split_whitespace().next().unwrap_or("");
+        let is_item = ITEM_KINDS.contains(&head);
+        // A `pub name: Type` struct field (the only other documented form).
+        let is_field = !is_item
+            && rest.contains(':')
+            && head.ends_with(':')
+            && head
+                .trim_end_matches(':')
+                .chars()
+                .all(|c| c.is_alphanumeric() || c == '_');
+        if !is_item && !is_field {
+            continue;
+        }
+        // Walk upwards over attributes to the nearest real line.
+        let mut m = n;
+        let mut documented = false;
+        while m > 0 {
+            m -= 1;
+            let prev = file.raw[m].trim_start();
+            if prev.starts_with("#[") || prev.starts_with("#!") {
+                if prev.starts_with("#[doc") {
+                    documented = true;
+                    break;
+                }
+                continue;
+            }
+            documented = prev.starts_with("///") || prev.starts_with("//!");
+            break;
+        }
+        if !documented {
+            findings.push(format!(
+                "{}:{}: undocumented pub {}",
+                file.path.display(),
+                n + 1,
+                if is_item { head } else { "field" }
+            ));
+        }
+    }
+}
+
+/// Pull every `"literal"` argument of `needle("` occurrences in `line`.
+fn quoted_args<'a>(line: &'a str, needle: &str, out: &mut Vec<&'a str>) {
+    let mut rest = line;
+    while let Some(pos) = rest.find(needle) {
+        rest = &rest[pos + needle.len()..];
+        if let Some(end) = rest.find('"') {
+            out.push(&rest[..end]);
+            rest = &rest[end..];
+        }
+    }
+}
+
+/// Rule 3: every flag name read via `ArgParser` appears as `--flag` in
+/// the README.
+fn lint_readme_flags(files: &[SourceFile], readme: &str, findings: &mut Vec<String>) {
+    const ACCESSORS: [&str; 5] = [".get(\"", ".get_or(\"", ".get_num(\"", ".required(\"", ".has(\""];
+    for file in files {
+        if !file.raw.iter().any(|l| l.contains("ArgParser")) {
+            continue;
+        }
+        if file.path.components().any(|c| c.as_os_str() == "tests") {
+            continue;
+        }
+        for (n, line) in file.raw.iter().enumerate() {
+            if *file.in_test.get(n).unwrap_or(&false) {
+                continue;
+            }
+            let mut flags = Vec::new();
+            for needle in ACCESSORS {
+                quoted_args(line, needle, &mut flags);
+            }
+            for flag in flags {
+                let ok = !flag.is_empty()
+                    && flag.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-');
+                if ok && !readme.contains(&format!("--{flag}")) {
+                    findings.push(format!(
+                        "{}:{}: CLI flag --{flag} is not mentioned in README.md",
+                        file.path.display(),
+                        n + 1
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// Rule 4: every `ArchiveError` variant and journal-corruption message
+/// is referenced by at least one test.
+fn lint_error_coverage(files: &[SourceFile], findings: &mut Vec<String>) {
+    // Collect the names to cover.
+    let mut variants: Vec<String> = Vec::new();
+    let mut phrases: Vec<String> = Vec::new();
+    for file in files {
+        if file.path.ends_with("archive/error.rs") {
+            let mut in_enum = false;
+            let mut depth = 0i64;
+            for line in &file.stripped {
+                if line.contains("pub enum ArchiveError") {
+                    in_enum = true;
+                }
+                if in_enum {
+                    depth += line.matches('{').count() as i64;
+                    depth -= line.matches('}').count() as i64;
+                    let t = line.trim();
+                    let name: String =
+                        t.chars().take_while(|c| c.is_alphanumeric()).collect();
+                    if !name.is_empty()
+                        && name.chars().next().is_some_and(char::is_uppercase)
+                        && (t[name.len()..].starts_with(' ')
+                            || t[name.len()..].starts_with('{')
+                            || t[name.len()..].starts_with('(')
+                            || t[name.len()..].starts_with(','))
+                        && !t.starts_with("pub")
+                    {
+                        variants.push(name);
+                    }
+                    if depth <= 0 && line.contains('}') {
+                        in_enum = false;
+                    }
+                }
+            }
+        }
+        if file.path.ends_with("recovery/mod.rs") {
+            for line in &file.raw {
+                let Some(pos) = line.find("bail!(\"") else { continue };
+                let lit = &line[pos + 7..];
+                // The stable prefix of the message: up to the first
+                // interpolation or closing quote.
+                let end = lit.find(['{', '"']).unwrap_or(lit.len());
+                let prefix = lit[..end].trim();
+                if prefix.len() >= 10 && prefix.contains("journal") {
+                    phrases.push(prefix.to_string());
+                }
+            }
+        }
+    }
+    // Build the test corpus: integration tests + cfg(test) regions.
+    let mut corpus = String::new();
+    for file in files {
+        let is_test_file = file.path.components().any(|c| c.as_os_str() == "tests");
+        for (n, line) in file.raw.iter().enumerate() {
+            if is_test_file || *file.in_test.get(n).unwrap_or(&false) {
+                corpus.push_str(line);
+                corpus.push('\n');
+            }
+        }
+    }
+    for v in variants {
+        if !corpus.contains(&v) {
+            findings.push(format!("ArchiveError::{v} is referenced by no test"));
+        }
+    }
+    phrases.sort();
+    phrases.dedup();
+    for p in phrases {
+        if !corpus.contains(&p) {
+            findings.push(format!("journal corruption message {p:?} is asserted by no test"));
+        }
+    }
+}
+
+/// Run every lint rule over the repository at `root` (the directory
+/// holding `README.md` and `rust/`; `root` may also point at `rust/`
+/// itself). Returns the findings — empty means the tree is clean.
+pub fn run_lint(root: &Path) -> Result<Vec<String>> {
+    let root = if root.join("rust").is_dir() {
+        root.to_path_buf()
+    } else if root.join("src").is_dir() && root.join("..").join("README.md").exists() {
+        root.join("..")
+    } else {
+        root.to_path_buf()
+    };
+    let src = root.join("rust").join("src");
+    ensure!(src.is_dir(), "no rust/src under {} — pass --root", root.display());
+    let readme = fs::read_to_string(root.join("README.md")).unwrap_or_default();
+
+    let mut files = Vec::new();
+    for path in rust_files(&src)? {
+        files.push(load(&path)?);
+    }
+    // Integration tests participate in rule 4 only.
+    let tests_dir = root.join("rust").join("tests");
+    if tests_dir.is_dir() {
+        for path in rust_files(&tests_dir)? {
+            files.push(load(&path)?);
+        }
+    }
+
+    let mut findings = Vec::new();
+    for file in &files {
+        let under_src = file.path.starts_with(&src);
+        if under_src {
+            lint_panics(file, &mut findings);
+            lint_pub_docs(file, &mut findings);
+        }
+    }
+    lint_readme_flags(&files, &readme, &mut findings);
+    lint_error_coverage(&files, &mut findings);
+    findings.sort();
+    Ok(findings)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_strings_and_comments() {
+        let s = strip_source("let x = \"panic!(\"; // .unwrap()\nlet y = 1; /* todo!( */");
+        assert!(!s.contains("panic!("));
+        assert!(!s.contains(".unwrap()"));
+        assert!(!s.contains("todo!("));
+        assert!(s.contains("let y = 1;"));
+    }
+
+    #[test]
+    fn strips_raw_strings_and_chars() {
+        let s = strip_source("let a = r#\"x .expect( y\"#; let b = '\"'; let c = \"q\";");
+        assert!(!s.contains(".expect("));
+        // The char literal's quote must not open a string.
+        assert!(s.contains("let c ="));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let s = strip_source("fn f<'a>(x: &'a str) -> &'a str { x } // .unwrap()");
+        assert!(s.contains("fn f<'a>(x: &'a str)"));
+        assert!(!s.contains(".unwrap()"));
+    }
+
+    #[test]
+    fn cfg_test_regions_are_skipped() {
+        let text = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() { x.unwrap() }\n}\nfn c() {}\n";
+        let stripped: Vec<String> = strip_source(text).lines().map(str::to_string).collect();
+        let regions = test_regions(&stripped);
+        assert_eq!(regions, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn finds_undocumented_pub_and_panics() {
+        let dir = std::env::temp_dir().join(format!("emproc_lint_{}", std::process::id()));
+        let src = dir.join("rust").join("src");
+        std::fs::create_dir_all(&src).unwrap();
+        std::fs::write(
+            src.join("lib.rs"),
+            "/// Doc.\npub fn ok() {}\npub fn bad() { None::<u8>.unwrap(); }\n",
+        )
+        .unwrap();
+        std::fs::write(dir.join("README.md"), "nothing").unwrap();
+        let findings = run_lint(&dir).unwrap();
+        assert!(findings.iter().any(|f| f.contains("undocumented pub fn")), "{findings:?}");
+        assert!(findings.iter().any(|f| f.contains("`.unwrap`")), "{findings:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn flags_must_be_in_readme() {
+        let dir = std::env::temp_dir().join(format!("emproc_lintf_{}", std::process::id()));
+        let src = dir.join("rust").join("src");
+        std::fs::create_dir_all(&src).unwrap();
+        std::fs::write(
+            src.join("lib.rs"),
+            "//! x\nuse ArgParser;\n/// D.\npub fn f(a: &ArgParser) { a.get(\"seed\"); a.has(\"quick\"); }\n",
+        )
+        .unwrap();
+        std::fs::write(dir.join("README.md"), "uses --seed only").unwrap();
+        let findings = run_lint(&dir).unwrap();
+        assert!(findings.iter().any(|f| f.contains("--quick")), "{findings:?}");
+        assert!(!findings.iter().any(|f| f.contains("--seed")), "{findings:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn repo_tree_is_clean() {
+        // The real tree must stay lint-clean: this is the in-repo wall.
+        let findings = run_lint(Path::new(env!("CARGO_MANIFEST_DIR"))).unwrap();
+        assert!(findings.is_empty(), "lint findings:\n{}", findings.join("\n"));
+    }
+}

@@ -10,7 +10,7 @@ impl Ecdf {
     /// Build from samples (NaNs rejected by debug assert).
     pub fn new(mut samples: Vec<f64>) -> Self {
         debug_assert!(samples.iter().all(|x| !x.is_nan()));
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(|a, b| a.total_cmp(b));
         Ecdf { sorted: samples }
     }
 

@@ -3,8 +3,11 @@
 /// Histogram with uniform bin width starting at 0.
 #[derive(Debug, Clone)]
 pub struct Histogram {
+    /// Uniform bin width (first bin starts at 0).
     pub bin_width: f64,
+    /// Per-bin sample counts.
     pub counts: Vec<u64>,
+    /// Total samples across all bins.
     pub total: u64,
 }
 

@@ -3,8 +3,11 @@
 //! Everything the paper's tables and figures report is produced through
 //! this module, so the bench harnesses print directly comparable rows.
 
+/// Empirical CDFs (Fig 9).
 pub mod ecdf;
+/// Fixed-width histograms (Figs 3, 5-6).
 pub mod hist;
+/// Worker-time reports and ASCII table rendering.
 pub mod report;
 
 pub use ecdf::Ecdf;

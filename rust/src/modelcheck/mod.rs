@@ -1,0 +1,840 @@
+//! Exhaustive protocol model checker for the §II.D scheduling core.
+//!
+//! [`run_check`] drives the *real* [`crate::sched::Manager`] — not a
+//! simplified model of it — through **every interleaving** of manager
+//! events for one small configuration (workers × tasks × allowed worker
+//! deaths), for each scheduling policy the repo ships: block, cyclic and
+//! LPT batch queues, work stealing, self-scheduling, and the adaptive
+//! packing variant. The explorer is a depth-first search over protocol
+//! states: at each state it enumerates every enabled event (grant a
+//! message, take/steal a task, report a completion — three AIMD flavors
+//! under the adaptive policy — or kill a busy worker), forks a clone of
+//! the manager per event, and recurses. States are canonicalised with
+//! [`crate::sched::ManagerSnapshot`] (plus the dead-worker set) and
+//! memoized, so the walk is over the state *DAG*; the number of distinct
+//! interleavings (maximal event sequences) is recovered exactly by a
+//! path-counting dynamic program over the memo table.
+//!
+//! Invariants asserted at every state / edge / terminal:
+//!
+//! * **Exactly once** — no task is ever granted while complete or in
+//!   flight, and at a terminal every task has completed exactly once
+//!   (requeue-capable policies) or is accounted for in the fail-fast
+//!   partition (batch policies after a death: completed ∨ abandoned in a
+//!   dead worker's flight ∨ still queued — never lost, never duplicated).
+//! * **No grant lost on death** — [`crate::sched::Manager::requeue`]
+//!   returns precisely the dead worker's in-flight set, and those tasks
+//!   are re-granted before new cursor work.
+//! * **Steals never duplicate** — every [`crate::sched::Manager::take_batch`]
+//!   result is checked against the §II.D source priority (requeued →
+//!   own-queue front → longest victim's tail) computed from the
+//!   pre-state, and a *probe* at every state asserts that a busy worker
+//!   is refused further work (this is what catches the seeded
+//!   flight-check bug in the regression test).
+//! * **Counter consistency** — the [`crate::selfsched::SchedTrace`]
+//!   counters (messages, steals, per-worker task counts, outstanding)
+//!   must equal the checker's shadow accounting at every state. (The
+//!   trace's *timing* fields are not asserted here: the checker runs on
+//!   synthetic clamped timestamps, so wall-clock inequalities like
+//!   `busy ≤ span` are meaningless in this harness.)
+//! * **Journal idempotence** — along the DFS spanning tree, every
+//!   completion/retry edge appends the corresponding
+//!   [`crate::recovery::JournalEvent`] and immediately proves
+//!   `append → replay` is lossless (the replayed events reconstruct the
+//!   checker's exact completion state) and that a torn trailing line is
+//!   tolerated without changing the replayed prefix — i.e. resuming from
+//!   any journal prefix lands in a state the checker has visited.
+//!
+//! The CLI front-end is `emproc check` (see [`crate::cli`]), which runs a
+//! matrix of configurations and fails loudly on the first violation.
+
+use crate::dist::{distribute_costed, Distribution};
+use crate::recovery::{replay, JournalEvent, JournalPlan};
+use crate::sched::Manager;
+use crate::selfsched::SelfSchedConfig;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::HashMap;
+
+/// Which scheduling policy a check run drives (the six policies of
+/// ISSUE 8 / §IV: three static batch distributions, work stealing, and
+/// the two self-scheduling variants).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CheckPolicy {
+    /// Batch queues from [`Distribution::Block`], no stealing, fail-fast
+    /// on death.
+    Block,
+    /// Batch queues from [`Distribution::Cyclic`], no stealing.
+    Cyclic,
+    /// Batch queues from [`Distribution::Lpt`] packed with synthetic
+    /// ascending costs, no stealing.
+    Lpt,
+    /// Block queues with work stealing and requeue-on-death
+    /// ([`Manager::take_batch`]).
+    Steal,
+    /// Manager-granted self-scheduling with a static packing factor
+    /// ([`Manager::grant`]).
+    SelfSched,
+    /// Self-scheduling with the AIMD-adapted packing factor; completions
+    /// branch over grow / hold / shrink observations.
+    Adaptive,
+}
+
+/// All six policies, in display order.
+pub const ALL_POLICIES: [CheckPolicy; 6] = [
+    CheckPolicy::Block,
+    CheckPolicy::Cyclic,
+    CheckPolicy::Lpt,
+    CheckPolicy::Steal,
+    CheckPolicy::SelfSched,
+    CheckPolicy::Adaptive,
+];
+
+impl CheckPolicy {
+    /// Stable label, also accepted by [`CheckPolicy::parse`].
+    pub fn label(self) -> &'static str {
+        match self {
+            CheckPolicy::Block => "block",
+            CheckPolicy::Cyclic => "cyclic",
+            CheckPolicy::Lpt => "lpt",
+            CheckPolicy::Steal => "steal",
+            CheckPolicy::SelfSched => "selfsched",
+            CheckPolicy::Adaptive => "adaptive",
+        }
+    }
+
+    /// Parse a policy label (the inverse of [`CheckPolicy::label`]).
+    pub fn parse(s: &str) -> Result<CheckPolicy> {
+        ALL_POLICIES
+            .into_iter()
+            .find(|p| p.label() == s)
+            .with_context(|| format!("unknown policy {s:?} (want block|cyclic|lpt|steal|selfsched|adaptive)"))
+    }
+
+    /// True for the policies that recover from worker death by requeue
+    /// (steal + self-scheduling); the batch policies fail fast instead.
+    pub fn requeues_on_death(self) -> bool {
+        matches!(self, CheckPolicy::Steal | CheckPolicy::SelfSched | CheckPolicy::Adaptive)
+    }
+}
+
+/// One model-checking configuration: a policy plus the small closed world
+/// the explorer walks exhaustively. Build with [`CheckConfig::new`].
+#[derive(Debug, Clone)]
+pub struct CheckConfig {
+    /// Scheduling policy under test.
+    pub policy: CheckPolicy,
+    /// Worker count (keep ≤ 4; the state space is exponential).
+    pub nworkers: usize,
+    /// Task count (keep ≤ 8).
+    pub ntasks: usize,
+    /// Maximum worker deaths injected along any single path.
+    pub max_deaths: usize,
+    /// Packing factor for the self-scheduling policies (the adaptive
+    /// policy starts from it).
+    pub tasks_per_message: usize,
+    /// Abort the run (as a violation) if the walk exceeds this many
+    /// distinct states — a guard against accidental state-space blowup.
+    pub max_states: usize,
+    /// Test-only: arm the seeded [`Manager::take_batch`] flight-check
+    /// bug so the regression test can prove the checker catches it.
+    #[cfg(test)]
+    pub(crate) inject_steal_bug: bool,
+}
+
+impl CheckConfig {
+    /// New configuration (see field docs for the knobs).
+    pub fn new(
+        policy: CheckPolicy,
+        nworkers: usize,
+        ntasks: usize,
+        max_deaths: usize,
+        tasks_per_message: usize,
+        max_states: usize,
+    ) -> Self {
+        CheckConfig {
+            policy,
+            nworkers,
+            ntasks,
+            max_deaths,
+            tasks_per_message,
+            max_states,
+            #[cfg(test)]
+            inject_steal_bug: false,
+        }
+    }
+
+    /// One-line description used to prefix violation reports.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} w={} t={} d={} k={}",
+            self.policy.label(),
+            self.nworkers,
+            self.ntasks,
+            self.max_deaths,
+            self.tasks_per_message
+        )
+    }
+}
+
+/// What one exhaustive walk explored; returned by [`run_check`] when no
+/// invariant was violated.
+#[derive(Debug, Clone)]
+pub struct CheckReport {
+    /// The configuration that was walked.
+    pub config: String,
+    /// Distinct canonical states visited.
+    pub states: usize,
+    /// Distinct maximal event interleavings (path count over the
+    /// memoized DAG; saturates at `u128::MAX`).
+    pub interleavings: u128,
+    /// Terminal (no-enabled-event) states reached.
+    pub terminals: usize,
+    /// Journal append→replay round-trips proven along the DFS tree.
+    pub journal_checks: usize,
+}
+
+/// An event the explorer can fire from a state. `Complete` carries the
+/// synthetic busy-time flavor: under the adaptive policy one completion
+/// branches into grow / hold / shrink observations so every AIMD
+/// trajectory is walked.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Ev {
+    /// Self-scheduling grant to an idle worker.
+    Grant(usize),
+    /// Steal-mode take by an idle worker (own queue first, then steal).
+    Take(usize),
+    /// Worker reports its in-flight message done; the flavor picks the
+    /// busy time handed to [`Manager::complete_with_busy`].
+    Complete(usize, Flavor),
+    /// Worker dies with work in flight.
+    Die(usize),
+}
+
+/// Synthetic completion observation (grant at t=0, completion at t=1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Flavor {
+    /// Non-adaptive policies: busy time is irrelevant, use 0.5.
+    Plain,
+    /// busy=0.0 → overhead 100% → AIMD grows the packing factor.
+    Grow,
+    /// busy=0.95 → overhead in the hysteresis band → factor unchanged.
+    Hold,
+    /// busy=1.0 → zero overhead → AIMD halves the factor.
+    Shrink,
+}
+
+impl Flavor {
+    fn busy_s(self) -> f64 {
+        match self {
+            Flavor::Plain => 0.5,
+            Flavor::Grow => 0.0,
+            Flavor::Hold => 0.95,
+            Flavor::Shrink => 1.0,
+        }
+    }
+}
+
+/// The checker's independent shadow of protocol state: everything needed
+/// to call out a divergence the instant the real manager misbehaves.
+#[derive(Debug, Clone)]
+struct Shadow {
+    /// Completion count per task (a count > 1 is an instant violation).
+    done: Vec<u8>,
+    /// Tasks each worker currently has in flight (mirror of the grants
+    /// the checker authorized).
+    inflight: Vec<Vec<usize>>,
+    /// Dead workers (never act again).
+    dead: Vec<bool>,
+    /// Deaths injected so far on this path.
+    deaths: usize,
+    /// Tasks abandoned in dead workers' flights (batch fail-fast only).
+    lost: Vec<usize>,
+    /// Grant messages the checker authorized (must equal the trace's
+    /// `messages_sent`).
+    grants: usize,
+    /// Steals/requeued pickups the checker authorized (must equal the
+    /// trace's `steals`).
+    steals: usize,
+}
+
+impl Shadow {
+    fn new(nworkers: usize, ntasks: usize) -> Self {
+        Shadow {
+            done: vec![0; ntasks],
+            inflight: vec![Vec::new(); nworkers],
+            dead: vec![false; nworkers],
+            deaths: 0,
+            lost: Vec::new(),
+            grants: 0,
+            steals: 0,
+        }
+    }
+
+    fn in_flight_anywhere(&self, t: usize) -> Option<usize> {
+        self.inflight.iter().position(|f| f.contains(&t))
+    }
+}
+
+/// Memo key: the manager's canonical snapshot plus the checker-side
+/// dead set (which the manager does not track — a dead worker is just a
+/// worker the backend never drives again).
+type StateKey = (crate::sched::ManagerSnapshot, Vec<bool>);
+
+struct Explorer<'a> {
+    cfg: &'a CheckConfig,
+    plan: JournalPlan,
+    /// Path counts per canonical state (None marks "on stack" — never
+    /// hit in practice since every event strictly progresses, but kept
+    /// as a cycle guard).
+    memo: HashMap<StateKey, u128>,
+    states: usize,
+    terminals: usize,
+    journal_checks: usize,
+}
+
+impl Explorer<'_> {
+    fn violation(&self, what: &str) -> anyhow::Error {
+        anyhow::anyhow!("modelcheck violation [{}]: {what}", self.cfg.describe())
+    }
+
+    /// Every event enabled in `mgr`/`sh`, in deterministic order.
+    fn enabled(&self, mgr: &Manager<'_>, sh: &Shadow) -> Vec<Ev> {
+        let cfg = self.cfg;
+        let snap = mgr.snapshot();
+        let mut evs = Vec::new();
+        let can_die = sh.deaths < cfg.max_deaths && sh.deaths + 1 < cfg.nworkers;
+        for w in 0..cfg.nworkers {
+            if sh.dead[w] {
+                continue;
+            }
+            let busy = !sh.inflight[w].is_empty();
+            if busy {
+                match cfg.policy {
+                    CheckPolicy::Adaptive => {
+                        evs.push(Ev::Complete(w, Flavor::Grow));
+                        evs.push(Ev::Complete(w, Flavor::Hold));
+                        evs.push(Ev::Complete(w, Flavor::Shrink));
+                    }
+                    _ => evs.push(Ev::Complete(w, Flavor::Plain)),
+                }
+                if can_die {
+                    evs.push(Ev::Die(w));
+                }
+                continue;
+            }
+            if mgr.aborted() {
+                continue;
+            }
+            match cfg.policy {
+                CheckPolicy::Block | CheckPolicy::Cyclic | CheckPolicy::Lpt => {
+                    // Pure batch: a worker only ever drains its own
+                    // pre-assigned queue.
+                    if !snap.queues[w].is_empty() {
+                        evs.push(Ev::Take(w));
+                    }
+                }
+                CheckPolicy::Steal => {
+                    if mgr.remaining() > 0 {
+                        evs.push(Ev::Take(w));
+                    }
+                }
+                CheckPolicy::SelfSched | CheckPolicy::Adaptive => {
+                    if mgr.remaining() > 0 {
+                        evs.push(Ev::Grant(w));
+                    }
+                }
+            }
+        }
+        evs
+    }
+
+    /// State-level checks: trace counters vs the shadow, and the
+    /// busy-worker probe (a worker with work in flight must be refused
+    /// more — the invariant the seeded flight-check bug breaks).
+    fn check_state(&self, mgr: &Manager<'_>, sh: &Shadow) -> Result<()> {
+        let snap = mgr.snapshot();
+        ensure!(
+            snap.messages == sh.grants,
+            self.violation(&format!(
+                "trace counted {} message(s) but the checker authorized {}",
+                snap.messages, sh.grants
+            ))
+        );
+        ensure!(
+            snap.steals == sh.steals,
+            self.violation(&format!(
+                "trace counted {} steal(s) but the checker authorized {}",
+                snap.steals, sh.steals
+            ))
+        );
+        let done_sum: usize = sh.done.iter().map(|&c| usize::from(c)).sum();
+        let trace_sum: usize = snap.tasks_done.iter().sum();
+        ensure!(
+            trace_sum == done_sum,
+            self.violation(&format!(
+                "trace task counts sum to {trace_sum} but {done_sum} completion(s) happened"
+            ))
+        );
+        let busy_workers = sh.inflight.iter().filter(|f| !f.is_empty()).count();
+        ensure!(
+            snap.outstanding == busy_workers,
+            self.violation(&format!(
+                "manager reports {} outstanding message(s) but {} worker(s) hold work",
+                snap.outstanding, busy_workers
+            ))
+        );
+        for (w, flight) in sh.inflight.iter().enumerate() {
+            ensure!(
+                snap.flights[w] == *flight,
+                self.violation(&format!(
+                    "worker {w} flight diverged: manager says {:?}, checker authorized {:?}",
+                    snap.flights[w], flight
+                ))
+            );
+            if flight.is_empty() || sh.dead[w] {
+                continue;
+            }
+            // The probe: fork the manager and ask for more work on a
+            // busy worker's behalf. The protocol must refuse.
+            let mut probe = mgr.clone();
+            let handed = if snap.steal_mode {
+                probe.take_batch(w, 1.0).map(|(t, _)| vec![t])
+            } else {
+                probe.grant(w, 1.0)
+            };
+            if let Some(extra) = handed {
+                bail!(self.violation(&format!(
+                    "busy worker {w} (holding {flight:?}) was handed more work {extra:?} — \
+                     the flight-set check was bypassed"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Prove the journal built along this DFS path replays losslessly:
+    /// the replayed events must reconstruct the shadow's exact completion
+    /// counts, and a torn trailing line must not change the replay.
+    fn check_journal(&mut self, journal: &[JournalEvent], sh: &Shadow) -> Result<()> {
+        let mut text = format!(
+            "plan {} {} {:016x} ;\n",
+            self.plan.stage, self.plan.ntasks, self.plan.name_hash
+        );
+        for ev in journal {
+            text.push_str(&ev.render());
+            text.push('\n');
+        }
+        let (plan, events) =
+            replay(&text).with_context(|| self.violation("journal replay rejected its own append"))?;
+        ensure!(
+            plan == self.plan,
+            self.violation("journal replay returned a different plan than was written")
+        );
+        ensure!(
+            events == journal,
+            self.violation("journal replay returned different events than were appended")
+        );
+        let mut replayed = vec![0u8; self.cfg.ntasks];
+        for ev in &events {
+            if let JournalEvent::Ok { tasks, .. } = ev {
+                for &t in tasks {
+                    replayed[t] += 1;
+                }
+            }
+        }
+        ensure!(
+            replayed == sh.done,
+            self.violation(&format!(
+                "journal replay reconstructs completions {replayed:?} but live state is {:?}",
+                sh.done
+            ))
+        );
+        // Torn tail: a crash mid-append leaves a final line without its
+        // sentinel; replay must drop exactly that line and nothing else.
+        let torn = format!("{text}ok 0 0 17 t 0");
+        let (_, torn_events) = replay(&torn)
+            .with_context(|| self.violation("journal replay rejected a torn trailing line"))?;
+        ensure!(
+            torn_events == journal,
+            self.violation("a torn trailing line changed the replayed event prefix")
+        );
+        self.journal_checks += 1;
+        Ok(())
+    }
+
+    /// Apply `ev` to (`mgr`, `sh`) in place, asserting the edge-level
+    /// invariants; pushes journal events for completions and retries.
+    fn apply(
+        &mut self,
+        ev: Ev,
+        mgr: &mut Manager<'_>,
+        sh: &mut Shadow,
+        journal: &mut Vec<JournalEvent>,
+    ) -> Result<()> {
+        match ev {
+            Ev::Grant(w) => {
+                let pre = mgr.snapshot();
+                let avail = if pre.requeued.is_empty() {
+                    self.cfg.ntasks - pre.cursor
+                } else {
+                    pre.requeued.len()
+                };
+                let expect_take = mgr.current_pack(avail);
+                let msg = mgr
+                    .grant(w, 0.0)
+                    .ok_or_else(|| self.violation(&format!("idle worker {w} was refused a grant with work remaining")))?;
+                ensure!(
+                    msg.len() == expect_take,
+                    self.violation(&format!(
+                        "grant packed {} task(s) but the packing rule says {expect_take}",
+                        msg.len()
+                    ))
+                );
+                let expected: Vec<usize> = if pre.requeued.is_empty() {
+                    (pre.cursor..pre.cursor + expect_take).collect()
+                } else {
+                    pre.requeued[..expect_take].to_vec()
+                };
+                ensure!(
+                    msg == expected,
+                    self.violation(&format!(
+                        "grant handed {msg:?} but §II.D priority (requeued before cursor) says {expected:?}"
+                    ))
+                );
+                for &t in &msg {
+                    ensure!(
+                        sh.done[t] == 0,
+                        self.violation(&format!("task {t} was granted again after completing"))
+                    );
+                    if let Some(holder) = sh.in_flight_anywhere(t) {
+                        bail!(self.violation(&format!(
+                            "task {t} granted to worker {w} while already in flight on worker {holder}"
+                        )));
+                    }
+                }
+                sh.inflight[w] = msg;
+                sh.grants += 1;
+            }
+            Ev::Take(w) => {
+                let pre = mgr.snapshot();
+                let expected = if let Some(&t) = pre.requeued.first() {
+                    (t, true)
+                } else if let Some(&t) = pre.queues[w].first() {
+                    (t, false)
+                } else {
+                    let mut victim: Option<usize> = None;
+                    for (i, q) in pre.queues.iter().enumerate() {
+                        if i == w || q.is_empty() {
+                            continue;
+                        }
+                        if victim.is_none_or(|v: usize| q.len() > pre.queues[v].len()) {
+                            victim = Some(i);
+                        }
+                    }
+                    let v = victim.ok_or_else(|| {
+                        self.violation(&format!("take enabled for worker {w} with no source queue"))
+                    })?;
+                    (*pre.queues[v].last().ok_or_else(|| self.violation("victim queue empty"))?, true)
+                };
+                let got = mgr
+                    .take_batch(w, 0.0)
+                    .ok_or_else(|| self.violation(&format!("idle worker {w} was refused a take with work remaining")))?;
+                ensure!(
+                    got == expected,
+                    self.violation(&format!(
+                        "take_batch returned {got:?} but §II.D priority (requeued → own front → longest tail) says {expected:?}"
+                    ))
+                );
+                let (task, stolen) = got;
+                ensure!(
+                    sh.done[task] == 0,
+                    self.violation(&format!("task {task} was taken again after completing"))
+                );
+                if let Some(holder) = sh.in_flight_anywhere(task) {
+                    bail!(self.violation(&format!(
+                        "steal duplicated task {task}: taken by worker {w} while in flight on worker {holder}"
+                    )));
+                }
+                sh.inflight[w] = vec![task];
+                if stolen {
+                    sh.steals += 1;
+                }
+            }
+            Ev::Complete(w, flavor) => {
+                let tasks = std::mem::take(&mut sh.inflight[w]);
+                let n = mgr.complete_with_busy(w, 1.0, flavor.busy_s());
+                ensure!(
+                    n == tasks.len(),
+                    self.violation(&format!(
+                        "worker {w} completion acknowledged {n} task(s) but {} were in flight",
+                        tasks.len()
+                    ))
+                );
+                for &t in &tasks {
+                    sh.done[t] += 1;
+                    ensure!(
+                        sh.done[t] == 1,
+                        self.violation(&format!("task {t} completed {} times", sh.done[t]))
+                    );
+                }
+                journal.push(JournalEvent::Ok {
+                    attempt: 0,
+                    worker: w,
+                    busy_us: (flavor.busy_s() * 1e6) as u64,
+                    tasks,
+                    stats: Vec::new(),
+                });
+                self.check_journal(journal, sh)?;
+            }
+            Ev::Die(w) => {
+                let flight = std::mem::take(&mut sh.inflight[w]);
+                sh.dead[w] = true;
+                sh.deaths += 1;
+                if self.cfg.policy.requeues_on_death() {
+                    let requeued = mgr.requeue(w);
+                    ensure!(
+                        requeued == flight,
+                        self.violation(&format!(
+                            "death of worker {w} requeued {requeued:?} but its flight was {flight:?} — a grant was lost"
+                        ))
+                    );
+                    journal.push(JournalEvent::Retry { attempt: 1, tasks: flight });
+                    self.check_journal(journal, sh)?;
+                } else {
+                    // Batch fail-fast (§II.A semantics): the run aborts
+                    // and the dead worker's flight is abandoned, but the
+                    // terminal accounting still has to name every task.
+                    mgr.abort();
+                    sh.inflight[w] = flight.clone();
+                    sh.lost.extend(flight);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Terminal invariants: with recovery available every task completed
+    /// exactly once; after a batch fail-fast death every task is in
+    /// exactly one bucket (completed / abandoned with the dead worker /
+    /// still queued).
+    fn check_terminal(&self, mgr: &Manager<'_>, sh: &Shadow) -> Result<()> {
+        let snap = mgr.snapshot();
+        if sh.deaths == 0 || self.cfg.policy.requeues_on_death() {
+            for (t, &c) in sh.done.iter().enumerate() {
+                ensure!(
+                    c == 1,
+                    self.violation(&format!("terminal state: task {t} completed {c} time(s), want exactly 1"))
+                );
+            }
+            ensure!(
+                mgr.remaining() == 0 && mgr.outstanding() == 0,
+                self.violation("terminal state with work still queued or in flight")
+            );
+        } else {
+            let queued: Vec<usize> = snap.queues.iter().flatten().copied().collect();
+            for (t, &c) in sh.done.iter().enumerate() {
+                let buckets = usize::from(c >= 1)
+                    + usize::from(sh.lost.contains(&t))
+                    + usize::from(queued.contains(&t));
+                ensure!(
+                    c <= 1 && buckets == 1,
+                    self.violation(&format!(
+                        "fail-fast accounting broken for task {t}: done={c} lost={} queued={}",
+                        sh.lost.contains(&t),
+                        queued.contains(&t)
+                    ))
+                );
+            }
+        }
+        if matches!(self.cfg.policy, CheckPolicy::Block | CheckPolicy::Cyclic | CheckPolicy::Lpt) {
+            ensure!(
+                snap.messages == 0 && snap.steals == 0,
+                self.violation("batch run recorded allocation messages or steals")
+            );
+        }
+        Ok(())
+    }
+
+    /// DFS with memoized path counting. Returns the number of distinct
+    /// maximal interleavings reachable from this state.
+    fn dfs(
+        &mut self,
+        mgr: &Manager<'_>,
+        sh: &Shadow,
+        journal: &mut Vec<JournalEvent>,
+    ) -> Result<u128> {
+        self.check_state(mgr, sh)?;
+        let key: StateKey = (mgr.snapshot(), sh.dead.clone());
+        if let Some(&paths) = self.memo.get(&key) {
+            return Ok(paths);
+        }
+        self.states += 1;
+        ensure!(
+            self.states <= self.cfg.max_states,
+            self.violation(&format!("state space exceeded max_states={}", self.cfg.max_states))
+        );
+        let evs = self.enabled(mgr, sh);
+        let paths = if evs.is_empty() {
+            self.terminals += 1;
+            self.check_terminal(mgr, sh)?;
+            1u128
+        } else {
+            let mut total = 0u128;
+            for ev in evs {
+                let mut next_mgr = mgr.clone();
+                let mut next_sh = sh.clone();
+                let mark = journal.len();
+                self.apply(ev, &mut next_mgr, &mut next_sh, journal)?;
+                total = total.saturating_add(self.dfs(&next_mgr, &next_sh, journal)?);
+                journal.truncate(mark);
+            }
+            total
+        };
+        self.memo.insert(key, paths);
+        Ok(paths)
+    }
+}
+
+/// Exhaustively walk one configuration, asserting every protocol
+/// invariant at every reachable state; see the module docs for the
+/// invariant list. Returns the exploration statistics, or the first
+/// violation found as an error naming the configuration and the broken
+/// invariant.
+pub fn run_check(cfg: &CheckConfig) -> Result<CheckReport> {
+    ensure!(cfg.nworkers >= 1, "need at least one worker");
+    ensure!(cfg.ntasks >= 1, "need at least one task");
+    let ids: Vec<usize> = (0..cfg.ntasks).collect();
+    let names: Vec<String> = ids.iter().map(|t| format!("t{t}")).collect();
+    let plan = JournalPlan::new("check", names.iter().map(String::as_str));
+    let sched_cfg = SelfSchedConfig {
+        poll_s: 0.0,
+        msg_s: 0.0,
+        tasks_per_message: cfg.tasks_per_message,
+        adaptive: cfg.policy == CheckPolicy::Adaptive,
+    };
+    let mut mgr = Manager::new(&ids, cfg.nworkers, sched_cfg);
+    match cfg.policy {
+        CheckPolicy::Block => mgr.assign_queues(distribute_costed(&ids, cfg.nworkers, Distribution::Block, &[])),
+        CheckPolicy::Cyclic => {
+            mgr.assign_queues(distribute_costed(&ids, cfg.nworkers, Distribution::Cyclic, &[]));
+        }
+        CheckPolicy::Lpt => {
+            // Synthetic ascending costs so LPT packing is non-trivial.
+            let costs: Vec<f64> = (0..cfg.ntasks).map(|t| (t + 1) as f64).collect();
+            mgr.assign_queues(distribute_costed(&ids, cfg.nworkers, Distribution::Lpt, &costs));
+        }
+        CheckPolicy::Steal => mgr.assign_queues(distribute_costed(&ids, cfg.nworkers, Distribution::Block, &[])),
+        CheckPolicy::SelfSched | CheckPolicy::Adaptive => {}
+    }
+    #[cfg(test)]
+    if cfg.inject_steal_bug {
+        mgr.debug_skip_flight_check = true;
+    }
+    let mut explorer = Explorer {
+        cfg,
+        plan,
+        memo: HashMap::new(),
+        states: 0,
+        terminals: 0,
+        journal_checks: 0,
+    };
+    let shadow = Shadow::new(cfg.nworkers, cfg.ntasks);
+    let mut journal = Vec::new();
+    let interleavings = explorer.dfs(&mgr, &shadow, &mut journal)?;
+    Ok(CheckReport {
+        config: cfg.describe(),
+        states: explorer.states,
+        interleavings,
+        terminals: explorer.terminals,
+        journal_checks: explorer.journal_checks,
+    })
+}
+
+/// The default `emproc check` matrix: every policy × the given worker,
+/// task and death counts, with the self-scheduling policies additionally
+/// run at packing factors 1 and 2. Returns one [`CheckConfig`] per cell.
+pub fn matrix(
+    policies: &[CheckPolicy],
+    workers: &[usize],
+    tasks: &[usize],
+    deaths: &[usize],
+    max_states: usize,
+) -> Vec<CheckConfig> {
+    let mut cfgs = Vec::new();
+    for &p in policies {
+        let packs: &[usize] = match p {
+            CheckPolicy::SelfSched | CheckPolicy::Adaptive => &[1, 2],
+            _ => &[1],
+        };
+        for &w in workers {
+            for &t in tasks {
+                for &d in deaths {
+                    for &k in packs {
+                        cfgs.push(CheckConfig::new(p, w, t, d, k, max_states));
+                    }
+                }
+            }
+        }
+    }
+    cfgs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check(policy: CheckPolicy, w: usize, t: usize, d: usize, k: usize) -> CheckReport {
+        run_check(&CheckConfig::new(policy, w, t, d, k, 500_000)).expect("no violations")
+    }
+
+    #[test]
+    fn selfsched_small_clean() {
+        let r = check(CheckPolicy::SelfSched, 2, 3, 0, 1);
+        // 3 grant/complete pairs over 2 workers: a known-small space.
+        assert!(r.states > 3 && r.interleavings > 1, "got {r:?}");
+        assert!(r.journal_checks > 0);
+    }
+
+    #[test]
+    fn all_policies_clean_with_deaths() {
+        for p in ALL_POLICIES {
+            let r = check(p, 2, 4, 1, 1);
+            assert!(r.terminals >= 1, "{}: {r:?}", p.label());
+        }
+    }
+
+    #[test]
+    fn steal_exhaustive_is_clean() {
+        let r = check(CheckPolicy::Steal, 3, 5, 1, 1);
+        assert!(r.interleavings > 100, "got {r:?}");
+    }
+
+    #[test]
+    fn adaptive_branches_aimd_flavors() {
+        let r = check(CheckPolicy::Adaptive, 2, 4, 0, 2);
+        // Grow/hold/shrink branching must multiply the path count well
+        // beyond the non-adaptive equivalent.
+        let plain = check(CheckPolicy::SelfSched, 2, 4, 0, 2);
+        assert!(r.interleavings > plain.interleavings, "{r:?} vs {plain:?}");
+    }
+
+    #[test]
+    fn matrix_covers_six_policies() {
+        let cfgs = matrix(&ALL_POLICIES, &[2], &[3], &[0], 100_000);
+        assert_eq!(cfgs.len(), 4 + 2 * 2); // 4 single-pack + 2 policies × 2 packs
+    }
+
+    #[test]
+    fn seeded_flight_check_bug_is_caught() {
+        // Arm the cfg(test) hook that makes take_batch skip the
+        // busy-worker flight check — the checker's probe must flag it.
+        let mut cfg = CheckConfig::new(CheckPolicy::Steal, 2, 4, 0, 1, 500_000);
+        cfg.inject_steal_bug = true;
+        let err = run_check(&cfg).expect_err("seeded bug must be caught");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("busy worker") || msg.contains("in flight"),
+            "unexpected violation text: {msg}"
+        );
+    }
+}

@@ -50,10 +50,13 @@ impl Default for QueryGenConfig {
 /// One query bounding box (before day expansion).
 #[derive(Debug, Clone)]
 pub struct QueryBox {
+    /// Query bounding box.
     pub bbox: Rect,
+    /// Airspace class the box was generated for.
     pub class: AirspaceClass,
     /// Elevation-derived MSL altitude range for the query, feet.
     pub msl_lo_ft: f64,
+    /// Upper MSL altitude bound, feet.
     pub msl_hi_ft: f64,
     /// Meridian-based UTC offset, hours.
     pub tz_offset_h: i8,
@@ -64,10 +67,12 @@ pub struct QueryBox {
 /// One executable query (box × local day).
 #[derive(Debug, Clone)]
 pub struct Query {
+    /// Index into the generated [`QueryBox`] list.
     pub box_idx: usize,
     /// Day index in the campaign (paper: first 14 days of each month,
     /// Jan 2019 – Feb 2020 = 196 days).
     pub day: u32,
+    /// Load-balancing / storage group (copied from the box).
     pub group: u32,
 }
 

@@ -40,6 +40,7 @@
 //! busy time and stage counters; `retry` records a dead worker's grant
 //! being requeued at its new per-task attempt count.
 
+/// Deterministic fault-injection hooks for crash-tolerance tests.
 pub mod fault;
 
 use crate::selfsched::SchedTrace;
@@ -395,7 +396,7 @@ pub fn journal_task(
     stats: Vec<u64>,
 ) -> Result<()> {
     let Some(j) = journal else { return Ok(()) };
-    j.lock().expect("journal lock").append(&JournalEvent::Ok {
+    j.lock().unwrap_or_else(std::sync::PoisonError::into_inner).append(&JournalEvent::Ok {
         attempt: 0,
         worker,
         busy_us: started.elapsed().as_micros() as u64,
@@ -513,7 +514,7 @@ impl StageRecovery {
             t.worker_busy[*worker] += busy_s;
             t.worker_times[*worker] += busy_s;
         }
-        let max_worker = t.worker_times.iter().cloned().fold(0.0, f64::max);
+        let max_worker = t.worker_times.iter().copied().fold(0.0, f64::max);
         t.job_time = t.job_time.max(max_worker);
         t
     }

@@ -65,7 +65,9 @@ impl AircraftType {
 /// One registry entry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RegistryEntry {
+    /// ICAO 24-bit address.
     pub icao24: u32,
+    /// Aircraft type (tier-2 directory level).
     pub ac_type: AircraftType,
     /// Number of seats (tier-3 directory level).
     pub seats: u16,

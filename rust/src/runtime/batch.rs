@@ -36,16 +36,27 @@ impl SegmentObs {
 /// Flat, padded input buffers matching the artifact's ABI.
 #[derive(Debug, Clone)]
 pub struct TrackBatch {
+    /// Batch rows (padded segment slots).
     pub b: usize,
+    /// Padded observations per row.
     pub n: usize,
+    /// Padded output grid points per row.
     pub m: usize,
+    /// Pallas tile size the buffers are padded to.
     pub tile: usize,
+    /// Observation times, seconds (`[B, N]`).
     pub obs_t: Vec<f32>,
+    /// Observation latitudes, degrees (`[B, N]`).
     pub obs_lat: Vec<f32>,
+    /// Observation longitudes, degrees (`[B, N]`).
     pub obs_lon: Vec<f32>,
+    /// Observation altitudes, feet MSL (`[B, N]`).
     pub obs_alt: Vec<f32>,
+    /// 1.0 where an observation is real, 0.0 padding (`[B, N]`).
     pub obs_valid: Vec<f32>,
+    /// Output sample times, seconds (`[B, M]`).
     pub grid_t: Vec<f32>,
+    /// Flattened DEM tile the batch samples AGL from.
     pub dem: Vec<f32>,
     /// `(lat0, lon0, dlat, dlon)`.
     pub dem_meta: [f32; 4],
@@ -159,14 +170,23 @@ impl TrackBatch {
 /// Model outputs, one `[B, M]` row-major buffer per field.
 #[derive(Debug, Clone)]
 pub struct TrackOutputs {
+    /// Batch rows.
     pub b: usize,
+    /// Grid points per row.
     pub m: usize,
+    /// Interpolated latitudes, degrees.
     pub lat: Vec<f32>,
+    /// Interpolated longitudes, degrees.
     pub lon: Vec<f32>,
+    /// Interpolated altitudes, feet MSL.
     pub alt: Vec<f32>,
+    /// Vertical rates, ft/min.
     pub vrate: Vec<f32>,
+    /// Ground speeds, knots.
     pub gspeed: Vec<f32>,
+    /// Above-ground-level altitudes, feet.
     pub agl: Vec<f32>,
+    /// 1.0 where the grid point lies inside the segment's span.
     pub valid: Vec<f32>,
 }
 
@@ -261,8 +281,8 @@ mod tests {
         let abi = b.abi_inputs();
         assert_eq!(abi.len(), man.inputs.len());
         for (i, (data, dims)) in abi.iter().enumerate() {
-            assert_eq!(data.len(), man.input_len(i), "input {i}");
-            assert_eq!(*dims, man.input_dims(i), "input {i}");
+            assert_eq!(data.len(), man.input_len(i).unwrap(), "input {i}");
+            assert_eq!(*dims, man.input_dims(i).unwrap(), "input {i}");
         }
     }
 }

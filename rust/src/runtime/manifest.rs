@@ -72,28 +72,29 @@ impl ArtifactManifest {
         Self::parse(&text)
     }
 
-    /// Expected flat element count for the input at ABI position `i`.
-    pub fn input_len(&self, i: usize) -> usize {
-        match self.inputs[i].as_str() {
+    /// Expected flat element count for the input at ABI position `i`;
+    /// an unknown input name is a corrupt/foreign manifest, not a bug.
+    pub fn input_len(&self, i: usize) -> Result<usize> {
+        Ok(match self.inputs[i].as_str() {
             "obs_t" | "obs_lat" | "obs_lon" | "obs_alt" | "obs_valid" => self.b * self.n,
             "grid_t" => self.b * self.m,
             "dem" => self.tile * self.tile,
             "dem_meta" => 4,
-            other => panic!("unknown input '{other}' in manifest"),
-        }
+            other => bail!("unknown input '{other}' in manifest"),
+        })
     }
 
     /// Expected dims for the input at ABI position `i`.
-    pub fn input_dims(&self, i: usize) -> Vec<i64> {
-        match self.inputs[i].as_str() {
+    pub fn input_dims(&self, i: usize) -> Result<Vec<i64>> {
+        Ok(match self.inputs[i].as_str() {
             "obs_t" | "obs_lat" | "obs_lon" | "obs_alt" | "obs_valid" => {
                 vec![self.b as i64, self.n as i64]
             }
             "grid_t" => vec![self.b as i64, self.m as i64],
             "dem" => vec![self.tile as i64, self.tile as i64],
             "dem_meta" => vec![4],
-            other => panic!("unknown input '{other}' in manifest"),
-        }
+            other => bail!("unknown input '{other}' in manifest"),
+        })
     }
 }
 

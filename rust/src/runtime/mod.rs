@@ -15,9 +15,13 @@
 //! model's reference semantics, pinned against the Python oracle by the
 //! checked-in golden file (`rust/tests/runtime_golden.rs`).
 
+/// Flat, padded input/output buffers matching the artifact ABI.
 pub mod batch;
+/// Parsed artifact manifest (shapes, dtypes, input order).
 pub mod manifest;
+/// The track model: artifact loading and batched execution.
 pub mod model;
+/// Native CPU stand-in for PJRT with the model's reference semantics.
 pub mod xla_stub;
 
 pub use batch::{TrackBatch, TrackOutputs};

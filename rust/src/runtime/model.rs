@@ -101,7 +101,10 @@ impl TrackModel {
         let abi = batch.abi_inputs();
         let mut buffers: Vec<xla::PjRtBuffer> = Vec::with_capacity(6);
         for (i, (data, dims)) in abi.iter().enumerate().take(6) {
-            debug_assert_eq!(data.len(), man.input_len(i));
+            let want = man.input_len(i)?;
+            if data.len() != want {
+                bail!("input {} has {} elements, want {want}", man.inputs[i], data.len());
+            }
             let udims: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
             buffers.push(
                 self.client
@@ -127,7 +130,8 @@ impl TrackModel {
                 .context("uploading dem_meta")?;
             self.dem_cache = Some((batch.dem_version, dem, meta));
         }
-        let (_, dem_buf, meta_buf) = self.dem_cache.as_ref().unwrap();
+        let (_, dem_buf, meta_buf) =
+            self.dem_cache.as_ref().context("dem cache populated above")?;
         let args: Vec<&xla::PjRtBuffer> = buffers.iter().chain([dem_buf, meta_buf]).collect();
         let result = self
             .exe
@@ -156,16 +160,19 @@ impl TrackModel {
         self.exec_time += start.elapsed();
         self.exec_calls += 1;
         let mut it = fields.into_iter();
+        let mut take = |what: &str| {
+            it.next().with_context(|| format!("artifact outputs missing {what}"))
+        };
         Ok(TrackOutputs {
             b: man.b,
             m: man.m,
-            lat: it.next().unwrap(),
-            lon: it.next().unwrap(),
-            alt: it.next().unwrap(),
-            vrate: it.next().unwrap(),
-            gspeed: it.next().unwrap(),
-            agl: it.next().unwrap(),
-            valid: it.next().unwrap(),
+            lat: take("lat")?,
+            lon: take("lon")?,
+            alt: take("alt")?,
+            vrate: take("vrate")?,
+            gspeed: take("gspeed")?,
+            agl: take("agl")?,
+            valid: take("valid")?,
         })
     }
 

@@ -85,7 +85,7 @@ impl WorkerLog {
 
     /// Latest completion across all workers (the virtual-time job end).
     pub fn last_completion(&self) -> f64 {
-        self.last_done.iter().cloned().fold(0.0, f64::max)
+        self.last_done.iter().copied().fold(0.0, f64::max)
     }
 
     /// Messages recorded so far.
@@ -165,7 +165,10 @@ impl Flight {
 /// When a worker dies mid-run, [`Manager::requeue`] hands its in-flight
 /// tasks back to the queue so surviving workers pick them up — the
 /// manager already owns exactly the state needed to reschedule.
-#[derive(Debug)]
+///
+/// The manager is `Clone` so the [`crate::modelcheck`] explorer can fork
+/// one protocol state per enabled event and walk every interleaving.
+#[derive(Debug, Clone)]
 pub struct Manager<'a> {
     cfg: SelfSchedConfig,
     /// Task visit order (from [`crate::dist::order_tasks`]).
@@ -194,6 +197,11 @@ pub struct Manager<'a> {
     /// completion.
     adaptive_k: usize,
     log: WorkerLog,
+    /// Test-only fault injection for the model checker's regression test:
+    /// when set, [`Manager::take_batch`] skips the busy-worker flight
+    /// check — the seeded protocol bug `modelcheck` must catch.
+    #[cfg(test)]
+    pub(crate) debug_skip_flight_check: bool,
 }
 
 impl<'a> Manager<'a> {
@@ -213,6 +221,8 @@ impl<'a> Manager<'a> {
             steal_mode: false,
             adaptive_k: cfg.tasks_per_message.max(1),
             log: WorkerLog::new(nworkers),
+            #[cfg(test)]
+            debug_skip_flight_check: false,
         }
     }
 
@@ -317,7 +327,10 @@ impl<'a> Manager<'a> {
     /// `messages_sent` stays 0.
     pub fn take_batch(&mut self, w: usize, now_s: f64) -> Option<(usize, bool)> {
         debug_assert!(self.steal_mode, "take_batch needs assign_queues first");
-        if self.aborted || self.flight[w] != Flight::Idle {
+        let busy = self.flight[w] != Flight::Idle;
+        #[cfg(test)]
+        let busy = busy && !self.debug_skip_flight_check;
+        if self.aborted || busy {
             return None;
         }
         let (task, stolen) = if let Some(t) = self.requeued.pop_front() {
@@ -335,7 +348,9 @@ impl<'a> Manager<'a> {
                     victim = Some(i);
                 }
             }
-            (self.queues[victim?].pop_back().expect("victim is non-empty"), true)
+            // Victims are selected non-empty, so the pop always yields;
+            // `?` keeps the path panic-free regardless.
+            (self.queues[victim?].pop_back()?, true)
         };
         self.flight[w] = Flight::List(vec![task]);
         self.granted_at[w] = now_s;
@@ -456,6 +471,28 @@ impl<'a> Manager<'a> {
         self.pack_take(avail)
     }
 
+    /// A hashable canonical snapshot of every protocol-relevant field —
+    /// the model checker's memoization key. Timing fields (`granted_at`,
+    /// busy/span accumulators) are deliberately excluded: no protocol
+    /// *decision* reads them (the AIMD factor they feed is captured as
+    /// `adaptive_k`), so states differing only in timestamps are the same
+    /// protocol state.
+    pub fn snapshot(&self) -> ManagerSnapshot {
+        ManagerSnapshot {
+            cursor: self.cursor,
+            flights: (0..self.nworkers()).map(|w| self.flight_tasks(w)).collect(),
+            requeued: self.requeued.iter().copied().collect(),
+            queues: self.queues.iter().map(|q| q.iter().copied().collect()).collect(),
+            steal_mode: self.steal_mode,
+            aborted: self.aborted,
+            adaptive_k: self.adaptive_k,
+            outstanding: self.outstanding,
+            messages: self.log.messages,
+            steals: self.log.steals,
+            tasks_done: self.log.tasks_done.clone(),
+        }
+    }
+
     /// The run's bookkeeping so far.
     pub fn log(&self) -> &WorkerLog {
         &self.log
@@ -465,6 +502,36 @@ impl<'a> Manager<'a> {
     pub fn into_trace(self, job_time: f64) -> SchedTrace {
         self.log.trace(job_time)
     }
+}
+
+/// Canonical, hashable protocol state of a [`Manager`] — see
+/// [`Manager::snapshot`]. Two managers with equal snapshots make
+/// identical protocol decisions from here on, which is exactly the
+/// property the [`crate::modelcheck`] DFS memoizes on.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ManagerSnapshot {
+    /// Next unallocated position in the ordered task list.
+    pub cursor: usize,
+    /// In-flight task ids per worker (empty = idle), ranges resolved.
+    pub flights: Vec<Vec<usize>>,
+    /// Requeued task ids awaiting re-grant, in queue order.
+    pub requeued: Vec<usize>,
+    /// Remaining pre-assigned deque contents per worker (steal mode).
+    pub queues: Vec<Vec<usize>>,
+    /// True once [`Manager::assign_queues`] switched the run to stealing.
+    pub steal_mode: bool,
+    /// True once the run was aborted.
+    pub aborted: bool,
+    /// Current AIMD packing factor.
+    pub adaptive_k: usize,
+    /// Messages granted but not yet completed.
+    pub outstanding: usize,
+    /// Allocation messages sent so far.
+    pub messages: usize,
+    /// Steals recorded so far.
+    pub steals: usize,
+    /// Tasks completed per worker.
+    pub tasks_done: Vec<usize>,
 }
 
 #[cfg(test)]

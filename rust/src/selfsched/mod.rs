@@ -185,7 +185,7 @@ impl SchedTrace {
         {
             return Err("busy time exceeds span time".into());
         }
-        let max_worker = self.worker_times.iter().cloned().fold(0.0, f64::max);
+        let max_worker = self.worker_times.iter().copied().fold(0.0, f64::max);
         if self.job_time + 1e-6 < max_worker {
             return Err(format!(
                 "job time {} < slowest worker {max_worker}",

@@ -56,9 +56,13 @@ use std::collections::BinaryHeap;
 /// Everything that defines one simulated run.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
+    /// Node/process/thread layout of the job.
     pub triples: TriplesConfig,
+    /// Batch distribution or self-scheduling.
     pub alloc: AllocMode,
+    /// Which workflow stage's cost model applies.
     pub stage: Stage,
+    /// Calibrated task-duration model.
     pub cost: CostModel,
 }
 
@@ -159,7 +163,7 @@ impl Timeline {
             (None, None) => None,
             (Some(st), Some(ct)) if st > ct => self.pop_completion(ct),
             (Some(st), _) => {
-                let Reverse((_, _, w, phase)) = self.starts.pop().expect("peeked start");
+                let Reverse((_, _, w, phase)) = self.starts.pop()?;
                 Some(Event::Start { t_ns: st, worker: w as usize, phase })
             }
             (None, Some(ct)) => self.pop_completion(ct),
@@ -167,7 +171,7 @@ impl Timeline {
     }
 
     fn pop_completion(&mut self, ct: u64) -> Option<Event> {
-        let Reverse((vt, _, w)) = self.comps.pop().expect("peeked completion");
+        let Reverse((vt, _, w)) = self.comps.pop()?;
         Some(Event::Completion { t_ns: ct, v_target: vt, worker: w as usize })
     }
 }

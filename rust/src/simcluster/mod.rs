@@ -15,7 +15,9 @@
 //!
 //! The engine is deterministic: same inputs → bit-identical traces.
 
+/// Calibrated task-cost and contention model.
 pub mod cost;
+/// The discrete-event simulation engine.
 pub mod engine;
 
 pub use cost::{ContentionCtx, CostModel, Stage};

@@ -5,7 +5,9 @@
 //! surveillance gaps, and segments with fewer than ten observations are
 //! removed before interpolation.
 
+/// CSV and binary track codecs.
 pub mod codec;
+/// Gap-based track segmentation (§II.A).
 pub mod segment;
 
 pub use codec::{decode_tracks, encode_tracks, parse_csv, write_csv};
@@ -41,7 +43,9 @@ pub struct Track {
 /// A contiguous track segment ready for interpolation (stage 3).
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrackSegment {
+    /// ICAO 24-bit address of the aircraft.
     pub icao24: u32,
+    /// Time-ordered observations of the segment.
     pub obs: Vec<Observation>,
 }
 
@@ -49,8 +53,7 @@ impl Track {
     /// Sort observations by time and drop exact duplicates (same second),
     /// which the crowdsourced feed produces when multiple sensors report.
     pub fn normalize(&mut self) {
-        self.obs
-            .sort_by(|a, b| a.t.partial_cmp(&b.t).expect("NaN time"));
+        self.obs.sort_by(|a, b| a.t.total_cmp(&b.t));
         self.obs.dedup_by(|a, b| a.t == b.t);
     }
 }

@@ -3,8 +3,11 @@
 //! The offline build environment provides no `rand`/`statrs`; everything the
 //! simulator and dataset generators need is implemented here and unit-tested.
 
+/// Deterministic PRNG with distribution helpers.
 pub mod rng;
+/// Means, medians, percentiles, standard deviation.
 pub mod stats;
+/// Humanized byte/duration formatting.
 pub mod units;
 
 pub use rng::Rng;

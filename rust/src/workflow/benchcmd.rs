@@ -13,7 +13,7 @@ use crate::selfsched::{AllocMode, SchedTrace, SelfSchedConfig};
 use crate::simcluster::{CostModel, SimConfig, Simulator, Stage};
 use crate::triples::TriplesConfig;
 use crate::util::{human_duration, Rng};
-use anyhow::Result;
+use anyhow::{Context as _, Result};
 use std::fmt::Write as _;
 use std::time::Instant;
 
@@ -53,18 +53,18 @@ fn run_jobs(jobs: &[Job]) -> Vec<SchedTrace> {
     timed.into_iter().map(|(tr, _)| tr).collect()
 }
 
-fn organize_cfg(cores: usize, nppn: usize) -> SimConfig {
-    SimConfig {
-        triples: TriplesConfig::table_config(cores, nppn).expect("feasible cell"),
+fn organize_cfg(cores: usize, nppn: usize) -> Result<SimConfig> {
+    Ok(SimConfig {
+        triples: TriplesConfig::table_config(cores, nppn)?,
         alloc: AllocMode::SelfSched(SelfSchedConfig::default()),
         stage: Stage::Organize,
         cost: CostModel::paper_calibrated(),
-    }
+    })
 }
 
 /// Tables I and II: job time to organize dataset #1 over the NPPN × cores
 /// sweep, for one task organization. The feasible cells run in parallel.
-pub fn run_table(order: TaskOrder, title: &str, paper: &[[f64; 4]; 3]) -> String {
+pub fn run_table(order: TaskOrder, title: &str, paper: &[[f64; 4]; 3]) -> Result<String> {
     let tasks = monday_tasks();
     let ordered = order_tasks(&tasks, order);
     let cores_cols = [2048usize, 1024, 512, 256];
@@ -80,7 +80,7 @@ pub fn run_table(order: TaskOrder, title: &str, paper: &[[f64; 4]; 3]) -> String
                     cells.push((ri, ci, Some(jobs.len())));
                     jobs.push(Job {
                         name: Some(format!("organize {order:?} cores{cores} nppn{nppn}")),
-                        cfg: organize_cfg(cores, nppn),
+                        cfg: organize_cfg(cores, nppn)?,
                         tasks: &tasks,
                         ordered: &ordered,
                     });
@@ -101,7 +101,7 @@ pub fn run_table(order: TaskOrder, title: &str, paper: &[[f64; 4]; 3]) -> String
     let headers: Vec<String> = std::iter::once("NPPN".to_string())
         .chain(cores_cols.iter().map(|c| format!("{c} cores sim (paper)")))
         .collect();
-    render_table(title, &headers, &rows)
+    Ok(render_table(title, &headers, &rows))
 }
 
 /// Paper values for Table I (chronological).
@@ -118,7 +118,7 @@ pub const PAPER_TABLE2: [[f64; 4]; 3] = [
 ];
 
 /// Fig 3: file-size histograms of both datasets (10 MB bins).
-pub fn run_fig3() -> String {
+pub fn run_fig3() -> Result<String> {
     let mut rng = Rng::new(SEED);
     let monday = crate::datasets::monday::manifest(&mut rng);
     let aero = crate::datasets::aerodrome::manifest(&mut rng);
@@ -145,11 +145,11 @@ pub fn run_fig3() -> String {
     let _ = writeln!(s, "-- dataset #2 histogram (first bins) --");
     let compact = Histogram { counts: ha.counts[..30.min(ha.counts.len())].to_vec(), ..ha };
     let _ = writeln!(s, "{}", compact.render(40, " MB"));
-    s
+    Ok(s)
 }
 
 /// Fig 4: job time vs cores for both orderings (NPPN 32 + the crossover).
-pub fn run_fig4() -> String {
+pub fn run_fig4() -> Result<String> {
     let tasks = monday_tasks();
     let chrono = order_tasks(&tasks, TaskOrder::Chronological);
     let size = order_tasks(&tasks, TaskOrder::LargestFirst);
@@ -158,13 +158,13 @@ pub fn run_fig4() -> String {
     for &cores in &cores_list {
         jobs.push(Job {
             name: Some(format!("fig4 chrono cores{cores}")),
-            cfg: organize_cfg(cores, 32),
+            cfg: organize_cfg(cores, 32)?,
             tasks: &tasks,
             ordered: &chrono,
         });
         jobs.push(Job {
             name: Some(format!("fig4 size cores{cores}")),
-            cfg: organize_cfg(cores, 32),
+            cfg: organize_cfg(cores, 32)?,
             tasks: &tasks,
             ordered: &size,
         });
@@ -173,7 +173,7 @@ pub fn run_fig4() -> String {
     // chrono/2048/NPPN32 side reuses the grid run (the engine is pure).
     jobs.push(Job {
         name: None,
-        cfg: organize_cfg(1024, 16),
+        cfg: organize_cfg(1024, 16)?,
         tasks: &tasks,
         ordered: &size,
     });
@@ -201,12 +201,12 @@ pub fn run_fig4() -> String {
          {big_chrono:.0}s -> {} (paper: 5568 < 5640, 50% fewer nodes for equal time)",
         if half_size < big_chrono { "REPRODUCED" } else { "NOT reproduced" }
     );
-    out
+    Ok(out)
 }
 
 /// Figs 5-6: worker-time distributions at 512 cores (1 manager + 255
 /// workers) for both orderings, NPPN ∈ {32, 16, 8}.
-pub fn run_fig56() -> String {
+pub fn run_fig56() -> Result<String> {
     let tasks = monday_tasks();
     let chrono = order_tasks(&tasks, TaskOrder::Chronological);
     let size = order_tasks(&tasks, TaskOrder::LargestFirst);
@@ -220,7 +220,7 @@ pub fn run_fig56() -> String {
         for &nppn in &nppns {
             jobs.push(Job {
                 name: Some(format!("{fig} {name} nppn{nppn}")),
-                cfg: organize_cfg(512, nppn),
+                cfg: organize_cfg(512, nppn)?,
                 tasks: &tasks,
                 ordered,
             });
@@ -279,12 +279,12 @@ pub fn run_fig56() -> String {
         rb.median(),
         rs.median()
     );
-    s
+    Ok(s)
 }
 
 /// Fig 7: job time vs tasks-per-message (64 nodes, NPPN 8, 1 thread,
 /// cyclic task order).
-pub fn run_fig7() -> String {
+pub fn run_fig7() -> Result<String> {
     let tasks = monday_tasks();
     // "cyclic task distribution" for the message experiment: tasks are
     // taken in cyclic-interleaved order.
@@ -338,24 +338,24 @@ pub fn run_fig7() -> String {
             ]
         })
         .collect();
-    render_table(
+    Ok(render_table(
         "Fig 7 — job time vs tasks per message (64 nodes, NPPN 8, cyclic; \
          paper: monotone degradation)",
         &["tasks/msg".into(), "job s".into(), "messages".into()],
         &rows,
-    )
+    ))
 }
 
 /// §IV.B: archiving with block vs cyclic distribution on filename-sorted,
 /// fleet-correlated per-aircraft tasks.
-pub fn run_archiving() -> String {
+pub fn run_archiving() -> Result<String> {
     let mut rng = Rng::new(SEED);
     // Predecessor-dataset regime: per-aircraft-bucket archives where a few
     // contiguous commercial-fleet registration blocks hold ~95% of bytes.
     let p = crate::datasets::processing::ArchiveWorkload::default();
     let tasks = crate::datasets::processing::archive_tasks(&mut rng, &p);
     let ordered = order_tasks(&tasks, TaskOrder::FilenameSorted);
-    let triples = TriplesConfig::table_config(2048, 32).unwrap();
+    let triples = TriplesConfig::table_config(2048, 32)?;
     let jobs: Vec<Job> = [
         ("archiving block", AllocMode::Batch(Distribution::Block)),
         ("archiving cyclic", AllocMode::Batch(Distribution::Cyclic)),
@@ -375,18 +375,18 @@ pub fn run_archiving() -> String {
     })
     .collect();
     let mut traces = run_jobs(&jobs);
-    let ss = traces.pop().expect("selfsched trace");
-    let cyclic = traces.pop().expect("cyclic trace");
-    let block = traces.pop().expect("block trace");
+    let ss = traces.pop().context("selfsched trace")?;
+    let cyclic = traces.pop().context("cyclic trace")?;
+    let block = traces.pop().context("block trace")?;
     // "2% of parallel processes account for more than 95% of the total job
     // time" — busy-time concentration under block.
     let mut busy = block.worker_busy.clone();
-    busy.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    busy.sort_by(|a, b| b.total_cmp(a));
     let top2 = (busy.len() as f64 * 0.02).ceil() as usize;
     let top_share: f64 =
         busy[..top2].iter().sum::<f64>() / busy.iter().sum::<f64>().max(1e-9);
     let reduction = (block.job_time - cyclic.job_time) / block.job_time * 100.0;
-    format!(
+    Ok(format!(
         "§IV.B — archiving, filename-sorted per-aircraft tasks (100k archives)\n\
          block  : job {} ({:.0}s); top-2% workers hold {:.0}% of busy time \
          (paper: 2% of processes ≈ 95% of job time; days to complete)\n\
@@ -400,12 +400,12 @@ pub fn run_archiving() -> String {
         cyclic.job_time,
         human_duration(ss.job_time),
         ss.job_time,
-    )
+    ))
 }
 
 /// Fig 8 + §IV.C: processing dataset #2 (64 nodes, NPPN 16, random order)
 /// plus the batch/block >7-day baseline.
-pub fn run_fig8() -> String {
+pub fn run_fig8() -> Result<String> {
     let mut rng = Rng::new(SEED);
     let p = crate::datasets::processing::OpenSkyProcessing::default();
     let tasks = crate::datasets::processing::opensky_tasks(&mut rng, &p);
@@ -443,11 +443,11 @@ pub fn run_fig8() -> String {
         },
     ];
     let mut traces = run_jobs(&jobs);
-    let baseline = traces.pop().expect("baseline trace");
-    let tr = traces.pop().expect("fig8 trace");
+    let baseline = traces.pop().context("baseline trace")?;
+    let tr = traces.pop().context("fig8 trace")?;
     let r = tr.report();
     let h = |x: f64| x / 3600.0;
-    format!(
+    Ok(format!(
         "Fig 8 — worker time, processing dataset #2 (random org, self-sched, \
          1023 workers)\n\
          median {:.1} h (paper 13.1) | within 18 h: {:.1}% (paper 99.1) | \
@@ -458,15 +458,15 @@ pub fn run_fig8() -> String {
         h(r.median()),
         r.frac_within(18.0 * 3600.0) * 100.0,
         r.frac_within(24.0 * 3600.0) * 100.0,
-        h(tr.worker_times.iter().cloned().fold(0.0, f64::max)),
+        h(tr.worker_times.iter().copied().fold(0.0, f64::max)),
         h(r.span()),
         baseline.job_time / 86_400.0,
-    )
+    ))
 }
 
 /// Fig 9 + §V: the radar dataset on the follow-up configuration
 /// (128 nodes, NPPN 8, 2 threads, 300 tasks/message).
-pub fn run_fig9(scale: f64) -> String {
+pub fn run_fig9(scale: f64) -> Result<String> {
     let mut rng = Rng::new(SEED);
     let tasks = crate::datasets::processing::radar_tasks(&mut rng, scale);
     let ordered = order_tasks(&tasks, TaskOrder::Random(SEED));
@@ -481,7 +481,7 @@ pub fn run_fig9(scale: f64) -> String {
         tasks: &tasks,
         ordered: &ordered,
     }];
-    let tr = run_jobs(&jobs).pop().expect("fig9 trace");
+    let tr = run_jobs(&jobs).pop().context("fig9 trace")?;
     let r = tr.report();
     let e = Ecdf::new(tr.worker_times.clone());
     let mut s = format!(
@@ -497,12 +497,12 @@ pub fn run_fig9(scale: f64) -> String {
         r.span() / r.median().max(1e-9) * 100.0,
     );
     let _ = writeln!(s, "{}", e.render(10, " s"));
-    s
+    Ok(s)
 }
 
 /// §VI: serial-equivalent estimate ("without HPC resources... thousands of
 /// days").
-pub fn run_serial() -> String {
+pub fn run_serial() -> Result<String> {
     let tasks = monday_tasks();
     let cost = CostModel::paper_calibrated();
     let ctx = crate::simcluster::ContentionCtx { active: 1, nodes: 1, nppn: 1, threads: 1 };
@@ -522,7 +522,7 @@ pub fn run_serial() -> String {
         .iter()
         .map(|t| cost.task_duration(Stage::Process, t, &ctx))
         .sum();
-    format!(
+    Ok(format!(
         "§VI — serial-equivalent runtime on a single core:\n\
          organize dataset #1: {:.0} days; process dataset #2: {:.0} days; \
          organize+process radar dataset: {:.0} days; \
@@ -531,7 +531,7 @@ pub fn run_serial() -> String {
         process_s / 86_400.0,
         radar_s / 86_400.0,
         (organize_s + process_s + radar_s) / 86_400.0,
-    )
+    ))
 }
 
 /// `emproc bench columnar [--data DIR] [--tracks N] [--obs-per-track M]
@@ -647,31 +647,32 @@ pub fn run(which: &str, a: &ArgParser) -> Result<()> {
     let scale = a.get_num("scale", 0.1f64)?;
     let all = which == "all";
     let mut any = false;
-    let mut emit = |name: &str, f: &dyn Fn() -> String| {
+    let mut emit = |name: &str, f: &dyn Fn() -> Result<String>| -> Result<()> {
         if all || which == name {
-            println!("{}", f());
+            println!("{}", f()?);
             any = true;
         }
+        Ok(())
     };
     emit("table1", &|| {
         run_table(TaskOrder::Chronological, "TABLE I — organize DS#1, chronological, self-sched: sim (paper) seconds", &PAPER_TABLE1)
-    });
+    })?;
     emit("table2", &|| {
         run_table(TaskOrder::LargestFirst, "TABLE II — organize DS#1, largest-first, self-sched: sim (paper) seconds", &PAPER_TABLE2)
-    });
-    emit("fig3", &run_fig3);
-    emit("fig4", &run_fig4);
-    emit("fig5", &run_fig56);
+    })?;
+    emit("fig3", &run_fig3)?;
+    emit("fig4", &run_fig4)?;
+    emit("fig5", &run_fig56)?;
     if !all {
         // Alias: under "all", figs 5-6 already ran (and recorded their
         // scenarios) once via the "fig5" emission.
-        emit("fig6", &run_fig56);
+        emit("fig6", &run_fig56)?;
     }
-    emit("fig7", &run_fig7);
-    emit("archiving", &run_archiving);
-    emit("fig8", &run_fig8);
-    emit("fig9", &|| run_fig9(scale));
-    emit("serial", &run_serial);
+    emit("fig7", &run_fig7)?;
+    emit("archiving", &run_archiving)?;
+    emit("fig8", &run_fig8)?;
+    emit("fig9", &|| run_fig9(scale))?;
+    emit("serial", &run_serial)?;
     if !any {
         anyhow::bail!("unknown experiment '{which}' (try `emproc help`)");
     }

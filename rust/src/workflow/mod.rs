@@ -14,12 +14,19 @@
 //! [`scenario`] layer drives the real executor across the paper's full
 //! strategy matrix (dataset × per-stage allocation × task order).
 
+/// Paper-experiment regeneration behind `emproc bench`.
 pub mod benchcmd;
+/// CLI entry points for pipeline and scenario runs.
 pub mod commands;
+/// The three-stage pipeline driver.
 pub mod pipeline;
+/// Scenario matrix across dataset x allocation x order.
 pub mod scenario;
+/// Stage 1: organize raw files into the registry hierarchy.
 pub mod stage1;
+/// Stage 2: archive organized files.
 pub mod stage2;
+/// Stage 3: process archives through the track model.
 pub mod stage3;
 
 pub use pipeline::{Pipeline, PipelineConfig, PipelineReport};

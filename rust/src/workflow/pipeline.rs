@@ -128,9 +128,13 @@ impl PipelineConfig {
 /// Per-stage + total report of one pipeline run.
 #[derive(Debug)]
 pub struct PipelineReport {
+    /// Raw corpus files fed into stage 1.
     pub raw_files: usize,
+    /// Stage-1 outcome.
     pub organize: crate::workflow::stage1::OrganizeOutcome,
+    /// Stage-2 outcome.
     pub archive: crate::workflow::stage2::ArchiveOutcome,
+    /// Stage-3 outcome.
     pub process: crate::workflow::stage3::ProcessOutcome,
 }
 
@@ -162,6 +166,7 @@ impl PipelineReport {
 
 /// The full pipeline object.
 pub struct Pipeline {
+    /// The run's full configuration.
     pub cfg: PipelineConfig,
 }
 

@@ -354,7 +354,7 @@ pub fn run_matrix_opts(
         let first = specs
             .iter()
             .find(|s| s.dataset == spec.dataset)
-            .expect("spec's own dataset is present");
+            .unwrap_or(spec);
         let shape = |s: &ScenarioSpec| (s.days, s.max_file_bytes, s.registry_size, s.seed);
         if shape(first) != shape(spec) {
             anyhow::bail!(
@@ -380,16 +380,14 @@ pub fn run_matrix_opts(
         corpora.push(Corpus { dataset: spec.dataset, raw_dir, registry, raw_files });
     }
 
-    let items: Vec<(&ScenarioSpec, &Corpus)> = specs
-        .iter()
-        .map(|spec| {
-            let corpus = corpora
-                .iter()
-                .find(|c| c.dataset == spec.dataset)
-                .expect("corpus generated above");
-            (spec, corpus)
-        })
-        .collect();
+    let mut items: Vec<(&ScenarioSpec, &Corpus)> = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let corpus = corpora
+            .iter()
+            .find(|c| c.dataset == spec.dataset)
+            .context("corpus generated above for every spec dataset")?;
+        items.push((spec, corpus));
+    }
     let results: Vec<Result<ScenarioReport>> = sweep::run(&items, |(spec, corpus)| {
         let mut cfg = spec
             .pipeline_config(base_dir.join(spec.dir_name()), Some(corpus.raw_dir.clone()));

@@ -30,6 +30,7 @@ pub struct OrganizeJob {
 /// Result of organizing one corpus.
 #[derive(Debug)]
 pub struct OrganizeOutcome {
+    /// Scheduling trace of the stage run.
     pub trace: SchedTrace,
     /// Files written into the hierarchy.
     pub files_written: usize,

@@ -37,6 +37,7 @@ fn run_task(format: ArchiveFormat, task: &ArchiveTask) -> Result<u64> {
 /// Result of archiving.
 #[derive(Debug)]
 pub struct ArchiveOutcome {
+    /// Scheduling trace of the stage run.
     pub trace: SchedTrace,
     /// Zips written.
     pub archives: usize,

@@ -42,6 +42,7 @@ pub struct ProcessJob {
 /// Result of processing.
 #[derive(Debug)]
 pub struct ProcessOutcome {
+    /// Scheduling trace of the stage run.
     pub trace: SchedTrace,
     /// Archives processed.
     pub archives: usize,

@@ -1,0 +1,272 @@
+//! Seeded corruption fuzzing of every parser that faces on-disk bytes
+//! (DESIGN.md §13): the columnar archive reader, the packed track codec,
+//! and the crash-journal parser. Each fuzz case mutates or truncates a
+//! valid artifact deterministically (`util::Rng`, fixed seeds) and
+//! asserts the parser returns a typed error — `ArchiveError::Corrupt`
+//! for archive bytes — and never panics. A panic anywhere fails the
+//! test, so merely surviving the sweep is the property under test.
+
+use emproc::archive::{ArchiveError, ColumnarReader, ColumnarWriter};
+use emproc::recovery::{replay, JournalEvent, JournalPlan};
+use emproc::tracks::{decode_tracks, encode_tracks, Observation, Track};
+use emproc::util::Rng;
+use std::path::PathBuf;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("emproc_corruption_fuzz_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Tracks whose values are exactly representable at the codec's column
+/// resolutions (whole seconds; 1e-6 degrees; 0.1 ft), so encoding is
+/// lossless and a clean round trip is guaranteed before fuzzing begins.
+fn sample_tracks(rng: &mut Rng, n: usize) -> Vec<Track> {
+    (0..n)
+        .map(|i| {
+            let nobs = 2 + rng.below(6);
+            let obs = (0..nobs)
+                .map(|j| Observation {
+                    t: (1_517_818_000 + (i * 100 + j * 10)) as f64,
+                    lat: (40_000_000i64 + rng.below(2_000_000) as i64) as f64 / 1e6,
+                    lon: (-75_000_000i64 + rng.below(2_000_000) as i64) as f64 / 1e6,
+                    alt_ft: (rng.below(400_000) as f64) / 10.0,
+                })
+                .collect();
+            Track { icao24: (i as u32) * 7 + 1, obs }
+        })
+        .collect()
+}
+
+fn write_archive(path: &std::path::Path, tracks_per_member: &[usize]) -> Vec<u8> {
+    let mut rng = Rng::new(7);
+    let mut w = ColumnarWriter::create(path).unwrap();
+    for (m, &n) in tracks_per_member.iter().enumerate() {
+        w.append_tracks(&format!("member{m}.csv"), &sample_tracks(&mut rng, n)).unwrap();
+    }
+    w.finish().unwrap();
+    std::fs::read(path).unwrap()
+}
+
+/// Open + full read, the way stage 3 consumes an archive.
+fn read_all(path: &std::path::Path) -> anyhow::Result<u64> {
+    let mut rd = ColumnarReader::open(path)?;
+    let mut rows = 0u64;
+    for i in 0..rd.entries().len() {
+        for t in rd.read_entry(i)? {
+            rows += t.obs.len() as u64;
+        }
+    }
+    Ok(rows)
+}
+
+fn assert_corrupt_or_clean(res: anyhow::Result<u64>, what: &str) {
+    if let Err(err) = res {
+        match err.downcast_ref::<ArchiveError>() {
+            Some(ArchiveError::Corrupt { .. }) => {}
+            other => panic!("{what}: expected ArchiveError::Corrupt, got {other:?}: {err:#}"),
+        }
+    }
+}
+
+#[test]
+fn columnar_byte_mutations_yield_typed_corruption() {
+    let dir = tmp_dir("colmut");
+    let orig_path = dir.join("orig.ctrk");
+    let orig = write_archive(&orig_path, &[3, 1, 5]);
+    assert!(read_all(&orig_path).is_ok());
+
+    let mut rng = Rng::new(0xC0FFEE);
+    let fuzz_path = dir.join("fuzz.ctrk");
+    let mut errors = 0usize;
+    for _ in 0..300 {
+        let mut bytes = orig.clone();
+        for _ in 0..(1 + rng.below(8)) {
+            let at = rng.below(bytes.len());
+            bytes[at] ^= (1 + rng.below(255)) as u8;
+        }
+        std::fs::write(&fuzz_path, &bytes).unwrap();
+        let res = read_all(&fuzz_path);
+        if res.is_err() {
+            errors += 1;
+        }
+        // Every failure must be the typed corruption variant quoting a
+        // byte range — never a panic, never an untyped parse error.
+        assert_corrupt_or_clean(res, "mutated archive");
+    }
+    // The sweep must actually exercise the error paths (flipping bits in
+    // magic/footer/payload regions cannot all be benign).
+    assert!(errors > 50, "only {errors}/300 mutations errored — fuzzer is too gentle");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn columnar_truncations_yield_typed_corruption() {
+    let dir = tmp_dir("coltrunc");
+    let orig_path = dir.join("orig.ctrk");
+    let orig = write_archive(&orig_path, &[2, 2]);
+    let fuzz_path = dir.join("cut.ctrk");
+    // Every prefix of the file, including the empty one, must be rejected
+    // as Corrupt: the trailer-last layout means no truncation can look
+    // complete.
+    for cut in 0..orig.len() {
+        std::fs::write(&fuzz_path, &orig[..cut]).unwrap();
+        let res = read_all(&fuzz_path);
+        assert!(res.is_err(), "truncation to {cut} bytes read successfully");
+        assert_corrupt_or_clean(res, "truncated archive");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Regression: a footer entry offset near `u64::MAX` must not wrap in the
+/// `offset + 4 + len` end-of-member computation (it used to overflow, a
+/// debug-build panic) — it is ArchiveError::Corrupt like any other bad
+/// range.
+#[test]
+fn columnar_footer_offset_overflow_is_corrupt() {
+    let dir = tmp_dir("coloverflow");
+    let path = dir.join("overflow.ctrk");
+    let mut bytes = write_archive(&path, &[2]);
+    // Layout from the writer: entries, footer, then a 20-byte trailer
+    // [footer_len u64][version u32][magic 8]. The single footer entry is
+    // [count u64][name_len u32][name][offset u64][len u32][rows u64].
+    let n = bytes.len();
+    let footer_len =
+        u64::from_le_bytes(bytes[n - 20..n - 12].try_into().unwrap()) as usize;
+    let footer_at = n - 20 - footer_len;
+    let name_len =
+        u32::from_le_bytes(bytes[footer_at + 8..footer_at + 12].try_into().unwrap()) as usize;
+    let offset_at = footer_at + 12 + name_len;
+    bytes[offset_at..offset_at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+    std::fs::write(&path, &bytes).unwrap();
+    let err = ColumnarReader::open(&path).err().expect("overflowing offset must not open");
+    match err.downcast_ref::<ArchiveError>() {
+        Some(ArchiveError::Corrupt { detail, .. }) => {
+            assert!(detail.contains("overruns the data region"), "detail: {detail}");
+        }
+        other => panic!("expected ArchiveError::Corrupt, got {other:?}: {err:#}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn codec_mutations_truncations_and_garbage_never_panic() {
+    let mut rng = Rng::new(11);
+    let tracks = sample_tracks(&mut rng, 6);
+    let blob = encode_tracks(&tracks).unwrap();
+    assert_eq!(decode_tracks(&blob).unwrap(), tracks);
+
+    // Byte mutations: decode must return (any) Ok or Err, never panic,
+    // and a successful decode must still satisfy the codec's own bounds.
+    let mut rng = Rng::new(0xDECODE);
+    for _ in 0..500 {
+        let mut b = blob.clone();
+        for _ in 0..(1 + rng.below(4)) {
+            let at = rng.below(b.len());
+            b[at] ^= (1 + rng.below(255)) as u8;
+        }
+        if let Ok(tracks) = decode_tracks(&b) {
+            for t in &tracks {
+                assert!(t.icao24 <= 0xFF_FFFF);
+                for o in &t.obs {
+                    assert!((-90.0..=90.0).contains(&o.lat));
+                    assert!((-180.0..=180.0).contains(&o.lon));
+                }
+            }
+        }
+    }
+    // Every truncation: the whole-buffer-consumed rule means only the
+    // full blob can decode.
+    for cut in 0..blob.len() {
+        assert!(decode_tracks(&blob[..cut]).is_err(), "prefix {cut} decoded");
+    }
+    // Pure garbage buffers.
+    for seed in 0..100u64 {
+        let mut rng = Rng::new(seed);
+        let b: Vec<u8> = (0..rng.below(200)).map(|_| rng.below(256) as u8).collect();
+        let _ = decode_tracks(&b);
+    }
+}
+
+fn journal_text(plan: &JournalPlan, events: &[JournalEvent]) -> String {
+    let mut s = format!("plan {} {} {:016x} ;\n", plan.stage, plan.ntasks, plan.name_hash);
+    for e in events {
+        s.push_str(&e.render());
+        s.push('\n');
+    }
+    s
+}
+
+#[test]
+fn journal_corruption_is_typed_and_torn_tails_are_tolerated() {
+    let plan = JournalPlan::new("process", ["t0", "t1", "t2", "t3"].into_iter());
+    let events = vec![
+        JournalEvent::Ok { attempt: 0, worker: 1, busy_us: 500, tasks: vec![0, 2], stats: vec![7, 9] },
+        JournalEvent::Retry { attempt: 1, tasks: vec![3] },
+        JournalEvent::Ok { attempt: 1, worker: 0, busy_us: 80, tasks: vec![3], stats: vec![1, 1] },
+    ];
+    let text = journal_text(&plan, &events);
+    let (p, evs) = replay(&text).unwrap();
+    assert_eq!((p.ntasks, p.name_hash), (plan.ntasks, plan.name_hash));
+    assert_eq!(evs, events);
+
+    // A crash mid-append leaves a torn final line; the torn record is
+    // dropped and everything before it replays unchanged.
+    let torn = format!("{text}ok 0 1 44 t 1");
+    let (_, evs) = replay(&torn).unwrap();
+    assert_eq!(evs, events);
+
+    // A MID-file line missing its sentinel is damage, not a torn tail.
+    let missing = text.replacen("t 0 2 s 7 9 ;", "t 0 2 s 7 9", 1);
+    let err = replay(&missing).unwrap_err().to_string();
+    assert!(
+        err.contains("corrupt journal line (missing sentinel, not the final line):"),
+        "got: {err}"
+    );
+
+    // A journal whose first line is not a plan cannot be resumed from.
+    let headless = text.splitn(2, '\n').nth(1).unwrap();
+    let err = replay(headless).unwrap_err().to_string();
+    assert!(err.contains("journal does not start with a plan line:"), "got: {err}");
+
+    // An unrecognized record type is a hard error, even with a sentinel.
+    let zapped = format!("{text}zap 1 t 0 ;\n");
+    let err = replay(&zapped).unwrap_err().to_string();
+    assert!(err.contains("unknown journal record"), "got: {err}");
+
+    // A record naming a task outside the plan is rejected.
+    let out_of_plan = format!("{text}ok 0 1 5 t 9 s 1 1 ;\n");
+    assert!(replay(&out_of_plan).is_err());
+}
+
+#[test]
+fn journal_char_fuzz_never_panics() {
+    let plan = JournalPlan::new("archive", ["a", "b", "c"].into_iter());
+    let events = vec![
+        JournalEvent::Ok { attempt: 0, worker: 0, busy_us: 10, tasks: vec![0], stats: vec![1] },
+        JournalEvent::Ok { attempt: 0, worker: 2, busy_us: 20, tasks: vec![1, 2], stats: vec![2] },
+    ];
+    let text = journal_text(&plan, &events);
+    let mut rng = Rng::new(0x10E6);
+    let printable: Vec<char> =
+        " ;abcdefplnokrty0123456789\n\"\\{}".chars().collect();
+    for _ in 0..500 {
+        let mut chars: Vec<char> = text.chars().collect();
+        for _ in 0..(1 + rng.below(5)) {
+            let at = rng.below(chars.len());
+            chars[at] = printable[rng.below(printable.len())];
+        }
+        let mutated: String = chars.into_iter().collect();
+        // Ok (mutation hit a benign spot or only the torn-tail region) or
+        // a typed error — either way, no panic.
+        let _ = replay(&mutated);
+    }
+    // Truncations: every prefix either replays (dropping the torn tail)
+    // or errors cleanly.
+    for cut in 0..text.len() {
+        if text.is_char_boundary(cut) {
+            let _ = replay(&text[..cut]);
+        }
+    }
+}

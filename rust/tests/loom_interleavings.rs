@@ -1,0 +1,136 @@
+//! Loom-checked interleavings of the crate's two hand-rolled
+//! concurrency disciplines (DESIGN.md §13). Compiled only under
+//! `RUSTFLAGS="--cfg loom"` with the `loom` dev-dependency added (CI's
+//! `loom` job does both; the offline build sees an empty file), because
+//! loom must own every `Mutex`/atomic it model-checks.
+//!
+//! The tests model the *shape* of the real code paths — the lock and
+//! atomic protocols, not the file I/O behind them:
+//!
+//! * `exec`/`recovery`: worker threads completing grants append whole
+//!   records to one `Mutex<JournalWriter>` (rust/src/recovery/mod.rs,
+//!   `append_ok` under `journal.lock()`). Every schedule must leave a
+//!   journal that is a permutation of whole records — a torn or lost
+//!   append is exactly the corruption `recovery::replay` would reject.
+//! * `bench_harness::sweep`: workers claim items via
+//!   `cursor.fetch_add(1, Relaxed)` (rust/src/bench_harness/mod.rs).
+//!   Every schedule must hand out each index to exactly one worker and
+//!   cover all of them — the comment in `sweep::run` ("the claim loop
+//!   hands out each index exactly once") as a checked property.
+#![cfg(loom)]
+
+use loom::sync::atomic::{AtomicUsize, Ordering};
+use loom::sync::{Arc, Mutex};
+use loom::thread;
+
+/// A journal line mirroring `recovery::JournalWriter::append_ok`: one
+/// whole sentinel-terminated record per completion.
+fn ok_line(worker: usize, task: usize) -> String {
+    format!("ok 0 {worker} 1 t {task} s ;")
+}
+
+#[test]
+fn journal_mutex_appends_are_whole_and_lossless() {
+    loom::model(|| {
+        // Two workers, two completions each, one shared journal.
+        let journal = Arc::new(Mutex::new(Vec::<String>::new()));
+        let handles: Vec<_> = (0..2)
+            .map(|w| {
+                let journal = Arc::clone(&journal);
+                thread::spawn(move || {
+                    for task in [2 * w, 2 * w + 1] {
+                        // The real discipline: format outside the lock,
+                        // append the whole line under it.
+                        let line = ok_line(w, task);
+                        journal.lock().unwrap().push(line);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let lines = journal.lock().unwrap();
+        // Lossless: all four records present...
+        assert_eq!(lines.len(), 4, "journal lost or duplicated an append");
+        // ...and whole: every line is exactly one sentinel-terminated
+        // record naming a distinct task.
+        let mut tasks: Vec<usize> = lines
+            .iter()
+            .map(|l| {
+                assert!(l.starts_with("ok ") && l.ends_with(" ;"), "torn record: {l:?}");
+                l.split_whitespace().nth(5).unwrap().parse().unwrap()
+            })
+            .collect();
+        tasks.sort_unstable();
+        assert_eq!(tasks, vec![0, 1, 2, 3], "append set diverged");
+    });
+}
+
+#[test]
+fn journal_mutex_read_then_append_is_atomic_under_the_lock() {
+    loom::model(|| {
+        // The resume path reads the journal's completion count and the
+        // append path extends it; both hold the lock for the whole
+        // read-modify-write, so counts observed are never mid-append.
+        let journal = Arc::new(Mutex::new(Vec::<String>::new()));
+        let writer = {
+            let journal = Arc::clone(&journal);
+            thread::spawn(move || {
+                let mut j = journal.lock().unwrap();
+                let before = j.len();
+                j.push(ok_line(0, before));
+                assert_eq!(j.len(), before + 1);
+            })
+        };
+        let reader = {
+            let journal = Arc::clone(&journal);
+            thread::spawn(move || {
+                let j = journal.lock().unwrap();
+                // A consistent snapshot: every visible line is whole.
+                for l in j.iter() {
+                    assert!(l.ends_with(" ;"), "observed a torn line: {l:?}");
+                }
+                j.len()
+            })
+        };
+        writer.join().unwrap();
+        let seen = reader.join().unwrap();
+        assert!(seen <= 1);
+        assert_eq!(journal.lock().unwrap().len(), 1);
+    });
+}
+
+#[test]
+fn sweep_cursor_claims_each_index_exactly_once() {
+    const N: usize = 4;
+    loom::model(|| {
+        let cursor = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let cursor = Arc::clone(&cursor);
+                thread::spawn(move || {
+                    // The claim loop from `sweep::run`, verbatim.
+                    let mut done = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= N {
+                            break;
+                        }
+                        done.push(i);
+                    }
+                    done
+                })
+            })
+            .collect();
+        let mut claimed: Vec<usize> = handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        claimed.sort_unstable();
+        // Exactly once each, full coverage — under every interleaving.
+        assert_eq!(claimed, (0..N).collect::<Vec<_>>());
+        // The cursor overshoots by at most one fetch per worker.
+        assert!(cursor.load(Ordering::Relaxed) <= N + 2);
+    });
+}
