@@ -62,6 +62,18 @@ COMMANDS:
   (--max-retries, default 2; plain block/cyclic batch runs fail fast —
   pre-assignment has no one to requeue to), and a killed job is finished
   by rerunning with --resume DIR.
+  serve      run the emprocd job daemon: accepts line-delimited pipeline
+             job submissions over TCP (admission-controlled FIFO, one
+             persistent worker pool, per-job isolated run dirs under
+             DIR/jobs/job-N/)
+      --dir DIR [--addr HOST:PORT] [--max-queue N] [--pool N]
+  submit     submit one pipeline job to a running daemon and stream its
+             queued/status/done/failed event lines
+      --addr HOST:PORT (--spec JSON | --spec-file FILE)
+      spec keys: dataset workers seed scale launch transport max_retries
+      format policy (flat JSON; same semantics as the pipeline flags)
+  jobs       list a running daemon's jobs (id, state, dataset, run dir)
+      --addr HOST:PORT
   queries    §III.B aerodrome query generation (geometry pipeline)
       --out FILE [--aerodromes N] [--seed N]
   bench <EXP|all>   regenerate a paper table/figure on the simulator
@@ -113,6 +125,9 @@ pub fn dispatch(args: &[String]) -> Result<()> {
         // Hidden: the subprocess side of `--launch processes`, spawned by
         // the launch manager (never by hand — absent from HELP).
         "worker" => cmd_worker(rest),
+        "serve" => cmd_serve(rest),
+        "submit" => cmd_submit(rest),
+        "jobs" => cmd_jobs(rest),
         "queries" => cmd_queries(rest),
         "bench" => cmd_bench(rest),
         "bench-check" => cmd_bench_check(rest),
@@ -182,6 +197,21 @@ fn cmd_scenarios(args: &[String]) -> Result<()> {
 fn cmd_worker(args: &[String]) -> Result<()> {
     let a = ArgParser::parse(args, &[])?;
     crate::workflow::commands::worker(&a)
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let a = ArgParser::parse(args, &[])?;
+    crate::service::serve(&a)
+}
+
+fn cmd_submit(args: &[String]) -> Result<()> {
+    let a = ArgParser::parse(args, &[])?;
+    crate::service::submit(&a)
+}
+
+fn cmd_jobs(args: &[String]) -> Result<()> {
+    let a = ArgParser::parse(args, &[])?;
+    crate::service::jobs(&a)
 }
 
 fn cmd_queries(args: &[String]) -> Result<()> {

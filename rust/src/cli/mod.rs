@@ -11,6 +11,9 @@
 //! emproc scenarios --out DIR [--launch processes] # the strategy matrix
 //! emproc bench <table1|table2|fig3|...|all>     # regenerate paper results
 //! emproc queries  --out FILE [--aerodromes N]   # §III.B query generation
+//! emproc serve    --dir DIR [--addr HOST:PORT]  # emprocd job daemon
+//! emproc submit   --addr A --spec JSON          # submit + stream one job
+//! emproc jobs     --addr A                      # list daemon jobs
 //! emproc info                                   # artifact + env report
 //! ```
 //!

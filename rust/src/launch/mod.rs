@@ -12,13 +12,21 @@
 //! [`protocol`]), drives them with the *same* clock-generic
 //! [`crate::sched`] core the in-process executor uses, and assembles the
 //! same [`SchedTrace`] — so in-process and multi-process runs of one
-//! scenario are directly comparable, grant for grant.
+//! scenario are directly comparable, grant for grant. The manager loop
+//! is written against the [`transport`] trait pair
+//! ([`Transport`]/[`WorkerConn`]), so the same loop drives local piped
+//! subprocesses ([`TransportKind::Stdio`]) and workers that dial back
+//! over TCP ([`TransportKind::Tcp`]) — byte-identical outputs, grant
+//! accounting, retry semantics, and journal appends either way.
 //!
 //! Failure discipline (the whole point of a real launch layer): a worker
 //! that exits without its final `trace` line — crash, kill, panic — is a
 //! run **error** carrying the worker's captured stderr, never a silently
 //! truncated `Ok` trace. A `result err` from any worker aborts the run
-//! first-error style, exactly like the in-process executor.
+//! first-error style, exactly like the in-process executor. Every
+//! worker must introduce itself with a versioned `hello` handshake
+//! before its `ready` is accepted; a version or stage mismatch is a
+//! typed [`ProtocolError`].
 //!
 //! Crash *tolerance* sits on top of that discipline (see
 //! [`crate::recovery`]): with [`RunOptions::max_retries`] > 0, a
@@ -35,33 +43,36 @@
 //! a node loss. Every completed grant can be journaled through
 //! [`RunOptions::journal`] for `--resume`.
 
-/// Line protocol between manager and worker subprocesses.
+/// Line protocol between manager and workers (stdio and TCP alike).
 pub mod protocol;
-/// The worker-side loop of the stdio protocol.
+/// Transports: stdio pipes and TCP dial-back under one trait pair.
+pub mod transport;
+/// The worker-side loop of the launch protocol.
 pub mod worker;
 
-pub use worker::worker_loop;
+pub use protocol::{ProtocolError, PROTO_VERSION};
+pub use transport::{Transport, TransportKind, WorkerConn};
+pub use worker::{worker_loop, WorkerEndpoint};
 
 use crate::dist::distribute_costed;
 use crate::recovery::{JournalEvent, JournalWriter};
 use crate::sched::{Manager, WorkerLog};
 use crate::selfsched::{AllocMode, SchedTrace, SelfSchedConfig};
 use crate::triples::TriplesConfig;
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use protocol::{accumulate_stats, WorkerMsg};
-use std::io::{BufRead, BufReader, Read, Write};
 use std::path::PathBuf;
-use std::process::{Child as OsChild, ChildStdin, Command, ExitStatus, Stdio};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+use transport::{transport_for, Event};
 
 /// Where a scenario's stage work runs.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum LaunchMode {
     /// Worker threads inside this process (the classic `exec` backend).
+    #[default]
     InProcess,
-    /// Real worker subprocesses over the stdio [`protocol`].
+    /// Real worker subprocesses over the launch [`protocol`].
     Processes,
 }
 
@@ -81,6 +92,29 @@ impl LaunchMode {
             "processes" | "procs" => LaunchMode::Processes,
             other => bail!("unknown launch mode '{other}' (inprocess|processes)"),
         })
+    }
+}
+
+/// Full launch-layer selection for a stage run: which backend, and — for
+/// the subprocess backend — which wire the protocol runs over. The
+/// default is in-process worker threads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Launch {
+    /// Worker threads in-process, or real worker subprocesses.
+    pub mode: LaunchMode,
+    /// The wire for [`LaunchMode::Processes`] (ignored in-process).
+    pub transport: TransportKind,
+}
+
+impl Launch {
+    /// In-process worker threads (the default).
+    pub fn in_process() -> Self {
+        Launch::default()
+    }
+
+    /// Worker subprocesses speaking the [`protocol`] over `transport`.
+    pub fn processes(transport: TransportKind) -> Self {
+        Launch { mode: LaunchMode::Processes, transport }
     }
 }
 
@@ -153,76 +187,116 @@ impl LaunchOutcome {
     }
 }
 
-/// Per-run recovery and cost knobs for [`run_processes`].
-#[derive(Debug, Default)]
-pub struct RunOptions<'a> {
+/// Default deadline for every worker's `ready` (stage init — e.g. model
+/// compilation — happens before it and is not counted as task time).
+const READY_TIMEOUT: Duration = Duration::from_secs(120);
+/// Default deadline for workers to seal their session with `trace` after
+/// the manager closes its half of the connection.
+const TRACE_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Per-run options for [`run_processes`]: transport choice, recovery and
+/// cost knobs, protocol deadlines. `Default` is a strict (no-retry)
+/// stdio run with the standard deadlines; chain the builder-style
+/// setters for anything else:
+///
+/// ```ignore
+/// RunOptions::default().transport(TransportKind::Tcp).max_retries(2)
+/// ```
+#[derive(Debug)]
+pub struct RunOptions {
+    /// Which wire the protocol runs over (see [`TransportKind`]).
+    pub transport: TransportKind,
     /// Grant-level retries per task when a self-scheduled or stealing
     /// worker dies mid-run (0 = the strict PR-4 behavior: any death
     /// fails the run). Plain batch runs ignore this and always fail fast.
     pub max_retries: u32,
     /// Journal to append one [`JournalEvent::Ok`] per completed grant
     /// (and one [`JournalEvent::Retry`] per requeued task) to, fsync'd —
-    /// the durable state `--resume` replays.
-    pub journal: Option<&'a mut JournalWriter>,
+    /// the durable state `--resume` replays. Owned: the journal closes
+    /// when the run ends.
+    pub journal: Option<JournalWriter>,
     /// Per-task cost estimates indexed by task id (see
     /// [`crate::dist::CostEstimate::as_slice`]), consumed by
     /// [`crate::dist::Distribution::Lpt`] queue packing under batch and
     /// steal modes. Empty = unit costs.
     pub cost: Vec<f64>,
+    /// How long workers get to connect and print `ready`.
+    pub ready_timeout: Duration,
+    /// How long workers get to seal their session with `trace`.
+    pub trace_timeout: Duration,
+    /// Stage name workers must announce in their `hello` handshake
+    /// (empty = accept any stage, e.g. for scripted stand-ins).
+    pub stage: String,
 }
 
-/// How long workers get to print `ready` (stage init — e.g. model
-/// compilation — happens before it and is not counted as task time).
-const READY_TIMEOUT: Duration = Duration::from_secs(120);
-/// How long workers get to seal their session with `trace` after the
-/// manager closes their stdin.
-const TRACE_TIMEOUT: Duration = Duration::from_secs(60);
-
-/// One event from a worker's stdout-reader thread.
-enum Event {
-    Msg(WorkerMsg),
-    /// A stdout line that did not parse.
-    Malformed(String),
-    /// stdout closed: the worker is exiting (or dead).
-    Eof,
-}
-
-/// Parent-side handle on one worker subprocess.
-struct WorkerProc {
-    proc: OsChild,
-    stdin: Option<ChildStdin>,
-    stderr_buf: Arc<Mutex<String>>,
-    stderr_thread: Option<std::thread::JoinHandle<()>>,
-    /// Final `trace` line received.
-    traced: bool,
-    /// Exit status, once the worker has been reaped (mid-run deaths are
-    /// reaped immediately so their stderr can be captured for the retry
-    /// accounting).
-    reaped: Option<ExitStatus>,
-}
-
-impl WorkerProc {
-    /// Reap the process (idempotent) and finish the stderr capture;
-    /// returns the captured stderr (`"<empty>"` when there was none).
-    fn reap(&mut self) -> String {
-        if self.reaped.is_none() {
-            self.reaped = self.proc.wait().ok();
-        }
-        if let Some(h) = self.stderr_thread.take() {
-            let _ = h.join();
-        }
-        let text = self
-            .stderr_buf
-            .lock()
-            .unwrap_or_else(std::sync::PoisonError::into_inner)
-            .trim()
-            .to_string();
-        if text.is_empty() {
-            "<empty>".to_string()
-        } else {
-            text
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions {
+            transport: TransportKind::Stdio,
+            max_retries: 0,
+            journal: None,
+            cost: Vec::new(),
+            ready_timeout: READY_TIMEOUT,
+            trace_timeout: TRACE_TIMEOUT,
+            stage: String::new(),
         }
     }
+}
+
+impl RunOptions {
+    /// Run over `transport` (default: [`TransportKind::Stdio`]).
+    pub fn transport(mut self, transport: TransportKind) -> Self {
+        self.transport = transport;
+        self
+    }
+
+    /// Allow up to `n` grant-level retries per task on mid-run deaths.
+    pub fn max_retries(mut self, n: u32) -> Self {
+        self.max_retries = n;
+        self
+    }
+
+    /// Journal completed grants (and retries) into `journal`.
+    pub fn journal(mut self, journal: JournalWriter) -> Self {
+        self.journal = Some(journal);
+        self
+    }
+
+    /// Journal into `journal` when present — stage recovery hands the
+    /// writer over as an `Option`.
+    pub fn journal_opt(mut self, journal: Option<JournalWriter>) -> Self {
+        self.journal = journal;
+        self
+    }
+
+    /// Per-task cost estimates for LPT queue packing.
+    pub fn cost(mut self, cost: Vec<f64>) -> Self {
+        self.cost = cost;
+        self
+    }
+
+    /// Deadline for every worker's `ready`.
+    pub fn ready_timeout(mut self, d: Duration) -> Self {
+        self.ready_timeout = d;
+        self
+    }
+
+    /// Deadline for the final `trace` seals.
+    pub fn trace_timeout(mut self, d: Duration) -> Self {
+        self.trace_timeout = d;
+        self
+    }
+
+    /// Require workers to announce `stage` in their `hello` handshake.
+    pub fn stage(mut self, stage: &str) -> Self {
+        self.stage = stage.to_string();
+        self
+    }
+}
+
+/// Write one grant line to a worker; false when its connection is gone.
+fn send_grant(conn: &mut dyn WorkerConn, tasks: &[usize]) -> bool {
+    conn.send_line(&protocol::grant_line(tasks))
 }
 
 /// Render every recovered death's stderr for a retries-exhausted error —
@@ -234,15 +308,6 @@ fn render_deaths(deaths: &[(usize, String)]) -> String {
         s.push_str(&format!(" [worker {w}: {stderr}]"));
     }
     s
-}
-
-/// Write one grant line to a worker; false when its stdin is gone.
-fn send_grant(child: &mut WorkerProc, tasks: &[usize]) -> bool {
-    let Some(stdin) = child.stdin.as_mut() else {
-        return false;
-    };
-    let line = protocol::grant_line(tasks);
-    writeln!(stdin, "{line}").and_then(|()| stdin.flush()).is_ok()
 }
 
 /// Next message for idle worker `w` under either dynamic mode: packed
@@ -266,15 +331,20 @@ fn next_grant(mgr: &mut Manager<'_>, steal: bool, w: usize, now_s: f64) -> Optio
 /// queues (single-task grant-on-completion via [`Manager::take_batch`];
 /// steals counted, `messages_sent` 0 like any batch run).
 ///
+/// The wire is chosen by [`RunOptions::transport`]: local stdio pipes or
+/// TCP dial-back — the manager loop, grant accounting, retry semantics,
+/// and journal appends are identical either way.
+///
 /// `ntasks` is the size of the stage's full task list (what workers
 /// enumerate and `ready` is checked against); `ordered` may be a subset
 /// of it when a resumed run skips already-journaled tasks.
 ///
 /// Returns the run's [`SchedTrace`] plus the summed stage counters.
 /// Any worker failure — a reported task error, a crash or kill without
-/// the final `trace` line, a protocol violation, a task-list mismatch —
-/// fails the run with the worker's captured stderr attached, except a
-/// mid-run self-scheduled or stealing death with
+/// the final `trace` line, a protocol violation (including a missing or
+/// version-mismatched `hello`, a typed [`ProtocolError`]), a task-list
+/// mismatch — fails the run with the worker's captured stderr attached,
+/// except a mid-run self-scheduled or stealing death with
 /// [`RunOptions::max_retries`] > 0, which requeues the dead worker's
 /// grant onto the survivors instead (stealing survivors also drain its
 /// unstarted queue).
@@ -284,7 +354,7 @@ pub fn run_processes(
     nworkers: usize,
     alloc: AllocMode,
     cmd: &WorkerCommand,
-    mut opts: RunOptions<'_>,
+    mut opts: RunOptions,
 ) -> Result<LaunchOutcome> {
     assert!(nworkers >= 1, "need at least one worker");
     assert!(
@@ -293,88 +363,57 @@ pub fn run_processes(
     );
 
     let (tx, rx) = mpsc::channel::<(usize, Event)>();
-    let mut children: Vec<WorkerProc> = Vec::with_capacity(nworkers);
-    let mut spawn_failure: Option<anyhow::Error> = None;
-    for w in 0..nworkers {
-        let spawned = Command::new(&cmd.program)
-            .args(&cmd.args)
-            .stdin(Stdio::piped())
-            .stdout(Stdio::piped())
-            .stderr(Stdio::piped())
-            .spawn()
-            .with_context(|| format!("spawning worker {w} ({})", cmd.program.display()));
-        let mut proc = match spawned {
-            Ok(p) => p,
-            Err(e) => {
-                spawn_failure = Some(e);
-                break;
-            }
-        };
-        let stdin = proc.stdin.take();
-        // Both are piped in the Command above, so `None` is impossible;
-        // treat it as a spawn failure rather than panicking.
-        let (Some(stdout), Some(stderr)) = (proc.stdout.take(), proc.stderr.take()) else {
-            spawn_failure = Some(anyhow::anyhow!("worker {w}: stdio pipes missing after spawn"));
-            break;
-        };
-        let tx2 = tx.clone();
-        std::thread::spawn(move || {
-            for line in BufReader::new(stdout).lines() {
-                let Ok(line) = line else { break };
-                if line.trim().is_empty() {
-                    continue;
-                }
-                let ev = match WorkerMsg::parse(&line) {
-                    Ok(m) => Event::Msg(m),
-                    Err(_) => Event::Malformed(line),
-                };
-                if tx2.send((w, ev)).is_err() {
-                    return; // manager gone
-                }
-            }
-            let _ = tx2.send((w, Event::Eof));
-        });
-        let stderr_buf = Arc::new(Mutex::new(String::new()));
-        let buf2 = Arc::clone(&stderr_buf);
-        let stderr_thread = std::thread::spawn(move || {
-            let mut text = String::new();
-            let _ = BufReader::new(stderr).read_to_string(&mut text);
-            *buf2.lock().unwrap_or_else(std::sync::PoisonError::into_inner) = text;
-        });
-        children.push(WorkerProc {
-            proc,
-            stdin,
-            stderr_buf,
-            stderr_thread: Some(stderr_thread),
-            traced: false,
-            reaped: None,
-        });
-    }
+    let mut conns =
+        transport_for(opts.transport).launch(cmd, nworkers, opts.ready_timeout, &tx)?;
     drop(tx);
 
     // (worker index, what went wrong) — stderr is attached during cleanup.
-    let mut failure: Option<(usize, String)> = None;
-    if let Some(e) = &spawn_failure {
-        failure = Some((children.len(), format!("{e:#}")));
-    }
+    let mut failure: Option<(usize, anyhow::Error)> = None;
+    // Final `trace` seals received, per worker.
+    let mut traced = vec![false; nworkers];
+    // `hello` handshakes validated, per worker.
+    let mut helloed = vec![false; nworkers];
 
-    // Phase 1: wait for every worker's `ready` (init + task enumeration).
-    let ready_deadline = Instant::now() + READY_TIMEOUT;
+    // Phase 1: every worker's `hello` handshake (version + stage
+    // checked), then its `ready` (init + task enumeration).
+    let ready_deadline = Instant::now() + opts.ready_timeout;
     let mut ready = vec![false; nworkers];
     let mut nready = 0usize;
-    while failure.is_none() && nready < children.len() {
+    while failure.is_none() && nready < nworkers {
         let now = Instant::now();
         if now >= ready_deadline {
             let w = ready.iter().position(|r| !r).unwrap_or(0);
-            failure = Some((w, format!("not ready within {READY_TIMEOUT:?}")));
+            failure = Some((w, anyhow!("not ready within {:?}", opts.ready_timeout)));
             break;
         }
         match rx.recv_timeout(ready_deadline - now) {
-            Ok((w, Event::Msg(WorkerMsg::Ready { ntasks: n }))) => {
-                if n != ntasks {
+            Ok((w, Event::Msg(WorkerMsg::Hello { version, stage, .. }))) => {
+                if helloed[w] {
+                    failure = Some((w, anyhow!("sent a duplicate hello")));
+                } else if version != PROTO_VERSION {
                     failure = Some((
                         w,
-                        format!(
+                        ProtocolError::VersionMismatch { ours: PROTO_VERSION, theirs: version }
+                            .into(),
+                    ));
+                } else if !opts.stage.is_empty() && stage != opts.stage {
+                    failure = Some((
+                        w,
+                        ProtocolError::StageMismatch { ours: opts.stage.clone(), theirs: stage }
+                            .into(),
+                    ));
+                } else {
+                    helloed[w] = true;
+                }
+            }
+            Ok((w, Event::Msg(WorkerMsg::Ready { ntasks: n }))) => {
+                if !helloed[w] {
+                    failure =
+                        Some((w, ProtocolError::MissingHello { got: "ready".into() }.into()));
+                } else if n != ntasks {
+                    failure = Some((
+                        w,
+                        anyhow!(
                             "enumerated {n} task(s) but the manager has {ntasks} — \
                              stage inputs out of sync"
                         ),
@@ -385,28 +424,28 @@ pub fn run_processes(
                 }
             }
             Ok((w, Event::Msg(WorkerMsg::Err { message }))) => {
-                failure = Some((w, format!("failed during init: {message}")));
+                failure = Some((w, anyhow!("failed during init: {message}")));
             }
             Ok((w, Event::Msg(WorkerMsg::Trace { .. }))) => {
-                children[w].traced = true;
+                traced[w] = true;
                 if failure.is_none() {
-                    failure = Some((w, "exited before the run began".into()));
+                    failure = Some((w, anyhow!("exited before the run began")));
                 }
             }
             Ok((w, Event::Msg(WorkerMsg::Ok { .. }))) => {
-                failure = Some((w, "sent a result before any grant".into()));
+                failure = Some((w, anyhow!("sent a result before any grant")));
             }
             Ok((w, Event::Malformed(line))) => {
-                failure = Some((w, format!("sent an unparseable line {line:?}")));
+                failure = Some((w, anyhow!("sent an unparseable line {line:?}")));
             }
             Ok((w, Event::Eof)) => {
-                if !children[w].traced && failure.is_none() {
-                    failure = Some((w, "exited without a final trace line".into()));
+                if !traced[w] && failure.is_none() {
+                    failure = Some((w, anyhow!("exited without a final trace line")));
                 }
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {}
             Err(mpsc::RecvTimeoutError::Disconnected) => {
-                failure = Some((0, "all workers disconnected before becoming ready".into()));
+                failure = Some((0, anyhow!("all workers disconnected before becoming ready")));
             }
         }
     }
@@ -455,13 +494,13 @@ pub fn run_processes(
                 for w in 0..nworkers {
                     let now = job_start.elapsed().as_secs_f64();
                     let Some(msg) = next_grant(&mut mgr, steal, w, now) else { continue };
-                    delivered[w] = send_grant(&mut children[w], &msg);
+                    delivered[w] = send_grant(&mut *conns[w], &msg);
                     if !delivered[w] {
                         if opts.max_retries > 0 {
                             // Dying worker: its Eof event requeues this.
                             continue;
                         }
-                        failure = Some((w, "hung up before receiving initial work".into()));
+                        failure = Some((w, anyhow!("hung up before receiving initial work")));
                         mgr.abort();
                         break;
                     }
@@ -480,7 +519,7 @@ pub fn run_processes(
                             let n = mgr.complete(w, now);
                             if n == 0 {
                                 failure =
-                                    Some((w, "sent a result with no message in flight".into()));
+                                    Some((w, anyhow!("sent a result with no message in flight")));
                                 continue;
                             }
                             accounted[w] += n;
@@ -496,15 +535,14 @@ pub fn run_processes(
                                     stats: s,
                                 };
                                 if let Err(e) = j.append(&ev) {
-                                    failure =
-                                        Some((w, format!("journal append failed: {e:#}")));
+                                    failure = Some((w, anyhow!("journal append failed: {e:#}")));
                                     continue;
                                 }
                             }
                             if let Some(msg) = next_grant(&mut mgr, steal, w, now) {
-                                delivered[w] = send_grant(&mut children[w], &msg);
+                                delivered[w] = send_grant(&mut *conns[w], &msg);
                                 if !delivered[w] && opts.max_retries == 0 {
-                                    failure = Some((w, "hung up before receiving work".into()));
+                                    failure = Some((w, anyhow!("hung up before receiving work")));
                                     mgr.abort();
                                 }
                                 // With retries, the worker's Eof requeues
@@ -514,37 +552,39 @@ pub fn run_processes(
                         Ok((w, Event::Msg(WorkerMsg::Err { message }))) => {
                             mgr.complete(w, job_start.elapsed().as_secs_f64());
                             mgr.abort();
-                            failure = Some((w, format!("task failed: {message}")));
+                            failure = Some((w, anyhow!("task failed: {message}")));
                         }
                         Ok((w, Event::Msg(WorkerMsg::Trace { .. }))) => {
-                            children[w].traced = true;
-                            failure = Some((w, "sent its final trace mid-run".into()));
+                            traced[w] = true;
+                            failure = Some((w, anyhow!("sent its final trace mid-run")));
                         }
                         Ok((w, Event::Msg(WorkerMsg::Ready { .. }))) => {
-                            failure = Some((w, "sent a duplicate ready".into()));
+                            failure = Some((w, anyhow!("sent a duplicate ready")));
+                        }
+                        Ok((w, Event::Msg(WorkerMsg::Hello { .. }))) => {
+                            failure = Some((w, anyhow!("sent a hello mid-run")));
                         }
                         Ok((w, Event::Malformed(line))) => {
-                            failure = Some((w, format!("sent an unparseable line {line:?}")));
+                            failure = Some((w, anyhow!("sent an unparseable line {line:?}")));
                         }
                         Ok((w, Event::Eof)) => {
-                            if children[w].traced {
+                            if traced[w] {
                                 // Sealed and gone mid-run: already failed
                                 // above when the trace arrived.
                             } else if opts.max_retries == 0 {
-                                failure =
-                                    Some((w, "exited without a final trace line".into()));
+                                failure = Some((w, anyhow!("exited without a final trace line")));
                             } else {
                                 // Mid-run death with retry enabled: take
                                 // the worker out of the pool, requeue its
                                 // outstanding grant, and re-fan-out.
-                                // Eof can also mean an unreadable stdout
-                                // on a still-live process, so close its
-                                // stdin and kill before reaping — wait()
+                                // Eof can also mean an unreadable stream
+                                // on a still-live process, so close our
+                                // half and kill before reaping — wait()
                                 // on a live worker would hang the run.
                                 alive[w] = false;
-                                children[w].stdin = None;
-                                let _ = children[w].proc.kill();
-                                deaths.push((w, children[w].reap()));
+                                conns[w].finish();
+                                conns[w].kill();
+                                deaths.push((w, conns[w].reap()));
                                 // A grant the dying worker never received
                                 // was never attempted — requeue it without
                                 // burning a retry (or a journal record).
@@ -563,7 +603,7 @@ pub fn run_processes(
                                         if let Err(e) = j.append(&ev) {
                                             failure = Some((
                                                 w,
-                                                format!("journal append failed: {e:#}"),
+                                                anyhow!("journal append failed: {e:#}"),
                                             ));
                                             break;
                                         }
@@ -571,7 +611,7 @@ pub fn run_processes(
                                     if attempts[t] > opts.max_retries {
                                         failure = Some((
                                             w,
-                                            format!(
+                                            anyhow!(
                                                 "task {t} lost to {} worker death(s), \
                                                  exhausting --max-retries {}; {}",
                                                 attempts[t],
@@ -595,13 +635,13 @@ pub fn run_processes(
                                     if let Some(msg) = next_grant(&mut mgr, steal, w2, now) {
                                         // A failed send is another dying
                                         // worker; its own Eof requeues.
-                                        delivered[w2] = send_grant(&mut children[w2], &msg);
+                                        delivered[w2] = send_grant(&mut *conns[w2], &msg);
                                     }
                                 }
                                 if mgr.outstanding() == 0 && mgr.remaining() > 0 {
                                     failure = Some((
                                         w,
-                                        format!(
+                                        anyhow!(
                                             "no surviving workers for {} unfinished task(s); {}",
                                             mgr.remaining(),
                                             render_deaths(&deaths)
@@ -614,7 +654,7 @@ pub fn run_processes(
                         Err(mpsc::RecvTimeoutError::Disconnected) => {
                             failure = Some((
                                 0,
-                                format!(
+                                anyhow!(
                                     "all workers disconnected with {} grant(s) outstanding",
                                     mgr.outstanding()
                                 ),
@@ -639,8 +679,8 @@ pub fn run_processes(
                     let now = job_start.elapsed().as_secs_f64();
                     log.record_start(w, now);
                     starts[w] = now;
-                    if !send_grant(&mut children[w], queue) {
-                        failure = Some((w, "hung up before receiving its queue".into()));
+                    if !send_grant(&mut *conns[w], queue) {
+                        failure = Some((w, anyhow!("hung up before receiving its queue")));
                         break;
                     }
                     pending += 1;
@@ -665,33 +705,35 @@ pub fn run_processes(
                                     stats: s,
                                 };
                                 if let Err(e) = j.append(&ev) {
-                                    failure =
-                                        Some((w, format!("journal append failed: {e:#}")));
+                                    failure = Some((w, anyhow!("journal append failed: {e:#}")));
                                 }
                             }
                         }
                         Ok((w, Event::Msg(WorkerMsg::Err { message }))) => {
-                            failure = Some((w, format!("task failed: {message}")));
+                            failure = Some((w, anyhow!("task failed: {message}")));
                         }
                         Ok((w, Event::Msg(WorkerMsg::Trace { .. }))) => {
-                            children[w].traced = true;
-                            failure = Some((w, "sent its final trace mid-run".into()));
+                            traced[w] = true;
+                            failure = Some((w, anyhow!("sent its final trace mid-run")));
                         }
                         Ok((w, Event::Msg(WorkerMsg::Ready { .. }))) => {
-                            failure = Some((w, "sent a duplicate ready".into()));
+                            failure = Some((w, anyhow!("sent a duplicate ready")));
+                        }
+                        Ok((w, Event::Msg(WorkerMsg::Hello { .. }))) => {
+                            failure = Some((w, anyhow!("sent a hello mid-run")));
                         }
                         Ok((w, Event::Malformed(line))) => {
-                            failure = Some((w, format!("sent an unparseable line {line:?}")));
+                            failure = Some((w, anyhow!("sent an unparseable line {line:?}")));
                         }
                         Ok((w, Event::Eof)) => {
-                            if !children[w].traced {
-                                failure = Some((w, "exited without a final trace line".into()));
+                            if !traced[w] {
+                                failure = Some((w, anyhow!("exited without a final trace line")));
                             }
                         }
                         Err(mpsc::RecvError) => {
                             failure = Some((
                                 0,
-                                format!("all workers disconnected, {pending} report(s) pending"),
+                                anyhow!("all workers disconnected, {pending} report(s) pending"),
                             ));
                         }
                     }
@@ -701,12 +743,13 @@ pub fn run_processes(
         }
     }
 
-    // Phase 3: shutdown — close stdins, collect every *surviving*
-    // worker's `trace` seal and check it against the manager's own
-    // accounting (recovered mid-run deaths have no seal to give; their
-    // unacknowledged work was requeued and accounted elsewhere).
-    for c in &mut children {
-        c.stdin = None;
+    // Phase 3: shutdown — close our half of every connection, collect
+    // every *surviving* worker's `trace` seal and check it against the
+    // manager's own accounting (recovered mid-run deaths have no seal to
+    // give; their unacknowledged work was requeued and accounted
+    // elsewhere).
+    for c in &mut conns {
+        c.finish();
     }
     // With retries on a self-scheduled or stealing run, a worker that
     // dies *after* its last acknowledgment but before its seal is the
@@ -717,31 +760,28 @@ pub fn run_processes(
     let tolerate_seal_loss = opts.max_retries > 0
         && matches!(alloc, AllocMode::SelfSched(_) | AllocMode::Steal(_));
     if failure.is_none() {
-        let deadline = Instant::now() + TRACE_TIMEOUT;
+        let deadline = Instant::now() + opts.trace_timeout;
         loop {
             if failure.is_some() {
                 break;
             }
-            let unsealed = children
-                .iter()
-                .enumerate()
-                .find_map(|(w, c)| (alive[w] && !c.traced).then_some(w));
+            let unsealed = (0..nworkers).find(|&w| alive[w] && !traced[w]);
             let Some(first_unsealed) = unsealed else { break };
             let now = Instant::now();
             if now >= deadline {
                 failure = Some((
                     first_unsealed,
-                    format!("no final trace line within {TRACE_TIMEOUT:?}"),
+                    anyhow!("no final trace line within {:?}", opts.trace_timeout),
                 ));
                 break;
             }
             match rx.recv_timeout(deadline - now) {
                 Ok((w, Event::Msg(WorkerMsg::Trace { tasks_done }))) => {
-                    children[w].traced = true;
+                    traced[w] = true;
                     if tasks_done != accounted[w] {
                         failure = Some((
                             w,
-                            format!(
+                            anyhow!(
                                 "trace reports {tasks_done} task(s) but the manager \
                                  accounted {}",
                                 accounted[w]
@@ -750,31 +790,28 @@ pub fn run_processes(
                     }
                 }
                 Ok((w, Event::Eof)) => {
-                    if !children[w].traced {
+                    if !traced[w] {
                         if tolerate_seal_loss {
                             // Post-completion node loss: everything the
                             // worker did was acked, nothing is left to
                             // requeue — only the seal is gone.
                             alive[w] = false;
                         } else {
-                            failure = Some((w, "exited without a final trace line".into()));
+                            failure = Some((w, anyhow!("exited without a final trace line")));
                         }
                     }
                 }
                 Ok((w, Event::Msg(_))) => {
-                    failure = Some((w, "sent an unexpected line after shutdown".into()));
+                    failure = Some((w, anyhow!("sent an unexpected line after shutdown")));
                 }
                 Ok((w, Event::Malformed(line))) => {
-                    failure = Some((w, format!("sent an unparseable line {line:?}")));
+                    failure = Some((w, anyhow!("sent an unparseable line {line:?}")));
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    let w = children
-                        .iter()
-                        .enumerate()
-                        .find_map(|(w, c)| (alive[w] && !c.traced).then_some(w));
+                    let w = (0..nworkers).find(|&w| alive[w] && !traced[w]);
                     if let Some(w) = w {
-                        failure = Some((w, "exited without a final trace line".into()));
+                        failure = Some((w, anyhow!("exited without a final trace line")));
                     }
                 }
             }
@@ -786,40 +823,29 @@ pub fn run_processes(
     // when they happened; their (expectedly unclean) exit codes are not
     // re-judged here.
     if failure.is_some() {
-        for c in &mut children {
-            let _ = c.proc.kill();
+        for c in &mut conns {
+            c.kill();
         }
     }
-    for c in &mut children {
+    for c in &mut conns {
         c.reap();
     }
     if failure.is_none() {
-        for (w, c) in children.iter().enumerate() {
+        for (w, c) in conns.iter().enumerate() {
             if !alive[w] {
                 continue;
             }
-            if let Some(s) = c.reaped {
-                if !s.success() {
-                    failure = Some((w, format!("exited with {s} after completing its work")));
-                    break;
-                }
+            if let Some(msg) = c.exit_failure() {
+                failure = Some((w, anyhow!(msg)));
+                break;
             }
         }
     }
 
-    if let Some((w, msg)) = failure {
-        let stderr = children
-            .get(w)
-            .map(|c| {
-                c.stderr_buf
-                    .lock()
-                    .unwrap_or_else(std::sync::PoisonError::into_inner)
-                    .trim()
-                    .to_string()
-            })
-            .unwrap_or_default();
-        let stderr = if stderr.is_empty() { "<empty>".to_string() } else { stderr };
-        bail!("worker {w}: {msg}; worker stderr: {stderr}");
+    if let Some((w, err)) = failure {
+        let stderr =
+            conns.get(w).map_or_else(|| "<empty>".to_string(), |c| c.stderr());
+        return Err(err.context(format!("worker {w} failed (worker stderr: {stderr})")));
     }
     let trace = trace.context("trace assembled on every non-failure path")?;
     Ok(LaunchOutcome { trace, stats })
@@ -839,11 +865,12 @@ mod tests {
         }
     }
 
-    /// A well-behaved scripted worker for `n` tasks: acks every grant
-    /// with `result ok <tasks_in_grant> 2` and seals with a trace.
+    /// A well-behaved scripted worker for `n` tasks: says hello, acks
+    /// every grant with `result ok <tasks_in_grant> 2` and seals with a
+    /// trace.
     fn good_script(n: usize) -> String {
         format!(
-            "echo 'ready {n}'; done=0; \
+            "echo 'hello 1 - sh'; echo 'ready {n}'; done=0; \
              while read -r cmd rest; do \
                [ \"$cmd\" = grant ] || continue; \
                c=0; for t in $rest; do c=$((c+1)); done; \
@@ -937,7 +964,7 @@ mod tests {
             3,
             AllocMode::Steal(crate::dist::Distribution::Block),
             &sh_worker(&die_once_on_task0_script(n, &lock)),
-            RunOptions { max_retries: 2, ..Default::default() },
+            RunOptions::default().max_retries(2),
         )
         .unwrap();
         assert!(lock.exists(), "the scripted worker must actually have died");
@@ -957,8 +984,10 @@ mod tests {
         // keeps any death fatal, stealing or not.
         let n = 4;
         let ordered: Vec<usize> = (0..n).collect();
-        let script =
-            format!("echo 'ready {n}'; read -r line; echo 'steal death' >&2; kill -9 $$");
+        let script = format!(
+            "echo 'hello 1 - sh'; echo 'ready {n}'; read -r line; \
+             echo 'steal death' >&2; kill -9 $$"
+        );
         let err = run_processes(
             n,
             &ordered,
@@ -986,7 +1015,7 @@ mod tests {
             2,
             AllocMode::Batch(crate::dist::Distribution::Lpt),
             &sh_worker(&good_script(n)),
-            RunOptions { cost: vec![10.0, 2.0, 2.0, 2.0, 2.0], ..Default::default() },
+            RunOptions::default().cost(vec![10.0, 2.0, 2.0, 2.0, 2.0]),
         )
         .unwrap();
         out.trace.check_invariants(n).unwrap();
@@ -1014,8 +1043,10 @@ mod tests {
         // stderr — never report a truncated Ok trace.
         let n = 6;
         let ordered: Vec<usize> = (0..n).collect();
-        let script =
-            format!("echo 'ready {n}'; read -r line; echo 'about to vanish' >&2; kill -9 $$");
+        let script = format!(
+            "echo 'hello 1 - sh'; echo 'ready {n}'; read -r line; \
+             echo 'about to vanish' >&2; kill -9 $$"
+        );
         let err = run_processes(n, &ordered, 2, ss(1), &sh_worker(&script), RunOptions::default())
             .unwrap_err();
         let text = format!("{err:#}");
@@ -1028,7 +1059,7 @@ mod tests {
     /// `mkdir` lock, so the retried task 0 completes on a survivor.
     fn die_once_on_task0_script(n: usize, lock_dir: &std::path::Path) -> String {
         format!(
-            "echo 'ready {n}'; done=0; \
+            "echo 'hello 1 - sh'; echo 'ready {n}'; done=0; \
              while read -r cmd rest; do \
                [ \"$cmd\" = grant ] || continue; \
                for t in $rest; do \
@@ -1063,14 +1094,14 @@ mod tests {
         let names: Vec<String> = (0..n).map(|i| format!("t{i}")).collect();
         let plan =
             crate::recovery::JournalPlan::new("organize", names.iter().map(String::as_str));
-        let mut journal = JournalWriter::create(&jpath, &plan).unwrap();
+        let journal = JournalWriter::create(&jpath, &plan).unwrap();
         let out = run_processes(
             n,
             &ordered,
             3,
             ss(1),
             &sh_worker(&die_once_on_task0_script(n, &lock)),
-            RunOptions { max_retries: 2, journal: Some(&mut journal), ..Default::default() },
+            RunOptions::default().max_retries(2).journal(journal),
         )
         .unwrap();
         assert!(lock.exists(), "the scripted worker must actually have died");
@@ -1080,8 +1111,8 @@ mod tests {
         // Every task is one message, plus exactly one abandoned grant.
         assert_eq!(out.trace.messages_sent, n + 1);
         // The journal replays: one Retry for task 0 at attempt 1, and Ok
-        // records covering every task exactly once.
-        drop(journal);
+        // records covering every task exactly once. (The owned journal
+        // was closed when the run's options were dropped.)
         let events = crate::recovery::load_verified(&jpath, &plan).unwrap();
         let retries: Vec<_> = events
             .iter()
@@ -1108,7 +1139,7 @@ mod tests {
         let n = 4;
         let ordered: Vec<usize> = (0..n).collect();
         let script = format!(
-            "echo 'ready {n}'; \
+            "echo 'hello 1 - sh'; echo 'ready {n}'; \
              while read -r cmd rest; do \
                [ \"$cmd\" = grant ] || continue; \
                for t in $rest; do \
@@ -1124,13 +1155,13 @@ mod tests {
             3,
             ss(1),
             &sh_worker(&script),
-            RunOptions { max_retries: 1, ..Default::default() },
+            RunOptions::default().max_retries(1),
         )
         .unwrap_err();
         let text = format!("{err:#}");
         assert!(text.contains("exhausting --max-retries 1"), "{text}");
-        // Both dead workers' stderr (the final bail also re-attaches the
-        // last death's, so at least the two distinct attempts appear).
+        // Both dead workers' stderr (the final report also re-attaches
+        // the last death's, so at least the two distinct attempts appear).
         assert!(
             text.matches("boom from pid").count() >= 2,
             "both attempts' stderr must be attached: {text}"
@@ -1141,15 +1172,17 @@ mod tests {
     fn losing_every_worker_is_an_error_not_a_hang() {
         let n = 4;
         let ordered: Vec<usize> = (0..n).collect();
-        let script =
-            format!("echo 'ready {n}'; read -r line; echo 'node lost' >&2; kill -9 $$");
+        let script = format!(
+            "echo 'hello 1 - sh'; echo 'ready {n}'; read -r line; \
+             echo 'node lost' >&2; kill -9 $$"
+        );
         let err = run_processes(
             n,
             &ordered,
             2,
             ss(1),
             &sh_worker(&script),
-            RunOptions { max_retries: 5, ..Default::default() },
+            RunOptions::default().max_retries(5),
         )
         .unwrap_err();
         let text = format!("{err:#}");
@@ -1167,7 +1200,7 @@ mod tests {
         let n = 4;
         let ordered: Vec<usize> = (0..n).collect();
         let script = format!(
-            "echo 'ready {n}'; \
+            "echo 'hello 1 - sh'; echo 'ready {n}'; \
              while read -r cmd rest; do \
                [ \"$cmd\" = grant ] || continue; echo 'result ok 1'; \
              done; \
@@ -1179,7 +1212,7 @@ mod tests {
             2,
             ss(1),
             &sh_worker(&script),
-            RunOptions { max_retries: 1, ..Default::default() },
+            RunOptions::default().max_retries(1),
         )
         .unwrap();
         out.trace.check_invariants(n).unwrap();
@@ -1196,15 +1229,17 @@ mod tests {
         // matter what max_retries says.
         let n = 4;
         let ordered: Vec<usize> = (0..n).collect();
-        let script =
-            format!("echo 'ready {n}'; read -r line; echo 'batch death' >&2; kill -9 $$");
+        let script = format!(
+            "echo 'hello 1 - sh'; echo 'ready {n}'; read -r line; \
+             echo 'batch death' >&2; kill -9 $$"
+        );
         let err = run_processes(
             n,
             &ordered,
             2,
             AllocMode::Batch(crate::dist::Distribution::Cyclic),
             &sh_worker(&script),
-            RunOptions { max_retries: 5, ..Default::default() },
+            RunOptions::default().max_retries(5),
         )
         .unwrap_err();
         let text = format!("{err:#}");
@@ -1237,7 +1272,10 @@ mod tests {
     fn crashing_worker_exit_code_is_an_error_with_stderr() {
         let n = 5;
         let ordered: Vec<usize> = (0..n).collect();
-        let script = format!("echo 'ready {n}'; read -r line; echo 'exploding' >&2; exit 3");
+        let script = format!(
+            "echo 'hello 1 - sh'; echo 'ready {n}'; read -r line; \
+             echo 'exploding' >&2; exit 3"
+        );
         let err = run_processes(n, &ordered, 2, ss(1), &sh_worker(&script), RunOptions::default())
             .unwrap_err();
         let text = format!("{err:#}");
@@ -1250,7 +1288,8 @@ mod tests {
         let n = 5;
         let ordered: Vec<usize> = (0..n).collect();
         let script = format!(
-            "echo 'ready {n}'; read -r line; echo 'result err task 0: disk on fire'; \
+            "echo 'hello 1 - sh'; echo 'ready {n}'; read -r line; \
+             echo 'result err task 0: disk on fire'; \
              while read -r line; do :; done; echo 'trace 0'"
         );
         let err = run_processes(n, &ordered, 2, ss(1), &sh_worker(&script), RunOptions::default())
@@ -1261,7 +1300,8 @@ mod tests {
 
     #[test]
     fn init_failure_surfaces_with_its_message() {
-        let script = "echo 'result err worker init failed: no model'; echo 'trace 0'";
+        let script =
+            "echo 'hello 1 - sh'; echo 'result err worker init failed: no model'; echo 'trace 0'";
         let ordered: Vec<usize> = (0..4).collect();
         let err = run_processes(4, &ordered, 2, ss(1), &sh_worker(script), RunOptions::default())
             .unwrap_err();
@@ -1283,13 +1323,70 @@ mod tests {
     }
 
     #[test]
+    fn ready_without_hello_is_a_typed_protocol_error() {
+        // PR-8-era workers that skip the handshake are rejected before
+        // any grant flows — the failure downcasts to the typed error.
+        let n = 3;
+        let ordered: Vec<usize> = (0..n).collect();
+        let script = format!("echo 'ready {n}'; read -r line; echo 'trace 0'");
+        let err = run_processes(n, &ordered, 1, ss(1), &sh_worker(&script), RunOptions::default())
+            .unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("before its hello handshake"), "{text}");
+        assert_eq!(
+            err.downcast_ref::<ProtocolError>(),
+            Some(&ProtocolError::MissingHello { got: "ready".into() })
+        );
+    }
+
+    #[test]
+    fn hello_version_mismatch_is_typed_and_quotes_both_versions() {
+        let n = 3;
+        let ordered: Vec<usize> = (0..n).collect();
+        let script = format!("echo 'hello 99 - sh'; echo 'ready {n}'; read -r line; echo 'trace 0'");
+        let err = run_processes(n, &ordered, 1, ss(1), &sh_worker(&script), RunOptions::default())
+            .unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("v1") && text.contains("v99"), "{text}");
+        assert_eq!(
+            err.downcast_ref::<ProtocolError>(),
+            Some(&ProtocolError::VersionMismatch { ours: PROTO_VERSION, theirs: 99 })
+        );
+    }
+
+    #[test]
+    fn hello_stage_mismatch_is_rejected_when_a_stage_is_required() {
+        let n = 3;
+        let ordered: Vec<usize> = (0..n).collect();
+        let script = good_script(n); // says hello for stage "sh"
+        let err = run_processes(
+            n,
+            &ordered,
+            1,
+            ss(1),
+            &sh_worker(&script),
+            RunOptions::default().stage("organize"),
+        )
+        .unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("stage"), "{text}");
+        assert_eq!(
+            err.downcast_ref::<ProtocolError>(),
+            Some(&ProtocolError::StageMismatch {
+                ours: "organize".into(),
+                theirs: "sh".into()
+            })
+        );
+    }
+
+    #[test]
     fn trace_undercount_is_detected() {
         // A worker whose final trace disagrees with the manager's
         // accounting indicates lost work — must fail, not pass silently.
         let n = 4;
         let ordered: Vec<usize> = (0..n).collect();
         let script = format!(
-            "echo 'ready {n}'; \
+            "echo 'hello 1 - sh'; echo 'ready {n}'; \
              while read -r cmd rest; do \
                [ \"$cmd\" = grant ] || continue; echo 'result ok'; \
              done; \

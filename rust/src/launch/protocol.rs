@@ -1,10 +1,11 @@
-//! The line-delimited stdio protocol between the launch manager (parent
-//! process) and its worker subprocesses.
+//! The line-delimited protocol between the launch manager (parent
+//! process) and its workers, identical over stdio pipes and TCP streams.
 //!
-//! Four message kinds, one line each, all plain ASCII so a worker can be
+//! Five message kinds, one line each, all plain ASCII so a worker can be
 //! faked by a shell script in tests:
 //!
 //! ```text
+//! worker  → manager   hello <ver> <token> <stage>   handshake, before ready
 //! worker  → manager   ready <ntasks>          init done, task list enumerated
 //! manager → worker    grant <i> <i> ...       task ids into the stage's list
 //! worker  → manager   result ok <stat> ...    message done, stage counters
@@ -12,16 +13,87 @@
 //! worker  → manager   trace <tasks_done>      final line before a clean exit
 //! ```
 //!
-//! The `ready` count lets the manager verify both sides enumerated the
-//! same task list (both derive it from the same deterministic directory
-//! walk); the final `trace` line is the integrity seal — a worker that
-//! exits without one crashed or was killed, and the run must fail.
+//! The `hello` line is the versioned handshake: the manager rejects a
+//! worker whose protocol version differs from [`PROTO_VERSION`] with a
+//! typed [`ProtocolError::VersionMismatch`], and the TCP acceptor uses
+//! the `<token>` field to authenticate dial-back connections (stdio
+//! workers send the placeholder token `-`, keeping one grammar for both
+//! transports). The `ready` count lets the manager verify both sides
+//! enumerated the same task list (both derive it from the same
+//! deterministic directory walk); the final `trace` line is the
+//! integrity seal — a worker that exits without one crashed or was
+//! killed, and the run must fail.
 
 use anyhow::{bail, Context, Result};
 
-/// A message a worker writes on its stdout, one line each.
+/// The protocol version this build speaks; sent by every worker in its
+/// `hello` line and checked by the manager before `ready` is accepted.
+pub const PROTO_VERSION: u32 = 1;
+
+/// The placeholder token stdio workers send in their `hello` line: the
+/// pipe already authenticates them (the manager spawned the process), so
+/// there is nothing to check.
+pub const STDIO_TOKEN: &str = "-";
+
+/// A typed protocol-level failure, surfaced through `anyhow` so callers
+/// can `downcast_ref` to distinguish it from ordinary I/O errors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ProtocolError {
+    /// The worker's `hello` carried a different protocol version.
+    VersionMismatch {
+        /// The version this manager speaks ([`PROTO_VERSION`]).
+        ours: u32,
+        /// The version the worker announced.
+        theirs: u32,
+    },
+    /// The worker's `hello` named a different stage than the run expects.
+    StageMismatch {
+        /// The stage this run is granting tasks for.
+        ours: String,
+        /// The stage the worker announced.
+        theirs: String,
+    },
+    /// The worker sent protocol traffic before its `hello` handshake.
+    MissingHello {
+        /// The message kind that arrived instead of `hello`.
+        got: String,
+    },
+}
+
+impl std::fmt::Display for ProtocolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtocolError::VersionMismatch { ours, theirs } => write!(
+                f,
+                "protocol version mismatch: manager speaks v{ours}, worker sent hello v{theirs}"
+            ),
+            ProtocolError::StageMismatch { ours, theirs } => write!(
+                f,
+                "stage mismatch: manager is running stage '{ours}', worker said hello for stage '{theirs}'"
+            ),
+            ProtocolError::MissingHello { got } => {
+                write!(f, "worker sent '{got}' before its hello handshake")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ProtocolError {}
+
+/// A message a worker writes on its protocol stream, one line each.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum WorkerMsg {
+    /// The versioned handshake, first line on the wire. `token`
+    /// authenticates TCP dial-backs ([`STDIO_TOKEN`] over pipes);
+    /// `stage` names the stage the worker was launched for.
+    Hello {
+        /// Protocol version the worker speaks.
+        version: u32,
+        /// Dial-back authentication token (`-` over stdio).
+        token: String,
+        /// Stage name the worker will run tasks for.
+        stage: String,
+    },
     /// Init complete; the worker enumerated `ntasks` tasks.
     Ready { ntasks: usize },
     /// One granted message finished; `stats` are the stage-specific
@@ -37,6 +109,9 @@ impl WorkerMsg {
     /// Render as one protocol line (no trailing newline).
     pub fn render(&self) -> String {
         match self {
+            WorkerMsg::Hello { version, token, stage } => {
+                format!("hello {version} {} {}", field(token), field(stage))
+            }
             WorkerMsg::Ready { ntasks } => format!("ready {ntasks}"),
             WorkerMsg::Ok { stats } => {
                 let mut s = String::from("result ok");
@@ -54,6 +129,21 @@ impl WorkerMsg {
     /// Parse one worker line.
     pub fn parse(line: &str) -> Result<WorkerMsg> {
         let line = line.trim();
+        if let Some(rest) = line.strip_prefix("hello ") {
+            let mut it = rest.split_whitespace();
+            let (Some(ver), Some(token), Some(stage), None) =
+                (it.next(), it.next(), it.next(), it.next())
+            else {
+                bail!("bad hello line {line:?} (want 'hello <version> <token> <stage>')");
+            };
+            let version =
+                ver.parse().with_context(|| format!("bad hello version '{ver}'"))?;
+            return Ok(WorkerMsg::Hello {
+                version,
+                token: token.to_string(),
+                stage: stage.to_string(),
+            });
+        }
         if let Some(rest) = line.strip_prefix("ready ") {
             let ntasks = rest.trim().parse().with_context(|| format!("bad ready count '{rest}'"))?;
             return Ok(WorkerMsg::Ready { ntasks });
@@ -104,6 +194,16 @@ fn flatten(msg: &str) -> String {
     msg.replace(['\n', '\r'], " | ")
 }
 
+/// `hello` fields are single whitespace-split tokens; map anything that
+/// would break that (or an empty string) to `_` so render/parse stay a
+/// bijection on the wire.
+fn field(s: &str) -> String {
+    if s.is_empty() {
+        return "_".to_string();
+    }
+    s.chars().map(|c| if c.is_whitespace() { '_' } else { c }).collect()
+}
+
 /// Elementwise-add `s` into `acc`, growing `acc` as needed — the stage
 /// counters both sides of the protocol sum.
 pub(crate) fn accumulate_stats(acc: &mut Vec<u64>, s: &[u64]) {
@@ -122,6 +222,8 @@ mod tests {
     #[test]
     fn worker_messages_round_trip() {
         let msgs = [
+            WorkerMsg::Hello { version: 1, token: "-".into(), stage: "organize".into() },
+            WorkerMsg::Hello { version: 7, token: "a1b2c3".into(), stage: "process".into() },
             WorkerMsg::Ready { ntasks: 42 },
             WorkerMsg::Ok { stats: vec![] },
             WorkerMsg::Ok { stats: vec![3, 1200, 0] },
@@ -133,6 +235,45 @@ mod tests {
             assert!(!line.contains('\n'));
             assert_eq!(WorkerMsg::parse(&line).unwrap(), m, "{line}");
         }
+    }
+
+    #[test]
+    fn hello_round_trips_under_random_fields() {
+        // Property check: for arbitrary versions and single-token
+        // token/stage fields, render∘parse is the identity.
+        let mut rng = crate::util::Rng::new(0x9e3779b9);
+        const ALPHA: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789-";
+        for _ in 0..500 {
+            let version = (rng.next_u64() % u64::from(u32::MAX)) as u32;
+            let mut tok = String::new();
+            for _ in 0..(1 + rng.below(24)) {
+                tok.push(ALPHA[rng.below(ALPHA.len())] as char);
+            }
+            let stage = ["organize", "archive", "process"][rng.below(3)].to_string();
+            let m = WorkerMsg::Hello { version, token: tok, stage };
+            assert_eq!(WorkerMsg::parse(&m.render()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn hello_fields_with_whitespace_stay_one_line_token() {
+        let m = WorkerMsg::Hello { version: 1, token: "two words".into(), stage: "".into() };
+        assert_eq!(m.render(), "hello 1 two_words _");
+        match WorkerMsg::parse(&m.render()).unwrap() {
+            WorkerMsg::Hello { version, token, stage } => {
+                assert_eq!((version, token.as_str(), stage.as_str()), (1, "two_words", "_"));
+            }
+            other => panic!("parsed {other:?}"),
+        }
+    }
+
+    #[test]
+    fn version_mismatch_error_quotes_both_versions() {
+        let e = ProtocolError::VersionMismatch { ours: 1, theirs: 3 };
+        let s = e.to_string();
+        assert!(s.contains("v1") && s.contains("v3"), "{s}");
+        let any: anyhow::Error = e.clone().into();
+        assert_eq!(any.downcast_ref::<ProtocolError>(), Some(&e));
     }
 
     #[test]
@@ -157,7 +298,9 @@ mod tests {
 
     #[test]
     fn malformed_worker_lines_are_rejected() {
-        for bad in ["ready", "ready x", "result", "trace", "trace -1", "hello", ""] {
+        for bad in
+            ["ready", "ready x", "result", "trace", "trace -1", "hello", "hello 1", "hello x t s", "hello 1 t s extra", ""]
+        {
             assert!(WorkerMsg::parse(bad).is_err(), "{bad:?} should not parse");
         }
     }

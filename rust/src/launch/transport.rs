@@ -1,0 +1,558 @@
+//! Transports: how the launch manager reaches its workers.
+//!
+//! The §II.D line protocol is transport-shaped — `hello`/`ready` up,
+//! `grant` down, `result`/`trace` up — so the manager loop in
+//! [`super::run_processes`] is written against the [`Transport`] /
+//! [`WorkerConn`] trait pair and never touches a pipe or socket
+//! directly. Two implementations:
+//!
+//! * [`StdioTransport`] — the classic triples-mode local launch: one
+//!   subprocess per worker, protocol over inherited stdin/stdout pipes.
+//! * [`TcpTransport`] — the network launch: the manager binds an
+//!   ephemeral loopback listener, spawns workers with
+//!   `--connect <addr> --token <t>` appended to their command line, and
+//!   each worker dials back and authenticates with a per-worker token
+//!   in its `hello` line. Worker `w`'s token is `<run-token>-w<w>`, so
+//!   the dial-back identifies which spawned process is on the wire and
+//!   connection indices line up with spawn order exactly like stdio.
+//!   Unauthenticated or garbled dial-backs are dropped without
+//!   disturbing the run.
+//!
+//! Liveness is uniform across both: a worker's connection reaching EOF
+//! (pipe closed or socket reset — SIGKILL produces both) surfaces as
+//! [`Event::Eof`], which is what the PR-5 death-recovery path keys on.
+
+use super::protocol::WorkerMsg;
+use super::WorkerCommand;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::process::{Child, ChildStdin, Command, ExitStatus, Stdio};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Which wire the launch protocol runs over (the `--transport` axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportKind {
+    /// Inherited stdin/stdout pipes to local subprocesses (the default).
+    #[default]
+    Stdio,
+    /// Workers dial back to the manager over loopback TCP.
+    Tcp,
+}
+
+impl TransportKind {
+    /// Short name (labels, CLI).
+    pub fn label(self) -> &'static str {
+        match self {
+            TransportKind::Stdio => "stdio",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+
+    /// Parse a [`TransportKind::label`] (CLI `--transport` flag).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "stdio" | "pipes" => TransportKind::Stdio,
+            "tcp" => TransportKind::Tcp,
+            other => bail!("unknown transport '{other}' (stdio|tcp)"),
+        })
+    }
+}
+
+/// One event from a worker's connection, as seen by the manager loop.
+pub enum Event {
+    /// A parsed protocol message.
+    Msg(WorkerMsg),
+    /// A line that did not parse.
+    Malformed(String),
+    /// The connection closed: the worker is exiting (or dead).
+    Eof,
+}
+
+/// Manager-side handle on one connected worker: framed line sends down,
+/// process control, and captured stderr for failure reports. Incoming
+/// protocol traffic (including the liveness signal [`Event::Eof`])
+/// arrives on the event channel the transport was launched with, never
+/// through this handle.
+pub trait WorkerConn: Send {
+    /// Write one protocol line to the worker; `false` when the link is
+    /// gone (the worker is dying — its [`Event::Eof`] follows).
+    fn send_line(&mut self, line: &str) -> bool;
+    /// Close the manager→worker half of the connection — the worker's
+    /// cue to seal its session with `trace` and exit.
+    fn finish(&mut self);
+    /// Forcibly terminate the worker process.
+    fn kill(&mut self);
+    /// Reap the worker (idempotent): wait for process exit, finish the
+    /// stderr capture, and return the captured stderr (`"<empty>"` when
+    /// there was none). Kill first if the worker may still be running.
+    fn reap(&mut self) -> String;
+    /// The stderr captured so far (`"<empty>"` when none).
+    fn stderr(&self) -> String;
+    /// After [`WorkerConn::reap`]: a description of an unclean exit,
+    /// `None` when the worker exited cleanly (or was never reaped).
+    fn exit_failure(&self) -> Option<String>;
+}
+
+/// Spawns a worker fleet and wires every worker's protocol stream into
+/// the manager's event channel.
+pub trait Transport {
+    /// Spawn `nworkers` workers from `cmd` and connect them within
+    /// `deadline`. Parsed events flow as `(worker index, event)` into
+    /// `events`; the returned connections are index-aligned with spawn
+    /// order. On error, every already-spawned worker is killed and
+    /// reaped before returning.
+    fn launch(
+        &self,
+        cmd: &WorkerCommand,
+        nworkers: usize,
+        deadline: Duration,
+        events: &Sender<(usize, Event)>,
+    ) -> Result<Vec<Box<dyn WorkerConn>>>;
+}
+
+/// The transport for a [`TransportKind`].
+pub fn transport_for(kind: TransportKind) -> Box<dyn Transport> {
+    match kind {
+        TransportKind::Stdio => Box::new(StdioTransport),
+        TransportKind::Tcp => Box::new(TcpTransport),
+    }
+}
+
+/// Feed a worker's protocol lines into the event channel until EOF.
+fn spawn_reader(w: usize, reader: impl BufRead + Send + 'static, tx: Sender<(usize, Event)>) {
+    std::thread::spawn(move || {
+        for line in reader.lines() {
+            let Ok(line) = line else { break };
+            if line.trim().is_empty() {
+                continue;
+            }
+            let ev = match WorkerMsg::parse(&line) {
+                Ok(m) => Event::Msg(m),
+                Err(_) => Event::Malformed(line),
+            };
+            if tx.send((w, ev)).is_err() {
+                return; // manager gone
+            }
+        }
+        let _ = tx.send((w, Event::Eof));
+    });
+}
+
+/// Background capture of one worker's stderr, shared by both transports.
+struct StderrCapture {
+    buf: Arc<Mutex<String>>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl StderrCapture {
+    fn start(stderr: impl Read + Send + 'static) -> Self {
+        let buf = Arc::new(Mutex::new(String::new()));
+        let buf2 = Arc::clone(&buf);
+        let thread = std::thread::spawn(move || {
+            let mut text = String::new();
+            let _ = BufReader::new(stderr).read_to_string(&mut text);
+            *buf2.lock().unwrap_or_else(std::sync::PoisonError::into_inner) = text;
+        });
+        StderrCapture { buf, thread: Some(thread) }
+    }
+
+    fn snapshot(&self) -> String {
+        let text = self
+            .buf
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .trim()
+            .to_string();
+        if text.is_empty() {
+            "<empty>".to_string()
+        } else {
+            text
+        }
+    }
+
+    fn join(&mut self) {
+        if let Some(h) = self.thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The classic triples-mode local launch: piped subprocesses.
+pub struct StdioTransport;
+
+struct StdioConn {
+    proc: Child,
+    stdin: Option<ChildStdin>,
+    errcap: StderrCapture,
+    reaped: Option<ExitStatus>,
+}
+
+impl WorkerConn for StdioConn {
+    fn send_line(&mut self, line: &str) -> bool {
+        let Some(stdin) = self.stdin.as_mut() else {
+            return false;
+        };
+        writeln!(stdin, "{line}").and_then(|()| stdin.flush()).is_ok()
+    }
+
+    fn finish(&mut self) {
+        self.stdin = None;
+    }
+
+    fn kill(&mut self) {
+        let _ = self.proc.kill();
+    }
+
+    fn reap(&mut self) -> String {
+        if self.reaped.is_none() {
+            self.reaped = self.proc.wait().ok();
+        }
+        self.errcap.join();
+        self.errcap.snapshot()
+    }
+
+    fn stderr(&self) -> String {
+        self.errcap.snapshot()
+    }
+
+    fn exit_failure(&self) -> Option<String> {
+        match self.reaped {
+            Some(s) if !s.success() => {
+                Some(format!("exited with {s} after completing its work"))
+            }
+            _ => None,
+        }
+    }
+}
+
+impl Transport for StdioTransport {
+    fn launch(
+        &self,
+        cmd: &WorkerCommand,
+        nworkers: usize,
+        _deadline: Duration,
+        events: &Sender<(usize, Event)>,
+    ) -> Result<Vec<Box<dyn WorkerConn>>> {
+        let mut conns: Vec<Box<dyn WorkerConn>> = Vec::with_capacity(nworkers);
+        for w in 0..nworkers {
+            let spawned = Command::new(&cmd.program)
+                .args(&cmd.args)
+                .stdin(Stdio::piped())
+                .stdout(Stdio::piped())
+                .stderr(Stdio::piped())
+                .spawn()
+                .with_context(|| format!("spawning worker {w} ({})", cmd.program.display()));
+            let mut proc = match spawned {
+                Ok(p) => p,
+                Err(e) => {
+                    kill_conns(&mut conns);
+                    return Err(e);
+                }
+            };
+            let stdin = proc.stdin.take();
+            // Both are piped in the Command above, so `None` is
+            // impossible; treat it as a spawn failure, not a panic.
+            let (Some(stdout), Some(stderr)) = (proc.stdout.take(), proc.stderr.take()) else {
+                let _ = proc.kill();
+                let _ = proc.wait();
+                kill_conns(&mut conns);
+                bail!("worker {w}: stdio pipes missing after spawn");
+            };
+            spawn_reader(w, BufReader::new(stdout), events.clone());
+            conns.push(Box::new(StdioConn {
+                proc,
+                stdin,
+                errcap: StderrCapture::start(stderr),
+                reaped: None,
+            }));
+        }
+        Ok(conns)
+    }
+}
+
+fn kill_conns(conns: &mut [Box<dyn WorkerConn>]) {
+    for c in &mut *conns {
+        c.kill();
+        c.reap();
+    }
+}
+
+/// The network launch: workers dial back over loopback TCP and present
+/// a per-worker token in their `hello` line before they are admitted.
+pub struct TcpTransport;
+
+/// How long one accepted dial-back gets to present its `hello` line.
+const HELLO_TIMEOUT: Duration = Duration::from_secs(10);
+
+struct TcpConn {
+    proc: Child,
+    sock: TcpStream,
+    errcap: StderrCapture,
+    reaped: Option<ExitStatus>,
+}
+
+impl WorkerConn for TcpConn {
+    fn send_line(&mut self, line: &str) -> bool {
+        writeln!(self.sock, "{line}").and_then(|()| self.sock.flush()).is_ok()
+    }
+
+    fn finish(&mut self) {
+        let _ = self.sock.shutdown(Shutdown::Write);
+    }
+
+    fn kill(&mut self) {
+        let _ = self.proc.kill();
+        let _ = self.sock.shutdown(Shutdown::Both);
+    }
+
+    fn reap(&mut self) -> String {
+        if self.reaped.is_none() {
+            self.reaped = self.proc.wait().ok();
+        }
+        self.errcap.join();
+        self.errcap.snapshot()
+    }
+
+    fn stderr(&self) -> String {
+        self.errcap.snapshot()
+    }
+
+    fn exit_failure(&self) -> Option<String> {
+        match self.reaped {
+            Some(s) if !s.success() => {
+                Some(format!("exited with {s} after completing its work"))
+            }
+            _ => None,
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn launch(
+        &self,
+        cmd: &WorkerCommand,
+        nworkers: usize,
+        deadline: Duration,
+        events: &Sender<(usize, Event)>,
+    ) -> Result<Vec<Box<dyn WorkerConn>>> {
+        let listener = TcpListener::bind("127.0.0.1:0").context("binding the dial-back listener")?;
+        let addr = listener.local_addr().context("resolving the dial-back address")?;
+        listener.set_nonblocking(true).context("unblocking the dial-back listener")?;
+        let run_token = fresh_token();
+        let mut pending: Vec<(Child, StderrCapture)> = Vec::with_capacity(nworkers);
+        let kill_pending = |pending: &mut Vec<(Child, StderrCapture)>| {
+            for (proc, errcap) in &mut *pending {
+                let _ = proc.kill();
+                let _ = proc.wait();
+                errcap.join();
+            }
+        };
+        for w in 0..nworkers {
+            let spawned = Command::new(&cmd.program)
+                .args(&cmd.args)
+                .arg("--connect")
+                .arg(addr.to_string())
+                .arg("--token")
+                .arg(worker_token(&run_token, w))
+                .stdin(Stdio::null())
+                .stdout(Stdio::null())
+                .stderr(Stdio::piped())
+                .spawn()
+                .with_context(|| format!("spawning worker {w} ({})", cmd.program.display()));
+            let mut proc = match spawned {
+                Ok(p) => p,
+                Err(e) => {
+                    kill_pending(&mut pending);
+                    return Err(e);
+                }
+            };
+            let Some(stderr) = proc.stderr.take() else {
+                let _ = proc.kill();
+                let _ = proc.wait();
+                kill_pending(&mut pending);
+                bail!("worker {w}: stderr pipe missing after spawn");
+            };
+            pending.push((proc, StderrCapture::start(stderr)));
+        }
+        // Accept dial-backs until the whole fleet is connected. The
+        // per-worker token names the worker index, so connections pair
+        // with spawned processes no matter the dial-back order.
+        let end = Instant::now() + deadline;
+        let mut socks: Vec<Option<TcpStream>> = (0..nworkers).map(|_| None).collect();
+        let mut connected = 0usize;
+        while connected < nworkers {
+            if Instant::now() >= end {
+                let why = pending
+                    .first_mut()
+                    .map(|(_, e)| e.snapshot())
+                    .unwrap_or_else(|| "<empty>".to_string());
+                kill_pending(&mut pending);
+                bail!(
+                    "only {connected}/{nworkers} workers dialed back within {deadline:?} \
+                     (worker 0 stderr: {why})"
+                );
+            }
+            match listener.accept() {
+                Ok((sock, _peer)) => {
+                    if let Some((w, hello, reader)) = admit(sock, &run_token, &socks) {
+                        let _ = events.send((w, Event::Msg(hello)));
+                        spawn_reader(w, reader.0, events.clone());
+                        socks[w] = Some(reader.1);
+                        connected += 1;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => {
+                    kill_pending(&mut pending);
+                    return Err(anyhow::Error::from(e).context("accepting worker dial-backs"));
+                }
+            }
+        }
+        let mut conns: Vec<Box<dyn WorkerConn>> = Vec::with_capacity(nworkers);
+        for ((proc, errcap), sock) in pending.into_iter().zip(socks) {
+            let Some(sock) = sock else {
+                bail!("internal: a connected worker is missing its dial-back socket")
+            };
+            conns.push(Box::new(TcpConn { proc, sock, errcap, reaped: None }));
+        }
+        Ok(conns)
+    }
+}
+
+/// Read and authenticate one dial-back's `hello` line. Returns the
+/// worker index its token names, the parsed hello (forwarded to the
+/// manager so both transports present a uniform event stream), and the
+/// buffered read half (which may already hold the worker's next lines)
+/// plus the write half. `None` — connection dropped — for an
+/// unauthenticated, replayed, or garbled dial-back.
+fn admit(
+    sock: TcpStream,
+    run_token: &str,
+    taken: &[Option<TcpStream>],
+) -> Option<(usize, WorkerMsg, (BufReader<TcpStream>, TcpStream))> {
+    sock.set_nonblocking(false).ok()?;
+    sock.set_read_timeout(Some(HELLO_TIMEOUT)).ok()?;
+    let mut reader = BufReader::new(sock.try_clone().ok()?);
+    let mut line = String::new();
+    reader.read_line(&mut line).ok()?;
+    let hello = WorkerMsg::parse(line.trim()).ok()?;
+    let WorkerMsg::Hello { token, .. } = &hello else {
+        return None;
+    };
+    let w = token_index(run_token, token)?;
+    if w >= taken.len() || taken[w].is_some() {
+        return None; // out-of-range or replayed token
+    }
+    sock.set_read_timeout(None).ok()?;
+    Some((w, hello, (reader, sock)))
+}
+
+/// The dial-back token worker `w` must present: run token + index.
+fn worker_token(run_token: &str, w: usize) -> String {
+    format!("{run_token}-w{w}")
+}
+
+/// Recover the worker index from a presented token; `None` when the
+/// token does not belong to this run.
+fn token_index(run_token: &str, token: &str) -> Option<usize> {
+    token.strip_prefix(run_token)?.strip_prefix("-w")?.parse().ok()
+}
+
+/// A fresh, unguessable-enough run token (the loopback-only listener is
+/// the real boundary; the token keeps stray local processes out).
+fn fresh_token() -> String {
+    let now = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap_or_default();
+    let seed = (now.as_nanos() as u64) ^ (u64::from(std::process::id()) << 32);
+    let mut rng = crate::util::Rng::new(seed);
+    format!("{:016x}", rng.next_u64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    #[test]
+    fn transport_kinds_round_trip_their_labels() {
+        for k in [TransportKind::Stdio, TransportKind::Tcp] {
+            assert_eq!(TransportKind::parse(k.label()).unwrap(), k);
+        }
+        assert_eq!(TransportKind::parse("pipes").unwrap(), TransportKind::Stdio);
+        assert!(TransportKind::parse("udp").is_err());
+        assert_eq!(TransportKind::default(), TransportKind::Stdio);
+    }
+
+    #[test]
+    fn worker_tokens_name_their_index() {
+        let base = "deadbeef01234567";
+        assert_eq!(token_index(base, &worker_token(base, 3)), Some(3));
+        assert_eq!(token_index(base, &worker_token(base, 0)), Some(0));
+        assert_eq!(token_index(base, "deadbeef01234567-w"), None);
+        assert_eq!(token_index(base, "otherrun-w2"), None);
+        assert_eq!(token_index(base, base), None);
+    }
+
+    #[test]
+    fn fresh_tokens_are_well_formed() {
+        let t = fresh_token();
+        assert_eq!(t.len(), 16);
+        assert!(t.chars().all(|c| c.is_ascii_hexdigit()));
+    }
+
+    /// Drive the accept-side handshake with raw client sockets: a good
+    /// token is admitted under the index its token names (with any
+    /// already-buffered follow-up lines preserved), while bad tokens,
+    /// replays, and garbage are dropped.
+    #[test]
+    fn admit_authenticates_and_indexes_dial_backs() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let run_token = "cafef00dcafef00d";
+        let mut taken: Vec<Option<TcpStream>> = vec![None, None];
+
+        // Good dial-back for worker 1, with `ready` already in flight.
+        let mut client = TcpStream::connect(addr).unwrap();
+        writeln!(client, "hello 1 {} archive", worker_token(run_token, 1)).unwrap();
+        writeln!(client, "ready 4").unwrap();
+        let (sock, _) = listener.accept().unwrap();
+        let (w, hello, (mut reader, write_half)) = admit(sock, run_token, &taken).unwrap();
+        assert_eq!(w, 1);
+        match hello {
+            WorkerMsg::Hello { version, stage, .. } => {
+                assert_eq!(version, 1);
+                assert_eq!(stage, "archive");
+            }
+            other => panic!("admitted {other:?}"),
+        }
+        let mut line = String::new();
+        use std::io::BufRead as _;
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "ready 4", "buffered follow-up lines must survive admit");
+
+        // Wrong token: dropped.
+        let mut bad = TcpStream::connect(addr).unwrap();
+        writeln!(bad, "hello 1 not-my-run-w0 archive").unwrap();
+        let (sock, _) = listener.accept().unwrap();
+        assert!(admit(sock, run_token, &taken).is_none());
+
+        // Replay of an already-connected index: dropped.
+        taken[1] = Some(write_half);
+        let mut replay = TcpStream::connect(addr).unwrap();
+        writeln!(replay, "hello 1 {} archive", worker_token(run_token, 1)).unwrap();
+        let (sock2, _) = listener.accept().unwrap();
+        assert!(admit(sock2, run_token, &taken).is_none());
+
+        // Garbage instead of hello: dropped.
+        let mut garbage = TcpStream::connect(addr).unwrap();
+        writeln!(garbage, "GET / HTTP/1.1").unwrap();
+        let (sock3, _) = listener.accept().unwrap();
+        assert!(admit(sock3, run_token, &taken).is_none());
+    }
+}

@@ -1,39 +1,78 @@
 //! Worker-subprocess side of the launch protocol — the body of the hidden
 //! `emproc worker` subcommand.
 //!
-//! A worker enumerates the same task list as the manager (both walk the
-//! same directories with the same deterministic sort), builds its private
-//! stage state (`init` — e.g. the stage-3 PJRT model, which is not
-//! `Send` and so *must* live in its own process for EPPAC-style
-//! placement), then loops: read a grant line, run the granted tasks,
-//! report one `result` line, until stdin closes — at which point it seals
-//! the session with a final `trace` line. A worker that dies without that
-//! line (crash, kill, panic) is detected by the manager and surfaces as a
-//! run error carrying the worker's captured stderr.
+//! A worker opens its protocol stream (inherited stdio pipes, or a TCP
+//! dial-back to the manager's `--connect` address), introduces itself
+//! with a versioned `hello` line, enumerates the same task list as the
+//! manager (both walk the same directories with the same deterministic
+//! sort), builds its private stage state (`init` — e.g. the stage-3 PJRT
+//! model, which is not `Send` and so *must* live in its own process for
+//! EPPAC-style placement), then loops: read a grant line, run the
+//! granted tasks, report one `result` line, until the manager closes its
+//! half of the stream — at which point it seals the session with a final
+//! `trace` line. A worker that dies without that line (crash, kill,
+//! panic) is detected by the manager and surfaces as a run error
+//! carrying the worker's captured stderr.
 //!
 //! A failing task does not exit the worker: it reports `result err` and
-//! keeps reading (the manager aborts the run and closes stdin, which is
-//! the worker's cue to wrap up cleanly).
+//! keeps reading (the manager aborts the run and closes its half, which
+//! is the worker's cue to wrap up cleanly).
 
-use super::protocol::{accumulate_stats, parse_grant, WorkerMsg};
+use super::protocol::{accumulate_stats, parse_grant, WorkerMsg, PROTO_VERSION, STDIO_TOKEN};
 use anyhow::{Context, Result};
-use std::io::{BufRead, Write};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
 
-/// Run the worker loop over real stdin/stdout. `init` builds the worker's
-/// private stage state; `work(state, task_idx)` runs one task and returns
-/// its stage counters (summed per message and again by the manager).
-pub fn worker_loop<S, I, F>(ntasks: usize, init: I, work: F) -> Result<()>
+/// Where a worker finds its manager: the stdio pipes it inherited, or a
+/// TCP dial-back to the address the manager is listening on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WorkerEndpoint {
+    /// Speak the protocol over inherited stdin/stdout (the default).
+    Stdio,
+    /// Dial back to `addr` and authenticate with `token`.
+    Tcp {
+        /// The manager's listen address, e.g. `127.0.0.1:41234`.
+        addr: String,
+        /// The run token to present in the `hello` handshake.
+        token: String,
+    },
+}
+
+/// Run the worker loop for `stage` over `endpoint`. `init` builds the
+/// worker's private stage state; `work(state, task_idx)` runs one task
+/// and returns its stage counters (summed per message and again by the
+/// manager).
+pub fn worker_loop<S, I, F>(
+    endpoint: &WorkerEndpoint,
+    stage: &str,
+    ntasks: usize,
+    init: I,
+    work: F,
+) -> Result<()>
 where
     I: FnOnce() -> Result<S>,
     F: FnMut(&mut S, usize) -> Result<Vec<u64>>,
 {
-    let stdin = std::io::stdin();
-    let stdout = std::io::stdout();
-    run_loop(ntasks, init, work, stdin.lock(), stdout.lock())
+    match endpoint {
+        WorkerEndpoint::Stdio => {
+            let stdin = std::io::stdin();
+            let stdout = std::io::stdout();
+            run_loop(stage, STDIO_TOKEN, ntasks, init, work, stdin.lock(), stdout.lock())
+        }
+        WorkerEndpoint::Tcp { addr, token } => {
+            let stream = TcpStream::connect(addr)
+                .with_context(|| format!("dialing back to manager at {addr}"))?;
+            let writer = stream.try_clone().context("cloning dial-back stream")?;
+            run_loop(stage, token, ntasks, init, work, BufReader::new(stream), writer)
+        }
+    }
 }
 
 /// Testable core of [`worker_loop`] over any line source/sink.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn run_loop<S, I, F>(
+    stage: &str,
+    token: &str,
     ntasks: usize,
     init: I,
     mut work: F,
@@ -48,6 +87,14 @@ where
         writeln!(output, "{}", msg.render()).context("writing to manager")?;
         output.flush().context("flushing to manager")
     };
+    // The handshake is first on the wire, before init: the manager (and,
+    // over TCP, its acceptor) must be able to authenticate and
+    // version-check the connection without waiting out a model load.
+    emit(&WorkerMsg::Hello {
+        version: PROTO_VERSION,
+        token: token.to_string(),
+        stage: stage.to_string(),
+    })?;
     // Init before `ready`: the clock-relevant part of the run starts once
     // every worker is ready, so model compilation is never counted as
     // task time (matching the paper, which excludes job launch).
@@ -96,7 +143,7 @@ where
             Some(message) => emit(&WorkerMsg::Err { message })?,
         }
     }
-    // stdin closed: the manager is done with us. Seal the session.
+    // The manager's half closed: it is done with us. Seal the session.
     emit(&WorkerMsg::Trace { tasks_done: done })
 }
 
@@ -111,12 +158,13 @@ mod tests {
         input: &str,
     ) -> Vec<String> {
         let mut out = Vec::new();
-        run_loop(ntasks, init, work, input.as_bytes(), &mut out).unwrap();
+        run_loop("organize", STDIO_TOKEN, ntasks, init, work, input.as_bytes(), &mut out)
+            .unwrap();
         String::from_utf8(out).unwrap().lines().map(str::to_string).collect()
     }
 
     #[test]
-    fn speaks_ready_result_trace_in_order() {
+    fn speaks_hello_ready_result_trace_in_order() {
         let lines = run_to_lines(
             5,
             || Ok(0u64),
@@ -126,7 +174,10 @@ mod tests {
             },
             "grant 0 1\ngrant 4\n",
         );
-        assert_eq!(lines, vec!["ready 5", "result ok 1 2", "result ok 4 1", "trace 3"]);
+        assert_eq!(
+            lines,
+            vec!["hello 1 - organize", "ready 5", "result ok 1 2", "result ok 4 1", "trace 3"]
+        );
     }
 
     #[test]
@@ -144,19 +195,20 @@ mod tests {
         );
         // Task 0 succeeded before task 1 failed; the grant reports err and
         // later grants still run (the manager decides when to stop).
-        assert_eq!(lines[0], "ready 5");
-        assert!(lines[1].starts_with("result err task 1:"), "{}", lines[1]);
-        assert!(lines[1].contains("boom"));
-        assert_eq!(lines[2], "result ok 1");
-        assert_eq!(lines[3], "trace 2");
+        assert_eq!(lines[0], "hello 1 - organize");
+        assert_eq!(lines[1], "ready 5");
+        assert!(lines[2].starts_with("result err task 1:"), "{}", lines[2]);
+        assert!(lines[2].contains("boom"));
+        assert_eq!(lines[3], "result ok 1");
+        assert_eq!(lines[4], "trace 2");
     }
 
     #[test]
     fn out_of_range_grant_is_an_err_not_a_panic() {
         let lines = run_to_lines(3, || Ok(()), |_, _| Ok(vec![]), "grant 7\n");
-        assert!(lines[1].starts_with("result err"), "{}", lines[1]);
-        assert!(lines[1].contains("out of range"));
-        assert_eq!(lines[2], "trace 0");
+        assert!(lines[2].starts_with("result err"), "{}", lines[2]);
+        assert!(lines[2].contains("out of range"));
+        assert_eq!(lines[3], "trace 0");
     }
 
     #[test]
@@ -167,18 +219,50 @@ mod tests {
             |_, _| Ok(vec![]),
             "grant 0\n",
         );
-        assert!(lines[0].starts_with("result err worker init failed"), "{}", lines[0]);
-        assert!(lines[0].contains("no model"));
-        assert_eq!(lines[1], "trace 0");
-        assert_eq!(lines.len(), 2, "{lines:?}");
+        assert_eq!(lines[0], "hello 1 - organize");
+        assert!(lines[1].starts_with("result err worker init failed"), "{}", lines[1]);
+        assert!(lines[1].contains("no model"));
+        assert_eq!(lines[2], "trace 0");
+        assert_eq!(lines.len(), 3, "{lines:?}");
     }
 
     #[test]
     fn malformed_manager_line_is_reported_not_fatal() {
         let lines = run_to_lines(3, || Ok(()), |_, _| Ok(vec![2]), "purr\ngrant 0\n");
-        assert_eq!(lines[0], "ready 3");
-        assert!(lines[1].starts_with("result err"), "{}", lines[1]);
-        assert_eq!(lines[2], "result ok 2");
-        assert_eq!(lines[3], "trace 1");
+        assert_eq!(lines[1], "ready 3");
+        assert!(lines[2].starts_with("result err"), "{}", lines[2]);
+        assert_eq!(lines[3], "result ok 2");
+        assert_eq!(lines[4], "trace 1");
+    }
+
+    #[test]
+    fn tcp_dial_back_speaks_the_same_grammar() {
+        // A miniature manager: accept one dial-back, read hello + ready,
+        // grant one task, close the write half, read the seal.
+        use std::io::{BufRead, BufReader, Write};
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let ep = WorkerEndpoint::Tcp { addr, token: "tok123".into() };
+        let worker = std::thread::spawn(move || {
+            worker_loop(&ep, "archive", 2, || Ok(()), |_, ti| Ok(vec![ti as u64]))
+        });
+        let (sock, _) = listener.accept().unwrap();
+        let mut reader = BufReader::new(sock.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "hello 1 tok123 archive");
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "ready 2");
+        let mut w = sock.try_clone().unwrap();
+        writeln!(w, "grant 1").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "result ok 1");
+        sock.shutdown(std::net::Shutdown::Write).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "trace 1");
+        worker.join().unwrap().unwrap();
     }
 }

@@ -51,8 +51,10 @@ pub mod dem;
 pub mod dist;
 /// In-process thread-pool executor driving the [`sched`] core.
 pub mod exec;
-/// Multi-process launch layer: worker subprocesses over stdio.
+/// Multi-process launch layer: worker subprocesses over stdio or TCP.
 pub mod launch;
+/// The `emprocd` job daemon behind `emproc serve`/`submit`/`jobs`.
+pub mod service;
 /// The repo's own static-analysis wall (`emproc xtask lint`).
 pub mod lint;
 /// Histograms, eCDFs, worker reports, and table rendering.
@@ -92,7 +94,7 @@ pub mod util;
 pub mod prelude {
     pub use crate::datasets::{DatasetKind, FileManifest};
     pub use crate::dist::{Distribution, Task, TaskOrder};
-    pub use crate::launch::{LaunchMode, LocalLauncher};
+    pub use crate::launch::{Launch, LaunchMode, LocalLauncher, TransportKind};
     pub use crate::metrics::WorkerReport;
     pub use crate::runtime::{TrackBatch, TrackModel};
     pub use crate::selfsched::{AllocMode, SelfSchedConfig};

@@ -1,0 +1,792 @@
+//! The `emprocd` job daemon: `emproc serve` / `submit` / `jobs`.
+//!
+//! A thin, long-lived service layer over [`crate::workflow::Pipeline`]
+//! (DESIGN.md §14). The daemon listens on TCP for line-delimited job
+//! submissions:
+//!
+//! ```text
+//! client -> submit {"dataset":"monday","workers":2,"launch":"processes","transport":"tcp"}
+//! server -> queued job-1
+//! server -> status job-1 running
+//! server -> done job-1 raw=24 organized=310 archives=12 segments=87
+//! ```
+//!
+//! A malformed or over-quota submission is answered with one
+//! `rejected <reason>` line; a job that errors ends its stream with
+//! `failed <job-id> <reason>`. `jobs` lists every job the daemon has
+//! seen (`job <id> <state> <dataset> <dir>` lines, terminated by `end`).
+//!
+//! Design points, in the order they matter:
+//!
+//! * **One builder path.** The JSON job spec is flattened to CLI-shaped
+//!   flags and fed through the exact `emproc pipeline` config assembly
+//!   ([`crate::workflow::commands::pipeline_config_from_args`]) — the
+//!   daemon is not a fourth hand-rolled [`PipelineConfig`] constructor.
+//! * **Admission-controlled FIFO.** Submissions queue; a single executor
+//!   thread drains them in arrival order, so two concurrent submissions
+//!   serialize over one persistent worker pool instead of oversubscribing
+//!   the host. The queue depth is capped ([`ServiceConfig::max_queue`]).
+//! * **Isolated run dirs.** Job `N` runs entirely under
+//!   `<base>/jobs/job-N/` — corpus, organized/archived/processed trees,
+//!   and journals — so concurrent submissions never share state and any
+//!   job can be resumed or diffed in place after the daemon exits.
+//!
+//! The protocol is deliberately the same shape as the worker launch
+//! protocol ([`crate::launch::protocol`]): one line per message, first
+//! token is the verb, human-readable, greppable in CI logs.
+
+use crate::workflow::PipelineConfig;
+use anyhow::{bail, Context, Result};
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
+
+/// Configuration for [`start`].
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Listen address (`host:port`; port 0 picks a free port).
+    pub addr: String,
+    /// Base directory; job `N` runs under `<base>/jobs/job-N/`.
+    pub base_dir: PathBuf,
+    /// Admission control: a submission arriving while this many jobs are
+    /// already queued (not yet running) is rejected, not queued.
+    pub max_queue: usize,
+    /// Worker-pool size applied to specs that don't set their own
+    /// `workers` — the pool sizing that persists across jobs.
+    pub pool: Option<usize>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            addr: "127.0.0.1:0".to_string(),
+            base_dir: PathBuf::from("emprocd"),
+            max_queue: 8,
+            pool: None,
+        }
+    }
+}
+
+/// Lifecycle of one submitted job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Accepted and waiting in the FIFO.
+    Queued,
+    /// Being executed by the drain thread.
+    Running,
+    /// Finished successfully.
+    Done,
+    /// Finished with an error (see the `failed` event line).
+    Failed,
+}
+
+impl JobState {
+    /// Lower-case wire label (`queued` / `running` / `done` / `failed`).
+    pub fn label(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+        }
+    }
+}
+
+/// What the executor streams back to the submitting connection.
+enum JobEvent {
+    Running,
+    Done(String),
+    Failed(String),
+}
+
+struct JobRecord {
+    id: String,
+    state: JobState,
+    dataset: &'static str,
+    dir: PathBuf,
+    /// Taken by the executor when the job starts.
+    cfg: Option<PipelineConfig>,
+    /// Event stream back to the submitting connection (dropped when the
+    /// job reaches a terminal state).
+    notify: Option<mpsc::Sender<JobEvent>>,
+}
+
+#[derive(Default)]
+struct Inner {
+    jobs: Vec<JobRecord>,
+    queue: VecDeque<usize>,
+    next_id: u64,
+}
+
+struct Shared {
+    inner: Mutex<Inner>,
+    wake: Condvar,
+    stop: AtomicBool,
+    base_dir: PathBuf,
+    max_queue: usize,
+    pool: Option<usize>,
+}
+
+impl Shared {
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+/// A running daemon: its bound address plus the accept/executor threads.
+/// Obtained from [`start`]; shut down with [`ServiceHandle::shutdown`]
+/// (tests) or parked forever with [`ServiceHandle::wait`] (the
+/// `emproc serve` command).
+pub struct ServiceHandle {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    executor: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServiceHandle {
+    /// The address the daemon actually bound (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, wake the executor, and join both threads. A job
+    /// that is mid-run finishes first; queued jobs are abandoned.
+    pub fn shutdown(mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.wake.notify_all();
+        // Unblock the accept loop with a throwaway connection.
+        drop(TcpStream::connect(self.addr));
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.executor.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Block until the daemon exits (it doesn't, short of a signal) —
+    /// the foreground mode `emproc serve` runs in.
+    pub fn wait(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.executor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Start the daemon: bind `cfg.addr`, spawn the accept loop and the
+/// FIFO executor, and return a handle with the bound address.
+pub fn start(cfg: ServiceConfig) -> Result<ServiceHandle> {
+    std::fs::create_dir_all(cfg.base_dir.join("jobs"))
+        .with_context(|| format!("creating daemon base dir {}", cfg.base_dir.display()))?;
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("emprocd cannot bind {}", cfg.addr))?;
+    let addr = listener.local_addr().context("emprocd listener has no local address")?;
+    let shared = Arc::new(Shared {
+        inner: Mutex::new(Inner::default()),
+        wake: Condvar::new(),
+        stop: AtomicBool::new(false),
+        base_dir: cfg.base_dir,
+        max_queue: cfg.max_queue,
+        pool: cfg.pool,
+    });
+
+    let exec_shared = Arc::clone(&shared);
+    let executor = std::thread::Builder::new()
+        .name("emprocd-exec".to_string())
+        .spawn(move || executor_loop(&exec_shared))
+        .context("spawning the emprocd executor thread")?;
+
+    let accept_shared = Arc::clone(&shared);
+    let accept = std::thread::Builder::new()
+        .name("emprocd-accept".to_string())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                if accept_shared.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let conn_shared = Arc::clone(&accept_shared);
+                let spawned = std::thread::Builder::new()
+                    .name("emprocd-conn".to_string())
+                    .spawn(move || {
+                        // A half-written reply to a vanished client is not a
+                        // daemon error; drop it and serve the next socket.
+                        let _ = serve_conn(stream, &conn_shared);
+                    });
+                drop(spawned);
+            }
+        })
+        .context("spawning the emprocd accept thread")?;
+
+    Ok(ServiceHandle { addr, shared, accept: Some(accept), executor: Some(executor) })
+}
+
+/// The single drain thread: pop the FIFO, run the pipeline, report.
+/// Serializing jobs here is what makes the daemon's worker pool a shared
+/// resource rather than a per-job free-for-all.
+fn executor_loop(shared: &Shared) {
+    loop {
+        let (idx, cfg, notify) = {
+            let mut inner = shared.lock();
+            loop {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(idx) = inner.queue.pop_front() {
+                    inner.jobs[idx].state = JobState::Running;
+                    let cfg = inner.jobs[idx].cfg.take();
+                    let notify = inner.jobs[idx].notify.clone();
+                    break (idx, cfg, notify);
+                }
+                inner = shared
+                    .wake
+                    .wait(inner)
+                    .unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        if let Some(tx) = &notify {
+            let _ = tx.send(JobEvent::Running);
+        }
+        let outcome = match cfg {
+            Some(cfg) => crate::workflow::Pipeline::new(cfg).generate_and_run(),
+            None => Err(anyhow::anyhow!("job lost its configuration before running")),
+        };
+        let mut inner = shared.lock();
+        let event = match outcome {
+            Ok(report) => {
+                inner.jobs[idx].state = JobState::Done;
+                JobEvent::Done(format!(
+                    "raw={} organized={} archives={} segments={}",
+                    report.raw_files,
+                    report.organize.files_written,
+                    report.archive.archives,
+                    report.process.segments
+                ))
+            }
+            Err(e) => {
+                inner.jobs[idx].state = JobState::Failed;
+                JobEvent::Failed(one_line(&format!("{e:#}")))
+            }
+        };
+        // Terminal: stream the event and drop the channel.
+        if let Some(tx) = inner.jobs[idx].notify.take() {
+            let _ = tx.send(event);
+        }
+    }
+}
+
+/// Serve one client connection: `submit <json>` and `jobs` commands,
+/// line-delimited, until the client hangs up.
+fn serve_conn(stream: TcpStream, shared: &Shared) -> Result<()> {
+    let reader = BufReader::new(stream.try_clone().context("cloning the client socket")?);
+    let mut out = stream;
+    for line in reader.lines() {
+        let line = line.context("reading a client line")?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (verb, rest) = line.split_once(' ').unwrap_or((line, ""));
+        match verb {
+            "submit" => handle_submit(rest, shared, &mut out)?,
+            "jobs" => {
+                let inner = shared.lock();
+                for job in &inner.jobs {
+                    writeln!(
+                        out,
+                        "job {} {} {} {}",
+                        job.id,
+                        job.state.label(),
+                        job.dataset,
+                        job.dir.display()
+                    )?;
+                }
+                drop(inner);
+                writeln!(out, "end")?;
+            }
+            other => writeln!(out, "error unknown command '{other}' (submit|jobs)")?,
+        }
+        out.flush()?;
+    }
+    Ok(())
+}
+
+/// One `submit` command: admit (or reject), then stream the job's
+/// events back on this connection until it reaches a terminal state.
+fn handle_submit(spec: &str, shared: &Shared, out: &mut TcpStream) -> Result<()> {
+    // Parse and validate before consuming a job id, so malformed
+    // submissions are rejected without side effects.
+    let mut cfg = match spec_to_config(spec, PathBuf::new(), shared.pool) {
+        Ok(cfg) => cfg,
+        Err(e) => {
+            writeln!(out, "rejected {}", one_line(&format!("{e:#}")))?;
+            return Ok(());
+        }
+    };
+    let (id, rx) = {
+        let mut inner = shared.lock();
+        if inner.queue.len() >= shared.max_queue {
+            let n = inner.queue.len();
+            drop(inner);
+            writeln!(out, "rejected queue full ({n} job(s) queued, max {})", shared.max_queue)?;
+            return Ok(());
+        }
+        inner.next_id += 1;
+        let id = format!("job-{}", inner.next_id);
+        let dir = shared.base_dir.join("jobs").join(&id);
+        cfg.work_dir.clone_from(&dir);
+        let (tx, rx) = mpsc::channel();
+        let idx = inner.jobs.len();
+        inner.jobs.push(JobRecord {
+            id: id.clone(),
+            state: JobState::Queued,
+            dataset: cfg.dataset.label(),
+            dir,
+            cfg: Some(cfg),
+            notify: Some(tx),
+        });
+        inner.queue.push_back(idx);
+        shared.wake.notify_all();
+        (id, rx)
+    };
+    writeln!(out, "queued {id}")?;
+    out.flush()?;
+    // Stream until the executor reports a terminal state. If the daemon
+    // is shut down first, the channel closes and the loop simply ends.
+    while let Ok(event) = rx.recv() {
+        match event {
+            JobEvent::Running => writeln!(out, "status {id} running")?,
+            JobEvent::Done(summary) => {
+                writeln!(out, "done {id} {summary}")?;
+                break;
+            }
+            JobEvent::Failed(reason) => {
+                writeln!(out, "failed {id} {reason}")?;
+                break;
+            }
+        }
+        out.flush()?;
+    }
+    Ok(())
+}
+
+/// Deserialize a flat JSON job spec into a [`PipelineConfig`] through
+/// the same builder path as `emproc pipeline`
+/// ([`crate::workflow::commands::pipeline_config_from_args`]): the
+/// object's keys become `--key value` flags, underscores normalized to
+/// dashes. Unknown keys, nested values, and non-object specs are typed
+/// errors — the daemon turns them into `rejected` replies.
+pub fn spec_to_config(
+    spec: &str,
+    job_dir: PathBuf,
+    pool: Option<usize>,
+) -> Result<PipelineConfig> {
+    const KEYS: [&str; 9] = [
+        "dataset",
+        "workers",
+        "seed",
+        "scale",
+        "launch",
+        "transport",
+        "max-retries",
+        "format",
+        "policy",
+    ];
+    let pairs = parse_flat_json(spec).context("malformed job spec")?;
+    let mut argv: Vec<String> = Vec::new();
+    for (key, value) in &pairs {
+        let flag = key.replace('_', "-");
+        if !KEYS.contains(&flag.as_str()) {
+            bail!("unknown job-spec key '{key}' (allowed: {})", KEYS.join(", "));
+        }
+        argv.push(format!("--{flag}"));
+        argv.push(value.clone());
+    }
+    if let Some(w) = pool {
+        if !pairs.iter().any(|(k, _)| k.replace('_', "-") == "workers") {
+            argv.push("--workers".to_string());
+            argv.push(w.to_string());
+        }
+    }
+    let a = crate::cli::ArgParser::parse(&argv, &[])?;
+    crate::workflow::commands::pipeline_config_from_args(&a, job_dir, false)
+}
+
+/// Parse one flat JSON object (`{"key": scalar, ...}`) into ordered
+/// key/value pairs, every scalar rendered as its flag-value string.
+/// Strings support the `\" \\ \/ \n \t \r` escapes; numbers and booleans
+/// pass through verbatim; nesting and `null` are rejected (a job spec is
+/// a flag set, not a document).
+fn parse_flat_json(text: &str) -> Result<Vec<(String, String)>> {
+    let mut chars = text.chars().peekable();
+    skip_ws(&mut chars);
+    if chars.next() != Some('{') {
+        bail!("a job spec is a JSON object: {{\"key\": value, ...}}");
+    }
+    let mut out = Vec::new();
+    skip_ws(&mut chars);
+    if chars.peek() == Some(&'}') {
+        chars.next();
+    } else {
+        loop {
+            skip_ws(&mut chars);
+            let key = parse_json_string(&mut chars)?;
+            skip_ws(&mut chars);
+            if chars.next() != Some(':') {
+                bail!("expected ':' after key '{key}'");
+            }
+            skip_ws(&mut chars);
+            let value = parse_json_scalar(&mut chars, &key)?;
+            out.push((key, value));
+            skip_ws(&mut chars);
+            match chars.next() {
+                Some(',') => {}
+                Some('}') => break,
+                Some(c) => bail!("expected ',' or '}}' in the job spec, got '{c}'"),
+                None => bail!("unterminated job spec object"),
+            }
+        }
+    }
+    skip_ws(&mut chars);
+    if let Some(c) = chars.next() {
+        bail!("trailing content after the job spec object: '{c}'");
+    }
+    Ok(out)
+}
+
+fn skip_ws(chars: &mut std::iter::Peekable<std::str::Chars<'_>>) {
+    while chars.peek().is_some_and(|c| c.is_whitespace()) {
+        chars.next();
+    }
+}
+
+fn parse_json_string(chars: &mut std::iter::Peekable<std::str::Chars<'_>>) -> Result<String> {
+    if chars.next() != Some('"') {
+        bail!("expected a double-quoted string");
+    }
+    let mut s = String::new();
+    loop {
+        match chars.next() {
+            Some('"') => return Ok(s),
+            Some('\\') => match chars.next() {
+                Some('"') => s.push('"'),
+                Some('\\') => s.push('\\'),
+                Some('/') => s.push('/'),
+                Some('n') => s.push('\n'),
+                Some('t') => s.push('\t'),
+                Some('r') => s.push('\r'),
+                Some(c) => bail!("unsupported string escape '\\{c}'"),
+                None => bail!("unterminated string escape"),
+            },
+            Some(c) => s.push(c),
+            None => bail!("unterminated string"),
+        }
+    }
+}
+
+fn parse_json_scalar(
+    chars: &mut std::iter::Peekable<std::str::Chars<'_>>,
+    key: &str,
+) -> Result<String> {
+    match chars.peek() {
+        Some('"') => parse_json_string(chars),
+        Some('{') | Some('[') => {
+            bail!("key '{key}': nested values are not allowed in a job spec")
+        }
+        Some('t') | Some('f') => {
+            let mut word = String::new();
+            while chars.peek().is_some_and(char::is_ascii_alphabetic) {
+                word.push(chars.next().unwrap_or_default());
+            }
+            if word == "true" || word == "false" {
+                Ok(word)
+            } else {
+                bail!("key '{key}': unrecognized value '{word}'")
+            }
+        }
+        Some('n') => bail!("key '{key}': null is not a usable job-spec value"),
+        Some(c) if *c == '-' || c.is_ascii_digit() => {
+            let mut num = String::new();
+            while chars
+                .peek()
+                .is_some_and(|c| c.is_ascii_digit() || matches!(c, '-' | '+' | '.' | 'e' | 'E'))
+            {
+                num.push(chars.next().unwrap_or_default());
+            }
+            if num.parse::<f64>().is_err() {
+                bail!("key '{key}': '{num}' is not a number");
+            }
+            Ok(num)
+        }
+        Some(c) => bail!("key '{key}': unexpected value start '{c}'"),
+        None => bail!("key '{key}': missing value"),
+    }
+}
+
+/// Collapse whitespace runs (including newlines) to single spaces so a
+/// multi-line error context chain fits the one-line wire protocol.
+fn one_line(s: &str) -> String {
+    s.split_whitespace().collect::<Vec<_>>().join(" ")
+}
+
+/// Client side of `submit`: dial `addr`, send the spec, forward every
+/// server event line to `event`, and return the job id once the server
+/// reports `done`. A `rejected` or `failed` reply is an error carrying
+/// the server's reason.
+pub fn submit_job(addr: &str, spec: &str, event: &mut dyn FnMut(&str)) -> Result<String> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to emprocd at {addr}"))?;
+    writeln!(stream, "submit {}", one_line(spec))?;
+    stream.flush()?;
+    let reader = BufReader::new(stream.try_clone().context("cloning the daemon socket")?);
+    let mut id = String::new();
+    for line in reader.lines() {
+        let line = line.context("reading a daemon event line")?;
+        event(&line);
+        let (verb, rest) = line.split_once(' ').unwrap_or((line.as_str(), ""));
+        match verb {
+            "queued" => id = rest.to_string(),
+            "rejected" => bail!("submission rejected: {rest}"),
+            "failed" => bail!("{rest}"),
+            "done" => return Ok(id),
+            _ => {}
+        }
+    }
+    bail!("emprocd closed the connection before the job finished")
+}
+
+/// Client side of `jobs`: one `job <id> <state> <dataset> <dir>` line
+/// per job the daemon has seen, in submission order.
+pub fn list_jobs(addr: &str) -> Result<Vec<String>> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to emprocd at {addr}"))?;
+    writeln!(stream, "jobs")?;
+    stream.flush()?;
+    let reader = BufReader::new(stream.try_clone().context("cloning the daemon socket")?);
+    let mut out = Vec::new();
+    for line in reader.lines() {
+        let line = line.context("reading a daemon listing line")?;
+        if line == "end" {
+            return Ok(out);
+        }
+        out.push(line);
+    }
+    bail!("emprocd closed the connection before ending the listing")
+}
+
+/// `emproc serve --dir DIR [--addr HOST:PORT] [--max-queue N] [--pool N]`
+///
+/// Run the daemon in the foreground: bind, print the address, serve
+/// until killed. `--pool` pins a worker-pool size for specs that don't
+/// choose their own.
+pub fn serve(a: &crate::cli::ArgParser) -> Result<()> {
+    let cfg = ServiceConfig {
+        addr: a.get_or("addr", "127.0.0.1:7600").to_string(),
+        base_dir: PathBuf::from(a.required("dir")?),
+        max_queue: a.get_num("max-queue", 8usize)?,
+        pool: match a.get("pool") {
+            None => None,
+            Some(_) => Some(a.get_num("pool", 4usize)?),
+        },
+    };
+    let handle = start(cfg)?;
+    println!("emprocd listening on {}", handle.addr());
+    handle.wait();
+    Ok(())
+}
+
+/// `emproc submit --addr HOST:PORT (--spec JSON | --spec-file FILE)`
+///
+/// Submit one pipeline job and stream its event lines until it finishes;
+/// exits non-zero on rejection or failure.
+pub fn submit(a: &crate::cli::ArgParser) -> Result<()> {
+    let addr = a.required("addr")?;
+    let spec = match (a.get("spec"), a.get("spec-file")) {
+        (Some(s), None) => s.to_string(),
+        (None, Some(f)) => {
+            std::fs::read_to_string(f).with_context(|| format!("reading spec file {f}"))?
+        }
+        _ => bail!("pass exactly one of --spec JSON or --spec-file FILE"),
+    };
+    let id = submit_job(addr, &spec, &mut |line| println!("{line}"))?;
+    println!("job {id} complete");
+    Ok(())
+}
+
+/// `emproc jobs --addr HOST:PORT` — list the daemon's jobs.
+pub fn jobs(a: &crate::cli::ArgParser) -> Result<()> {
+    for line in list_jobs(a.required("addr")?)? {
+        println!("{line}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::launch::{LaunchMode, TransportKind};
+
+    #[test]
+    fn flat_json_parses_scalars_escapes_and_whitespace() {
+        let pairs = parse_flat_json(
+            "  { \"dataset\" : \"monday\", \"workers\": 2, \"scale\": 0.5,\n \
+             \"flag\": true, \"label\": \"a\\\"b\\n\" }  ",
+        )
+        .unwrap();
+        assert_eq!(
+            pairs,
+            vec![
+                ("dataset".to_string(), "monday".to_string()),
+                ("workers".to_string(), "2".to_string()),
+                ("scale".to_string(), "0.5".to_string()),
+                ("flag".to_string(), "true".to_string()),
+                ("label".to_string(), "a\"b\n".to_string()),
+            ]
+        );
+        assert!(parse_flat_json("{}").unwrap().is_empty());
+    }
+
+    #[test]
+    fn flat_json_rejects_nesting_null_and_garbage() {
+        for bad in [
+            "[1,2]",
+            "{\"a\": {\"b\": 1}}",
+            "{\"a\": [1]}",
+            "{\"a\": null}",
+            "{\"a\": 1} trailing",
+            "{\"a\" 1}",
+            "{\"a\": }",
+            "{\"a\": truthy}",
+            "{\"a\": 1",
+            "not json at all",
+        ] {
+            assert!(parse_flat_json(bad).is_err(), "{bad} should be rejected");
+        }
+    }
+
+    #[test]
+    fn spec_builds_through_the_pipeline_config_path() {
+        let dir = PathBuf::from("/tmp/emproc_spec_test");
+        let cfg = spec_to_config(
+            "{\"dataset\": \"aerodrome\", \"workers\": 3, \"seed\": 9, \
+             \"launch\": \"processes\", \"transport\": \"tcp\", \
+             \"max_retries\": 1, \"format\": \"columnar\", \"policy\": \"steal\"}",
+            dir.clone(),
+            None,
+        )
+        .unwrap();
+        assert_eq!(cfg.work_dir, dir);
+        assert_eq!(cfg.dataset, crate::datasets::DatasetKind::Aerodrome);
+        assert_eq!(cfg.workers, 3);
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.launch, LaunchMode::Processes);
+        assert_eq!(cfg.transport, TransportKind::Tcp);
+        assert_eq!(cfg.max_retries, 1);
+        assert_eq!(cfg.format, crate::archive::ArchiveFormat::Columnar);
+        assert_eq!(cfg.policy, crate::selfsched::SchedPolicy::Steal);
+        // Per-dataset defaults ride along (aerodrome traffic is skewed).
+        assert!(cfg.aircraft_skew > 0.0);
+    }
+
+    #[test]
+    fn spec_rejects_unknown_keys_and_bad_values() {
+        let e = spec_to_config("{\"datasett\": \"monday\"}", PathBuf::new(), None)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("unknown job-spec key 'datasett'"), "{e}");
+        assert!(spec_to_config("{\"dataset\": \"mars\"}", PathBuf::new(), None).is_err());
+        assert!(spec_to_config("{\"transport\": \"pigeon\"}", PathBuf::new(), None).is_err());
+        assert!(spec_to_config("nope", PathBuf::new(), None).is_err());
+    }
+
+    #[test]
+    fn service_pool_default_applies_only_without_an_explicit_workers() {
+        let cfg = spec_to_config("{}", PathBuf::new(), Some(7)).unwrap();
+        assert_eq!(cfg.workers, 7);
+        let cfg = spec_to_config("{\"workers\": 2}", PathBuf::new(), Some(7)).unwrap();
+        assert_eq!(cfg.workers, 2);
+    }
+
+    #[test]
+    fn daemon_runs_a_job_and_reports_its_lifecycle() {
+        let base = std::env::temp_dir().join(format!("emprocd_unit_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let handle = start(ServiceConfig {
+            addr: "127.0.0.1:0".to_string(),
+            base_dir: base.clone(),
+            max_queue: 4,
+            pool: None,
+        })
+        .unwrap();
+        let addr = handle.addr().to_string();
+
+        // A tiny in-process job end to end.
+        let mut events = Vec::new();
+        let id = submit_job(
+            &addr,
+            "{\"dataset\": \"monday\", \"workers\": 2, \"scale\": 0.4, \"seed\": 5}",
+            &mut |line| events.push(line.to_string()),
+        )
+        .unwrap();
+        assert_eq!(id, "job-1");
+        assert_eq!(events[0], "queued job-1");
+        assert_eq!(events[1], "status job-1 running");
+        assert!(events.last().unwrap().starts_with("done job-1 raw="), "{events:?}");
+        assert!(base.join("jobs/job-1/processed").is_dir());
+
+        // Malformed submissions get a typed `rejected` reply, and the
+        // listing shows only the real job.
+        let err = submit_job(&addr, "{\"dataset\": \"mars\"}", &mut |_| {}).unwrap_err();
+        assert!(err.to_string().contains("submission rejected"), "{err:#}");
+        let jobs = list_jobs(&addr).unwrap();
+        assert_eq!(jobs.len(), 1);
+        assert!(jobs[0].starts_with("job job-1 done monday"), "{jobs:?}");
+
+        handle.shutdown();
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn queue_overflow_is_rejected_not_queued() {
+        let base = std::env::temp_dir().join(format!("emprocd_full_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let handle = start(ServiceConfig {
+            addr: "127.0.0.1:0".to_string(),
+            base_dir: base.clone(),
+            max_queue: 0,
+            pool: None,
+        })
+        .unwrap();
+        let err = submit_job(&handle.addr().to_string(), "{}", &mut |_| {}).unwrap_err();
+        assert!(err.to_string().contains("queue full"), "{err:#}");
+        handle.shutdown();
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn unknown_daemon_commands_answer_with_an_error_line() {
+        let base = std::env::temp_dir().join(format!("emprocd_cmd_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let handle = start(ServiceConfig {
+            addr: "127.0.0.1:0".to_string(),
+            base_dir: base.clone(),
+            max_queue: 1,
+            pool: None,
+        })
+        .unwrap();
+        let mut stream = TcpStream::connect(handle.addr()).unwrap();
+        writeln!(stream, "frobnicate").unwrap();
+        let mut line = String::new();
+        BufReader::new(stream.try_clone().unwrap()).read_line(&mut line).unwrap();
+        assert!(line.starts_with("error unknown command 'frobnicate'"), "{line}");
+        handle.shutdown();
+        let _ = std::fs::remove_dir_all(&base);
+    }
+}

@@ -4,7 +4,7 @@ use crate::archive::ArchiveFormat;
 use crate::cli::ArgParser;
 use crate::datasets::DatasetKind;
 use crate::dist::TaskOrder;
-use crate::launch::LaunchMode;
+use crate::launch::{Launch, LaunchMode, TransportKind, WorkerEndpoint};
 use crate::recovery::RecoveryOptions;
 use crate::registry::Registry;
 use crate::selfsched::{AllocMode, SchedPolicy, SelfSchedConfig};
@@ -52,6 +52,17 @@ pub(crate) fn parse_policy(s: &str) -> Result<SchedPolicy> {
 /// Parse the `--launch` flag shared by every stage/pipeline command.
 pub(crate) fn parse_launch(a: &ArgParser) -> Result<LaunchMode> {
     LaunchMode::parse(a.get_or("launch", "inprocess"))
+}
+
+/// Parse the `--transport` flag (the wire for `--launch processes`
+/// workers: local stdio pipes, or TCP dial-back).
+pub(crate) fn parse_transport(a: &ArgParser) -> Result<TransportKind> {
+    TransportKind::parse(a.get_or("transport", "stdio"))
+}
+
+/// The combined launch-layer selector from `--launch` + `--transport`.
+pub(crate) fn parse_launch_layer(a: &ArgParser) -> Result<Launch> {
+    Ok(Launch { mode: parse_launch(a)?, transport: parse_transport(a)? })
 }
 
 /// Parse the `--format` flag shared by the archive-touching commands
@@ -199,7 +210,8 @@ fn load_registry(data_dir: &std::path::Path) -> Result<Registry> {
 }
 
 /// `emproc organize --data DIR --out DIR [--workers N] [--order O]
-/// [--seed N] [--alloc selfsched|block|cyclic] [--launch inprocess|processes]`
+/// [--seed N] [--alloc selfsched|block|cyclic] [--launch inprocess|processes]
+/// [--transport stdio|tcp]`
 pub fn organize(a: &ArgParser) -> Result<()> {
     let data = PathBuf::from(a.required("data")?);
     let out = PathBuf::from(a.required("out")?);
@@ -207,7 +219,7 @@ pub fn organize(a: &ArgParser) -> Result<()> {
     let seed = a.get_num("seed", 1u64)?;
     let order = parse_order(a.get_or("order", "size"), seed)?;
     let alloc = parse_alloc(a.get_or("alloc", "selfsched"))?;
-    let launch = parse_launch(a)?;
+    let launch = parse_launch_layer(a)?;
     let recovery = parse_recovery(a, "organize")?;
     let registry = load_registry(&data)?;
     let outcome = crate::workflow::stage1::run_launched(
@@ -230,7 +242,7 @@ pub fn organize(a: &ArgParser) -> Result<()> {
 
 /// `emproc archive --data DIR --out DIR [--dist block|cyclic|selfsched]
 /// [--workers N] [--order O] [--seed N] [--launch inprocess|processes]
-/// [--format zip|columnar]`
+/// [--transport stdio|tcp] [--format zip|columnar]`
 pub fn archive(a: &ArgParser) -> Result<()> {
     let data = PathBuf::from(a.required("data")?);
     let out = PathBuf::from(a.required("out")?);
@@ -238,7 +250,7 @@ pub fn archive(a: &ArgParser) -> Result<()> {
     let seed = a.get_num("seed", 1u64)?;
     let alloc = parse_alloc(a.get_or("dist", "cyclic"))?;
     let order = parse_order(a.get_or("order", "filename"), seed)?;
-    let launch = parse_launch(a)?;
+    let launch = parse_launch_layer(a)?;
     let format = parse_format(a)?;
     let recovery = parse_recovery(a, "archive")?;
     let outcome = crate::workflow::stage2::run_launched(
@@ -261,7 +273,8 @@ pub fn archive(a: &ArgParser) -> Result<()> {
 
 /// `emproc process --data DIR --out DIR [--workers N] [--artifacts DIR]
 /// [--order O] [--seed N] [--alloc selfsched|block|cyclic]
-/// [--launch inprocess|processes] [--format zip|columnar]`
+/// [--launch inprocess|processes] [--transport stdio|tcp]
+/// [--format zip|columnar]`
 pub fn process(a: &ArgParser) -> Result<()> {
     let data = PathBuf::from(a.required("data")?);
     let out = PathBuf::from(a.required("out")?);
@@ -269,7 +282,7 @@ pub fn process(a: &ArgParser) -> Result<()> {
     let seed = a.get_num("seed", 1u64)?;
     let order = parse_order(a.get_or("order", "random"), seed)?;
     let alloc = parse_alloc(a.get_or("alloc", "selfsched"))?;
-    let launch = parse_launch(a)?;
+    let launch = parse_launch_layer(a)?;
     let artifacts = a
         .get("artifacts")
         .map(PathBuf::from)
@@ -303,7 +316,8 @@ pub fn process(a: &ArgParser) -> Result<()> {
 
 /// `emproc pipeline --out DIR [--dataset monday|aerodrome] [--scale F]
 /// [--workers N] [--seed N] [--launch inprocess|processes]
-/// [--max-retries N] [--resume DIR] [--format zip|columnar]`
+/// [--transport stdio|tcp] [--max-retries N] [--resume DIR]
+/// [--format zip|columnar]`
 ///
 /// `--resume DIR` finishes an interrupted run in place of `--out DIR`
 /// (pass the same remaining flags so the per-stage journals verify
@@ -312,27 +326,42 @@ pub fn process(a: &ArgParser) -> Result<()> {
 /// the other format is a hard plan-mismatch error).
 pub fn pipeline(a: &ArgParser) -> Result<()> {
     let (out, resume) = out_or_resume(a)?;
-    let scale = a.get_num("scale", 1.0f64)?;
-    let mut cfg = crate::workflow::PipelineConfig::small(out);
-    cfg.dataset = DatasetKind::parse(a.get_or("dataset", "monday"))?;
-    cfg.aircraft_skew = crate::workflow::ScenarioSpec::aircraft_skew(cfg.dataset);
-    cfg.workers = a.get_num("workers", cfg.workers)?;
-    cfg.seed = a.get_num("seed", cfg.seed)?;
-    cfg.launch = parse_launch(a)?;
-    cfg.max_retries = a.get_num("max-retries", cfg.max_retries)?;
-    cfg.resume = resume;
-    cfg.format = parse_format(a)?;
-    cfg.policy = parse_policy(a.get_or("policy", "fixed"))?;
-    cfg.process_order = TaskOrder::Random(cfg.seed);
-    cfg.days = ((cfg.days as f64 * scale).ceil() as u32).max(1);
-    cfg.max_file_bytes = (cfg.max_file_bytes as f64 * scale) as u64 + 1_000;
+    let cfg = pipeline_config_from_args(a, out, resume)?;
     let report = crate::workflow::Pipeline::new(cfg).generate_and_run()?;
     print!("{}", report.render());
     Ok(())
 }
 
+/// Assemble a [`crate::workflow::PipelineConfig`] from the shared
+/// pipeline flags — one builder path for `emproc pipeline` and (via the
+/// JSON job spec) the `emproc serve` daemon.
+pub(crate) fn pipeline_config_from_args(
+    a: &ArgParser,
+    out: PathBuf,
+    resume: bool,
+) -> Result<crate::workflow::PipelineConfig> {
+    let scale = a.get_num("scale", 1.0f64)?;
+    let dataset = DatasetKind::parse(a.get_or("dataset", "monday"))?;
+    let base = crate::workflow::PipelineConfig::small(PathBuf::new());
+    let seed = a.get_num("seed", base.seed)?;
+    Ok(crate::workflow::PipelineConfig::for_dataset(dataset, out)
+        .workers(a.get_num("workers", base.workers)?)
+        .seed(seed)
+        .launch(parse_launch(a)?)
+        .transport(parse_transport(a)?)
+        .max_retries(a.get_num("max-retries", base.max_retries)?)
+        .resume(resume)
+        .format(parse_format(a)?)
+        .policy(parse_policy(a.get_or("policy", "fixed"))?)
+        .process_order(TaskOrder::Random(seed))
+        .days(((base.days as f64 * scale).ceil() as u32).max(1))
+        .max_file_bytes((base.max_file_bytes as f64 * scale) as u64 + 1_000)
+        .build())
+}
+
 /// `emproc scenarios --out DIR [--workers N] [--scale F] [--seed N]
-/// [--launch inprocess|processes] [--triples CORESxNPPN] [--max-procs N]
+/// [--launch inprocess|processes] [--transport stdio|tcp]
+/// [--triples CORESxNPPN] [--max-procs N]
 /// [--max-retries N] [--resume DIR]
 /// [--datasets monday,aerodrome] [--strategies selfsched,block,cyclic]
 /// [--orders chrono,size,filename,random]
@@ -363,6 +392,7 @@ pub fn scenarios(a: &ArgParser) -> Result<()> {
     let seed = a.get_num("seed", 42u64)?;
     let scale = a.get_num("scale", 1.0f64)?;
     let launch = parse_launch(a)?;
+    let transport = parse_transport(a)?;
     let workers = match a.get("triples") {
         None => a.get_num("workers", 2usize)?,
         Some(cell) => {
@@ -412,7 +442,8 @@ pub fn scenarios(a: &ArgParser) -> Result<()> {
     let days = ((2.0 * scale).ceil() as u32).max(1);
     let max_file_bytes = (40_000.0 * scale) as u64 + 2_000;
     let format = parse_format(a)?;
-    let shape = scenario::MatrixShape { workers, days, max_file_bytes, seed, launch, format };
+    let shape =
+        scenario::MatrixShape { workers, days, max_file_bytes, seed, launch, transport, format };
     let specs = scenario::matrix_policies(&datasets, &strategies, &orders, &policies, shape);
     println!(
         "running {} scenarios ({} datasets x {} strategies x {} orders x {} policies, \
@@ -518,6 +549,20 @@ mod tests {
             parse_launch(&a)
         };
         assert_eq!(parsed(&[]).unwrap(), LaunchMode::InProcess);
+        let layer = |args: &[&str]| {
+            let a = ArgParser::parse(
+                &args.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+                &[],
+            )
+            .unwrap();
+            parse_launch_layer(&a)
+        };
+        assert_eq!(layer(&[]).unwrap(), Launch::in_process());
+        assert_eq!(
+            layer(&["--launch", "processes", "--transport", "tcp"]).unwrap(),
+            Launch::processes(TransportKind::Tcp)
+        );
+        assert!(layer(&["--transport", "carrier-pigeon"]).is_err());
         assert_eq!(parsed(&["--launch", "inprocess"]).unwrap(), LaunchMode::InProcess);
         assert_eq!(parsed(&["--launch", "processes"]).unwrap(), LaunchMode::Processes);
         assert_eq!(parsed(&["--launch", "procs"]).unwrap(), LaunchMode::Processes);
@@ -578,10 +623,12 @@ mod tests {
 
 /// Hidden `emproc worker --stage <organize|archive|process> ...`: the
 /// subprocess side of [`crate::launch::run_processes`]. Speaks the launch
-/// protocol on stdin/stdout and is only ever spawned by the manager —
-/// never invoked by hand (hence absent from `emproc help`). Each stage
-/// enumerates its task list with the same deterministic walk the manager
-/// uses; the manager cross-checks the count via the `ready` line.
+/// protocol on stdin/stdout — or, with `--connect ADDR --token T`, dials
+/// back to the manager's TCP listener and authenticates with the run
+/// token — and is only ever spawned by the manager, never invoked by
+/// hand (hence absent from `emproc help`). Each stage enumerates its
+/// task list with the same deterministic walk the manager uses; the
+/// manager cross-checks the count via the `ready` line.
 ///
 /// Every stage's work closure ends with the
 /// [`crate::recovery::fault::maybe_kill`] hook — inert unless the
@@ -592,12 +639,23 @@ pub fn worker(a: &ArgParser) -> Result<()> {
     let stage = a.required("stage")?;
     let data = PathBuf::from(a.required("data")?);
     let out = PathBuf::from(a.required("out")?);
+    let endpoint = match (a.get("connect"), a.get("token")) {
+        (Some(addr), Some(token)) => {
+            WorkerEndpoint::Tcp { addr: addr.to_string(), token: token.to_string() }
+        }
+        (Some(_), None) | (None, Some(_)) => {
+            bail!("--connect and --token come together (TCP dial-back needs both)")
+        }
+        (None, None) => WorkerEndpoint::Stdio,
+    };
     match stage {
         "organize" => {
             let year = a.get_num("year", 2019u16)?;
             let registry = load_registry(&data)?;
             let raw = crate::workflow::stage1::list_raw_files(&data)?;
             crate::launch::worker_loop(
+                &endpoint,
+                stage,
                 raw.len(),
                 || Ok(()),
                 |_, ti| {
@@ -612,6 +670,8 @@ pub fn worker(a: &ArgParser) -> Result<()> {
             let format = parse_format(a)?;
             let plan = crate::archive::ArchivePlan::plan_format(&data, &out, format)?;
             crate::launch::worker_loop(
+                &endpoint,
+                stage,
                 plan.tasks.len(),
                 || Ok(()),
                 |_, ti| {
@@ -649,6 +709,8 @@ pub fn worker(a: &ArgParser) -> Result<()> {
                 format,
             };
             crate::launch::worker_loop(
+                &endpoint,
+                stage,
                 archives.len(),
                 || crate::runtime::TrackModel::load(&artifacts),
                 |model, ti| {

@@ -8,7 +8,7 @@
 use crate::archive::ArchiveFormat;
 use crate::datasets::DatasetKind;
 use crate::dist::{Distribution, TaskOrder};
-use crate::launch::LaunchMode;
+use crate::launch::{Launch, LaunchMode, TransportKind};
 use crate::registry::Registry;
 use crate::selfsched::{AllocMode, SchedPolicy, SelfSchedConfig};
 use crate::tracks::SegmentConfig;
@@ -53,6 +53,9 @@ pub struct PipelineConfig {
     /// Launch layer for every stage: worker threads in this process, or
     /// real worker subprocesses over the [`crate::launch`] protocol.
     pub launch: LaunchMode,
+    /// The wire worker subprocesses speak the protocol over (stdio pipes
+    /// or TCP dial-back); ignored when `launch` is in-process.
+    pub transport: TransportKind,
     /// Grant-level retries per task when a self-scheduled worker process
     /// dies mid-run (see [`crate::launch::RunOptions::max_retries`];
     /// batch stages always fail fast).
@@ -98,11 +101,32 @@ impl PipelineConfig {
             archive_order: TaskOrder::FilenameSorted,
             process_order: TaskOrder::Random(42),
             launch: LaunchMode::InProcess,
+            transport: TransportKind::Stdio,
             max_retries: 2,
             resume: false,
             format: ArchiveFormat::Zip,
             policy: SchedPolicy::Fixed,
         }
+    }
+
+    /// Start a builder from the [`PipelineConfig::small`] defaults — the
+    /// one construction path shared by the CLI, the scenario matrix, the
+    /// daemon's JSON job specs, and tests.
+    pub fn builder(work_dir: PathBuf) -> PipelineConfigBuilder {
+        PipelineConfigBuilder { cfg: PipelineConfig::small(work_dir) }
+    }
+
+    /// A builder preloaded with `kind`'s per-dataset defaults (today:
+    /// the corpus skew — aerodrome traffic is heavy-tailed across
+    /// aircraft, Monday traffic is not).
+    pub fn for_dataset(kind: DatasetKind, work_dir: PathBuf) -> PipelineConfigBuilder {
+        let skew = crate::workflow::scenario::ScenarioSpec::aircraft_skew(kind);
+        Self::builder(work_dir).dataset(kind).aircraft_skew(skew)
+    }
+
+    /// The combined launch-layer selector the stages consume.
+    pub fn launch_layer(&self) -> Launch {
+        Launch { mode: self.launch, transport: self.transport }
     }
 
     /// Recovery knobs for one stage of this pipeline: the journal always
@@ -122,6 +146,136 @@ impl PipelineConfig {
         self.raw_dir
             .clone()
             .unwrap_or_else(|| self.work_dir.join("raw"))
+    }
+}
+
+/// Builder for [`PipelineConfig`] (see [`PipelineConfig::builder`] and
+/// [`PipelineConfig::for_dataset`]). Every setter overrides one knob of
+/// the [`PipelineConfig::small`] baseline; [`PipelineConfigBuilder::build`]
+/// returns the finished config.
+#[derive(Debug, Clone)]
+pub struct PipelineConfigBuilder {
+    cfg: PipelineConfig,
+}
+
+impl PipelineConfigBuilder {
+    /// Which miniature corpus to generate.
+    pub fn dataset(mut self, kind: DatasetKind) -> Self {
+        self.cfg.dataset = kind;
+        self
+    }
+
+    /// Raw-corpus override (shared corpus across runs).
+    pub fn raw_dir(mut self, dir: Option<PathBuf>) -> Self {
+        self.cfg.raw_dir = dir;
+        self
+    }
+
+    /// Artifact directory for the AOT model.
+    pub fn artifact_dir(mut self, dir: PathBuf) -> Self {
+        self.cfg.artifact_dir = dir;
+        self
+    }
+
+    /// Worker threads (or subprocesses).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.workers = n;
+        self
+    }
+
+    /// Corpus RNG seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Days of data to generate.
+    pub fn days(mut self, days: u32) -> Self {
+        self.cfg.days = days;
+        self
+    }
+
+    /// Largest raw file size, bytes.
+    pub fn max_file_bytes(mut self, bytes: u64) -> Self {
+        self.cfg.max_file_bytes = bytes;
+        self
+    }
+
+    /// Registry size (aircraft).
+    pub fn registry_size(mut self, n: usize) -> Self {
+        self.cfg.registry_size = n;
+        self
+    }
+
+    /// Per-aircraft traffic skew for the generated corpus.
+    pub fn aircraft_skew(mut self, skew: f64) -> Self {
+        self.cfg.aircraft_skew = skew;
+        self
+    }
+
+    /// Per-stage allocation modes `[organize, archive, process]`.
+    pub fn alloc(mut self, alloc: [AllocMode; 3]) -> Self {
+        self.cfg.alloc = alloc;
+        self
+    }
+
+    /// Stage-1 task order.
+    pub fn order(mut self, order: TaskOrder) -> Self {
+        self.cfg.order = order;
+        self
+    }
+
+    /// Stage-2 task order.
+    pub fn archive_order(mut self, order: TaskOrder) -> Self {
+        self.cfg.archive_order = order;
+        self
+    }
+
+    /// Stage-3 task order.
+    pub fn process_order(mut self, order: TaskOrder) -> Self {
+        self.cfg.process_order = order;
+        self
+    }
+
+    /// Launch layer (in-process threads or worker subprocesses).
+    pub fn launch(mut self, launch: LaunchMode) -> Self {
+        self.cfg.launch = launch;
+        self
+    }
+
+    /// Wire for worker subprocesses (stdio or TCP).
+    pub fn transport(mut self, transport: TransportKind) -> Self {
+        self.cfg.transport = transport;
+        self
+    }
+
+    /// Grant-level retries per task on mid-run worker deaths.
+    pub fn max_retries(mut self, n: u32) -> Self {
+        self.cfg.max_retries = n;
+        self
+    }
+
+    /// Resume from the journals under `work_dir/journal/`.
+    pub fn resume(mut self, resume: bool) -> Self {
+        self.cfg.resume = resume;
+        self
+    }
+
+    /// Stage-2 output / stage-3 input archive format.
+    pub fn format(mut self, format: ArchiveFormat) -> Self {
+        self.cfg.format = format;
+        self
+    }
+
+    /// Scheduling policy rewriting each stage's base modes and orders.
+    pub fn policy(mut self, policy: SchedPolicy) -> Self {
+        self.cfg.policy = policy;
+        self
+    }
+
+    /// Finish: the assembled configuration.
+    pub fn build(self) -> PipelineConfig {
+        self.cfg
     }
 }
 
@@ -221,7 +375,7 @@ impl Pipeline {
             self.cfg.workers,
             p.apply_order(self.cfg.order),
             p.apply_alloc(self.cfg.alloc[0]),
-            self.cfg.launch,
+            self.cfg.launch_layer(),
             &self.cfg.recovery("organize"),
         )?;
         let archive = crate::workflow::stage2::run_launched(
@@ -233,7 +387,7 @@ impl Pipeline {
             self.cfg.workers,
             p.apply_alloc(self.cfg.alloc[1]),
             p.apply_order(self.cfg.archive_order),
-            self.cfg.launch,
+            self.cfg.launch_layer(),
             &self.cfg.recovery("archive"),
         )?;
         let process = crate::workflow::stage3::run_launched(
@@ -247,7 +401,7 @@ impl Pipeline {
             self.cfg.workers,
             p.apply_order(self.cfg.process_order),
             p.apply_alloc(self.cfg.alloc[2]),
-            self.cfg.launch,
+            self.cfg.launch_layer(),
             &self.cfg.recovery("process"),
         )?;
         Ok(PipelineReport { raw_files, organize, archive, process })
@@ -263,6 +417,39 @@ impl Pipeline {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn builder_overrides_ride_on_the_small_baseline() {
+        let dir = PathBuf::from("/tmp/emproc_builder_test");
+        let cfg = PipelineConfig::builder(dir.clone())
+            .workers(2)
+            .days(1)
+            .launch(LaunchMode::Processes)
+            .transport(TransportKind::Tcp)
+            .max_retries(0)
+            .build();
+        assert_eq!(cfg.work_dir, dir);
+        assert_eq!(cfg.workers, 2);
+        assert_eq!(cfg.days, 1);
+        assert_eq!(cfg.launch, LaunchMode::Processes);
+        assert_eq!(cfg.transport, TransportKind::Tcp);
+        assert_eq!(cfg.max_retries, 0);
+        // Untouched knobs keep the small() baseline.
+        let base = PipelineConfig::small(dir.clone());
+        assert_eq!(cfg.seed, base.seed);
+        assert_eq!(cfg.registry_size, base.registry_size);
+        assert_eq!(
+            cfg.launch_layer(),
+            crate::launch::Launch::processes(TransportKind::Tcp)
+        );
+
+        // Per-dataset defaults preload the corpus skew.
+        let aero = PipelineConfig::for_dataset(DatasetKind::Aerodrome, dir.clone()).build();
+        assert_eq!(aero.dataset, DatasetKind::Aerodrome);
+        assert!(aero.aircraft_skew > 0.0);
+        let monday = PipelineConfig::for_dataset(DatasetKind::Monday, dir).build();
+        assert_eq!(monday.aircraft_skew, 0.0);
+    }
 
     #[test]
     fn full_pipeline_small() {

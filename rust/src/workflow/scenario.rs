@@ -21,7 +21,7 @@ use crate::archive::ArchiveFormat;
 use crate::bench_harness::{json, sweep};
 use crate::datasets::DatasetKind;
 use crate::dist::{Distribution, TaskOrder};
-use crate::launch::LaunchMode;
+use crate::launch::{LaunchMode, TransportKind};
 use crate::registry::Registry;
 use crate::selfsched::{AllocMode, SchedPolicy, SelfSchedConfig};
 use crate::workflow::{Pipeline, PipelineConfig, PipelineReport};
@@ -53,6 +53,9 @@ pub struct ScenarioSpec {
     /// Launch layer: worker threads in this process, or real worker
     /// subprocesses (the §II.C triples-mode dimension, laptop-capped).
     pub launch: LaunchMode,
+    /// The wire worker subprocesses speak the launch protocol over
+    /// (stdio pipes or TCP dial-back); ignored in-process.
+    pub transport: TransportKind,
     /// Stage-2/3 archive format (zip per the paper, or the columnar
     /// track store).
     pub format: ArchiveFormat,
@@ -97,7 +100,8 @@ impl ScenarioSpec {
     }
 
     /// Stable label, e.g. `aerodrome/cyclic/filename/w2` — with a
-    /// `/procs` suffix when the cell runs in real worker subprocesses, a
+    /// `/procs` suffix when the cell runs in real worker subprocesses
+    /// (plus `/tcp` when those workers dial back over TCP), a
     /// `/columnar` suffix when it runs on the columnar data plane, and a
     /// `/steal|/lpt|/adaptive` suffix when a non-`Fixed` policy rewrites
     /// the cell, so the variants of one cell sit side by side in
@@ -123,9 +127,10 @@ impl ScenarioSpec {
             order_label(self.order),
             self.workers
         );
-        let base = match self.launch {
-            LaunchMode::InProcess => base,
-            LaunchMode::Processes => format!("{base}/procs"),
+        let base = match (self.launch, self.transport) {
+            (LaunchMode::InProcess, _) => base,
+            (LaunchMode::Processes, TransportKind::Stdio) => format!("{base}/procs"),
+            (LaunchMode::Processes, TransportKind::Tcp) => format!("{base}/procs/tcp"),
         };
         let base = match self.format {
             ArchiveFormat::Zip => base,
@@ -142,25 +147,25 @@ impl ScenarioSpec {
         self.label().replace('/', "-")
     }
 
-    /// The pipeline configuration realizing this cell.
+    /// The pipeline configuration realizing this cell (through the one
+    /// shared [`PipelineConfig::builder`] path).
     pub fn pipeline_config(&self, work_dir: PathBuf, raw_dir: Option<PathBuf>) -> PipelineConfig {
-        let mut cfg = PipelineConfig::small(work_dir);
-        cfg.raw_dir = raw_dir;
-        cfg.dataset = self.dataset;
-        cfg.workers = self.workers;
-        cfg.seed = self.seed;
-        cfg.days = self.days;
-        cfg.max_file_bytes = self.max_file_bytes;
-        cfg.registry_size = self.registry_size;
-        cfg.aircraft_skew = Self::aircraft_skew(self.dataset);
-        cfg.alloc = self.alloc;
-        cfg.order = self.order;
-        cfg.archive_order = TaskOrder::FilenameSorted;
-        cfg.process_order = self.order;
-        cfg.launch = self.launch;
-        cfg.format = self.format;
-        cfg.policy = self.policy;
-        cfg
+        PipelineConfig::for_dataset(self.dataset, work_dir)
+            .raw_dir(raw_dir)
+            .workers(self.workers)
+            .seed(self.seed)
+            .days(self.days)
+            .max_file_bytes(self.max_file_bytes)
+            .registry_size(self.registry_size)
+            .alloc(self.alloc)
+            .order(self.order)
+            .archive_order(TaskOrder::FilenameSorted)
+            .process_order(self.order)
+            .launch(self.launch)
+            .transport(self.transport)
+            .format(self.format)
+            .policy(self.policy)
+            .build()
     }
 }
 
@@ -206,6 +211,8 @@ pub struct MatrixShape {
     pub seed: u64,
     /// Launch layer every cell runs under.
     pub launch: LaunchMode,
+    /// Wire every multi-process cell's workers speak over.
+    pub transport: TransportKind,
     /// Archive format every cell runs on.
     pub format: ArchiveFormat,
 }
@@ -250,6 +257,7 @@ pub fn matrix_policies(
                         registry_size: 60,
                         seed: shape.seed,
                         launch: shape.launch,
+                        transport: shape.transport,
                         format: shape.format,
                         policy,
                     });
@@ -465,6 +473,7 @@ mod tests {
             registry_size: 40,
             seed: 7,
             launch: LaunchMode::InProcess,
+            transport: TransportKind::Stdio,
             format: ArchiveFormat::Zip,
             policy: SchedPolicy::Fixed,
         }
@@ -481,6 +490,7 @@ mod tests {
             max_file_bytes: 30_000,
             seed: 9,
             launch: LaunchMode::InProcess,
+            transport: TransportKind::Stdio,
             format: ArchiveFormat::Zip,
         };
         let specs = matrix(&datasets, &strategies, &orders, shape);
@@ -499,6 +509,21 @@ mod tests {
             MatrixShape { launch: LaunchMode::Processes, ..shape },
         );
         assert!(specs.iter().all(|s| s.label().ends_with("/procs")));
+        // The transport axis only shows up in multi-process TCP labels.
+        let specs = matrix(
+            &datasets,
+            &strategies,
+            &orders,
+            MatrixShape {
+                launch: LaunchMode::Processes,
+                transport: TransportKind::Tcp,
+                ..shape
+            },
+        );
+        assert!(specs.iter().all(|s| s.label().ends_with("/procs/tcp")));
+        let specs =
+            matrix(&datasets, &strategies, &orders, MatrixShape { transport: TransportKind::Tcp, ..shape });
+        assert!(specs.iter().all(|s| !s.label().contains("tcp")), "in-process cells ignore the wire");
         // And the format axis in (and only in) columnar labels, after
         // the launch suffix.
         let specs = matrix(
@@ -525,6 +550,7 @@ mod tests {
             max_file_bytes: 12_000,
             seed: 7,
             launch: LaunchMode::InProcess,
+            transport: TransportKind::Stdio,
             format: ArchiveFormat::Zip,
         };
         let policies =

@@ -8,7 +8,7 @@
 //! free — the paper's pMatlab processes were similarly independent.
 
 use crate::dist::TaskOrder;
-use crate::launch::LaunchMode;
+use crate::launch::{Launch, LaunchMode};
 use crate::recovery::{RecoveryOptions, StageRecovery};
 use crate::registry::Registry;
 use crate::selfsched::{AllocMode, SchedTrace};
@@ -112,7 +112,7 @@ pub fn run(
         workers,
         order,
         alloc,
-        LaunchMode::InProcess,
+        Launch::in_process(),
         &RecoveryOptions::disabled(),
     )
 }
@@ -133,7 +133,7 @@ pub fn run_launched(
     workers: usize,
     order: TaskOrder,
     alloc: AllocMode,
-    launch: LaunchMode,
+    launch: Launch,
     rec: &RecoveryOptions,
 ) -> Result<OrganizeOutcome> {
     let raw = list_raw_files(&job.data_dir)?;
@@ -160,7 +160,7 @@ pub fn run_launched(
             trace: recov.merge_trace(StageRecovery::empty_trace(workers)),
         });
     }
-    if launch == LaunchMode::Processes {
+    if launch.mode == LaunchMode::Processes {
         let cmd = crate::launch::WorkerCommand::emproc(vec![
             "worker".into(),
             "--stage".into(),
@@ -178,11 +178,12 @@ pub fn run_launched(
             workers,
             alloc,
             &cmd,
-            crate::launch::RunOptions {
-                max_retries: rec.max_retries,
-                journal: recov.writer.as_mut(),
-                cost: crate::dist::CostEstimate::from_tasks(&tasks).into_vec(),
-            },
+            crate::launch::RunOptions::default()
+                .transport(launch.transport)
+                .stage("organize")
+                .max_retries(rec.max_retries)
+                .journal_opt(recov.writer.take())
+                .cost(crate::dist::CostEstimate::from_tasks(&tasks).into_vec()),
         )?;
         return Ok(OrganizeOutcome {
             files_written: (out.stat(0) + recov.prior_stat(0)) as usize,

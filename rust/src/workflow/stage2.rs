@@ -9,7 +9,7 @@ use crate::archive::columnar::archive_dir_columnar;
 use crate::archive::zipdir::{archive_dir, ArchivePlan, ArchiveTask};
 use crate::archive::ArchiveFormat;
 use crate::dist::{Distribution, TaskOrder};
-use crate::launch::LaunchMode;
+use crate::launch::{Launch, LaunchMode};
 use crate::recovery::{RecoveryOptions, StageRecovery};
 use crate::selfsched::{AllocMode, SchedTrace};
 use anyhow::Result;
@@ -58,7 +58,7 @@ pub fn run(
     alloc: AllocMode,
     order: TaskOrder,
 ) -> Result<ArchiveOutcome> {
-    run_launched(job, workers, alloc, order, LaunchMode::InProcess, &RecoveryOptions::disabled())
+    run_launched(job, workers, alloc, order, Launch::in_process(), &RecoveryOptions::disabled())
 }
 
 /// Like [`run`], but selecting the launch layer and the recovery knobs:
@@ -73,7 +73,7 @@ pub fn run_launched(
     workers: usize,
     alloc: AllocMode,
     order: TaskOrder,
-    launch: LaunchMode,
+    launch: Launch,
     rec: &RecoveryOptions,
 ) -> Result<ArchiveOutcome> {
     let plan = ArchivePlan::plan_format(&job.organized_dir, &job.archive_dir, job.format)?;
@@ -98,7 +98,7 @@ pub fn run_launched(
     let run_ordered = recov.filter_ordered(&ordered);
     let trace = if run_ordered.is_empty() {
         recov.merge_trace(StageRecovery::empty_trace(workers))
-    } else if launch == LaunchMode::Processes {
+    } else if launch.mode == LaunchMode::Processes {
         let cmd = crate::launch::WorkerCommand::emproc(vec![
             "worker".into(),
             "--stage".into(),
@@ -116,11 +116,12 @@ pub fn run_launched(
             workers,
             alloc,
             &cmd,
-            crate::launch::RunOptions {
-                max_retries: rec.max_retries,
-                journal: recov.writer.as_mut(),
-                cost: crate::dist::CostEstimate::from_tasks(&tasks).into_vec(),
-            },
+            crate::launch::RunOptions::default()
+                .transport(launch.transport)
+                .stage("archive")
+                .max_retries(rec.max_retries)
+                .journal_opt(recov.writer.take())
+                .cost(crate::dist::CostEstimate::from_tasks(&tasks).into_vec()),
         )?;
         recov.merge_trace(out.trace)
     } else {

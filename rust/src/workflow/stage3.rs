@@ -15,7 +15,7 @@
 use crate::archive::{ArchiveFormat, ColumnarReader, ZipReader};
 use crate::dem::Dem;
 use crate::geometry::Rect;
-use crate::launch::LaunchMode;
+use crate::launch::{Launch, LaunchMode};
 use crate::recovery::{RecoveryOptions, StageRecovery};
 use crate::runtime::{TrackBatch, TrackModel};
 use crate::selfsched::{AllocMode, SchedTrace};
@@ -266,7 +266,7 @@ pub fn run(
     order: crate::dist::TaskOrder,
     alloc: AllocMode,
 ) -> Result<ProcessOutcome> {
-    run_launched(job, workers, order, alloc, LaunchMode::InProcess, &RecoveryOptions::disabled())
+    run_launched(job, workers, order, alloc, Launch::in_process(), &RecoveryOptions::disabled())
 }
 
 /// Like [`run`], but selecting the launch layer and the recovery knobs:
@@ -283,7 +283,7 @@ pub fn run_launched(
     workers: usize,
     order: crate::dist::TaskOrder,
     alloc: AllocMode,
-    launch: LaunchMode,
+    launch: Launch,
     rec: &RecoveryOptions,
 ) -> Result<ProcessOutcome> {
     let archives = list_archives(&job.archive_dir, job.format)?;
@@ -312,7 +312,7 @@ pub fn run_launched(
             trace: recov.merge_trace(StageRecovery::empty_trace(workers)),
         });
     }
-    if launch == LaunchMode::Processes {
+    if launch.mode == LaunchMode::Processes {
         let cmd = crate::launch::WorkerCommand::emproc(vec![
             "worker".into(),
             "--stage".into(),
@@ -338,11 +338,12 @@ pub fn run_launched(
             workers,
             alloc,
             &cmd,
-            crate::launch::RunOptions {
-                max_retries: rec.max_retries,
-                journal: recov.writer.as_mut(),
-                cost: crate::dist::CostEstimate::from_tasks(&tasks).into_vec(),
-            },
+            crate::launch::RunOptions::default()
+                .transport(launch.transport)
+                .stage("process")
+                .max_retries(rec.max_retries)
+                .journal_opt(recov.writer.take())
+                .cost(crate::dist::CostEstimate::from_tasks(&tasks).into_vec()),
         )?;
         return Ok(ProcessOutcome {
             archives: archives.len(),

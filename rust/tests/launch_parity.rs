@@ -13,7 +13,7 @@
 use emproc::archive::ArchiveFormat;
 use emproc::datasets::DatasetKind;
 use emproc::dist::{Distribution, TaskOrder};
-use emproc::launch::LaunchMode;
+use emproc::launch::{LaunchMode, TransportKind};
 use emproc::selfsched::{AllocMode, SchedPolicy, SelfSchedConfig};
 use emproc::workflow::scenario::{run_scenario, ScenarioSpec};
 use emproc::workflow::ScenarioReport;
@@ -43,6 +43,7 @@ fn spec(alloc: AllocMode, launch: LaunchMode) -> ScenarioSpec {
         registry_size: 40,
         seed: 7,
         launch,
+        transport: TransportKind::Stdio,
         format: ArchiveFormat::Zip,
         policy: SchedPolicy::Fixed,
     }

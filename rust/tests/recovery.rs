@@ -17,7 +17,7 @@
 use emproc::archive::ArchiveFormat;
 use emproc::datasets::DatasetKind;
 use emproc::dist::TaskOrder;
-use emproc::launch::LaunchMode;
+use emproc::launch::{LaunchMode, TransportKind};
 use emproc::selfsched::{AllocMode, SchedPolicy, SelfSchedConfig};
 use emproc::workflow::scenario::{run_scenario, ScenarioSpec};
 use std::collections::BTreeMap;
@@ -85,6 +85,7 @@ fn worker_killed_mid_selfsched_processes_run_recovers_byte_identically() {
         registry_size: 40,
         seed: 7,
         launch: LaunchMode::Processes,
+        transport: TransportKind::Stdio,
         format: ArchiveFormat::Zip,
         policy: SchedPolicy::Fixed,
     };

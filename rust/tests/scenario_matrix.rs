@@ -7,7 +7,7 @@ use emproc::archive::ArchiveFormat;
 use emproc::bench_harness::json;
 use emproc::datasets::DatasetKind;
 use emproc::dist::{Distribution, TaskOrder};
-use emproc::launch::LaunchMode;
+use emproc::launch::{LaunchMode, TransportKind};
 use emproc::selfsched::{AllocMode, SchedPolicy, SelfSchedConfig};
 use emproc::workflow::scenario;
 use std::path::PathBuf;
@@ -43,6 +43,7 @@ fn matrix_runs_both_datasets_and_gates_cleanly() {
             max_file_bytes: 20_000,
             seed: 11,
             launch: LaunchMode::InProcess,
+            transport: TransportKind::Stdio,
             format: ArchiveFormat::Zip,
         },
     );
@@ -139,6 +140,7 @@ fn policy_wins_hold_on_the_real_executor() {
             registry_size: 40,
             seed: 13,
             launch: LaunchMode::InProcess,
+            transport: TransportKind::Stdio,
             format: ArchiveFormat::Zip,
             policy,
         };

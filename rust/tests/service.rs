@@ -1,0 +1,173 @@
+//! emprocd daemon acceptance (PR-9): two concurrent submissions run as
+//! an admission-controlled FIFO in isolated per-job run dirs whose
+//! outputs are byte-identical to in-process reference pipelines, and a
+//! malformed submission is rejected with a typed `rejected` reply
+//! instead of poisoning the queue.
+
+use emproc::service::{self, ServiceConfig};
+use emproc::workflow::Pipeline;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+
+const MONDAY_SPEC: &str = "{\"dataset\": \"monday\", \"workers\": 2, \"scale\": 0.4, \"seed\": 5}";
+const AERO_SPEC: &str = "{\"dataset\": \"aerodrome\", \"workers\": 2, \"scale\": 0.4, \"seed\": 5}";
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("emproc_svc_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Every file under `root`, as relative path -> contents.
+fn dir_map(root: &Path) -> BTreeMap<String, Vec<u8>> {
+    let mut out = BTreeMap::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let entry = entry.unwrap();
+            let path = entry.path();
+            if entry.file_type().unwrap().is_dir() {
+                stack.push(path);
+            } else {
+                let rel = path.strip_prefix(root).unwrap().to_string_lossy().into_owned();
+                out.insert(rel, std::fs::read(&path).unwrap());
+            }
+        }
+    }
+    out
+}
+
+/// A daemon job dir must match its in-process reference byte for byte:
+/// organized and processed trees, and the archive *set* (zip metadata
+/// may differ; members derive from stage 1).
+fn assert_job_matches_reference(job_dir: &Path, ref_dir: &Path) {
+    assert_eq!(
+        dir_map(&ref_dir.join("organized")),
+        dir_map(&job_dir.join("organized")),
+        "organized trees differ"
+    );
+    let arch_ref: Vec<String> = dir_map(&ref_dir.join("archived")).into_keys().collect();
+    let arch_job: Vec<String> = dir_map(&job_dir.join("archived")).into_keys().collect();
+    assert!(!arch_ref.is_empty());
+    assert_eq!(arch_ref, arch_job, "archive sets differ");
+    let proc_ref = dir_map(&ref_dir.join("processed"));
+    assert!(!proc_ref.is_empty());
+    assert_eq!(proc_ref, dir_map(&job_dir.join("processed")), "processed outputs differ");
+}
+
+#[test]
+fn two_concurrent_submissions_run_fifo_in_isolated_dirs() {
+    let base = tmp("daemon");
+    let handle = service::start(ServiceConfig {
+        addr: "127.0.0.1:0".to_string(),
+        base_dir: base.clone(),
+        max_queue: 4,
+        pool: None,
+    })
+    .unwrap();
+    let addr = handle.addr().to_string();
+
+    // Submit both mini-corpus pipelines concurrently from two clients.
+    let threads: Vec<_> = [MONDAY_SPEC, AERO_SPEC]
+        .into_iter()
+        .map(|spec| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut events = Vec::new();
+                let id = service::submit_job(&addr, spec, &mut |line| {
+                    events.push(line.to_string());
+                })
+                .unwrap();
+                (id, events)
+            })
+        })
+        .collect();
+    let mut ids = Vec::new();
+    for t in threads {
+        let (id, events) = t.join().unwrap();
+        // Full lifecycle on the submitting connection, in order.
+        assert_eq!(events[0], format!("queued {id}"));
+        assert_eq!(events[1], format!("status {id} running"));
+        assert!(events[2].starts_with(&format!("done {id} raw=")), "{events:?}");
+        ids.push(id);
+    }
+    ids.sort();
+    assert_eq!(ids, vec!["job-1", "job-2"], "ids are allocated FIFO");
+
+    // The listing agrees, and each job ran in its own isolated dir.
+    let listing = service::list_jobs(&addr).unwrap();
+    assert_eq!(listing.len(), 2);
+    assert!(listing.iter().all(|l| l.contains(" done ")), "{listing:?}");
+    let dir_of = |dataset: &str| -> PathBuf {
+        let line = listing
+            .iter()
+            .find(|l| l.split_whitespace().nth(3) == Some(dataset))
+            .unwrap_or_else(|| panic!("no {dataset} job in {listing:?}"));
+        PathBuf::from(line.split_whitespace().nth(4).unwrap())
+    };
+    let monday_dir = dir_of("monday");
+    let aero_dir = dir_of("aerodrome");
+    assert_ne!(monday_dir, aero_dir);
+    assert!(monday_dir.starts_with(base.join("jobs")));
+    assert!(aero_dir.starts_with(base.join("jobs")));
+
+    // Byte-identical to in-process reference pipelines built through the
+    // very same spec -> builder path.
+    let ref_monday = tmp("ref_monday");
+    let ref_aero = tmp("ref_aero");
+    for (spec, dir) in [(MONDAY_SPEC, &ref_monday), (AERO_SPEC, &ref_aero)] {
+        let cfg = service::spec_to_config(spec, dir.clone(), None).unwrap();
+        Pipeline::new(cfg).generate_and_run().unwrap();
+    }
+    assert_job_matches_reference(&monday_dir, &ref_monday);
+    assert_job_matches_reference(&aero_dir, &ref_aero);
+
+    handle.shutdown();
+    for dir in [base, ref_monday, ref_aero] {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn malformed_submissions_are_rejected_with_a_typed_reply() {
+    let base = tmp("reject");
+    let handle = service::start(ServiceConfig {
+        addr: "127.0.0.1:0".to_string(),
+        base_dir: base.clone(),
+        max_queue: 4,
+        pool: None,
+    })
+    .unwrap();
+    let addr = handle.addr().to_string();
+
+    // Raw-wire check: the reply is exactly one `rejected <reason>` line.
+    let reject_line = |submission: &str| -> String {
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        writeln!(stream, "submit {submission}").unwrap();
+        let mut line = String::new();
+        BufReader::new(stream.try_clone().unwrap()).read_line(&mut line).unwrap();
+        line.trim_end().to_string()
+    };
+    let r = reject_line("this is not json");
+    assert!(r.starts_with("rejected "), "{r}");
+    assert!(r.contains("malformed job spec"), "{r}");
+    let r = reject_line("{\"dataset\": \"mars\"}");
+    assert!(r.starts_with("rejected "), "{r}");
+    let r = reject_line("{\"frobnicate\": 1}");
+    assert!(r.starts_with("rejected "), "{r}");
+    assert!(r.contains("unknown job-spec key 'frobnicate'"), "{r}");
+    // Nested documents are a spec error, not a crash.
+    let r = reject_line("{\"dataset\": {\"kind\": \"monday\"}}");
+    assert!(r.starts_with("rejected "), "{r}");
+
+    // The client helper surfaces the rejection as a typed error, and
+    // nothing was ever queued.
+    let err = service::submit_job(&addr, "{\"seed\": \"NaNaNaN\"}", &mut |_| {}).unwrap_err();
+    assert!(err.to_string().contains("submission rejected"), "{err:#}");
+    assert!(service::list_jobs(&addr).unwrap().is_empty());
+
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&base);
+}

@@ -1,0 +1,187 @@
+//! Transport parity: the same scenario spec + seed must produce
+//! byte-identical stage outputs whether its worker subprocesses speak the
+//! launch protocol over stdio pipes or over TCP dial-back — and a TCP
+//! worker `kill -9`'d mid self-scheduled run must be requeued onto the
+//! survivors exactly like a dead stdio subprocess (the PR-9 fault gate).
+//!
+//! Worker subprocesses are the real `emproc` binary (exposed to tests as
+//! `CARGO_BIN_EXE_emproc`, wired through the `EMPROC_WORKER_BIN`
+//! override exactly like `tests/launch_parity.rs`).
+
+use emproc::archive::ArchiveFormat;
+use emproc::datasets::DatasetKind;
+use emproc::dist::TaskOrder;
+use emproc::launch::{LaunchMode, TransportKind};
+use emproc::selfsched::{AllocMode, SchedPolicy, SelfSchedConfig};
+use emproc::workflow::scenario::{run_scenario, ScenarioSpec};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// The kill test arms process-global fault-injection env vars; runs that
+/// spawn workers must not overlap with it.
+static FAULT_ENV: Mutex<()> = Mutex::new(());
+
+fn use_real_worker_binary() {
+    // Idempotent: every test sets the same value.
+    std::env::set_var("EMPROC_WORKER_BIN", env!("CARGO_BIN_EXE_emproc"));
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("emproc_tpar_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn spec(alloc: AllocMode, transport: TransportKind) -> ScenarioSpec {
+    ScenarioSpec {
+        dataset: DatasetKind::Monday,
+        alloc: [alloc; 3],
+        order: TaskOrder::FilenameSorted,
+        workers: 2,
+        days: 1,
+        max_file_bytes: 12_000,
+        registry_size: 40,
+        seed: 7,
+        launch: LaunchMode::Processes,
+        transport,
+        format: ArchiveFormat::Zip,
+        policy: SchedPolicy::Fixed,
+    }
+}
+
+fn selfsched() -> AllocMode {
+    AllocMode::SelfSched(SelfSchedConfig { poll_s: 0.01, ..Default::default() })
+}
+
+/// Every file under `root`, as relative path -> contents.
+fn dir_map(root: &Path) -> BTreeMap<String, Vec<u8>> {
+    let mut out = BTreeMap::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let entry = entry.unwrap();
+            let path = entry.path();
+            if entry.file_type().unwrap().is_dir() {
+                stack.push(path);
+            } else {
+                let rel = path.strip_prefix(root).unwrap().to_string_lossy().into_owned();
+                out.insert(rel, std::fs::read(&path).unwrap());
+            }
+        }
+    }
+    out
+}
+
+/// The PR-9 parity bar: organized + processed trees byte-for-byte, and
+/// identical archive sets (zip *names*; members derive from stage 1).
+fn assert_trees_identical(a_dir: &Path, b_dir: &Path) {
+    let org_a = dir_map(&a_dir.join("organized"));
+    let org_b = dir_map(&b_dir.join("organized"));
+    assert!(!org_a.is_empty(), "reference organized tree is empty");
+    assert_eq!(org_a, org_b, "organized trees differ");
+    let arch_a: Vec<String> = dir_map(&a_dir.join("archived")).into_keys().collect();
+    let arch_b: Vec<String> = dir_map(&b_dir.join("archived")).into_keys().collect();
+    assert!(!arch_a.is_empty(), "reference archive set is empty");
+    assert_eq!(arch_a, arch_b, "archive sets differ");
+    let proc_a = dir_map(&a_dir.join("processed"));
+    let proc_b = dir_map(&b_dir.join("processed"));
+    assert!(!proc_a.is_empty(), "reference processed tree is empty");
+    assert_eq!(proc_a, proc_b, "processed outputs differ");
+}
+
+#[test]
+fn selfsched_stdio_and_tcp_are_byte_identical_with_equal_message_counts() {
+    let _serial = FAULT_ENV.lock().unwrap_or_else(|e| e.into_inner());
+    use_real_worker_binary();
+    let dir_s = tmp("ss_stdio");
+    let dir_t = tmp("ss_tcp");
+    let a = run_scenario(&spec(selfsched(), TransportKind::Stdio), &dir_s).unwrap();
+    let b = run_scenario(&spec(selfsched(), TransportKind::Tcp), &dir_t).unwrap();
+    assert_trees_identical(&dir_s, &dir_t);
+    // The wire must be invisible to the protocol: same grant messages
+    // (one task each at tasks_per_message=1), same task totals, same
+    // worker counts, stage by stage.
+    for (s1, s2, stage) in [
+        (&a.report.organize.trace, &b.report.organize.trace, "organize"),
+        (&a.report.archive.trace, &b.report.archive.trace, "archive"),
+        (&a.report.process.trace, &b.report.process.trace, "process"),
+    ] {
+        assert_eq!(s1.messages_sent, s2.messages_sent, "{stage} messages");
+        assert_eq!(
+            s1.tasks_per_worker.iter().sum::<usize>(),
+            s2.tasks_per_worker.iter().sum::<usize>(),
+            "{stage} task totals"
+        );
+        assert_eq!(s1.tasks_per_worker.len(), s2.tasks_per_worker.len(), "{stage} workers");
+    }
+    // The TCP cell advertises its wire in its label; stdio stays bare.
+    assert!(b.label.ends_with("/procs/tcp"), "{}", b.label);
+    assert!(a.label.ends_with("/procs"), "{}", a.label);
+    let _ = std::fs::remove_dir_all(&dir_s);
+    let _ = std::fs::remove_dir_all(&dir_t);
+}
+
+#[test]
+fn batch_modes_match_across_the_wire_including_assignment() {
+    let _serial = FAULT_ENV.lock().unwrap_or_else(|e| e.into_inner());
+    use_real_worker_binary();
+    let dir_s = tmp("cyc_stdio");
+    let dir_t = tmp("cyc_tcp");
+    let cyc = AllocMode::Batch(emproc::dist::Distribution::Cyclic);
+    let a = run_scenario(&spec(cyc, TransportKind::Stdio), &dir_s).unwrap();
+    let b = run_scenario(&spec(cyc, TransportKind::Tcp), &dir_t).unwrap();
+    assert_trees_identical(&dir_s, &dir_t);
+    // Pre-distributed assignment is deterministic: identical per-worker
+    // splits wire for wire, and zero allocation messages on both.
+    assert_eq!(
+        a.report.organize.trace.tasks_per_worker,
+        b.report.organize.trace.tasks_per_worker
+    );
+    assert_eq!(
+        a.report.process.trace.tasks_per_worker,
+        b.report.process.trace.tasks_per_worker
+    );
+    assert_eq!(a.report.organize.trace.messages_sent, 0);
+    assert_eq!(b.report.organize.trace.messages_sent, 0);
+    let _ = std::fs::remove_dir_all(&dir_s);
+    let _ = std::fs::remove_dir_all(&dir_t);
+}
+
+#[test]
+fn tcp_worker_killed_mid_run_is_requeued_onto_the_survivors() {
+    let _serial = FAULT_ENV.lock().unwrap_or_else(|e| e.into_inner());
+    use_real_worker_binary();
+    let ref_dir = tmp("kill_ref");
+    let fault_dir = tmp("kill_fault");
+    let tcp_spec = spec(selfsched(), TransportKind::Tcp);
+    let reference = run_scenario(&tcp_spec, &ref_dir).unwrap();
+
+    // Arm the fault: the TCP worker that finishes organize task 1 is
+    // kill -9'd before acknowledging it (once, via the lock file). The
+    // manager must see the dead connection, requeue the undelivered
+    // grant onto the survivor, and finish — exactly the stdio semantics.
+    let once = std::env::temp_dir().join(format!("emproc_tpar_once_{}", std::process::id()));
+    let _ = std::fs::remove_file(&once);
+    std::env::set_var("EMPROC_FAULT_KILL", "organize:1");
+    std::env::set_var("EMPROC_FAULT_ONCE", &once);
+    let fault = run_scenario(&tcp_spec, &fault_dir);
+    std::env::remove_var("EMPROC_FAULT_KILL");
+    std::env::remove_var("EMPROC_FAULT_ONCE");
+    let fault = fault.expect("retry must carry the TCP run past the killed worker");
+
+    assert!(once.exists(), "the armed fault must actually have killed a worker");
+    assert_eq!(fault.report.raw_files, reference.report.raw_files);
+    assert_eq!(fault.report.organize.files_written, reference.report.organize.files_written);
+    assert_eq!(fault.report.organize.observations, reference.report.organize.observations);
+    assert_eq!(
+        fault.report.organize.trace.tasks_per_worker.iter().sum::<usize>(),
+        fault.report.raw_files,
+        "every organize task completes exactly once despite the death"
+    );
+    assert_eq!(fault.report.process.segments, reference.report.process.segments);
+    assert_trees_identical(&ref_dir, &fault_dir);
+    let _ = std::fs::remove_file(&once);
+    let _ = std::fs::remove_dir_all(&ref_dir);
+    let _ = std::fs::remove_dir_all(&fault_dir);
+}
