@@ -126,6 +126,7 @@ fn main() {
             tasks_per_worker: vec![],
             messages_sent: traces.iter().map(|t| t.messages_sent).sum(),
             steals: traces.iter().map(|t| t.steals).sum(),
+            latency: None,
         };
         json::record_timed(
             "throughput tableI sweep (9 cells)",

@@ -161,17 +161,28 @@ pub mod json {
         /// Wall-clock seconds spent producing the scenario (0 = untimed);
         /// `tasks / wall_s` is the scenario's simulator throughput.
         wall_s: f64,
+        /// `[p50, p95, p99]` latency seconds when the producer measured
+        /// per-item latency (streaming ingest, in-process executors).
+        latency_s: Option<[f64; 3]>,
     }
 
     static SCENARIOS: Mutex<Vec<Scenario>> = Mutex::new(Vec::new());
 
-    fn push(name: &str, job_time_s: f64, messages_sent: usize, tasks: usize, wall_s: f64) {
+    fn push(
+        name: &str,
+        job_time_s: f64,
+        messages_sent: usize,
+        tasks: usize,
+        wall_s: f64,
+        latency_s: Option<[f64; 3]>,
+    ) {
         SCENARIOS.lock().unwrap_or_else(std::sync::PoisonError::into_inner).push(Scenario {
             name: name.to_string(),
             job_time_s,
             messages_sent,
             tasks,
             wall_s,
+            latency_s,
         });
     }
 
@@ -179,20 +190,27 @@ pub mod json {
     /// carry no `tasks_per_sec` and are invisible to the bench-check
     /// gate; prefer [`record_timed`] for simulator scenarios).
     pub fn record(name: &str, job_time_s: f64, messages_sent: usize) {
-        push(name, job_time_s, messages_sent, 0, 0.0);
+        push(name, job_time_s, messages_sent, 0, 0.0, None);
     }
 
     /// Record a trace together with its simulator throughput inputs: how
     /// many tasks the run simulated and the wall-clock seconds it took.
     /// Timed scenarios carry a `tasks_per_sec` figure in the JSON, and
     /// the file gets an aggregate one — the cross-PR perf trajectory.
+    /// When the trace carries per-task latency samples the scenario
+    /// also gets `latency_p50_s`/`p95`/`p99` fields.
     pub fn record_timed(
         name: &str,
         trace: &crate::selfsched::SchedTrace,
         tasks: usize,
         wall_s: f64,
     ) {
-        push(name, trace.job_time, trace.messages_sent, tasks, wall_s);
+        let latency = trace
+            .latency
+            .as_ref()
+            .filter(|p| !p.is_empty())
+            .map(crate::metrics::Percentiles::summary);
+        push(name, trace.job_time, trace.messages_sent, tasks, wall_s, latency);
     }
 
     /// Record a plain throughput measurement with no scheduler trace
@@ -200,7 +218,22 @@ pub mod json {
     /// wall-clock seconds. Carries a `tasks_per_sec` figure and counts
     /// toward the file aggregate like any timed scenario.
     pub fn record_throughput(name: &str, tasks: usize, wall_s: f64) {
-        push(name, wall_s, 0, tasks, wall_s);
+        push(name, wall_s, 0, tasks, wall_s, None);
+    }
+
+    /// Record a throughput measurement together with end-to-end latency
+    /// percentiles (streaming ingest: observation→processed-row). The
+    /// scenario gates *both* ways in `bench-check`: throughput must not
+    /// fall below the baseline floor and p99 latency must not rise above
+    /// the baseline ceiling.
+    pub fn record_latency(
+        name: &str,
+        tasks: usize,
+        wall_s: f64,
+        latency: &crate::metrics::Percentiles,
+    ) {
+        let summary = if latency.is_empty() { None } else { Some(latency.summary()) };
+        push(name, wall_s, 0, tasks, wall_s, summary);
     }
 
     /// Drop everything recorded so far (between unrelated bench targets).
@@ -247,14 +280,22 @@ pub mod json {
             } else {
                 String::new()
             };
+            let latency = match s.latency_s {
+                Some([p50, p95, p99]) => format!(
+                    ", \"latency_p50_s\": {p50:.6}, \"latency_p95_s\": {p95:.6}, \
+                     \"latency_p99_s\": {p99:.6}"
+                ),
+                None => String::new(),
+            };
             body.push_str(&format!(
                 "    {{\"scenario\": \"{}\", \"job_time_s\": {:.6}, \"messages_sent\": {}, \
-                 \"tasks\": {}{}}}{}\n",
+                 \"tasks\": {}{}{}}}{}\n",
                 escape(&s.name),
                 s.job_time_s,
                 s.messages_sent,
                 s.tasks,
                 timing,
+                latency,
                 if i + 1 < scenarios.len() { "," } else { "" }
             ));
         }
@@ -310,6 +351,39 @@ pub mod json {
             }
         }
         Ok((file_level, scenarios))
+    }
+
+    /// Parse every scenario's `(name, latency_p99_s)` from a
+    /// `BENCH_*.json` written by [`write_file`]. Scenarios without a
+    /// latency triple are legitimately absent and skipped; a p99 that is
+    /// present but unparseable, negative, or non-finite fails with
+    /// `InvalidData` (same hardening rationale as [`read_throughput`]).
+    pub fn read_latency(path: &Path) -> std::io::Result<Vec<(String, f64)>> {
+        let bad = |msg: String| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("{}: {msg}", path.display()),
+            )
+        };
+        let text = std::fs::read_to_string(path)?;
+        if !text.lines().any(|l| extract_str(l, "\"bench\": \"").is_some()) {
+            return Err(bad("missing \"bench\" header — not a BENCH_*.json".into()));
+        }
+        let mut scenarios = Vec::new();
+        for line in text.lines() {
+            let Some(name) = extract_str(line, "\"scenario\": \"") else { continue };
+            match extract_num(line, "\"latency_p99_s\": ") {
+                None => {}
+                Some(Ok(p99)) if p99.is_finite() && p99 >= 0.0 => scenarios.push((name, p99)),
+                Some(Ok(p99)) => {
+                    return Err(bad(format!("latency {p99} is not a sane p99 figure")))
+                }
+                Some(Err(raw)) => {
+                    return Err(bad(format!("cannot parse latency_p99_s from '{raw}'")))
+                }
+            }
+        }
+        Ok(scenarios)
     }
 
     /// The quoted, `escape`d string following `key` on `line`, unescaped.
@@ -476,6 +550,7 @@ mod tests {
             tasks_per_worker: vec![],
             messages_sent: 3,
             steals: 0,
+            latency: None,
         };
         json::record_timed("timed", &trace, 5000, 0.5);
         json::record("untimed", 1.0, 0);
@@ -483,8 +558,46 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.contains("\"tasks_per_sec\": 10000.0"), "{text}");
         let (file_tps, scenarios) = json::read_throughput(&path).unwrap();
+        assert_eq!(json::read_latency(&path).unwrap(), vec![]);
         let _ = std::fs::remove_file(&path);
         assert_eq!(file_tps, 10000.0);
         assert_eq!(scenarios, vec![("timed".to_string(), 10000.0)]);
+
+        // Latency-bearing scenarios emit the percentile triple, both via
+        // record_latency and via a trace that carries samples; both are
+        // visible to the read_latency gate.
+        let p = crate::metrics::Percentiles::from_samples(vec![0.25, 0.5, 1.0]);
+        json::record_latency("streamed", 200, 2.0, &p);
+        let with_samples = crate::selfsched::SchedTrace {
+            latency: Some(crate::metrics::Percentiles::from_samples(vec![2.0; 4])),
+            ..trace
+        };
+        json::record_timed("traced", &with_samples, 100, 1.0);
+        let path = json::write_file("harness_lat").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"latency_p50_s\": 0.500000"), "{text}");
+        assert!(text.contains("\"latency_p99_s\": 1.000000"), "{text}");
+        let lat = json::read_latency(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(
+            lat,
+            vec![("streamed".to_string(), 1.0), ("traced".to_string(), 2.0)]
+        );
+    }
+
+    #[test]
+    fn read_latency_rejects_malformed_and_insane_numbers() {
+        for (tag, p99) in [("latnan", "NaN"), ("latneg", "-1.0"), ("latjunk", "slow")] {
+            let text = format!(
+                "{{\n  \"bench\": \"t\",\n  \"scenarios\": [\n    {{\"scenario\": \"s\", \
+                 \"latency_p99_s\": {p99}}}\n  ]\n}}\n"
+            );
+            let path = std::env::temp_dir()
+                .join(format!("emproc_bench_lat_{tag}_{}.json", std::process::id()));
+            std::fs::write(&path, text).unwrap();
+            let err = json::read_latency(&path).unwrap_err();
+            let _ = std::fs::remove_file(&path);
+            assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{tag}");
+        }
     }
 }

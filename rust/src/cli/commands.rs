@@ -62,18 +62,33 @@ COMMANDS:
   (--max-retries, default 2; plain block/cyclic batch runs fail fast —
   pre-assignment has no one to requeue to), and a killed job is finished
   by rerunning with --resume DIR.
-  serve      run the emprocd job daemon: accepts line-delimited pipeline
-             job submissions over TCP (admission-controlled FIFO, one
+  serve      run the emprocd job daemon: accepts line-delimited job
+             submissions over TCP (admission-controlled FIFO, one
              persistent worker pool, per-job isolated run dirs under
              DIR/jobs/job-N/)
       --dir DIR [--addr HOST:PORT] [--max-queue N] [--pool N]
-  submit     submit one pipeline job to a running daemon and stream its
-             queued/status/done/failed event lines
+  submit     submit one job to a running daemon and stream its
+             queued/status/done/failed event lines; the spec is validated
+             client-side and sent in canonical form
       --addr HOST:PORT (--spec JSON | --spec-file FILE)
-      spec keys: dataset workers seed scale launch transport max_retries
-      format policy (flat JSON; same semantics as the pipeline flags)
+      spec: flat JSON with optional \"v\" (version, 1) and \"job\"
+      (pipeline|ingest); pipeline keys: dataset workers seed scale launch
+      transport max_retries format policy (same semantics as the pipeline
+      flags); ingest keys: feed window lateness format year
   jobs       list a running daemon's jobs (id, state, dataset, run dir)
       --addr HOST:PORT
+  replay     publish a generated raw corpus as a live observation feed
+             (line-delimited, one event per line; feed *content* is
+             deterministic under --seed at any --rate)
+      --data DIR [--rate F] [--seed N] [--jitter S] [--disorder S]
+      [--out FILE|-]
+  ingest     consume a feed (file, or - for stdin): bucket observations
+             into event-time windows, close them on per-source watermarks,
+             and incrementally re-run organize -> archive -> process over
+             each closing window; prints observation->processed-row
+             latency percentiles (DESIGN.md §15)
+      --feed FILE|- --out DIR [--window S] [--lateness S]
+      [--format zip|columnar] [--year Y] [--artifacts DIR] [--resume]
   queries    §III.B aerodrome query generation (geometry pipeline)
       --out FILE [--aerodromes N] [--seed N]
   bench <EXP|all>   regenerate a paper table/figure on the simulator
@@ -82,7 +97,13 @@ COMMANDS:
       generated corpus -> BENCH_columnar.json
       [--tracks N] [--obs-per-track M] [--tracks-per-archive K] [--seed N]
       [--data DIR] [--min-speedup F]
-  bench-check  gate a BENCH_*.json against a committed throughput baseline
+      also: streaming — replay a generated mini corpus into an in-process
+      ingest at each --rates multiplier, measuring observation->processed
+      latency percentiles and sustained throughput -> BENCH_streaming.json
+      [--rates R1,R2,...] [--window S] [--seed N]
+  bench-check  gate a BENCH_*.json against a committed baseline:
+      tasks_per_sec floors, and latency_p99_s ceilings where the baseline
+      carries them
       --current FILE --baseline FILE [--tolerance F]   (default 0.30)
   check      exhaustively model-check the §II.D scheduling protocol: every
              interleaving of grants, steals, completions and worker deaths
@@ -128,6 +149,8 @@ pub fn dispatch(args: &[String]) -> Result<()> {
         "serve" => cmd_serve(rest),
         "submit" => cmd_submit(rest),
         "jobs" => cmd_jobs(rest),
+        "replay" => cmd_replay(rest),
+        "ingest" => cmd_ingest(rest),
         "queries" => cmd_queries(rest),
         "bench" => cmd_bench(rest),
         "bench-check" => cmd_bench_check(rest),
@@ -214,6 +237,16 @@ fn cmd_jobs(args: &[String]) -> Result<()> {
     crate::service::jobs(&a)
 }
 
+fn cmd_replay(args: &[String]) -> Result<()> {
+    let a = ArgParser::parse(args, &[])?;
+    crate::stream::replay::cmd(&a)
+}
+
+fn cmd_ingest(args: &[String]) -> Result<()> {
+    let a = ArgParser::parse(args, &["resume"])?;
+    crate::stream::ingest::cmd(&a)
+}
+
 fn cmd_queries(args: &[String]) -> Result<()> {
     let a = ArgParser::parse(args, &[])?;
     crate::workflow::commands::queries(&a)
@@ -297,11 +330,13 @@ fn cmd_xtask(args: &[String]) -> Result<()> {
     }
 }
 
-/// Compare the `tasks_per_sec` figures of a freshly produced
-/// `BENCH_*.json` against a committed baseline; fail when any baseline
-/// scenario regresses by more than `--tolerance` (CI's quick-mode perf
-/// gate). Baseline scenarios with no throughput figure are skipped, so
-/// the committed file controls exactly what is gated.
+/// Compare a freshly produced `BENCH_*.json` against a committed
+/// baseline; fail when any baseline scenario's `tasks_per_sec` regresses
+/// by more than `--tolerance`, or — for baseline scenarios that carry a
+/// `latency_p99_s` ceiling — when the current p99 exceeds it by more
+/// than the same tolerance (CI's quick-mode perf gate). Baseline
+/// scenarios with neither figure are skipped, so the committed file
+/// controls exactly what is gated.
 fn cmd_bench_check(args: &[String]) -> Result<()> {
     let a = ArgParser::parse(args, &[])?;
     let current = a.required("current")?;
@@ -336,15 +371,45 @@ fn cmd_bench_check(args: &[String]) -> Result<()> {
     if base_file > 0.0 {
         failed |= !check("<file aggregate>", cur_file, base_file);
     }
+    // Latency gate: a baseline scenario carrying a p99 ceiling pins the
+    // current run's p99 to ceiling x (1 + tolerance). Lower is better,
+    // so the ratio test runs the other way from throughput.
+    let base_lat =
+        crate::bench_harness::json::read_latency(std::path::Path::new(baseline))?;
+    let lat_gated = base_lat.iter().filter(|(_, p99)| *p99 > 0.0).count();
+    if lat_gated > 0 {
+        let cur_lat =
+            crate::bench_harness::json::read_latency(std::path::Path::new(current))?;
+        for (bname, bp99) in &base_lat {
+            if *bp99 <= 0.0 {
+                continue;
+            }
+            match cur_lat.iter().find(|(n, _)| n == bname) {
+                Some((_, cp99)) => {
+                    let ratio = cp99 / bp99;
+                    let ok = ratio <= 1.0 + tolerance;
+                    println!(
+                        "{} {bname}: p99 {cp99:.3}s vs ceiling {bp99:.3}s (x{ratio:.2})",
+                        if ok { "ok  " } else { "FAIL" }
+                    );
+                    failed |= !ok;
+                }
+                None => {
+                    println!("FAIL {bname}: no latency_p99_s in {current}");
+                    failed = true;
+                }
+            }
+        }
+    }
     if failed {
         bail!(
-            "throughput regressed more than {:.0}% against {baseline}",
+            "bench-check failed against {baseline} (tolerance {:.0}%)",
             tolerance * 100.0
         );
     }
     println!(
         "bench-check passed ({} gated scenarios)",
-        base.iter().filter(|(_, t)| *t > 0.0).count()
+        base.iter().filter(|(_, t)| *t > 0.0).count() + lat_gated
     );
     Ok(())
 }

@@ -17,6 +17,7 @@
 //! matters for the numbers).
 
 use crate::dist::{distribute, Distribution};
+use crate::metrics::Percentiles;
 use crate::sched::{Manager, WorkerLog};
 use crate::selfsched::{SchedTrace, SelfSchedConfig};
 use anyhow::{anyhow, Result};
@@ -96,6 +97,12 @@ where
         task_rxs.push(rx);
     }
 
+    // Per-task service-time samples for the trace's `latency` field:
+    // workers record each message's busy time split evenly over its tasks
+    // *before* reporting the completion, so every grant the manager has
+    // accounted for has its samples in place.
+    let samples = std::sync::Mutex::new(Vec::<f64>::new());
+
     std::thread::scope(|scope| -> Result<SchedTrace> {
         // Workers. Per-worker state is created inside the thread so it
         // never has to be Send.
@@ -103,6 +110,7 @@ where
             let done_tx = done_tx.clone();
             let work = &work;
             let init = &init;
+            let samples = &samples;
             scope.spawn(move || {
                 let mut state = match catch_panics(|| init(w)) {
                     Ok(s) => s,
@@ -112,8 +120,10 @@ where
                     }
                 };
                 while let Ok(msg) = rx.recv() {
+                    let ntasks_in_msg = msg.len();
                     let began = Instant::now();
                     let mut result = Ok(());
+                    let mut completed = 0usize;
                     for ti in msg {
                         // A panicking task is reported exactly like a
                         // failing one; letting it unwind the thread would
@@ -123,8 +133,16 @@ where
                             result = Err(e);
                             break;
                         }
+                        completed += 1;
                     }
                     let busy = began.elapsed().as_secs_f64();
+                    if completed > 0 {
+                        let per_task = busy / ntasks_in_msg as f64;
+                        let mut s = samples
+                            .lock()
+                            .unwrap_or_else(std::sync::PoisonError::into_inner);
+                        s.extend(std::iter::repeat(per_task).take(completed));
+                    }
                     if done_tx.send((w, result, busy)).is_err() {
                         break; // manager gone
                     }
@@ -204,12 +222,126 @@ where
         if let Some(e) = first_error {
             return Err(e);
         }
-        Ok(mgr.into_trace(job_start.elapsed().as_secs_f64()))
+        let mut trace = mgr.into_trace(job_start.elapsed().as_secs_f64());
+        // Every completed grant pushed its samples before reporting, so
+        // draining here (after outstanding hit 0) sees them all.
+        let drained = std::mem::take(
+            &mut *samples.lock().unwrap_or_else(std::sync::PoisonError::into_inner),
+        );
+        trace.latency = Some(Percentiles::from_samples(drained));
+        Ok(trace)
     })
 }
 
-/// Batch counterpart: pre-distribute `ordered` across workers (block or
-/// cyclic) and run with no manager involvement.
+/// How a [`BatchOptions`] run assigns tasks to workers.
+#[derive(Debug)]
+enum Assign {
+    /// Distribute an ordered task list across `nworkers` at run time.
+    Dist { ordered: Vec<usize>, nworkers: usize, dist: Distribution },
+    /// Caller-supplied per-worker queues (e.g. cost-guided LPT packing).
+    Queues(Vec<Vec<usize>>),
+}
+
+/// Options builder for the in-process batch executors — the single entry
+/// point behind the old `run_batch` / `run_batch_init` /
+/// `run_batch_queues[_init]` / `run_batch_steal[_init]` sextet, mirroring
+/// the launch layer's [`crate::launch::RunOptions`]. Assignment comes
+/// from [`BatchOptions::ordered`] (block/cyclic/LPT distribution at run
+/// time) or [`BatchOptions::queues`] (pre-packed per-worker queues);
+/// [`BatchOptions::steal`] turns on work stealing over the pre-assigned
+/// queues. Execute with [`BatchOptions::run`] or (for non-`Send`
+/// per-worker state such as the PJRT model) [`BatchOptions::run_init`].
+#[derive(Debug)]
+pub struct BatchOptions {
+    ntasks: usize,
+    assign: Option<Assign>,
+    steal: bool,
+}
+
+impl BatchOptions {
+    /// A batch run over `ntasks` tasks; pick an assignment with
+    /// [`BatchOptions::ordered`] or [`BatchOptions::queues`] before
+    /// running.
+    pub fn new(ntasks: usize) -> BatchOptions {
+        BatchOptions { ntasks, assign: None, steal: false }
+    }
+
+    /// Distribute `ordered` (which must cover all tasks) across
+    /// `nworkers` with `dist` at run time.
+    pub fn ordered(mut self, ordered: &[usize], nworkers: usize, dist: Distribution) -> Self {
+        self.assign = Some(Assign::Dist { ordered: ordered.to_vec(), nworkers, dist });
+        self
+    }
+
+    /// Run over caller-supplied per-worker queues — the path behind every
+    /// pre-packed distribution, including cost-guided LPT packing via
+    /// [`crate::dist::distribute_costed`].
+    pub fn queues(mut self, queues: Vec<Vec<usize>>) -> Self {
+        self.assign = Some(Assign::Queues(queues));
+        self
+    }
+
+    /// Enable work stealing: a worker that drains its own queue steals
+    /// the tail of the longest remaining one instead of going idle —
+    /// closing §IV.B's block-vs-cyclic gap at run time instead of at
+    /// assignment time.
+    pub fn steal(mut self, steal: bool) -> Self {
+        self.steal = steal;
+        self
+    }
+
+    fn into_queues(self) -> Result<(Vec<Vec<usize>>, bool)> {
+        let (ntasks, steal) = (self.ntasks, self.steal);
+        let queues = match self.assign {
+            Some(Assign::Dist { ordered, nworkers, dist }) => {
+                assert!(nworkers >= 1, "need at least one worker");
+                assert_eq!(ordered.len(), ntasks, "ordered must cover all tasks");
+                distribute(&ordered, nworkers, dist)
+            }
+            Some(Assign::Queues(queues)) => queues,
+            None => anyhow::bail!("BatchOptions needs ordered(..) or queues(..) before run"),
+        };
+        assert!(!queues.is_empty(), "need at least one worker");
+        assert_eq!(
+            queues.iter().map(Vec::len).sum::<usize>(),
+            ntasks,
+            "queues must cover all tasks"
+        );
+        Ok((queues, steal))
+    }
+
+    /// Execute with stateless workers. Returns the trace (with per-task
+    /// latency percentiles in [`SchedTrace::latency`]); fails if any task
+    /// failed.
+    pub fn run<F>(self, work: F) -> Result<SchedTrace>
+    where
+        F: Fn(usize, usize) -> Result<()> + Send + Sync,
+    {
+        self.run_init(|_| Ok(()), move |(), w, ti| work(w, ti))
+    }
+
+    /// Execute with per-worker state built by `init(worker_idx)` *inside
+    /// each worker's own thread* — how stage-3 workers own a compiled
+    /// [`crate::runtime::TrackModel`], which is not `Send`. Worker panics
+    /// are reported as errors, never as a silently truncated trace.
+    pub fn run_init<S, I, F>(self, init: I, work: F) -> Result<SchedTrace>
+    where
+        I: Fn(usize) -> Result<S> + Send + Sync,
+        F: Fn(&mut S, usize, usize) -> Result<()> + Send + Sync,
+    {
+        let (queues, steal) = self.into_queues()?;
+        if steal {
+            engine_steal(queues, init, work)
+        } else {
+            engine_queues(queues, init, work)
+        }
+    }
+}
+
+/// Deprecated positional variant of the batch executor — use
+/// [`BatchOptions`] (`BatchOptions::new(n).ordered(..).run(..)`). Kept as
+/// a thin delegating wrapper for existing call sites.
+#[doc(hidden)]
 pub fn run_batch<F>(
     ntasks: usize,
     ordered: &[usize],
@@ -220,14 +352,12 @@ pub fn run_batch<F>(
 where
     F: Fn(usize, usize) -> Result<()> + Send + Sync,
 {
-    run_batch_init(ntasks, ordered, nworkers, dist, |_| Ok(()), move |_, w, ti| work(w, ti))
+    BatchOptions::new(ntasks).ordered(ordered, nworkers, dist).run(work)
 }
 
-/// Like [`run_batch`], but each worker first builds private state with
-/// `init(worker_idx)` inside its own thread — the batch-mode counterpart
-/// of [`run_self_scheduled_init`], so stage 3 can run its non-`Send`
-/// PJRT model under block/cyclic distribution too. Worker panics are
-/// reported as errors, never as a silently truncated trace.
+/// Deprecated positional variant — use [`BatchOptions`] with
+/// [`BatchOptions::run_init`]. Kept as a thin delegating wrapper.
+#[doc(hidden)]
 pub fn run_batch_init<S, I, F>(
     ntasks: usize,
     ordered: &[usize],
@@ -240,24 +370,23 @@ where
     I: Fn(usize) -> Result<S> + Send + Sync,
     F: Fn(&mut S, usize, usize) -> Result<()> + Send + Sync,
 {
-    assert!(nworkers >= 1);
-    assert_eq!(ordered.len(), ntasks);
-    run_batch_queues_init(ntasks, distribute(ordered, nworkers, dist), init, work)
+    BatchOptions::new(ntasks).ordered(ordered, nworkers, dist).run_init(init, work)
 }
 
-/// Batch run over caller-supplied per-worker queues — the entry point
-/// behind every pre-assigned distribution, including cost-guided LPT
-/// packing where the caller computes queues with
-/// [`crate::dist::distribute_costed`].
+/// Deprecated positional variant — use [`BatchOptions`] with
+/// [`BatchOptions::queues`]. Kept as a thin delegating wrapper.
+#[doc(hidden)]
 pub fn run_batch_queues<F>(ntasks: usize, queues: Vec<Vec<usize>>, work: F) -> Result<SchedTrace>
 where
     F: Fn(usize, usize) -> Result<()> + Send + Sync,
 {
-    run_batch_queues_init(ntasks, queues, |_| Ok(()), move |_, w, ti| work(w, ti))
+    BatchOptions::new(ntasks).queues(queues).run(work)
 }
 
-/// [`run_batch_queues`] with per-worker state built inside each worker's
-/// own thread (see [`run_batch_init`]).
+/// Deprecated positional variant — use [`BatchOptions`] with
+/// [`BatchOptions::queues`] and [`BatchOptions::run_init`]. Kept as a
+/// thin delegating wrapper.
+#[doc(hidden)]
 pub fn run_batch_queues_init<S, I, F>(
     ntasks: usize,
     queues: Vec<Vec<usize>>,
@@ -268,29 +397,63 @@ where
     I: Fn(usize) -> Result<S> + Send + Sync,
     F: Fn(&mut S, usize, usize) -> Result<()> + Send + Sync,
 {
+    BatchOptions::new(ntasks).queues(queues).run_init(init, work)
+}
+
+/// Deprecated positional variant — use [`BatchOptions`] with
+/// [`BatchOptions::steal`]. Kept as a thin delegating wrapper.
+#[doc(hidden)]
+pub fn run_batch_steal<F>(ntasks: usize, queues: Vec<Vec<usize>>, work: F) -> Result<SchedTrace>
+where
+    F: Fn(usize, usize) -> Result<()> + Send + Sync,
+{
+    BatchOptions::new(ntasks).queues(queues).steal(true).run(work)
+}
+
+/// Deprecated positional variant — use [`BatchOptions`] with
+/// [`BatchOptions::steal`] and [`BatchOptions::run_init`]. Kept as a
+/// thin delegating wrapper.
+#[doc(hidden)]
+pub fn run_batch_steal_init<S, I, F>(
+    ntasks: usize,
+    queues: Vec<Vec<usize>>,
+    init: I,
+    work: F,
+) -> Result<SchedTrace>
+where
+    I: Fn(usize) -> Result<S> + Send + Sync,
+    F: Fn(&mut S, usize, usize) -> Result<()> + Send + Sync,
+{
+    BatchOptions::new(ntasks).queues(queues).steal(true).run_init(init, work)
+}
+
+/// The plain pre-assigned batch engine: one thread per queue, no manager
+/// involvement. Each worker reports its span plus per-task durations.
+fn engine_queues<S, I, F>(queues: Vec<Vec<usize>>, init: I, work: F) -> Result<SchedTrace>
+where
+    I: Fn(usize) -> Result<S> + Send + Sync,
+    F: Fn(&mut S, usize, usize) -> Result<()> + Send + Sync,
+{
     let nworkers = queues.len();
-    assert!(nworkers >= 1);
-    assert_eq!(
-        queues.iter().map(Vec::len).sum::<usize>(),
-        ntasks,
-        "queues must cover all tasks"
-    );
     let job_start = Instant::now();
-    let results: Vec<Result<(f64, f64, usize)>> = std::thread::scope(|scope| {
+    let results: Vec<Result<(f64, f64, usize, Vec<f64>)>> = std::thread::scope(|scope| {
         let handles: Vec<_> = queues
             .iter()
             .enumerate()
             .map(|(w, queue)| {
                 let work = &work;
                 let init = &init;
-                scope.spawn(move || -> Result<(f64, f64, usize)> {
+                scope.spawn(move || -> Result<(f64, f64, usize, Vec<f64>)> {
                     catch_panics(|| {
                         let mut state = init(w)?;
                         let begin = job_start.elapsed().as_secs_f64();
+                        let mut task_times = Vec::with_capacity(queue.len());
                         for &ti in queue {
+                            let t0 = Instant::now();
                             work(&mut state, w, ti)?;
+                            task_times.push(t0.elapsed().as_secs_f64());
                         }
-                        Ok((begin, job_start.elapsed().as_secs_f64(), queue.len()))
+                        Ok((begin, job_start.elapsed().as_secs_f64(), queue.len(), task_times))
                     })
                 })
             })
@@ -310,49 +473,32 @@ where
             .collect()
     });
     let mut log = WorkerLog::new(nworkers);
+    let mut samples = Vec::new();
     for (w, r) in results.into_iter().enumerate() {
-        let (begin, end, n) = r?;
+        let (begin, end, n, task_times) = r?;
         log.record_start(w, begin);
         log.record_completion(w, end, end - begin, n);
+        samples.extend(task_times);
     }
-    Ok(log.trace(job_start.elapsed().as_secs_f64()))
+    let mut trace = log.trace(job_start.elapsed().as_secs_f64());
+    trace.latency = Some(Percentiles::from_samples(samples));
+    Ok(trace)
 }
 
-/// Work-stealing batch run: `queues` are pre-assigned per-worker queues
-/// exactly as in [`run_batch_queues`], but a worker that drains its own
-/// queue steals the tail of the longest remaining one instead of going
-/// idle — closing §IV.B's block-vs-cyclic gap at run time instead of at
-/// assignment time. All allocation decisions live in the shared
-/// [`Manager`] core ([`Manager::take_batch`]); this backend supplies
-/// wall-clock timestamps, threads, and a mutex around the core. No
-/// allocation messages are sent (`messages_sent` stays 0); stolen tasks
-/// are counted in the trace's `steals`.
-pub fn run_batch_steal<F>(ntasks: usize, queues: Vec<Vec<usize>>, work: F) -> Result<SchedTrace>
-where
-    F: Fn(usize, usize) -> Result<()> + Send + Sync,
-{
-    run_batch_steal_init(ntasks, queues, |_| Ok(()), move |_, w, ti| work(w, ti))
-}
-
-/// [`run_batch_steal`] with per-worker state built inside each worker's
-/// own thread (see [`run_batch_init`]).
-pub fn run_batch_steal_init<S, I, F>(
-    ntasks: usize,
-    queues: Vec<Vec<usize>>,
-    init: I,
-    work: F,
-) -> Result<SchedTrace>
+/// The work-stealing batch engine: pre-assigned queues exactly as
+/// [`engine_queues`], but a worker that drains its own queue steals the
+/// tail of the longest remaining one instead of going idle. All
+/// allocation decisions live in the shared [`Manager`] core
+/// ([`Manager::take_batch`]); this backend supplies wall-clock
+/// timestamps, threads, and a mutex around the core. No allocation
+/// messages are sent (`messages_sent` stays 0); stolen tasks are counted
+/// in the trace's `steals`.
+fn engine_steal<S, I, F>(queues: Vec<Vec<usize>>, init: I, work: F) -> Result<SchedTrace>
 where
     I: Fn(usize) -> Result<S> + Send + Sync,
     F: Fn(&mut S, usize, usize) -> Result<()> + Send + Sync,
 {
     let nworkers = queues.len();
-    assert!(nworkers >= 1);
-    assert_eq!(
-        queues.iter().map(Vec::len).sum::<usize>(),
-        ntasks,
-        "queues must cover all tasks"
-    );
     let job_start = Instant::now();
     // The cursor/packing side of the core is unused in steal mode, so the
     // config is inert; the manager only arbitrates the deques.
@@ -362,9 +508,10 @@ where
         SelfSchedConfig { poll_s: 0.0, msg_s: 0.0, tasks_per_message: 1, adaptive: false },
     );
     mgr.assign_queues(queues);
-    // Manager + first error behind one lock: take/complete are O(workers)
-    // pointer moves, so contention is negligible next to real task work.
-    let shared = std::sync::Mutex::new((mgr, None::<anyhow::Error>));
+    // Manager + first error + latency samples behind one lock:
+    // take/complete are O(workers) pointer moves, so contention is
+    // negligible next to real task work.
+    let shared = std::sync::Mutex::new((mgr, None::<anyhow::Error>, Vec::<f64>::new()));
     std::thread::scope(|scope| {
         for w in 0..nworkers {
             let shared = &shared;
@@ -406,15 +553,19 @@ where
                         g.1.get_or_insert(e);
                         return;
                     }
+                    g.2.push(busy);
                 }
             });
         }
     });
-    let (mgr, err) = shared.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let (mgr, err, samples) =
+        shared.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
     if let Some(e) = err {
         return Err(e);
     }
-    Ok(mgr.into_trace(job_start.elapsed().as_secs_f64()))
+    let mut trace = mgr.into_trace(job_start.elapsed().as_secs_f64());
+    trace.latency = Some(Percentiles::from_samples(samples));
+    Ok(trace)
 }
 
 #[cfg(test)]
@@ -720,6 +871,63 @@ mod tests {
         // every task at the 300-task ceiling.
         assert!(trace.messages_sent <= n);
         assert!(trace.messages_sent >= n.div_ceil(300));
+    }
+
+    #[test]
+    fn batch_options_builder_covers_every_flavor() {
+        let n = 40;
+        let ordered: Vec<usize> = (0..n).collect();
+        let done = AtomicUsize::new(0);
+        let trace = BatchOptions::new(n)
+            .ordered(&ordered, 4, Distribution::Block)
+            .run(|_, _| {
+                done.fetch_add(1, Ordering::SeqCst);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(done.load(Ordering::SeqCst), n);
+        trace.check_invariants(n).unwrap();
+        let lat = trace.latency.expect("batch runs must report latency");
+        assert_eq!(lat.len(), n, "one latency sample per task");
+
+        let queues = distribute(&ordered, 4, Distribution::Block);
+        let trace = BatchOptions::new(n)
+            .queues(queues)
+            .steal(true)
+            .run(|_, ti| {
+                std::thread::sleep(Duration::from_millis(if ti < 4 { 5 } else { 1 }));
+                Ok(())
+            })
+            .unwrap();
+        trace.check_invariants(n).unwrap();
+        assert_eq!(trace.messages_sent, 0, "stealing keeps batch semantics");
+        assert_eq!(trace.latency.as_ref().map(Percentiles::len), Some(n));
+
+        // Init flavor threads per-worker state exactly like run_batch_init.
+        let trace = BatchOptions::new(n)
+            .ordered(&ordered, 3, Distribution::Cyclic)
+            .run_init(
+                |w| Ok(w * 7),
+                |state, w, _ti| {
+                    assert_eq!(*state, w * 7);
+                    Ok(())
+                },
+            )
+            .unwrap();
+        trace.check_invariants(n).unwrap();
+
+        // Forgetting the assignment is a typed error, not a panic.
+        assert!(BatchOptions::new(3).run(|_, _| Ok(())).is_err());
+    }
+
+    #[test]
+    fn selfsched_trace_reports_per_task_latency() {
+        let n = 25;
+        let ordered: Vec<usize> = (0..n).collect();
+        let trace = run_self_scheduled(n, &ordered, 3, fast_cfg(), |_, _| Ok(())).unwrap();
+        let lat = trace.latency.expect("self-scheduled runs must report latency");
+        assert_eq!(lat.len(), n, "one latency sample per task");
+        assert!(lat.p(0.99) >= lat.p(0.50), "percentiles must be monotone");
     }
 
     #[test]

@@ -69,6 +69,8 @@ pub mod sched;
 pub mod selfsched;
 /// Discrete-event cluster simulator calibrated to the LLSC.
 pub mod simcluster;
+/// Streaming ingest: live feed, watermarks, incremental pipelines.
+pub mod stream;
 /// Triples-mode job launch model (nodes × NPPN × threads).
 pub mod triples;
 /// The three-stage workflow: organize → archive → process.

@@ -33,14 +33,10 @@ impl Ecdf {
         idx as f64 / self.sorted.len() as f64
     }
 
-    /// Quantile (inverse CDF), `q` in `[0, 1]`.
+    /// Quantile (inverse CDF), `q` in `[0, 1]` — delegates to the repo's
+    /// one quantile definition, [`super::percentiles::quantile_sorted`].
     pub fn quantile(&self, q: f64) -> f64 {
-        if self.sorted.is_empty() {
-            return 0.0;
-        }
-        let idx = ((q * self.sorted.len() as f64).ceil() as usize)
-            .clamp(1, self.sorted.len());
-        self.sorted[idx - 1]
+        super::percentiles::quantile_sorted(&self.sorted, q)
     }
 
     /// `max - min` — the paper's "span" between slowest and fastest worker.

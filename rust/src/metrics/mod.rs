@@ -7,9 +7,12 @@
 pub mod ecdf;
 /// Fixed-width histograms (Figs 3, 5-6).
 pub mod hist;
+/// Shared percentile reporting (`from_samples`, `p(q)`, JSON emission).
+pub mod percentiles;
 /// Worker-time reports and ASCII table rendering.
 pub mod report;
 
 pub use ecdf::Ecdf;
 pub use hist::Histogram;
+pub use percentiles::Percentiles;
 pub use report::{render_table, WorkerReport};

@@ -1,0 +1,131 @@
+//! One shared percentile definition for the whole repo.
+//!
+//! The eCDF's quantile lookups, the streaming latency tracker, and the
+//! bench JSON emission all used to be one `ceil(q*n)` formula away from
+//! disagreeing with each other. [`quantile_sorted`] is that formula,
+//! written once; [`Percentiles`] wraps a sample set behind it with the
+//! `from_samples` / `p(q)` / JSON-emission API the reporting layers
+//! share.
+
+/// The repo's single quantile definition over an ascending-sorted slice:
+/// the smallest sample `x` with `F(x) >= q` (the eCDF inverse), i.e.
+/// `sorted[ceil(q*n) - 1]` with the index clamped into `1..=n`. Empty
+/// input evaluates to `0.0` so callers can render unconditionally.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let n = sorted.len();
+    let idx = ((q * n as f64).ceil() as usize).clamp(1, n);
+    sorted[idx - 1]
+}
+
+/// A sample set held sorted for percentile queries — the unified
+/// reporting type behind `SchedTrace::latency`, the streaming ingest
+/// latency tracker, and `bench_harness::json`'s latency fields.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Percentiles {
+    /// Samples in ascending order.
+    sorted: Vec<f64>,
+}
+
+impl Percentiles {
+    /// Build from raw samples (sorted internally; NaN is a caller bug).
+    pub fn from_samples(mut samples: Vec<f64>) -> Percentiles {
+        debug_assert!(samples.iter().all(|v| !v.is_nan()), "NaN percentile sample");
+        samples.sort_by(f64::total_cmp);
+        Percentiles { sorted: samples }
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    /// True when no samples were recorded.
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    /// The samples in ascending order (for merging sample sets).
+    pub fn samples(&self) -> &[f64] {
+        &self.sorted
+    }
+
+    /// Quantile `q` in `[0,1]` (see [`quantile_sorted`]).
+    pub fn p(&self, q: f64) -> f64 {
+        quantile_sorted(&self.sorted, q)
+    }
+
+    /// The `[p50, p95, p99]` triple every report in the repo quotes.
+    pub fn summary(&self) -> [f64; 3] {
+        [self.p(0.50), self.p(0.95), self.p(0.99)]
+    }
+
+    /// Render the summary triple as JSON object fields (no braces, no
+    /// trailing comma): `"<prefix>p50_s": .., "<prefix>p95_s": ..,
+    /// "<prefix>p99_s": ..` — the one emission path `BENCH_*.json` uses.
+    pub fn json_fields(&self, prefix: &str) -> String {
+        let [p50, p95, p99] = self.summary();
+        format!(
+            "\"{prefix}p50_s\": {p50:.6}, \"{prefix}p95_s\": {p95:.6}, \
+             \"{prefix}p99_s\": {p99:.6}"
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_set_renders_zeros() {
+        let p = Percentiles::from_samples(vec![]);
+        assert!(p.is_empty());
+        assert_eq!(p.p(0.5), 0.0);
+        assert_eq!(p.summary(), [0.0; 3]);
+        assert!(p.json_fields("latency_").contains("\"latency_p50_s\": 0.000000"));
+    }
+
+    #[test]
+    fn quantiles_match_the_ecdf_inverse() {
+        // 1..=100: pN is exactly N for this sample set under the
+        // ceil(q*n) definition.
+        let p = Percentiles::from_samples((1..=100).map(|i| i as f64).collect());
+        assert_eq!(p.p(0.50), 50.0);
+        assert_eq!(p.p(0.95), 95.0);
+        assert_eq!(p.p(0.99), 99.0);
+        assert_eq!(p.p(0.0), 1.0);
+        assert_eq!(p.p(1.0), 100.0);
+    }
+
+    #[test]
+    fn agrees_with_ecdf_quantile_on_random_samples() {
+        use crate::prop_assert;
+        crate::testing::check("percentiles vs ecdf", |rng| {
+            let n = 1 + rng.below(200);
+            let samples: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 1000.0)).collect();
+            let p = Percentiles::from_samples(samples.clone());
+            let e = crate::metrics::Ecdf::new(samples);
+            for _ in 0..16 {
+                let q = rng.f64();
+                prop_assert!(
+                    p.p(q) == e.quantile(q),
+                    "p({q}) = {} diverged from the eCDF's {}",
+                    p.p(q),
+                    e.quantile(q)
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn json_fields_emit_the_triple() {
+        let p = Percentiles::from_samples(vec![0.25, 0.5, 1.0]);
+        let s = p.json_fields("latency_");
+        assert!(s.contains("\"latency_p50_s\": 0.500000"), "{s}");
+        assert!(s.contains("\"latency_p95_s\": 1.000000"), "{s}");
+        assert!(s.contains("\"latency_p99_s\": 1.000000"), "{s}");
+    }
+}

@@ -794,6 +794,7 @@ mod tests {
             tasks_per_worker: vec![2],
             messages_sent: 2,
             steals: 0,
+            latency: None,
         };
         let merged = rec.merge_trace(live);
         assert_eq!(merged.tasks_per_worker, vec![2, 2]);

@@ -127,6 +127,7 @@ impl WorkerLog {
             tasks_per_worker: self.tasks_done.clone(),
             messages_sent: self.messages,
             steals: self.steals,
+            latency: None,
         }
     }
 }

@@ -163,6 +163,11 @@ pub struct SchedTrace {
     /// Tasks taken from another worker's pre-assigned queue (work
     /// stealing only; 0 for plain batch and self-scheduled runs).
     pub steals: usize,
+    /// Per-task latency percentiles, when the producer measured them: the
+    /// in-process executors record per-task service time, and streaming
+    /// ingest records end-to-end observation→processed-row latency.
+    /// `None` for the simulator and the multi-process launch path.
+    pub latency: Option<crate::metrics::Percentiles>,
 }
 
 impl SchedTrace {
@@ -217,6 +222,7 @@ mod tests {
             tasks_per_worker: vec![2, 3],
             messages_sent: 5,
             steals: 0,
+            latency: None,
         };
         assert!(good.check_invariants(5).is_ok());
         assert!(good.check_invariants(6).is_err());

@@ -18,10 +18,17 @@
 //!
 //! Design points, in the order they matter:
 //!
-//! * **One builder path.** The JSON job spec is flattened to CLI-shaped
-//!   flags and fed through the exact `emproc pipeline` config assembly
+//! * **One typed spec.** Submissions are [`JobSpec`]s ([`spec`]): a
+//!   versioned envelope (`"v"`, `"job"`) over per-kind settings, with
+//!   typed unknown-field and version-mismatch rejections. The same
+//!   `parse`/`to_line` pair serves `emproc submit` (client-side
+//!   validation), this daemon, and the streaming ingest job kind.
+//! * **One builder path.** A pipeline spec's settings become CLI-shaped
+//!   flags and feed through the exact `emproc pipeline` config assembly
 //!   ([`crate::workflow::commands::pipeline_config_from_args`]) — the
 //!   daemon is not a fourth hand-rolled [`PipelineConfig`] constructor.
+//!   An ingest spec builds an [`crate::stream::ingest::IngestConfig`]
+//!   the same way, so `emprocd` can host live-feed jobs (DESIGN.md §15).
 //! * **Admission-controlled FIFO.** Submissions queue; a single executor
 //!   thread drains them in arrival order, so two concurrent submissions
 //!   serialize over one persistent worker pool instead of oversubscribing
@@ -43,6 +50,10 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
+
+/// Typed, versioned job specs — the `submit` wire format.
+pub mod spec;
+pub use spec::{JobKind, JobSpec, SpecError};
 
 /// Configuration for [`start`].
 #[derive(Debug, Clone)]
@@ -102,13 +113,19 @@ enum JobEvent {
     Failed(String),
 }
 
+/// The work a job record carries, one variant per [`JobKind`].
+enum JobWork {
+    Pipeline(PipelineConfig),
+    Ingest(crate::stream::ingest::IngestConfig),
+}
+
 struct JobRecord {
     id: String,
     state: JobState,
     dataset: &'static str,
     dir: PathBuf,
     /// Taken by the executor when the job starts.
-    cfg: Option<PipelineConfig>,
+    work: Option<JobWork>,
     /// Event stream back to the submitting connection (dropped when the
     /// job reaches a terminal state).
     notify: Option<mpsc::Sender<JobEvent>>,
@@ -233,7 +250,7 @@ pub fn start(cfg: ServiceConfig) -> Result<ServiceHandle> {
 /// resource rather than a per-job free-for-all.
 fn executor_loop(shared: &Shared) {
     loop {
-        let (idx, cfg, notify) = {
+        let (idx, work, notify) = {
             let mut inner = shared.lock();
             loop {
                 if shared.stop.load(Ordering::SeqCst) {
@@ -241,9 +258,9 @@ fn executor_loop(shared: &Shared) {
                 }
                 if let Some(idx) = inner.queue.pop_front() {
                     inner.jobs[idx].state = JobState::Running;
-                    let cfg = inner.jobs[idx].cfg.take();
+                    let work = inner.jobs[idx].work.take();
                     let notify = inner.jobs[idx].notify.clone();
-                    break (idx, cfg, notify);
+                    break (idx, work, notify);
                 }
                 inner = shared
                     .wake
@@ -254,21 +271,28 @@ fn executor_loop(shared: &Shared) {
         if let Some(tx) = &notify {
             let _ = tx.send(JobEvent::Running);
         }
-        let outcome = match cfg {
-            Some(cfg) => crate::workflow::Pipeline::new(cfg).generate_and_run(),
+        let outcome: Result<String> = match work {
+            Some(JobWork::Pipeline(cfg)) => {
+                crate::workflow::Pipeline::new(cfg).generate_and_run().map(|report| {
+                    format!(
+                        "raw={} organized={} archives={} segments={}",
+                        report.raw_files,
+                        report.organize.files_written,
+                        report.archive.archives,
+                        report.process.segments
+                    )
+                })
+            }
+            Some(JobWork::Ingest(cfg)) => crate::stream::ingest::run(&cfg).map(|r| {
+                format!("windows={} observations={}", r.windows_closed, r.observations)
+            }),
             None => Err(anyhow::anyhow!("job lost its configuration before running")),
         };
         let mut inner = shared.lock();
         let event = match outcome {
-            Ok(report) => {
+            Ok(summary) => {
                 inner.jobs[idx].state = JobState::Done;
-                JobEvent::Done(format!(
-                    "raw={} organized={} archives={} segments={}",
-                    report.raw_files,
-                    report.organize.files_written,
-                    report.archive.archives,
-                    report.process.segments
-                ))
+                JobEvent::Done(summary)
             }
             Err(e) => {
                 inner.jobs[idx].state = JobState::Failed;
@@ -323,8 +347,8 @@ fn serve_conn(stream: TcpStream, shared: &Shared) -> Result<()> {
 fn handle_submit(spec: &str, shared: &Shared, out: &mut TcpStream) -> Result<()> {
     // Parse and validate before consuming a job id, so malformed
     // submissions are rejected without side effects.
-    let mut cfg = match spec_to_config(spec, PathBuf::new(), shared.pool) {
-        Ok(cfg) => cfg,
+    let mut work = match spec_to_work(spec, shared.pool) {
+        Ok(work) => work,
         Err(e) => {
             writeln!(out, "rejected {}", one_line(&format!("{e:#}")))?;
             return Ok(());
@@ -341,15 +365,24 @@ fn handle_submit(spec: &str, shared: &Shared, out: &mut TcpStream) -> Result<()>
         inner.next_id += 1;
         let id = format!("job-{}", inner.next_id);
         let dir = shared.base_dir.join("jobs").join(&id);
-        cfg.work_dir.clone_from(&dir);
+        let dataset = match &mut work {
+            JobWork::Pipeline(cfg) => {
+                cfg.work_dir.clone_from(&dir);
+                cfg.dataset.label()
+            }
+            JobWork::Ingest(cfg) => {
+                cfg.out_dir.clone_from(&dir);
+                "ingest"
+            }
+        };
         let (tx, rx) = mpsc::channel();
         let idx = inner.jobs.len();
         inner.jobs.push(JobRecord {
             id: id.clone(),
             state: JobState::Queued,
-            dataset: cfg.dataset.label(),
+            dataset,
             dir,
-            cfg: Some(cfg),
+            work: Some(work),
             notify: Some(tx),
         });
         inner.queue.push_back(idx);
@@ -377,46 +410,29 @@ fn handle_submit(spec: &str, shared: &Shared, out: &mut TcpStream) -> Result<()>
     Ok(())
 }
 
-/// Deserialize a flat JSON job spec into a [`PipelineConfig`] through
-/// the same builder path as `emproc pipeline`
-/// ([`crate::workflow::commands::pipeline_config_from_args`]): the
-/// object's keys become `--key value` flags, underscores normalized to
-/// dashes. Unknown keys, nested values, and non-object specs are typed
-/// errors — the daemon turns them into `rejected` replies.
+/// Parse a spec line into the work it describes: a [`PipelineConfig`]
+/// for pipeline specs (pool default applied), an
+/// [`crate::stream::ingest::IngestConfig`] for ingest specs. The run
+/// directory is filled in at admission time.
+fn spec_to_work(spec: &str, pool: Option<usize>) -> Result<JobWork> {
+    let spec = JobSpec::parse(spec)?;
+    Ok(match spec.kind() {
+        JobKind::Pipeline => JobWork::Pipeline(spec.to_pipeline_config(PathBuf::new(), pool)?),
+        JobKind::Ingest => JobWork::Ingest(spec.to_ingest_config(PathBuf::new())?),
+    })
+}
+
+/// Deserialize a flat JSON job spec into a [`PipelineConfig`]: parse
+/// with [`JobSpec::parse`] (typed unknown-field / version errors — the
+/// daemon turns them into `rejected` replies), then build through the
+/// same flag path as `emproc pipeline`
+/// ([`crate::workflow::commands::pipeline_config_from_args`]).
 pub fn spec_to_config(
     spec: &str,
     job_dir: PathBuf,
     pool: Option<usize>,
 ) -> Result<PipelineConfig> {
-    const KEYS: [&str; 9] = [
-        "dataset",
-        "workers",
-        "seed",
-        "scale",
-        "launch",
-        "transport",
-        "max-retries",
-        "format",
-        "policy",
-    ];
-    let pairs = parse_flat_json(spec).context("malformed job spec")?;
-    let mut argv: Vec<String> = Vec::new();
-    for (key, value) in &pairs {
-        let flag = key.replace('_', "-");
-        if !KEYS.contains(&flag.as_str()) {
-            bail!("unknown job-spec key '{key}' (allowed: {})", KEYS.join(", "));
-        }
-        argv.push(format!("--{flag}"));
-        argv.push(value.clone());
-    }
-    if let Some(w) = pool {
-        if !pairs.iter().any(|(k, _)| k.replace('_', "-") == "workers") {
-            argv.push("--workers".to_string());
-            argv.push(w.to_string());
-        }
-    }
-    let a = crate::cli::ArgParser::parse(&argv, &[])?;
-    crate::workflow::commands::pipeline_config_from_args(&a, job_dir, false)
+    JobSpec::parse(spec)?.to_pipeline_config(job_dir, pool)
 }
 
 /// Parse one flat JSON object (`{"key": scalar, ...}`) into ordered
@@ -424,7 +440,7 @@ pub fn spec_to_config(
 /// Strings support the `\" \\ \/ \n \t \r` escapes; numbers and booleans
 /// pass through verbatim; nesting and `null` are rejected (a job spec is
 /// a flag set, not a document).
-fn parse_flat_json(text: &str) -> Result<Vec<(String, String)>> {
+pub(crate) fn parse_flat_json(text: &str) -> Result<Vec<(String, String)>> {
     let mut chars = text.chars().peekable();
     skip_ws(&mut chars);
     if chars.next() != Some('{') {
@@ -604,18 +620,22 @@ pub fn serve(a: &crate::cli::ArgParser) -> Result<()> {
 
 /// `emproc submit --addr HOST:PORT (--spec JSON | --spec-file FILE)`
 ///
-/// Submit one pipeline job and stream its event lines until it finishes;
-/// exits non-zero on rejection or failure.
+/// Submit one job (pipeline or ingest) and stream its event lines until
+/// it finishes; exits non-zero on rejection or failure. The spec is
+/// validated client-side with [`JobSpec::parse`] — a typo never costs a
+/// round trip — and the daemon receives the canonical
+/// [`JobSpec::to_line`] form.
 pub fn submit(a: &crate::cli::ArgParser) -> Result<()> {
     let addr = a.required("addr")?;
-    let spec = match (a.get("spec"), a.get("spec-file")) {
+    let text = match (a.get("spec"), a.get("spec-file")) {
         (Some(s), None) => s.to_string(),
         (None, Some(f)) => {
             std::fs::read_to_string(f).with_context(|| format!("reading spec file {f}"))?
         }
         _ => bail!("pass exactly one of --spec JSON or --spec-file FILE"),
     };
-    let id = submit_job(addr, &spec, &mut |line| println!("{line}"))?;
+    let spec = JobSpec::parse(&text)?;
+    let id = submit_job(addr, &spec.to_line(), &mut |line| println!("{line}"))?;
     println!("job {id} complete");
     Ok(())
 }
@@ -749,6 +769,44 @@ mod tests {
         assert_eq!(jobs.len(), 1);
         assert!(jobs[0].starts_with("job job-1 done monday"), "{jobs:?}");
 
+        handle.shutdown();
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn daemon_runs_an_ingest_job_from_a_typed_spec() {
+        let base = std::env::temp_dir().join(format!("emprocd_ingest_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        std::fs::create_dir_all(&base).unwrap();
+        // The smallest complete feed: handshake, then `bye`. No windows
+        // ever open, so the job exercises the full submit→run→done path
+        // without touching the PJRT model.
+        let feed = base.join("feed.txt");
+        std::fs::write(&feed, "feed 1\nbye\n").unwrap();
+        let handle = start(ServiceConfig {
+            addr: "127.0.0.1:0".to_string(),
+            base_dir: base.clone(),
+            max_queue: 4,
+            pool: None,
+        })
+        .unwrap();
+        let addr = handle.addr().to_string();
+        let spec = JobSpec::ingest(feed.to_str().unwrap()).set("window", 60).unwrap();
+        let mut events = Vec::new();
+        let id = submit_job(&addr, &spec.to_line(), &mut |line| {
+            events.push(line.to_string());
+        })
+        .unwrap();
+        assert_eq!(id, "job-1");
+        assert_eq!(
+            events.last().unwrap(),
+            "done job-1 windows=0 observations=0",
+            "{events:?}"
+        );
+        // The run dir was materialized (journal + reject channel).
+        assert!(base.join("jobs/job-1/rejected.log").is_file());
+        let jobs = list_jobs(&addr).unwrap();
+        assert!(jobs[0].starts_with("job job-1 done ingest"), "{jobs:?}");
         handle.shutdown();
         let _ = std::fs::remove_dir_all(&base);
     }

@@ -1,0 +1,436 @@
+//! Typed, versioned job specs for the `emprocd` daemon.
+//!
+//! The daemon used to funnel submissions through a flat string-keyed
+//! JSON-to-flags shim; this module replaces that with one typed value,
+//! [`JobSpec`], shared by every producer and consumer of the wire form:
+//! `emproc submit` validates client-side and sends [`JobSpec::to_line`],
+//! the daemon parses with [`JobSpec::parse`], and the two are exact
+//! inverses (property-tested below), so the canonical wire line is the
+//! same no matter who wrote it.
+//!
+//! A spec is a flat JSON object. Two reserved keys select the envelope:
+//! `"v"` (spec version, default and only `1`) and `"job"` (the
+//! [`JobKind`], default `pipeline`). Every other key must belong to the
+//! selected kind's key list; anything else is a typed
+//! [`SpecError::UnknownField`], and an unsupported version is a typed
+//! [`SpecError::VersionMismatch`] rather than a guessed-at parse.
+//! Values are flag strings — `2` and `"2"` mean the same thing, exactly
+//! as they would on the command line.
+
+use crate::workflow::PipelineConfig;
+use anyhow::{Context as _, Result};
+use std::path::PathBuf;
+
+/// Spec keys a `pipeline` job accepts, in canonical (wire) order; the
+/// semantics are the `emproc pipeline` flags of the same names.
+pub const PIPELINE_KEYS: [&str; 9] = [
+    "dataset",
+    "workers",
+    "seed",
+    "scale",
+    "launch",
+    "transport",
+    "max-retries",
+    "format",
+    "policy",
+];
+
+/// Spec keys an `ingest` job accepts, in canonical (wire) order; the
+/// semantics are the `emproc ingest` flags of the same names (`feed` is
+/// required, the rest default as the CLI does).
+pub const INGEST_KEYS: [&str; 5] = ["feed", "window", "lateness", "format", "year"];
+
+/// Current (and only) job-spec version.
+pub const SPEC_VERSION: u32 = 1;
+
+/// What kind of work a spec describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    /// A full generate→organize→archive→process batch pipeline.
+    Pipeline,
+    /// A streaming ingest run over an already-recorded feed file.
+    Ingest,
+}
+
+impl JobKind {
+    /// Wire label (the `"job"` value).
+    pub fn label(self) -> &'static str {
+        match self {
+            JobKind::Pipeline => "pipeline",
+            JobKind::Ingest => "ingest",
+        }
+    }
+
+    /// The kind's allowed spec keys, in canonical order.
+    pub fn keys(self) -> &'static [&'static str] {
+        match self {
+            JobKind::Pipeline => &PIPELINE_KEYS,
+            JobKind::Ingest => &INGEST_KEYS,
+        }
+    }
+}
+
+/// Typed rejection reasons for a malformed spec. The daemon renders
+/// these into `rejected <reason>` lines; `emproc submit` surfaces them
+/// before ever dialing the daemon.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SpecError {
+    /// The text is not a flat JSON object of scalars.
+    Syntax(String),
+    /// A key outside the envelope keys and the kind's key list.
+    UnknownField {
+        /// The offending key (underscores already normalized to dashes).
+        key: String,
+        /// The keys the selected job kind accepts.
+        allowed: &'static [&'static str],
+    },
+    /// The `"v"` value is not a version this build speaks.
+    VersionMismatch {
+        /// The version string the spec carried.
+        got: String,
+    },
+    /// A key is present but its value is unusable (duplicate, unknown
+    /// job kind, ...).
+    BadValue {
+        /// The offending key.
+        key: String,
+        /// Why the value is unusable.
+        reason: String,
+    },
+}
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpecError::Syntax(m) => write!(f, "malformed job spec: {m}"),
+            SpecError::UnknownField { key, allowed } => write!(
+                f,
+                "unknown job-spec key '{key}' (allowed: {}, plus 'v' and 'job')",
+                allowed.join(", ")
+            ),
+            SpecError::VersionMismatch { got } => write!(
+                f,
+                "unsupported job-spec version '{got}' (this build speaks v{SPEC_VERSION})"
+            ),
+            SpecError::BadValue { key, reason } => {
+                write!(f, "job-spec key '{key}': {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+/// One validated job spec: version, kind, and the kind's settings in
+/// canonical key order (so equal specs render equal wire lines).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobSpec {
+    version: u32,
+    kind: JobKind,
+    settings: Vec<(&'static str, String)>,
+}
+
+impl JobSpec {
+    /// An empty v1 pipeline spec (every knob at the daemon's defaults).
+    pub fn pipeline() -> JobSpec {
+        JobSpec { version: SPEC_VERSION, kind: JobKind::Pipeline, settings: Vec::new() }
+    }
+
+    /// A v1 ingest spec over `feed` (a feed file the daemon can read).
+    pub fn ingest(feed: &str) -> JobSpec {
+        JobSpec {
+            version: SPEC_VERSION,
+            kind: JobKind::Ingest,
+            settings: vec![("feed", feed.to_string())],
+        }
+    }
+
+    /// The spec's version (always [`SPEC_VERSION`] once parsed).
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    /// The spec's job kind.
+    pub fn kind(&self) -> JobKind {
+        self.kind
+    }
+
+    /// The value set for `key`, if any.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.settings.iter().find(|(k, _)| *k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// Set (or overwrite) one setting, keeping canonical order. Unknown
+    /// keys for this spec's kind are a typed error at build time, the
+    /// same [`SpecError::UnknownField`] a parse would raise.
+    pub fn set(mut self, key: &str, value: impl std::fmt::Display) -> Result<JobSpec, SpecError> {
+        let key = key.replace('_', "-");
+        let keys = self.kind.keys();
+        let Some(&canon) = keys.iter().find(|&&c| c == key) else {
+            return Err(SpecError::UnknownField { key, allowed: keys });
+        };
+        let value = value.to_string();
+        if let Some(slot) = self.settings.iter_mut().find(|(k, _)| *k == canon) {
+            slot.1 = value;
+        } else {
+            self.settings.push((canon, value));
+            let pos = |k: &str| keys.iter().position(|c| *c == k);
+            self.settings.sort_by_key(|(k, _)| pos(k));
+        }
+        Ok(self)
+    }
+
+    /// Parse a wire line (flat JSON, see the module docs). Inverse of
+    /// [`JobSpec::to_line`]: `parse(s.to_line()) == s` for any spec.
+    pub fn parse(text: &str) -> Result<JobSpec, SpecError> {
+        let pairs = super::parse_flat_json(text)
+            .map_err(|e| SpecError::Syntax(format!("{e:#}")))?;
+        let mut version: Option<String> = None;
+        let mut job: Option<String> = None;
+        let mut rest: Vec<(String, String)> = Vec::new();
+        for (key, value) in pairs {
+            let key = key.replace('_', "-");
+            let dup = |key: &str| SpecError::BadValue {
+                key: key.to_string(),
+                reason: "duplicate key".to_string(),
+            };
+            match key.as_str() {
+                "v" => {
+                    if version.replace(value).is_some() {
+                        return Err(dup("v"));
+                    }
+                }
+                "job" => {
+                    if job.replace(value).is_some() {
+                        return Err(dup("job"));
+                    }
+                }
+                _ => rest.push((key, value)),
+            }
+        }
+        match version.as_deref() {
+            None => {}
+            Some(v) if v == SPEC_VERSION.to_string() => {}
+            Some(got) => {
+                return Err(SpecError::VersionMismatch { got: got.to_string() })
+            }
+        }
+        let kind = match job.as_deref() {
+            None => JobKind::Pipeline,
+            Some("pipeline") => JobKind::Pipeline,
+            Some("ingest") => JobKind::Ingest,
+            Some(other) => {
+                return Err(SpecError::BadValue {
+                    key: "job".to_string(),
+                    reason: format!("unknown job kind '{other}' (pipeline | ingest)"),
+                })
+            }
+        };
+        let keys = kind.keys();
+        let mut settings: Vec<(&'static str, String)> = Vec::new();
+        for (key, value) in rest {
+            let Some(&canon) = keys.iter().find(|&&c| c == key) else {
+                return Err(SpecError::UnknownField { key, allowed: keys });
+            };
+            if settings.iter().any(|(k, _)| *k == canon) {
+                return Err(SpecError::BadValue {
+                    key,
+                    reason: "duplicate key".to_string(),
+                });
+            }
+            settings.push((canon, value));
+        }
+        let pos = |k: &str| keys.iter().position(|c| *c == k);
+        settings.sort_by_key(|(k, _)| pos(k));
+        Ok(JobSpec { version: SPEC_VERSION, kind, settings })
+    }
+
+    /// Render the canonical one-line wire form. Every value is emitted
+    /// as a quoted string — spec values are flag strings, so `"2"` and
+    /// `2` already mean the same thing to [`JobSpec::parse`], and
+    /// quoting everything makes the canonical form unambiguous.
+    pub fn to_line(&self) -> String {
+        let esc = |s: &str| -> String {
+            let mut out = String::with_capacity(s.len());
+            for c in s.chars() {
+                match c {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    '\n' => out.push_str("\\n"),
+                    '\t' => out.push_str("\\t"),
+                    '\r' => out.push_str("\\r"),
+                    _ => out.push(c),
+                }
+            }
+            out
+        };
+        let mut line =
+            format!("{{\"v\": \"{}\", \"job\": \"{}\"", self.version, self.kind.label());
+        for (key, value) in &self.settings {
+            line.push_str(&format!(", \"{key}\": \"{}\"", esc(value)));
+        }
+        line.push('}');
+        line
+    }
+
+    /// Build the [`PipelineConfig`] this spec describes, rooted at
+    /// `job_dir`, through the same flag path as `emproc pipeline`.
+    /// `pool` fills `workers` only when the spec didn't choose its own.
+    pub fn to_pipeline_config(
+        &self,
+        job_dir: PathBuf,
+        pool: Option<usize>,
+    ) -> Result<PipelineConfig> {
+        anyhow::ensure!(
+            self.kind == JobKind::Pipeline,
+            "a {} spec cannot build a pipeline config",
+            self.kind.label()
+        );
+        let mut argv: Vec<String> = Vec::new();
+        for (key, value) in &self.settings {
+            argv.push(format!("--{key}"));
+            argv.push(value.clone());
+        }
+        if let Some(w) = pool {
+            if self.get("workers").is_none() {
+                argv.push("--workers".to_string());
+                argv.push(w.to_string());
+            }
+        }
+        let a = crate::cli::ArgParser::parse(&argv, &[])?;
+        crate::workflow::commands::pipeline_config_from_args(&a, job_dir, false)
+    }
+
+    /// Build the [`crate::stream::ingest::IngestConfig`] this spec
+    /// describes, with `job_dir` as the run directory.
+    pub fn to_ingest_config(
+        &self,
+        job_dir: PathBuf,
+    ) -> Result<crate::stream::ingest::IngestConfig> {
+        anyhow::ensure!(
+            self.kind == JobKind::Ingest,
+            "a {} spec cannot build an ingest config",
+            self.kind.label()
+        );
+        let feed = self.get("feed").context("an ingest job spec must set 'feed'")?;
+        let mut cfg =
+            crate::stream::ingest::IngestConfig::new(PathBuf::from(feed), job_dir);
+        let num = |key: &str, v: &str| -> Result<i64> {
+            v.parse::<i64>()
+                .with_context(|| format!("job-spec key '{key}': cannot parse '{v}'"))
+        };
+        if let Some(v) = self.get("window") {
+            cfg.window_s = num("window", v)?;
+        }
+        if let Some(v) = self.get("lateness") {
+            cfg.lateness_s = num("lateness", v)?;
+        }
+        if let Some(v) = self.get("format") {
+            cfg.format = crate::archive::ArchiveFormat::parse(v)?;
+        }
+        if let Some(v) = self.get("year") {
+            cfg.year = u16::try_from(num("year", v)?)
+                .map_err(|_| anyhow::anyhow!("job-spec key 'year': '{v}' out of range"))?;
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testing;
+
+    #[test]
+    fn wire_round_trip_is_exact_for_random_specs() {
+        // Values cover the escape set and flag-ish strings alike.
+        const CHARS: [char; 12] =
+            ['a', 'z', '0', '9', '-', '.', '/', ' ', '"', '\\', '\n', '\t'];
+        testing::check("jobspec_roundtrip", |rng| {
+            let kind = if rng.f64() < 0.5 { JobKind::Pipeline } else { JobKind::Ingest };
+            let mut spec = match kind {
+                JobKind::Pipeline => JobSpec::pipeline(),
+                JobKind::Ingest => JobSpec::ingest("feed.txt"),
+            };
+            for &key in kind.keys() {
+                if rng.f64() < 0.5 {
+                    continue;
+                }
+                let len = 1 + rng.below(8);
+                let value: String =
+                    (0..len).map(|_| CHARS[rng.below(CHARS.len())]).collect();
+                spec = spec.set(key, value).map_err(|e| e.to_string())?;
+            }
+            let line = spec.to_line();
+            let back = JobSpec::parse(&line).map_err(|e| e.to_string())?;
+            prop_assert!(back == spec, "{line} reparsed as {back:?}, want {spec:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn envelope_defaults_and_mismatches_are_typed() {
+        // No envelope keys: v1 pipeline.
+        let spec = JobSpec::parse("{\"workers\": 2}").unwrap();
+        assert_eq!(spec.kind(), JobKind::Pipeline);
+        assert_eq!(spec.version(), 1);
+        assert_eq!(spec.get("workers"), Some("2"));
+        // Number and string versions are the same flag string.
+        assert!(JobSpec::parse("{\"v\": 1}").is_ok());
+        assert!(JobSpec::parse("{\"v\": \"1\"}").is_ok());
+        let err = JobSpec::parse("{\"v\": 2}").unwrap_err();
+        assert_eq!(err, SpecError::VersionMismatch { got: "2".to_string() });
+        assert!(err.to_string().contains("unsupported job-spec version '2'"), "{err}");
+        let err = JobSpec::parse("{\"job\": \"sandwich\"}").unwrap_err();
+        assert!(matches!(err, SpecError::BadValue { .. }), "{err}");
+    }
+
+    #[test]
+    fn unknown_and_duplicate_fields_are_typed_per_kind() {
+        let err = JobSpec::parse("{\"datasett\": \"monday\"}").unwrap_err();
+        assert!(
+            matches!(&err, SpecError::UnknownField { key, allowed }
+                if key == "datasett" && *allowed == JobKind::Pipeline.keys()),
+            "{err:?}"
+        );
+        // 'dataset' is a pipeline key, not an ingest key.
+        let err =
+            JobSpec::parse("{\"job\": \"ingest\", \"dataset\": \"monday\"}").unwrap_err();
+        assert!(
+            matches!(&err, SpecError::UnknownField { key, .. } if key == "dataset"),
+            "{err:?}"
+        );
+        let err = JobSpec::parse("{\"workers\": 1, \"workers\": 2}").unwrap_err();
+        assert!(matches!(&err, SpecError::BadValue { key, .. } if key == "workers"), "{err:?}");
+        // Builders raise the same typed error without a wire trip.
+        let err = JobSpec::ingest("f").set("dataset", "monday").unwrap_err();
+        assert!(matches!(err, SpecError::UnknownField { .. }));
+    }
+
+    #[test]
+    fn ingest_specs_build_ingest_configs() {
+        let spec = JobSpec::ingest("/tmp/feed.txt")
+            .set("window", 120)
+            .unwrap()
+            .set("lateness", 30)
+            .unwrap()
+            .set("format", "columnar")
+            .unwrap()
+            .set("year", 2020)
+            .unwrap();
+        let cfg = spec.to_ingest_config(PathBuf::from("/tmp/run")).unwrap();
+        assert_eq!(cfg.feed, PathBuf::from("/tmp/feed.txt"));
+        assert_eq!(cfg.out_dir, PathBuf::from("/tmp/run"));
+        assert_eq!(cfg.window_s, 120);
+        assert_eq!(cfg.lateness_s, 30);
+        assert_eq!(cfg.format, crate::archive::ArchiveFormat::Columnar);
+        assert_eq!(cfg.year, 2020);
+        // Kind mismatch both ways is a hard error.
+        assert!(spec.to_pipeline_config(PathBuf::new(), None).is_err());
+        assert!(JobSpec::pipeline().to_ingest_config(PathBuf::new()).is_err());
+        // 'feed' is required.
+        let bare = JobSpec::parse("{\"job\": \"ingest\"}").unwrap();
+        assert!(bare.to_ingest_config(PathBuf::new()).is_err());
+    }
+}

@@ -1,0 +1,719 @@
+//! `emproc ingest` — watermark-triggered incremental pipelines over a
+//! live observation feed (DESIGN.md §15).
+//!
+//! Observations arrive one line at a time ([`super::FeedEvent`]), are
+//! bucketed into fixed event-time windows, and per-source watermarks
+//! (`max t seen − allowed lateness`; an ended source's watermark is
+//! `+∞`) decide when a window is complete. Windows close strictly in
+//! order; closing window `k` sweeps its buffered observations into the
+//! accumulated per-`(source, aircraft)` sets and re-runs the *batch*
+//! stage runners over exactly what the window touched:
+//!
+//! 1. **organize** — full-file overwrite of each touched
+//!    `organized/<tier>/<icao>_<src>.csv` from the accumulated set,
+//!    sorted by feed sequence number (raw row order — byte-identical to
+//!    what batch stage 1 writes once the feed drains);
+//! 2. **archive** — re-pack each touched bottom directory with the
+//!    stage-2 task runner ([`crate::archive::zipdir::archive_dir`] /
+//!    [`crate::archive::columnar::archive_dir_columnar`]);
+//! 3. **process** — re-run [`crate::workflow::stage3::process_archive`]
+//!    on each repacked archive with one persistent PJRT model.
+//!
+//! Every step is a full overwrite from accumulated state, so closing a
+//! window is idempotent; the PR 5 journal records window `k` *after*
+//! its refresh lands, which makes `--resume` after `kill -9` skip
+//! exactly the windows whose effects are already on disk and replay the
+//! rest. Late and duplicate observations are counted and diverted to
+//! `rejected.log`, never into the data plane. Each observation carries
+//! its arrival [`Instant`]; when its window's refresh completes the
+//! elapsed time becomes one observation→processed-row latency sample
+//! ([`IngestReport::latency`]).
+
+use super::{FeedEvent, FeedObs, FEED_VERSION};
+use crate::archive::ArchiveFormat;
+use crate::cli::ArgParser;
+use crate::metrics::Percentiles;
+use crate::recovery::{journal_path, load_verified, JournalEvent, JournalPlan, JournalWriter};
+use crate::registry::Registry;
+use crate::tracks::{icao24_hex, Observation, SegmentConfig, Track};
+use anyhow::{bail, Context as _, Result};
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
+use std::io::{BufRead, Write as _};
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Journal capacity in windows (task ids are window indices; the plan
+/// is sized up front because the feed's extent is unknown).
+pub const MAX_WINDOWS: usize = 1 << 20;
+
+/// Everything `emproc ingest` needs.
+#[derive(Debug, Clone)]
+pub struct IngestConfig {
+    /// Feed file to read (`-` means stdin at the CLI).
+    pub feed: PathBuf,
+    /// Run directory: `organized/`, `archived/`, `processed/`,
+    /// `journal/` and `rejected.log` all live here.
+    pub out_dir: PathBuf,
+    /// Event-time window width, seconds.
+    pub window_s: i64,
+    /// Allowed lateness, seconds: a source's watermark trails its
+    /// newest observation by this much. Must cover twice the replayer's
+    /// `--disorder` or shifted stragglers get rejected as late.
+    pub lateness_s: i64,
+    /// Archive format for the incremental stage-2 refreshes.
+    pub format: ArchiveFormat,
+    /// Hierarchy year for organized paths (batch stage 1 pins 2019).
+    pub year: u16,
+    /// AOT model artifacts for the stage-3 refreshes.
+    pub artifact_dir: PathBuf,
+    /// Resume from `journal/ingest.emproc`: verified completed windows
+    /// sweep their buffers but skip the (already landed) refresh.
+    pub resume: bool,
+}
+
+impl IngestConfig {
+    /// Defaults matching the batch pipeline: 600 s windows, 60 s
+    /// lateness, zip archives, year 2019, default artifact dir.
+    pub fn new(feed: PathBuf, out_dir: PathBuf) -> Self {
+        IngestConfig {
+            feed,
+            out_dir,
+            window_s: 600,
+            lateness_s: 60,
+            format: ArchiveFormat::Zip,
+            year: 2019,
+            artifact_dir: crate::runtime::TrackModel::default_dir(),
+            resume: false,
+        }
+    }
+}
+
+/// What one ingest run saw and did.
+#[derive(Debug, Clone)]
+pub struct IngestReport {
+    /// Observations accepted into windows.
+    pub observations: u64,
+    /// Windows closed (in order, empty ones included).
+    pub windows_closed: u64,
+    /// Subset of closed windows whose refresh was skipped because the
+    /// resume journal already recorded them.
+    pub windows_skipped: u64,
+    /// Observations rejected as late (their window had already closed).
+    pub late: u64,
+    /// Observations rejected as duplicates of an already-seen
+    /// `(source, aircraft, seq)`.
+    pub duplicates: u64,
+    /// Observations dropped because the aircraft is not in the feed's
+    /// registry (batch stage 1 skips these too).
+    pub unregistered: u64,
+    /// Observation→processed-row latency samples, one per observation
+    /// whose window refresh ran in this process.
+    pub latency: Percentiles,
+    /// Wall-clock duration of the whole run, seconds.
+    pub wall_s: f64,
+}
+
+impl IngestReport {
+    /// Multi-line human summary for the CLI.
+    pub fn render(&self) -> String {
+        let lat = if self.latency.is_empty() {
+            "latency: no samples (all windows resumed or empty)".to_string()
+        } else {
+            let [p50, p95, p99] = self.latency.summary();
+            format!(
+                "latency s: p50 {p50:.3} p95 {p95:.3} p99 {p99:.3} ({} samples)",
+                self.latency.len()
+            )
+        };
+        format!(
+            "ingested {} observations; closed {} windows ({} resumed from journal)\n\
+             rejected: {} late, {} duplicate, {} unregistered\n\
+             {lat}\n\
+             sustained: {:.1} obs/s over {:.2}s",
+            self.observations,
+            self.windows_closed,
+            self.windows_skipped,
+            self.late,
+            self.duplicates,
+            self.unregistered,
+            self.observations as f64 / self.wall_s.max(1e-9),
+            self.wall_s,
+        )
+    }
+}
+
+/// One buffered observation: the measurement plus its arrival instant
+/// (the latency clock starts the moment the feed line is read).
+struct Rec {
+    seq: u32,
+    t: i64,
+    lat: f64,
+    lon: f64,
+    alt_ft: f64,
+    at: Instant,
+}
+
+struct State<'a> {
+    cfg: &'a IngestConfig,
+    hello_seen: bool,
+    reg_lines: Vec<String>,
+    registry: Option<Registry>,
+    sources: Vec<String>,
+    src_idx: HashMap<String, usize>,
+    ended: Vec<bool>,
+    max_t: Vec<i64>,
+    base: Option<i64>,
+    closed_windows: u64,
+    /// Buffered observations not yet swept into a closed window.
+    open: BTreeMap<(usize, u32), Vec<Rec>>,
+    /// Accumulated observations of every closed window, per organized
+    /// file — the source of truth for the full-file overwrites.
+    done: BTreeMap<(usize, u32), Vec<Rec>>,
+    seen: HashSet<(usize, u32, u32)>,
+    completed: HashSet<usize>,
+    journal: JournalWriter,
+    rejects: std::io::BufWriter<std::fs::File>,
+    samples: Vec<f64>,
+    model: Option<crate::runtime::TrackModel>,
+    observations: u64,
+    windows_skipped: u64,
+    late: u64,
+    duplicates: u64,
+    unregistered: u64,
+}
+
+impl<'a> State<'a> {
+    fn new(cfg: &'a IngestConfig) -> Result<Self> {
+        anyhow::ensure!(cfg.window_s > 0, "--window must be positive, got {}", cfg.window_s);
+        anyhow::ensure!(cfg.lateness_s >= 0, "--lateness cannot be negative");
+        std::fs::create_dir_all(&cfg.out_dir)?;
+        // The journal plan pins the knobs that shape on-disk state, so
+        // resuming with different flags is a typed plan-mismatch error
+        // instead of a silently mixed tree.
+        let fingerprint = format!(
+            "window={} lateness={} format={} year={}",
+            cfg.window_s,
+            cfg.lateness_s,
+            cfg.format.extension(),
+            cfg.year
+        );
+        let mut plan = JournalPlan::new("ingest", [fingerprint.as_str()]);
+        plan.ntasks = MAX_WINDOWS;
+        let path = journal_path(&cfg.out_dir, "ingest");
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let (completed, journal) = if cfg.resume && path.exists() {
+            let mut done = HashSet::new();
+            for ev in load_verified(&path, &plan)? {
+                if let JournalEvent::Ok { tasks, .. } = ev {
+                    done.extend(tasks);
+                }
+            }
+            (done, JournalWriter::append_to(&path)?)
+        } else {
+            (HashSet::new(), JournalWriter::create(&path, &plan)?)
+        };
+        let rejects = std::fs::OpenOptions::new()
+            .create(true)
+            .append(cfg.resume)
+            .write(true)
+            .truncate(!cfg.resume)
+            .open(cfg.out_dir.join("rejected.log"))?;
+        Ok(State {
+            cfg,
+            hello_seen: false,
+            reg_lines: Vec::new(),
+            registry: None,
+            sources: Vec::new(),
+            src_idx: HashMap::new(),
+            ended: Vec::new(),
+            max_t: Vec::new(),
+            base: None,
+            closed_windows: 0,
+            open: BTreeMap::new(),
+            done: BTreeMap::new(),
+            seen: HashSet::new(),
+            completed,
+            journal,
+            rejects: std::io::BufWriter::new(rejects),
+            samples: Vec::new(),
+            model: None,
+            observations: 0,
+            windows_skipped: 0,
+            late: 0,
+            duplicates: 0,
+            unregistered: 0,
+        })
+    }
+
+    fn source_index(&mut self, name: &str) -> usize {
+        if let Some(&i) = self.src_idx.get(name) {
+            return i;
+        }
+        let i = self.sources.len();
+        self.sources.push(name.to_string());
+        self.src_idx.insert(name.to_string(), i);
+        self.ended.push(false);
+        self.max_t.push(i64::MIN);
+        i
+    }
+
+    /// Handle one event; `Ok(true)` means the feed said `bye`.
+    fn on_event(&mut self, ev: FeedEvent) -> Result<bool> {
+        if !self.hello_seen {
+            match ev {
+                FeedEvent::Hello { version: FEED_VERSION } => {
+                    self.hello_seen = true;
+                    return Ok(false);
+                }
+                FeedEvent::Hello { version } => bail!(
+                    "unsupported feed version {version}; this build speaks {FEED_VERSION}"
+                ),
+                _ => bail!("feed did not start with a 'feed <version>' handshake"),
+            }
+        }
+        match ev {
+            FeedEvent::Hello { .. } => bail!("duplicate 'feed' handshake mid-stream"),
+            FeedEvent::Reg { line } => self.reg_lines.push(line),
+            FeedEvent::Obs(o) => self.on_obs(o)?,
+            FeedEvent::End { source } => {
+                let si = self.source_index(&source);
+                self.ended[si] = true;
+                self.close_ready(false)?;
+            }
+            FeedEvent::Bye => {
+                self.close_ready(true)?;
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+
+    fn on_obs(&mut self, o: FeedObs) -> Result<()> {
+        let at = Instant::now();
+        if self.registry.is_none() {
+            if self.reg_lines.is_empty() {
+                bail!("feed sent an observation before its registry block");
+            }
+            let mut reg = Registry::default();
+            reg.merge(crate::registry::parse_registry(&self.reg_lines.join("\n"))?);
+            self.registry = Some(reg);
+        }
+        let si = self.source_index(&o.source);
+        // Every arrival advances the source clock, accepted or not —
+        // a late burst must still push the watermark forward.
+        self.max_t[si] = self.max_t[si].max(o.t);
+        let base = *self
+            .base
+            .get_or_insert_with(|| o.t.div_euclid(self.cfg.window_s) * self.cfg.window_s);
+        if self.closed_windows > 0
+            && o.t < base + self.closed_windows as i64 * self.cfg.window_s
+        {
+            self.late += 1;
+            writeln!(
+                self.rejects,
+                "late {} {} seq={} t={}",
+                o.source,
+                icao24_hex(o.icao24),
+                o.seq,
+                o.t
+            )?;
+            return self.close_ready(false);
+        }
+        if !self.seen.insert((si, o.icao24, o.seq)) {
+            self.duplicates += 1;
+            writeln!(
+                self.rejects,
+                "duplicate {} {} seq={} t={}",
+                o.source,
+                icao24_hex(o.icao24),
+                o.seq,
+                o.t
+            )?;
+            return self.close_ready(false);
+        }
+        let registered = self
+            .registry
+            .as_ref()
+            .is_some_and(|r| r.get(o.icao24).is_some());
+        if !registered {
+            // Batch stage 1 drops unregistered aircraft too; count them
+            // so a feed/registry mismatch is visible, not silent.
+            self.unregistered += 1;
+            writeln!(
+                self.rejects,
+                "unregistered {} {} seq={} t={}",
+                o.source,
+                icao24_hex(o.icao24),
+                o.seq,
+                o.t
+            )?;
+            return self.close_ready(false);
+        }
+        self.observations += 1;
+        self.open.entry((si, o.icao24)).or_default().push(Rec {
+            seq: o.seq,
+            t: o.t,
+            lat: o.lat,
+            lon: o.lon,
+            alt_ft: o.alt_ft,
+            at,
+        });
+        self.close_ready(false)
+    }
+
+    fn watermark(&self, si: usize) -> i64 {
+        if self.ended[si] {
+            i64::MAX
+        } else {
+            self.max_t[si].saturating_sub(self.cfg.lateness_s)
+        }
+    }
+
+    /// Close every window whose bound the slowest watermark has passed
+    /// (or, when draining at end of feed, every window with buffered
+    /// observations left). Windows close strictly in index order so the
+    /// journal's completed-set is a dense record. Windows that start
+    /// past the newest observation ever seen stay open: no data can
+    /// land in them, and without this floor an all-`end`ed feed (every
+    /// watermark `+∞`) would close empty windows forever.
+    fn close_ready(&mut self, drain: bool) -> Result<()> {
+        let Some(base) = self.base else { return Ok(()) };
+        let max_seen = self.max_t.iter().copied().max().unwrap_or(i64::MIN);
+        loop {
+            if self.closed_windows as usize >= MAX_WINDOWS {
+                bail!("ingest exceeded its {MAX_WINDOWS}-window journal capacity");
+            }
+            let bound = base + (self.closed_windows as i64 + 1) * self.cfg.window_s;
+            let ready = if drain {
+                self.open.values().any(|v| !v.is_empty())
+            } else {
+                !self.sources.is_empty()
+                    && bound - self.cfg.window_s <= max_seen
+                    && (0..self.sources.len()).map(|i| self.watermark(i)).min()
+                        >= Some(bound)
+            };
+            if !ready {
+                return Ok(());
+            }
+            self.close_window(bound)?;
+            self.closed_windows += 1;
+        }
+    }
+
+    fn close_window(&mut self, bound: i64) -> Result<()> {
+        let k = self.closed_windows as usize;
+        // Sweep: everything below the bound leaves the open buffers and
+        // joins the per-file accumulated sets. Window 0's sweep also
+        // absorbs any disorder-shifted stragglers older than the base.
+        let mut affected: BTreeSet<(usize, u32)> = BTreeSet::new();
+        let mut arrivals: Vec<Instant> = Vec::new();
+        let keys: Vec<(usize, u32)> = self.open.keys().copied().collect();
+        for key in keys {
+            let Some(buf) = self.open.get_mut(&key) else { continue };
+            let mut kept = Vec::new();
+            let mut moved = Vec::new();
+            for r in buf.drain(..) {
+                if r.t < bound {
+                    moved.push(r);
+                } else {
+                    kept.push(r);
+                }
+            }
+            *buf = kept;
+            if buf.is_empty() {
+                self.open.remove(&key);
+            }
+            if !moved.is_empty() {
+                affected.insert(key);
+                arrivals.extend(moved.iter().map(|r| r.at));
+                self.done.entry(key).or_default().extend(moved);
+            }
+        }
+        if self.completed.contains(&k) {
+            // Resume: this window's refresh already landed before the
+            // previous run died — the sweep above keeps the accumulated
+            // sets correct for later windows, nothing is reprocessed.
+            self.windows_skipped += 1;
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        self.refresh(&affected)?;
+        let now = Instant::now();
+        self.samples
+            .extend(arrivals.iter().map(|a| now.duration_since(*a).as_secs_f64()));
+        // Journal *after* the refresh: the overwrites are idempotent, so
+        // a crash between refresh and append only costs a re-refresh.
+        self.journal.append(&JournalEvent::Ok {
+            attempt: 0,
+            worker: 0,
+            busy_us: t0.elapsed().as_micros() as u64,
+            tasks: vec![k],
+            stats: vec![arrivals.len() as u64],
+        })?;
+        Ok(())
+    }
+
+    /// Incremental organize → archive → process over exactly the
+    /// `(source, aircraft)` files a closing window touched.
+    fn refresh(&mut self, affected: &BTreeSet<(usize, u32)>) -> Result<()> {
+        if affected.is_empty() {
+            return Ok(());
+        }
+        let organized = self.cfg.out_dir.join("organized");
+        let archived = self.cfg.out_dir.join("archived");
+        let registry = self.registry.as_ref().context("refresh before registry")?;
+        let mut dirs: BTreeSet<PathBuf> = BTreeSet::new();
+        for &(si, icao24) in affected {
+            let entry = registry
+                .get(icao24)
+                .context("buffered aircraft vanished from the registry")?;
+            let dir = organized.join(crate::hierarchy::opensky_path(self.cfg.year, entry));
+            std::fs::create_dir_all(&dir)?;
+            let mut recs: Vec<&Rec> =
+                self.done.get(&(si, icao24)).map(|v| v.iter().collect()).unwrap_or_default();
+            // Feed order within a file is its raw row order (the seq
+            // number); batch organize preserves it, so so do we.
+            recs.sort_by_key(|r| r.seq);
+            let track = Track {
+                icao24,
+                obs: recs
+                    .iter()
+                    .map(|r| Observation {
+                        t: r.t as f64,
+                        lat: r.lat,
+                        lon: r.lon,
+                        alt_ft: r.alt_ft,
+                    })
+                    .collect(),
+            };
+            let name = format!("{}_{}.csv", icao24_hex(icao24), self.sources[si]);
+            std::fs::write(dir.join(name), crate::tracks::write_csv(&[track]))?;
+            dirs.insert(dir);
+        }
+        let plan = crate::archive::zipdir::ArchivePlan::plan_format(
+            &organized,
+            &archived,
+            self.cfg.format,
+        )?;
+        let mut outputs = Vec::new();
+        for task in &plan.tasks {
+            if !dirs.contains(&task.src_dir) {
+                continue;
+            }
+            match self.cfg.format {
+                ArchiveFormat::Zip => crate::archive::zipdir::archive_dir(task)?,
+                ArchiveFormat::Columnar => {
+                    crate::archive::columnar::archive_dir_columnar(task)?
+                }
+            };
+            outputs.push(task.dst.clone());
+        }
+        if self.model.is_none() {
+            self.model = Some(crate::runtime::TrackModel::load(&self.cfg.artifact_dir)?);
+        }
+        let model = self.model.as_mut().context("model just loaded")?;
+        let job = crate::workflow::stage3::ProcessJob {
+            archive_dir: archived,
+            out_dir: self.cfg.out_dir.join("processed"),
+            artifact_dir: self.cfg.artifact_dir.clone(),
+            segment: SegmentConfig::default(),
+            format: self.cfg.format,
+        };
+        for dst in &outputs {
+            crate::workflow::stage3::process_archive(dst, &job, model)?;
+        }
+        Ok(())
+    }
+
+    fn finish(mut self, wall_s: f64) -> Result<IngestReport> {
+        // EOF without `bye` still drains — a truncated feed loses
+        // nothing that arrived.
+        self.close_ready(true)?;
+        self.rejects.flush()?;
+        Ok(IngestReport {
+            observations: self.observations,
+            windows_closed: self.closed_windows,
+            windows_skipped: self.windows_skipped,
+            late: self.late,
+            duplicates: self.duplicates,
+            unregistered: self.unregistered,
+            latency: Percentiles::from_samples(self.samples),
+            wall_s,
+        })
+    }
+}
+
+/// Run ingest over any line source (files, sockets, the in-process
+/// bench pipe). Returns when the feed says `bye` or hits EOF.
+pub fn run_reader(cfg: &IngestConfig, reader: impl BufRead) -> Result<IngestReport> {
+    let t0 = Instant::now();
+    let mut st = State::new(cfg)?;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        if st.on_event(FeedEvent::parse(&line)?)? {
+            break;
+        }
+    }
+    st.finish(t0.elapsed().as_secs_f64())
+}
+
+/// Run ingest over `cfg.feed` as a file.
+pub fn run(cfg: &IngestConfig) -> Result<IngestReport> {
+    let file = std::fs::File::open(&cfg.feed)
+        .with_context(|| format!("opening feed {}", cfg.feed.display()))?;
+    run_reader(cfg, std::io::BufReader::new(file))
+}
+
+/// `emproc ingest --feed FILE|- --out DIR [--window S] [--lateness S]
+/// [--format zip|columnar] [--year Y] [--artifacts DIR] [--resume]`.
+pub fn cmd(a: &ArgParser) -> Result<()> {
+    let mut cfg = IngestConfig::new(
+        PathBuf::from(a.required("feed")?),
+        PathBuf::from(a.required("out")?),
+    );
+    cfg.window_s = a.get_num("window", cfg.window_s)?;
+    cfg.lateness_s = a.get_num("lateness", cfg.lateness_s)?;
+    cfg.format = ArchiveFormat::parse(a.get_or("format", "zip"))?;
+    cfg.year = a.get_num("year", cfg.year)?;
+    if let Some(dir) = a.get("artifacts") {
+        cfg.artifact_dir = PathBuf::from(dir);
+    }
+    cfg.resume = a.has("resume");
+    let report = if cfg.feed.as_os_str() == "-" {
+        let stdin = std::io::stdin();
+        run_reader(&cfg, stdin.lock())?
+    } else {
+        run(&cfg)?
+    };
+    println!("{}", report.render());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("emproc_ingest_{tag}_{}", std::process::id()))
+    }
+
+    fn cfg_for(tag: &str, window: i64, lateness: i64) -> IngestConfig {
+        let out = tmp(tag);
+        let _ = std::fs::remove_dir_all(&out);
+        let mut cfg = IngestConfig::new(PathBuf::from("-"), out);
+        cfg.window_s = window;
+        cfg.lateness_s = lateness;
+        cfg
+    }
+
+    fn run_lines(cfg: &IngestConfig, lines: &[String]) -> Result<IngestReport> {
+        let text = lines.join("\n") + "\n";
+        run_reader(cfg, std::io::BufReader::new(std::io::Cursor::new(text)))
+    }
+
+    // Feeds built around *unregistered* aircraft exercise the window /
+    // watermark machinery without touching the PJRT model: rejected
+    // observations still advance watermarks, and the windows they close
+    // are empty, so `refresh` never runs.
+    fn obs(src: &str, icao: u32, seq: u32, t: i64) -> String {
+        FeedEvent::Obs(crate::stream::FeedObs {
+            source: src.into(),
+            icao24: icao,
+            seq,
+            t,
+            lat: 1.0,
+            lon: 2.0,
+            alt_ft: 300.0,
+        })
+        .render()
+    }
+
+    fn header(reg_entries: &[&str]) -> Vec<String> {
+        let mut v = vec![
+            "feed 1".to_string(),
+            format!("reg {}", crate::registry::HEADER),
+        ];
+        v.extend(reg_entries.iter().map(|e| format!("reg {e}")));
+        v
+    }
+
+    #[test]
+    fn handshake_and_version_are_enforced() {
+        let cfg = cfg_for("hello", 600, 60);
+        let err = run_lines(&cfg, &["feed 9".to_string()]).unwrap_err();
+        assert!(err.to_string().contains("unsupported feed version 9"), "{err}");
+        let err = run_lines(&cfg, &[obs("s", 1, 0, 100)]).unwrap_err();
+        assert!(err.to_string().contains("handshake"), "{err}");
+        let err = run_lines(
+            &cfg,
+            &["feed 1".to_string(), obs("s", 1, 0, 100)],
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("before its registry"), "{err}");
+        let _ = std::fs::remove_dir_all(&cfg.out_dir);
+    }
+
+    #[test]
+    fn late_and_duplicate_observations_hit_the_side_channel() {
+        let cfg = cfg_for("reject", 100, 0);
+        let mut lines = header(&["aaaaaa,light,4,2030"]);
+        // Unknown aircraft 0x10: advances the watermark, closes windows,
+        // never triggers a refresh.
+        lines.push(obs("s", 0x10, 0, 1000));
+        lines.push(obs("s", 0x10, 1, 1500)); // watermark 1500: closes [1000,1100), ...
+        lines.push(obs("s", 0x10, 2, 1050)); // t inside a closed window -> late
+        lines.push(obs("s", 0x10, 1, 1500)); // same (src, icao, seq) -> duplicate
+        lines.push("end s".to_string());
+        lines.push("bye".to_string());
+        let report = run_lines(&cfg, &lines).unwrap();
+        assert_eq!(report.late, 1);
+        assert_eq!(report.duplicates, 1);
+        assert_eq!(report.unregistered, 2, "the two accepted-shape obs are unregistered");
+        assert_eq!(report.observations, 0);
+        let log = std::fs::read_to_string(cfg.out_dir.join("rejected.log")).unwrap();
+        assert!(log.contains("late s 000010 seq=2 t=1050"), "{log}");
+        assert!(log.contains("duplicate s 000010 seq=1 t=1500"), "{log}");
+        let _ = std::fs::remove_dir_all(&cfg.out_dir);
+    }
+
+    #[test]
+    fn empty_windows_close_cleanly_and_in_order() {
+        let cfg = cfg_for("empty", 100, 0);
+        let mut lines = header(&[]);
+        lines.push(obs("s", 0x10, 0, 1000));
+        // A quiet gap: the next observation is 5 windows later, so its
+        // arrival closes [1000..1500) — four of them empty.
+        lines.push(obs("s", 0x10, 1, 1550));
+        lines.push("end s".to_string());
+        lines.push("bye".to_string());
+        let report = run_lines(&cfg, &lines).unwrap();
+        // 5 watermark closes, then `end` lifts the watermark to +inf and
+        // closes [1500,1600) — but nothing past the newest observation.
+        assert_eq!(report.windows_closed, 6);
+        assert_eq!(report.late, 0);
+        let _ = std::fs::remove_dir_all(&cfg.out_dir);
+    }
+
+    #[test]
+    fn resume_with_different_knobs_is_a_plan_mismatch() {
+        let cfg = cfg_for("knobs", 100, 0);
+        let mut lines = header(&[]);
+        lines.push(obs("s", 0x10, 0, 1000));
+        lines.push("bye".to_string());
+        run_lines(&cfg, &lines).unwrap();
+        let mut resumed = cfg.clone();
+        resumed.window_s = 200;
+        resumed.resume = true;
+        let err = run_lines(&resumed, &lines).unwrap_err();
+        assert!(
+            err.to_string().contains("journal"),
+            "changing --window across a resume must fail journal verification: {err}"
+        );
+        let _ = std::fs::remove_dir_all(&cfg.out_dir);
+    }
+}

@@ -1,0 +1,293 @@
+//! `emproc replay` — publish a generated corpus as a live observation
+//! feed (DESIGN.md §15).
+//!
+//! The replayer reads a raw corpus directory (the batch pipeline's
+//! `raw/`: per-hour CSV files plus `registry.csv`) and emits every
+//! observation as one [`FeedEvent::Obs`] line, globally ordered by
+//! event time plus an optional seeded disorder shift. The *content* of
+//! the feed — which lines, in which order — depends only on the corpus
+//! and `--seed`; `--rate` and `--jitter` shape timing only. Same seed,
+//! byte-identical feed, at any rate.
+
+use super::{FeedEvent, FeedObs, FEED_VERSION};
+use crate::cli::ArgParser;
+use crate::util::Rng;
+use anyhow::{Context as _, Result};
+use std::io::Write;
+use std::path::PathBuf;
+
+/// Liveness cap on any single inter-event wait, seconds of wall time.
+/// The mini corpora have multi-hour event-time gaps between raw files;
+/// pacing those faithfully at modest rates would stall the feed for
+/// minutes. Timing only — the byte stream is unaffected.
+pub const MAX_SLEEP_S: f64 = 1.0;
+
+/// Everything `emproc replay` needs.
+#[derive(Debug, Clone)]
+pub struct ReplayConfig {
+    /// Raw corpus directory (`registry.csv` + per-hour CSV files).
+    pub data_dir: PathBuf,
+    /// Rate multiplier over event time: 60 replays a minute of data per
+    /// wall second. `<= 0` disables pacing entirely (full speed).
+    pub rate: f64,
+    /// Seed for disorder shifts and pacing jitter.
+    pub seed: u64,
+    /// Uniform `[0, jitter_s)` seconds of *event time* added to each
+    /// inter-event wait before rate scaling (burst shaping; timing only).
+    pub jitter_s: f64,
+    /// Uniform `[-disorder_s, disorder_s)` event-time shift applied to
+    /// each observation's emission slot — reorders feed *content*
+    /// deterministically, modelling out-of-order arrival.
+    pub disorder_s: f64,
+}
+
+/// What [`replay`] emitted, for the stderr summary and tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplayStats {
+    /// Sources (raw files) replayed to completion (`end` lines).
+    pub sources: u64,
+    /// Observation lines emitted.
+    pub observations: u64,
+    /// Total feed lines, handshake and terminator included.
+    pub events: u64,
+}
+
+/// Build the full feed deterministically: every event paired with its
+/// emission slot on the event-time axis (used only for pacing).
+/// Consumes `rng` for disorder draws; [`replay`] keeps drawing jitter
+/// from the same stream afterwards, so one seed governs both.
+pub fn feed_events(cfg: &ReplayConfig, rng: &mut Rng) -> Result<Vec<(f64, FeedEvent)>> {
+    let reg_path = cfg.data_dir.join("registry.csv");
+    let reg_text = std::fs::read_to_string(&reg_path)
+        .with_context(|| format!("reading {}", reg_path.display()))?;
+    let files = crate::workflow::stage1::list_raw_files(&cfg.data_dir)?;
+    anyhow::ensure!(
+        !files.is_empty(),
+        "no raw CSV files under {} to replay",
+        cfg.data_dir.display()
+    );
+
+    // One emission slot per observation: event time plus the seeded
+    // disorder shift. Draw order is fixed (files sorted, tracks sorted
+    // by icao24, observations in raw row order), so the shifts — and
+    // therefore the emitted byte stream — depend only on the seed.
+    let mut stems = Vec::with_capacity(files.len());
+    let mut slots: Vec<(f64, usize, FeedObs)> = Vec::new();
+    for (si, (path, _bytes)) in files.iter().enumerate() {
+        let stem = path
+            .file_stem()
+            .and_then(std::ffi::OsStr::to_str)
+            .with_context(|| format!("non-utf8 raw file name {}", path.display()))?
+            .to_string();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        for track in crate::tracks::parse_csv(&text)? {
+            for (seq, o) in track.obs.iter().enumerate() {
+                let shift = if cfg.disorder_s > 0.0 {
+                    rng.uniform(-cfg.disorder_s, cfg.disorder_s)
+                } else {
+                    0.0
+                };
+                slots.push((
+                    o.t + shift,
+                    si,
+                    FeedObs {
+                        source: stem.clone(),
+                        icao24: track.icao24,
+                        seq: seq as u32,
+                        t: o.t as i64,
+                        lat: o.lat,
+                        lon: o.lon,
+                        alt_ft: o.alt_ft,
+                    },
+                ));
+            }
+        }
+        stems.push(stem);
+    }
+    // Total order: emission slot, then (source, aircraft, seq) as an
+    // exact tie-break so equal slots cannot reorder across runs.
+    slots.sort_by(|a, b| {
+        a.0.total_cmp(&b.0)
+            .then(a.1.cmp(&b.1))
+            .then(a.2.icao24.cmp(&b.2.icao24))
+            .then(a.2.seq.cmp(&b.2.seq))
+    });
+
+    let mut remaining = vec![0usize; stems.len()];
+    for (_, si, _) in &slots {
+        remaining[*si] += 1;
+    }
+    let first_t = slots.first().map_or(0.0, |s| s.0);
+    let mut events = Vec::with_capacity(slots.len() + stems.len() + reg_text.lines().count() + 2);
+    events.push((first_t, FeedEvent::Hello { version: FEED_VERSION }));
+    for line in reg_text.lines() {
+        events.push((first_t, FeedEvent::Reg { line: line.to_string() }));
+    }
+    // A raw file that parsed to zero observations is complete before the
+    // feed starts — say so up front rather than never.
+    for (si, stem) in stems.iter().enumerate() {
+        if remaining[si] == 0 {
+            events.push((first_t, FeedEvent::End { source: stem.clone() }));
+        }
+    }
+    let mut last_t = first_t;
+    for (t, si, obs) in slots {
+        events.push((t, FeedEvent::Obs(obs)));
+        remaining[si] -= 1;
+        if remaining[si] == 0 {
+            events.push((t, FeedEvent::End { source: stems[si].clone() }));
+        }
+        last_t = t;
+    }
+    events.push((last_t, FeedEvent::Bye));
+    Ok(events)
+}
+
+/// Emit the feed to `out`, pacing inter-event gaps by `cfg.rate` (with
+/// seeded jitter, each wait capped at [`MAX_SLEEP_S`]). With pacing the
+/// writer is flushed per line so a downstream ingest sees events live.
+pub fn replay(cfg: &ReplayConfig, out: &mut dyn Write) -> Result<ReplayStats> {
+    let mut rng = Rng::new(cfg.seed);
+    let events = feed_events(cfg, &mut rng)?;
+    let paced = cfg.rate > 0.0;
+    let mut last_t = events.first().map_or(0.0, |e| e.0);
+    let mut stats = ReplayStats { sources: 0, observations: 0, events: events.len() as u64 };
+    for (t, ev) in &events {
+        if paced {
+            let jitter =
+                if cfg.jitter_s > 0.0 { rng.uniform(0.0, cfg.jitter_s) } else { 0.0 };
+            let wait = ((t - last_t).max(0.0) + jitter) / cfg.rate;
+            if wait > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(wait.min(MAX_SLEEP_S)));
+            }
+        }
+        out.write_all(ev.render().as_bytes())?;
+        out.write_all(b"\n")?;
+        if paced {
+            out.flush()?;
+        }
+        match ev {
+            FeedEvent::Obs(_) => stats.observations += 1,
+            FeedEvent::End { .. } => stats.sources += 1,
+            _ => {}
+        }
+        last_t = *t;
+    }
+    out.flush()?;
+    Ok(stats)
+}
+
+/// `emproc replay --data DIR [--rate F] [--seed N] [--jitter S]
+/// [--disorder S] [--out FILE|-]` — feed to stdout (or `--out`), summary
+/// to stderr so a pipe into `emproc ingest` stays clean.
+pub fn cmd(a: &ArgParser) -> Result<()> {
+    let cfg = ReplayConfig {
+        data_dir: PathBuf::from(a.required("data")?),
+        rate: a.get_num("rate", 0.0f64)?,
+        seed: a.get_num("seed", 42u64)?,
+        jitter_s: a.get_num("jitter", 0.0f64)?,
+        disorder_s: a.get_num("disorder", 0.0f64)?,
+    };
+    let t0 = std::time::Instant::now();
+    let stats = match a.get("out") {
+        Some(path) if path != "-" => {
+            let file = std::fs::File::create(path)
+                .with_context(|| format!("creating {path}"))?;
+            replay(&cfg, &mut std::io::BufWriter::new(file))?
+        }
+        _ => {
+            let stdout = std::io::stdout();
+            replay(&cfg, &mut std::io::BufWriter::new(stdout.lock()))?
+        }
+    };
+    eprintln!(
+        "replayed {} observations from {} sources ({} feed lines) in {:.2}s",
+        stats.observations,
+        stats.sources,
+        stats.events,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::pipeline::{Pipeline, PipelineConfig};
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("emproc_replay_{tag}_{}", std::process::id()))
+    }
+
+    fn gen_corpus(dir: &PathBuf) -> usize {
+        let _ = std::fs::remove_dir_all(dir);
+        let mut cfg = PipelineConfig::small(dir.clone());
+        cfg.days = 1;
+        cfg.registry_size = 20;
+        cfg.max_file_bytes = 8_000;
+        let (_registry, raw_files) = Pipeline::new(cfg).generate().unwrap();
+        raw_files
+    }
+
+    fn feed_bytes(data: PathBuf, seed: u64, disorder: f64) -> Vec<u8> {
+        let cfg = ReplayConfig { data_dir: data, rate: 0.0, seed, jitter_s: 0.0, disorder_s: disorder };
+        let mut out = Vec::new();
+        replay(&cfg, &mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn same_seed_replays_a_byte_identical_feed() {
+        let dir = tmp("det");
+        let raw_files = gen_corpus(&dir);
+        assert!(raw_files > 0);
+        let raw = dir.join("raw");
+        let a = feed_bytes(raw.clone(), 7, 30.0);
+        let b = feed_bytes(raw.clone(), 7, 30.0);
+        assert_eq!(a, b, "same seed must replay byte-identically");
+        // Different seeds shuffle different disorder shifts: content order
+        // differs, but only when disorder is in play.
+        let c = feed_bytes(raw.clone(), 8, 30.0);
+        assert_ne!(a, c, "disorder shifts should depend on the seed");
+        let d0a = feed_bytes(raw.clone(), 7, 0.0);
+        let d0b = feed_bytes(raw, 8, 0.0);
+        assert_eq!(d0a, d0b, "without disorder the seed must not leak into content");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn feed_is_well_formed_and_complete() {
+        let dir = tmp("shape");
+        gen_corpus(&dir);
+        let bytes = feed_bytes(dir.join("raw"), 42, 45.0);
+        let text = String::from_utf8(bytes).unwrap();
+        let events: Vec<FeedEvent> =
+            text.lines().map(|l| FeedEvent::parse(l).unwrap()).collect();
+        assert_eq!(events.first(), Some(&FeedEvent::Hello { version: FEED_VERSION }));
+        assert_eq!(events.last(), Some(&FeedEvent::Bye));
+        // Registry rides in the feed verbatim, header first.
+        let regs: Vec<&FeedEvent> =
+            events.iter().filter(|e| matches!(e, FeedEvent::Reg { .. })).collect();
+        assert!(matches!(regs[0], FeedEvent::Reg { line } if line == crate::registry::HEADER));
+        // Every source ends exactly once, and never before its last obs.
+        let mut last_obs = std::collections::HashMap::new();
+        let mut ended = std::collections::HashMap::new();
+        for (i, ev) in events.iter().enumerate() {
+            match ev {
+                FeedEvent::Obs(o) => {
+                    assert!(!ended.contains_key(&o.source), "obs after end for {}", o.source);
+                    last_obs.insert(o.source.clone(), i);
+                }
+                FeedEvent::End { source } => {
+                    assert!(ended.insert(source.clone(), i).is_none(), "double end {source}");
+                }
+                _ => {}
+            }
+        }
+        for (src, i) in &last_obs {
+            assert!(ended[src] > *i, "end for {src} precedes its last obs");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

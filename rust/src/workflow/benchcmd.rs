@@ -637,12 +637,86 @@ fn run_columnar(a: &ArgParser) -> Result<()> {
     Ok(())
 }
 
+/// `emproc bench streaming [--rates R1,R2,...] [--window S] [--seed N]`
+///
+/// The streaming benchmark (DESIGN.md §15): generate one mini corpus,
+/// then for each `--rates` multiplier replay it through an in-process
+/// pipe ([`crate::stream::pipe`]) into a live ingest run, measuring
+/// observation→processed-row latency percentiles and sustained
+/// throughput. All rates share one process so every scenario lands in
+/// one `BENCH_streaming.json` — the file CI gates with `bench-check`
+/// against `bench_baseline/streaming_scenarios.json` (throughput floor
+/// *and* p99 latency ceiling per rate).
+fn run_streaming(a: &ArgParser) -> Result<()> {
+    let rates: Vec<f64> = a
+        .get_or("rates", "2000,8000")
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("flag --rates: cannot parse '{s}'"))
+        })
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(!rates.is_empty(), "--rates needs at least one multiplier");
+    let seed = a.get_num("seed", SEED)?;
+    let window = a.get_num("window", 600i64)?;
+    let base =
+        std::env::temp_dir().join(format!("emproc_bench_streaming_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    let mut pcfg = crate::workflow::PipelineConfig::small(base.join("corpus"));
+    pcfg.days = 1;
+    pcfg.seed = seed;
+    let (_registry, raw_files) = crate::workflow::Pipeline::new(pcfg).generate()?;
+    println!("streaming bench: {raw_files} raw files, rates {rates:?}, window {window}s");
+    for &rate in &rates {
+        let rcfg = crate::stream::replay::ReplayConfig {
+            data_dir: base.join("corpus").join("raw"),
+            rate,
+            seed,
+            jitter_s: 0.0,
+            disorder_s: 30.0,
+        };
+        let (mut writer, reader) = crate::stream::pipe();
+        let feeder = std::thread::Builder::new()
+            .name("bench-replay".to_string())
+            .spawn(move || crate::stream::replay::replay(&rcfg, &mut writer))
+            .context("spawning the bench replay thread")?;
+        let mut icfg = crate::stream::ingest::IngestConfig::new(
+            std::path::PathBuf::from("-"),
+            base.join(format!("ingest_rate{rate}")),
+        );
+        icfg.window_s = window;
+        icfg.lateness_s = 60; // covers the 30 s disorder twice over
+        let report =
+            crate::stream::ingest::run_reader(&icfg, std::io::BufReader::new(reader))?;
+        feeder
+            .join()
+            .map_err(|_| anyhow::anyhow!("the bench replay thread panicked"))??;
+        println!("--- rate {rate}x ---");
+        println!("{}", report.render());
+        json::record_latency(
+            &format!("streaming rate{rate}"),
+            report.observations as usize,
+            report.wall_s,
+            &report.latency,
+        );
+    }
+    json::write_file("streaming")?;
+    let _ = std::fs::remove_dir_all(&base);
+    Ok(())
+}
+
 /// Dispatch for `emproc bench <exp>`.
 pub fn run(which: &str, a: &ArgParser) -> Result<()> {
     if which == "columnar" {
         // The data-plane benchmark is real I/O, not a simulator figure;
         // it owns its JSON file (BENCH_columnar.json) and its own flags.
         return run_columnar(a);
+    }
+    if which == "streaming" {
+        // Real wall-clock latency over the live feed path — also not a
+        // simulator figure; owns BENCH_streaming.json.
+        return run_streaming(a);
     }
     let scale = a.get_num("scale", 0.1f64)?;
     let all = which == "all";

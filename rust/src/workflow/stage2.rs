@@ -133,16 +133,23 @@ pub fn run_launched(
         };
         let cost = crate::dist::CostEstimate::from_tasks(&tasks);
         let live = match alloc {
-            AllocMode::Batch(dist) => crate::exec::run_batch_queues(
-                run_ordered.len(),
-                crate::dist::distribute_costed(&run_ordered, workers, dist, cost.as_slice()),
-                work,
-            )?,
-            AllocMode::Steal(dist) => crate::exec::run_batch_steal(
-                run_ordered.len(),
-                crate::dist::distribute_costed(&run_ordered, workers, dist, cost.as_slice()),
-                work,
-            )?,
+            AllocMode::Batch(dist) => crate::exec::BatchOptions::new(run_ordered.len())
+                .queues(crate::dist::distribute_costed(
+                    &run_ordered,
+                    workers,
+                    dist,
+                    cost.as_slice(),
+                ))
+                .run(work)?,
+            AllocMode::Steal(dist) => crate::exec::BatchOptions::new(run_ordered.len())
+                .queues(crate::dist::distribute_costed(
+                    &run_ordered,
+                    workers,
+                    dist,
+                    cost.as_slice(),
+                ))
+                .steal(true)
+                .run(work)?,
             AllocMode::SelfSched(ss) => crate::exec::run_self_scheduled(
                 run_ordered.len(),
                 &run_ordered,

@@ -376,18 +376,13 @@ pub fn run_launched(
     };
     let cost = crate::dist::CostEstimate::from_tasks(&tasks);
     let trace = match alloc {
-        AllocMode::Batch(dist) => crate::exec::run_batch_queues_init(
-            run_ordered.len(),
-            crate::dist::distribute_costed(&run_ordered, workers, dist, cost.as_slice()),
-            init,
-            work,
-        )?,
-        AllocMode::Steal(dist) => crate::exec::run_batch_steal_init(
-            run_ordered.len(),
-            crate::dist::distribute_costed(&run_ordered, workers, dist, cost.as_slice()),
-            init,
-            work,
-        )?,
+        AllocMode::Batch(dist) => crate::exec::BatchOptions::new(run_ordered.len())
+            .queues(crate::dist::distribute_costed(&run_ordered, workers, dist, cost.as_slice()))
+            .run_init(init, work)?,
+        AllocMode::Steal(dist) => crate::exec::BatchOptions::new(run_ordered.len())
+            .queues(crate::dist::distribute_costed(&run_ordered, workers, dist, cost.as_slice()))
+            .steal(true)
+            .run_init(init, work)?,
         AllocMode::SelfSched(ss) => crate::exec::run_self_scheduled_init(
             run_ordered.len(),
             &run_ordered,

@@ -1,0 +1,192 @@
+//! Streaming-ingest acceptance: the ISSUE-10 integration bar.
+//!
+//! 1. A corpus replayed in full (with deterministic disorder) through
+//!    `emproc ingest` produces organized / processed trees
+//!    **byte-identical** to the batch pipeline's on the same corpus,
+//!    and the same archive set.
+//! 2. An ingest run `kill -9`'d mid-stream and finished with `--resume`
+//!    is byte-identical to an uninterrupted ingest of the same feed —
+//!    the journal skips exactly the windows whose refreshes landed.
+//!
+//! Both tests drive the real `emproc` binary for the subprocess legs
+//! (`CARGO_BIN_EXE_emproc`, as in `tests/recovery.rs`).
+
+use emproc::stream::ingest::IngestConfig;
+use emproc::stream::replay::ReplayConfig;
+use emproc::workflow::{Pipeline, PipelineConfig};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::time::Duration;
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("emproc_stream_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Every file under `root`, as relative path -> contents.
+fn dir_map(root: &Path) -> BTreeMap<String, Vec<u8>> {
+    let mut out = BTreeMap::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let entry = entry.unwrap();
+            let path = entry.path();
+            if entry.file_type().unwrap().is_dir() {
+                stack.push(path);
+            } else {
+                let rel = path.strip_prefix(root).unwrap().to_string_lossy().into_owned();
+                out.insert(rel, std::fs::read(&path).unwrap());
+            }
+        }
+    }
+    out
+}
+
+/// Organized + processed trees byte-for-byte, identical archive sets
+/// (names; members derive from the organized tree).
+fn assert_trees_identical(a_dir: &Path, b_dir: &Path) {
+    let org_a = dir_map(&a_dir.join("organized"));
+    let org_b = dir_map(&b_dir.join("organized"));
+    assert!(!org_a.is_empty(), "reference organized tree is empty");
+    assert_eq!(org_a, org_b, "organized trees differ");
+    let arch_a: Vec<String> = dir_map(&a_dir.join("archived")).into_keys().collect();
+    let arch_b: Vec<String> = dir_map(&b_dir.join("archived")).into_keys().collect();
+    assert!(!arch_a.is_empty(), "reference archive set is empty");
+    assert_eq!(arch_a, arch_b, "archive sets differ");
+    let proc_a = dir_map(&a_dir.join("processed"));
+    let proc_b = dir_map(&b_dir.join("processed"));
+    assert!(!proc_a.is_empty(), "reference processed tree is empty");
+    assert_eq!(proc_a, proc_b, "processed outputs differ");
+}
+
+fn small_corpus(dir: PathBuf) -> PipelineConfig {
+    let mut cfg = PipelineConfig::small(dir);
+    cfg.days = 1;
+    cfg.registry_size = 40;
+    cfg.max_file_bytes = 12_000;
+    cfg.seed = 9;
+    cfg
+}
+
+fn write_feed(raw: &Path, out: &Path, disorder: f64) {
+    let cfg = ReplayConfig {
+        data_dir: raw.to_path_buf(),
+        rate: 0.0,
+        seed: 7,
+        jitter_s: 0.0,
+        disorder_s: disorder,
+    };
+    let file = std::fs::File::create(out).unwrap();
+    let mut w = std::io::BufWriter::new(file);
+    let stats = emproc::stream::replay::replay(&cfg, &mut w).unwrap();
+    assert!(stats.observations > 0, "replayed feed carried no observations");
+}
+
+#[test]
+fn fully_replayed_feed_reproduces_the_batch_tree_byte_identically() {
+    let batch_dir = tmp("batch");
+    let inc_dir = tmp("inc");
+
+    // Batch reference: generate the corpus and run all three stages.
+    let report = Pipeline::new(small_corpus(batch_dir.clone())).generate_and_run().unwrap();
+    assert!(report.organize.observations > 0);
+
+    // Replay the same raw corpus as a disordered feed, ingest it live.
+    let feed = inc_dir.join("feed.txt");
+    std::fs::create_dir_all(&inc_dir).unwrap();
+    write_feed(&batch_dir.join("raw"), &feed, 45.0);
+    let mut cfg = IngestConfig::new(feed, inc_dir.clone());
+    // Lateness must cover twice the disorder or stragglers go late.
+    cfg.lateness_s = 90;
+    let ingest = emproc::stream::ingest::run(&cfg).unwrap();
+
+    assert_eq!(
+        ingest.observations, report.organize.observations,
+        "ingest must accept exactly the observations batch stage 1 organized"
+    );
+    assert_eq!(ingest.late, 0, "a clean replay must produce no late rejects");
+    assert_eq!(ingest.duplicates, 0);
+    assert!(ingest.windows_closed > 1, "a day of data should span several windows");
+    assert!(
+        !ingest.latency.is_empty(),
+        "non-empty windows must contribute latency samples"
+    );
+    assert_trees_identical(&batch_dir, &inc_dir);
+
+    let _ = std::fs::remove_dir_all(&batch_dir);
+    let _ = std::fs::remove_dir_all(&inc_dir);
+}
+
+fn ingest_args(feed: &Path, out: &Path, resume: bool) -> Vec<String> {
+    let mut args = vec![
+        "ingest".to_string(),
+        "--feed".to_string(),
+        feed.display().to_string(),
+        "--out".to_string(),
+        out.display().to_string(),
+        "--lateness".to_string(),
+        "90".to_string(),
+    ];
+    if resume {
+        args.push("--resume".to_string());
+    }
+    args
+}
+
+#[test]
+fn ingest_killed_mid_stream_resumes_byte_identically() {
+    let work = tmp("kill");
+    std::fs::create_dir_all(&work).unwrap();
+    let corpus = work.join("corpus");
+    Pipeline::new(small_corpus(corpus.clone())).generate().unwrap();
+    let feed = work.join("feed.txt");
+    write_feed(&corpus.join("raw"), &feed, 45.0);
+
+    // Uninterrupted reference ingest, in-process.
+    let ref_dir = work.join("ref");
+    let mut cfg = IngestConfig::new(feed.clone(), ref_dir.clone());
+    cfg.lateness_s = 90;
+    let reference = emproc::stream::ingest::run(&cfg).unwrap();
+    assert!(reference.observations > 0);
+
+    // Victim: the real binary, kill -9 mid-run. Any timing is
+    // recoverable — killed before any window closed, the resume is a
+    // full run; killed after `bye`, a no-op — the sleep only needs to
+    // *usually* land mid-stream to exercise real mid-flight state.
+    let victim_dir = work.join("victim");
+    let mut victim = Command::new(env!("CARGO_BIN_EXE_emproc"))
+        .args(ingest_args(&feed, &victim_dir, false))
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(800));
+    let _ = victim.kill(); // SIGKILL; a no-op if it already exited
+    let _ = victim.wait();
+
+    // Resume re-reads the feed from the top; journaled windows skip
+    // their (already landed) refreshes, the rest replay.
+    let out = Command::new(env!("CARGO_BIN_EXE_emproc"))
+        .args(ingest_args(&feed, &victim_dir, true))
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "ingest resume failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert_trees_identical(&ref_dir, &victim_dir);
+
+    // Resuming with a different window width is a journal plan mismatch,
+    // never a silently mixed tree.
+    let mut args = ingest_args(&feed, &victim_dir, true);
+    args.extend(["--window".to_string(), "120".to_string()]);
+    let out = Command::new(env!("CARGO_BIN_EXE_emproc")).args(args).output().unwrap();
+    assert!(!out.status.success(), "changed --window must refuse to resume");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("journal"), "must name the journal: {stderr}");
+
+    let _ = std::fs::remove_dir_all(&work);
+}
